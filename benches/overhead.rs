@@ -1,0 +1,155 @@
+//! Coordinator-overhead microbenchmarks — the measured basis for the
+//! paper's Fig-3 claim that "the communication and the HPO algorithm
+//! (random) take marginal time in total" relative to ~5-minute jobs.
+//!
+//! Measures, per the §Perf targets in DESIGN.md:
+//! * get_param + update round-trip per proposer (random/grid ≲ 1 µs;
+//!   GP-based spearmint ≲ 50 ms at n=100 history);
+//! * tracking-store job insert/finish round-trip;
+//! * BasicConfig JSON encode/decode (the job-file protocol);
+//! * end-to-end dispatch rate of the experiment loop on no-op jobs.
+//!
+//! Run: `cargo bench --bench overhead`
+
+use auptimizer::experiment::{Experiment, ExperimentOptions};
+use auptimizer::metrics::bench_fn;
+use auptimizer::prelude::*;
+use auptimizer::proposer::{new_proposer, ProposeResult, ProposerSpec};
+use auptimizer::search::{ParamSpec, SearchSpace};
+use auptimizer::store::schema;
+use auptimizer::util::json::Json;
+
+fn space() -> SearchSpace {
+    SearchSpace::new(vec![
+        ParamSpec::int("conv1", 8, 32),
+        ParamSpec::int("conv2", 8, 64),
+        ParamSpec::int("fc1", 32, 256),
+        ParamSpec::float("dropout", 0.0, 0.8),
+        ParamSpec::float("learning_rate", 1e-4, 1e-1).with_log_scale(),
+    ])
+    .unwrap()
+}
+
+fn main() {
+    println!("=== coordinator overhead (vs ~300 s paper jobs) ===\n");
+    let mut reports = Vec::new();
+
+    // proposer round-trips at n=100 history
+    for name in ["random", "hyperopt", "spearmint"] {
+        let spec = ProposerSpec {
+            space: space(),
+            n_samples: 1_000_000,
+            maximize: false,
+            seed: 1,
+            extra: Json::Null,
+        };
+        let mut p = new_proposer(name, spec).unwrap();
+        // preload 100 history entries
+        for _ in 0..100 {
+            match p.get_param() {
+                ProposeResult::Config(c) => {
+                    let s = auptimizer::workload::surrogate::mnist_cnn_surrogate(&c);
+                    p.update(c.job_id().unwrap(), &c, Some(s));
+                }
+                _ => break,
+            }
+        }
+        let samples = if name == "spearmint" { 20 } else { 2000 };
+        let stats = bench_fn(
+            &format!("{name}: get_param+update @ n=100"),
+            3,
+            samples,
+            || match p.get_param() {
+                ProposeResult::Config(c) => {
+                    p.update(c.job_id().unwrap(), &c, Some(0.5));
+                }
+                _ => {}
+            },
+        );
+        println!("{}", stats.report());
+        reports.push((name.to_string(), stats));
+    }
+
+    // tracking store round-trip
+    {
+        let mut store = Store::in_memory();
+        schema::init_schema(&mut store).unwrap();
+        schema::add_user(&mut store, "bench").unwrap();
+        let eid = schema::start_experiment(&mut store, 0, "random", "{}", 0.0).unwrap();
+        let mut jid = 0i64;
+        let stats = bench_fn("store: job start+finish round-trip", 10, 2000, || {
+            schema::start_job(&mut store, jid, eid, 0, r#"{"x":1.5,"job_id":0}"#, 0.0).unwrap();
+            schema::finish_job(&mut store, jid, Some(0.5), true, 1.0).unwrap();
+            jid += 1;
+        });
+        println!("{}", stats.report());
+        reports.push(("store".into(), stats));
+    }
+
+    // BasicConfig JSON protocol
+    {
+        let c = space().sample(&mut auptimizer::util::rng::Rng::new(2));
+        let text = c.to_json_string();
+        let stats = bench_fn("BasicConfig: encode+decode", 10, 5000, || {
+            let s = c.to_json_string();
+            let _ = BasicConfig::from_json_str(&s).unwrap();
+            std::hint::black_box(s.len());
+        });
+        println!("{}  (payload {} bytes)", stats.report(), text.len());
+        reports.push(("json".into(), stats));
+    }
+
+    // end-to-end loop dispatch rate on no-op jobs
+    {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{
+                "proposer": "random",
+                "script": "builtin:sphere",
+                "n_samples": 2000,
+                "n_parallel": 4,
+                "target": "min",
+                "parameter_config": [
+                    {"name": "x", "type": "float", "range": [-1, 1]},
+                    {"name": "y", "type": "float", "range": [-1, 1]}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+        let t0 = std::time::Instant::now();
+        let s = exp.run().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = s.n_jobs as f64 / dt;
+        println!(
+            "{:<44} {:>10} jobs    {:>10.0} jobs/s  ({:.1} µs/job incl. threads+store)",
+            "experiment loop: no-op jobs", s.n_jobs, rate, dt / s.n_jobs as f64 * 1e6
+        );
+
+        // the paper's marginal-overhead claim, quantified: overhead per
+        // job vs a 300 s job
+        let per_job_s = dt / s.n_jobs as f64;
+        let fraction = per_job_s / 300.0;
+        println!(
+            "\ncoordinator overhead per job = {:.3} ms = {:.6}% of a 5-minute training job",
+            per_job_s * 1e3,
+            fraction * 100.0
+        );
+        assert!(
+            fraction < 1e-3,
+            "overhead must be <0.1% of a paper job ({fraction})"
+        );
+    }
+
+    // §Perf targets from DESIGN.md
+    let get = |n: &str| &reports.iter().find(|(k, _)| k == n).unwrap().1;
+    assert!(
+        get("random").mean_ns < 1e6,
+        "random get_param+update must be < 1 ms"
+    );
+    assert!(
+        get("spearmint").mean_ns < 50e6 * 10.0,
+        "spearmint must stay usable (< 500 ms) at n=100"
+    );
+    assert!(get("store").mean_ns < 1e6, "store round-trip must be < 1 ms");
+    println!("\nall §Perf overhead targets satisfied");
+}

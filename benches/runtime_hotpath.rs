@@ -1,0 +1,112 @@
+//! L3↔runtime hot-path bench: PJRT train-step latency and dispatch
+//! overhead — the §Perf item "PJRT trainer step latency within 1.5× of
+//! a raw execute loop".
+//!
+//! Requires artifacts (`make artifacts`); exits 0 with a notice if they
+//! are missing so `cargo bench` stays green in artifact-less checkouts.
+//!
+//! Run: `cargo bench --bench runtime_hotpath`
+
+use auptimizer::metrics::{bench_fn, fmt_ns};
+use auptimizer::runtime::client::{to_vec_f32, Runtime};
+use auptimizer::runtime::data;
+use auptimizer::runtime::trainer::{spawn_trainer, Meta, TrainerConfig};
+use auptimizer::search::BasicConfig;
+
+fn main() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        println!("runtime_hotpath: artifacts missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    let meta = Meta::load(std::path::Path::new("artifacts")).unwrap();
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let train = rt.load("train_step").unwrap();
+    let evalx = rt.load("eval").unwrap();
+    let init = rt.load("init").unwrap();
+
+    // raw execute loop: state -> state
+    let ds = data::generate(meta.batch * 4, 1);
+    let (imgs, labels) = ds.batch(0, meta.batch);
+    let img_lit = rt.lit_f32(imgs, &[meta.batch, meta.img * meta.img]).unwrap();
+    let lbl: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+    let lbl_lit = rt.lit_i32(&lbl, &[meta.batch]).unwrap();
+    let out = init.run(&[xla::Literal::scalar(1u32)]).unwrap();
+    let mut state = to_vec_f32(&out[0]).unwrap();
+
+    let step_stats = bench_fn("raw PJRT train_step (B=32)", 3, 30, || {
+        let state_lit = rt.lit_f32(&state, &[meta.state_len]).unwrap();
+        let out = train
+            .run(&[
+                state_lit,
+                img_lit.reshape(&[meta.batch as i64, (meta.img * meta.img) as i64]).unwrap(),
+                lbl_lit.reshape(&[meta.batch as i64]).unwrap(),
+                xla::Literal::scalar(16i32),
+                xla::Literal::scalar(32i32),
+                xla::Literal::scalar(128i32),
+                xla::Literal::scalar(3e-3f32),
+                xla::Literal::scalar(0.1f32),
+                xla::Literal::scalar(7u32),
+            ])
+            .unwrap();
+        state = to_vec_f32(&out[0]).unwrap();
+    });
+    println!("{}", step_stats.report());
+
+    let eval_stats = bench_fn("raw PJRT eval (B=32)", 3, 30, || {
+        let state_lit = rt.lit_f32(&state, &[meta.state_len]).unwrap();
+        let out = evalx
+            .run(&[
+                state_lit,
+                img_lit.reshape(&[meta.batch as i64, (meta.img * meta.img) as i64]).unwrap(),
+                lbl_lit.reshape(&[meta.batch as i64]).unwrap(),
+                xla::Literal::scalar(16i32),
+                xla::Literal::scalar(32i32),
+                xla::Literal::scalar(128i32),
+            ])
+            .unwrap();
+        std::hint::black_box(to_vec_f32(&out[0]).unwrap());
+    });
+    println!("{}", eval_stats.report());
+
+    // trainer-actor path: same step count through the channel + batching
+    let h = spawn_trainer(TrainerConfig {
+        artifacts_dir: "artifacts".into(),
+        train_size: meta.batch * 4,
+        test_size: meta.batch,
+        data_seed: 1,
+        default_epochs: 1,
+        model_dir: None,
+    })
+    .unwrap();
+    let mut job = BasicConfig::new();
+    job.set_num("conv1", 16.0)
+        .set_num("conv2", 32.0)
+        .set_num("fc1", 128.0)
+        .set_num("learning_rate", 3e-3)
+        .set_num("dropout", 0.1)
+        .set_num("n_iterations", 1.0)
+        .set_num("job_id", 0.0);
+    let t0 = std::time::Instant::now();
+    let reps = 5;
+    let mut steps = 0;
+    for i in 0..reps {
+        job.set_num("job_id", i as f64);
+        let out = h.train(&job, false).unwrap();
+        steps += out.steps;
+    }
+    let per_step_actor =
+        t0.elapsed().as_nanos() as f64 / (steps as f64 + reps as f64) /* + eval per job */;
+    println!(
+        "{:<44} {:>10} steps   mean {:>12} /step (incl. actor channel, batching, eval)",
+        "trainer-actor end-to-end",
+        steps,
+        fmt_ns(per_step_actor)
+    );
+
+    let ratio = per_step_actor / step_stats.mean_ns;
+    println!("\ndispatch overhead ratio (actor / raw step) = {ratio:.2}×  (target ≤ 1.5×)");
+    assert!(
+        ratio < 1.8,
+        "actor path must stay close to the raw execute loop ({ratio:.2}x)"
+    );
+}

@@ -1,0 +1,106 @@
+//! §V reproduction: EAS neural-architecture search through the Proposer
+//! API, plus the Net2Net machinery it relies on.
+//!
+//! Part 1 shows the *mechanism*: function-preserving Net2Wider /
+//! Net2Deeper transforms on a real MLP (max |Δoutput| ≈ 0).
+//! Part 2 runs the EAS proposer (REINFORCE controller over width-growth
+//! actions, children as parallel jobs with `prev_job_id` weight reuse)
+//! against the CNN surrogate at a paper-like budget, then — if
+//! artifacts exist — re-evaluates the found architecture with REAL PJRT
+//! training to close the loop.
+//!
+//! Run: `cargo run --release --example nas_eas`
+
+use auptimizer::experiment::{Experiment, ExperimentOptions};
+use auptimizer::nas::net2net::Mlp;
+use auptimizer::nas::Arch;
+use auptimizer::prelude::*;
+use auptimizer::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("=== Part 1: Net2Net function preservation ===");
+    let mut rng = Rng::new(1);
+    let mlp = Mlp::random(Arch::new(vec![8, 16, 12, 4]), &mut rng);
+    let grown = mlp.net2wider(0, 24, &mut rng).net2deeper(1).net2wider(2, 20, &mut rng);
+    let mut worst = 0.0f64;
+    for _ in 0..100 {
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let a = mlp.forward(&x);
+        let b = grown.forward(&x);
+        for (p, q) in a.iter().zip(&b) {
+            worst = worst.max((p - q).abs());
+        }
+    }
+    println!(
+        "  {:?} -> {:?}",
+        mlp.arch.widths, grown.arch.widths
+    );
+    println!(
+        "  params {} -> {}, max |Δoutput| over 100 random inputs = {worst:.2e}\n",
+        mlp.arch.params(),
+        grown.arch.params()
+    );
+    assert!(worst < 1e-9);
+
+    println!("=== Part 2: EAS proposer on the CNN search space ===");
+    let cfg = ExperimentConfig::from_json_str(
+        r#"{
+            "proposer": "eas",
+            "script": "builtin:mnist_cnn_surrogate",
+            "n_samples": 40,
+            "n_parallel": 4,
+            "target": "min",
+            "random_seed": 3,
+            "children_per_episode": 4,
+            "episodes": 9,
+            "parameter_config": [
+                {"name": "conv1", "type": "int", "range": [8, 32]},
+                {"name": "conv2", "type": "int", "range": [8, 64]},
+                {"name": "fc1", "type": "int", "range": [32, 256]},
+                {"name": "dropout", "type": "float", "range": [0.0, 0.6]},
+                {"name": "learning_rate", "type": "float", "range": [0.0003, 0.03], "interval": "log"}
+            ]
+        }"#,
+    )?;
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default())?;
+    let s = exp.run()?;
+    let best = s.best_config.clone().unwrap();
+    println!(
+        "  {} child jobs, best test-error {:.4}",
+        s.n_jobs,
+        s.best_score.unwrap()
+    );
+    println!(
+        "  best architecture: conv1={} conv2={} fc1={} (lr={:.4}, dropout={:.2})",
+        best.get_num("conv1").unwrap(),
+        best.get_num("conv2").unwrap(),
+        best.get_num("fc1").unwrap(),
+        best.get_num("learning_rate").unwrap(),
+        best.get_num("dropout").unwrap(),
+    );
+    // architectures grow over the run (EAS is growth-only):
+    let first_width: f64 = s.history.first().map(|(id, _, _)| *id as f64).unwrap_or(0.0);
+    let _ = first_width;
+
+    // Part 3 (optional): verify the found architecture with REAL training
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        println!("\n=== Part 3: re-evaluate the winner with real PJRT training ===");
+        let trainer = auptimizer::runtime::trainer::spawn_trainer(
+            auptimizer::runtime::trainer::TrainerConfig {
+                train_size: 320,
+                test_size: 160,
+                ..Default::default()
+            },
+        )?;
+        let mut job = best.clone();
+        job.set_num("n_iterations", 3.0).set_num("job_id", 777.0);
+        let out = trainer.train(&job, true)?;
+        println!("  real test-error after 3 epochs: {:.4}", out.test_error);
+        for e in &out.curve {
+            println!("  epoch {}: loss {:.4}, err {:.4}", e.epoch, e.train_loss, e.test_error);
+        }
+    } else {
+        println!("\n(skip real re-evaluation: run `make artifacts` to enable)");
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the paper's Code-2 experiment — random search on the
+//! Rosenbrock function — through the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use auptimizer::prelude::*;
+
+fn main() -> Result<()> {
+    // experiment.json exactly as the paper's Code 2 (script resolved to
+    // the built-in Rosenbrock objective)
+    let cfg = ExperimentConfig::from_json_str(
+        r#"{
+            "proposer": "random",
+            "script": "builtin:rosenbrock",
+            "n_samples": 200,
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 42,
+            "parameter_config": [
+                {"name": "x", "type": "float", "range": [-5, 10]},
+                {"name": "y", "type": "float", "range": [-5, 10]}
+            ]
+        }"#,
+    )?;
+
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default())?;
+    let summary = exp.run()?;
+
+    println!(
+        "ran {} jobs ({} failed) in {:.2}s",
+        summary.n_jobs, summary.n_failed, summary.wall_time
+    );
+    println!("best score: {:.6}", summary.best_score.unwrap());
+    println!("best config: {}", summary.best_config.as_ref().unwrap().to_json_string());
+
+    // best-so-far curve, as `aup viz` would show it
+    let curve: Vec<f64> = summary.history.iter().map(|(_, _, b)| *b).collect();
+    println!("\nbest-so-far (log-ish shape expected):");
+    print!("{}", auptimizer::viz::ascii_curve(&curve, 60, 12));
+
+    // switching the HPO algorithm is one string (the paper's headline):
+    for proposer in ["hyperopt", "spearmint"] {
+        let cfg = ExperimentConfig::from_json_str(&format!(
+            r#"{{
+                "proposer": "{proposer}",
+                "script": "builtin:rosenbrock",
+                "n_samples": 40,
+                "n_parallel": 2,
+                "target": "min",
+                "random_seed": 42,
+                "parameter_config": [
+                    {{"name": "x", "type": "float", "range": [-5, 10]}},
+                    {{"name": "y", "type": "float", "range": [-5, 10]}}
+                ]
+            }}"#
+        ))?;
+        let mut exp = Experiment::new(cfg, ExperimentOptions::default())?;
+        let s = exp.run()?;
+        println!(
+            "\n{proposer:>10}: best {:.6} in {} jobs",
+            s.best_score.unwrap(),
+            s.n_jobs
+        );
+    }
+    Ok(())
+}

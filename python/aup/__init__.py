@@ -1,0 +1,60 @@
+"""User-side helper package -- the paper's Code-3 import, verbatim:
+
+    from aup import BasicConfig, print_result
+
+This is the ONLY python Auptimizer ships for *job* authors; it has no
+dependencies beyond the standard library so user scripts stay portable
+(the coordinator itself is the Rust `aup` binary). A training script
+integrates in the paper's four steps:
+
+    #!/usr/bin/env python
+    import sys
+    from aup import BasicConfig, print_result
+
+    config = BasicConfig(lr=0.001).load(sys.argv[1])
+    accuracy = train(config["lr"])          # user code
+    print_result(accuracy)
+"""
+
+import json
+import sys
+
+
+class BasicConfig(dict):
+    """The job configuration object (paper SSIII-A1): a dict with
+    ``load``/``save`` helpers mirroring the original API."""
+
+    def __init__(self, **kwargs):
+        super().__init__(**kwargs)
+
+    def load(self, path):
+        """Merge the JSON config file written by the coordinator
+        (returns self, as in the paper: ``BasicConfig().load(argv[1])``)."""
+        with open(path) as f:
+            self.update(json.load(f))
+        return self
+
+    def save(self, path):
+        """Persist this config (used when scripts re-run standalone)."""
+        with open(path, "w") as f:
+            json.dump(dict(self), f, sort_keys=True)
+        return self
+
+    def __getattr__(self, name):
+        try:
+            return self[name]
+        except KeyError as e:
+            raise AttributeError(name) from e
+
+
+def print_result(score, extra=None, file=None):
+    """Report the job's score over standard IO (paper SSIII-B2). The
+    coordinator parses the last ``result:`` line; ``extra`` is the
+    "additional information ... passed to Proposer as an arbitrary
+    string"."""
+    out = file if file is not None else sys.stdout
+    if extra is None:
+        print(f"result: {float(score)}", file=out)
+    else:
+        print(f"result: {float(score)}, {extra}", file=out)
+    out.flush()

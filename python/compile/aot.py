@@ -1,0 +1,65 @@
+"""AOT compile path: lower the Layer-2 model (with its Layer-1 Pallas
+kernels inlined via interpret=True) to HLO TEXT artifacts for the Rust
+runtime.
+
+HLO text -- NOT ``lowered.compile()`` / serialized protos -- is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/), or
+``make artifacts`` at the repo root.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower init / train_step / eval; returns {name: hlo_text}."""
+    args = model.example_args()
+    out = {}
+    out["init"] = to_hlo_text(jax.jit(model.init_for_aot).lower(*args["init"]))
+    out["train_step"] = to_hlo_text(
+        jax.jit(model.train_step, donate_argnums=(0,)).lower(*args["train_step"])
+    )
+    out["eval"] = to_hlo_text(jax.jit(model.eval_fn).lower(*args["eval"]))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+    artifacts = lower_all()
+    total = 0
+    for name, text in artifacts.items():
+        path = os.path.join(ns.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    meta_path = os.path.join(ns.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(model.meta(), f, indent=2, sort_keys=True)
+    print(f"wrote {meta_path}; total {total} chars of HLO")
+
+
+if __name__ == "__main__":
+    main()

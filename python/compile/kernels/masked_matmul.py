@@ -1,0 +1,129 @@
+"""Layer-1 Pallas kernel: fused masked dense layer.
+
+The compute hot-spot of the paper's SIV CNN job. One kernel serves all
+four layers (both convolutions are lowered to im2col + this matmul):
+
+    y = act((x @ w + b) * col_mask)
+
+where ``col_mask`` zeroes the output channels/units above the active
+width -- the mechanism that lets ONE AOT-compiled super-network serve
+every (conv1, conv2, fc1) hyperparameter setting (DESIGN.md SS1).
+
+TPU thinking (DESIGN.md SSHardware-Adaptation): the grid tiles M x N
+result blocks with the full K panel resident, so the MXU sees dense
+(bm, k) @ (k, bn) contractions; bias, mask and ReLU run in the epilogue
+on the VPU instead of materializing a masked weight matrix in HBM.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering inlines the same computation
+into plain HLO (see /opt/xla-example/README.md).
+
+The backward pass is two more Pallas matmuls (dx = dz @ w^T and
+dw = x^T @ dz) wired through ``jax.custom_vjp``, so the *training* step
+-- not just inference -- runs through Layer-1 kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps BlockSpecs
+    exact -- no padding logic needed in interpret mode)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Plain tiled matmul: one (bm, bn) output tile per grid cell, full
+    K panel resident in VMEM."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x: jax.Array, w: jax.Array, bm: int = 8192, bn: int = 512) -> jax.Array:
+    """Pallas tiled ``x @ w`` (f32)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _masked_dense_kernel(x_ref, w_ref, b_ref, mask_ref, o_ref, *, relu: bool):
+    """Matmul + epilogue: bias add, column mask, optional ReLU."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = (acc + b_ref[...]) * mask_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _masked_dense_fwd_pallas(x, w, b, mask, relu: bool, bm: int, bn: int):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    b2 = b.reshape(1, n)
+    mask2 = mask.reshape(1, n)
+    return pl.pallas_call(
+        functools.partial(_masked_dense_kernel, relu=relu),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b2, mask2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def masked_dense(x, w, b, mask, relu: bool = True):
+    """Fused ``act((x @ w + b) * mask)`` with a Pallas fwd AND bwd.
+
+    Args:
+        x: (m, k) activations.
+        w: (k, n) weights.
+        b: (n,) bias.
+        mask: (n,) 0/1 column mask (not differentiated).
+        relu: apply ReLU in the epilogue.
+    """
+    return _masked_dense_fwd_pallas(x, w, b, mask, relu, 8192, 512)
+
+
+def _fwd(x, w, b, mask, relu: bool):
+    y = _masked_dense_fwd_pallas(x, w, b, mask, relu, 8192, 512)
+    return y, (x, w, mask, y)
+
+
+def _bwd(relu: bool, res, dy):
+    x, w, mask, y = res
+    # epilogue gradient: through ReLU (if any) and the column mask
+    dz = dy * (y > 0.0).astype(dy.dtype) if relu else dy
+    dz = dz * mask.reshape(1, -1)
+    # two more Pallas matmuls for the backward pass
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db, None  # no gradient for the mask
+
+
+masked_dense.defvjp(_fwd, _bwd)

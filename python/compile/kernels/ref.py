@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels -- the CORE correctness
+signal (pytest asserts allclose kernel-vs-ref across shape/dtype sweeps).
+"""
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def masked_dense_ref(x, w, b, mask, relu=True):
+    y = (jnp.dot(x, w, preferred_element_type=jnp.float32) + b.reshape(1, -1)) * mask.reshape(1, -1)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def adam_ref(p, m, v, g, lr, t):
+    m2 = BETA1 * m + (1.0 - BETA1) * g
+    v2 = BETA2 * v + (1.0 - BETA2) * g * g
+    m_hat = m2 / (1.0 - BETA1**t)
+    v_hat = v2 / (1.0 - BETA2**t)
+    p2 = p - lr * m_hat / (jnp.sqrt(v_hat) + EPS)
+    return p2, m2, v2

@@ -1,0 +1,233 @@
+"""Layer-2: the paper's SIV workload -- a CNN with two convolutions and
+two fully-connected layers, Adam optimizer, global dropout -- written in
+JAX over the Layer-1 Pallas kernels.
+
+The hyperparameters the paper tunes (conv1, conv2, fc1 widths,
+learning_rate, dropout, n_iterations) are RUNTIME INPUTS of a single
+masked super-network (DESIGN.md SS1): the model is compiled once at the
+maximum widths and a column mask zeroes inactive channels exactly, in
+both forward and backward passes. ``n_iterations`` is consumed by the
+Rust trainer as the number of training epochs (Hyperband's budget key).
+
+Model state is ONE flat f32 vector ``[params | m | v | t]`` so the Rust
+side round-trips a single buffer per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.adam import adam_update
+from compile.kernels.masked_matmul import masked_dense
+
+# architecture constants (max widths -- the search space upper bounds)
+IMG = 16
+BATCH = 32
+CMAX1 = 32
+CMAX2 = 64
+FMAX = 256
+NCLASS = 10
+_FLAT = (IMG // 4) * (IMG // 4) * CMAX2  # 4*4*64 = 1024
+
+# flat-state layout
+SHAPES = [
+    ("conv1_w", (3 * 3 * 1, CMAX1)),
+    ("conv1_b", (CMAX1,)),
+    ("conv2_w", (3 * 3 * CMAX1, CMAX2)),
+    ("conv2_b", (CMAX2,)),
+    ("fc1_w", (_FLAT, FMAX)),
+    ("fc1_b", (FMAX,)),
+    ("fc2_w", (FMAX, NCLASS)),
+    ("fc2_b", (NCLASS,)),
+]
+P = sum(int(jnp.prod(jnp.array(s))) for _, s in SHAPES)
+STATE_LEN = 3 * P + 1  # params, m, v, t
+
+
+def unpack(flat_params):
+    """Split the P-length flat vector into named parameter arrays."""
+    out = {}
+    off = 0
+    for name, shape in SHAPES:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = flat_params[off : off + n].reshape(shape)
+        off += n
+    assert off == P
+    return out
+
+
+def _patches3x3(x):
+    """SAME-padded 3x3 patch extraction: (B,H,W,C) -> (B*H*W, 9*C).
+
+    Unrolled static slicing keeps this trivially differentiable and lets
+    XLA fuse it with the downstream matmul's im2col consumer.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [
+        xp[:, dy : dy + h, dx : dx + w, :]
+        for dy in range(3)
+        for dx in range(3)
+    ]
+    return jnp.concatenate(cols, axis=-1).reshape(b * h * w, 9 * c)
+
+
+def _maxpool2(x):
+    """2x2 max pool, stride 2, on (B,H,W,C)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def _width_mask(n_active, width):
+    """(width,) f32 mask: 1 for channels < n_active."""
+    return (jnp.arange(width) < n_active).astype(jnp.float32)
+
+
+def forward(flat_params, images, conv1_n, conv2_n, fc1_n, dropout, key, train: bool):
+    """Logits of the masked CNN.
+
+    Args:
+        flat_params: (P,) parameter vector.
+        images: (B, IMG*IMG) f32 in [0,1].
+        conv1_n/conv2_n/fc1_n: i32 active widths.
+        dropout: f32 dropout rate (train only).
+        key: u32 PRNG seed scalar (train only).
+        train: python bool -- dropout on/off (two artifacts).
+    """
+    p = unpack(flat_params)
+    b = images.shape[0]
+    m1 = _width_mask(conv1_n, CMAX1)
+    m2 = _width_mask(conv2_n, CMAX2)
+    m3 = _width_mask(fc1_n, FMAX)
+
+    x = images.reshape(b, IMG, IMG, 1)
+    # conv1 as im2col + masked Pallas matmul, ReLU fused
+    h1 = masked_dense(_patches3x3(x), p["conv1_w"], p["conv1_b"], m1, True)
+    h1 = h1.reshape(b, IMG, IMG, CMAX1)
+    h1 = _maxpool2(h1)  # (B, 8, 8, 32)
+    # conv2
+    h2 = masked_dense(_patches3x3(h1), p["conv2_w"], p["conv2_b"], m2, True)
+    h2 = h2.reshape(b, IMG // 2, IMG // 2, CMAX2)
+    h2 = _maxpool2(h2)  # (B, 4, 4, 64)
+    flat = h2.reshape(b, _FLAT)
+    # fc1 + global dropout (paper SIV: "a global dropout ratio")
+    h3 = masked_dense(flat, p["fc1_w"], p["fc1_b"], m3, True)
+    if train:
+        keep = 1.0 - dropout
+        rng = jax.random.PRNGKey(key)
+        mask = jax.random.bernoulli(rng, keep, h3.shape).astype(h3.dtype)
+        h3 = h3 * mask / jnp.maximum(keep, 1e-6)
+    # fc2 logits (no activation, all classes active)
+    logits = masked_dense(h3, p["fc2_w"], p["fc2_b"], jnp.ones(NCLASS), False)
+    return logits
+
+
+def _loss(flat_params, images, labels, conv1_n, conv2_n, fc1_n, dropout, key, train):
+    logits = forward(flat_params, images, conv1_n, conv2_n, fc1_n, dropout, key, train)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels.reshape(-1, 1), axis=1)
+    return jnp.mean(nll)
+
+
+def init_fn(seed):
+    """He-initialized flat state from a u32 seed."""
+    rng = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in SHAPES:
+        rng, sub = jax.random.split(rng)
+        if name.endswith("_w"):
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / fan_in)
+        else:
+            w = jnp.zeros(shape)
+        parts.append(w.reshape(-1))
+    params = jnp.concatenate(parts)
+    m = jnp.zeros(P)
+    v = jnp.zeros(P)
+    t = jnp.zeros(1)
+    return (jnp.concatenate([params, m, v, t]).astype(jnp.float32),)
+
+
+def train_step(state, images, labels, conv1_n, conv2_n, fc1_n, lr, dropout, key):
+    """One fwd+bwd+Adam step. Returns (new_state, loss)."""
+    params = state[:P]
+    m = state[P : 2 * P]
+    v = state[2 * P : 3 * P]
+    t = state[3 * P] + 1.0
+    loss, grads = jax.value_and_grad(_loss)(
+        params, images, labels, conv1_n, conv2_n, fc1_n, dropout, key, True
+    )
+    p2, m2, v2 = adam_update(params, m, v, grads, lr, t)
+    new_state = jnp.concatenate([p2, m2, v2, t.reshape(1)])
+    return new_state, loss
+
+
+def eval_fn(state, images, labels, conv1_n, conv2_n, fc1_n):
+    """Batched evaluation. Returns (n_correct, loss_sum)."""
+    params = state[:P]
+    logits = forward(params, images, conv1_n, conv2_n, fc1_n, 0.0, jnp.uint32(0), False)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels.reshape(-1, 1), axis=1)
+    return correct, jnp.sum(nll)
+
+
+# jitted entry points (donate the state buffer in train_step: the L2
+# perf item from DESIGN.md SS6)
+train_step_jit = jax.jit(train_step, donate_argnums=(0,))
+eval_jit = jax.jit(eval_fn)
+init_jit = jax.jit(init_fn, static_argnums=(0,))
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering (aot.py)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "init": (sds((), u32),),
+        "train_step": (
+            sds((STATE_LEN,), f32),
+            sds((BATCH, IMG * IMG), f32),
+            sds((BATCH,), i32),
+            sds((), i32),
+            sds((), i32),
+            sds((), i32),
+            sds((), f32),
+            sds((), f32),
+            sds((), u32),
+        ),
+        "eval": (
+            sds((STATE_LEN,), f32),
+            sds((BATCH, IMG * IMG), f32),
+            sds((BATCH,), i32),
+            sds((), i32),
+            sds((), i32),
+            sds((), i32),
+        ),
+    }
+
+
+def init_for_aot(seed):
+    """AOT variant of init taking a traced scalar seed."""
+    return init_fn(seed)
+
+
+@functools.lru_cache(maxsize=1)
+def meta():
+    return {
+        "state_len": STATE_LEN,
+        "n_params": P,
+        "batch": BATCH,
+        "img": IMG,
+        "n_classes": NCLASS,
+        "cmax1": CMAX1,
+        "cmax2": CMAX2,
+        "fmax": FMAX,
+    }

@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repo root as well as from
+python/ (tests import the `compile` and `aup` packages that live next to
+this file)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,90 @@
+"""L1/L2 perf tool: Pallas-kernel train step vs a pure-jnp reference.
+
+The Layer-1 target from DESIGN.md SS6 is >= 0.5x of the pure-jnp
+reference (interpret=True lowering means XLA sees a loop-structured
+matmul instead of one dot — this measures what that structure costs).
+
+Usage: cd python && python perf_compare.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref as kref
+
+
+def forward_ref(flat_params, images, c1, c2, f1, dropout, key, train):
+    p = model.unpack(flat_params)
+    b = images.shape[0]
+    m1 = (jnp.arange(model.CMAX1) < c1).astype(jnp.float32)
+    m2 = (jnp.arange(model.CMAX2) < c2).astype(jnp.float32)
+    m3 = (jnp.arange(model.FMAX) < f1).astype(jnp.float32)
+    x = images.reshape(b, model.IMG, model.IMG, 1)
+    h1 = kref.masked_dense_ref(model._patches3x3(x), p["conv1_w"], p["conv1_b"], m1, True)
+    h1 = model._maxpool2(h1.reshape(b, model.IMG, model.IMG, model.CMAX1))
+    h2 = kref.masked_dense_ref(model._patches3x3(h1), p["conv2_w"], p["conv2_b"], m2, True)
+    h2 = model._maxpool2(h2.reshape(b, model.IMG // 2, model.IMG // 2, model.CMAX2))
+    h3 = kref.masked_dense_ref(h2.reshape(b, -1), p["fc1_w"], p["fc1_b"], m3, True)
+    if train:
+        keep = 1.0 - dropout
+        mask = jax.random.bernoulli(jax.random.PRNGKey(key), keep, h3.shape).astype(h3.dtype)
+        h3 = h3 * mask / jnp.maximum(keep, 1e-6)
+    return kref.masked_dense_ref(h3, p["fc2_w"], p["fc2_b"], jnp.ones(model.NCLASS), False)
+
+
+def loss_ref(params, images, labels, c1, c2, f1, dropout, key):
+    logits = forward_ref(params, images, c1, c2, f1, dropout, key, True)
+    logp = jax.nn.log_softmax(logits, -1)
+    return jnp.mean(-jnp.take_along_axis(logp, labels.reshape(-1, 1), 1))
+
+
+def train_step_ref(state, images, labels, c1, c2, f1, lr, dropout, key):
+    P = model.P
+    params, m, v = state[:P], state[P : 2 * P], state[2 * P : 3 * P]
+    t = state[3 * P] + 1.0
+    loss, g = jax.value_and_grad(loss_ref)(
+        params, images, labels, c1, c2, f1, dropout, key
+    )
+    p2, m2, v2 = kref.adam_ref(params, m, v, g, lr, t)
+    return jnp.concatenate([p2, m2, v2, t.reshape(1)]), loss
+
+
+def main():
+    imgs = jnp.zeros((model.BATCH, model.IMG * model.IMG), jnp.float32)
+    lbls = jnp.zeros((model.BATCH,), jnp.int32)
+    args = (
+        jnp.int32(16),
+        jnp.int32(32),
+        jnp.int32(128),
+        jnp.float32(3e-3),
+        jnp.float32(0.1),
+        jnp.uint32(0),
+    )
+    results = {}
+    for name, fn in [
+        ("pallas", jax.jit(model.train_step, donate_argnums=(0,))),
+        ("pure-jnp", jax.jit(train_step_ref, donate_argnums=(0,))),
+    ]:
+        (st,) = model.init_fn(0)
+        st2, loss = fn(st, imgs, lbls, *args)
+        loss.block_until_ready()
+        t0 = time.time()
+        n = 10
+        for _ in range(n):
+            st2, loss = fn(st2, imgs, lbls, *args)
+        loss.block_until_ready()
+        ms = (time.time() - t0) / n * 1000
+        results[name] = ms
+        print(f"{name}: {ms:.1f} ms/step")
+    ratio = results["pure-jnp"] / results["pallas"]
+    print(f"pallas achieves {ratio:.2f}x of the pure-jnp reference throughput")
+
+
+if __name__ == "__main__":
+    main()

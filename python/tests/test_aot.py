@@ -1,0 +1,65 @@
+"""AOT artifact contract tests: the files `make artifacts` ships to the
+Rust runtime (skipped when artifacts/ has not been built)."""
+
+import json
+import os
+
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestArtifactFiles:
+    def test_all_artifacts_present(self):
+        for name in ["init", "train_step", "eval"]:
+            path = os.path.join(ART, f"{name}.hlo.txt")
+            assert os.path.exists(path), name
+
+    def test_hlo_text_format(self):
+        # HLO *text* is the interchange contract (xla_extension 0.5.1
+        # rejects jax>=0.5 serialized protos) — must start with HloModule
+        for name in ["init", "train_step", "eval"]:
+            with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), f"{name}: {head!r}"
+
+    def test_meta_matches_model(self):
+        with open(os.path.join(ART, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["state_len"] == model.STATE_LEN
+        assert meta["n_params"] == model.P
+        assert meta["batch"] == model.BATCH
+        assert meta["img"] == model.IMG
+        assert meta["cmax1"] == model.CMAX1
+        assert meta["fmax"] == model.FMAX
+
+    def test_train_step_signature_in_hlo(self):
+        # the entry computation must take exactly the 9 runtime inputs
+        # the Rust trainer feeds (state, images, labels, 3 widths, lr,
+        # dropout, key)
+        with open(os.path.join(ART, "train_step.hlo.txt")) as f:
+            text = f.read()
+        # take the ENTRY computation body and collect its parameter decls
+        entry_body = text.split("ENTRY", 1)[1]
+        params = [l for l in entry_body.splitlines() if "parameter(" in l]
+        assert len(params) == 9, f"expected 9 runtime inputs, got {len(params)}"
+        sig = "\n".join(params)
+        assert f"f32[{model.STATE_LEN}]" in sig, sig
+        assert f"f32[{model.BATCH},{model.IMG * model.IMG}]" in sig, sig
+        assert f"s32[{model.BATCH}]" in sig, sig
+
+    def test_no_custom_calls(self):
+        # interpret=True must have inlined the Pallas kernels to plain
+        # HLO; a Mosaic custom-call would be unexecutable on CPU PJRT
+        for name in ["train_step", "eval"]:
+            with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+                text = f.read()
+            assert "custom-call" not in text or "mosaic" not in text.lower(), name

@@ -1,0 +1,80 @@
+"""The user-side `aup` package (paper Code 3 import) round-trips with
+the Rust coordinator's protocol."""
+
+import io
+import json
+import subprocess
+import sys
+import textwrap
+
+from aup import BasicConfig, print_result
+
+
+class TestBasicConfig:
+    def test_load_merges_defaults(self, tmp_path):
+        p = tmp_path / "job_0.json"
+        p.write_text('{"x": -5.0, "y": 5.0, "job_id": 0}')  # paper Code 1
+        config = BasicConfig(x=1.0, z="keep").load(str(p))
+        assert config["x"] == -5.0  # file wins
+        assert config["z"] == "keep"  # defaults survive
+        assert config.job_id == 0  # attribute access
+
+    def test_save_load_roundtrip(self, tmp_path):
+        p = tmp_path / "c.json"
+        BasicConfig(a=1, b="two").save(str(p))
+        assert BasicConfig().load(str(p)) == {"a": 1, "b": "two"}
+        # the saved file is plain JSON the Rust side can parse
+        assert json.loads(p.read_text()) == {"a": 1, "b": "two"}
+
+    def test_missing_attr_raises(self):
+        c = BasicConfig(a=1)
+        try:
+            _ = c.nope
+            assert False
+        except AttributeError:
+            pass
+
+
+class TestPrintResult:
+    def test_plain(self):
+        buf = io.StringIO()
+        print_result(0.25, file=buf)
+        assert buf.getvalue() == "result: 0.25\n"
+
+    def test_with_extra(self):
+        buf = io.StringIO()
+        print_result(0.5, extra="ckpt=/tmp/x", file=buf)
+        assert buf.getvalue() == "result: 0.5, ckpt=/tmp/x\n"
+
+
+def test_full_script_protocol(tmp_path):
+    """A Code-3-shaped script runs standalone: config file in argv[1],
+    result line on stdout — exactly what the Rust ScriptExecutor parses."""
+    script = tmp_path / "train.py"
+    script.write_text(textwrap.dedent(
+        """
+        #!/usr/bin/env python
+        import sys
+        sys.path.insert(0, %r)
+        from aup import BasicConfig, print_result
+
+        config = BasicConfig(x=0.0).load(sys.argv[1])
+        score = (config["x"] - 2.0) ** 2
+        print("training...")
+        print_result(score)
+        """ % (str((tmp_path / ".." ).resolve()),)
+    ))
+    # point sys.path at the real package location instead
+    script.write_text(script.read_text().replace(
+        repr(str((tmp_path / "..").resolve())),
+        repr(str(__import__("pathlib").Path(__file__).parents[1].resolve())),
+    ))
+    cfg = tmp_path / "job_0.json"
+    cfg.write_text('{"x": 5.0, "job_id": 0}')
+    out = subprocess.run(
+        [sys.executable, str(script), str(cfg)],
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    assert out.stdout.splitlines()[-1] == "result: 9.0"

@@ -1,0 +1,408 @@
+//! The `aup` command-line interface, mirroring the paper's entry points:
+//!
+//! * `aup setup [--dir DIR]`           — paper: `python -m aup.setup`
+//! * `aup init [--proposer NAME]`      — paper: `python -m aup.init`
+//! * `aup run experiment.json [...]`   — paper: `python -m aup experiment.json`
+//! * `aup viz --db DIR [--eid N]`      — §III-C visualization tool
+//! * `aup algorithms`                  — list the registry (Table I count)
+//!
+//! Argument parsing is hand-rolled (clap is not vendored): flags are
+//! `--key value` pairs after the subcommand.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::experiment::config::ExperimentConfig;
+use crate::experiment::{Experiment, ExperimentOptions};
+use crate::store::Store;
+use crate::util::error::{AupError, Result};
+use crate::util::ini::Ini;
+
+/// Parsed command line: subcommand, positional args, `--flag value` map.
+#[derive(Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        if args.is_empty() {
+            return Err(AupError::Config("no subcommand (try 'aup help')".into()));
+        }
+        let command = args[0].clone();
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Cli { command, positional, flags })
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+}
+
+pub const HELP: &str = "\
+aup — Auptimizer (Rust reproduction)
+
+USAGE:
+    aup setup   [--dir DIR] [--cpu N]       write env.ini + init the tracking db
+    aup init    [--proposer NAME] [--out F] generate an experiment.json template
+    aup run     EXPERIMENT.json [--db DIR] [--user NAME] [--verbose]
+    aup viz     --db DIR [--eid N] [--csv FILE]
+    aup sql     --db DIR \"SELECT ...\"        query the tracking store directly
+    aup algorithms                          list available HPO algorithms
+    aup help
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    match dispatch(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cli = match Cli::parse(args) {
+        Ok(c) => c,
+        Err(_) => {
+            println!("{HELP}");
+            return Ok(());
+        }
+    };
+    match cli.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "algorithms" => {
+            println!("available HPO algorithms ({}):", crate::proposer::ALGORITHMS.len());
+            for a in crate::proposer::ALGORITHMS {
+                println!("  {a}");
+            }
+            Ok(())
+        }
+        "setup" => cmd_setup(&cli),
+        "init" => cmd_init(&cli),
+        "run" => cmd_run(&cli),
+        "viz" => cmd_viz(&cli),
+        "sql" => cmd_sql(&cli),
+        other => Err(AupError::Config(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+/// `aup setup`: write env.ini + create the tracking database (the paper's
+/// interactive `python -m aup.setup`, non-interactive here).
+pub fn cmd_setup(cli: &Cli) -> Result<()> {
+    let dir = PathBuf::from(cli.flag("dir").unwrap_or(".aup"));
+    std::fs::create_dir_all(&dir)?;
+    let mut ini = Ini::default();
+    ini.set("Auptimizer", "Auptimizer_PATH", &dir.display().to_string());
+    ini.set("Auptimizer", "TRACKING_DB", &dir.join("db").display().to_string());
+    ini.set("Resource", "cpu_num", cli.flag("cpu").unwrap_or("4"));
+    crate::util::fsutil::write_atomic(&dir.join("env.ini"), &ini.to_string())?;
+    // initialize the store so the schema exists
+    let mut store = Store::open(&dir.join("db"))?;
+    crate::store::schema::init_schema(&mut store)?;
+    store.checkpoint()?;
+    println!("initialized Auptimizer environment at {}", dir.display());
+    Ok(())
+}
+
+/// `aup init`: emit an experiment.json template.
+pub fn cmd_init(cli: &Cli) -> Result<()> {
+    let proposer = cli.flag("proposer").unwrap_or("random");
+    if !crate::proposer::ALGORITHMS.contains(&proposer) {
+        return Err(AupError::Config(format!(
+            "unknown proposer '{proposer}' (see 'aup algorithms')"
+        )));
+    }
+    let text = ExperimentConfig::template(proposer).to_pretty();
+    match cli.flag("out") {
+        Some(path) => {
+            crate::util::fsutil::write_atomic(Path::new(path), &text)?;
+            println!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// `aup run experiment.json`.
+pub fn cmd_run(cli: &Cli) -> Result<()> {
+    let path = cli
+        .positional
+        .first()
+        .ok_or_else(|| AupError::Config("usage: aup run EXPERIMENT.json".into()))?;
+    if cli.flag("verbose").is_some() {
+        crate::util::logging::set_level(crate::util::logging::Level::Debug);
+    }
+    let cfg = ExperimentConfig::from_file(Path::new(path))?;
+    let mut options = ExperimentOptions::default();
+    // env.ini (written by `aup setup`) supplies the default tracking db;
+    // --db overrides it
+    if let Some(env_path) = cli.flag("env") {
+        let ini = Ini::parse(&crate::util::fsutil::read_to_string(Path::new(env_path))?)?;
+        if let Some(db) = ini.get("Auptimizer", "TRACKING_DB") {
+            let mut store = Store::open(Path::new(db))?;
+            crate::store::schema::recover_incomplete(&mut store)?;
+            options.store = Some(store);
+        }
+    }
+    if let Some(db) = cli.flag("db") {
+        let mut store = Store::open(Path::new(db))?;
+        // crash recovery: any job still RUNNING from a previous process
+        // is dead — mark it failed so history stays truthful (§III-C)
+        let recovered = crate::store::schema::recover_incomplete(&mut store)?;
+        if recovered > 0 {
+            eprintln!("recovered {recovered} interrupted job(s) from a previous run");
+        }
+        options.store = Some(store);
+    }
+    if let Some(user) = cli.flag("user") {
+        options.user = user.to_string();
+    }
+    let proposer_name = cfg.proposer.clone();
+    let mut exp = Experiment::new(cfg, options)?;
+    let summary = exp.run()?;
+    println!(
+        "experiment {} ({proposer_name}): {} jobs, {} failed, best = {:?} in {:.2}s",
+        summary.eid, summary.n_jobs, summary.n_failed, summary.best_score, summary.wall_time
+    );
+    if let Some(c) = &summary.best_config {
+        println!("best config: {}", c.to_json_string());
+    }
+    let curve: Vec<f64> = summary.history.iter().map(|(_, _, b)| *b).collect();
+    if curve.len() >= 2 {
+        println!("best-so-far curve:");
+        print!("{}", crate::viz::ascii_curve(&curve, 60, 12));
+    }
+    Ok(())
+}
+
+/// `aup viz`: show or export an experiment's history from the store.
+pub fn cmd_viz(cli: &Cli) -> Result<()> {
+    let db = cli
+        .flag("db")
+        .ok_or_else(|| AupError::Config("usage: aup viz --db DIR [--eid N]".into()))?;
+    let mut store = Store::open(Path::new(db))?;
+    let eid: i64 = cli.flag("eid").unwrap_or("0").parse().map_err(|_| {
+        AupError::Config("--eid must be an integer".into())
+    })?;
+    let jobs = crate::store::schema::jobs_of(&mut store, eid)?;
+    if jobs.is_empty() {
+        println!("no jobs for experiment {eid}");
+        return Ok(());
+    }
+    let scores: Vec<f64> = jobs.iter().filter_map(|j| j.score).collect();
+    println!("experiment {eid}: {} jobs, {} scored", jobs.len(), scores.len());
+    if let Some(path) = cli.flag("csv") {
+        let ids: Vec<f64> = jobs.iter().map(|j| j.jid as f64).collect();
+        let sc: Vec<f64> = jobs.iter().map(|j| j.score.unwrap_or(f64::NAN)).collect();
+        let csv = crate::viz::to_csv(&[("job_id", ids), ("score", sc)]);
+        crate::util::fsutil::write_atomic(Path::new(path), &csv)?;
+        println!("wrote {path}");
+    }
+    if scores.len() >= 2 {
+        // cumulative best (minimization view)
+        let mut best = f64::INFINITY;
+        let curve: Vec<f64> = scores
+            .iter()
+            .map(|s| {
+                best = best.min(*s);
+                best
+            })
+            .collect();
+        print!("{}", crate::viz::ascii_curve(&curve, 60, 12));
+    }
+    Ok(())
+}
+
+/// `aup sql`: run a query against the tracking store (the paper's
+/// "users are able to directly access the results stored in the
+/// database for further analysis").
+pub fn cmd_sql(cli: &Cli) -> Result<()> {
+    let db = cli
+        .flag("db")
+        .ok_or_else(|| AupError::Config("usage: aup sql --db DIR \"SELECT ...\"".into()))?;
+    let query = cli
+        .positional
+        .first()
+        .ok_or_else(|| AupError::Config("usage: aup sql --db DIR \"SELECT ...\"".into()))?;
+    let mut store = Store::open(Path::new(db))?;
+    let result = store.execute(query)?;
+    match &result {
+        crate::store::QueryResult::Rows { cols, rows } => {
+            println!("{}", cols.join(" | "));
+            for row in rows {
+                let cells: Vec<String> = row
+                    .iter()
+                    .map(|v| match v.to_json() {
+                        crate::util::json::Json::Null => "NULL".to_string(),
+                        j => j.to_string(),
+                    })
+                    .collect();
+                println!("{}", cells.join(" | "));
+            }
+            println!("({} rows)", rows.len());
+        }
+        other => println!("{}", other.to_json().to_string()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fsutil::temp_dir;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positional() {
+        let cli = Cli::parse(&s(&["run", "exp.json", "--db", "/tmp/db", "--verbose"])).unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.positional, vec!["exp.json"]);
+        assert_eq!(cli.flag("db"), Some("/tmp/db"));
+        assert_eq!(cli.flag("verbose"), Some("true"));
+        let cli = Cli::parse(&s(&["init", "--proposer=tpe"])).unwrap();
+        assert_eq!(cli.flag("proposer"), Some("tpe"));
+    }
+
+    #[test]
+    fn setup_then_run_then_viz() {
+        let dir = temp_dir("aup-cli").unwrap();
+        let aup_dir = dir.join("env");
+        // setup
+        let cli = Cli::parse(&s(&["setup", "--dir", aup_dir.to_str().unwrap()])).unwrap();
+        cmd_setup(&cli).unwrap();
+        assert!(aup_dir.join("env.ini").exists());
+        // init writes a valid experiment file
+        let exp_path = dir.join("exp.json");
+        let cli = Cli::parse(&s(&[
+            "init",
+            "--proposer",
+            "random",
+            "--out",
+            exp_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_init(&cli).unwrap();
+        // shrink the template budget for test speed
+        let text = std::fs::read_to_string(&exp_path).unwrap();
+        let text = text.replace("\"n_samples\": 200", "\"n_samples\": 10");
+        std::fs::write(&exp_path, text).unwrap();
+        // run against the durable db
+        let db = aup_dir.join("db");
+        let cli = Cli::parse(&s(&[
+            "run",
+            exp_path.to_str().unwrap(),
+            "--db",
+            db.to_str().unwrap(),
+            "--user",
+            "clitest",
+        ]))
+        .unwrap();
+        cmd_run(&cli).unwrap();
+        // viz reads it back + exports csv
+        let csv_path = dir.join("out.csv");
+        let cli = Cli::parse(&s(&[
+            "viz",
+            "--db",
+            db.to_str().unwrap(),
+            "--eid",
+            "0",
+            "--csv",
+            csv_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_viz(&cli).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(csv.starts_with("job_id,score"));
+        assert_eq!(csv.lines().count(), 11); // header + 10 jobs
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn init_rejects_unknown_proposer() {
+        let cli = Cli::parse(&s(&["init", "--proposer", "skynet"])).unwrap();
+        assert!(cmd_init(&cli).is_err());
+    }
+
+    #[test]
+    fn sql_subcommand_queries_store() {
+        let dir = temp_dir("aup-cli-sql").unwrap();
+        let db = dir.join("db");
+        {
+            let mut store = Store::open(&db).unwrap();
+            crate::store::schema::init_schema(&mut store).unwrap();
+            crate::store::schema::add_user(&mut store, "sqltest").unwrap();
+            store.checkpoint().unwrap();
+        }
+        let cli = Cli::parse(&s(&[
+            "sql",
+            "--db",
+            db.to_str().unwrap(),
+            "SELECT name FROM user WHERE uid = 0",
+        ]))
+        .unwrap();
+        cmd_sql(&cli).unwrap();
+        // malformed SQL surfaces as an error, not a panic
+        let bad = Cli::parse(&s(&["sql", "--db", db.to_str().unwrap(), "DROP TABLE user"]))
+            .unwrap();
+        assert!(cmd_sql(&bad).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn run_with_env_ini_uses_tracking_db() {
+        let dir = temp_dir("aup-cli-env").unwrap();
+        let aup_dir = dir.join("env");
+        cmd_setup(&Cli::parse(&s(&["setup", "--dir", aup_dir.to_str().unwrap()])).unwrap())
+            .unwrap();
+        let exp_path = dir.join("exp.json");
+        let text = crate::experiment::config::ExperimentConfig::template("random")
+            .to_pretty()
+            .replace("\"n_samples\": 200", "\"n_samples\": 5");
+        std::fs::write(&exp_path, text).unwrap();
+        let env_ini = aup_dir.join("env.ini");
+        cmd_run(
+            &Cli::parse(&s(&[
+                "run",
+                exp_path.to_str().unwrap(),
+                "--env",
+                env_ini.to_str().unwrap(),
+            ]))
+            .unwrap(),
+        )
+        .unwrap();
+        // the experiment landed in the env.ini-declared db
+        let mut store = Store::open(&aup_dir.join("db")).unwrap();
+        let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(5)));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,236 @@
+//! experiment.json (paper Code 2) parsing and validation.
+//!
+//! The accepted format is a superset of the paper's example:
+//!
+//! ```json
+//! {
+//!     "proposer": "random",
+//!     "script": "rosenbrock.py",          // or "builtin:rosenbrock"
+//!     "n_samples": 200,
+//!     "n_parallel": 2,
+//!     "target": "min",
+//!     "parameter_config": [
+//!         {"name": "x", "type": "float", "range": [-5, 10]},
+//!         {"name": "y", "type": "float", "range": [-5, 10]}
+//!     ],
+//!     "resource": "cpu",
+//!     "random_seed": 42,
+//!     "engine": "tpe"                      // algorithm-specific extras
+//! }
+//! ```
+//!
+//! Unknown top-level keys are *not* errors: they flow to the proposer as
+//! `extra`, mirroring the paper's "dedicated controlling parameters will
+//! be default and specified".
+
+use crate::proposer::ProposerSpec;
+use crate::resource::ResourceSpec;
+use crate::search::SearchSpace;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub proposer: String,
+    pub script: String,
+    pub n_samples: usize,
+    pub n_parallel: usize,
+    pub maximize: bool,
+    pub space: SearchSpace,
+    pub resource: ResourceSpec,
+    pub seed: u64,
+    pub workdir: Option<String>,
+    /// full original JSON (tracked in the experiment table + passed to
+    /// the proposer as extras)
+    pub raw: Json,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: Json) -> Result<ExperimentConfig> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| AupError::Config("experiment.json must be an object".into()))?;
+
+        let proposer = obj
+            .get("proposer")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Config("missing 'proposer'".into()))?
+            .to_string();
+        let script = obj
+            .get("script")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Config("missing 'script'".into()))?
+            .to_string();
+        let n_samples = obj
+            .get("n_samples")
+            .and_then(Json::as_i64)
+            .unwrap_or(100)
+            .max(0) as usize;
+        let n_parallel = obj
+            .get("n_parallel")
+            .and_then(Json::as_i64)
+            .unwrap_or(1)
+            .max(1) as usize;
+        let maximize = match obj.get("target").and_then(Json::as_str) {
+            Some("max") | Some("maximize") => true,
+            Some("min") | Some("minimize") | None => false,
+            Some(other) => {
+                return Err(AupError::Config(format!(
+                    "target must be 'min' or 'max', got '{other}'"
+                )))
+            }
+        };
+        let space = SearchSpace::from_json(
+            obj.get("parameter_config")
+                .ok_or_else(|| AupError::Config("missing 'parameter_config'".into()))?,
+        )?;
+        let resource = ResourceSpec::from_json(&j)?;
+        let seed = obj
+            .get("random_seed")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64;
+        let workdir = obj
+            .get("workdir")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        Ok(ExperimentConfig {
+            proposer,
+            script,
+            n_samples,
+            n_parallel,
+            maximize,
+            space,
+            resource,
+            seed,
+            workdir,
+            raw: j,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<ExperimentConfig> {
+        ExperimentConfig::from_json(Json::parse(s)?)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<ExperimentConfig> {
+        ExperimentConfig::from_json_str(&crate::util::fsutil::read_to_string(path)?)
+    }
+
+    /// The spec handed to `new_proposer`.
+    pub fn proposer_spec(&self) -> ProposerSpec {
+        ProposerSpec {
+            space: self.space.clone(),
+            n_samples: self.n_samples,
+            maximize: self.maximize,
+            seed: self.seed,
+            extra: self.raw.clone(),
+        }
+    }
+
+    /// Generate a template experiment.json — backs `aup init`, the
+    /// paper's interactive configuration guide.
+    pub fn template(proposer: &str) -> Json {
+        let mut pairs = vec![
+            ("proposer", Json::str(proposer)),
+            ("script", Json::str("builtin:rosenbrock")),
+            ("n_samples", Json::int(200)),
+            ("n_parallel", Json::int(2)),
+            ("target", Json::str("min")),
+            ("resource", Json::str("cpu")),
+            ("random_seed", Json::int(42)),
+            (
+                "parameter_config",
+                Json::arr(vec![
+                    Json::obj(vec![
+                        ("name", Json::str("x")),
+                        ("type", Json::str("float")),
+                        ("range", Json::arr(vec![Json::int(-5), Json::int(10)])),
+                    ]),
+                    Json::obj(vec![
+                        ("name", Json::str("y")),
+                        ("type", Json::str("float")),
+                        ("range", Json::arr(vec![Json::int(-5), Json::int(10)])),
+                    ]),
+                ]),
+            ),
+        ];
+        match proposer {
+            "hyperband" | "bohb" => {
+                pairs.push(("n_iterations", Json::int(27)));
+                pairs.push(("eta", Json::int(3)));
+            }
+            "hyperopt" => pairs.push(("engine", Json::str("tpe"))),
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Code 2, verbatim structure.
+    const CODE2: &str = r#"{
+        "proposer": "random",
+        "script": "builtin:rosenbrock",
+        "n_samples": 200,
+        "n_parallel": 2,
+        "target": "min",
+        "parameter_config": [
+            {"name": "x", "type": "float", "range": [-5, 10]},
+            {"name": "y", "type": "float", "range": [-5, 10]}
+        ],
+        "resource": "cpu"
+    }"#;
+
+    #[test]
+    fn parses_paper_code2() {
+        let c = ExperimentConfig::from_json_str(CODE2).unwrap();
+        assert_eq!(c.proposer, "random");
+        assert_eq!(c.n_samples, 200);
+        assert_eq!(c.n_parallel, 2);
+        assert!(!c.maximize);
+        assert_eq!(c.space.dim(), 2);
+        assert_eq!(c.resource.kind, "cpu");
+        assert_eq!(c.resource.n, 2); // n_parallel fallback
+    }
+
+    #[test]
+    fn switching_algorithms_is_one_string() {
+        // the paper's headline flexibility claim
+        for name in crate::proposer::ALGORITHMS {
+            let swapped = CODE2.replace("\"random\"", &format!("\"{name}\""));
+            let c = ExperimentConfig::from_json_str(&swapped).unwrap();
+            assert_eq!(c.proposer, name);
+        }
+    }
+
+    #[test]
+    fn extras_flow_to_proposer_spec() {
+        let s = CODE2.replace(
+            "\"resource\": \"cpu\"",
+            "\"resource\": \"cpu\", \"engine\": \"tpe\", \"gamma\": 0.3",
+        );
+        let c = ExperimentConfig::from_json_str(&s).unwrap();
+        let spec = c.proposer_spec();
+        assert_eq!(spec.extra_str("engine", ""), "tpe");
+        assert_eq!(spec.extra_f64("gamma", 0.0), 0.3);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(ExperimentConfig::from_json_str("{}").is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"proposer": "random"}"#).is_err());
+        let bad_target = CODE2.replace("\"min\"", "\"smallest\"");
+        assert!(ExperimentConfig::from_json_str(&bad_target).is_err());
+    }
+
+    #[test]
+    fn templates_valid_for_all_algorithms() {
+        for name in crate::proposer::ALGORITHMS {
+            let t = ExperimentConfig::template(name).to_pretty();
+            let c = ExperimentConfig::from_json_str(&t).unwrap();
+            assert_eq!(c.proposer, name);
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! The experiment loop — the paper's Algorithm 1.
+//!
+//! ```text
+//! aup.Experiment(experiment.json, env.ini, code_path)
+//! while not proposer.finished():
+//!     resource <- resource_manager.get_available()
+//!     if not resource: sleep
+//!     hyperparameters <- proposer.get_param()
+//!     Job <- aup.run(hyperparameters, resource)
+//!     if Job.callback(): proposer.update()
+//! aup.finish()   # wait for unfinished jobs
+//! ```
+//!
+//! Jobs run on worker threads (one per in-flight job); completion flows
+//! back through an mpsc channel — the `callback()` of §III-B2 — and the
+//! loop invokes `proposer.update()`, records the result in the tracking
+//! store and frees the resource.
+
+pub mod config;
+pub mod tracker;
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use crate::experiment::config::ExperimentConfig;
+use crate::experiment::tracker::Tracker;
+use crate::proposer::{new_proposer, ProposeResult, Proposer};
+use crate::resource::executor::{executor_from_script, Executor};
+use crate::resource::job::{spawn_job, JobDone};
+use crate::resource::ResourceManager;
+use crate::store::Store;
+use crate::util::error::{AupError, Result};
+use crate::{log_debug, log_info, log_warn};
+
+/// Knobs not present in experiment.json (they belong to the environment,
+/// i.e. the paper's env.ini / `aup setup` side).
+pub struct ExperimentOptions {
+    /// tracking store; `None` -> fresh in-memory store
+    pub store: Option<Store>,
+    /// executor override (examples plug the PJRT trainer in here);
+    /// `None` -> built from the config's `script` field
+    pub executor: Option<Arc<dyn Executor>>,
+    /// resource manager override; `None` -> built from the config
+    pub resource_manager: Option<Box<dyn ResourceManager>>,
+    /// user name recorded in the `user` table
+    pub user: String,
+}
+
+impl Default for ExperimentOptions {
+    fn default() -> Self {
+        ExperimentOptions {
+            store: None,
+            executor: None,
+            resource_manager: None,
+            user: std::env::var("USER").unwrap_or_else(|_| "aup".to_string()),
+        }
+    }
+}
+
+/// Outcome summary returned by [`Experiment::run`].
+#[derive(Debug, Clone)]
+pub struct ExperimentSummary {
+    pub eid: i64,
+    pub n_jobs: usize,
+    pub n_failed: usize,
+    pub best_score: Option<f64>,
+    pub best_config: Option<crate::search::BasicConfig>,
+    pub wall_time: f64,
+    /// (job_id, score, cumulative-best) in completion order — the series
+    /// Fig. 5 plots
+    pub history: Vec<(u64, f64, f64)>,
+}
+
+/// One experiment: proposer + resource manager + executor + tracker.
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    proposer: Box<dyn Proposer>,
+    rm: Box<dyn ResourceManager>,
+    executor: Arc<dyn Executor>,
+    tracker: Tracker,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExperimentConfig, options: ExperimentOptions) -> Result<Experiment> {
+        let proposer = new_proposer(&cfg.proposer, cfg.proposer_spec())?;
+        let rm = match options.resource_manager {
+            Some(rm) => rm,
+            None => cfg.resource.build()?,
+        };
+        let executor = match options.executor {
+            Some(e) => e,
+            None => {
+                let workdir = cfg
+                    .workdir
+                    .clone()
+                    .map(std::path::PathBuf::from)
+                    .unwrap_or(crate::util::fsutil::temp_dir("aup-jobs")?);
+                Arc::from(executor_from_script(&cfg.script, &workdir)?)
+            }
+        };
+        let store = match options.store {
+            Some(s) => s,
+            None => Store::in_memory(),
+        };
+        let tracker = Tracker::new(store, &options.user, &cfg)?;
+        Ok(Experiment { cfg, proposer, rm, executor, tracker })
+    }
+
+    /// Run Algorithm 1 to completion.
+    pub fn run(&mut self) -> Result<ExperimentSummary> {
+        let start = std::time::Instant::now();
+        let (tx, rx) = channel::<JobDone>();
+        let mut inflight = 0usize;
+        let mut n_jobs = 0usize;
+        let mut n_failed = 0usize;
+        let mut best: Option<(f64, crate::search::BasicConfig)> = None;
+        let mut history: Vec<(u64, f64, f64)> = Vec::new();
+        let maximize = self.cfg.maximize;
+        let n_parallel = self.cfg.n_parallel;
+
+        log_info!(
+            "experiment",
+            "eid={} proposer={} script={} n_parallel={}",
+            self.tracker.eid(),
+            self.proposer.name(),
+            self.cfg.script,
+            n_parallel
+        );
+
+        let handle_done = |done: JobDone,
+                               proposer: &mut Box<dyn Proposer>,
+                               rm: &mut Box<dyn ResourceManager>,
+                               tracker: &mut Tracker,
+                               inflight: &mut usize,
+                               n_failed: &mut usize,
+                               best: &mut Option<(f64, crate::search::BasicConfig)>,
+                               history: &mut Vec<(u64, f64, f64)>|
+         -> Result<()> {
+            *inflight -= 1;
+            rm.release(&done.handle);
+            // a non-finite score is a protocol violation — treat it as a
+            // failed job (otherwise NaN would poison best-score tracking)
+            let outcome = match &done.outcome {
+                Ok(s) if !s.is_finite() => Err(format!("non-finite score {s}")),
+                other => other.clone(),
+            };
+            match &outcome {
+                Ok(score) => {
+                    proposer.update(done.job_id, &done.config, Some(*score));
+                    tracker.job_finished(done.job_id, Some(*score))?;
+                    let better = match best {
+                        None => true,
+                        Some((b, _)) => {
+                            if maximize {
+                                score > b
+                            } else {
+                                score < b
+                            }
+                        }
+                    };
+                    if better {
+                        *best = Some((*score, done.config.clone()));
+                    }
+                    history.push((done.job_id, *score, best.as_ref().unwrap().0));
+                    log_debug!(
+                        "experiment",
+                        "job {} -> {:.6} (best {:.6})",
+                        done.job_id,
+                        score,
+                        best.as_ref().unwrap().0
+                    );
+                }
+                Err(msg) => {
+                    *n_failed += 1;
+                    proposer.update(done.job_id, &done.config, None);
+                    tracker.job_finished(done.job_id, None)?;
+                    log_warn!("experiment", "job {} failed: {msg}", done.job_id);
+                }
+            }
+            Ok(())
+        };
+
+        loop {
+            // drain any completions without blocking
+            while let Ok(done) = rx.try_recv() {
+                handle_done(
+                    done,
+                    &mut self.proposer,
+                    &mut self.rm,
+                    &mut self.tracker,
+                    &mut inflight,
+                    &mut n_failed,
+                    &mut best,
+                    &mut history,
+                )?;
+            }
+            if self.proposer.finished() && inflight == 0 {
+                break;
+            }
+            // capacity for another job?
+            if inflight < n_parallel && !self.proposer.finished() {
+                match self.rm.get_available() {
+                    Some(handle) => match self.proposer.get_param() {
+                        ProposeResult::Config(config) => {
+                            let job_id = config.job_id().ok_or_else(|| {
+                                AupError::Proposer(
+                                    "proposer returned a config without job_id".into(),
+                                )
+                            })?;
+                            self.tracker.job_started(job_id, handle.rid, &config)?;
+                            n_jobs += 1;
+                            inflight += 1;
+                            spawn_job(self.executor.clone(), config, handle, tx.clone());
+                            continue; // try to fill more slots immediately
+                        }
+                        ProposeResult::Wait | ProposeResult::Done => {
+                            self.rm.release(&handle);
+                            if inflight == 0 {
+                                if self.proposer.finished() {
+                                    break;
+                                }
+                                // Wait with nothing in flight would deadlock —
+                                // treat as proposer bug
+                                return Err(AupError::Proposer(format!(
+                                    "proposer '{}' returned Wait with no jobs in flight",
+                                    self.proposer.name()
+                                )));
+                            }
+                        }
+                    },
+                    None => {
+                        // paper Algorithm 1: "sleep {wait for available resource}"
+                        if inflight == 0 {
+                            return Err(AupError::Resource(
+                                "no resources available and none in flight".into(),
+                            ));
+                        }
+                    }
+                }
+            }
+            // block for the next callback (aup.finish(): wait for
+            // unfinished jobs)
+            if inflight > 0 {
+                let done = rx
+                    .recv()
+                    .map_err(|_| AupError::Job("job channel closed unexpectedly".into()))?;
+                handle_done(
+                    done,
+                    &mut self.proposer,
+                    &mut self.rm,
+                    &mut self.tracker,
+                    &mut inflight,
+                    &mut n_failed,
+                    &mut best,
+                    &mut history,
+                )?;
+            }
+        }
+
+        let wall_time = start.elapsed().as_secs_f64();
+        let best_score = best.as_ref().map(|(s, _)| *s);
+        self.tracker.experiment_finished(best_score)?;
+        log_info!(
+            "experiment",
+            "done: {} jobs ({} failed), best {:?}, {:.3}s",
+            n_jobs,
+            n_failed,
+            best_score,
+            wall_time
+        );
+        Ok(ExperimentSummary {
+            eid: self.tracker.eid(),
+            n_jobs,
+            n_failed,
+            best_score,
+            best_config: best.map(|(_, c)| c),
+            wall_time,
+            history,
+        })
+    }
+
+    /// Access the tracking store after the run (e.g. for `aup viz`).
+    pub fn into_store(self) -> Store {
+        self.tracker.into_store()
+    }
+
+    pub fn proposer_name(&self) -> &str {
+        self.proposer.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::executor::FnExecutor;
+
+    fn rosen_cfg(proposer: &str, n_samples: usize, n_parallel: usize) -> ExperimentConfig {
+        ExperimentConfig::from_json_str(&format!(
+            r#"{{
+                "proposer": "{proposer}",
+                "script": "builtin:rosenbrock",
+                "n_samples": {n_samples},
+                "n_parallel": {n_parallel},
+                "target": "min",
+                "random_seed": 3,
+                "n_iterations": 9,
+                "parameter_config": [
+                    {{"name": "x", "type": "float", "range": [-5, 10]}},
+                    {{"name": "y", "type": "float", "range": [-5, 10]}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn sequential_random_experiment() {
+        let mut exp =
+            Experiment::new(rosen_cfg("random", 20, 1), ExperimentOptions::default()).unwrap();
+        let s = exp.run().unwrap();
+        assert_eq!(s.n_jobs, 20);
+        assert_eq!(s.n_failed, 0);
+        assert!(s.best_score.unwrap() < 5000.0);
+        assert_eq!(s.history.len(), 20);
+        // cumulative best is monotone nonincreasing
+        let mut prev = f64::INFINITY;
+        for (_, _, b) in &s.history {
+            assert!(*b <= prev + 1e-12);
+            prev = *b;
+        }
+    }
+
+    #[test]
+    fn parallel_experiment_respects_n_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let (p2, c2) = (peak.clone(), cur.clone());
+        let exec = Arc::new(FnExecutor::new("concurrent", move |c, _| {
+            let now = c2.fetch_add(1, Ordering::SeqCst) + 1;
+            p2.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            c2.fetch_sub(1, Ordering::SeqCst);
+            Ok(crate::workload::rosenbrock(c))
+        }));
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        let mut exp = Experiment::new(rosen_cfg("random", 24, 4), opts).unwrap();
+        let s = exp.run().unwrap();
+        assert_eq!(s.n_jobs, 24);
+        let observed_peak = peak.load(Ordering::SeqCst);
+        assert!(observed_peak <= 4, "n_parallel violated: {observed_peak}");
+        assert!(observed_peak >= 2, "no parallelism observed");
+    }
+
+    #[test]
+    fn every_registered_algorithm_completes_end_to_end() {
+        for name in crate::proposer::ALGORITHMS {
+            let cfg = ExperimentConfig::from_json_str(&format!(
+                r#"{{
+                    "proposer": "{name}",
+                    "script": "builtin:mnist_cnn_surrogate",
+                    "n_samples": 10,
+                    "n_parallel": 2,
+                    "target": "min",
+                    "random_seed": 5,
+                    "n_iterations": 9,
+                    "children_per_episode": 3,
+                    "episodes": 3,
+                    "parameter_config": [
+                        {{"name": "conv1", "type": "int", "range": [8, 32]}},
+                        {{"name": "conv2", "type": "int", "range": [8, 64]}},
+                        {{"name": "fc1", "type": "int", "range": [32, 256]}},
+                        {{"name": "dropout", "type": "float", "range": [0.0, 0.8]}},
+                        {{"name": "learning_rate", "type": "float", "range": [0.0001, 0.1], "interval": "log"}}
+                    ]
+                }}"#
+            ))
+            .unwrap();
+            let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+            let s = exp
+                .run()
+                .unwrap_or_else(|e| panic!("'{name}' experiment failed: {e}"));
+            assert!(s.n_jobs > 0, "'{name}' ran no jobs");
+            assert!(s.best_score.is_some(), "'{name}' produced no score");
+        }
+    }
+
+    #[test]
+    fn failed_jobs_counted_and_experiment_survives() {
+        let exec = Arc::new(FnExecutor::new("flaky", |c, _| {
+            let id = c.job_id().unwrap();
+            if id % 3 == 0 {
+                Err(crate::util::error::AupError::Job("injected".into()))
+            } else {
+                Ok(crate::workload::rosenbrock(c))
+            }
+        }));
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        let mut exp = Experiment::new(rosen_cfg("random", 15, 3), opts).unwrap();
+        let s = exp.run().unwrap();
+        assert_eq!(s.n_jobs, 15);
+        assert_eq!(s.n_failed, 5);
+        assert!(s.best_score.is_some());
+    }
+
+    #[test]
+    fn tracking_store_has_all_jobs() {
+        let mut exp =
+            Experiment::new(rosen_cfg("random", 12, 2), ExperimentOptions::default()).unwrap();
+        let s = exp.run().unwrap();
+        let mut store = exp.into_store();
+        let jobs = crate::store::schema::jobs_of(&mut store, s.eid).unwrap();
+        assert_eq!(jobs.len(), 12);
+        assert!(jobs
+            .iter()
+            .all(|j| j.status == crate::store::schema::JobStatus::Finished));
+        let best =
+            crate::store::schema::best_job(&mut store, s.eid, false).unwrap().unwrap();
+        assert_eq!(best.score, s.best_score);
+        let exp_row =
+            crate::store::schema::get_experiment(&mut store, s.eid).unwrap().unwrap();
+        assert_eq!(exp_row.best_score, s.best_score);
+        assert!(exp_row.end_time.is_some());
+    }
+
+    #[test]
+    fn maximize_experiment() {
+        let mut cfg = rosen_cfg("random", 15, 2);
+        cfg.maximize = true;
+        let exec = Arc::new(FnExecutor::new("neg", |c, _| {
+            Ok(-crate::workload::rosenbrock(c))
+        }));
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        let mut exp = Experiment::new(cfg, opts).unwrap();
+        let s = exp.run().unwrap();
+        // maximizing -rosenbrock: best is the least positive
+        let max_seen = s.history.iter().map(|(_, v, _)| *v).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.best_score.unwrap(), max_seen);
+    }
+
+    #[test]
+    fn hyperband_parallel_with_wait_states() {
+        // hyperband returns Wait while rungs drain; the loop must idle on
+        // in-flight jobs instead of erroring
+        let mut exp =
+            Experiment::new(rosen_cfg("hyperband", 0, 4), ExperimentOptions::default()).unwrap();
+        let s = exp.run().unwrap();
+        assert!(s.n_jobs > 5);
+        assert!(s.best_score.is_some());
+    }
+}

@@ -1,0 +1,129 @@
+//! Bridge between the experiment loop and the tracking store: records
+//! the Fig-2 rows as the experiment progresses (paper §III-C — "Since
+//! Auptimizer automatically checks in its training process in
+//! experiments, users are alleviated from the worry of losing
+//! reproducibility").
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::experiment::config::ExperimentConfig;
+use crate::search::BasicConfig;
+use crate::store::schema;
+use crate::store::Store;
+use crate::util::error::Result;
+
+fn now() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+pub struct Tracker {
+    store: Store,
+    eid: i64,
+    maximize: bool,
+}
+
+impl Tracker {
+    pub fn new(mut store: Store, user: &str, cfg: &ExperimentConfig) -> Result<Tracker> {
+        schema::init_schema(&mut store)?;
+        // reuse the user row if present
+        let uid = {
+            let r = store.execute(&format!(
+                "SELECT uid FROM user WHERE name = {}",
+                crate::store::sql::quote(user)
+            ))?;
+            match r.scalar().and_then(crate::store::Value::as_i64) {
+                Some(uid) => uid,
+                None => schema::add_user(&mut store, user)?,
+            }
+        };
+        let eid = schema::start_experiment(
+            &mut store,
+            uid,
+            &cfg.proposer,
+            &cfg.raw.to_string(),
+            now(),
+        )?;
+        Ok(Tracker { store, eid, maximize: cfg.maximize })
+    }
+
+    pub fn eid(&self) -> i64 {
+        self.eid
+    }
+
+    pub fn job_started(&mut self, job_id: u64, rid: i64, config: &BasicConfig) -> Result<()> {
+        schema::start_job(
+            &mut self.store,
+            job_id as i64,
+            self.eid,
+            rid,
+            &config.to_json_string(),
+            now(),
+        )
+    }
+
+    pub fn job_finished(&mut self, job_id: u64, score: Option<f64>) -> Result<()> {
+        schema::finish_job(&mut self.store, job_id as i64, score, score.is_some(), now())
+    }
+
+    pub fn experiment_finished(&mut self, best: Option<f64>) -> Result<()> {
+        schema::finish_experiment(&mut self.store, self.eid, best, now())?;
+        self.store.checkpoint()?;
+        Ok(())
+    }
+
+    pub fn best_job(&mut self) -> Result<Option<schema::JobRow>> {
+        schema::best_job(&mut self.store, self.eid, self.maximize)
+    }
+
+    pub fn into_store(self) -> Store {
+        self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::from_json_str(
+            r#"{
+                "proposer": "random", "script": "builtin:sphere",
+                "n_samples": 3, "target": "min",
+                "parameter_config": [{"name": "x", "type": "float", "range": [-1, 1]}]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tracker_lifecycle() {
+        let mut t = Tracker::new(Store::in_memory(), "tester", &cfg()).unwrap();
+        let mut c = BasicConfig::new();
+        c.set_num("x", 0.5).set_num("job_id", 0.0);
+        t.job_started(0, 0, &c).unwrap();
+        t.job_finished(0, Some(0.25)).unwrap();
+        t.experiment_finished(Some(0.25)).unwrap();
+        assert_eq!(t.best_job().unwrap().unwrap().score, Some(0.25));
+        let mut store = t.into_store();
+        let row = schema::get_experiment(&mut store, 0).unwrap().unwrap();
+        assert!(row.exp_config.contains("random"));
+    }
+
+    #[test]
+    fn user_row_reused_across_experiments() {
+        let mut store = Store::in_memory();
+        crate::store::schema::init_schema(&mut store).unwrap();
+        let t1 = Tracker::new(store, "alice", &cfg()).unwrap();
+        let store = t1.into_store();
+        let t2 = Tracker::new(store, "alice", &cfg()).unwrap();
+        let mut store = t2.into_store();
+        let r = store.execute("SELECT COUNT(*) FROM user").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(1)));
+        let r = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(2)));
+    }
+}

@@ -1,0 +1,61 @@
+//! # Auptimizer (Rust reproduction)
+//!
+//! A full reimplementation of *Auptimizer — an Extensible, Open-Source
+//! Framework for Hyperparameter Tuning* (Liu et al., 2019) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 coordinator: it owns the experiment loop
+//! (Algorithm 1 in the paper), the [`proposer`] API over nine HPO
+//! algorithms, the [`resource`] manager that maps jobs onto compute, the
+//! [`store`] tracking database (Fig. 2 schema) and the PJRT [`runtime`]
+//! that executes the AOT-compiled JAX/Pallas CNN the paper tunes in §IV.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use auptimizer::prelude::*;
+//!
+//! let spec = ExperimentConfig::from_json_str(r#"{
+//!     "proposer": "random",
+//!     "script": "builtin:rosenbrock",
+//!     "n_samples": 50,
+//!     "n_parallel": 2,
+//!     "target": "min",
+//!     "parameter_config": [
+//!         {"name": "x", "type": "float", "range": [-5, 10]},
+//!         {"name": "y", "type": "float", "range": [-5, 10]}
+//!     ]
+//! }"#).unwrap();
+//! let mut exp = Experiment::new(spec, ExperimentOptions::default()).unwrap();
+//! let summary = exp.run().unwrap();
+//! println!("best score {:?}", summary.best_score);
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod search;
+pub mod store;
+pub mod proposer;
+pub mod nas;
+pub mod workload;
+pub mod resource;
+pub mod experiment;
+pub mod runtime;
+pub mod viz;
+pub mod metrics;
+pub mod cli;
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::experiment::config::ExperimentConfig;
+    pub use crate::experiment::{Experiment, ExperimentOptions, ExperimentSummary};
+    pub use crate::proposer::{Proposer, ProposeResult, new_proposer};
+    pub use crate::resource::{ResourceManager, ResourceSpec};
+    pub use crate::search::{BasicConfig, ParamSpec, ParamType, SearchSpace};
+    pub use crate::store::Store;
+    pub use crate::util::error::{AupError, Result};
+    pub use crate::util::json::Json;
+    pub use crate::util::rng::Rng;
+}
+
+pub use prelude::*;

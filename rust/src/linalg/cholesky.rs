@@ -1,0 +1,157 @@
+//! Cholesky factorization + triangular solves — the numerical core of
+//! the GP posterior used by the `spearmint` proposer.
+
+use crate::linalg::matrix::Matrix;
+use crate::util::error::{AupError, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+pub struct Cholesky {
+    pub l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix. Returns
+    /// `AupError::Numeric` if the matrix is not (numerically) PD.
+    pub fn factor(a: &Matrix) -> Result<Cholesky> {
+        assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(AupError::Numeric(format!(
+                            "matrix not positive definite at pivot {i} (value {sum})"
+                        )));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with escalating diagonal jitter — standard GP practice when
+    /// kernel matrices are near-singular.
+    pub fn factor_with_jitter(a: &Matrix, mut jitter: f64) -> Result<Cholesky> {
+        let mut m = a.clone();
+        for _ in 0..8 {
+            match Cholesky::factor(&m) {
+                Ok(c) => return Ok(c),
+                Err(_) => {
+                    m = a.clone();
+                    m.add_diag(jitter);
+                    jitter *= 10.0;
+                }
+            }
+        }
+        Err(AupError::Numeric("cholesky failed even with jitter".into()))
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = y` (back substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(y.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A x = b` via the factorization.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// log |A| = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        // A = B Bᵀ + n·I is SPD
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 20] {
+            let a = random_spd(n, &mut rng);
+            let c = Cholesky::factor(&a).unwrap();
+            let recon = c.l.matmul(&c.l.transpose());
+            assert!(recon.max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(2);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        let c = Cholesky::factor(&a).unwrap();
+        let x = c.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn log_det_known() {
+        // diag(4, 9) -> det = 36, logdet = ln 36
+        let a = Matrix::from_rows(&[vec![4.0, 0.0], vec![0.0, 9.0]]);
+        let c = Cholesky::factor(&a).unwrap();
+        assert!((c.log_det() - 36f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_pd() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_near_singular() {
+        // rank-1 matrix — singular, but jitter makes it factorable
+        let a = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = Cholesky::factor_with_jitter(&a, 1e-10).unwrap();
+        assert!(c.l[(0, 0)] > 0.0);
+    }
+}

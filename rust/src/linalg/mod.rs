@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate.
+//!
+//! The GP-based `spearmint` proposer needs Cholesky factorization,
+//! triangular solves and log-determinants; the TPE proposer needs normal
+//! pdf/cdf. No BLAS/LAPACK is available offline, so this is a small,
+//! well-tested from-scratch implementation sized for HPO workloads
+//! (n = history length, a few hundred at most).
+
+pub mod matrix;
+pub mod cholesky;
+pub mod stats;
+
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;

@@ -1,0 +1,7 @@
+//! `aup` binary — the Layer-3 leader entrypoint (CLI defined in
+//! [`auptimizer::cli`]).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(auptimizer::cli::run(&args));
+}

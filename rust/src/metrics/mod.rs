@@ -1,0 +1,136 @@
+//! Timing + the bench harness.
+//!
+//! criterion is not available offline, so `benches/*.rs` are
+//! `harness = false` binaries built on [`bench_fn`]: warmup, N timed
+//! samples, mean/p50/p95 — enough statistical discipline for the
+//! overhead measurements the paper's Fig-3 "marginal time" claim needs.
+
+use std::time::Instant;
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} samples  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.samples,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `samples` iterations after `warmup` untimed ones.
+pub fn bench_fn(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        samples,
+        mean_ns: mean,
+        p50_ns: times[times.len() / 2],
+        p95_ns: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min_ns: times[0],
+    }
+}
+
+/// A simple named stopwatch for coarse phase timing in examples.
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        let prev: f64 = self.laps.last().map(|(_, t)| *t).unwrap_or(0.0);
+        self.laps.push((name.to_string(), t));
+        t - prev
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let mut prev = 0.0;
+        for (name, t) in &self.laps {
+            out.push_str(&format!("{name:<30} {:>10.3}s\n", t - prev));
+            prev = *t;
+        }
+        out
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let stats = bench_fn("noop-ish", 5, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p50_ns <= stats.p95_ns);
+        assert!(stats.min_ns <= stats.p50_ns);
+        assert!(stats.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap1 = sw.lap("a");
+        assert!(lap1 >= 0.001);
+        let report = sw.report();
+        assert!(report.contains('a'));
+    }
+}

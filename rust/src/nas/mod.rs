@@ -1,0 +1,59 @@
+//! Neural-architecture-search substrate (paper §V).
+//!
+//! * [`net2net`] — function-preserving Net2Net transforms (Net2Wider /
+//!   Net2Deeper) on a real MLP with weights, the mechanism EAS (Cai et
+//!   al. 2018) exploits to reuse child-network weights;
+//! * [`controller`] — a REINFORCE policy over discrete transform actions,
+//!   standing in for EAS's RL meta-controller (from scratch: softmax
+//!   policy with manual gradients + moving-average baseline);
+//! * [`morphism`] — architecture edit-distance kernel, the heart of the
+//!   AutoKeras (Jin et al. 2019) Bayesian network-morphism search.
+
+pub mod net2net;
+pub mod controller;
+pub mod morphism;
+
+/// A feed-forward architecture: layer widths from input to output.
+/// (The §IV CNN maps onto this as [conv1, conv2, fc1] width choices.)
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Arch {
+    pub widths: Vec<usize>,
+}
+
+impl Arch {
+    pub fn new(widths: Vec<usize>) -> Arch {
+        assert!(widths.len() >= 2, "need at least input and output layers");
+        Arch { widths }
+    }
+
+    /// Hidden-layer count.
+    pub fn depth(&self) -> usize {
+        self.widths.len().saturating_sub(2)
+    }
+
+    /// Total parameter count of the corresponding dense MLP.
+    pub fn params(&self) -> usize {
+        self.widths
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_accounting() {
+        let a = Arch::new(vec![4, 8, 2]);
+        assert_eq!(a.depth(), 1);
+        assert_eq!(a.params(), 4 * 8 + 8 + 8 * 2 + 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_shallow_rejected() {
+        Arch::new(vec![4]);
+    }
+}

@@ -1,0 +1,110 @@
+//! Network-morphism machinery for the AutoKeras-style proposer:
+//! architecture edit distance (the kernel AutoKeras builds its Bayesian
+//! optimization on) and the morph operations that generate neighbor
+//! architectures.
+
+use crate::nas::Arch;
+use crate::util::rng::Rng;
+
+/// Edit distance between two architectures: aligned layer-width edits
+//  (log-scaled, so 32→64 counts like 64→128) plus an insertion/deletion
+/// cost per depth difference. This mirrors AutoKeras's "how many
+/// operations are needed to change one neural network to another".
+pub fn edit_distance(a: &Arch, b: &Arch) -> f64 {
+    let (short, long) = if a.widths.len() <= b.widths.len() { (a, b) } else { (b, a) };
+    let depth_diff = (long.widths.len() - short.widths.len()) as f64;
+    // align the shared prefix/suffix: simple aligned comparison over the
+    // shorter network (hidden layers dominate at our scale)
+    let mut width_cost = 0.0;
+    for (wa, wb) in short.widths.iter().zip(long.widths.iter()) {
+        let la = (*wa as f64).max(1.0).ln();
+        let lb = (*wb as f64).max(1.0).ln();
+        width_cost += (la - lb).abs();
+    }
+    width_cost + depth_diff
+}
+
+/// RBF kernel over edit distance: k(a,b) = exp(-d(a,b)² / (2ℓ²)).
+pub fn morph_kernel(a: &Arch, b: &Arch, ell: f64) -> f64 {
+    let d = edit_distance(a, b);
+    (-(d * d) / (2.0 * ell * ell)).exp()
+}
+
+/// One morphism step: widen a random hidden layer ×2 (capped), or
+/// insert a layer (deepen), or shrink (the non-function-preserving move
+/// AutoKeras also explores via its search tree).
+pub fn morph(arch: &Arch, rng: &mut Rng, max_width: usize, max_depth: usize) -> Arch {
+    let mut widths = arch.widths.clone();
+    let hidden = widths.len() - 2;
+    let action = rng.below(3);
+    match action {
+        0 if hidden > 0 => {
+            // widen
+            let l = 1 + rng.below(hidden);
+            widths[l] = (widths[l] * 2).min(max_width);
+        }
+        1 if hidden < max_depth => {
+            // deepen: duplicate a hidden layer (or input width if none)
+            let l = if hidden > 0 { 1 + rng.below(hidden) } else { 0 };
+            let w = widths[l.max(1).min(widths.len() - 2)];
+            widths.insert(l + 1, w);
+        }
+        _ if hidden > 0 => {
+            // shrink a layer (floor 2)
+            let l = 1 + rng.below(hidden);
+            widths[l] = (widths[l] / 2).max(2);
+        }
+        _ => {}
+    }
+    Arch::new(widths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_is_a_semimetric() {
+        let a = Arch::new(vec![4, 16, 2]);
+        let b = Arch::new(vec![4, 32, 2]);
+        let c = Arch::new(vec![4, 16, 16, 2]);
+        assert_eq!(edit_distance(&a, &a), 0.0);
+        assert!(edit_distance(&a, &b) > 0.0);
+        assert_eq!(edit_distance(&a, &b), edit_distance(&b, &a));
+        // triangle inequality on this trio
+        assert!(edit_distance(&a, &c) <= edit_distance(&a, &b) + edit_distance(&b, &c) + 1e-12);
+    }
+
+    #[test]
+    fn doubling_widths_costs_equally_in_log_space() {
+        let a = Arch::new(vec![4, 16, 2]);
+        let b = Arch::new(vec![4, 32, 2]);
+        let c = Arch::new(vec![4, 64, 2]);
+        let d_ab = edit_distance(&a, &b);
+        let d_bc = edit_distance(&b, &c);
+        assert!((d_ab - d_bc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_decays_with_distance() {
+        let a = Arch::new(vec![4, 16, 2]);
+        let b = Arch::new(vec![4, 32, 2]);
+        let c = Arch::new(vec![4, 64, 64, 2]);
+        assert!(morph_kernel(&a, &a, 1.0) == 1.0);
+        assert!(morph_kernel(&a, &b, 1.0) > morph_kernel(&a, &c, 1.0));
+    }
+
+    #[test]
+    fn morph_respects_bounds() {
+        let mut rng = Rng::new(4);
+        let mut arch = Arch::new(vec![8, 16, 4]);
+        for _ in 0..200 {
+            arch = morph(&arch, &mut rng, 64, 4);
+            assert!(arch.widths.len() <= 6, "{arch:?}"); // 4 hidden + in/out
+            assert!(arch.widths.iter().skip(1).rev().skip(1).all(|&w| (2..=64).contains(&w)));
+            // input/output never mutated
+            assert_eq!(arch.widths[0], 8);
+            assert_eq!(*arch.widths.last().unwrap(), 4);
+        }
+    }
+}

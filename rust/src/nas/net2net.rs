@@ -1,0 +1,212 @@
+//! Function-preserving Net2Net transforms (Chen, Goodfellow & Shlens
+//! 2016), the weight-reuse mechanism of EAS. Implemented on a real MLP
+//! (ReLU activations) so the preservation property is *tested*, not
+//! assumed: after Net2Wider / Net2Deeper the network computes the same
+//! function on every input.
+
+use crate::nas::Arch;
+use crate::util::rng::Rng;
+
+/// Dense MLP with ReLU hidden activations and linear output.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    /// weights[l] has shape (widths[l], widths[l+1]) row-major
+    pub weights: Vec<Vec<f64>>,
+    pub biases: Vec<Vec<f64>>,
+    pub arch: Arch,
+}
+
+impl Mlp {
+    pub fn random(arch: Arch, rng: &mut Rng) -> Mlp {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in arch.widths.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / fan_in as f64).sqrt();
+            weights.push((0..fan_in * fan_out).map(|_| rng.normal() * scale).collect());
+            biases.push((0..fan_out).map(|_| rng.normal() * 0.01).collect());
+        }
+        Mlp { weights, biases, arch }
+    }
+
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.arch.widths[0]);
+        let mut h = x.to_vec();
+        let layers = self.weights.len();
+        for l in 0..layers {
+            let (fan_in, fan_out) = (self.arch.widths[l], self.arch.widths[l + 1]);
+            let mut out = self.biases[l].clone();
+            for i in 0..fan_in {
+                let hi = h[i];
+                if hi == 0.0 {
+                    continue;
+                }
+                let row = &self.weights[l][i * fan_out..(i + 1) * fan_out];
+                for j in 0..fan_out {
+                    out[j] += hi * row[j];
+                }
+            }
+            if l + 1 < layers {
+                for v in &mut out {
+                    *v = v.max(0.0); // ReLU
+                }
+            }
+            h = out;
+        }
+        h
+    }
+
+    /// Net2Wider: widen hidden layer `layer` (0-based hidden index) to
+    /// `new_width` by replicating random units and splitting their
+    /// outgoing weights, preserving the computed function exactly.
+    pub fn net2wider(&self, layer: usize, new_width: usize, rng: &mut Rng) -> Mlp {
+        let l = layer + 1; // index into widths
+        let old_width = self.arch.widths[l];
+        assert!(l + 1 < self.arch.widths.len(), "cannot widen the output layer");
+        assert!(new_width >= old_width, "net2wider cannot shrink");
+        if new_width == old_width {
+            return self.clone();
+        }
+        // mapping g: new unit -> source old unit
+        let mut mapping: Vec<usize> = (0..old_width).collect();
+        for _ in old_width..new_width {
+            mapping.push(rng.below(old_width));
+        }
+        // replication counts for weight splitting
+        let mut counts = vec![0usize; old_width];
+        for &m in &mapping {
+            counts[m] += 1;
+        }
+
+        let mut new = self.clone();
+        new.arch.widths[l] = new_width;
+
+        // incoming weights (layer l-1 -> l): copy columns per mapping
+        let fan_in = self.arch.widths[l - 1];
+        let mut w_in = vec![0.0; fan_in * new_width];
+        for i in 0..fan_in {
+            for (jn, &jm) in mapping.iter().enumerate() {
+                w_in[i * new_width + jn] = self.weights[l - 1][i * old_width + jm];
+            }
+        }
+        new.weights[l - 1] = w_in;
+        new.biases[l - 1] = mapping.iter().map(|&m| self.biases[l - 1][m]).collect();
+
+        // outgoing weights (layer l -> l+1): copy rows, divided by
+        // replication count so the sum is preserved
+        let fan_out = self.arch.widths[l + 1];
+        let mut w_out = vec![0.0; new_width * fan_out];
+        for (jn, &jm) in mapping.iter().enumerate() {
+            let scale = 1.0 / counts[jm] as f64;
+            for k in 0..fan_out {
+                w_out[jn * fan_out + k] = self.weights[l][jm * fan_out + k] * scale;
+            }
+        }
+        new.weights[l] = w_out;
+        new
+    }
+
+    /// Net2Deeper: insert an identity hidden layer after hidden layer
+    /// `layer`. With ReLU, identity-initialized layers preserve the
+    /// function because post-ReLU activations are nonnegative.
+    pub fn net2deeper(&self, layer: usize) -> Mlp {
+        let l = layer + 1;
+        assert!(l < self.arch.widths.len() - 1, "insert position must be hidden");
+        let width = self.arch.widths[l];
+        let mut new = self.clone();
+        new.arch.widths.insert(l + 1, width);
+        // identity weight matrix + zero bias
+        let mut w_id = vec![0.0; width * width];
+        for i in 0..width {
+            w_id[i * width + i] = 1.0;
+        }
+        new.weights.insert(l, w_id);
+        new.biases.insert(l, vec![0.0; width]);
+        new
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_output_diff(a: &Mlp, b: &Mlp, rng: &mut Rng, trials: usize) -> f64 {
+        let dim = a.arch.widths[0];
+        let mut worst = 0.0_f64;
+        for _ in 0..trials {
+            let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let ya = a.forward(&x);
+            let yb = b.forward(&x);
+            for (p, q) in ya.iter().zip(&yb) {
+                worst = worst.max((p - q).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn net2wider_preserves_function() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::random(Arch::new(vec![6, 10, 8, 3]), &mut rng);
+        for (layer, new_w) in [(0usize, 17usize), (1, 12)] {
+            let wide = mlp.net2wider(layer, new_w, &mut rng);
+            assert_eq!(wide.arch.widths[layer + 1], new_w);
+            let d = max_output_diff(&mlp, &wide, &mut rng, 50);
+            assert!(d < 1e-9, "layer {layer}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn net2deeper_preserves_function() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::random(Arch::new(vec![5, 9, 4]), &mut rng);
+        let deep = mlp.net2deeper(0);
+        assert_eq!(deep.arch.widths, vec![5, 9, 9, 4]);
+        let d = max_output_diff(&mlp, &deep, &mut rng, 50);
+        assert!(d < 1e-9, "diff {d}");
+    }
+
+    #[test]
+    fn stacked_transforms_still_preserve() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::random(Arch::new(vec![4, 6, 6, 2]), &mut rng);
+        let t = mlp
+            .net2wider(0, 9, &mut rng)
+            .net2deeper(1)
+            .net2wider(2, 11, &mut rng);
+        let d = max_output_diff(&mlp, &t, &mut rng, 50);
+        assert!(d < 1e-9, "diff {d}");
+        assert!(t.arch.params() > mlp.arch.params());
+    }
+
+    #[test]
+    fn prop_wider_preserves_for_random_architectures() {
+        crate::util::prop::check(
+            "net2wider function preservation",
+            crate::util::prop::PropConfig { cases: 20, seed: 5 },
+            |r| {
+                let hidden = r.below(3) + 1;
+                let mut widths = vec![r.below(5) + 2];
+                for _ in 0..hidden {
+                    widths.push(r.below(8) + 2);
+                }
+                widths.push(r.below(4) + 1);
+                let layer = r.below(hidden);
+                let grow = r.below(6) + 1;
+                (widths, layer, grow, r.next_u64())
+            },
+            |(widths, layer, grow, seed)| {
+                let mut rng = Rng::new(*seed);
+                let mlp = Mlp::random(Arch::new(widths.clone()), &mut rng);
+                let old_w = widths[layer + 1];
+                let wide = mlp.net2wider(*layer, old_w + grow, &mut rng);
+                let d = max_output_diff(&mlp, &wide, &mut rng, 20);
+                if d < 1e-8 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {d}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,366 @@
+//! EAS-style NAS proposer (Cai et al. 2018, paper §V).
+//!
+//! The paper's integration wraps EAS's meta-controller as a `Proposer`
+//! and runs each child network as a `job` (their modified `client.py`
+//! changes five lines — Codes 4/5). This proposer reproduces that
+//! granular integration:
+//!
+//! * the *controller* is a REINFORCE policy ([`crate::nas::controller`])
+//!   choosing which width hyperparameter to grow (Net2Wider) each step —
+//!   growth-only transforms mirror EAS's function-preserving exploration
+//!   "based on the current network, reusing its weights";
+//! * each *episode* proposes a batch of child configurations derived
+//!   from the incumbent; all children run as parallel jobs; when the
+//!   episode's children all report back, the controller takes a policy
+//!   gradient step on their rewards and the best child becomes the new
+//!   incumbent;
+//! * children carry `prev_job_id` so a weight-reusing trainer can warm-
+//!   start (the PJRT trainer uses it for checkpoint resume).
+//!
+//! The proposer operates on the experiment's *int* parameters (widths:
+//! `conv1`, `conv2`, `fc1`, ...); float/choice parameters are inherited
+//! from the incumbent (EAS fixes the training recipe while morphing the
+//! architecture).
+
+use std::collections::HashMap;
+
+use crate::nas::controller::Policy;
+use crate::proposer::{ProposeResult, Proposer, ProposerSpec};
+use crate::search::{BasicConfig, ParamType, SearchSpace};
+use crate::util::error::{AupError, Result};
+use crate::util::rng::Rng;
+
+pub struct EasProposer {
+    space: SearchSpace,
+    maximize: bool,
+    rng: Rng,
+    /// one action per growable (int) parameter + one "no-op / restart lr"
+    policy: Policy,
+    growable: Vec<String>,
+    incumbent: BasicConfig,
+    incumbent_score: Option<f64>,
+    incumbent_job: Option<u64>,
+    /// children of the running episode: job_id -> (action, config)
+    episode: HashMap<u64, (usize, BasicConfig)>,
+    episode_results: Vec<(usize, BasicConfig, f64)>,
+    children_per_episode: usize,
+    episodes_left: usize,
+    next_job_id: u64,
+    proposed_jobs: usize,
+    /// widen factor per action
+    grow_factor: f64,
+    bootstrap_inflight: bool,
+}
+
+impl EasProposer {
+    pub fn new(spec: ProposerSpec) -> Result<EasProposer> {
+        let growable: Vec<String> = spec
+            .space
+            .params
+            .iter()
+            .filter(|p| p.ptype == ParamType::Int)
+            .map(|p| p.name.clone())
+            .collect();
+        if growable.is_empty() {
+            return Err(AupError::Proposer(
+                "eas needs at least one int (width) parameter to grow".into(),
+            ));
+        }
+        let mut rng = Rng::new(spec.seed ^ 0xEA5);
+        // incumbent starts small: every growable param at its minimum,
+        // other params sampled once (EAS: start from a small seed network)
+        let mut incumbent = spec.space.sample(&mut rng);
+        for p in &spec.space.params {
+            if p.ptype == ParamType::Int {
+                incumbent.set_num(&p.name, p.range.0);
+            }
+        }
+        let children = spec.extra_usize("children_per_episode", 4);
+        let episodes = spec.extra_usize(
+            "episodes",
+            (spec.n_samples.max(children + 1) - 1) / children.max(1),
+        );
+        let lr = spec.extra_f64("controller_lr", 0.2);
+        Ok(EasProposer {
+            policy: Policy::new(growable.len(), lr),
+            growable,
+            incumbent,
+            incumbent_score: None,
+            incumbent_job: None,
+            episode: HashMap::new(),
+            episode_results: Vec::new(),
+            children_per_episode: children,
+            episodes_left: episodes.max(1),
+            next_job_id: 0,
+
+            proposed_jobs: 0,
+            grow_factor: spec.extra_f64("grow_factor", 1.5).max(1.1),
+            rng,
+            space: spec.space,
+            maximize: spec.maximize,
+            bootstrap_inflight: false,
+        })
+    }
+
+    /// reward orientation: higher is better internally
+    fn reward(&self, score: f64) -> f64 {
+        if self.maximize {
+            score
+        } else {
+            -score
+        }
+    }
+
+    fn grow(&mut self, action: usize) -> BasicConfig {
+        let name = &self.growable[action];
+        let spec = self.space.get(name).expect("growable param in space");
+        let cur = self.incumbent.get_num(name).unwrap_or(spec.range.0);
+        let grown = (cur * self.grow_factor).round().clamp(spec.range.0, spec.range.1);
+        let mut child = self.incumbent.clone();
+        child.set_num(name, grown);
+        child
+    }
+
+    fn finish_episode(&mut self) {
+        // policy-gradient step on every child's reward
+        let results = std::mem::take(&mut self.episode_results);
+        let mut best: Option<(BasicConfig, f64, u64)> = None;
+        for (action, config, score) in results {
+            let r = self.reward(score);
+            self.policy.update(action, r);
+            if best.as_ref().map_or(true, |(_, b, _)| r > self.reward(*b)) {
+                best = Some((config.clone(), score, 0));
+            }
+        }
+        // promote the best child if it beats the incumbent
+        if let Some((config, score, _)) = best {
+            let better = match self.incumbent_score {
+                None => true,
+                Some(inc) => self.reward(score) > self.reward(inc),
+            };
+            if better {
+                self.incumbent = config;
+                self.incumbent_score = Some(score);
+            }
+        }
+        self.episodes_left = self.episodes_left.saturating_sub(1);
+    }
+}
+
+impl Proposer for EasProposer {
+    fn get_param(&mut self) -> ProposeResult {
+        if self.episodes_left == 0 {
+            return if self.episode.is_empty() && !self.bootstrap_inflight {
+                ProposeResult::Done
+            } else {
+                ProposeResult::Wait
+            };
+        }
+        // bootstrap: evaluate the seed network first
+        if self.incumbent_score.is_none() && self.incumbent_job.is_none() {
+            let job_id = self.next_job_id;
+            self.next_job_id += 1;
+            self.proposed_jobs += 1;
+            let mut c = self.incumbent.clone();
+            c.set_num("job_id", job_id as f64);
+            self.incumbent_job = Some(job_id);
+            self.bootstrap_inflight = true;
+            return ProposeResult::Config(c);
+        }
+        if self.bootstrap_inflight {
+            return ProposeResult::Wait; // wait for the seed score
+        }
+        // dispatch children for the current episode
+        if self.episode.len() + self.episode_results.len() < self.children_per_episode {
+            let action = self.policy.sample(&mut self.rng);
+            let mut child = self.grow(action);
+            let job_id = self.next_job_id;
+            self.next_job_id += 1;
+            self.proposed_jobs += 1;
+            child.set_num("job_id", job_id as f64);
+            if let Some(pj) = self.incumbent_job {
+                child.set_num("prev_job_id", pj as f64); // weight reuse
+            }
+            self.episode.insert(job_id, (action, child.clone()));
+            return ProposeResult::Config(child);
+        }
+        ProposeResult::Wait
+    }
+
+    fn update(&mut self, job_id: u64, config: &BasicConfig, score: Option<f64>) {
+        if Some(job_id) == self.incumbent_job && self.bootstrap_inflight {
+            self.bootstrap_inflight = false;
+            if let Some(s) = score {
+                self.incumbent_score = Some(s);
+            } else {
+                // seed failed: keep None, children still explore
+                self.incumbent_score = Some(if self.maximize {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                });
+            }
+            return;
+        }
+        if let Some((action, c)) = self.episode.remove(&job_id) {
+            if let Some(s) = score {
+                if s.is_finite() {
+                    self.episode_results.push((action, c, s));
+                }
+            }
+            let _ = config;
+            if self.episode.is_empty()
+                && self.episode_results.len() + self.episode.len() >= 1
+                && self.episode_results.len() >= self.children_per_episode.min(1)
+                && self.episode.is_empty()
+                && (self.episode_results.len() == self.children_per_episode
+                    || self.episode.is_empty())
+            {
+                // episode drained (failed children simply missing)
+                self.finish_episode();
+            }
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.episodes_left == 0 && self.episode.is_empty() && !self.bootstrap_inflight
+    }
+
+    fn name(&self) -> &'static str {
+        "eas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::ProposerSpec;
+    use crate::search::ParamSpec;
+    use crate::util::json::Json;
+    use crate::workload::surrogate::mnist_cnn_surrogate;
+
+    fn cnn_spec(n_samples: usize, seed: u64) -> ProposerSpec {
+        ProposerSpec {
+            space: SearchSpace::new(vec![
+                ParamSpec::int("conv1", 8, 32),
+                ParamSpec::int("conv2", 8, 64),
+                ParamSpec::int("fc1", 32, 256),
+                ParamSpec::float("dropout", 0.0, 0.8),
+                ParamSpec::float("learning_rate", 1e-4, 1e-1).with_log_scale(),
+            ])
+            .unwrap(),
+            n_samples,
+            maximize: false,
+            seed,
+            extra: Json::parse(r#"{"children_per_episode": 3, "episodes": 6}"#).unwrap(),
+        }
+    }
+
+    fn run(p: &mut EasProposer, mut obj: impl FnMut(&BasicConfig) -> f64) -> Vec<(BasicConfig, f64)> {
+        let mut evals = Vec::new();
+        let mut inflight: Vec<BasicConfig> = Vec::new();
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "eas did not terminate");
+            if p.finished() {
+                break;
+            }
+            match p.get_param() {
+                ProposeResult::Config(c) => inflight.push(c),
+                ProposeResult::Wait | ProposeResult::Done => {
+                    if inflight.is_empty() {
+                        if p.finished() {
+                            break;
+                        }
+                        panic!("Wait with nothing inflight");
+                    }
+                    for c in inflight.drain(..) {
+                        let s = obj(&c);
+                        p.update(c.job_id().unwrap(), &c, Some(s));
+                        evals.push((c, s));
+                    }
+                }
+            }
+        }
+        evals
+    }
+
+    #[test]
+    fn grows_architectures_and_terminates() {
+        let mut p = EasProposer::new(cnn_spec(20, 1)).unwrap();
+        let evals = run(&mut p, |c| mnist_cnn_surrogate(c));
+        assert!(p.finished());
+        assert!(evals.len() >= 10, "{}", evals.len());
+        // seed starts at the minimum widths
+        assert_eq!(evals[0].0.get_num("conv1"), Some(8.0));
+        // later children must be at least as wide in total
+        let width_sum = |c: &BasicConfig| {
+            c.get_num("conv1").unwrap() + c.get_num("conv2").unwrap() + c.get_num("fc1").unwrap()
+        };
+        let first = width_sum(&evals[0].0);
+        let last = width_sum(&evals.last().unwrap().0);
+        assert!(last >= first, "architectures should not shrink: {first} -> {last}");
+    }
+
+    #[test]
+    fn children_carry_prev_job_id_for_weight_reuse() {
+        let mut p = EasProposer::new(cnn_spec(20, 2)).unwrap();
+        let evals = run(&mut p, |c| mnist_cnn_surrogate(c));
+        let with_prev = evals
+            .iter()
+            .filter(|(c, _)| c.get_num("prev_job_id").is_some())
+            .count();
+        assert!(with_prev >= evals.len() / 2, "{with_prev}/{}", evals.len());
+    }
+
+    #[test]
+    fn incumbent_improves_monotonically() {
+        let mut p = EasProposer::new(cnn_spec(30, 3)).unwrap();
+        // wider is strictly better under this objective
+        let obj = |c: &BasicConfig| {
+            -(c.get_num("conv1").unwrap()
+                + c.get_num("conv2").unwrap()
+                + c.get_num("fc1").unwrap())
+        };
+        let _ = run(&mut p, obj);
+        // incumbent should have grown beyond the seed
+        let inc = p.incumbent.clone();
+        let total = inc.get_num("conv1").unwrap()
+            + inc.get_num("conv2").unwrap()
+            + inc.get_num("fc1").unwrap();
+        assert!(total > 8.0 + 8.0 + 32.0, "incumbent never grew: {total}");
+    }
+
+    #[test]
+    fn controller_learns_the_rewarding_dimension() {
+        // only fc1 growth matters under this objective
+        let mut p = EasProposer::new(cnn_spec(60, 5)).unwrap();
+        let obj = |c: &BasicConfig| -c.get_num("fc1").unwrap();
+        let _ = run(&mut p, obj);
+        let probs = p.policy.probs();
+        let fc1_idx = p.growable.iter().position(|g| g == "fc1").unwrap();
+        let max_other = probs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != fc1_idx)
+            .map(|(_, p)| *p)
+            .fold(0.0, f64::max);
+        assert!(
+            probs[fc1_idx] >= max_other * 0.8,
+            "controller should favor fc1: {probs:?}"
+        );
+    }
+
+    #[test]
+    fn needs_int_parameter() {
+        let spec = ProposerSpec {
+            space: SearchSpace::new(vec![ParamSpec::float("x", 0.0, 1.0)]).unwrap(),
+            n_samples: 5,
+            maximize: false,
+            seed: 0,
+            extra: Json::Null,
+        };
+        assert!(EasProposer::new(spec).is_err());
+    }
+}

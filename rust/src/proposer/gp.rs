@@ -1,0 +1,181 @@
+//! Gaussian process regression on the unit hypercube — the model behind
+//! the `spearmint` proposer (Snoek et al. 2012 use a Matérn 5/2 kernel;
+//! so do we). Hyperparameters (lengthscale, noise) are selected by
+//! maximizing the log marginal likelihood over a small grid, which is
+//! robust and deterministic — appropriate for n ≤ a few hundred points.
+
+use crate::linalg::matrix::{sq_dist, Matrix};
+use crate::linalg::stats;
+use crate::linalg::Cholesky;
+use crate::util::error::{AupError, Result};
+
+/// Matérn 5/2 kernel value for squared distance `d2` and lengthscale `ell`.
+fn matern52(d2: f64, ell: f64) -> f64 {
+    let d = d2.max(0.0).sqrt() / ell;
+    let s5 = 5.0_f64.sqrt();
+    (1.0 + s5 * d + 5.0 * d2 / (3.0 * ell * ell)) * (-s5 * d).exp()
+}
+
+/// Fitted GP posterior.
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    chol: Cholesky,
+    ell: f64,
+    signal_var: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    /// Fit on (x in [0,1]^d, y). Standardizes y internally.
+    pub fn fit(x: &[Vec<f64>], y: &[f64]) -> Result<Gp> {
+        if x.len() != y.len() || x.is_empty() {
+            return Err(AupError::Numeric("GP fit needs matching non-empty x/y".into()));
+        }
+        let y_mean = stats::mean(y);
+        let y_std = stats::std_dev(y).max(1e-9);
+        let ys: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+        // model selection: grid over lengthscale & noise
+        let ells = [0.08, 0.15, 0.3, 0.6, 1.2, 2.4];
+        let noises = [1e-6, 1e-4, 1e-2];
+        let mut best: Option<(f64, f64, f64)> = None; // (lml, ell, noise)
+        for &ell in &ells {
+            for &noise in &noises {
+                if let Ok(lml) = log_marginal(x, &ys, ell, noise) {
+                    if best.map_or(true, |(b, _, _)| lml > b) {
+                        best = Some((lml, ell, noise));
+                    }
+                }
+            }
+        }
+        let (_, ell, noise) =
+            best.ok_or_else(|| AupError::Numeric("GP model selection failed".into()))?;
+
+        let k = kernel_matrix(x, ell, noise);
+        let chol = Cholesky::factor_with_jitter(&k, 1e-10)?;
+        let alpha = chol.solve(&ys);
+        Ok(Gp { x: x.to_vec(), alpha, chol, ell, signal_var: 1.0, y_mean, y_std, })
+    }
+
+    /// Posterior mean and variance at `q` (original y units).
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let kq: Vec<f64> = self
+            .x
+            .iter()
+            .map(|xi| self.signal_var * matern52(sq_dist(xi, q), self.ell))
+            .collect();
+        let mean_std = crate::linalg::matrix::dot(&kq, &self.alpha);
+        let v = self.chol.solve_lower(&kq);
+        let var_std = (self.signal_var - crate::linalg::matrix::dot(&v, &v)).max(1e-12);
+        (
+            self.y_mean + self.y_std * mean_std,
+            (self.y_std * self.y_std) * var_std,
+        )
+    }
+
+    /// Expected improvement *below* `best_y` (minimization EI) at `q`.
+    pub fn ei_min(&self, q: &[f64], best_y: f64, xi: f64) -> f64 {
+        let (mu, var) = self.predict(q);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return 0.0;
+        }
+        let z = (best_y - mu - xi) / sigma;
+        (best_y - mu - xi) * stats::norm_cdf(z) + sigma * stats::norm_pdf(z)
+    }
+
+    pub fn lengthscale(&self) -> f64 {
+        self.ell
+    }
+}
+
+fn kernel_matrix(x: &[Vec<f64>], ell: f64, noise: f64) -> Matrix {
+    let n = x.len();
+    let mut k = Matrix::from_fn(n, n, |i, j| matern52(sq_dist(&x[i], &x[j]), ell));
+    k.add_diag(noise);
+    k
+}
+
+fn log_marginal(x: &[Vec<f64>], ys: &[f64], ell: f64, noise: f64) -> Result<f64> {
+    let n = x.len() as f64;
+    let k = kernel_matrix(x, ell, noise);
+    let chol = Cholesky::factor_with_jitter(&k, 1e-10)?;
+    let alpha = chol.solve(ys);
+    let fit = -0.5 * crate::linalg::matrix::dot(ys, &alpha);
+    let complexity = -0.5 * chol.log_det();
+    Ok(fit + complexity - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interpolates_training_points() {
+        let x: Vec<Vec<f64>> = vec![vec![0.1], vec![0.5], vec![0.9]];
+        let y = vec![1.0, -1.0, 0.5];
+        let gp = Gp::fit(&x, &y).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, _) = gp.predict(xi);
+            assert!((mu - yi).abs() < 0.15, "{mu} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let x: Vec<Vec<f64>> = vec![vec![0.4], vec![0.5], vec![0.6]];
+        let y = vec![0.0, 0.1, 0.0];
+        let gp = Gp::fit(&x, &y).unwrap();
+        let (_, var_near) = gp.predict(&[0.5]);
+        let (_, var_far) = gp.predict(&[0.0]);
+        assert!(var_far > var_near * 2.0, "near {var_near} far {var_far}");
+    }
+
+    #[test]
+    fn learns_smooth_function() {
+        let mut rng = Rng::new(5);
+        let f = |x: f64| (6.0 * x).sin() + 0.5 * x;
+        let x: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.uniform()]).collect();
+        let y: Vec<f64> = x.iter().map(|v| f(v[0])).collect();
+        let gp = Gp::fit(&x, &y).unwrap();
+        let mut err = 0.0;
+        for i in 0..50 {
+            let q = i as f64 / 49.0;
+            let (mu, _) = gp.predict(&[q]);
+            err += (mu - f(q)).abs();
+        }
+        assert!(err / 50.0 < 0.1, "mean abs err {}", err / 50.0);
+    }
+
+    #[test]
+    fn ei_prefers_promising_regions() {
+        // data: minimum near x=0.3
+        let x: Vec<Vec<f64>> = vec![vec![0.0], vec![0.3], vec![0.6], vec![1.0]];
+        let y = vec![1.0, 0.1, 0.8, 1.2];
+        let gp = Gp::fit(&x, &y).unwrap();
+        let ei_near_min = gp.ei_min(&[0.32], 0.1, 0.0);
+        let ei_at_worst = gp.ei_min(&[0.99], 0.1, 0.0);
+        assert!(
+            ei_near_min >= 0.0 && ei_at_worst >= 0.0,
+            "EI must be nonnegative"
+        );
+        assert!(ei_near_min > ei_at_worst, "{ei_near_min} vs {ei_at_worst}");
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Gp::fit(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn constant_targets_do_not_crash() {
+        let x: Vec<Vec<f64>> = vec![vec![0.1], vec![0.9]];
+        let y = vec![0.5, 0.5];
+        let gp = Gp::fit(&x, &y).unwrap();
+        let (mu, var) = gp.predict(&[0.5]);
+        assert!(mu.is_finite() && var.is_finite());
+    }
+}

@@ -1,0 +1,453 @@
+//! HYPERBAND (Li et al. 2018): bandit-based budget allocation via
+//! successive halving brackets.
+//!
+//! The integration follows the paper's §III-A1 exactly: the budget is
+//! communicated to jobs through the auxiliary `n_iterations` key in the
+//! BasicConfig, and `job_id` is the handle that lets a promoted
+//! configuration *resume* training (the job-side trainer looks up the
+//! checkpoint saved under its previous id via `prev_job_id`).
+//!
+//! Async behaviour: all configurations of the current rung are proposed
+//! immediately (they run in parallel, n_parallel permitting); once the
+//! rung drains, the top 1/η configurations are promoted to the next rung
+//! with η× budget. While a rung is draining, `get_param()` returns
+//! [`ProposeResult::Wait`].
+
+use std::collections::HashMap;
+
+use crate::proposer::{ProposeResult, Proposer, ProposerSpec};
+use crate::search::{BasicConfig, SearchSpace};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// One configuration being tracked across rungs.
+#[derive(Debug, Clone)]
+struct Arm {
+    config: BasicConfig,
+    /// job id of the last completed rung (for checkpoint resume)
+    last_job_id: Option<u64>,
+    /// score at the last completed rung
+    score: Option<f64>,
+}
+
+/// State of the current rung.
+#[derive(Debug)]
+struct Rung {
+    /// indices into `arms` scheduled for this rung
+    members: Vec<usize>,
+    /// budget (epochs) for this rung
+    budget: f64,
+    /// arm index by outstanding job id
+    inflight: HashMap<u64, usize>,
+    /// members not yet dispatched
+    to_dispatch: Vec<usize>,
+}
+
+pub struct Hyperband {
+    space: SearchSpace,
+    maximize: bool,
+    rng: Rng,
+    eta: f64,
+    /// maximum per-config budget R (epochs)
+    r_max: f64,
+    /// bracket indices s = s_max, s_max-1, ..., 0
+    brackets: Vec<usize>,
+    bracket_pos: usize,
+    arms: Vec<Arm>,
+    rung: Option<Rung>,
+    /// remaining halving rounds in the current bracket (i = 0..=s)
+    rounds_left: usize,
+    next_job_id: u64,
+    /// sampled-configuration budget cap (paper: "100 configurations to
+    /// be explored"); 0 = unlimited
+    n_samples_cap: usize,
+    n_sampled: usize,
+    done: bool,
+    /// cumulative epochs dispatched (for budget accounting tests/benches)
+    pub epochs_dispatched: f64,
+}
+
+impl Hyperband {
+    pub fn new(spec: ProposerSpec) -> Result<Hyperband> {
+        let eta = spec.extra_f64("eta", 3.0).max(2.0);
+        let r_max = spec.extra_f64("n_iterations", 27.0).max(1.0);
+        let s_max = (r_max.ln() / eta.ln()).floor() as usize;
+        let brackets: Vec<usize> = (0..=s_max).rev().collect();
+        let mut hb = Hyperband {
+            space: spec.space,
+            maximize: spec.maximize,
+            rng: Rng::new(spec.seed),
+            eta,
+            r_max,
+            brackets,
+            bracket_pos: 0,
+            arms: Vec::new(),
+            rung: None,
+            rounds_left: 0,
+            next_job_id: 0,
+            n_samples_cap: spec.n_samples,
+            n_sampled: 0,
+            done: false,
+            epochs_dispatched: 0.0,
+        };
+        hb.start_bracket();
+        Ok(hb)
+    }
+
+    fn s_max(&self) -> usize {
+        *self.brackets.first().unwrap_or(&0)
+    }
+
+    /// Begin bracket `self.brackets[self.bracket_pos]`; sample n new arms.
+    fn start_bracket(&mut self) {
+        if self.bracket_pos >= self.brackets.len() {
+            // Hyperband loops its bracket schedule indefinitely; the
+            // configuration budget (paper §IV-D: "100 configurations to
+            // be explored") is the stopping criterion when set.
+            if self.n_samples_cap > 0 && self.n_sampled < self.n_samples_cap {
+                self.bracket_pos = 0;
+            } else {
+                self.done = true;
+                return;
+            }
+        }
+        let s = self.brackets[self.bracket_pos];
+        let s_max = self.s_max();
+        // n = ceil((s_max+1)/(s+1) * eta^s), r = R * eta^-s
+        let mut n = (((s_max + 1) as f64 / (s + 1) as f64) * self.eta.powi(s as i32)).ceil()
+            as usize;
+        let r = self.r_max * self.eta.powi(-(s as i32));
+        if self.n_samples_cap > 0 {
+            let remaining = self.n_samples_cap.saturating_sub(self.n_sampled);
+            if remaining == 0 {
+                self.done = true;
+                return;
+            }
+            n = n.min(remaining);
+        }
+        let start = self.arms.len();
+        for _ in 0..n {
+            let config = self.space.sample(&mut self.rng);
+            self.arms.push(Arm { config, last_job_id: None, score: None });
+        }
+        self.n_sampled += n;
+        let members: Vec<usize> = (start..start + n).collect();
+        self.rounds_left = s + 1;
+        self.rung = Some(Rung {
+            to_dispatch: members.clone(),
+            members,
+            budget: r.max(1.0).round(), // paper: "minimum number of epochs to be 1"
+            inflight: HashMap::new(),
+        });
+    }
+
+    /// Called when the current rung has fully drained: promote or move on.
+    fn advance_rung(&mut self) {
+        let rung = self.rung.take().expect("advance without rung");
+        self.rounds_left -= 1;
+        if self.rounds_left == 0 {
+            // bracket complete
+            self.bracket_pos += 1;
+            self.start_bracket();
+            return;
+        }
+        // promote top 1/eta by score
+        let mut scored: Vec<usize> = rung
+            .members
+            .iter()
+            .copied()
+            .filter(|&i| self.arms[i].score.is_some())
+            .collect();
+        let maximize = self.maximize;
+        scored.sort_by(|&a, &b| {
+            let sa = self.arms[a].score.unwrap();
+            let sb = self.arms[b].score.unwrap();
+            let ord = sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal);
+            if maximize {
+                ord.reverse()
+            } else {
+                ord
+            }
+        });
+        let keep = ((rung.members.len() as f64) / self.eta).floor().max(1.0) as usize;
+        let keep = keep.min(scored.len());
+        if keep == 0 {
+            // every job in the rung failed — abandon the bracket
+            self.bracket_pos += 1;
+            self.start_bracket();
+            return;
+        }
+        let members: Vec<usize> = scored[..keep].to_vec();
+        self.rung = Some(Rung {
+            to_dispatch: members.clone(),
+            members,
+            budget: (rung.budget * self.eta).min(self.r_max).round(),
+            inflight: HashMap::new(),
+        });
+    }
+}
+
+impl Proposer for Hyperband {
+    fn get_param(&mut self) -> ProposeResult {
+        if self.done {
+            return ProposeResult::Done;
+        }
+        let Some(rung) = self.rung.as_mut() else {
+            return ProposeResult::Done;
+        };
+        match rung.to_dispatch.pop() {
+            Some(arm_idx) => {
+                let job_id = self.next_job_id;
+                self.next_job_id += 1;
+                let budget = rung.budget;
+                rung.inflight.insert(job_id, arm_idx);
+                let arm = &self.arms[arm_idx];
+                let mut c = arm.config.clone();
+                c.set_num("job_id", job_id as f64);
+                c.set_num("n_iterations", budget);
+                if let Some(prev) = arm.last_job_id {
+                    // paper §III-A1: "the value of the job ID is used in the
+                    // HYPERBAND implementation to track previous results and
+                    // to resume training when necessary"
+                    c.set_num("prev_job_id", prev as f64);
+                }
+                self.epochs_dispatched += budget;
+                ProposeResult::Config(c)
+            }
+            None => {
+                if rung.inflight.is_empty() {
+                    // rung drained between updates — advance now
+                    self.advance_rung();
+                    if self.done {
+                        ProposeResult::Done
+                    } else {
+                        self.get_param()
+                    }
+                } else {
+                    ProposeResult::Wait
+                }
+            }
+        }
+    }
+
+    fn update(&mut self, job_id: u64, _config: &BasicConfig, score: Option<f64>) {
+        let Some(rung) = self.rung.as_mut() else { return };
+        let Some(arm_idx) = rung.inflight.remove(&job_id) else {
+            return; // stale callback from an abandoned bracket
+        };
+        let arm = &mut self.arms[arm_idx];
+        arm.last_job_id = Some(job_id);
+        if let Some(s) = score {
+            if s.is_finite() {
+                arm.score = Some(s);
+            }
+        } else {
+            arm.score = None; // failed at this budget: drop from promotion
+        }
+        if rung.inflight.is_empty() && rung.to_dispatch.is_empty() {
+            self.advance_rung();
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::testutil::rosen_spec;
+    use crate::util::json::Json;
+    use crate::workload::surrogate::mnist_cnn_surrogate;
+
+    fn hb_spec(n_samples: usize, r: f64, seed: u64) -> ProposerSpec {
+        let mut spec = rosen_spec(n_samples, seed);
+        spec.extra = Json::parse(&format!(r#"{{"n_iterations": {r}, "eta": 3}}"#)).unwrap();
+        spec
+    }
+
+    /// Sequential driver that honors n_iterations (epoch-aware objective).
+    fn run_hb(
+        p: &mut Hyperband,
+        mut objective: impl FnMut(&BasicConfig) -> f64,
+    ) -> Vec<(BasicConfig, f64)> {
+        let mut evals = Vec::new();
+        let mut guard = 0;
+        while !p.finished() {
+            guard += 1;
+            assert!(guard < 100_000, "hyperband did not terminate");
+            match p.get_param() {
+                ProposeResult::Config(c) => {
+                    let s = objective(&c);
+                    p.update(c.job_id().unwrap(), &c, Some(s));
+                    evals.push((c, s));
+                }
+                ProposeResult::Wait => {
+                    panic!("sequential driver must never observe Wait with no inflight jobs")
+                }
+                ProposeResult::Done => break,
+            }
+        }
+        evals
+    }
+
+    #[test]
+    fn terminates_and_allocates_increasing_budgets() {
+        let mut p = Hyperband::new(hb_spec(0, 27.0, 1)).unwrap();
+        let evals = run_hb(&mut p, |c| {
+            // more epochs -> better score, arm identity via x
+            let x = c.get_num("x").unwrap();
+            let e = c.get_num("n_iterations").unwrap();
+            (x - 1.0).abs() / (1.0 + e)
+        });
+        assert!(p.finished());
+        // brackets s=3,2,1,0 with eta=3, R=27: n = 27,9,6,4 arms
+        let budgets: Vec<f64> = evals
+            .iter()
+            .map(|(c, _)| c.get_num("n_iterations").unwrap())
+            .collect();
+        assert!(budgets.iter().any(|&b| b == 1.0), "low rung present");
+        assert!(budgets.iter().any(|&b| b == 27.0), "full budget present");
+        // total epochs ≈ (s_max+1) * R * (s_max+1) -> for R=27, eta=3: ~4*27*... just bound it
+        assert!(p.epochs_dispatched <= 5.0 * 27.0 * 4.0, "{}", p.epochs_dispatched);
+    }
+
+    #[test]
+    fn budget_cap_respected_paper_1000_epochs() {
+        // paper §IV-D: "a total budget of 1000 epochs approximately along
+        // with 100 configurations"
+        let mut p = Hyperband::new(hb_spec(100, 27.0, 2)).unwrap();
+        let evals = run_hb(&mut p, |c| mnist_cnn_surrogate(c));
+        let total_epochs: f64 = evals
+            .iter()
+            .map(|(c, _)| c.get_num("n_iterations").unwrap())
+            .sum();
+        let distinct: std::collections::HashSet<String> = evals
+            .iter()
+            .map(|(c, _)| {
+                let mut c = c.clone();
+                c.values.remove("job_id");
+                c.values.remove("n_iterations");
+                c.values.remove("prev_job_id");
+                c.to_json_string()
+            })
+            .collect();
+        assert!(distinct.len() <= 100, "{} configs", distinct.len());
+        assert!(
+            (300.0..2000.0).contains(&total_epochs),
+            "~1000 epochs expected, got {total_epochs}"
+        );
+    }
+
+    #[test]
+    fn promotes_the_better_arms() {
+        let mut p = Hyperband::new(hb_spec(0, 9.0, 3)).unwrap();
+        // score = distance to 0.3 (budget-independent so promotion order
+        // is directly observable)
+        let evals = run_hb(&mut p, |c| (c.get_num("x").unwrap() - 0.3).abs());
+        // *promoted* arms (prev_job_id set) must come from the better half
+        // of their previous rung; here scores are budget-independent so
+        // every promoted score must be ≤ the median of all non-promoted
+        // scores within the same bracket rung structure. We check the
+        // weaker global property: promoted scores ≤ median of first-rung
+        // scores.
+        let first_rung: Vec<f64> = evals
+            .iter()
+            .filter(|(c, _)| c.get_num("prev_job_id").is_none())
+            .map(|(_, s)| *s)
+            .collect();
+        let promoted: Vec<f64> = evals
+            .iter()
+            .filter(|(c, _)| c.get_num("prev_job_id").is_some())
+            .map(|(_, s)| *s)
+            .collect();
+        assert!(!promoted.is_empty());
+        let median_first = crate::linalg::stats::percentile(&first_rung, 50.0);
+        for s in promoted {
+            assert!(
+                s <= median_first + 1e-9,
+                "promoted arm (score {s}) not in the better half (median {median_first})"
+            );
+        }
+    }
+
+    #[test]
+    fn resume_carries_prev_job_id() {
+        let mut p = Hyperband::new(hb_spec(0, 9.0, 4)).unwrap();
+        let evals = run_hb(&mut p, |c| c.get_num("x").unwrap().abs());
+        let resumed: Vec<&BasicConfig> = evals
+            .iter()
+            .map(|(c, _)| c)
+            .filter(|c| c.get_num("prev_job_id").is_some())
+            .collect();
+        assert!(!resumed.is_empty(), "promotions must carry prev_job_id");
+        for c in resumed {
+            assert!(c.get_num("prev_job_id").unwrap() < c.get_num("job_id").unwrap() as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn prop_never_resumes_with_smaller_budget() {
+        // invariant from DESIGN.md: hyperband never resumes a job with a
+        // smaller budget than its previous rung
+        crate::util::prop::check(
+            "hyperband budgets monotone per arm",
+            crate::util::prop::PropConfig { cases: 10, seed: 77 },
+            |r| r.next_u64(),
+            |&seed| {
+                let mut p = Hyperband::new(hb_spec(0, 27.0, seed)).map_err(|e| e.to_string())?;
+                let mut budgets_by_arm: std::collections::HashMap<String, f64> =
+                    Default::default();
+                let mut guard = 0;
+                while !p.finished() {
+                    guard += 1;
+                    if guard > 100_000 {
+                        return Err("no termination".into());
+                    }
+                    match p.get_param() {
+                        ProposeResult::Config(c) => {
+                            let mut key = c.clone();
+                            key.values.remove("job_id");
+                            key.values.remove("n_iterations");
+                            key.values.remove("prev_job_id");
+                            let b = c.get_num("n_iterations").unwrap();
+                            let k = key.to_json_string();
+                            if let Some(prev) = budgets_by_arm.get(&k) {
+                                if b < *prev {
+                                    return Err(format!("budget shrank {prev} -> {b}"));
+                                }
+                            }
+                            budgets_by_arm.insert(k, b);
+                            let s = c.get_num("x").unwrap().abs();
+                            p.update(c.job_id().unwrap(), &c, Some(s));
+                        }
+                        ProposeResult::Wait => return Err("unexpected Wait".into()),
+                        ProposeResult::Done => break,
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_failures_abandon_bracket_without_hanging() {
+        let mut p = Hyperband::new(hb_spec(0, 9.0, 5)).unwrap();
+        let mut guard = 0;
+        while !p.finished() {
+            guard += 1;
+            assert!(guard < 100_000);
+            match p.get_param() {
+                ProposeResult::Config(c) => p.update(c.job_id().unwrap(), &c, None),
+                ProposeResult::Wait => panic!("Wait with nothing inflight"),
+                ProposeResult::Done => break,
+            }
+        }
+        assert!(p.finished());
+    }
+}

@@ -1,0 +1,107 @@
+//! RANDOMSEARCH (Bergstra & Bengio 2012) — the paper's default baseline
+//! and the algorithm behind its Fig. 3 scalability experiment.
+
+use crate::proposer::{ProposeResult, Proposer, ProposerSpec};
+use crate::search::SearchSpace;
+use crate::util::rng::Rng;
+
+pub struct RandomSearch {
+    space: SearchSpace,
+    n_samples: usize,
+    proposed: usize,
+    completed: usize,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(spec: ProposerSpec) -> RandomSearch {
+        RandomSearch {
+            space: spec.space,
+            n_samples: spec.n_samples,
+            proposed: 0,
+            completed: 0,
+            rng: Rng::new(spec.seed),
+        }
+    }
+}
+
+impl Proposer for RandomSearch {
+    fn get_param(&mut self) -> ProposeResult {
+        if self.proposed >= self.n_samples {
+            return ProposeResult::Done;
+        }
+        let mut c = self.space.sample(&mut self.rng);
+        c.set_num("job_id", self.proposed as f64);
+        self.proposed += 1;
+        ProposeResult::Config(c)
+    }
+
+    fn update(&mut self, _job_id: u64, _config: &crate::search::BasicConfig, _score: Option<f64>) {
+        // random search keeps no history (paper §III-A2)
+        self.completed += 1;
+    }
+
+    fn finished(&self) -> bool {
+        self.proposed >= self.n_samples && self.completed >= self.n_samples
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::testutil::{drive, rosen_spec};
+    use crate::workload::rosenbrock;
+
+    #[test]
+    fn proposes_exactly_n_samples() {
+        let mut p = RandomSearch::new(rosen_spec(25, 3));
+        let (evals, _) = drive(&mut p, |c| rosenbrock(c), 1000);
+        assert_eq!(evals.len(), 25);
+        assert!(p.finished());
+        assert_eq!(p.get_param(), ProposeResult::Done);
+    }
+
+    #[test]
+    fn configs_in_space_and_job_ids_sequential() {
+        let spec = rosen_spec(10, 4);
+        let space = spec.space.clone();
+        let mut p = RandomSearch::new(spec);
+        let (evals, _) = drive(&mut p, |c| rosenbrock(c), 1000);
+        for (i, (c, _)) in evals.iter().enumerate() {
+            assert!(space.contains(c));
+            assert_eq!(c.job_id(), Some(i as u64));
+        }
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let run = |seed| {
+            let mut p = RandomSearch::new(rosen_spec(5, seed));
+            drive(&mut p, |c| rosenbrock(c), 100)
+                .0
+                .iter()
+                .map(|(c, _)| c.to_json_string())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn not_finished_until_callbacks_arrive() {
+        // paper Algorithm 1: aup.finish() waits for unfinished jobs
+        let mut p = RandomSearch::new(rosen_spec(2, 0));
+        let c1 = match p.get_param() {
+            ProposeResult::Config(c) => c,
+            _ => panic!(),
+        };
+        let _c2 = p.get_param();
+        assert!(!p.finished(), "in-flight jobs must block completion");
+        p.update(0, &c1, Some(1.0));
+        assert!(!p.finished());
+    }
+}

@@ -1,0 +1,134 @@
+//! Passive / sequence proposer: replays a user-supplied list of
+//! configurations. This is the "manual search" baseline and also how a
+//! finished experiment can be *re-run bit-for-bit* for the paper's
+//! reproducibility story ("users can easily reuse them together with
+//! their code") — `aup viz --export` emits exactly this format.
+
+use crate::proposer::{ProposeResult, Proposer, ProposerSpec};
+use crate::search::BasicConfig;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+pub struct SequenceProposer {
+    configs: Vec<BasicConfig>,
+    proposed: usize,
+    completed: usize,
+}
+
+impl SequenceProposer {
+    /// The list comes from `"configs": [...]` in experiment.json, or, if
+    /// absent, the first `n_samples` points of a low-discrepancy-ish
+    /// fallback (uniform grid-strided samples) so the proposer is still
+    /// usable without explicit configs.
+    pub fn new(spec: ProposerSpec) -> Result<SequenceProposer> {
+        let configs = match spec.extra.get("configs") {
+            Some(Json::Arr(arr)) => {
+                let parsed = arr
+                    .iter()
+                    .map(BasicConfig::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                for c in &parsed {
+                    if !spec.space.contains(c) {
+                        return Err(AupError::Proposer(format!(
+                            "sequence config outside the search space: {}",
+                            c.to_json_string()
+                        )));
+                    }
+                }
+                parsed
+            }
+            Some(_) => {
+                return Err(AupError::Proposer("'configs' must be an array".into()));
+            }
+            None => {
+                // deterministic fallback: evenly strided unit-cube points
+                let n = spec.n_samples.max(1);
+                let d = spec.space.dim();
+                (0..n)
+                    .map(|i| {
+                        let u: Vec<f64> = (0..d)
+                            .map(|k| {
+                                // R-sequence style quasi-random stride
+                                let phi = 1.324717957244746_f64; // plastic number
+                                let alpha = (1.0 / phi).powi(k as i32 + 1);
+                                ((i as f64 + 1.0) * alpha).fract()
+                            })
+                            .collect();
+                        spec.space.decode(&u)
+                    })
+                    .collect()
+            }
+        };
+        if configs.is_empty() {
+            return Err(AupError::Proposer("sequence proposer needs at least one config".into()));
+        }
+        Ok(SequenceProposer { configs, proposed: 0, completed: 0 })
+    }
+
+    pub fn total(&self) -> usize {
+        self.configs.len()
+    }
+}
+
+impl Proposer for SequenceProposer {
+    fn get_param(&mut self) -> ProposeResult {
+        if self.proposed >= self.configs.len() {
+            return ProposeResult::Done;
+        }
+        let mut c = self.configs[self.proposed].clone();
+        c.set_num("job_id", self.proposed as f64);
+        self.proposed += 1;
+        ProposeResult::Config(c)
+    }
+
+    fn update(&mut self, _job_id: u64, _config: &BasicConfig, _score: Option<f64>) {
+        self.completed += 1;
+    }
+
+    fn finished(&self) -> bool {
+        self.proposed >= self.configs.len() && self.completed >= self.configs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "sequence"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::testutil::{drive, rosen_spec};
+
+    #[test]
+    fn replays_explicit_configs_in_order() {
+        let mut spec = rosen_spec(0, 0);
+        spec.extra = Json::parse(r#"{"configs": [{"x": 1.0, "y": 2.0}, {"x": -3.0, "y": 4.0}]}"#)
+            .unwrap();
+        let mut p = SequenceProposer::new(spec).unwrap();
+        let (evals, _) = drive(&mut p, |_| 0.0, 100);
+        assert_eq!(evals.len(), 2);
+        assert_eq!(evals[0].0.get_num("x"), Some(1.0));
+        assert_eq!(evals[1].0.get_num("y"), Some(4.0));
+    }
+
+    #[test]
+    fn rejects_out_of_space_configs() {
+        let mut spec = rosen_spec(0, 0);
+        spec.extra = Json::parse(r#"{"configs": [{"x": 99.0, "y": 0.0}]}"#).unwrap();
+        assert!(SequenceProposer::new(spec).is_err());
+    }
+
+    #[test]
+    fn fallback_quasirandom_fills_n_samples() {
+        let spec = rosen_spec(8, 0);
+        let space = spec.space.clone();
+        let mut p = SequenceProposer::new(spec).unwrap();
+        let (evals, _) = drive(&mut p, |_| 0.0, 100);
+        assert_eq!(evals.len(), 8);
+        assert!(evals.iter().all(|(c, _)| space.contains(c)));
+        // strided points should be distinct
+        let uniq: std::collections::HashSet<String> =
+            evals.iter().map(|(c, _)| c.to_json_string()).collect();
+        assert_eq!(uniq.len(), 8);
+    }
+}

@@ -1,0 +1,259 @@
+//! SPEARMINT-style Bayesian optimization (Snoek, Larochelle & Adams
+//! 2012): GP surrogate with a Matérn 5/2 kernel + Expected Improvement,
+//! integrated behind the two-call Proposer API.
+//!
+//! Parallelism (`n_parallel` > 1) is handled with the *constant liar*
+//! strategy: pending configurations are imputed at the current best
+//! score so concurrent proposals don't collapse onto one point.
+
+use std::collections::HashMap;
+
+use crate::proposer::gp::Gp;
+use crate::proposer::{History, ProposeResult, Proposer, ProposerSpec};
+use crate::search::{BasicConfig, SearchSpace};
+use crate::util::rng::Rng;
+
+pub struct Spearmint {
+    space: SearchSpace,
+    n_samples: usize,
+    maximize: bool,
+    rng: Rng,
+    history: History,
+    pending: HashMap<u64, BasicConfig>,
+    proposed: usize,
+    completed: usize,
+    /// pure-exploration warmup before the GP kicks in
+    n_init: usize,
+    /// EI candidate pool size
+    n_candidates: usize,
+    /// exploration jitter in EI
+    xi: f64,
+}
+
+impl Spearmint {
+    pub fn new(spec: ProposerSpec) -> Spearmint {
+        let n_init = spec.extra_usize("n_init", 5.min(spec.n_samples));
+        let n_candidates = spec.extra_usize("n_candidates", 500);
+        let xi = spec.extra_f64("xi", 0.01);
+        Spearmint {
+            rng: Rng::new(spec.seed),
+            space: spec.space,
+            n_samples: spec.n_samples,
+            maximize: spec.maximize,
+            history: History::default(),
+            pending: HashMap::new(),
+            proposed: 0,
+            completed: 0,
+            n_init,
+            n_candidates,
+            xi,
+        }
+    }
+
+    /// signed score: internally we always minimize
+    fn signed(&self, score: f64) -> f64 {
+        if self.maximize {
+            -score
+        } else {
+            score
+        }
+    }
+
+    fn propose_by_ei(&mut self) -> BasicConfig {
+        // training set: completed history + constant-liar pending
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for (c, s) in &self.history.entries {
+            xs.push(self.space.encode(c));
+            ys.push(self.signed(*s));
+        }
+        let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        for c in self.pending.values() {
+            xs.push(self.space.encode(c));
+            ys.push(best); // constant liar
+        }
+
+        let gp = match Gp::fit(&xs, &ys) {
+            Ok(gp) => gp,
+            Err(_) => return self.space.sample(&mut self.rng), // degenerate: fall back
+        };
+
+        // candidate pool: random + jittered copies of the incumbent
+        let mut best_c = None;
+        let mut best_ei = -1.0;
+        let incumbent = self
+            .history
+            .best(self.maximize)
+            .map(|(c, _)| self.space.encode(c));
+        for i in 0..self.n_candidates {
+            let u: Vec<f64> = match (&incumbent, i % 4) {
+                (Some(inc), 0) => inc
+                    .iter()
+                    .map(|&v| (v + self.rng.normal() * 0.05).clamp(0.0, 1.0))
+                    .collect(),
+                _ => (0..self.space.dim()).map(|_| self.rng.uniform()).collect(),
+            };
+            let ei = gp.ei_min(&u, best, self.xi);
+            if ei > best_ei {
+                best_ei = ei;
+                best_c = Some(u);
+            }
+        }
+        match best_c {
+            Some(u) => self.space.decode(&u),
+            None => self.space.sample(&mut self.rng),
+        }
+    }
+}
+
+impl Proposer for Spearmint {
+    fn get_param(&mut self) -> ProposeResult {
+        if self.proposed >= self.n_samples {
+            return ProposeResult::Done;
+        }
+        let mut c = if self.history.len() < self.n_init {
+            self.space.sample(&mut self.rng)
+        } else {
+            self.propose_by_ei()
+        };
+        let job_id = self.proposed as u64;
+        c.set_num("job_id", job_id as f64);
+        self.pending.insert(job_id, c.clone());
+        self.proposed += 1;
+        ProposeResult::Config(c)
+    }
+
+    fn update(&mut self, job_id: u64, config: &BasicConfig, score: Option<f64>) {
+        self.pending.remove(&job_id);
+        self.completed += 1;
+        if let Some(s) = score {
+            if s.is_finite() {
+                self.history.push(config.clone(), s);
+            }
+        }
+        // failed jobs simply drop out of the GP's training set
+    }
+
+    fn finished(&self) -> bool {
+        self.proposed >= self.n_samples && self.completed >= self.n_samples
+    }
+
+    fn name(&self) -> &'static str {
+        "spearmint"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proposer::testutil::{drive, rosen_spec};
+    use crate::workload::{branin, rosenbrock};
+    use crate::proposer::random::RandomSearch;
+
+    #[test]
+    fn respects_budget_and_space() {
+        let spec = rosen_spec(20, 1);
+        let space = spec.space.clone();
+        let mut p = Spearmint::new(spec);
+        let (evals, _) = drive(&mut p, |c| rosenbrock(c), 1000);
+        assert_eq!(evals.len(), 20);
+        assert!(evals.iter().all(|(c, _)| space.contains(c)));
+        assert!(p.finished());
+    }
+
+    #[test]
+    fn beats_random_on_branin() {
+        // average over seeds to keep the test stable
+        let budget = 30;
+        let mut spearmint_total = 0.0;
+        let mut random_total = 0.0;
+        for seed in 0..5 {
+            let mut sp = Spearmint::new(rosen_spec(budget, seed));
+            let (_, best_sp) = drive(&mut sp, |c| branin(c), 10_000);
+            let mut rd = RandomSearch::new(rosen_spec(budget, seed + 100));
+            let (_, best_rd) = drive(&mut rd, |c| branin(c), 10_000);
+            spearmint_total += best_sp;
+            random_total += best_rd;
+        }
+        assert!(
+            spearmint_total <= random_total * 1.05,
+            "spearmint {spearmint_total} vs random {random_total}"
+        );
+    }
+
+    #[test]
+    fn handles_parallel_pending_without_duplicates() {
+        let mut p = Spearmint::new(rosen_spec(12, 3));
+        // fill warmup
+        let mut outstanding = Vec::new();
+        for _ in 0..6 {
+            if let ProposeResult::Config(c) = p.get_param() {
+                outstanding.push(c);
+            }
+        }
+        for c in outstanding.drain(..) {
+            p.update(c.job_id().unwrap(), &c, Some(rosenbrock(&c)));
+        }
+        // now ask for 4 concurrent proposals with none resolved
+        let mut batch = Vec::new();
+        for _ in 0..4 {
+            if let ProposeResult::Config(c) = p.get_param() {
+                batch.push(c);
+            }
+        }
+        assert_eq!(batch.len(), 4);
+        let uniq: std::collections::HashSet<String> = batch
+            .iter()
+            .map(|c| {
+                let mut c = c.clone();
+                c.values.remove("job_id");
+                c.to_json_string()
+            })
+            .collect();
+        assert!(uniq.len() >= 3, "constant liar should spread proposals: {uniq:?}");
+    }
+
+    #[test]
+    fn failed_jobs_do_not_poison_history() {
+        let mut p = Spearmint::new(rosen_spec(10, 4));
+        for _ in 0..10 {
+            match p.get_param() {
+                ProposeResult::Config(c) => {
+                    let id = c.job_id().unwrap();
+                    if id % 2 == 0 {
+                        p.update(id, &c, None); // failure
+                    } else {
+                        p.update(id, &c, Some(rosenbrock(&c)));
+                    }
+                }
+                _ => break,
+            }
+        }
+        assert!(p.finished());
+        assert_eq!(p.history.len(), 5);
+    }
+
+    #[test]
+    fn maximize_direction() {
+        let mut spec = rosen_spec(25, 5);
+        spec.maximize = true;
+        let mut p = Spearmint::new(spec);
+        // maximize -rosenbrock: optimum 0 at (1,1)
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..1000 {
+            if p.finished() {
+                break;
+            }
+            match p.get_param() {
+                ProposeResult::Config(c) => {
+                    let s = -rosenbrock(&c);
+                    best = best.max(s);
+                    p.update(c.job_id().unwrap(), &c, Some(s));
+                }
+                ProposeResult::Wait => continue,
+                ProposeResult::Done => break,
+            }
+        }
+        assert!(best > -200.0, "maximization made no progress: {best}");
+    }
+}

@@ -1,0 +1,301 @@
+//! Job executors — the body of the paper's `run()` (§III-B2).
+//!
+//! Three backends:
+//!
+//! * [`ScriptExecutor`] — the paper's primary usability story: the user's
+//!   *unmodified-but-for-four-lines* training script runs as a
+//!   subprocess. The BasicConfig is saved to a JSON file whose path is
+//!   `argv[1]` (Code 3 line 7: `BasicConfig().load(sys.argv[1])`), the
+//!   resource env (e.g. `CUDA_VISIBLE_DEVICES`) is injected, and the
+//!   score comes back over standard IO via the `print_result` protocol.
+//! * [`BuiltinExecutor`] — in-process analytic objectives
+//!   (`script: "builtin:rosenbrock"`), used by tests/benches and the
+//!   quickstart.
+//! * [`FnExecutor`] — arbitrary closures; the PJRT CNN trainer plugs in
+//!   through this (see `runtime::trainer`).
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::resource::job::JobEnv;
+use crate::search::BasicConfig;
+use crate::util::error::{AupError, Result};
+
+/// A job executor: runs one configuration to completion and returns its
+/// score. Must be shareable across worker threads.
+pub trait Executor: Send + Sync {
+    fn execute(&self, config: &BasicConfig, env: &JobEnv) -> Result<f64>;
+
+    /// Human-readable description for tracking.
+    fn describe(&self) -> String;
+}
+
+/// In-process builtin objective.
+pub struct BuiltinExecutor {
+    pub name: String,
+    pub f: fn(&BasicConfig) -> f64,
+}
+
+impl BuiltinExecutor {
+    pub fn by_name(name: &str) -> Result<BuiltinExecutor> {
+        let f = crate::workload::builtin(name).ok_or_else(|| {
+            AupError::Job(format!("unknown builtin workload '{name}'"))
+        })?;
+        Ok(BuiltinExecutor { name: name.to_string(), f })
+    }
+}
+
+impl Executor for BuiltinExecutor {
+    fn execute(&self, config: &BasicConfig, _env: &JobEnv) -> Result<f64> {
+        let score = (self.f)(config);
+        if score.is_nan() {
+            return Err(AupError::Job(format!("builtin '{}' returned NaN", self.name)));
+        }
+        Ok(score)
+    }
+
+    fn describe(&self) -> String {
+        format!("builtin:{}", self.name)
+    }
+}
+
+/// Closure executor (PJRT trainer, tests).
+pub struct FnExecutor {
+    pub name: String,
+    #[allow(clippy::type_complexity)]
+    pub f: Box<dyn Fn(&BasicConfig, &JobEnv) -> Result<f64> + Send + Sync>,
+}
+
+impl FnExecutor {
+    pub fn new(
+        name: &str,
+        f: impl Fn(&BasicConfig, &JobEnv) -> Result<f64> + Send + Sync + 'static,
+    ) -> FnExecutor {
+        FnExecutor { name: name.to_string(), f: Box::new(f) }
+    }
+}
+
+impl Executor for FnExecutor {
+    fn execute(&self, config: &BasicConfig, env: &JobEnv) -> Result<f64> {
+        (self.f)(config, env)
+    }
+
+    fn describe(&self) -> String {
+        format!("fn:{}", self.name)
+    }
+}
+
+/// Subprocess script executor implementing the paper's standard-IO
+/// protocol.
+pub struct ScriptExecutor {
+    pub script: PathBuf,
+    /// directory for generated BasicConfig files (paper: "This generated
+    /// JSON file will be passed to the code automatically")
+    pub workdir: PathBuf,
+    counter: AtomicU64,
+}
+
+impl ScriptExecutor {
+    pub fn new(script: impl Into<PathBuf>, workdir: impl Into<PathBuf>) -> ScriptExecutor {
+        ScriptExecutor {
+            script: script.into(),
+            workdir: workdir.into(),
+            counter: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Parse the job's stdout for the reported score.
+///
+/// Accepted forms (last matching line wins):
+/// * the paper's `print_result`: a line `result: <float>[, extra...]` —
+///   anything after a comma is "additional information ... passed to
+///   Proposer as an arbitrary string" (§III-B2);
+/// * a bare float on the last non-empty line (MATLAB/R users, §IV-C).
+pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
+    let mut fallback: Option<f64> = None;
+    let mut result: Option<(f64, Option<String>)> = None;
+    for line in stdout.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("result:") {
+            let rest = rest.trim();
+            let (num_part, extra) = match rest.split_once(',') {
+                Some((n, e)) => (n.trim(), Some(e.trim().to_string())),
+                None => (rest, None),
+            };
+            if let Ok(v) = num_part.parse::<f64>() {
+                result = Some((v, extra));
+            }
+        } else if let Ok(v) = line.parse::<f64>() {
+            fallback = Some(v);
+        }
+    }
+    result.or(fallback.map(|v| (v, None)))
+}
+
+impl Executor for ScriptExecutor {
+    fn execute(&self, config: &BasicConfig, env: &JobEnv) -> Result<f64> {
+        let job_id = config.job_id().unwrap_or_else(|| {
+            self.counter.fetch_add(1, Ordering::Relaxed)
+        });
+        std::fs::create_dir_all(&self.workdir)?;
+        let cfg_path = self.workdir.join(format!("job_{job_id}.json"));
+        config.save(&cfg_path)?;
+
+        let mut cmd = Command::new(&self.script);
+        cmd.arg(&cfg_path).current_dir(&self.workdir);
+        for (k, v) in &env.env {
+            cmd.env(k, v);
+        }
+        let out = cmd.output().map_err(|e| {
+            AupError::Job(format!("failed to spawn {}: {e}", self.script.display()))
+        })?;
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        if !out.status.success() {
+            let stderr = String::from_utf8_lossy(&out.stderr);
+            return Err(AupError::Job(format!(
+                "script exited with {}: {}",
+                out.status,
+                stderr.lines().last().unwrap_or("")
+            )));
+        }
+        match parse_result(&stdout) {
+            Some((score, _extra)) => Ok(score),
+            None => Err(AupError::Job(format!(
+                "script produced no result line (stdout: {:?})",
+                stdout.lines().last().unwrap_or("")
+            ))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("script:{}", self.script.display())
+    }
+}
+
+/// Build the executor named by experiment.json's `script` field.
+pub fn executor_from_script(script: &str, workdir: &std::path::Path) -> Result<Box<dyn Executor>> {
+    if let Some(name) = script.strip_prefix("builtin:") {
+        Ok(Box::new(BuiltinExecutor::by_name(name)?))
+    } else {
+        let path = PathBuf::from(script);
+        if !path.exists() {
+            return Err(AupError::Job(format!("script not found: {script}")));
+        }
+        Ok(Box::new(ScriptExecutor::new(path, workdir)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fsutil::temp_dir;
+    use std::os::unix::fs::PermissionsExt;
+
+    fn env() -> JobEnv {
+        JobEnv::default()
+    }
+
+    #[test]
+    fn parse_result_forms() {
+        assert_eq!(parse_result("result: 0.95"), Some((0.95, None)));
+        assert_eq!(
+            parse_result("epoch 1\nresult: 0.5, ckpt=/tmp/x"),
+            Some((0.5, Some("ckpt=/tmp/x".into())))
+        );
+        assert_eq!(parse_result("blah\n0.25\n"), Some((0.25, None)));
+        // last result line wins
+        assert_eq!(parse_result("result: 1\nresult: 2"), Some((2.0, None)));
+        assert_eq!(parse_result("no numbers here"), None);
+        assert_eq!(parse_result(""), None);
+    }
+
+    #[test]
+    fn builtin_executor_runs() {
+        let ex = BuiltinExecutor::by_name("rosenbrock").unwrap();
+        let mut c = BasicConfig::new();
+        c.set_num("x", 1.0).set_num("y", 1.0);
+        assert_eq!(ex.execute(&c, &env()).unwrap(), 0.0);
+        assert!(BuiltinExecutor::by_name("nope").is_err());
+    }
+
+    fn write_script(dir: &std::path::Path, name: &str, body: &str) -> PathBuf {
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        let mut perm = std::fs::metadata(&path).unwrap().permissions();
+        perm.set_mode(0o755);
+        std::fs::set_permissions(&path, perm).unwrap();
+        path
+    }
+
+    #[test]
+    fn script_executor_roundtrip_shell() {
+        // a paper-Code-3-style job in POSIX sh: reads the config file,
+        // computes from it, prints the result protocol line
+        let dir = temp_dir("aup-exec").unwrap();
+        let script = write_script(
+            &dir,
+            "job.sh",
+            "#!/bin/sh\n# x is in the json config; echo a fixed score + info\n\
+             grep -q '\"x\"' \"$1\" || exit 3\n\
+             echo \"training...\"\necho \"result: 0.125, node=$AUP_NODE\"\n",
+        );
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut c = BasicConfig::new();
+        c.set_num("x", 2.0).set_num("job_id", 0.0);
+        let mut e = env();
+        e.env.insert("AUP_NODE".into(), "alpha".into());
+        assert_eq!(ex.execute(&c, &e).unwrap(), 0.125);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn script_failure_reported() {
+        let dir = temp_dir("aup-exec-fail").unwrap();
+        let script = write_script(&dir, "bad.sh", "#!/bin/sh\necho oops >&2\nexit 2\n");
+        let ex = ScriptExecutor::new(&script, &dir);
+        let c = BasicConfig::new();
+        let err = ex.execute(&c, &env()).unwrap_err();
+        assert!(err.to_string().contains("oops"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn script_without_result_line_is_error() {
+        let dir = temp_dir("aup-exec-nores").unwrap();
+        let script = write_script(&dir, "silent.sh", "#!/bin/sh\necho done training\n");
+        let ex = ScriptExecutor::new(&script, &dir);
+        let c = BasicConfig::new();
+        assert!(ex.execute(&c, &env()).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn config_file_written_for_job() {
+        let dir = temp_dir("aup-exec-cfg").unwrap();
+        let script = write_script(
+            &dir,
+            "echo.sh",
+            "#!/bin/sh\ncat \"$1\"\necho\necho \"result: 1\"\n",
+        );
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut c = BasicConfig::new();
+        c.set_num("learning_rate", 0.01).set_num("job_id", 7.0);
+        ex.execute(&c, &env()).unwrap();
+        let saved = BasicConfig::load(&dir.join("job_7.json")).unwrap();
+        assert_eq!(saved, c);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn executor_from_script_dispatch() {
+        let dir = temp_dir("aup-exec-dispatch").unwrap();
+        assert!(executor_from_script("builtin:sphere", &dir).is_ok());
+        assert!(executor_from_script("/does/not/exist.py", &dir).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,138 @@
+//! Job object + the threaded runner implementing the paper's `run()` /
+//! `callback()` design (§III-B2): a Job wraps the user code execution on
+//! an allocated resource; when it finishes, a callback message flows
+//! back to the experiment loop, which invokes `proposer.update()`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::resource::executor::Executor;
+use crate::resource::ResourceHandle;
+use crate::search::BasicConfig;
+
+/// Environment a job runs with (resource env vars + perf factor for
+/// simulated resources).
+#[derive(Debug, Clone, Default)]
+pub struct JobEnv {
+    pub env: BTreeMap<String, String>,
+    pub perf_factor: f64,
+}
+
+impl JobEnv {
+    pub fn from_handle(h: &ResourceHandle) -> JobEnv {
+        JobEnv { env: h.env.clone(), perf_factor: h.perf_factor }
+    }
+}
+
+/// Completion message sent through the callback channel.
+#[derive(Debug)]
+pub struct JobDone {
+    pub job_id: u64,
+    pub config: BasicConfig,
+    pub handle: ResourceHandle,
+    /// Ok(score) or the failure that the tracker records
+    pub outcome: Result<f64, String>,
+    /// wall-clock seconds the job took
+    pub elapsed: f64,
+}
+
+/// Spawn a job on its own OS thread (jobs are subprocess- or PJRT-bound;
+/// one thread per in-flight job is exactly the paper's n_parallel
+/// model). The thread sends a [`JobDone`] on `tx` when the job ends —
+/// this is the `callback()` of Algorithm 1.
+pub fn spawn_job(
+    executor: Arc<dyn Executor>,
+    config: BasicConfig,
+    handle: ResourceHandle,
+    tx: Sender<JobDone>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let job_id = config.job_id().unwrap_or(u64::MAX);
+        let env = JobEnv::from_handle(&handle);
+        let start = std::time::Instant::now();
+        let outcome = executor
+            .execute(&config, &env)
+            .map_err(|e| e.to_string());
+        let done = JobDone {
+            job_id,
+            config,
+            handle,
+            outcome,
+            elapsed: start.elapsed().as_secs_f64(),
+        };
+        // receiver gone => experiment aborted; nothing to do
+        let _ = tx.send(done);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::executor::FnExecutor;
+    use std::sync::mpsc::channel;
+
+    fn handle(rid: i64) -> ResourceHandle {
+        ResourceHandle {
+            rid,
+            label: format!("cpu:{rid}"),
+            env: BTreeMap::new(),
+            perf_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn job_callback_delivers_score() {
+        let ex: Arc<dyn Executor> = Arc::new(FnExecutor::new("double", |c, _| {
+            Ok(c.get_num("x").unwrap() * 2.0)
+        }));
+        let (tx, rx) = channel();
+        let mut c = BasicConfig::new();
+        c.set_num("x", 21.0).set_num("job_id", 5.0);
+        let t = spawn_job(ex, c, handle(0), tx);
+        let done = rx.recv().unwrap();
+        t.join().unwrap();
+        assert_eq!(done.job_id, 5);
+        assert_eq!(done.outcome.unwrap(), 42.0);
+        assert_eq!(done.handle.rid, 0);
+        assert!(done.elapsed >= 0.0);
+    }
+
+    #[test]
+    fn job_failure_propagates() {
+        let ex: Arc<dyn Executor> = Arc::new(FnExecutor::new("fail", |_, _| {
+            Err(crate::util::error::AupError::Job("boom".into()))
+        }));
+        let (tx, rx) = channel();
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        spawn_job(ex, c, handle(1), tx).join().unwrap();
+        let done = rx.recv().unwrap();
+        assert!(done.outcome.unwrap_err().contains("boom"));
+    }
+
+    #[test]
+    fn concurrent_jobs_all_report() {
+        let ex: Arc<dyn Executor> = Arc::new(FnExecutor::new("sleepy", |c, _| {
+            std::thread::sleep(std::time::Duration::from_millis(
+                (c.get_num("ms").unwrap_or(1.0)) as u64,
+            ));
+            Ok(c.job_id().unwrap() as f64)
+        }));
+        let (tx, rx) = channel();
+        let mut threads = Vec::new();
+        for i in 0..8u64 {
+            let mut c = BasicConfig::new();
+            c.set_num("job_id", i as f64).set_num("ms", (8 - i) as f64 * 3.0);
+            threads.push(spawn_job(ex.clone(), c, handle(i as i64), tx.clone()));
+        }
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|d| d.job_id).collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        ids.sort();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,68 @@
+//! Local CPU resource manager: N slots on this machine.
+
+use std::collections::BTreeMap;
+
+use crate::resource::{ResourceHandle, ResourceManager};
+
+pub struct CpuManager {
+    free: Vec<i64>,
+    capacity: usize,
+}
+
+impl CpuManager {
+    pub fn new(n: usize) -> CpuManager {
+        assert!(n > 0, "need at least one CPU slot");
+        CpuManager { free: (0..n as i64).rev().collect(), capacity: n }
+    }
+}
+
+impl ResourceManager for CpuManager {
+    fn get_available(&mut self) -> Option<ResourceHandle> {
+        self.free.pop().map(|rid| ResourceHandle {
+            rid,
+            label: format!("cpu:{rid}"),
+            env: BTreeMap::new(),
+            perf_factor: 1.0,
+        })
+    }
+
+    fn release(&mut self, handle: &ResourceHandle) {
+        debug_assert!(!self.free.contains(&handle.rid), "double release");
+        self.free.push(handle.rid);
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    fn kind(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_exhaust_and_return() {
+        let mut m = CpuManager::new(2);
+        let a = m.get_available().unwrap();
+        let _b = m.get_available().unwrap();
+        assert!(m.get_available().is_none());
+        m.release(&a);
+        assert!(m.get_available().is_some());
+    }
+
+    #[test]
+    fn labels_stable() {
+        let mut m = CpuManager::new(1);
+        let a = m.get_available().unwrap();
+        assert_eq!(a.label, "cpu:0");
+        assert_eq!(a.perf_factor, 1.0);
+    }
+}

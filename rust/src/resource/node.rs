@@ -1,0 +1,77 @@
+//! Multi-node resource manager. In the original Auptimizer, jobs are
+//! dispatched to remote machines over SSH; this environment is a single
+//! machine, so execution stays local while the *scheduling* (named node
+//! pool, one job per node, node identity visible to the job as
+//! `AUP_NODE`) is fully implemented — the substitution documented in
+//! DESIGN.md §3.
+
+use std::collections::BTreeMap;
+
+use crate::resource::{ResourceHandle, ResourceManager};
+
+pub struct NodeManager {
+    names: Vec<String>,
+    free: Vec<usize>,
+}
+
+impl NodeManager {
+    pub fn new(names: Vec<String>) -> NodeManager {
+        assert!(!names.is_empty(), "need at least one node");
+        let free = (0..names.len()).rev().collect();
+        NodeManager { names, free }
+    }
+}
+
+impl ResourceManager for NodeManager {
+    fn get_available(&mut self) -> Option<ResourceHandle> {
+        self.free.pop().map(|i| {
+            let mut env = BTreeMap::new();
+            env.insert("AUP_NODE".to_string(), self.names[i].clone());
+            ResourceHandle {
+                rid: i as i64,
+                label: format!("node:{}", self.names[i]),
+                env,
+                perf_factor: 1.0,
+            }
+        })
+    }
+
+    fn release(&mut self, handle: &ResourceHandle) {
+        debug_assert!(!self.free.contains(&(handle.rid as usize)), "double release");
+        self.free.push(handle.rid as usize);
+    }
+
+    fn capacity(&self) -> usize {
+        self.names.len()
+    }
+
+    fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    fn kind(&self) -> &'static str {
+        "node"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_identity_in_env() {
+        let mut m = NodeManager::new(vec!["alpha".into(), "beta".into()]);
+        let h = m.get_available().unwrap();
+        assert_eq!(h.env.get("AUP_NODE").unwrap(), "alpha");
+        assert_eq!(h.label, "node:alpha");
+    }
+
+    #[test]
+    fn pool_exhausts() {
+        let mut m = NodeManager::new(vec!["a".into()]);
+        let h = m.get_available().unwrap();
+        assert!(m.get_available().is_none());
+        m.release(&h);
+        assert_eq!(m.free_count(), 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO *text*
+//! artifacts, compile once, execute many times. See
+//! /opt/xla-example/load_hlo for the reference wiring and the
+//! HLO-text-vs-proto gotcha (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos; text round-trips).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{AupError, Result};
+
+fn xe(e: xla::Error) -> AupError {
+    AupError::Runtime(e.to_string())
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32/i32/u32 literal inputs; returns the elements of
+    /// the result tuple as literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(xe)?;
+        // aot.py lowers with return_tuple=True: decompose the tuple
+        // (note: element_count()/shape helpers abort on tuple literals —
+        // decompose first)
+        let out = result[0][0].to_literal_sync().map_err(xe)?;
+        out.to_tuple().map_err(xe)
+    }
+}
+
+/// PJRT client + executable cache ("one compiled executable per model
+/// variant" — compiled once, reused across every job of the experiment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.into(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifacts_dir>/<name>.hlo.txt` (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let exe = self.compile_file(&path, name)?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an HLO text file without caching.
+    pub fn compile_file(&self, path: &Path, name: &str) -> Result<Executable> {
+        if !path.exists() {
+            return Err(AupError::Runtime(format!(
+                "artifact not found: {} (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| AupError::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xe)?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    /// f32 literal of the given shape.
+    pub fn lit_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(AupError::Runtime(format!(
+                "literal shape mismatch: {} elements vs dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims_i64).map_err(xe)
+    }
+
+    /// scalar f32 literal.
+    pub fn lit_scalar(&self, v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// u32 literal (PRNG keys / integer inputs).
+    pub fn lit_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims_i64).map_err(xe)
+    }
+
+    /// i32 literal.
+    pub fn lit_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data).reshape(&dims_i64).map_err(xe)
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xe)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boots() {
+        let rt = Runtime::new("artifacts").unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clear_error() {
+        let mut rt = Runtime::new("/nonexistent-dir").unwrap();
+        let e = match rt.load("nope") {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn literal_builders() {
+        let rt = Runtime::new("artifacts").unwrap();
+        let l = rt.lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(rt.lit_f32(&[1.0], &[2, 2]).is_err());
+        let u = rt.lit_u32(&[1, 2], &[2]).unwrap();
+        assert_eq!(u.element_count(), 2);
+    }
+}

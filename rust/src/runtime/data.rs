@@ -1,0 +1,220 @@
+//! Synthetic MNIST-like dataset, generated procedurally in Rust.
+//!
+//! The environment has no dataset downloads (DESIGN.md §3), so the §IV
+//! workload trains on 16×16 grayscale "digits": each class is a fixed
+//! stroke template rasterized with per-sample random translation, scale
+//! and pixel noise. The task is genuinely learnable (a linear model gets
+//! most of it; the CNN does better) and responds to
+//! capacity/lr/dropout/epochs the way HPO needs.
+
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const N_CLASSES: usize = 10;
+
+/// Stroke templates per digit on a 5x7 grid (1 = ink). Hand-drawn to be
+/// mutually distinguishable under shift/noise.
+const TEMPLATES: [[u8; 35]; 10] = [
+    // 0
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 1,0,0,0,1, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 1
+    [0,0,1,0,0, 0,1,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,1,1,1,0],
+    // 2
+    [0,1,1,1,0, 1,0,0,0,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 1,1,1,1,1],
+    // 3
+    [1,1,1,1,0, 0,0,0,0,1, 0,0,0,0,1, 0,1,1,1,0, 0,0,0,0,1, 0,0,0,0,1, 1,1,1,1,0],
+    // 4
+    [0,0,0,1,0, 0,0,1,1,0, 0,1,0,1,0, 1,0,0,1,0, 1,1,1,1,1, 0,0,0,1,0, 0,0,0,1,0],
+    // 5
+    [1,1,1,1,1, 1,0,0,0,0, 1,1,1,1,0, 0,0,0,0,1, 0,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 6
+    [0,0,1,1,0, 0,1,0,0,0, 1,0,0,0,0, 1,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 7
+    [1,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 0,1,0,0,0, 0,1,0,0,0],
+    // 8
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 9
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,1,1,0,0],
+];
+
+/// A dataset of flattened images + one-hot labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n × (IMG*IMG) row-major
+    pub images: Vec<f32>,
+    /// n class ids
+    pub labels: Vec<u8>,
+    pub n: usize,
+}
+
+/// Rasterize one digit with augmentation.
+fn render(class: usize, rng: &mut Rng) -> [f32; IMG * IMG] {
+    let mut img = [0f32; IMG * IMG];
+    let template = &TEMPLATES[class];
+    // random placement: template is 5x7, upscale ~2x into 16x16
+    let scale = 1.7 + rng.uniform() * 0.6; // 1.7..2.3
+    let off_x = 1.0 + rng.uniform() * (IMG as f64 - 5.0 * scale - 2.0).max(0.0);
+    let off_y = 1.0 + rng.uniform() * (IMG as f64 - 7.0 * scale - 2.0).max(0.0);
+    for ty in 0..7 {
+        for tx in 0..5 {
+            if template[ty * 5 + tx] == 0 {
+                continue;
+            }
+            // splat the scaled cell
+            let x0 = (off_x + tx as f64 * scale) as usize;
+            let y0 = (off_y + ty as f64 * scale) as usize;
+            let x1 = (off_x + (tx + 1) as f64 * scale).ceil() as usize;
+            let y1 = (off_y + (ty + 1) as f64 * scale).ceil() as usize;
+            for y in y0..y1.min(IMG) {
+                for x in x0..x1.min(IMG) {
+                    img[y * IMG + x] = 1.0;
+                }
+            }
+        }
+    }
+    // pixel noise + intensity jitter
+    let gain = 0.8 + 0.4 * rng.uniform() as f32;
+    for p in img.iter_mut() {
+        let noise = (rng.normal() * 0.08) as f32;
+        *p = (*p * gain + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Generate a balanced dataset of `n` samples (n rounded up to a
+/// multiple of 10), deterministically from `seed`.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let n = n.div_ceil(N_CLASSES) * N_CLASSES;
+    let mut images = Vec::with_capacity(n * IMG * IMG);
+    let mut labels = Vec::with_capacity(n);
+    // interleave classes then shuffle indices
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut tmp: Vec<(u8, [f32; IMG * IMG])> = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % N_CLASSES;
+        tmp.push((class as u8, render(class, &mut rng)));
+    }
+    for &i in &order {
+        labels.push(tmp[i].0);
+        images.extend_from_slice(&tmp[i].1);
+    }
+    Dataset { images, labels, n }
+}
+
+impl Dataset {
+    /// Batch `b` (of size `bs`) as (images slice, labels).
+    pub fn batch(&self, b: usize, bs: usize) -> (&[f32], &[u8]) {
+        let start = (b * bs) % self.n;
+        let end = (start + bs).min(self.n);
+        (
+            &self.images[start * IMG * IMG..end * IMG * IMG],
+            &self.labels[start..end],
+        )
+    }
+
+    pub fn n_batches(&self, bs: usize) -> usize {
+        self.n / bs
+    }
+}
+
+/// Nearest-centroid baseline accuracy — proves the dataset is learnable
+/// and bounds what the CNN should beat.
+pub fn centroid_accuracy(train: &Dataset, test: &Dataset) -> f64 {
+    let d = IMG * IMG;
+    let mut centroids = vec![0f64; N_CLASSES * d];
+    let mut counts = [0usize; N_CLASSES];
+    for i in 0..train.n {
+        let c = train.labels[i] as usize;
+        counts[c] += 1;
+        for j in 0..d {
+            centroids[c * d + j] += train.images[i * d + j] as f64;
+        }
+    }
+    for c in 0..N_CLASSES {
+        for j in 0..d {
+            centroids[c * d + j] /= counts[c].max(1) as f64;
+        }
+    }
+    let mut correct = 0;
+    for i in 0..test.n {
+        let img = &test.images[i * d..(i + 1) * d];
+        let mut best = (f64::INFINITY, 0usize);
+        for c in 0..N_CLASSES {
+            let dist: f64 = img
+                .iter()
+                .zip(&centroids[c * d..(c + 1) * d])
+                .map(|(a, b)| (*a as f64 - b) * (*a as f64 - b))
+                .sum();
+            if dist < best.0 {
+                best = (dist, c);
+            }
+        }
+        if best.1 == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = generate(100, 7);
+        let b = generate(100, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let mut counts = [0; N_CLASSES];
+        for &l in &a.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+        let c = generate(100, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn pixels_in_range() {
+        let d = generate(50, 1);
+        assert!(d.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // ink exists
+        assert!(d.images.iter().filter(|&&p| p > 0.5).count() > 50);
+    }
+
+    #[test]
+    fn batching() {
+        let d = generate(100, 2);
+        let (imgs, labels) = d.batch(0, 32);
+        assert_eq!(imgs.len(), 32 * IMG * IMG);
+        assert_eq!(labels.len(), 32);
+        assert_eq!(d.n_batches(32), 3);
+    }
+
+    #[test]
+    fn learnable_by_centroids() {
+        let train = generate(500, 3);
+        let test = generate(200, 4);
+        let acc = centroid_accuracy(&train, &test);
+        // 10 classes, chance = 0.1; templates must be quite separable
+        assert!(acc > 0.5, "centroid accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn classes_distinguishable_pairwise() {
+        // no two templates may be near-identical
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let diff: usize = TEMPLATES[a]
+                    .iter()
+                    .zip(&TEMPLATES[b])
+                    .filter(|(x, y)| x != y)
+                    .count();
+                assert!(diff >= 5, "templates {a} and {b} differ by only {diff}");
+            }
+        }
+    }
+}

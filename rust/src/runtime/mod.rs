@@ -1,0 +1,8 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (built by
+//! `python/compile/aot.py`) and executes them from the L3 hot path.
+//! Python never runs at request time — `make artifacts` is the only
+//! python invocation.
+
+pub mod client;
+pub mod data;
+pub mod trainer;

@@ -1,0 +1,523 @@
+//! The CNN trainer: executes the AOT artifacts (`init` / `train_step` /
+//! `eval`) as Auptimizer *jobs*, entirely from Rust — python never runs
+//! on this path.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (not `Send`), while jobs
+//! run on worker threads; the trainer is therefore an *actor*: one
+//! dedicated runtime thread owns the client + compiled executables and
+//! serves train-job requests over a channel. [`TrainerHandle`] is the
+//! cheap, cloneable, `Send + Sync` face used by the job executor.
+//!
+//! Hyperband/EAS checkpoint resume (paper §III-A1: job_id "to resume
+//! training when necessary") is implemented with an in-actor checkpoint
+//! map: finished jobs park their state under their job id; a config
+//! carrying `prev_job_id` warm-starts from that state — masking makes
+//! the state layout width-independent, so EAS's widened children reuse
+//! weights exactly as the paper describes.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::resource::executor::FnExecutor;
+use crate::runtime::client::{to_vec_f32, Runtime};
+use crate::runtime::data::{self, Dataset};
+use crate::search::BasicConfig;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+/// Artifact metadata written by aot.py.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub state_len: usize,
+    pub batch: usize,
+    pub img: usize,
+}
+
+impl Meta {
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<Meta> {
+        let text = crate::util::fsutil::read_to_string(&artifacts_dir.join("meta.json"))?;
+        let j = Json::parse(&text)?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_i64)
+                .map(|v| v as usize)
+                .ok_or_else(|| AupError::Runtime(format!("meta.json missing '{k}'")))
+        };
+        Ok(Meta { state_len: get("state_len")?, batch: get("batch")?, img: get("img")? })
+    }
+}
+
+/// Per-epoch record returned alongside the final score.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_error: f64,
+}
+
+/// Full result of one training job.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// final test error rate in [0, 1] — the score reported to the HPO
+    pub test_error: f64,
+    pub curve: Vec<EpochStat>,
+    pub steps: usize,
+}
+
+enum Request {
+    Train {
+        config: BasicConfig,
+        want_curve: bool,
+        reply: Sender<Result<TrainOutcome>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the trainer actor. The sender is
+/// guarded by a mutex because `Sender` is `Send` but not `Sync`.
+#[derive(Clone)]
+pub struct TrainerHandle {
+    tx: Arc<Mutex<Sender<Request>>>,
+}
+
+impl TrainerHandle {
+    /// Run a full training job for `config`; returns the outcome.
+    pub fn train(&self, config: &BasicConfig, want_curve: bool) -> Result<TrainOutcome> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let tx = self
+                .tx
+                .lock()
+                .map_err(|_| AupError::Runtime("trainer handle poisoned".into()))?;
+            tx.send(Request::Train { config: config.clone(), want_curve, reply: reply_tx })
+                .map_err(|_| AupError::Runtime("trainer actor gone".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| AupError::Runtime("trainer actor dropped the reply".into()))?
+    }
+
+    /// Wrap this handle as a job [`FnExecutor`] scoring by test error.
+    pub fn as_executor(&self) -> Arc<FnExecutor> {
+        let h = self.clone();
+        Arc::new(FnExecutor::new("pjrt-cnn", move |config, _env| {
+            Ok(h.train(config, false)?.test_error)
+        }))
+    }
+}
+
+/// Trainer configuration (dataset sizes kept small: 1 CPU).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifacts_dir: PathBuf,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub data_seed: u64,
+    /// default epochs when a config has no n_iterations
+    pub default_epochs: usize,
+    /// directory for on-disk model checkpoints (paper §III-A2 footnote:
+    /// auxiliary values "such as to save and retrieve models for further
+    /// finetuning"). Jobs opt in with `"save_model": 1`; a later job may
+    /// restore with `"restore_model": <job_id>`. None disables disk IO.
+    pub model_dir: Option<PathBuf>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            train_size: 640,
+            test_size: 320,
+            data_seed: 7,
+            default_epochs: 3,
+            model_dir: None,
+        }
+    }
+}
+
+/// Spawn the trainer actor; returns its handle.
+pub fn spawn_trainer(cfg: TrainerConfig) -> Result<TrainerHandle> {
+    // fail fast on missing artifacts before spawning the thread
+    let meta = Meta::load(&cfg.artifacts_dir)?;
+    let (tx, rx) = channel::<Request>();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    std::thread::spawn(move || {
+        let mut actor = match Actor::new(cfg, meta) {
+            Ok(a) => {
+                let _ = ready_tx.send(Ok(()));
+                a
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Train { config, want_curve, reply } => {
+                    let _ = reply.send(actor.run_job(&config, want_curve));
+                }
+            }
+        }
+    });
+    ready_rx
+        .recv()
+        .map_err(|_| AupError::Runtime("trainer thread died during startup".into()))??;
+    Ok(TrainerHandle { tx: Arc::new(Mutex::new(tx)) })
+}
+
+struct Actor {
+    rt: Runtime,
+    meta: Meta,
+    train: Dataset,
+    test: Dataset,
+    default_epochs: usize,
+    model_dir: Option<PathBuf>,
+    /// job_id -> final state (checkpoints for resume), bounded FIFO:
+    /// each state is ~3.4 MB, and Hyperband only ever resumes from the
+    /// previous rung, so old checkpoints age out safely
+    checkpoints: HashMap<u64, Vec<f32>>,
+    checkpoint_order: std::collections::VecDeque<u64>,
+    max_checkpoints: usize,
+}
+
+impl Actor {
+    fn new(cfg: TrainerConfig, meta: Meta) -> Result<Actor> {
+        let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+        // compile all three artifacts up front ("one compiled executable
+        // per model variant", reused by every job)
+        rt.load("init")?;
+        rt.load("train_step")?;
+        rt.load("eval")?;
+        Ok(Actor {
+            rt,
+            meta,
+            train: data::generate(cfg.train_size, cfg.data_seed),
+            test: data::generate(cfg.test_size, cfg.data_seed ^ 0xFF),
+            default_epochs: cfg.default_epochs,
+            model_dir: cfg.model_dir,
+            checkpoints: HashMap::new(),
+            checkpoint_order: std::collections::VecDeque::new(),
+            max_checkpoints: 256, // ~0.9 GB ceiling at 3.4 MB/state
+        })
+    }
+
+    fn model_path(&self, job_id: u64) -> Option<PathBuf> {
+        self.model_dir.as_ref().map(|d| d.join(format!("model_{job_id}.f32")))
+    }
+
+    /// Persist a state vector as raw little-endian f32 (simple, exact).
+    fn save_model(&self, job_id: u64, state: &[f32]) -> Result<()> {
+        let Some(path) = self.model_path(job_id) else { return Ok(()) };
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut bytes = Vec::with_capacity(state.len() * 4);
+        for v in state {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    fn load_model(&self, job_id: u64) -> Result<Vec<f32>> {
+        let path = self.model_path(job_id).ok_or_else(|| {
+            AupError::Runtime("restore_model requires a model_dir".into())
+        })?;
+        let bytes = std::fs::read(&path).map_err(|e| {
+            AupError::Runtime(format!("no saved model for job {job_id}: {e}"))
+        })?;
+        if bytes.len() != self.meta.state_len * 4 {
+            return Err(AupError::Runtime(format!(
+                "saved model size mismatch: {} bytes",
+                bytes.len()
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn store_checkpoint(&mut self, job_id: u64, state: Vec<f32>) {
+        if self.checkpoints.insert(job_id, state).is_none() {
+            self.checkpoint_order.push_back(job_id);
+        }
+        while self.checkpoint_order.len() > self.max_checkpoints {
+            if let Some(old) = self.checkpoint_order.pop_front() {
+                self.checkpoints.remove(&old);
+            }
+        }
+    }
+
+    fn batch_literals(&self, ds: &Dataset, b: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let bs = self.meta.batch;
+        let (imgs, labels) = ds.batch(b, bs);
+        let img_lit = self.rt.lit_f32(imgs, &[bs, self.meta.img * self.meta.img])?;
+        let lbl: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        let lbl_lit = self.rt.lit_i32(&lbl, &[bs])?;
+        Ok((img_lit, lbl_lit))
+    }
+
+    fn run_job(&mut self, config: &BasicConfig, want_curve: bool) -> Result<TrainOutcome> {
+        let conv1 = config.get_num("conv1").unwrap_or(32.0) as i32;
+        let conv2 = config.get_num("conv2").unwrap_or(64.0) as i32;
+        let fc1 = config.get_num("fc1").unwrap_or(256.0) as i32;
+        let lr = config.get_num("learning_rate").unwrap_or(1e-3) as f32;
+        let dropout = config.get_num("dropout").unwrap_or(0.1) as f32;
+        let epochs = config
+            .get_num("n_iterations")
+            .map(|e| e.max(1.0) as usize)
+            .unwrap_or(self.default_epochs);
+        let job_id = config.job_id().unwrap_or(0);
+
+        // initial state: resume from prev_job_id's checkpoint, or init.
+        // The state stays a PJRT literal across steps — copying the
+        // 3.4 MB state to a host Vec and back every step cost ~8% of
+        // step latency before this was removed (EXPERIMENTS.md §Perf).
+        let mut state_lit: xla::Literal = if let Some(restore) =
+            config.get_num("restore_model")
+        {
+            // finetune path: load a previously saved model from disk
+            let v = self.load_model(restore as u64)?;
+            self.rt.lit_f32(&v, &[self.meta.state_len])?
+        } else if let Some(ck) = config
+            .get_num("prev_job_id")
+            .and_then(|p| self.checkpoints.get(&(p as u64)))
+        {
+            self.rt.lit_f32(ck, &[self.meta.state_len])?
+        } else {
+            let init = self.rt.load("init")?;
+            let seed_lit = xla::Literal::scalar(job_id as u32 + 1);
+            let mut out = init.run(&[seed_lit])?;
+            out.remove(0)
+        };
+        if state_lit.element_count() != self.meta.state_len {
+            return Err(AupError::Runtime(format!(
+                "state length {} != meta {}",
+                state_lit.element_count(),
+                self.meta.state_len
+            )));
+        }
+
+        let train_exe = self.rt.load("train_step")?;
+        let eval_exe = self.rt.load("eval")?;
+        let n_batches = self.train.n_batches(self.meta.batch);
+        // batch literals are identical across epochs: build once per job
+        let batches: Vec<(xla::Literal, xla::Literal)> = (0..n_batches)
+            .map(|b| self.batch_literals(&self.train, b))
+            .collect::<Result<Vec<_>>>()?;
+        let mut curve = Vec::new();
+        let mut steps = 0usize;
+        let mut last_loss = f64::NAN;
+
+        for epoch in 0..epochs {
+            for (b, (imgs, lbls)) in batches.iter().enumerate() {
+                let key = (job_id as u32)
+                    .wrapping_mul(0x9E37)
+                    .wrapping_add((epoch * n_batches + b) as u32);
+                // move the state into the input array; recover the new
+                // state from the output tuple (no host round-trip)
+                let inputs = [
+                    state_lit,
+                    imgs.reshape(&[self.meta.batch as i64, (self.meta.img * self.meta.img) as i64])
+                        .map_err(|e| AupError::Runtime(e.to_string()))?,
+                    lbls.reshape(&[self.meta.batch as i64])
+                        .map_err(|e| AupError::Runtime(e.to_string()))?,
+                    xla::Literal::scalar(conv1),
+                    xla::Literal::scalar(conv2),
+                    xla::Literal::scalar(fc1),
+                    xla::Literal::scalar(lr),
+                    xla::Literal::scalar(dropout),
+                    xla::Literal::scalar(key),
+                ];
+                let mut out = train_exe.run(&inputs)?;
+                last_loss = to_vec_f32(&out[1])?[0] as f64;
+                state_lit = out.remove(0);
+                steps += 1;
+            }
+            if want_curve || epoch + 1 == epochs {
+                let (err, returned) = self.evaluate(&eval_exe, state_lit, conv1, conv2, fc1)?;
+                state_lit = returned;
+                curve.push(EpochStat { epoch, train_loss: last_loss, test_error: err });
+            }
+        }
+        let test_error = curve.last().map(|e| e.test_error).unwrap_or(1.0);
+        let final_state = to_vec_f32(&state_lit)?;
+        if config.get_num("save_model").is_some_and(|v| v != 0.0) {
+            self.save_model(job_id, &final_state)?;
+        }
+        self.store_checkpoint(job_id, final_state);
+        Ok(TrainOutcome { test_error, curve, steps })
+    }
+
+    /// Evaluate on the test set; returns (error rate, the state literal
+    /// handed back so the caller keeps ownership without a host copy).
+    fn evaluate(
+        &self,
+        eval_exe: &Arc<crate::runtime::client::Executable>,
+        state: xla::Literal,
+        conv1: i32,
+        conv2: i32,
+        fc1: i32,
+    ) -> Result<(f64, xla::Literal)> {
+        let n_batches = self.test.n_batches(self.meta.batch).max(1);
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        let mut state = state;
+        for b in 0..n_batches {
+            let (imgs, lbls) = self.batch_literals(&self.test, b)?;
+            let inputs = [
+                state,
+                imgs,
+                lbls,
+                xla::Literal::scalar(conv1),
+                xla::Literal::scalar(conv2),
+                xla::Literal::scalar(fc1),
+            ];
+            let out = eval_exe.run(&inputs)?;
+            correct += to_vec_f32(&out[0])?[0] as f64;
+            total += self.meta.batch as f64;
+            // recover the state literal from the input array
+            let [s, ..] = inputs;
+            state = s;
+        }
+        Ok((1.0 - correct / total, state))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_exist() -> bool {
+        std::path::Path::new("artifacts/meta.json").exists()
+    }
+
+    fn cfg() -> TrainerConfig {
+        TrainerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            train_size: 160,
+            test_size: 160,
+            data_seed: 3,
+            default_epochs: 1,
+            model_dir: None,
+        }
+    }
+
+    fn job(conv1: f64, conv2: f64, fc1: f64, lr: f64, epochs: f64, id: u64) -> BasicConfig {
+        let mut c = BasicConfig::new();
+        c.set_num("conv1", conv1)
+            .set_num("conv2", conv2)
+            .set_num("fc1", fc1)
+            .set_num("learning_rate", lr)
+            .set_num("dropout", 0.1)
+            .set_num("n_iterations", epochs)
+            .set_num("job_id", id as f64);
+        c
+    }
+
+    #[test]
+    fn trains_and_learns() {
+        if !artifacts_exist() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = spawn_trainer(cfg()).unwrap();
+        let out = h.train(&job(16.0, 32.0, 128.0, 3e-3, 3.0, 0), true).unwrap();
+        assert_eq!(out.curve.len(), 3);
+        // learnable: error should drop well below chance (0.9)
+        assert!(out.test_error < 0.7, "error {}", out.test_error);
+        assert_eq!(out.steps, 3 * (160 / 32));
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_training() {
+        if !artifacts_exist() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = spawn_trainer(cfg()).unwrap();
+        let first = h.train(&job(16.0, 32.0, 128.0, 3e-3, 2.0, 10), false).unwrap();
+        // resume under a new job id with prev_job_id = 10 (hyperband style)
+        let mut resumed = job(16.0, 32.0, 128.0, 3e-3, 2.0, 11);
+        resumed.set_num("prev_job_id", 10.0);
+        let second = h.train(&resumed, false).unwrap();
+        // fresh 2-epoch run for comparison
+        let fresh = h.train(&job(16.0, 32.0, 128.0, 3e-3, 2.0, 12), false).unwrap();
+        // resumed (4 effective epochs) should beat or match the fresh 2-epoch run
+        assert!(
+            second.test_error <= fresh.test_error + 0.05,
+            "resumed {} vs fresh {}",
+            second.test_error,
+            fresh.test_error
+        );
+        let _ = first;
+    }
+
+    #[test]
+    fn executor_integration() {
+        if !artifacts_exist() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = spawn_trainer(cfg()).unwrap();
+        let exec = h.as_executor();
+        let env = crate::resource::job::JobEnv::default();
+        let score = crate::resource::executor::Executor::execute(
+            &*exec,
+            &job(8.0, 8.0, 32.0, 1e-3, 1.0, 20),
+            &env,
+        )
+        .unwrap();
+        assert!((0.0..=1.0).contains(&score));
+    }
+
+    #[test]
+    fn save_and_restore_model_for_finetuning() {
+        if !artifacts_exist() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let dir = crate::util::fsutil::temp_dir("aup-models").unwrap();
+        let mut c = cfg();
+        c.model_dir = Some(dir.clone());
+        let h = spawn_trainer(c).unwrap();
+        // train + save under job 50
+        let mut train_job = job(16.0, 32.0, 128.0, 3e-3, 2.0, 50);
+        train_job.set_num("save_model", 1.0);
+        let first = h.train(&train_job, false).unwrap();
+        assert!(dir.join("model_50.f32").exists());
+        // finetune from disk under a NEW trainer (fresh actor, empty
+        // in-memory checkpoints) — the paper's "reuse for finetuning"
+        let mut c2 = cfg();
+        c2.model_dir = Some(dir.clone());
+        let h2 = spawn_trainer(c2).unwrap();
+        let mut ft = job(16.0, 32.0, 128.0, 1e-3, 1.0, 51);
+        ft.set_num("restore_model", 50.0);
+        let tuned = h2.train(&ft, false).unwrap();
+        assert!(
+            tuned.test_error <= first.test_error + 0.08,
+            "finetune {} vs base {}",
+            tuned.test_error,
+            first.test_error
+        );
+        // restoring a nonexistent model errors cleanly
+        let mut bad = job(16.0, 32.0, 128.0, 1e-3, 1.0, 52);
+        bad.set_num("restore_model", 999.0);
+        assert!(h2.train(&bad, false).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_friendly() {
+        let mut c = cfg();
+        c.artifacts_dir = PathBuf::from("/no/such/dir");
+        let e = match spawn_trainer(c) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(e.to_string().contains("meta.json") || e.to_string().contains("io error"));
+    }
+}

@@ -1,0 +1,661 @@
+//! Search-space definition and `BasicConfig`.
+//!
+//! * [`ParamSpec`] mirrors the paper's `parameter_config` entries
+//!   (Code 2): name, type (`float` / `int` / `choice`), range, and an
+//!   optional log-scale interval flag.
+//! * [`SearchSpace`] is the ordered set of parameters an experiment
+//!   explores, with encode/decode to the unit hypercube (used by the GP
+//!   and TPE proposers).
+//! * [`BasicConfig`] is the JSON job-configuration object (Code 1): the
+//!   hyperparameter values plus auxiliary keys like `job_id` and
+//!   `n_iterations`, saved to a file and passed to the job.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Parameter value — either numeric or categorical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Num(f64),
+    Str(String),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Num(n) => Some(*n),
+            ParamValue::Str(_) => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParamValue::Num(n) => Json::Num(*n),
+            ParamValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// Parameter type, as in the paper's `"type"` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamType {
+    Float,
+    Int,
+    Choice,
+}
+
+impl ParamType {
+    pub fn parse(s: &str) -> Result<ParamType> {
+        match s {
+            "float" => Ok(ParamType::Float),
+            "int" | "integer" => Ok(ParamType::Int),
+            "choice" | "categorical" => Ok(ParamType::Choice),
+            other => Err(AupError::SearchSpace(format!("unknown parameter type '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParamType::Float => "float",
+            ParamType::Int => "int",
+            ParamType::Choice => "choice",
+        }
+    }
+}
+
+/// One `parameter_config` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub ptype: ParamType,
+    /// [lo, hi] for float/int (inclusive).
+    pub range: (f64, f64),
+    /// Log-scale sampling/encoding (e.g. learning rates). float/int only.
+    pub log_scale: bool,
+    /// Values for choice parameters.
+    pub choices: Vec<ParamValue>,
+    /// Number of grid points for grid search (`"n": 3` in the paper's
+    /// grid configuration); defaults to 3 for numeric, #choices for choice.
+    pub n_grid: Option<usize>,
+}
+
+impl ParamSpec {
+    pub fn float(name: &str, lo: f64, hi: f64) -> ParamSpec {
+        ParamSpec {
+            name: name.to_string(),
+            ptype: ParamType::Float,
+            range: (lo, hi),
+            log_scale: false,
+            choices: vec![],
+            n_grid: None,
+        }
+    }
+
+    pub fn int(name: &str, lo: i64, hi: i64) -> ParamSpec {
+        ParamSpec {
+            name: name.to_string(),
+            ptype: ParamType::Int,
+            range: (lo as f64, hi as f64),
+            log_scale: false,
+            choices: vec![],
+            n_grid: None,
+        }
+    }
+
+    pub fn choice(name: &str, choices: Vec<ParamValue>) -> ParamSpec {
+        ParamSpec {
+            name: name.to_string(),
+            ptype: ParamType::Choice,
+            range: (0.0, 0.0),
+            log_scale: false,
+            choices,
+            n_grid: None,
+        }
+    }
+
+    pub fn with_log_scale(mut self) -> ParamSpec {
+        self.log_scale = true;
+        self
+    }
+
+    pub fn with_grid(mut self, n: usize) -> ParamSpec {
+        self.n_grid = Some(n);
+        self
+    }
+
+    /// Parse from the experiment.json representation, e.g.
+    /// `{"name": "x", "type": "float", "range": [-5, 10]}` or
+    /// `{"name": "opt", "type": "choice", "range": ["adam", "sgd"]}`.
+    pub fn from_json(j: &Json) -> Result<ParamSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::SearchSpace("parameter missing 'name'".into()))?
+            .to_string();
+        let ptype = ParamType::parse(
+            j.get("type")
+                .and_then(Json::as_str)
+                .ok_or_else(|| AupError::SearchSpace(format!("parameter '{name}' missing 'type'")))?,
+        )?;
+        let range = j
+            .get("range")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| AupError::SearchSpace(format!("parameter '{name}' missing 'range'")))?;
+        let log_scale = j.get("interval").and_then(Json::as_str) == Some("log")
+            || j.get("log_scale").and_then(Json::as_bool) == Some(true);
+        let n_grid = j.get("n").and_then(Json::as_i64).map(|n| n as usize);
+
+        let spec = match ptype {
+            ParamType::Choice => {
+                let choices = range
+                    .iter()
+                    .map(|v| match v {
+                        Json::Num(n) => Ok(ParamValue::Num(*n)),
+                        Json::Str(s) => Ok(ParamValue::Str(s.clone())),
+                        _ => Err(AupError::SearchSpace(format!(
+                            "parameter '{name}': choice values must be numbers or strings"
+                        ))),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if choices.is_empty() {
+                    return Err(AupError::SearchSpace(format!("parameter '{name}': empty choices")));
+                }
+                ParamSpec { name, ptype, range: (0.0, 0.0), log_scale: false, choices, n_grid }
+            }
+            _ => {
+                if range.len() != 2 {
+                    return Err(AupError::SearchSpace(format!(
+                        "parameter '{name}': numeric range must be [lo, hi]"
+                    )));
+                }
+                let lo = range[0].as_f64().ok_or_else(|| {
+                    AupError::SearchSpace(format!("parameter '{name}': non-numeric range"))
+                })?;
+                let hi = range[1].as_f64().ok_or_else(|| {
+                    AupError::SearchSpace(format!("parameter '{name}': non-numeric range"))
+                })?;
+                if !(lo < hi) {
+                    return Err(AupError::SearchSpace(format!(
+                        "parameter '{name}': range lo must be < hi ({lo} >= {hi})"
+                    )));
+                }
+                if log_scale && lo <= 0.0 {
+                    return Err(AupError::SearchSpace(format!(
+                        "parameter '{name}': log interval needs lo > 0"
+                    )));
+                }
+                ParamSpec { name, ptype, range: (lo, hi), log_scale, choices: vec![], n_grid }
+            }
+        };
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("type", Json::str(self.ptype.name())),
+        ];
+        match self.ptype {
+            ParamType::Choice => pairs.push((
+                "range",
+                Json::arr(self.choices.iter().map(ParamValue::to_json).collect()),
+            )),
+            _ => pairs.push((
+                "range",
+                Json::arr(vec![Json::num(self.range.0), Json::num(self.range.1)]),
+            )),
+        }
+        if self.log_scale {
+            pairs.push(("interval", Json::str("log")));
+        }
+        if let Some(n) = self.n_grid {
+            pairs.push(("n", Json::int(n as i64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Sample uniformly (log-uniformly when flagged).
+    pub fn sample(&self, rng: &mut Rng) -> ParamValue {
+        match self.ptype {
+            ParamType::Float => {
+                let v = if self.log_scale {
+                    rng.log_uniform(self.range.0, self.range.1)
+                } else {
+                    rng.range(self.range.0, self.range.1)
+                };
+                ParamValue::Num(v)
+            }
+            ParamType::Int => {
+                let v = if self.log_scale {
+                    rng.log_uniform(self.range.0, self.range.1).round()
+                } else {
+                    rng.int_range(self.range.0 as i64, self.range.1 as i64) as f64
+                };
+                ParamValue::Num(v.clamp(self.range.0, self.range.1))
+            }
+            ParamType::Choice => rng.choice(&self.choices).clone(),
+        }
+    }
+
+    /// Encode a value to [0, 1] (choice -> index / (n-1), degenerate 0.5).
+    pub fn encode(&self, v: &ParamValue) -> f64 {
+        match self.ptype {
+            ParamType::Choice => {
+                let idx = self.choice_index(v).unwrap_or(0);
+                if self.choices.len() <= 1 {
+                    0.5
+                } else {
+                    idx as f64 / (self.choices.len() - 1) as f64
+                }
+            }
+            _ => {
+                let x = v.as_f64().unwrap_or(self.range.0);
+                let (lo, hi) = self.range;
+                let u = if self.log_scale {
+                    (x.max(lo).ln() - lo.ln()) / (hi.ln() - lo.ln())
+                } else {
+                    (x - lo) / (hi - lo)
+                };
+                u.clamp(0.0, 1.0)
+            }
+        }
+    }
+
+    /// Decode from [0, 1] back to a value.
+    pub fn decode(&self, u: f64) -> ParamValue {
+        let u = u.clamp(0.0, 1.0);
+        match self.ptype {
+            ParamType::Choice => {
+                let n = self.choices.len();
+                let idx = ((u * n as f64) as usize).min(n - 1);
+                self.choices[idx].clone()
+            }
+            ParamType::Float => {
+                let (lo, hi) = self.range;
+                let v = if self.log_scale {
+                    (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+                } else {
+                    lo + u * (hi - lo)
+                };
+                ParamValue::Num(v)
+            }
+            ParamType::Int => {
+                let (lo, hi) = self.range;
+                let v = if self.log_scale {
+                    (lo.ln() + u * (hi.ln() - lo.ln())).exp().round()
+                } else {
+                    (lo + u * (hi - lo)).round()
+                };
+                ParamValue::Num(v.clamp(lo, hi))
+            }
+        }
+    }
+
+    /// Grid points for grid search.
+    pub fn grid(&self) -> Vec<ParamValue> {
+        match self.ptype {
+            ParamType::Choice => self.choices.clone(),
+            _ => {
+                let n = self.n_grid.unwrap_or(3).max(1);
+                if n == 1 {
+                    return vec![self.decode(0.5)];
+                }
+                (0..n).map(|i| self.decode(i as f64 / (n - 1) as f64)).collect()
+            }
+        }
+    }
+
+    /// Whether `v` is a legal value of this parameter.
+    pub fn contains(&self, v: &ParamValue) -> bool {
+        match self.ptype {
+            ParamType::Choice => self.choice_index(v).is_some(),
+            ParamType::Float => v
+                .as_f64()
+                .is_some_and(|x| x >= self.range.0 - 1e-12 && x <= self.range.1 + 1e-12),
+            ParamType::Int => v.as_f64().is_some_and(|x| {
+                x.fract().abs() < 1e-9 && x >= self.range.0 - 1e-9 && x <= self.range.1 + 1e-9
+            }),
+        }
+    }
+
+    fn choice_index(&self, v: &ParamValue) -> Option<usize> {
+        self.choices.iter().position(|c| c == v)
+    }
+}
+
+/// Ordered set of parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    pub params: Vec<ParamSpec>,
+}
+
+impl SearchSpace {
+    pub fn new(params: Vec<ParamSpec>) -> Result<SearchSpace> {
+        let mut seen = std::collections::HashSet::new();
+        for p in &params {
+            if !seen.insert(p.name.clone()) {
+                return Err(AupError::SearchSpace(format!("duplicate parameter '{}'", p.name)));
+            }
+        }
+        if params.is_empty() {
+            return Err(AupError::SearchSpace("empty parameter_config".into()));
+        }
+        Ok(SearchSpace { params })
+    }
+
+    pub fn from_json(j: &Json) -> Result<SearchSpace> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| AupError::SearchSpace("parameter_config must be an array".into()))?;
+        SearchSpace::new(arr.iter().map(ParamSpec::from_json).collect::<Result<Vec<_>>>()?)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Sample a full config.
+    pub fn sample(&self, rng: &mut Rng) -> BasicConfig {
+        let mut c = BasicConfig::new();
+        for p in &self.params {
+            c.set(&p.name, p.sample(rng));
+        }
+        c
+    }
+
+    /// Encode a config into the unit hypercube (parameter order).
+    pub fn encode(&self, c: &BasicConfig) -> Vec<f64> {
+        self.params
+            .iter()
+            .map(|p| p.encode(c.get(&p.name).unwrap_or(&ParamValue::Num(p.range.0))))
+            .collect()
+    }
+
+    /// Decode a unit-hypercube point into a config.
+    pub fn decode(&self, u: &[f64]) -> BasicConfig {
+        assert_eq!(u.len(), self.dim());
+        let mut c = BasicConfig::new();
+        for (p, &ui) in self.params.iter().zip(u) {
+            c.set(&p.name, p.decode(ui));
+        }
+        c
+    }
+
+    /// Whether every declared parameter is present and in range.
+    pub fn contains(&self, c: &BasicConfig) -> bool {
+        self.params
+            .iter()
+            .all(|p| c.get(&p.name).is_some_and(|v| p.contains(v)))
+    }
+
+    /// Full cartesian grid (grid search).
+    pub fn full_grid(&self) -> Vec<BasicConfig> {
+        let axes: Vec<Vec<ParamValue>> = self.params.iter().map(|p| p.grid()).collect();
+        let mut out = vec![BasicConfig::new()];
+        for (p, axis) in self.params.iter().zip(&axes) {
+            let mut next = Vec::with_capacity(out.len() * axis.len());
+            for base in &out {
+                for v in axis {
+                    let mut c = base.clone();
+                    c.set(&p.name, v.clone());
+                    next.push(c);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+/// The job configuration object (paper Code 1): hyperparameter values
+/// plus auxiliary entries (`job_id`, `n_iterations`, ...). Serialized as
+/// a flat JSON object, written to a file and handed to the job.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BasicConfig {
+    pub values: BTreeMap<String, ParamValue>,
+}
+
+impl BasicConfig {
+    pub fn new() -> BasicConfig {
+        BasicConfig { values: BTreeMap::new() }
+    }
+
+    pub fn set(&mut self, key: &str, v: ParamValue) -> &mut Self {
+        self.values.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn set_num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.set(key, ParamValue::Num(v))
+    }
+
+    pub fn set_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.set(key, ParamValue::Str(v.to_string()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ParamValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(ParamValue::as_f64)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(ParamValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The auxiliary job id (paper: used by HYPERBAND to resume training).
+    pub fn job_id(&self) -> Option<u64> {
+        self.get_num("job_id").map(|v| v as u64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.values.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(j: &Json) -> Result<BasicConfig> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| AupError::SearchSpace("BasicConfig must be a JSON object".into()))?;
+        let mut c = BasicConfig::new();
+        for (k, v) in obj {
+            match v {
+                Json::Num(n) => c.set(k, ParamValue::Num(*n)),
+                Json::Str(s) => c.set(k, ParamValue::Str(s.clone())),
+                Json::Bool(b) => c.set_num(k, if *b { 1.0 } else { 0.0 }),
+                _ => {
+                    return Err(AupError::SearchSpace(format!(
+                        "BasicConfig value for '{k}' must be scalar"
+                    )))
+                }
+            };
+        }
+        Ok(c)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<BasicConfig> {
+        BasicConfig::from_json(&Json::parse(s)?)
+    }
+
+    /// `save()` in the paper's python API.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::fsutil::write_atomic(path, &self.to_json_string())
+    }
+
+    /// `load()` in the paper's python API.
+    pub fn load(path: &std::path::Path) -> Result<BasicConfig> {
+        BasicConfig::from_json_str(&crate::util::fsutil::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_space() -> SearchSpace {
+        // the §IV MNIST search space
+        SearchSpace::new(vec![
+            ParamSpec::int("conv1", 8, 32),
+            ParamSpec::int("conv2", 8, 64),
+            ParamSpec::int("fc1", 32, 256),
+            ParamSpec::float("dropout", 0.0, 0.8),
+            ParamSpec::float("learning_rate", 1e-4, 1e-1).with_log_scale(),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_code2_parameter_config() {
+        // paper Code 2 rosenbrock config
+        let j = Json::parse(
+            r#"[{"name": "x", "type": "float", "range": [-5, 10]},
+                {"name": "y", "type": "float", "range": [-5, 10]}]"#,
+        )
+        .unwrap();
+        let ss = SearchSpace::from_json(&j).unwrap();
+        assert_eq!(ss.dim(), 2);
+        assert_eq!(ss.params[0].range, (-5.0, 10.0));
+    }
+
+    #[test]
+    fn sample_within_space() {
+        let ss = paper_space();
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let c = ss.sample(&mut rng);
+            assert!(ss.contains(&c), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ss = paper_space();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let c = ss.sample(&mut rng);
+            let u = ss.encode(&c);
+            assert!(u.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            let c2 = ss.decode(&u);
+            // ints roundtrip exactly; floats to tolerance
+            for p in &ss.params {
+                let a = c.get_num(&p.name).unwrap();
+                let b = c2.get_num(&p.name).unwrap();
+                let tol = if p.log_scale { a.abs() * 1e-9 + 1e-12 } else { 1e-9 };
+                assert!((a - b).abs() <= tol.max(1e-9), "{}: {a} vs {b}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn log_scale_sampling_spreads_orders_of_magnitude() {
+        let p = ParamSpec::float("lr", 1e-4, 1e-1).with_log_scale();
+        let mut rng = Rng::new(2);
+        let mut small = 0;
+        for _ in 0..2000 {
+            if p.sample(&mut rng).as_f64().unwrap() < 1e-3 {
+                small += 1;
+            }
+        }
+        // log-uniform: P(< 1e-3) = 1/3; linear-uniform would give ~0.9%
+        assert!((small as f64 / 2000.0 - 1.0 / 3.0).abs() < 0.05, "{small}");
+    }
+
+    #[test]
+    fn grid_matches_paper_162() {
+        // §IV-D: 3 values/hp for 4 hps, lr from {1e-3, 1e-2} -> 3^4 * 2 = 162
+        let ss = SearchSpace::new(vec![
+            ParamSpec::int("conv1", 8, 32).with_grid(3),
+            ParamSpec::int("conv2", 8, 64).with_grid(3),
+            ParamSpec::int("fc1", 32, 256).with_grid(3),
+            ParamSpec::float("dropout", 0.0, 0.8).with_grid(3),
+            ParamSpec::choice(
+                "learning_rate",
+                vec![ParamValue::Num(0.001), ParamValue::Num(0.01)],
+            ),
+        ])
+        .unwrap();
+        let grid = ss.full_grid();
+        assert_eq!(grid.len(), 162);
+        // all distinct
+        let set: std::collections::HashSet<String> =
+            grid.iter().map(|c| c.to_json_string()).collect();
+        assert_eq!(set.len(), 162);
+        assert!(grid.iter().all(|c| ss.contains(c)));
+    }
+
+    #[test]
+    fn basicconfig_json_roundtrip_code1() {
+        let c = BasicConfig::from_json_str(r#"{"x": -5.0, "y": 5.0, "job_id": 0}"#).unwrap();
+        assert_eq!(c.get_num("x"), Some(-5.0));
+        assert_eq!(c.job_id(), Some(0));
+        let c2 = BasicConfig::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn basicconfig_save_load() {
+        let dir = crate::util::fsutil::temp_dir("aup-bc").unwrap();
+        let p = dir.join("job0.json");
+        let mut c = BasicConfig::new();
+        c.set_num("x", 1.5).set_str("opt", "adam");
+        c.save(&p).unwrap();
+        assert_eq!(BasicConfig::load(&p).unwrap(), c);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ParamSpec::from_json(&Json::parse(r#"{"name":"x","type":"float","range":[5,1]}"#).unwrap()).is_err());
+        assert!(ParamSpec::from_json(&Json::parse(r#"{"name":"x","type":"wat","range":[0,1]}"#).unwrap()).is_err());
+        assert!(ParamSpec::from_json(&Json::parse(r#"{"name":"lr","type":"float","range":[0,1],"interval":"log"}"#).unwrap()).is_err());
+        assert!(SearchSpace::new(vec![ParamSpec::float("a", 0.0, 1.0), ParamSpec::float("a", 0.0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn choice_encode_decode() {
+        let p = ParamSpec::choice(
+            "opt",
+            vec![
+                ParamValue::Str("sgd".into()),
+                ParamValue::Str("adam".into()),
+                ParamValue::Str("rmsprop".into()),
+            ],
+        );
+        for (i, c) in p.choices.clone().iter().enumerate() {
+            let u = p.encode(c);
+            assert_eq!(&p.decode(u), c, "choice {i}");
+        }
+    }
+
+    #[test]
+    fn prop_decode_always_in_space() {
+        let ss = paper_space();
+        crate::util::prop::check_default(
+            "decode stays in space",
+            |r| (0..5).map(|_| r.uniform()).collect::<Vec<f64>>(),
+            |u| {
+                let c = ss.decode(u);
+                if ss.contains(&c) {
+                    Ok(())
+                } else {
+                    Err(format!("decoded config out of space: {c:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,454 @@
+//! Experiment tracking store (the paper's §III-C).
+//!
+//! The original Auptimizer tracks users, resources, experiments and jobs
+//! in SQLite (Fig. 2). SQLite is not available offline, so this module
+//! implements an embedded relational store with the same semantics:
+//!
+//! * typed tables with primary keys ([`table`]),
+//! * a mini-SQL dialect for queries ([`sql`]) — `CREATE TABLE`, `INSERT`,
+//!   `SELECT … WHERE … ORDER BY … LIMIT`, `UPDATE`, `DELETE`,
+//! * durability via a JSON-lines write-ahead log + snapshot ([`wal`]),
+//! * the Auptimizer schema itself ([`schema`]).
+//!
+//! The store is `Send` and wrapped in a mutex by the experiment loop; at
+//! HPO scale (thousands of rows) full scans are instant, so there are no
+//! secondary indexes.
+
+pub mod value;
+pub mod table;
+pub mod sql;
+pub mod wal;
+pub mod schema;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+pub use schema::{ExperimentRow, JobRow, JobStatus, ResourceRow, ResourceStatus};
+pub use table::{Row, Table, TableSchema};
+pub use value::{ColType, Value};
+
+/// Embedded relational store: named tables + optional durability.
+pub struct Store {
+    tables: BTreeMap<String, Table>,
+    wal: Option<wal::Wal>,
+}
+
+impl Store {
+    /// Fresh in-memory store.
+    pub fn in_memory() -> Store {
+        Store { tables: BTreeMap::new(), wal: None }
+    }
+
+    /// Open (or create) a durable store rooted at `dir`. Replays snapshot
+    /// + WAL on open.
+    pub fn open(dir: &Path) -> Result<Store> {
+        let mut store = Store::in_memory();
+        let wal = wal::Wal::open(dir)?;
+        for record in wal.replay()? {
+            store.apply(&record, false)?;
+        }
+        store.wal = Some(wal);
+        Ok(store)
+    }
+
+    pub fn path(&self) -> Option<PathBuf> {
+        self.wal.as_ref().map(|w| w.dir().to_path_buf())
+    }
+
+    /// Execute a mini-SQL statement.
+    pub fn execute(&mut self, sql_text: &str) -> Result<QueryResult> {
+        let stmt = sql::parse(sql_text)?;
+        self.execute_stmt(stmt)
+    }
+
+    fn execute_stmt(&mut self, stmt: sql::Stmt) -> Result<QueryResult> {
+        match stmt {
+            sql::Stmt::Create { ref name, ref schema } => {
+                let record = wal::Record::Create { table: name.clone(), schema: schema.clone() };
+                self.apply(&record, true)?;
+                Ok(QueryResult::Unit)
+            }
+            sql::Stmt::Insert { ref table, ref row } => {
+                let record = wal::Record::Insert { table: table.clone(), row: row.clone() };
+                self.apply(&record, true)?;
+                Ok(QueryResult::Unit)
+            }
+            sql::Stmt::Select { table, cols, filter, order_by, desc, limit } => {
+                let t = self.table(&table)?;
+                let mut rows: Vec<Row> = t
+                    .rows()
+                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(t.schema(), r)))
+                    .cloned()
+                    .collect();
+                if let Some(key) = &order_by {
+                    let idx = t.schema().col_index(key).ok_or_else(|| {
+                        AupError::Store(format!("unknown ORDER BY column '{key}'"))
+                    })?;
+                    rows.sort_by(|a, b| {
+                        a.values[idx]
+                            .partial_cmp(&b.values[idx])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    if desc {
+                        rows.reverse();
+                    }
+                }
+                if let Some(n) = limit {
+                    rows.truncate(n);
+                }
+                // project columns
+                let schema = t.schema().clone();
+                let (names, projected) = project(&schema, &cols, rows)?;
+                Ok(QueryResult::Rows { cols: names, rows: projected })
+            }
+            sql::Stmt::Update { ref table, ref sets, ref filter } => {
+                // compute affected keys first (borrowck), then apply via WAL
+                let t = self.table(table)?;
+                let schema = t.schema().clone();
+                let keys: Vec<Value> = t
+                    .rows()
+                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(&schema, r)))
+                    .map(|r| r.values[schema.pk_index].clone())
+                    .collect();
+                let n = keys.len();
+                for key in keys {
+                    let record = wal::Record::Update {
+                        table: table.clone(),
+                        key,
+                        sets: sets.clone(),
+                    };
+                    self.apply(&record, true)?;
+                }
+                Ok(QueryResult::Affected(n))
+            }
+            sql::Stmt::Delete { ref table, ref filter } => {
+                let t = self.table(table)?;
+                let schema = t.schema().clone();
+                let keys: Vec<Value> = t
+                    .rows()
+                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(&schema, r)))
+                    .map(|r| r.values[schema.pk_index].clone())
+                    .collect();
+                let n = keys.len();
+                for key in keys {
+                    let record = wal::Record::Delete { table: table.clone(), key };
+                    self.apply(&record, true)?;
+                }
+                Ok(QueryResult::Affected(n))
+            }
+        }
+    }
+
+    /// Apply a mutation record, optionally journaling it first.
+    fn apply(&mut self, record: &wal::Record, journal: bool) -> Result<()> {
+        // validate & stage
+        match record {
+            wal::Record::Create { table, schema } => {
+                if self.tables.contains_key(table) {
+                    return Err(AupError::Store(format!("table '{table}' already exists")));
+                }
+                if journal {
+                    self.journal(record)?;
+                }
+                self.tables.insert(table.clone(), Table::new(schema.clone()));
+            }
+            wal::Record::Insert { table, row } => {
+                let t = self.table_mut(table)?;
+                t.validate_insert(row)?;
+                if journal {
+                    self.journal(record)?;
+                }
+                self.table_mut(table)?.insert(row.clone())?;
+            }
+            wal::Record::Update { table, key, sets } => {
+                let t = self.table_mut(table)?;
+                t.validate_update(key, sets)?;
+                if journal {
+                    self.journal(record)?;
+                }
+                self.table_mut(table)?.update(key, sets)?;
+            }
+            wal::Record::Delete { table, key } => {
+                if journal {
+                    self.journal(record)?;
+                }
+                self.table_mut(table)?.delete(key)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn journal(&mut self, record: &wal::Record) -> Result<()> {
+        if let Some(w) = &mut self.wal {
+            w.append(record)?;
+        }
+        Ok(())
+    }
+
+    /// Compact the WAL into a snapshot (durable stores only).
+    pub fn checkpoint(&mut self) -> Result<()> {
+        if let Some(w) = &mut self.wal {
+            let snapshot = wal::snapshot_records(&self.tables);
+            w.checkpoint(&snapshot)?;
+        }
+        Ok(())
+    }
+
+    pub fn table(&self, name: &str) -> Result<&Table> {
+        self.tables
+            .get(name)
+            .ok_or_else(|| AupError::Store(format!("no such table '{name}'")))
+    }
+
+    fn table_mut(&mut self, name: &str) -> Result<&mut Table> {
+        self.tables
+            .get_mut(name)
+            .ok_or_else(|| AupError::Store(format!("no such table '{name}'")))
+    }
+
+    pub fn has_table(&self, name: &str) -> bool {
+        self.tables.contains_key(name)
+    }
+
+    pub fn table_names(&self) -> Vec<&str> {
+        self.tables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn project(
+    schema: &TableSchema,
+    cols: &sql::Projection,
+    rows: Vec<Row>,
+) -> Result<(Vec<String>, Vec<Vec<Value>>)> {
+    match cols {
+        sql::Projection::All => Ok((
+            schema.cols.iter().map(|c| c.name.clone()).collect(),
+            rows.into_iter().map(|r| r.values).collect(),
+        )),
+        sql::Projection::Cols(names) => {
+            let idx: Vec<usize> = names
+                .iter()
+                .map(|n| {
+                    schema
+                        .col_index(n)
+                        .ok_or_else(|| AupError::Store(format!("unknown column '{n}'")))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok((
+                names.clone(),
+                rows.into_iter()
+                    .map(|r| idx.iter().map(|&i| r.values[i].clone()).collect())
+                    .collect(),
+            ))
+        }
+        sql::Projection::Count => Ok((
+            vec!["count".to_string()],
+            vec![vec![Value::Int(rows.len() as i64)]],
+        )),
+    }
+}
+
+/// Result of [`Store::execute`].
+#[derive(Debug, PartialEq)]
+pub enum QueryResult {
+    Unit,
+    Affected(usize),
+    Rows { cols: Vec<String>, rows: Vec<Vec<Value>> },
+}
+
+impl QueryResult {
+    pub fn rows(&self) -> &[Vec<Value>] {
+        match self {
+            QueryResult::Rows { rows, .. } => rows,
+            _ => &[],
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        match self {
+            QueryResult::Rows { rows, .. } => rows.len(),
+            QueryResult::Affected(n) => *n,
+            QueryResult::Unit => 0,
+        }
+    }
+
+    /// Single-value convenience for `SELECT COUNT(*)` etc.
+    pub fn scalar(&self) -> Option<&Value> {
+        self.rows().first().and_then(|r| r.first())
+    }
+
+    /// Render rows as a JSON array of objects (used by `aup viz`/export).
+    pub fn to_json(&self) -> Json {
+        match self {
+            QueryResult::Rows { cols, rows } => Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::Obj(
+                            cols.iter()
+                                .zip(r)
+                                .map(|(c, v)| (c.clone(), v.to_json()))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+            QueryResult::Affected(n) => Json::int(*n as i64),
+            QueryResult::Unit => Json::Null,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fsutil::temp_dir;
+
+    fn demo_store() -> Store {
+        let mut s = Store::in_memory();
+        s.execute("CREATE TABLE job (jid INT PRIMARY KEY, eid INT, score REAL, status TEXT)")
+            .unwrap();
+        for (jid, score, status) in
+            [(1, 0.9, "FINISHED"), (2, 0.7, "FINISHED"), (3, -1.0, "RUNNING")]
+        {
+            s.execute(&format!(
+                "INSERT INTO job (jid, eid, score, status) VALUES ({jid}, 1, {score}, '{status}')"
+            ))
+            .unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn select_where_order_limit() {
+        let mut s = demo_store();
+        let r = s
+            .execute("SELECT jid, score FROM job WHERE status = 'FINISHED' ORDER BY score DESC LIMIT 1")
+            .unwrap();
+        assert_eq!(r.rows(), &[vec![Value::Int(1), Value::Real(0.9)]]);
+    }
+
+    #[test]
+    fn count_star() {
+        let mut s = demo_store();
+        let r = s.execute("SELECT COUNT(*) FROM job WHERE eid = 1").unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(3)));
+    }
+
+    #[test]
+    fn update_and_delete() {
+        let mut s = demo_store();
+        let r = s
+            .execute("UPDATE job SET status = 'FINISHED', score = 0.5 WHERE jid = 3")
+            .unwrap();
+        assert_eq!(r, QueryResult::Affected(1));
+        let r = s.execute("SELECT score FROM job WHERE jid = 3").unwrap();
+        assert_eq!(r.rows()[0][0], Value::Real(0.5));
+        s.execute("DELETE FROM job WHERE score < 0.6").unwrap();
+        let r = s.execute("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn duplicate_pk_rejected() {
+        let mut s = demo_store();
+        let e = s.execute("INSERT INTO job (jid, eid, score, status) VALUES (1, 9, 0, 'x')");
+        assert!(e.is_err());
+        // and the failed insert must not have corrupted the table
+        let r = s.execute("SELECT eid FROM job WHERE jid = 1").unwrap();
+        assert_eq!(r.rows()[0][0], Value::Int(1));
+    }
+
+    #[test]
+    fn durable_roundtrip() {
+        let dir = temp_dir("aup-store").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            s.execute("CREATE TABLE t (id INT PRIMARY KEY, name TEXT)").unwrap();
+            s.execute("INSERT INTO t (id, name) VALUES (1, 'a')").unwrap();
+            s.execute("INSERT INTO t (id, name) VALUES (2, 'b')").unwrap();
+            s.execute("UPDATE t SET name = 'z' WHERE id = 2").unwrap();
+            s.execute("DELETE FROM t WHERE id = 1").unwrap();
+        }
+        {
+            let mut s = Store::open(&dir).unwrap();
+            let r = s.execute("SELECT id, name FROM t").unwrap();
+            assert_eq!(r.rows(), &[vec![Value::Int(2), Value::Text("z".into())]]);
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_then_reopen() {
+        let dir = temp_dir("aup-store-ckpt").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            s.execute("CREATE TABLE t (id INT PRIMARY KEY, v REAL)").unwrap();
+            for i in 0..20 {
+                s.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {})", i as f64 * 0.5))
+                    .unwrap();
+            }
+            s.checkpoint().unwrap();
+            s.execute("INSERT INTO t (id, v) VALUES (99, 1.5)").unwrap(); // post-checkpoint WAL entry
+        }
+        {
+            let mut s = Store::open(&dir).unwrap();
+            let r = s.execute("SELECT COUNT(*) FROM t").unwrap();
+            assert_eq!(r.scalar(), Some(&Value::Int(21)));
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn prop_wal_replay_equals_memory() {
+        // property: for random op sequences, replayed store == live store
+        use crate::util::prop;
+        prop::check(
+            "wal replay == in-memory state",
+            prop::PropConfig { cases: 20, seed: 11 },
+            |r| {
+                // generate a random op sequence
+                let mut ops = vec![];
+                for i in 0..r.below(30) + 1 {
+                    match r.below(3) {
+                        0 => ops.push((0u8, i as i64, r.range(0.0, 1.0))),
+                        1 => ops.push((1u8, r.below(30) as i64, r.range(0.0, 1.0))),
+                        _ => ops.push((2u8, r.below(30) as i64, 0.0)),
+                    }
+                }
+                ops
+            },
+            |ops| {
+                let dir = temp_dir("aup-prop-wal").map_err(|e| e.to_string())?;
+                let live_rows = {
+                    let mut s = Store::open(&dir).map_err(|e| e.to_string())?;
+                    s.execute("CREATE TABLE t (id INT PRIMARY KEY, v REAL)")
+                        .map_err(|e| e.to_string())?;
+                    for (op, id, v) in ops {
+                        let _ = match op {
+                            0 => s.execute(&format!("INSERT INTO t (id, v) VALUES ({id}, {v})")),
+                            1 => s.execute(&format!("UPDATE t SET v = {v} WHERE id = {id}")),
+                            _ => s.execute(&format!("DELETE FROM t WHERE id = {id}")),
+                        };
+                    }
+                    let r = s.execute("SELECT id, v FROM t ORDER BY id").map_err(|e| e.to_string())?;
+                    r.rows().to_vec()
+                };
+                let mut s = Store::open(&dir).map_err(|e| e.to_string())?;
+                let replayed = s
+                    .execute("SELECT id, v FROM t ORDER BY id")
+                    .map_err(|e| e.to_string())?
+                    .rows()
+                    .to_vec();
+                std::fs::remove_dir_all(&dir).ok();
+                if live_rows == replayed {
+                    Ok(())
+                } else {
+                    Err(format!("live {live_rows:?} != replayed {replayed:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,372 @@
+//! The Auptimizer tracking schema (paper Fig. 2): `user`, `resource`,
+//! `experiment`, `job` tables plus typed accessors used by the
+//! experiment loop and `aup viz`.
+
+use crate::store::value::Value;
+use crate::store::{QueryResult, Store};
+use crate::store::sql::quote;
+use crate::util::error::{AupError, Result};
+
+/// Job lifecycle states tracked in the `job` table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Pending,
+    Running,
+    Finished,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Pending => "PENDING",
+            JobStatus::Running => "RUNNING",
+            JobStatus::Finished => "FINISHED",
+            JobStatus::Failed => "FAILED",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        match s {
+            "PENDING" => Ok(JobStatus::Pending),
+            "RUNNING" => Ok(JobStatus::Running),
+            "FINISHED" => Ok(JobStatus::Finished),
+            "FAILED" => Ok(JobStatus::Failed),
+            other => Err(AupError::Store(format!("unknown job status '{other}'"))),
+        }
+    }
+}
+
+/// Resource states in the `resource` table (paper §III-B1: resources are
+/// taken by Auptimizer for job execution, then freed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceStatus {
+    Free,
+    Busy,
+    Offline,
+}
+
+impl ResourceStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResourceStatus::Free => "FREE",
+            ResourceStatus::Busy => "BUSY",
+            ResourceStatus::Offline => "OFFLINE",
+        }
+    }
+}
+
+/// Typed view of an `experiment` row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentRow {
+    pub eid: i64,
+    pub uid: i64,
+    pub proposer: String,
+    pub exp_config: String,
+    pub start_time: f64,
+    pub end_time: Option<f64>,
+    pub best_score: Option<f64>,
+}
+
+/// Typed view of a `job` row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRow {
+    pub jid: i64,
+    pub eid: i64,
+    pub rid: i64,
+    pub config: String,
+    pub status: JobStatus,
+    pub score: Option<f64>,
+    pub start_time: f64,
+    pub end_time: Option<f64>,
+}
+
+/// Typed view of a `resource` row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceRow {
+    pub rid: i64,
+    pub rtype: String,
+    pub name: String,
+    pub status: ResourceStatus,
+}
+
+/// Create the Fig-2 tables if missing.
+pub fn init_schema(store: &mut Store) -> Result<()> {
+    if !store.has_table("user") {
+        store.execute("CREATE TABLE user (uid INT PRIMARY KEY, name TEXT, permission INT)")?;
+    }
+    if !store.has_table("resource") {
+        store.execute(
+            "CREATE TABLE resource (rid INT PRIMARY KEY, type TEXT, name TEXT, status TEXT)",
+        )?;
+    }
+    if !store.has_table("experiment") {
+        store.execute(
+            "CREATE TABLE experiment (eid INT PRIMARY KEY, uid INT, proposer TEXT, \
+             exp_config TEXT, start_time REAL, end_time REAL, best_score REAL)",
+        )?;
+    }
+    if !store.has_table("job") {
+        store.execute(
+            "CREATE TABLE job (jid INT PRIMARY KEY, eid INT, rid INT, config TEXT, \
+             status TEXT, score REAL, start_time REAL, end_time REAL)",
+        )?;
+    }
+    Ok(())
+}
+
+fn next_id(store: &mut Store, table: &str, pk: &str) -> Result<i64> {
+    let r = store.execute(&format!("SELECT {pk} FROM {table} ORDER BY {pk} DESC LIMIT 1"))?;
+    Ok(r.scalar().and_then(Value::as_i64).map_or(0, |m| m + 1))
+}
+
+/// Register a user (id allocated).
+pub fn add_user(store: &mut Store, name: &str) -> Result<i64> {
+    let uid = next_id(store, "user", "uid")?;
+    store.execute(&format!(
+        "INSERT INTO user (uid, name, permission) VALUES ({uid}, {}, 1)",
+        quote(name)
+    ))?;
+    Ok(uid)
+}
+
+/// Register a resource (paper: cpu/gpu/node/aws entries written by `aup setup`).
+pub fn add_resource(store: &mut Store, rtype: &str, name: &str) -> Result<i64> {
+    let rid = next_id(store, "resource", "rid")?;
+    store.execute(&format!(
+        "INSERT INTO resource (rid, type, name, status) VALUES ({rid}, {}, {}, 'FREE')",
+        quote(rtype),
+        quote(name)
+    ))?;
+    Ok(rid)
+}
+
+pub fn set_resource_status(store: &mut Store, rid: i64, status: ResourceStatus) -> Result<()> {
+    store.execute(&format!(
+        "UPDATE resource SET status = '{}' WHERE rid = {rid}",
+        status.name()
+    ))?;
+    Ok(())
+}
+
+/// Open a new experiment record; returns eid.
+pub fn start_experiment(
+    store: &mut Store,
+    uid: i64,
+    proposer: &str,
+    exp_config_json: &str,
+    now: f64,
+) -> Result<i64> {
+    let eid = next_id(store, "experiment", "eid")?;
+    store.execute(&format!(
+        "INSERT INTO experiment (eid, uid, proposer, exp_config, start_time) \
+         VALUES ({eid}, {uid}, {}, {}, {now})",
+        quote(proposer),
+        quote(exp_config_json)
+    ))?;
+    Ok(eid)
+}
+
+pub fn finish_experiment(store: &mut Store, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
+    let best_sql = best.map_or("NULL".to_string(), |b| b.to_string());
+    store.execute(&format!(
+        "UPDATE experiment SET end_time = {now}, best_score = {best_sql} WHERE eid = {eid}"
+    ))?;
+    Ok(())
+}
+
+/// Record a job start; returns nothing (jid is allocated by the caller so
+/// it matches the proposer's `job_id` auxiliary variable).
+pub fn start_job(
+    store: &mut Store,
+    jid: i64,
+    eid: i64,
+    rid: i64,
+    config_json: &str,
+    now: f64,
+) -> Result<()> {
+    store.execute(&format!(
+        "INSERT INTO job (jid, eid, rid, config, status, start_time) \
+         VALUES ({jid}, {eid}, {rid}, {}, 'RUNNING', {now})",
+        quote(config_json)
+    ))?;
+    Ok(())
+}
+
+/// Job finished: record score + end time.
+pub fn finish_job(store: &mut Store, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
+    let status = if ok { JobStatus::Finished } else { JobStatus::Failed };
+    let score_sql = score
+        .filter(|s| s.is_finite())
+        .map_or("NULL".to_string(), |s| s.to_string());
+    store.execute(&format!(
+        "UPDATE job SET status = '{}', score = {score_sql}, end_time = {now} WHERE jid = {jid}",
+        status.name()
+    ))?;
+    Ok(())
+}
+
+/// Crash recovery: mark every job still RUNNING as FAILED (the process
+/// that owned it is gone). Returns the number of recovered rows. Called
+/// when a durable store is reopened by `aup run`.
+pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
+    if !store.has_table("job") {
+        init_schema(store)?;
+        return Ok(0);
+    }
+    let r = store.execute("UPDATE job SET status = 'FAILED' WHERE status = 'RUNNING'")?;
+    Ok(r.count())
+}
+
+fn opt_f64(v: &Value) -> Option<f64> {
+    match v {
+        Value::Null => None,
+        v => v.as_f64(),
+    }
+}
+
+/// All jobs of an experiment, in jid order.
+pub fn jobs_of(store: &mut Store, eid: i64) -> Result<Vec<JobRow>> {
+    let r = store.execute(&format!(
+        "SELECT jid, eid, rid, config, status, score, start_time, end_time \
+         FROM job WHERE eid = {eid} ORDER BY jid"
+    ))?;
+    rows_to_jobs(&r)
+}
+
+fn rows_to_jobs(r: &QueryResult) -> Result<Vec<JobRow>> {
+    r.rows()
+        .iter()
+        .map(|row| {
+            Ok(JobRow {
+                jid: row[0].as_i64().ok_or_else(|| AupError::Store("bad jid".into()))?,
+                eid: row[1].as_i64().unwrap_or(-1),
+                rid: row[2].as_i64().unwrap_or(-1),
+                config: row[3].as_str().unwrap_or("").to_string(),
+                status: JobStatus::parse(row[4].as_str().unwrap_or(""))?,
+                score: opt_f64(&row[5]),
+                start_time: row[6].as_f64().unwrap_or(0.0),
+                end_time: opt_f64(&row[7]),
+            })
+        })
+        .collect()
+}
+
+/// The best finished job of an experiment (min or max by `maximize`).
+pub fn best_job(store: &mut Store, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
+    let order = if maximize { "DESC" } else { "ASC" };
+    let r = store.execute(&format!(
+        "SELECT jid, eid, rid, config, status, score, start_time, end_time \
+         FROM job WHERE eid = {eid} AND status = 'FINISHED' AND score IS NOT NULL \
+         ORDER BY score {order} LIMIT 1"
+    ))?;
+    Ok(rows_to_jobs(&r)?.into_iter().next())
+}
+
+/// Load an experiment row.
+pub fn get_experiment(store: &mut Store, eid: i64) -> Result<Option<ExperimentRow>> {
+    let r = store.execute(&format!(
+        "SELECT eid, uid, proposer, exp_config, start_time, end_time, best_score \
+         FROM experiment WHERE eid = {eid}"
+    ))?;
+    Ok(r.rows().first().map(|row| ExperimentRow {
+        eid: row[0].as_i64().unwrap_or(-1),
+        uid: row[1].as_i64().unwrap_or(-1),
+        proposer: row[2].as_str().unwrap_or("").to_string(),
+        exp_config: row[3].as_str().unwrap_or("").to_string(),
+        start_time: row[4].as_f64().unwrap_or(0.0),
+        end_time: opt_f64(&row[5]),
+        best_score: opt_f64(&row[6]),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_experiment_lifecycle() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        let uid = add_user(&mut s, "alice").unwrap();
+        let rid = add_resource(&mut s, "cpu", "localhost:0").unwrap();
+        let eid = start_experiment(&mut s, uid, "random", "{}", 0.0).unwrap();
+
+        start_job(&mut s, 0, eid, rid, r#"{"x":1}"#, 1.0).unwrap();
+        set_resource_status(&mut s, rid, ResourceStatus::Busy).unwrap();
+        finish_job(&mut s, 0, Some(0.25), true, 2.0).unwrap();
+        set_resource_status(&mut s, rid, ResourceStatus::Free).unwrap();
+
+        start_job(&mut s, 1, eid, rid, r#"{"x":2}"#, 3.0).unwrap();
+        finish_job(&mut s, 1, Some(0.75), true, 4.0).unwrap();
+        start_job(&mut s, 2, eid, rid, r#"{"x":3}"#, 5.0).unwrap();
+        finish_job(&mut s, 2, None, false, 6.0).unwrap();
+
+        let jobs = jobs_of(&mut s, eid).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].score, Some(0.25));
+        assert_eq!(jobs[2].status, JobStatus::Failed);
+        assert_eq!(jobs[2].score, None);
+
+        // min target picks job 0, max picks job 1
+        assert_eq!(best_job(&mut s, eid, false).unwrap().unwrap().jid, 0);
+        assert_eq!(best_job(&mut s, eid, true).unwrap().unwrap().jid, 1);
+
+        finish_experiment(&mut s, eid, Some(0.25), 7.0).unwrap();
+        let exp = get_experiment(&mut s, eid).unwrap().unwrap();
+        assert_eq!(exp.best_score, Some(0.25));
+        assert_eq!(exp.end_time, Some(7.0));
+        assert_eq!(exp.proposer, "random");
+    }
+
+    #[test]
+    fn id_allocation_monotonic() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        assert_eq!(add_user(&mut s, "a").unwrap(), 0);
+        assert_eq!(add_user(&mut s, "b").unwrap(), 1);
+        assert_eq!(add_resource(&mut s, "cpu", "x").unwrap(), 0);
+        assert_eq!(add_resource(&mut s, "gpu", "y").unwrap(), 1);
+    }
+
+    #[test]
+    fn init_schema_idempotent() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        init_schema(&mut s).unwrap();
+        assert_eq!(s.table_names().len(), 4);
+    }
+
+    #[test]
+    fn recover_incomplete_marks_running_as_failed() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        start_job(&mut s, 0, 0, 0, "{}", 0.0).unwrap();
+        start_job(&mut s, 1, 0, 0, "{}", 0.0).unwrap();
+        finish_job(&mut s, 0, Some(0.5), true, 1.0).unwrap();
+        let n = recover_incomplete(&mut s).unwrap();
+        assert_eq!(n, 1);
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[0].status, JobStatus::Finished);
+        assert_eq!(jobs[1].status, JobStatus::Failed);
+        // idempotent
+        assert_eq!(recover_incomplete(&mut s).unwrap(), 0);
+    }
+
+    #[test]
+    fn recover_on_empty_store_initializes() {
+        let mut s = Store::in_memory();
+        assert_eq!(recover_incomplete(&mut s).unwrap(), 0);
+        assert!(s.has_table("job"));
+    }
+
+    #[test]
+    fn config_with_quotes_survives() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        let cfg = r#"{"name":"it's"}"#;
+        start_job(&mut s, 0, 0, 0, cfg, 0.0).unwrap();
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[0].config, cfg);
+    }
+}

@@ -1,0 +1,575 @@
+//! Mini-SQL: tokenizer + recursive-descent parser for the statements the
+//! tracking store needs. Grammar:
+//!
+//! ```text
+//! CREATE TABLE name (col TYPE [PRIMARY KEY], ...)
+//! INSERT INTO name (col, ...) VALUES (val, ...)
+//! SELECT * | COUNT(*) | col[, col...] FROM name
+//!        [WHERE expr] [ORDER BY col [ASC|DESC]] [LIMIT n]
+//! UPDATE name SET col = val[, ...] [WHERE expr]
+//! DELETE FROM name [WHERE expr]
+//!
+//! expr := or_expr
+//! or_expr := and_expr (OR and_expr)*
+//! and_expr := cmp (AND cmp)*
+//! cmp := col (=|!=|<>|<|<=|>|>=) val | col IS [NOT] NULL | '(' expr ')'
+//! val := number | 'string' | NULL
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::store::table::{ColDef, Row, TableSchema};
+use crate::store::value::{ColType, Value};
+use crate::util::error::{AupError, Result};
+
+/// Column projection in SELECT.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Projection {
+    All,
+    Count,
+    Cols(Vec<String>),
+}
+
+/// Parsed statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    Create { name: String, schema: TableSchema },
+    Insert { table: String, row: BTreeMap<String, Value> },
+    Select {
+        table: String,
+        cols: Projection,
+        filter: Option<Expr>,
+        order_by: Option<String>,
+        desc: bool,
+        limit: Option<usize>,
+    },
+    Update { table: String, sets: BTreeMap<String, Value>, filter: Option<Expr> },
+    Delete { table: String, filter: Option<Expr> },
+}
+
+/// Filter expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Cmp { col: String, op: CmpOp, val: Value },
+    IsNull { col: String, negated: bool },
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl Expr {
+    /// Evaluate against a row. Unknown columns evaluate to false
+    /// (callers validate earlier; this is the safe default).
+    pub fn eval(&self, schema: &TableSchema, row: &Row) -> bool {
+        match self {
+            Expr::And(a, b) => a.eval(schema, row) && b.eval(schema, row),
+            Expr::Or(a, b) => a.eval(schema, row) || b.eval(schema, row),
+            Expr::IsNull { col, negated } => {
+                let Some(i) = schema.col_index(col) else { return false };
+                let is_null = matches!(row.values[i], Value::Null);
+                is_null != *negated
+            }
+            Expr::Cmp { col, op, val } => {
+                let Some(i) = schema.col_index(col) else { return false };
+                let cell = &row.values[i];
+                if matches!(cell, Value::Null) || matches!(val, Value::Null) {
+                    return false; // SQL three-valued logic collapses to false
+                }
+                match op {
+                    CmpOp::Eq => cell.sql_eq(val),
+                    CmpOp::Ne => !cell.sql_eq(val),
+                    _ => {
+                        let Some(ord) = cell.partial_cmp(val) else { return false };
+                        match op {
+                            CmpOp::Lt => ord == std::cmp::Ordering::Less,
+                            CmpOp::Le => ord != std::cmp::Ordering::Greater,
+                            CmpOp::Gt => ord == std::cmp::Ordering::Greater,
+                            CmpOp::Ge => ord != std::cmp::Ordering::Less,
+                            _ => unreachable!(),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tokenizer
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    Str(String),
+    Sym(char),     // ( ) , * =
+    Op(&'static str), // != <> <= >= < >
+}
+
+fn tokenize(s: &str) -> Result<Vec<Tok>> {
+    let b: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        if c.is_whitespace() {
+            i += 1;
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push(Tok::Ident(b[start..i].iter().collect()));
+        } else if c.is_ascii_digit() || (c == '-' && i + 1 < b.len() && (b[i + 1].is_ascii_digit() || b[i + 1] == '.')) {
+            let start = i;
+            i += 1;
+            while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.' || b[i] == 'e' || b[i] == 'E'
+                || ((b[i] == '+' || b[i] == '-') && matches!(b[i - 1], 'e' | 'E')))
+            {
+                i += 1;
+            }
+            let txt: String = b[start..i].iter().collect();
+            out.push(Tok::Num(txt.parse().map_err(|_| {
+                AupError::Store(format!("bad number '{txt}' in SQL"))
+            })?));
+        } else if c == '\'' {
+            i += 1;
+            let mut s = String::new();
+            loop {
+                if i >= b.len() {
+                    return Err(AupError::Store("unterminated string literal".into()));
+                }
+                if b[i] == '\'' {
+                    // '' escapes a quote
+                    if i + 1 < b.len() && b[i + 1] == '\'' {
+                        s.push('\'');
+                        i += 2;
+                    } else {
+                        i += 1;
+                        break;
+                    }
+                } else {
+                    s.push(b[i]);
+                    i += 1;
+                }
+            }
+            out.push(Tok::Str(s));
+        } else if c == '!' || c == '<' || c == '>' {
+            if i + 1 < b.len() && b[i + 1] == '=' {
+                out.push(Tok::Op(match c {
+                    '!' => "!=",
+                    '<' => "<=",
+                    _ => ">=",
+                }));
+                i += 2;
+            } else if c == '<' && i + 1 < b.len() && b[i + 1] == '>' {
+                out.push(Tok::Op("<>"));
+                i += 2;
+            } else if c == '!' {
+                return Err(AupError::Store("lone '!' in SQL".into()));
+            } else {
+                out.push(Tok::Op(if c == '<' { "<" } else { ">" }));
+                i += 1;
+            }
+        } else if "(),*=;".contains(c) {
+            if c != ';' {
+                out.push(Tok::Sym(c));
+            }
+            i += 1;
+        } else {
+            return Err(AupError::Store(format!("unexpected character '{c}' in SQL")));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// parser
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn err(&self, msg: &str) -> AupError {
+        AupError::Store(format!("SQL parse error near token {}: {msg}", self.i))
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.i).cloned();
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        match self.next() {
+            Some(Tok::Ident(s)) if s.eq_ignore_ascii_case(kw) => Ok(()),
+            other => Err(self.err(&format!("expected keyword {kw}, got {other:?}"))),
+        }
+    }
+
+    fn try_keyword(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.i += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Some(Tok::Ident(s)) => Ok(s),
+            other => Err(self.err(&format!("expected identifier, got {other:?}"))),
+        }
+    }
+
+    fn sym(&mut self, c: char) -> Result<()> {
+        match self.next() {
+            Some(Tok::Sym(s)) if s == c => Ok(()),
+            other => Err(self.err(&format!("expected '{c}', got {other:?}"))),
+        }
+    }
+
+    fn try_sym(&mut self, c: char) -> bool {
+        if self.peek() == Some(&Tok::Sym(c)) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.next() {
+            Some(Tok::Num(n)) => Ok(if n.fract() == 0.0 && n.abs() < 9.1e18 {
+                Value::Int(n as i64)
+            } else {
+                Value::Real(n)
+            }),
+            Some(Tok::Str(s)) => Ok(Value::Text(s)),
+            Some(Tok::Ident(s)) if s.eq_ignore_ascii_case("null") => Ok(Value::Null),
+            other => Err(self.err(&format!("expected value, got {other:?}"))),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut left = self.and_expr()?;
+        while self.try_keyword("OR") {
+            let right = self.and_expr()?;
+            left = Expr::Or(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut left = self.cmp()?;
+        while self.try_keyword("AND") {
+            let right = self.cmp()?;
+            left = Expr::And(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn cmp(&mut self) -> Result<Expr> {
+        if self.try_sym('(') {
+            let e = self.expr()?;
+            self.sym(')')?;
+            return Ok(e);
+        }
+        let col = self.ident()?;
+        if self.try_keyword("IS") {
+            let negated = self.try_keyword("NOT");
+            self.keyword("NULL")?;
+            return Ok(Expr::IsNull { col, negated });
+        }
+        let op = match self.next() {
+            Some(Tok::Sym('=')) => CmpOp::Eq,
+            Some(Tok::Op("!=")) | Some(Tok::Op("<>")) => CmpOp::Ne,
+            Some(Tok::Op("<")) => CmpOp::Lt,
+            Some(Tok::Op("<=")) => CmpOp::Le,
+            Some(Tok::Op(">")) => CmpOp::Gt,
+            Some(Tok::Op(">=")) => CmpOp::Ge,
+            other => return Err(self.err(&format!("expected comparison operator, got {other:?}"))),
+        };
+        let val = self.value()?;
+        Ok(Expr::Cmp { col, op, val })
+    }
+
+    fn opt_where(&mut self) -> Result<Option<Expr>> {
+        if self.try_keyword("WHERE") {
+            Ok(Some(self.expr()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn end(&self) -> Result<()> {
+        if self.i == self.toks.len() {
+            Ok(())
+        } else {
+            Err(self.err("trailing tokens"))
+        }
+    }
+}
+
+/// Parse one statement.
+pub fn parse(sql: &str) -> Result<Stmt> {
+    let mut p = P { toks: tokenize(sql)?, i: 0 };
+    let head = p.ident()?;
+    let stmt = match head.to_ascii_uppercase().as_str() {
+        "CREATE" => {
+            p.keyword("TABLE")?;
+            let name = p.ident()?;
+            p.sym('(')?;
+            let mut cols = Vec::new();
+            let mut pk_index = None;
+            loop {
+                let cname = p.ident()?;
+                let ctype = ColType::parse(&p.ident()?)?;
+                if p.try_keyword("PRIMARY") {
+                    p.keyword("KEY")?;
+                    if pk_index.replace(cols.len()).is_some() {
+                        return Err(p.err("multiple PRIMARY KEY columns"));
+                    }
+                }
+                cols.push(ColDef { name: cname, ctype });
+                if !p.try_sym(',') {
+                    break;
+                }
+            }
+            p.sym(')')?;
+            let pk_index =
+                pk_index.ok_or_else(|| p.err("table needs exactly one PRIMARY KEY column"))?;
+            Stmt::Create {
+                name: name.clone(),
+                schema: TableSchema { name, cols, pk_index },
+            }
+        }
+        "INSERT" => {
+            p.keyword("INTO")?;
+            let table = p.ident()?;
+            p.sym('(')?;
+            let mut cols = Vec::new();
+            loop {
+                cols.push(p.ident()?);
+                if !p.try_sym(',') {
+                    break;
+                }
+            }
+            p.sym(')')?;
+            p.keyword("VALUES")?;
+            p.sym('(')?;
+            let mut vals = Vec::new();
+            loop {
+                vals.push(p.value()?);
+                if !p.try_sym(',') {
+                    break;
+                }
+            }
+            p.sym(')')?;
+            if cols.len() != vals.len() {
+                return Err(p.err("column/value count mismatch"));
+            }
+            Stmt::Insert { table, row: cols.into_iter().zip(vals).collect() }
+        }
+        "SELECT" => {
+            let cols = if p.try_sym('*') {
+                Projection::All
+            } else if let Some(Tok::Ident(s)) = p.peek() {
+                if s.eq_ignore_ascii_case("count") {
+                    p.next();
+                    p.sym('(')?;
+                    p.sym('*')?;
+                    p.sym(')')?;
+                    Projection::Count
+                } else {
+                    let mut names = Vec::new();
+                    loop {
+                        names.push(p.ident()?);
+                        if !p.try_sym(',') {
+                            break;
+                        }
+                    }
+                    Projection::Cols(names)
+                }
+            } else {
+                return Err(p.err("expected projection"));
+            };
+            p.keyword("FROM")?;
+            let table = p.ident()?;
+            let filter = p.opt_where()?;
+            let (mut order_by, mut desc) = (None, false);
+            if p.try_keyword("ORDER") {
+                p.keyword("BY")?;
+                order_by = Some(p.ident()?);
+                if p.try_keyword("DESC") {
+                    desc = true;
+                } else {
+                    let _ = p.try_keyword("ASC");
+                }
+            }
+            let mut limit = None;
+            if p.try_keyword("LIMIT") {
+                match p.next() {
+                    Some(Tok::Num(n)) if n >= 0.0 && n.fract() == 0.0 => {
+                        limit = Some(n as usize)
+                    }
+                    other => return Err(p.err(&format!("bad LIMIT, got {other:?}"))),
+                }
+            }
+            Stmt::Select { table, cols, filter, order_by, desc, limit }
+        }
+        "UPDATE" => {
+            let table = p.ident()?;
+            p.keyword("SET")?;
+            let mut sets = BTreeMap::new();
+            loop {
+                let col = p.ident()?;
+                p.sym('=')?;
+                let val = p.value()?;
+                sets.insert(col, val);
+                if !p.try_sym(',') {
+                    break;
+                }
+            }
+            let filter = p.opt_where()?;
+            Stmt::Update { table, sets, filter }
+        }
+        "DELETE" => {
+            p.keyword("FROM")?;
+            let table = p.ident()?;
+            let filter = p.opt_where()?;
+            Stmt::Delete { table, filter }
+        }
+        other => return Err(p.err(&format!("unknown statement '{other}'"))),
+    };
+    p.end()?;
+    Ok(stmt)
+}
+
+/// Escape a string for embedding in a SQL literal.
+pub fn quote(s: &str) -> String {
+    format!("'{}'", s.replace('\'', "''"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_create() {
+        let s = parse("CREATE TABLE job (jid INT PRIMARY KEY, score REAL, status TEXT)").unwrap();
+        match s {
+            Stmt::Create { name, schema } => {
+                assert_eq!(name, "job");
+                assert_eq!(schema.cols.len(), 3);
+                assert_eq!(schema.pk_index, 0);
+                assert_eq!(schema.cols[1].ctype, ColType::Real);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn create_requires_pk() {
+        assert!(parse("CREATE TABLE t (a INT)").is_err());
+        assert!(parse("CREATE TABLE t (a INT PRIMARY KEY, b INT PRIMARY KEY)").is_err());
+    }
+
+    #[test]
+    fn parse_insert_with_strings_and_escapes() {
+        let s = parse("INSERT INTO t (a, b) VALUES (1, 'it''s')").unwrap();
+        match s {
+            Stmt::Insert { row, .. } => {
+                assert_eq!(row["b"], Value::Text("it's".into()));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_select_full() {
+        let s = parse(
+            "SELECT a, b FROM t WHERE (x >= 1.5 AND y != 'z') OR w IS NOT NULL ORDER BY a DESC LIMIT 10",
+        )
+        .unwrap();
+        match s {
+            Stmt::Select { cols, filter, order_by, desc, limit, .. } => {
+                assert_eq!(cols, Projection::Cols(vec!["a".into(), "b".into()]));
+                assert!(matches!(filter, Some(Expr::Or(_, _))));
+                assert_eq!(order_by.as_deref(), Some("a"));
+                assert!(desc);
+                assert_eq!(limit, Some(10));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn expr_eval_three_valued() {
+        let schema = TableSchema {
+            name: "t".into(),
+            cols: vec![
+                ColDef { name: "x".into(), ctype: ColType::Real },
+            ],
+            pk_index: 0,
+        };
+        let row = Row { values: vec![Value::Null] };
+        let e = parse("SELECT * FROM t WHERE x < 5").unwrap();
+        if let Stmt::Select { filter: Some(f), .. } = e {
+            assert!(!f.eval(&schema, &row), "NULL comparisons are false");
+        } else {
+            panic!();
+        }
+        let e = parse("SELECT * FROM t WHERE x IS NULL").unwrap();
+        if let Stmt::Select { filter: Some(f), .. } = e {
+            assert!(f.eval(&schema, &row));
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn negative_numbers_and_sci_notation() {
+        let s = parse("INSERT INTO t (a, b) VALUES (-3, 1.5e-4)").unwrap();
+        match s {
+            Stmt::Insert { row, .. } => {
+                assert_eq!(row["a"], Value::Int(-3));
+                assert_eq!(row["b"], Value::Real(1.5e-4));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("SELEC * FROM t").is_err());
+        assert!(parse("SELECT * FROM t WHERE").is_err());
+        assert!(parse("SELECT * FROM t LIMIT -1").is_err());
+        assert!(parse("INSERT INTO t (a) VALUES (1, 2)").is_err());
+        assert!(parse("SELECT * FROM t extra").is_err());
+    }
+
+    #[test]
+    fn quote_escapes() {
+        assert_eq!(quote("a'b"), "'a''b'");
+    }
+}

@@ -1,0 +1,252 @@
+//! Typed table with a primary key.
+
+use std::collections::BTreeMap;
+
+use crate::store::value::{ColType, Value};
+use crate::util::error::{AupError, Result};
+
+/// Column definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColDef {
+    pub name: String,
+    pub ctype: ColType,
+}
+
+/// Table schema: ordered columns + which column is the primary key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableSchema {
+    pub name: String,
+    pub cols: Vec<ColDef>,
+    pub pk_index: usize,
+}
+
+impl TableSchema {
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.cols.iter().position(|c| c.name == name)
+    }
+}
+
+/// A row: values in schema column order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub values: Vec<Value>,
+}
+
+/// Table: rows stored in insertion order, with a pk -> row-index map.
+pub struct Table {
+    schema: TableSchema,
+    rows: Vec<Row>,
+    pk_map: BTreeMap<String, usize>,
+}
+
+/// Primary keys are mapped through a canonical string (so Int 1 and
+/// Real 1.0 collide, matching SQL semantics).
+fn pk_key(v: &Value) -> String {
+    match v {
+        Value::Null => "null".to_string(),
+        Value::Int(i) => format!("n{i}"),
+        Value::Real(r) if r.fract() == 0.0 => format!("n{}", *r as i64),
+        Value::Real(r) => format!("r{r}"),
+        Value::Text(s) => format!("t{s}"),
+    }
+}
+
+impl Table {
+    pub fn new(schema: TableSchema) -> Table {
+        Table { schema, rows: Vec::new(), pk_map: BTreeMap::new() }
+    }
+
+    pub fn schema(&self) -> &TableSchema {
+        &self.schema
+    }
+
+    pub fn len(&self) -> usize {
+        self.pk_map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pk_map.is_empty()
+    }
+
+    /// Live rows (deleted slots skipped).
+    pub fn rows(&self) -> impl Iterator<Item = &Row> {
+        self.pk_map.values().map(move |&i| &self.rows[i])
+    }
+
+    /// Check an insert without mutating (used so the WAL never records a
+    /// mutation that would fail).
+    pub fn validate_insert(&self, named: &BTreeMap<String, Value>) -> Result<()> {
+        for key in named.keys() {
+            if self.schema.col_index(key).is_none() {
+                return Err(AupError::Store(format!(
+                    "unknown column '{key}' in table '{}'",
+                    self.schema.name
+                )));
+            }
+        }
+        for (i, col) in self.schema.cols.iter().enumerate() {
+            let v = named.get(&col.name).unwrap_or(&Value::Null);
+            if !v.type_matches(col.ctype) {
+                return Err(AupError::Store(format!(
+                    "type mismatch for column '{}': {v:?} is not {}",
+                    col.name,
+                    col.ctype.name()
+                )));
+            }
+            if i == self.schema.pk_index {
+                if matches!(v, Value::Null) {
+                    return Err(AupError::Store(format!(
+                        "primary key '{}' may not be NULL",
+                        col.name
+                    )));
+                }
+                if self.pk_map.contains_key(&pk_key(v)) {
+                    return Err(AupError::Store(format!(
+                        "duplicate primary key {v:?} in table '{}'",
+                        self.schema.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn insert(&mut self, named: BTreeMap<String, Value>) -> Result<()> {
+        self.validate_insert(&named)?;
+        let values: Vec<Value> = self
+            .schema
+            .cols
+            .iter()
+            .map(|c| named.get(&c.name).cloned().unwrap_or(Value::Null).coerce(c.ctype))
+            .collect();
+        let key = pk_key(&values[self.schema.pk_index]);
+        self.rows.push(Row { values });
+        self.pk_map.insert(key, self.rows.len() - 1);
+        Ok(())
+    }
+
+    pub fn validate_update(&self, key: &Value, sets: &BTreeMap<String, Value>) -> Result<()> {
+        let idx = self
+            .pk_map
+            .get(&pk_key(key))
+            .ok_or_else(|| AupError::Store(format!("no row with key {key:?}")))?;
+        let _ = idx;
+        for (col, v) in sets {
+            let ci = self.schema.col_index(col).ok_or_else(|| {
+                AupError::Store(format!("unknown column '{col}' in UPDATE"))
+            })?;
+            if ci == self.schema.pk_index {
+                return Err(AupError::Store("updating the primary key is not supported".into()));
+            }
+            if !v.type_matches(self.schema.cols[ci].ctype) {
+                return Err(AupError::Store(format!(
+                    "type mismatch for column '{col}' in UPDATE"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn update(&mut self, key: &Value, sets: &BTreeMap<String, Value>) -> Result<()> {
+        self.validate_update(key, sets)?;
+        let idx = *self.pk_map.get(&pk_key(key)).unwrap();
+        for (col, v) in sets {
+            let ci = self.schema.col_index(col).unwrap();
+            self.rows[idx].values[ci] = v.clone().coerce(self.schema.cols[ci].ctype);
+        }
+        Ok(())
+    }
+
+    pub fn delete(&mut self, key: &Value) -> Result<()> {
+        self.pk_map
+            .remove(&pk_key(key))
+            .ok_or_else(|| AupError::Store(format!("no row with key {key:?}")))?;
+        Ok(())
+    }
+
+    /// Fetch one row by primary key.
+    pub fn get(&self, key: &Value) -> Option<&Row> {
+        self.pk_map.get(&pk_key(key)).map(|&i| &self.rows[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> TableSchema {
+        TableSchema {
+            name: "t".into(),
+            cols: vec![
+                ColDef { name: "id".into(), ctype: ColType::Int },
+                ColDef { name: "v".into(), ctype: ColType::Real },
+                ColDef { name: "tag".into(), ctype: ColType::Text },
+            ],
+            pk_index: 0,
+        }
+    }
+
+    fn named(id: i64, v: f64, tag: &str) -> BTreeMap<String, Value> {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Value::Int(id));
+        m.insert("v".into(), Value::Real(v));
+        m.insert("tag".into(), Value::Text(tag.into()));
+        m
+    }
+
+    #[test]
+    fn insert_get_update_delete() {
+        let mut t = Table::new(schema());
+        t.insert(named(1, 0.5, "a")).unwrap();
+        t.insert(named(2, 0.7, "b")).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(&Value::Int(1)).unwrap().values[2], Value::Text("a".into()));
+
+        let mut sets = BTreeMap::new();
+        sets.insert("v".to_string(), Value::Real(0.9));
+        t.update(&Value::Int(1), &sets).unwrap();
+        assert_eq!(t.get(&Value::Int(1)).unwrap().values[1], Value::Real(0.9));
+
+        t.delete(&Value::Int(1)).unwrap();
+        assert!(t.get(&Value::Int(1)).is_none());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn missing_columns_become_null_and_int_coerces() {
+        let mut t = Table::new(schema());
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Value::Int(7));
+        m.insert("v".into(), Value::Int(2)); // int into REAL column
+        t.insert(m).unwrap();
+        let row = t.get(&Value::Int(7)).unwrap();
+        assert_eq!(row.values[1], Value::Real(2.0));
+        assert_eq!(row.values[2], Value::Null);
+    }
+
+    #[test]
+    fn constraint_violations() {
+        let mut t = Table::new(schema());
+        t.insert(named(1, 0.5, "a")).unwrap();
+        assert!(t.insert(named(1, 0.6, "dup")).is_err());
+        let mut bad = named(2, 0.1, "x");
+        bad.insert("nope".into(), Value::Int(0));
+        assert!(t.insert(bad).is_err());
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Value::Null);
+        assert!(t.insert(m).is_err());
+        // pk update rejected
+        let mut sets = BTreeMap::new();
+        sets.insert("id".to_string(), Value::Int(5));
+        assert!(t.update(&Value::Int(1), &sets).is_err());
+    }
+
+    #[test]
+    fn pk_int_real_collide() {
+        let mut t = Table::new(schema());
+        t.insert(named(1, 0.0, "a")).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Value::Real(1.0));
+        assert!(t.insert(m).is_err(), "Real(1.0) must collide with Int(1)");
+    }
+}

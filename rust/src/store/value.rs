@@ -1,0 +1,181 @@
+//! SQL value + column types for the tracking store.
+
+use std::cmp::Ordering;
+
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+/// Column type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColType {
+    Int,
+    Real,
+    Text,
+}
+
+impl ColType {
+    pub fn parse(s: &str) -> Result<ColType> {
+        match s.to_ascii_uppercase().as_str() {
+            "INT" | "INTEGER" => Ok(ColType::Int),
+            "REAL" | "FLOAT" | "DOUBLE" => Ok(ColType::Real),
+            "TEXT" | "VARCHAR" | "STRING" => Ok(ColType::Text),
+            other => Err(AupError::Store(format!("unknown column type '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ColType::Int => "INT",
+            ColType::Real => "REAL",
+            ColType::Text => "TEXT",
+        }
+    }
+}
+
+/// A typed cell value. `Null` is allowed in any column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Real(f64),
+    Text(String),
+}
+
+impl Value {
+    pub fn type_matches(&self, t: ColType) -> bool {
+        match (self, t) {
+            (Value::Null, _) => true,
+            (Value::Int(_), ColType::Int) => true,
+            // ints coerce into REAL columns
+            (Value::Int(_), ColType::Real) => true,
+            (Value::Real(_), ColType::Real) => true,
+            (Value::Text(_), ColType::Text) => true,
+            _ => false,
+        }
+    }
+
+    /// Coerce to the column type (int -> real when needed).
+    pub fn coerce(self, t: ColType) -> Value {
+        match (self, t) {
+            (Value::Int(i), ColType::Real) => Value::Real(i as f64),
+            (v, _) => v,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Real(r) => Some(*r),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Real(r) if r.fract() == 0.0 => Some(*r as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Int(i) => Json::int(*i),
+            Value::Real(r) => Json::num(*r),
+            Value::Text(s) => Json::str(s.clone()),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Value> {
+        Ok(match j {
+            Json::Null => Value::Null,
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.1e18 => Value::Int(*n as i64),
+            Json::Num(n) => Value::Real(*n),
+            Json::Str(s) => Value::Text(s.clone()),
+            Json::Bool(b) => Value::Int(*b as i64),
+            _ => return Err(AupError::Store("cannot convert JSON value to SQL value".into())),
+        })
+    }
+
+    /// SQL ordering: NULL < numbers < text; numbers compare numerically.
+    pub fn partial_cmp(&self, other: &Value) -> Option<Ordering> {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => Some(Ordering::Equal),
+            (Null, _) => Some(Ordering::Less),
+            (_, Null) => Some(Ordering::Greater),
+            (Int(a), Int(b)) => Some(a.cmp(b)),
+            (Text(a), Text(b)) => Some(a.cmp(b)),
+            (a, b) => match (a.as_f64(), b.as_f64()) {
+                (Some(x), Some(y)) => x.partial_cmp(&y),
+                _ => {
+                    // numbers sort before text
+                    let rank = |v: &Value| matches!(v, Text(_)) as u8;
+                    Some(rank(a).cmp(&rank(b)))
+                }
+            },
+        }
+    }
+
+    /// SQL equality (Int 1 == Real 1.0).
+    pub fn sql_eq(&self, other: &Value) -> bool {
+        match (self.as_f64(), other.as_f64()) {
+            (Some(a), Some(b)) => a == b,
+            _ => self == other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_coercion() {
+        assert!(Value::Int(3).type_matches(ColType::Real));
+        assert_eq!(Value::Int(3).coerce(ColType::Real), Value::Real(3.0));
+        assert!(!Value::Text("x".into()).type_matches(ColType::Int));
+        assert!(Value::Null.type_matches(ColType::Text));
+    }
+
+    #[test]
+    fn ordering() {
+        assert_eq!(
+            Value::Int(1).partial_cmp(&Value::Real(1.5)),
+            Some(Ordering::Less)
+        );
+        assert_eq!(Value::Null.partial_cmp(&Value::Int(-9)), Some(Ordering::Less));
+        assert_eq!(
+            Value::Text("a".into()).partial_cmp(&Value::Text("b".into())),
+            Some(Ordering::Less)
+        );
+        assert_eq!(Value::Int(2).partial_cmp(&Value::Text("a".into())), Some(Ordering::Less));
+    }
+
+    #[test]
+    fn sql_equality_across_numeric_types() {
+        assert!(Value::Int(1).sql_eq(&Value::Real(1.0)));
+        assert!(!Value::Int(1).sql_eq(&Value::Real(1.5)));
+        assert!(Value::Text("a".into()).sql_eq(&Value::Text("a".into())));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for v in [
+            Value::Null,
+            Value::Int(-5),
+            Value::Real(2.5),
+            Value::Text("hi".into()),
+        ] {
+            assert_eq!(Value::from_json(&v.to_json()).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Durability: JSON-lines write-ahead log + snapshot.
+//!
+//! Every mutation is journaled as one JSON line in `wal.jsonl` before it
+//! is applied. `checkpoint()` rewrites the current state as a snapshot
+//! (`snapshot.jsonl`, written atomically) and truncates the WAL. On open,
+//! the snapshot is replayed first, then the WAL tail. A torn final WAL
+//! line (crash mid-append) is tolerated and dropped.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::store::table::{ColDef, Table, TableSchema};
+use crate::store::value::{ColType, Value};
+use crate::util::error::{AupError, Result};
+use crate::util::fsutil;
+use crate::util::json::Json;
+
+/// One journaled mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    Create { table: String, schema: TableSchema },
+    Insert { table: String, row: BTreeMap<String, Value> },
+    Update { table: String, key: Value, sets: BTreeMap<String, Value> },
+    Delete { table: String, key: Value },
+}
+
+impl Record {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Record::Create { table, schema } => Json::obj(vec![
+                ("op", Json::str("create")),
+                ("table", Json::str(table.clone())),
+                (
+                    "cols",
+                    Json::arr(
+                        schema
+                            .cols
+                            .iter()
+                            .map(|c| {
+                                Json::obj(vec![
+                                    ("name", Json::str(c.name.clone())),
+                                    ("type", Json::str(c.ctype.name())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("pk", Json::int(schema.pk_index as i64)),
+            ]),
+            Record::Insert { table, row } => Json::obj(vec![
+                ("op", Json::str("insert")),
+                ("table", Json::str(table.clone())),
+                ("row", named_to_json(row)),
+            ]),
+            Record::Update { table, key, sets } => Json::obj(vec![
+                ("op", Json::str("update")),
+                ("table", Json::str(table.clone())),
+                ("key", key.to_json()),
+                ("sets", named_to_json(sets)),
+            ]),
+            Record::Delete { table, key } => Json::obj(vec![
+                ("op", Json::str("delete")),
+                ("table", Json::str(table.clone())),
+                ("key", key.to_json()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Record> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Store("WAL record missing 'op'".into()))?;
+        let table = j
+            .get("table")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Store("WAL record missing 'table'".into()))?
+            .to_string();
+        match op {
+            "create" => {
+                let cols = j
+                    .get("cols")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| AupError::Store("create record missing cols".into()))?
+                    .iter()
+                    .map(|c| {
+                        Ok(ColDef {
+                            name: c
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| AupError::Store("bad col".into()))?
+                                .to_string(),
+                            ctype: ColType::parse(
+                                c.get("type")
+                                    .and_then(Json::as_str)
+                                    .ok_or_else(|| AupError::Store("bad col".into()))?,
+                            )?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let pk_index = j
+                    .get("pk")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| AupError::Store("create record missing pk".into()))?
+                    as usize;
+                Ok(Record::Create {
+                    table: table.clone(),
+                    schema: TableSchema { name: table, cols, pk_index },
+                })
+            }
+            "insert" => Ok(Record::Insert {
+                table,
+                row: json_to_named(j.get("row").unwrap_or(&Json::Null))?,
+            }),
+            "update" => Ok(Record::Update {
+                table,
+                key: Value::from_json(
+                    j.get("key").ok_or_else(|| AupError::Store("update missing key".into()))?,
+                )?,
+                sets: json_to_named(j.get("sets").unwrap_or(&Json::Null))?,
+            }),
+            "delete" => Ok(Record::Delete {
+                table,
+                key: Value::from_json(
+                    j.get("key").ok_or_else(|| AupError::Store("delete missing key".into()))?,
+                )?,
+            }),
+            other => Err(AupError::Store(format!("unknown WAL op '{other}'"))),
+        }
+    }
+}
+
+fn named_to_json(m: &BTreeMap<String, Value>) -> Json {
+    Json::Obj(m.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+}
+
+fn json_to_named(j: &Json) -> Result<BTreeMap<String, Value>> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| AupError::Store("expected object in WAL record".into()))?;
+    obj.iter()
+        .map(|(k, v)| Ok((k.clone(), Value::from_json(v)?)))
+        .collect()
+}
+
+/// WAL manager for one store directory.
+pub struct Wal {
+    dir: PathBuf,
+}
+
+impl Wal {
+    pub fn open(dir: &Path) -> Result<Wal> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Wal { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn wal_path(&self) -> PathBuf {
+        self.dir.join("wal.jsonl")
+    }
+
+    fn snapshot_path(&self) -> PathBuf {
+        self.dir.join("snapshot.jsonl")
+    }
+
+    pub fn append(&mut self, record: &Record) -> Result<()> {
+        fsutil::append_line(&self.wal_path(), &record.to_json().to_string())
+    }
+
+    /// Replay snapshot then WAL. Tolerates a torn last WAL line.
+    pub fn replay(&self) -> Result<Vec<Record>> {
+        let mut records = Vec::new();
+        for (path, is_wal) in [(self.snapshot_path(), false), (self.wal_path(), true)] {
+            if !path.exists() {
+                continue;
+            }
+            let text = fsutil::read_to_string(&path)?;
+            let lines: Vec<&str> = text.lines().collect();
+            for (idx, line) in lines.iter().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(line).and_then(|j| Record::from_json(&j)) {
+                    Ok(r) => records.push(r),
+                    Err(e) => {
+                        if is_wal && idx == lines.len() - 1 {
+                            // torn tail from a crash mid-append: drop it
+                            crate::util::logging::log(
+                                crate::util::logging::Level::Warn,
+                                "store::wal",
+                                &format!("dropping torn WAL tail: {e}"),
+                            );
+                        } else {
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(records)
+    }
+
+    /// Write `snapshot` atomically and truncate the WAL.
+    pub fn checkpoint(&mut self, snapshot: &[Record]) -> Result<()> {
+        let mut text = String::new();
+        for r in snapshot {
+            text.push_str(&r.to_json().to_string());
+            text.push('\n');
+        }
+        fsutil::write_atomic(&self.snapshot_path(), &text)?;
+        fsutil::write_atomic(&self.wal_path(), "")?;
+        Ok(())
+    }
+}
+
+/// Serialize live tables into create+insert records for a checkpoint.
+pub fn snapshot_records(tables: &BTreeMap<String, Table>) -> Vec<Record> {
+    let mut out = Vec::new();
+    for (name, t) in tables {
+        out.push(Record::Create { table: name.clone(), schema: t.schema().clone() });
+        for row in t.rows() {
+            let named: BTreeMap<String, Value> = t
+                .schema()
+                .cols
+                .iter()
+                .zip(&row.values)
+                .map(|(c, v)| (c.name.clone(), v.clone()))
+                .collect();
+            out.push(Record::Insert { table: name.clone(), row: named });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fsutil::temp_dir;
+
+    #[test]
+    fn record_json_roundtrip() {
+        let mut row = BTreeMap::new();
+        row.insert("a".to_string(), Value::Int(1));
+        row.insert("b".to_string(), Value::Text("x".into()));
+        let records = vec![
+            Record::Create {
+                table: "t".into(),
+                schema: TableSchema {
+                    name: "t".into(),
+                    cols: vec![ColDef { name: "a".into(), ctype: ColType::Int }],
+                    pk_index: 0,
+                },
+            },
+            Record::Insert { table: "t".into(), row: row.clone() },
+            Record::Update { table: "t".into(), key: Value::Int(1), sets: row.clone() },
+            Record::Delete { table: "t".into(), key: Value::Int(1) },
+        ];
+        for r in records {
+            let j = r.to_json();
+            assert_eq!(Record::from_json(&j).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn torn_tail_tolerated() {
+        let dir = temp_dir("aup-wal").unwrap();
+        let mut w = Wal::open(&dir).unwrap();
+        w.append(&Record::Delete { table: "t".into(), key: Value::Int(1) }).unwrap();
+        // simulate crash mid-append
+        fsutil::append_line(&dir.join("wal.jsonl"), r#"{"op":"delete","tab"#).unwrap();
+        let records = w.replay().unwrap();
+        assert_eq!(records.len(), 1);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn torn_middle_is_error() {
+        let dir = temp_dir("aup-wal2").unwrap();
+        let mut w = Wal::open(&dir).unwrap();
+        fsutil::append_line(&dir.join("wal.jsonl"), r#"{"op":"delete","tab"#).unwrap();
+        w.append(&Record::Delete { table: "t".into(), key: Value::Int(1) }).unwrap();
+        assert!(w.replay().is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Crate-wide error type. A small hand-rolled enum (thiserror is not
+//! vendored) with `From` conversions for the error sources we touch.
+
+use std::fmt;
+
+/// Unified error for the Auptimizer crate.
+#[derive(Debug)]
+pub enum AupError {
+    /// Malformed JSON input (position, message).
+    Json { pos: usize, msg: String },
+    /// Malformed INI input.
+    Ini { line: usize, msg: String },
+    /// experiment.json / env.ini semantic problems.
+    Config(String),
+    /// Search-space violations (bad range, unknown parameter...).
+    SearchSpace(String),
+    /// Proposer-level failures (unknown algorithm, exhausted, ...).
+    Proposer(String),
+    /// Resource manager failures.
+    Resource(String),
+    /// Job execution failures (script exit status, protocol violation).
+    Job(String),
+    /// Tracking store failures (SQL errors, constraint violations).
+    Store(String),
+    /// PJRT / XLA runtime failures.
+    Runtime(String),
+    /// Filesystem / IO.
+    Io(std::io::Error),
+    /// Numeric failure (Cholesky not PD, singular system, NaN score...).
+    Numeric(String),
+}
+
+impl fmt::Display for AupError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AupError::Json { pos, msg } => write!(f, "json error at byte {pos}: {msg}"),
+            AupError::Ini { line, msg } => write!(f, "ini error at line {line}: {msg}"),
+            AupError::Config(m) => write!(f, "config error: {m}"),
+            AupError::SearchSpace(m) => write!(f, "search space error: {m}"),
+            AupError::Proposer(m) => write!(f, "proposer error: {m}"),
+            AupError::Resource(m) => write!(f, "resource error: {m}"),
+            AupError::Job(m) => write!(f, "job error: {m}"),
+            AupError::Store(m) => write!(f, "store error: {m}"),
+            AupError::Runtime(m) => write!(f, "runtime error: {m}"),
+            AupError::Io(e) => write!(f, "io error: {e}"),
+            AupError::Numeric(m) => write!(f, "numeric error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for AupError {}
+
+impl From<std::io::Error> for AupError {
+    fn from(e: std::io::Error) -> Self {
+        AupError::Io(e)
+    }
+}
+
+impl From<std::fmt::Error> for AupError {
+    fn from(e: std::fmt::Error) -> Self {
+        AupError::Config(format!("format error: {e}"))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, AupError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = AupError::Json { pos: 3, msg: "bad".into() };
+        assert_eq!(e.to_string(), "json error at byte 3: bad");
+        let e = AupError::Store("dup key".into());
+        assert!(e.to_string().contains("dup key"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: AupError = io.into();
+        assert!(matches!(e, AupError::Io(_)));
+    }
+}

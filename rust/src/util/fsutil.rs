@@ -1,0 +1,89 @@
+//! Small filesystem helpers shared by the store, job runner and CLI.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::Result;
+
+/// Read a whole file to string.
+pub fn read_to_string(path: &Path) -> Result<String> {
+    Ok(fs::read_to_string(path)?)
+}
+
+/// Write atomically: write to `<path>.tmp` then rename. Prevents torn
+/// snapshots if the process dies mid-write (the WAL covers the rest).
+pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    fs::write(&tmp, contents)?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Append a line to a file, creating it if needed.
+pub fn append_line(path: &Path, line: &str) -> Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(line.as_bytes())?;
+    f.write_all(b"\n")?;
+    Ok(())
+}
+
+/// A unique temp dir under the system temp root (no tempfile crate).
+pub fn temp_dir(prefix: &str) -> Result<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!("{prefix}-{pid}-{nanos}-{n}"));
+    fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_and_read() {
+        let dir = temp_dir("aup-fsutil").unwrap();
+        let p = dir.join("x.json");
+        write_atomic(&p, "hello").unwrap();
+        assert_eq!(read_to_string(&p).unwrap(), "hello");
+        write_atomic(&p, "world").unwrap();
+        assert_eq!(read_to_string(&p).unwrap(), "world");
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn append_lines() {
+        let dir = temp_dir("aup-fsutil").unwrap();
+        let p = dir.join("log.jsonl");
+        append_line(&p, "a").unwrap();
+        append_line(&p, "b").unwrap();
+        assert_eq!(read_to_string(&p).unwrap(), "a\nb\n");
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn temp_dirs_unique() {
+        let a = temp_dir("aup-x").unwrap();
+        let b = temp_dir("aup-x").unwrap();
+        assert_ne!(a, b);
+        fs::remove_dir_all(a).unwrap();
+        fs::remove_dir_all(b).unwrap();
+    }
+}

@@ -1,0 +1,130 @@
+//! env.ini parser — the paper's environment configuration file
+//! (`aup.setup` writes it; every other entrypoint reads it).
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs, `#`/`;`
+//! comments, blank lines. Values keep inner whitespace; surrounding
+//! whitespace is trimmed.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{AupError, Result};
+
+/// Parsed INI document: section -> key -> value. Keys outside any section
+/// land in the "" section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ini {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Ini> {
+        let mut ini = Ini::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(AupError::Ini {
+                        line: lineno + 1,
+                        msg: format!("malformed section header: {line}"),
+                    });
+                }
+                current = line[1..line.len() - 1].trim().to_string();
+                ini.sections.entry(current.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                let val = line[eq + 1..].trim();
+                if key.is_empty() {
+                    return Err(AupError::Ini {
+                        line: lineno + 1,
+                        msg: "empty key".to_string(),
+                    });
+                }
+                ini.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(key.to_string(), val.to_string());
+            } else {
+                return Err(AupError::Ini {
+                    line: lineno + 1,
+                    msg: format!("expected 'key = value', got: {line}"),
+                });
+            }
+        }
+        Ok(ini)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|m| m.get(key)).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    /// Serialize back to INI text (sections sorted, deterministic).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        for (sec, kv) in &self.sections {
+            if !sec.is_empty() {
+                out.push_str(&format!("[{sec}]\n"));
+            }
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_env_ini() {
+        let text = "\
+# Auptimizer environment
+[Auptimizer]
+Auptimizer_PATH = /tmp/aup
+SQLITE_FILE = sqlite3.db
+
+[Resource]
+; comment
+cpu_num = 4
+gpu_ids = 0, 1
+";
+        let ini = Ini::parse(text).unwrap();
+        assert_eq!(ini.get("Auptimizer", "SQLITE_FILE"), Some("sqlite3.db"));
+        assert_eq!(ini.get("Resource", "gpu_ids"), Some("0, 1"));
+        assert_eq!(ini.get("Resource", "missing"), None);
+        assert_eq!(ini.get_or("Resource", "missing", "d"), "d");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut ini = Ini::default();
+        ini.set("A", "k", "v");
+        ini.set("", "top", "1");
+        let re = Ini::parse(&ini.to_string()).unwrap();
+        assert_eq!(ini, re);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Ini::parse("[unclosed\n").is_err());
+        assert!(Ini::parse("no equals here\n").is_err());
+        assert!(Ini::parse("= noval\n").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation substrates: error type, JSON, INI, PRNG, logging, virtual
+//! clock / discrete-event simulation, and a minimal property-testing
+//! harness. Everything here is dependency-free (the build environment is
+//! offline; only the `xla` crate and `anyhow` are vendored).
+
+pub mod error;
+pub mod json;
+pub mod ini;
+pub mod rng;
+pub mod logging;
+pub mod sim;
+pub mod prop;
+pub mod fsutil;

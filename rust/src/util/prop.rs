@@ -1,0 +1,117 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in the offline environment, so this module
+//! provides the subset the coordinator invariant tests need: seeded case
+//! generation, a configurable number of cases, and on failure a report of
+//! the seed + case index so the exact case replays deterministically.
+//! No shrinking — generators are kept small/structured instead.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Honor PROP_CASES / PROP_SEED env for CI tuning & replay.
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xA0B1C2D3);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. `gen` receives a fresh
+/// child RNG per case. Panics (with seed/case info) on the first failing
+/// case; propagates the inner panic message.
+pub fn check<G, T, P>(name: &str, config: PropConfig, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut r = root.fork();
+        let input = generate(&mut r);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}):\n  input: {input:?}\n  error: {msg}",
+                cases = config.cases,
+                seed = config.seed,
+            );
+        }
+    }
+}
+
+/// Convenience wrapper using the default config.
+pub fn check_default<G, T, P>(name: &str, generate: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), generate, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "addition commutes",
+            PropConfig { cases: 10, seed: 1 },
+            |r| (r.range(-10.0, 10.0), r.range(-10.0, 10.0)),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports() {
+        check(
+            "always fails",
+            PropConfig { cases: 5, seed: 2 },
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut v = Vec::new();
+            check(
+                "collect",
+                PropConfig { cases: 5, seed },
+                |r| r.next_u64(),
+                |&x| {
+                    v.push(x);
+                    Ok(())
+                },
+            );
+            v
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

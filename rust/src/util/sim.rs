@@ -1,0 +1,208 @@
+//! Virtual clock + discrete-event simulation engine.
+//!
+//! The paper's Fig. 3 measures experiment wall-time on up to 64 AWS EC2
+//! instances. This machine has one CPU, so we reproduce the *mechanism*
+//! instead of the testbed: job durations, EC2 spawn latency and per-
+//! instance performance fluctuation are modelled explicitly and advanced
+//! on a virtual clock. The same `Clock` trait backs real wall-time in
+//! production paths, so coordinator code is clock-agnostic.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+/// Abstract time source. `now()` is in seconds from an arbitrary origin.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock backed by `Instant`.
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// Shared virtual clock, advanced by the event loop.
+#[derive(Clone)]
+pub struct SimClock {
+    t: Rc<RefCell<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { t: Rc::new(RefCell::new(0.0)) }
+    }
+
+    pub fn advance_to(&self, t: f64) {
+        let mut cur = self.t.borrow_mut();
+        assert!(t + 1e-12 >= *cur, "time went backwards: {t} < {cur}", cur = *cur);
+        *cur = t;
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        *self.t.borrow()
+    }
+}
+
+/// Event id, used as a tiebreaker so simultaneous events fire in
+/// scheduling order (determinism).
+type EventId = u64;
+
+struct Event<T> {
+    at: f64,
+    id: EventId,
+    payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.id == other.id
+    }
+}
+impl<T> Eq for Event<T> {}
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// Deterministic discrete-event queue over a [`SimClock`].
+pub struct EventQueue<T> {
+    clock: SimClock,
+    heap: BinaryHeap<Reverse<Event<T>>>,
+    next_id: EventId,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new(clock: SimClock) -> Self {
+        EventQueue { clock, heap: BinaryHeap::new(), next_id: 0 }
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    /// Schedule `payload` to fire `delay` seconds from the current
+    /// virtual time.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay >= 0.0, "negative delay");
+        let at = self.clock.now() + delay;
+        self.schedule_at(at, payload);
+    }
+
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at + 1e-12 >= self.clock.now(), "scheduling into the past");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.heap.push(Reverse(Event { at, id, payload }));
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|Reverse(ev)| {
+            self.clock.advance_to(ev.at);
+            (ev.at, ev.payload)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Timestamp of the next event without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(ev)| ev.at)
+    }
+}
+
+/// Sleep helper usable with either clock flavor: real sleep for
+/// `WallClock` paths, no-op advancement is handled by the event loop for
+/// sim paths (coordination code should not call this in sim mode).
+pub fn real_sleep(seconds: f64) {
+    std::thread::sleep(Duration::from_secs_f64(seconds.max(0.0)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_order_and_clock_advance() {
+        let clock = SimClock::new();
+        let mut q: EventQueue<&str> = EventQueue::new(clock.clone());
+        q.schedule_in(5.0, "b");
+        q.schedule_in(1.0, "a");
+        q.schedule_in(5.0, "c"); // same time as b, later id -> fires after b
+        assert_eq!(q.next(), Some((1.0, "a")));
+        assert_eq!(clock.now(), 1.0);
+        assert_eq!(q.next(), Some((5.0, "b")));
+        assert_eq!(q.next(), Some((5.0, "c")));
+        assert_eq!(clock.now(), 5.0);
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn schedule_relative_to_advanced_clock() {
+        let clock = SimClock::new();
+        let mut q: EventQueue<u32> = EventQueue::new(clock.clone());
+        q.schedule_in(2.0, 1);
+        q.next();
+        q.schedule_in(3.0, 2);
+        assert_eq!(q.next(), Some((5.0, 2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "time went backwards")]
+    fn clock_monotonic() {
+        let c = SimClock::new();
+        c.advance_to(5.0);
+        c.advance_to(4.0);
+    }
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

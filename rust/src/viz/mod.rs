@@ -1,0 +1,272 @@
+//! Result visualization + export (paper §III-C: "The Auptimizer
+//! framework also provides a basic tool to visualize the results from
+//! history"). Terminal-native: best-so-far curves as ASCII plots, plus
+//! CSV and SVG scatter export used by the Fig-4/Fig-5 benches.
+
+use std::fmt::Write as _;
+
+/// Render a best-so-far curve (x = job index, y = score) as an ASCII
+/// line chart of the given size.
+pub fn ascii_curve(values: &[f64], width: usize, height: usize) -> String {
+    if values.is_empty() || width < 2 || height < 2 {
+        return String::new();
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for col in 0..width {
+        let idx = col * (values.len() - 1) / (width - 1).max(1);
+        let v = values[idx.min(values.len() - 1)];
+        let row = ((hi - v) / span * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col] = '*';
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{hi:>12.5} ┐");
+    for row in grid {
+        let line: String = row.into_iter().collect();
+        let _ = writeln!(out, "{:>12} │{line}", "");
+    }
+    let _ = writeln!(out, "{lo:>12.5} ┴{}", "─".repeat(width));
+    out
+}
+
+/// CSV from named columns. All columns must be equal length.
+pub fn to_csv(columns: &[(&str, Vec<f64>)]) -> String {
+    assert!(!columns.is_empty());
+    let n = columns[0].1.len();
+    assert!(columns.iter().all(|(_, v)| v.len() == n), "ragged columns");
+    let mut out = String::new();
+    let header: Vec<&str> = columns.iter().map(|(name, _)| *name).collect();
+    let _ = writeln!(out, "{}", header.join(","));
+    for i in 0..n {
+        let row: Vec<String> = columns.iter().map(|(_, v)| format!("{}", v[i])).collect();
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+/// Minimal SVG scatter plot (one series per call to `add_series`).
+/// Used to export the Fig-4 hyperparameter-distribution panels.
+pub struct SvgScatter {
+    width: f64,
+    height: f64,
+    margin: f64,
+    x_range: (f64, f64),
+    y_range: (f64, f64),
+    body: String,
+    title: String,
+}
+
+impl SvgScatter {
+    pub fn new(title: &str, x_range: (f64, f64), y_range: (f64, f64)) -> SvgScatter {
+        SvgScatter {
+            width: 480.0,
+            height: 360.0,
+            margin: 40.0,
+            x_range,
+            y_range,
+            body: String::new(),
+            title: title.to_string(),
+        }
+    }
+
+    fn map(&self, x: f64, y: f64) -> (f64, f64) {
+        let (x0, x1) = self.x_range;
+        let (y0, y1) = self.y_range;
+        let px = self.margin
+            + (x - x0) / (x1 - x0).max(1e-12) * (self.width - 2.0 * self.margin);
+        let py = self.height
+            - self.margin
+            - (y - y0) / (y1 - y0).max(1e-12) * (self.height - 2.0 * self.margin);
+        (px, py)
+    }
+
+    pub fn add_series(&mut self, xs: &[f64], ys: &[f64], color: &str) {
+        for (x, y) in xs.iter().zip(ys) {
+            let (px, py) = self.map(*x, *y);
+            let _ = writeln!(
+                self.body,
+                r#"<circle cx="{px:.1}" cy="{py:.1}" r="3" fill="{color}" fill-opacity="0.6"/>"#
+            );
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}">
+<rect width="{w}" height="{h}" fill="white"/>
+<text x="{tx}" y="20" text-anchor="middle" font-family="monospace">{title}</text>
+<rect x="{m}" y="{m}" width="{iw}" height="{ih}" fill="none" stroke="black"/>
+{body}</svg>
+"#,
+            w = self.width,
+            h = self.height,
+            m = self.margin,
+            iw = self.width - 2.0 * self.margin,
+            ih = self.height - 2.0 * self.margin,
+            tx = self.width / 2.0,
+            title = self.title,
+            body = self.body,
+        )
+    }
+}
+
+/// Multi-series SVG line plot (used for the Fig-5 best-so-far curves).
+/// X is linear; Y may be log10-scaled for error curves.
+pub struct SvgLines {
+    width: f64,
+    height: f64,
+    margin: f64,
+    x_range: (f64, f64),
+    y_range: (f64, f64),
+    log_y: bool,
+    body: String,
+    legend: Vec<(String, String)>,
+    title: String,
+}
+
+impl SvgLines {
+    pub fn new(title: &str, x_range: (f64, f64), y_range: (f64, f64), log_y: bool) -> SvgLines {
+        assert!(!log_y || (y_range.0 > 0.0 && y_range.1 > 0.0), "log axis needs positive range");
+        SvgLines {
+            width: 560.0,
+            height: 400.0,
+            margin: 48.0,
+            x_range,
+            y_range,
+            log_y,
+            body: String::new(),
+            legend: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    fn map(&self, x: f64, y: f64) -> (f64, f64) {
+        let (x0, x1) = self.x_range;
+        let (mut y0, mut y1) = self.y_range;
+        let mut y = y;
+        if self.log_y {
+            y = y.max(y0).log10();
+            y0 = self.y_range.0.log10();
+            y1 = self.y_range.1.log10();
+        }
+        let px = self.margin + (x - x0) / (x1 - x0).max(1e-12) * (self.width - 2.0 * self.margin);
+        let py = self.height
+            - self.margin
+            - (y - y0) / (y1 - y0).max(1e-12) * (self.height - 2.0 * self.margin);
+        (px, py.clamp(0.0, self.height))
+    }
+
+    pub fn add_series(&mut self, name: &str, xs: &[f64], ys: &[f64], color: &str) {
+        assert_eq!(xs.len(), ys.len());
+        let pts: Vec<String> = xs
+            .iter()
+            .zip(ys)
+            .filter(|(_, y)| y.is_finite())
+            .map(|(&x, &y)| {
+                let (px, py) = self.map(x, y);
+                format!("{px:.1},{py:.1}")
+            })
+            .collect();
+        if pts.is_empty() {
+            return;
+        }
+        let _ = writeln!(
+            self.body,
+            r#"<polyline fill="none" stroke="{color}" stroke-width="1.5" points="{}"/>"#,
+            pts.join(" ")
+        );
+        self.legend.push((name.to_string(), color.to_string()));
+    }
+
+    pub fn render(&self) -> String {
+        let mut legend = String::new();
+        for (i, (name, color)) in self.legend.iter().enumerate() {
+            let y = 30.0 + 16.0 * i as f64;
+            let _ = writeln!(
+                legend,
+                r#"<rect x="{x}" y="{ry}" width="12" height="3" fill="{color}"/><text x="{tx}" y="{ty}" font-family="monospace" font-size="11">{name}</text>"#,
+                x = self.width - 150.0,
+                ry = y - 3.0,
+                tx = self.width - 132.0,
+                ty = y + 2.0,
+            );
+        }
+        format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}">
+<rect width="{w}" height="{h}" fill="white"/>
+<text x="{tx}" y="20" text-anchor="middle" font-family="monospace">{title}</text>
+<rect x="{m}" y="{m}" width="{iw}" height="{ih}" fill="none" stroke="black"/>
+{body}{legend}</svg>
+"#,
+            w = self.width,
+            h = self.height,
+            m = self.margin,
+            iw = self.width - 2.0 * self.margin,
+            ih = self.height - 2.0 * self.margin,
+            tx = self.width / 2.0,
+            title = self.title,
+            body = self.body,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_curve_renders() {
+        let values: Vec<f64> = (0..50).map(|i| 100.0 / (1.0 + i as f64)).collect();
+        let s = ascii_curve(&values, 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 10);
+        assert!(s.contains("100.00000"));
+    }
+
+    #[test]
+    fn ascii_curve_degenerate_inputs() {
+        assert_eq!(ascii_curve(&[], 40, 10), "");
+        let s = ascii_curve(&[1.0, 1.0, 1.0], 10, 4); // zero span
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn csv_layout() {
+        let csv = to_csv(&[("a", vec![1.0, 2.0]), ("b", vec![0.5, 0.25])]);
+        assert_eq!(csv, "a,b\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn svg_lines_multi_series() {
+        let mut p = SvgLines::new("fig5", (0.0, 100.0), (0.01, 1.0), true);
+        p.add_series("a", &[0.0, 50.0, 100.0], &[0.9, 0.1, 0.02], "red");
+        p.add_series("b", &[0.0, 100.0], &[0.5, 0.05], "blue");
+        let svg = p.render();
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains(">a</text>") && svg.contains(">b</text>"));
+    }
+
+    #[test]
+    fn svg_lines_skips_nan_points() {
+        let mut p = SvgLines::new("t", (0.0, 1.0), (0.0, 1.0), false);
+        p.add_series("x", &[0.0, 0.5, 1.0], &[f64::NAN, 0.5, 0.6], "green");
+        assert_eq!(p.render().matches("<polyline").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "log axis needs positive range")]
+    fn svg_lines_log_needs_positive() {
+        SvgLines::new("t", (0.0, 1.0), (0.0, 1.0), true);
+    }
+
+    #[test]
+    fn svg_contains_points() {
+        let mut p = SvgScatter::new("test", (0.0, 1.0), (0.0, 1.0));
+        p.add_series(&[0.0, 0.5, 1.0], &[0.0, 0.5, 1.0], "red");
+        let svg = p.render();
+        assert_eq!(svg.matches("<circle").count(), 3);
+        assert!(svg.contains("</svg>"));
+    }
+}

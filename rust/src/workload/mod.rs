@@ -1,0 +1,163 @@
+//! Built-in job workloads.
+//!
+//! * Analytic black-box objectives (Rosenbrock — paper Code 2 — plus the
+//!   standard HPO benchmark functions) used by tests, examples and the
+//!   overhead benches.
+//! * [`surrogate`] — the MNIST-CNN response surface used to run the
+//!   paper's full Fig. 4 / Fig. 5 budgets in seconds (see DESIGN.md §3).
+
+pub mod surrogate;
+
+use crate::search::BasicConfig;
+
+/// Rosenbrock banana function (paper Code 2 demonstrates random search on
+/// it). Global minimum 0 at (1, 1).
+pub fn rosenbrock(c: &BasicConfig) -> f64 {
+    let x = c.get_num("x").unwrap_or(0.0);
+    let y = c.get_num("y").unwrap_or(0.0);
+    (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2)
+}
+
+/// Branin — classic 2-d BO benchmark. Three global minima, value ≈ 0.397887.
+pub fn branin(c: &BasicConfig) -> f64 {
+    let x = c.get_num("x").unwrap_or(0.0);
+    let y = c.get_num("y").unwrap_or(0.0);
+    let a = 1.0;
+    let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+    let cc = 5.0 / std::f64::consts::PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * std::f64::consts::PI);
+    a * (y - b * x * x + cc * x - r).powi(2) + s * (1.0 - t) * x.cos() + s
+}
+
+/// Sphere — the easiest convex sanity check. Minimum 0 at origin.
+pub fn sphere(c: &BasicConfig) -> f64 {
+    c.values
+        .iter()
+        .filter(|(k, _)| !is_aux(k))
+        .filter_map(|(_, v)| v.as_f64())
+        .map(|x| x * x)
+        .sum()
+}
+
+/// Rastrigin — highly multimodal. Minimum 0 at origin.
+pub fn rastrigin(c: &BasicConfig) -> f64 {
+    let xs: Vec<f64> = c
+        .values
+        .iter()
+        .filter(|(k, _)| !is_aux(k))
+        .filter_map(|(_, v)| v.as_f64())
+        .collect();
+    10.0 * xs.len() as f64
+        + xs.iter()
+            .map(|x| x * x - 10.0 * (2.0 * std::f64::consts::PI * x).cos())
+            .sum::<f64>()
+}
+
+/// Hartmann-6 on [0,1]^6 (params h1..h6). Global minimum ≈ -3.32237.
+pub fn hartmann6(c: &BasicConfig) -> f64 {
+    const ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+    const A: [[f64; 6]; 4] = [
+        [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+        [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+        [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+        [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+    ];
+    const P: [[f64; 6]; 4] = [
+        [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+        [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+        [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+        [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+    ];
+    let x: Vec<f64> = (1..=6)
+        .map(|i| c.get_num(&format!("h{i}")).unwrap_or(0.5))
+        .collect();
+    -(0..4)
+        .map(|i| {
+            ALPHA[i]
+                * (-(0..6)
+                    .map(|j| A[i][j] * (x[j] - P[i][j]).powi(2))
+                    .sum::<f64>())
+                .exp()
+        })
+        .sum::<f64>()
+}
+
+fn is_aux(key: &str) -> bool {
+    matches!(key, "job_id" | "n_iterations" | "save_model" | "expdir")
+}
+
+/// Look up a builtin objective by the `script: "builtin:<name>"` string
+/// in experiment.json.
+pub fn builtin(name: &str) -> Option<fn(&BasicConfig) -> f64> {
+    match name {
+        "rosenbrock" => Some(rosenbrock),
+        "branin" => Some(branin),
+        "sphere" => Some(sphere),
+        "rastrigin" => Some(rastrigin),
+        "hartmann6" => Some(hartmann6),
+        "mnist_cnn_surrogate" => Some(surrogate::mnist_cnn_surrogate),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pairs: &[(&str, f64)]) -> BasicConfig {
+        let mut c = BasicConfig::new();
+        for (k, v) in pairs {
+            c.set_num(k, *v);
+        }
+        c
+    }
+
+    #[test]
+    fn rosenbrock_minimum() {
+        assert_eq!(rosenbrock(&cfg(&[("x", 1.0), ("y", 1.0)])), 0.0);
+        assert!(rosenbrock(&cfg(&[("x", 0.0), ("y", 0.0)])) > 0.0);
+    }
+
+    #[test]
+    fn branin_known_minimum() {
+        // one of the three global minima: (pi, 2.275)
+        let v = branin(&cfg(&[("x", std::f64::consts::PI), ("y", 2.275)]));
+        assert!((v - 0.397887).abs() < 1e-4, "{v}");
+    }
+
+    #[test]
+    fn sphere_ignores_aux_keys() {
+        let mut c = cfg(&[("x", 3.0), ("y", 4.0)]);
+        c.set_num("job_id", 999.0);
+        assert_eq!(sphere(&c), 25.0);
+    }
+
+    #[test]
+    fn rastrigin_minimum_and_multimodality() {
+        assert!(rastrigin(&cfg(&[("x", 0.0), ("y", 0.0)])).abs() < 1e-12);
+        // local minimum near x=1 is worse than global
+        assert!(rastrigin(&cfg(&[("x", 1.0), ("y", 0.0)])) > 0.5);
+    }
+
+    #[test]
+    fn hartmann6_known_minimum() {
+        let c = cfg(&[
+            ("h1", 0.20169),
+            ("h2", 0.150011),
+            ("h3", 0.476874),
+            ("h4", 0.275332),
+            ("h5", 0.311652),
+            ("h6", 0.6573),
+        ]);
+        let v = hartmann6(&c);
+        assert!((v + 3.32237).abs() < 1e-4, "{v}");
+    }
+
+    #[test]
+    fn builtin_lookup() {
+        assert!(builtin("rosenbrock").is_some());
+        assert!(builtin("nope").is_none());
+    }
+}

@@ -1,0 +1,218 @@
+//! Edge-case and failure-injection tests across module boundaries —
+//! the long tail the unit suites don't reach.
+
+use std::sync::Arc;
+
+use auptimizer::experiment::{Experiment, ExperimentOptions};
+use auptimizer::prelude::*;
+use auptimizer::resource::executor::FnExecutor;
+use auptimizer::store::Value;
+
+fn exp_json(body: &str) -> ExperimentConfig {
+    ExperimentConfig::from_json_str(body).unwrap()
+}
+
+#[test]
+fn maximize_hyperband_promotes_high_scores() {
+    // hyperband with target=max must promote the HIGHEST-scoring arms
+    let cfg = exp_json(
+        r#"{
+            "proposer": "hyperband", "script": "builtin:sphere",
+            "n_samples": 0, "n_parallel": 2, "target": "max",
+            "n_iterations": 9, "eta": 3, "random_seed": 8,
+            "parameter_config": [{"name": "x", "type": "float", "range": [-3, 3]}]
+        }"#,
+    );
+    let exec = Arc::new(FnExecutor::new("absx", |c, _| {
+        Ok(c.get_num("x").unwrap().abs()) // maximize |x|
+    }));
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    // best must be the max observed
+    let max_seen = s.history.iter().map(|(_, v, _)| *v).fold(f64::NEG_INFINITY, f64::max);
+    assert_eq!(s.best_score.unwrap(), max_seen);
+    assert!(max_seen > 1.5, "promotion should reach high-|x| arms: {max_seen}");
+}
+
+#[test]
+fn grid_with_more_workers_than_points() {
+    let cfg = exp_json(
+        r#"{
+            "proposer": "grid", "script": "builtin:sphere",
+            "n_samples": 0, "n_parallel": 16, "target": "min",
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1], "n": 3}]
+        }"#,
+    );
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 3);
+}
+
+#[test]
+fn every_job_failing_still_terminates_cleanly() {
+    for proposer in ["random", "hyperopt", "spearmint", "autokeras"] {
+        let cfg = exp_json(&format!(
+            r#"{{
+                "proposer": "{proposer}", "script": "builtin:sphere",
+                "n_samples": 8, "n_parallel": 2, "target": "min", "random_seed": 4,
+                "parameter_config": [
+                    {{"name": "conv1", "type": "int", "range": [8, 32]}},
+                    {{"name": "x", "type": "float", "range": [0, 1]}}
+                ]
+            }}"#
+        ));
+        let exec = Arc::new(FnExecutor::new("alwaysfail", |_, _| {
+            Err(auptimizer::util::error::AupError::Job("injected".into()))
+        }));
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        let mut exp = Experiment::new(cfg, opts).unwrap();
+        let s = exp.run().unwrap_or_else(|e| panic!("{proposer}: {e}"));
+        assert_eq!(s.n_failed, s.n_jobs, "{proposer}");
+        assert!(s.best_score.is_none(), "{proposer}");
+    }
+}
+
+#[test]
+fn nan_scores_treated_as_failures_in_store() {
+    let cfg = exp_json(
+        r#"{
+            "proposer": "random", "script": "builtin:sphere",
+            "n_samples": 4, "n_parallel": 1, "target": "min", "random_seed": 1,
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let exec = Arc::new(FnExecutor::new("nan", |c, _| {
+        let id = c.job_id().unwrap();
+        if id % 2 == 0 {
+            Ok(f64::NAN) // scored NaN: recorded as NULL in the store
+        } else {
+            Ok(0.5)
+        }
+    }));
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    // NaN never becomes "best" and NaN jobs count as failures
+    assert_eq!(s.best_score, Some(0.5));
+    assert_eq!(s.n_failed, 2);
+    let mut store = exp.into_store();
+    let r = store
+        .execute("SELECT COUNT(*) FROM job WHERE score IS NULL")
+        .unwrap();
+    assert_eq!(r.scalar(), Some(&Value::Int(2)));
+}
+
+#[test]
+fn sql_operator_matrix_over_job_table() {
+    let mut store = Store::in_memory();
+    auptimizer::store::schema::init_schema(&mut store).unwrap();
+    for (jid, score) in [(0, 0.1), (1, 0.2), (2, 0.3), (3, 0.4)] {
+        store
+            .execute(&format!(
+                "INSERT INTO job (jid, eid, rid, config, status, score, start_time) \
+                 VALUES ({jid}, 0, 0, '{{}}', 'FINISHED', {score}, 0)"
+            ))
+            .unwrap();
+    }
+    let count = |store: &mut Store, q: &str| store.execute(q).unwrap().scalar().unwrap().as_i64().unwrap();
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE score < 0.3"), 2);
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE score <= 0.3"), 3);
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE score > 0.3"), 1);
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE score >= 0.3"), 2);
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE score != 0.3"), 3);
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE jid = 1 OR jid = 3"), 2);
+    assert_eq!(
+        count(
+            &mut store,
+            "SELECT COUNT(*) FROM job WHERE (jid = 1 OR jid = 3) AND score > 0.25"
+        ),
+        1
+    );
+    assert_eq!(count(&mut store, "SELECT COUNT(*) FROM job WHERE end_time IS NULL"), 4);
+}
+
+#[test]
+fn log_scale_int_parameter_roundtrips() {
+    let space = auptimizer::search::SearchSpace::new(vec![
+        auptimizer::search::ParamSpec::int("units", 16, 1024).with_log_scale(),
+    ])
+    .unwrap();
+    let mut rng = auptimizer::util::rng::Rng::new(3);
+    let mut small = 0;
+    for _ in 0..2000 {
+        let c = space.sample(&mut rng);
+        let v = c.get_num("units").unwrap();
+        assert!((16.0..=1024.0).contains(&v));
+        assert_eq!(v.fract(), 0.0);
+        if v < 128.0 {
+            small += 1;
+        }
+    }
+    // log-uniform: half the draws land below sqrt(16*1024)=128
+    assert!((small as f64 / 2000.0 - 0.5).abs() < 0.06, "{small}");
+}
+
+#[test]
+fn deeply_nested_json_survives() {
+    let mut s = String::new();
+    let depth = 64;
+    for _ in 0..depth {
+        s.push_str(r#"{"a":["#);
+    }
+    s.push('1');
+    for _ in 0..depth {
+        s.push_str("]}");
+    }
+    let v = Json::parse(&s).unwrap();
+    assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+}
+
+#[test]
+fn proposer_spec_ignores_unknown_extras() {
+    // forwards-compat: unknown keys in experiment.json flow through
+    let cfg = exp_json(
+        r#"{
+            "proposer": "random", "script": "builtin:sphere",
+            "n_samples": 2, "n_parallel": 1, "target": "min",
+            "some_future_knob": {"nested": [1, 2, 3]},
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+    assert_eq!(exp.run().unwrap().n_jobs, 2);
+}
+
+#[test]
+fn experiment_errors_cleanly_on_missing_script() {
+    let cfg = exp_json(
+        r#"{
+            "proposer": "random", "script": "/does/not/exist.py",
+            "n_samples": 2, "n_parallel": 1, "target": "min",
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let err = match Experiment::new(cfg, ExperimentOptions::default()) {
+        Err(e) => e,
+        Ok(_) => panic!("missing script must fail construction"),
+    };
+    assert!(err.to_string().contains("not found"), "{err}");
+}
+
+#[test]
+fn n_samples_zero_random_is_empty_success() {
+    let cfg = exp_json(
+        r#"{
+            "proposer": "random", "script": "builtin:sphere",
+            "n_samples": 0, "n_parallel": 1, "target": "min",
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 0);
+    assert!(s.best_score.is_none());
+}

@@ -1,0 +1,267 @@
+//! Integration tests across the coordinator boundary: experiment loop ×
+//! proposers × resource managers × script executor × tracking store.
+
+use std::os::unix::fs::PermissionsExt;
+use std::sync::Arc;
+
+use auptimizer::experiment::{Experiment, ExperimentOptions};
+use auptimizer::prelude::*;
+use auptimizer::resource::executor::FnExecutor;
+use auptimizer::store::schema;
+
+fn rosen_json(proposer: &str, n_samples: usize, n_parallel: usize, resource: &str) -> String {
+    format!(
+        r#"{{
+            "proposer": "{proposer}",
+            "script": "builtin:rosenbrock",
+            "n_samples": {n_samples},
+            "n_parallel": {n_parallel},
+            "target": "min",
+            "resource": "{resource}",
+            "random_seed": 11,
+            "n_iterations": 9,
+            "aws_spawn_latency": 0.0,
+            "parameter_config": [
+                {{"name": "x", "type": "float", "range": [-5, 10]}},
+                {{"name": "y", "type": "float", "range": [-5, 10]}}
+            ]
+        }}"#
+    )
+}
+
+#[test]
+fn all_resource_kinds_run_experiments() {
+    for resource in ["cpu", "gpu", "node", "aws"] {
+        let cfg = ExperimentConfig::from_json_str(&rosen_json("random", 12, 3, resource)).unwrap();
+        let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+        let s = exp.run().unwrap_or_else(|e| panic!("{resource}: {e}"));
+        assert_eq!(s.n_jobs, 12, "{resource}");
+        assert_eq!(s.n_failed, 0, "{resource}");
+    }
+}
+
+#[test]
+fn gpu_resource_env_reaches_jobs() {
+    // jobs must observe CUDA_VISIBLE_DEVICES from the GPU manager, and
+    // concurrent jobs must never share a device
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    let seen: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(vec![]));
+    let active: Arc<Mutex<HashSet<String>>> = Arc::new(Mutex::new(HashSet::new()));
+    let (seen2, active2) = (seen.clone(), active.clone());
+    let exec = Arc::new(FnExecutor::new("gpucheck", move |c, env| {
+        let dev = env.env.get("CUDA_VISIBLE_DEVICES").cloned().unwrap_or_default();
+        {
+            let mut a = active2.lock().unwrap();
+            assert!(a.insert(dev.clone()), "device {dev} double-booked");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        active2.lock().unwrap().remove(&dev);
+        seen2.lock().unwrap().push(dev);
+        Ok(auptimizer::workload::rosenbrock(c))
+    }));
+    let cfg = ExperimentConfig::from_json_str(&rosen_json("random", 16, 4, "gpu")).unwrap();
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    exp.run().unwrap();
+    let seen = seen.lock().unwrap();
+    assert_eq!(seen.len(), 16);
+    assert!(seen.iter().all(|d| !d.is_empty()));
+    let distinct: HashSet<&String> = seen.iter().collect();
+    assert!(distinct.len() > 1, "multiple devices should be used");
+}
+
+#[test]
+fn script_protocol_end_to_end() {
+    // the paper's Code-3 flow through the whole loop: config file in,
+    // `result:` line out, subprocess per job
+    let dir = auptimizer::util::fsutil::temp_dir("aup-it-script").unwrap();
+    let script = dir.join("sphere.sh");
+    std::fs::write(
+        &script,
+        "#!/bin/sh\nx=$(sed 's/.*\"x\":\\([-0-9.e]*\\).*/\\1/' \"$1\")\n\
+         echo \"result: $(awk \"BEGIN { print $x * $x }\")\"\n",
+    )
+    .unwrap();
+    let mut perm = std::fs::metadata(&script).unwrap().permissions();
+    perm.set_mode(0o755);
+    std::fs::set_permissions(&script, perm).unwrap();
+
+    let cfg = ExperimentConfig::from_json_str(&format!(
+        r#"{{
+            "proposer": "random",
+            "script": "{}",
+            "workdir": "{}",
+            "n_samples": 8,
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 2,
+            "parameter_config": [{{"name": "x", "type": "float", "range": [-4, 4]}}]
+        }}"#,
+        script.display(),
+        dir.display()
+    ))
+    .unwrap();
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 8);
+    assert_eq!(s.n_failed, 0);
+    // score really is x^2 of the best config
+    let bc = s.best_config.unwrap();
+    let x = bc.get_num("x").unwrap();
+    assert!((s.best_score.unwrap() - x * x).abs() < 1e-4);
+    // per-job config files exist (Code 1)
+    assert!(dir.join("job_0.json").exists());
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn durable_store_survives_experiment_and_reopen() {
+    let dir = auptimizer::util::fsutil::temp_dir("aup-it-store").unwrap();
+    let eid;
+    {
+        let store = Store::open(&dir).unwrap();
+        let cfg = ExperimentConfig::from_json_str(&rosen_json("hyperopt", 10, 2, "cpu")).unwrap();
+        let mut opts = ExperimentOptions::default();
+        opts.store = Some(store);
+        opts.user = "it".into();
+        let mut exp = Experiment::new(cfg, opts).unwrap();
+        let s = exp.run().unwrap();
+        eid = s.eid;
+    }
+    // reopen from disk: WAL/snapshot replay must reconstruct everything
+    let mut store = Store::open(&dir).unwrap();
+    let jobs = schema::jobs_of(&mut store, eid).unwrap();
+    assert_eq!(jobs.len(), 10);
+    assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished));
+    let exp_row = schema::get_experiment(&mut store, eid).unwrap().unwrap();
+    assert!(exp_row.end_time.is_some());
+    assert!(exp_row.exp_config.contains("hyperopt"));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn real_thread_scalability_shrinks_wall_time() {
+    // the non-simulated counterpart of Fig 3: sleep-jobs on real threads;
+    // 4 workers must be ≥2x faster than 1 worker
+    let run_with = |n_parallel: usize| {
+        let exec = Arc::new(FnExecutor::new("sleep20", |c, _| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            Ok(auptimizer::workload::rosenbrock(c))
+        }));
+        let cfg =
+            ExperimentConfig::from_json_str(&rosen_json("random", 24, n_parallel, "cpu")).unwrap();
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        let mut exp = Experiment::new(cfg, opts).unwrap();
+        exp.run().unwrap().wall_time
+    };
+    let t1 = run_with(1);
+    let t4 = run_with(4);
+    assert!(
+        t4 < t1 / 2.0,
+        "4 workers should at least halve wall time: {t1:.3}s -> {t4:.3}s"
+    );
+}
+
+#[test]
+fn seeded_experiments_reproduce_exactly() {
+    // reproducibility story (§III-C): same seed => same explored configs
+    let run = || {
+        let cfg = ExperimentConfig::from_json_str(&rosen_json("random", 10, 1, "cpu")).unwrap();
+        let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+        let s = exp.run().unwrap();
+        let mut store = exp.into_store();
+        schema::jobs_of(&mut store, s.eid)
+            .unwrap()
+            .iter()
+            .map(|j| j.config.clone())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn sequence_proposer_replays_exported_experiment() {
+    // run random, export its configs, replay them via 'sequence' and get
+    // identical scores — the reuse/reproduce workflow
+    let cfg = ExperimentConfig::from_json_str(&rosen_json("random", 6, 2, "cpu")).unwrap();
+    let mut exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+    let s = exp.run().unwrap();
+    let mut store = exp.into_store();
+    let jobs = schema::jobs_of(&mut store, s.eid).unwrap();
+    let configs: Vec<String> = jobs
+        .iter()
+        .map(|j| {
+            let mut c = BasicConfig::from_json_str(&j.config).unwrap();
+            c.values.remove("job_id");
+            c.to_json_string()
+        })
+        .collect();
+    let replay_cfg = ExperimentConfig::from_json_str(&format!(
+        r#"{{
+            "proposer": "sequence",
+            "script": "builtin:rosenbrock",
+            "n_samples": 6,
+            "n_parallel": 1,
+            "target": "min",
+            "configs": [{}],
+            "parameter_config": [
+                {{"name": "x", "type": "float", "range": [-5, 10]}},
+                {{"name": "y", "type": "float", "range": [-5, 10]}}
+            ]
+        }}"#,
+        configs.join(",")
+    ))
+    .unwrap();
+    let mut replay = Experiment::new(replay_cfg, ExperimentOptions::default()).unwrap();
+    let s2 = replay.run().unwrap();
+    assert_eq!(s.best_score, s2.best_score);
+}
+
+#[test]
+fn prop_loop_never_exceeds_n_parallel_and_scores_recorded() {
+    // DESIGN.md invariants over random loop shapes
+    auptimizer::util::prop::check(
+        "experiment loop invariants",
+        auptimizer::util::prop::PropConfig { cases: 8, seed: 99 },
+        |r| (r.below(3) + 1, r.below(20) + 2, r.next_u64()),
+        |&(n_parallel, n_samples, seed)| {
+            use std::sync::atomic::{AtomicUsize, Ordering};
+            let peak = Arc::new(AtomicUsize::new(0));
+            let cur = Arc::new(AtomicUsize::new(0));
+            let (p2, c2) = (peak.clone(), cur.clone());
+            let exec = Arc::new(FnExecutor::new("ctr", move |c, _| {
+                let now = c2.fetch_add(1, Ordering::SeqCst) + 1;
+                p2.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(300));
+                c2.fetch_sub(1, Ordering::SeqCst);
+                Ok(auptimizer::workload::sphere(c))
+            }));
+            let mut json = rosen_json("random", n_samples, n_parallel, "cpu");
+            json = json.replace("\"random_seed\": 11", &format!("\"random_seed\": {seed}"));
+            let cfg = ExperimentConfig::from_json_str(&json).map_err(|e| e.to_string())?;
+            let mut opts = ExperimentOptions::default();
+            opts.executor = Some(exec);
+            let mut exp = Experiment::new(cfg, opts).map_err(|e| e.to_string())?;
+            let s = exp.run().map_err(|e| e.to_string())?;
+            if s.n_jobs != n_samples {
+                return Err(format!("{} jobs != {n_samples}", s.n_jobs));
+            }
+            if peak.load(Ordering::SeqCst) > n_parallel {
+                return Err(format!(
+                    "peak {} > n_parallel {n_parallel}",
+                    peak.load(Ordering::SeqCst)
+                ));
+            }
+            // every reported score recorded in the store
+            let mut store = exp.into_store();
+            let jobs = schema::jobs_of(&mut store, s.eid).map_err(|e| e.to_string())?;
+            if jobs.iter().filter(|j| j.score.is_some()).count() != n_samples {
+                return Err("missing scores in store".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,125 @@
+//! Integration across the L3⇄runtime boundary: a full HPO experiment
+//! whose jobs are REAL PJRT training runs of the AOT CNN (requires
+//! `make artifacts`; tests no-op gracefully otherwise so plain
+//! `cargo test` works in artifact-less checkouts).
+
+use std::sync::Arc;
+
+use auptimizer::experiment::{Experiment, ExperimentOptions};
+use auptimizer::prelude::*;
+use auptimizer::runtime::trainer::{spawn_trainer, TrainerConfig};
+
+fn artifacts_exist() -> bool {
+    std::path::Path::new("artifacts/meta.json").exists()
+}
+
+fn trainer_cfg() -> TrainerConfig {
+    TrainerConfig {
+        artifacts_dir: "artifacts".into(),
+        train_size: 160,
+        test_size: 160,
+        data_seed: 5,
+        default_epochs: 1,
+        model_dir: None,
+    }
+}
+
+fn cnn_json(proposer: &str, n_samples: usize, extra: &str) -> String {
+    format!(
+        r#"{{
+            "proposer": "{proposer}",
+            "script": "pjrt:cnn",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 13,
+            {extra}
+            "parameter_config": [
+                {{"name": "conv1", "type": "int", "range": [8, 32]}},
+                {{"name": "conv2", "type": "int", "range": [8, 64]}},
+                {{"name": "fc1", "type": "int", "range": [32, 256]}},
+                {{"name": "dropout", "type": "float", "range": [0.0, 0.5]}},
+                {{"name": "learning_rate", "type": "float", "range": [0.0005, 0.02], "interval": "log"}}
+            ]
+        }}"#
+    )
+}
+
+#[test]
+fn random_hpo_over_real_pjrt_training() {
+    if !artifacts_exist() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let trainer = spawn_trainer(trainer_cfg()).unwrap();
+    let cfg = ExperimentConfig::from_json_str(&cnn_json("random", 4, "")).unwrap();
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(trainer.as_executor() as Arc<dyn auptimizer::resource::executor::Executor>);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 4);
+    assert_eq!(s.n_failed, 0);
+    // all scores are valid error rates and at least one beats chance
+    for (_, score, _) in &s.history {
+        assert!((0.0..=1.0).contains(score));
+    }
+    assert!(s.best_score.unwrap() < 0.85, "best {:?}", s.best_score);
+}
+
+#[test]
+fn hyperband_resume_through_real_checkpoints() {
+    if !artifacts_exist() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let trainer = spawn_trainer(trainer_cfg()).unwrap();
+    // R=2, eta=2 -> brackets s=1 (2 arms @1 epoch -> 1 arm @2) and s=0
+    let cfg = ExperimentConfig::from_json_str(&cnn_json(
+        "hyperband",
+        0,
+        r#""n_iterations": 2, "eta": 2,"#,
+    ))
+    .unwrap();
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(trainer.as_executor() as Arc<dyn auptimizer::resource::executor::Executor>);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert!(s.n_jobs >= 3, "{} jobs", s.n_jobs);
+    assert!(s.best_score.unwrap() <= 1.0);
+}
+
+#[test]
+fn trainer_shared_across_parallel_jobs() {
+    if !artifacts_exist() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // the actor serializes PJRT access while the loop runs 2 jobs in
+    // flight — no deadlock, all callbacks delivered
+    let trainer = spawn_trainer(trainer_cfg()).unwrap();
+    let exec = trainer.as_executor();
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let exec = exec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = BasicConfig::new();
+            c.set_num("conv1", 8.0)
+                .set_num("conv2", 8.0)
+                .set_num("fc1", 32.0)
+                .set_num("learning_rate", 1e-3)
+                .set_num("dropout", 0.0)
+                .set_num("n_iterations", 1.0)
+                .set_num("job_id", 100.0 + i as f64);
+            auptimizer::resource::executor::Executor::execute(
+                &*exec,
+                &c,
+                &auptimizer::resource::job::JobEnv::default(),
+            )
+            .unwrap()
+        }));
+    }
+    for h in handles {
+        let score = h.join().unwrap();
+        assert!((0.0..=1.0).contains(&score));
+    }
+}
