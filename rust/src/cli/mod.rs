@@ -3,8 +3,19 @@
 //! * `aup setup [--dir DIR]`           — paper: `python -m aup.setup`
 //! * `aup init [--proposer NAME]`      — paper: `python -m aup.init`
 //! * `aup run experiment.json [...]`   — paper: `python -m aup experiment.json`
+//! * `aup batch exp1.json exp2.json …` — several experiments, ONE shared
+//!   resource pool (the scheduler subsystem's headline mode)
 //! * `aup viz --db DIR [--eid N]`      — §III-C visualization tool
 //! * `aup algorithms`                  — list the registry (Table I count)
+//!
+//! Scheduler knobs (accepted by `run` and `batch`, overriding the
+//! experiment.json keys of the same meaning):
+//!
+//! * `--retries N`  — retry failed jobs up to N times (`job_retries`);
+//! * `--timeout S`  — per-attempt deadline in seconds (`job_timeout`);
+//! * `--backoff S`  — base retry backoff, doubled per retry
+//!   (`retry_backoff`);
+//! * `--pool N`     — (`batch` only) size of the shared CPU pool.
 //!
 //! Argument parsing is hand-rolled (clap is not vendored): flags are
 //! `--key value` pairs after the subcommand.
@@ -66,10 +77,20 @@ USAGE:
     aup setup   [--dir DIR] [--cpu N]       write env.ini + init the tracking db
     aup init    [--proposer NAME] [--out F] generate an experiment.json template
     aup run     EXPERIMENT.json [--db DIR] [--user NAME] [--verbose]
+                [--retries N] [--timeout S] [--backoff S]
+    aup batch   EXP1.json EXP2.json [...] [--pool N] [--db DIR] [--user NAME]
+                [--retries N] [--timeout S] [--backoff S] [--verbose]
+                run several experiments against ONE shared resource pool;
+                per-experiment 'priority' keys order placement under contention
     aup viz     --db DIR [--eid N] [--csv FILE]
     aup sql     --db DIR \"SELECT ...\"        query the tracking store directly
     aup algorithms                          list available HPO algorithms
     aup help
+
+SCHEDULER KNOBS (run/batch; also experiment.json keys):
+    --retries N   retry a failed/timed-out/NaN job up to N times   (job_retries)
+    --timeout S   per-attempt deadline in seconds                  (job_timeout)
+    --backoff S   base retry backoff, doubled per retry          (retry_backoff)
 ";
 
 /// Entry point used by main.rs; returns the process exit code.
@@ -106,6 +127,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "setup" => cmd_setup(&cli),
         "init" => cmd_init(&cli),
         "run" => cmd_run(&cli),
+        "batch" => cmd_batch(&cli),
         "viz" => cmd_viz(&cli),
         "sql" => cmd_sql(&cli),
         other => Err(AupError::Config(format!("unknown subcommand '{other}'"))),
@@ -149,6 +171,42 @@ pub fn cmd_init(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--retries / --timeout / --backoff` into a [`SchedulerConfig`]
+/// override on top of the experiment.json keys. Returns `None` when no
+/// flag is present (the config's own keys then apply).
+fn sched_overrides(
+    cli: &Cli,
+    cfg: &ExperimentConfig,
+) -> Result<Option<crate::scheduler::SchedulerConfig>> {
+    let mut sched = crate::scheduler::SchedulerConfig::from_json(&cfg.raw);
+    let mut touched = false;
+    if let Some(v) = cli.flag("retries") {
+        sched.max_retries = v
+            .parse()
+            .map_err(|_| AupError::Config("--retries must be a non-negative integer".into()))?;
+        touched = true;
+    }
+    if let Some(v) = cli.flag("timeout") {
+        let secs: f64 = v
+            .parse()
+            .ok()
+            .filter(|s: &f64| s.is_finite())
+            .ok_or_else(|| AupError::Config("--timeout must be finite seconds".into()))?;
+        sched.job_timeout = if secs > 0.0 { Some(secs) } else { None };
+        touched = true;
+    }
+    if let Some(v) = cli.flag("backoff") {
+        let secs: f64 = v
+            .parse()
+            .ok()
+            .filter(|s: &f64| s.is_finite())
+            .ok_or_else(|| AupError::Config("--backoff must be finite seconds".into()))?;
+        sched.retry_backoff = secs.max(0.0);
+        touched = true;
+    }
+    Ok(if touched { Some(sched) } else { None })
+}
+
 /// `aup run experiment.json`.
 pub fn cmd_run(cli: &Cli) -> Result<()> {
     let path = cli
@@ -183,6 +241,7 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
     if let Some(user) = cli.flag("user") {
         options.user = user.to_string();
     }
+    options.scheduler = sched_overrides(cli, &cfg)?;
     let proposer_name = cfg.proposer.clone();
     let mut exp = Experiment::new(cfg, options)?;
     let summary = exp.run()?;
@@ -197,6 +256,65 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
     if curve.len() >= 2 {
         println!("best-so-far curve:");
         print!("{}", crate::viz::ascii_curve(&curve, 60, 12));
+    }
+    Ok(())
+}
+
+/// `aup batch exp1.json exp2.json [...]`: several experiments sharing
+/// ONE resource pool through the scheduler subsystem. Each experiment
+/// keeps its own proposer + tracking store; `--db DIR` lands experiment
+/// i in `DIR/exp<i>` so WALs never interleave.
+pub fn cmd_batch(cli: &Cli) -> Result<()> {
+    if cli.positional.is_empty() {
+        return Err(AupError::Config(
+            "usage: aup batch EXP1.json EXP2.json [...] [--pool N]".into(),
+        ));
+    }
+    if cli.flag("verbose").is_some() {
+        crate::util::logging::set_level(crate::util::logging::Level::Debug);
+    }
+    let pool_n: usize = match cli.flag("pool") {
+        Some(v) => v
+            .parse()
+            .ok()
+            .filter(|n| *n > 0)
+            .ok_or_else(|| AupError::Config("--pool must be a positive integer".into()))?,
+        None => 4,
+    };
+    let mut exps = Vec::new();
+    let mut names = Vec::new();
+    for (i, path) in cli.positional.iter().enumerate() {
+        let cfg = ExperimentConfig::from_file(Path::new(path))?;
+        let mut options = ExperimentOptions::default();
+        if let Some(db) = cli.flag("db") {
+            let dir = Path::new(db).join(format!("exp{i}"));
+            let mut store = Store::open(&dir)?;
+            let recovered = crate::store::schema::recover_incomplete(&mut store)?;
+            if recovered > 0 {
+                eprintln!(
+                    "exp{i}: recovered {recovered} interrupted job(s) from a previous run"
+                );
+            }
+            options.store = Some(store);
+        }
+        if let Some(user) = cli.flag("user") {
+            options.user = user.to_string();
+        }
+        options.scheduler = sched_overrides(cli, &cfg)?;
+        names.push(format!("{} ({})", path, cfg.proposer));
+        exps.push(Experiment::new(cfg, options)?);
+    }
+    let pool = Box::new(crate::resource::local::CpuManager::new(pool_n));
+    println!(
+        "batch: {} experiment(s) over a shared {pool_n}-slot pool",
+        exps.len()
+    );
+    let summaries = crate::experiment::run_batch(exps, pool)?;
+    for (name, s) in names.iter().zip(&summaries) {
+        println!(
+            "  {name}: eid={} {} jobs, {} failed, best = {:?} in {:.2}s",
+            s.eid, s.n_jobs, s.n_failed, s.best_score, s.wall_time
+        );
     }
     Ok(())
 }
@@ -344,6 +462,76 @@ mod tests {
         assert!(csv.starts_with("job_id,score"));
         assert_eq!(csv.lines().count(), 11); // header + 10 jobs
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn batch_runs_two_experiments_over_one_pool() {
+        let dir = temp_dir("aup-cli-batch").unwrap();
+        let mut paths = Vec::new();
+        for (i, proposer) in ["random", "hyperopt"].iter().enumerate() {
+            let p = dir.join(format!("exp{i}.json"));
+            let text = crate::experiment::config::ExperimentConfig::template(proposer)
+                .to_pretty()
+                .replace("\"n_samples\": 200", "\"n_samples\": 6");
+            std::fs::write(&p, text).unwrap();
+            paths.push(p);
+        }
+        let db = dir.join("db");
+        let cli = Cli::parse(&s(&[
+            "batch",
+            paths[0].to_str().unwrap(),
+            paths[1].to_str().unwrap(),
+            "--pool",
+            "2",
+            "--db",
+            db.to_str().unwrap(),
+            "--user",
+            "batchtest",
+        ]))
+        .unwrap();
+        cmd_batch(&cli).unwrap();
+        // each experiment landed in its own store directory
+        for i in 0..2 {
+            let mut store = Store::open(&db.join(format!("exp{i}"))).unwrap();
+            let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+            assert_eq!(r.scalar(), Some(&crate::store::Value::Int(6)), "exp{i}");
+            let evs = crate::store::schema::job_events_of(&mut store, 0).unwrap();
+            assert!(evs.len() >= 18, "exp{i}: transition journal too small");
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn batch_requires_files() {
+        let cli = Cli::parse(&s(&["batch"])).unwrap();
+        assert!(cmd_batch(&cli).is_err());
+    }
+
+    #[test]
+    fn scheduler_flags_parse_and_validate() {
+        let cfg = crate::experiment::config::ExperimentConfig::from_json_str(
+            r#"{
+                "proposer": "random", "script": "builtin:sphere",
+                "n_samples": 2, "job_retries": 1,
+                "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+            }"#,
+        )
+        .unwrap();
+        // no flags: config keys pass through untouched (None override)
+        let cli = Cli::parse(&s(&["run", "x.json"])).unwrap();
+        assert!(sched_overrides(&cli, &cfg).unwrap().is_none());
+        // flags override the config
+        let cli = Cli::parse(&s(&[
+            "run", "x.json", "--retries", "3", "--timeout", "1.5", "--backoff", "0.25",
+        ]))
+        .unwrap();
+        let o = sched_overrides(&cli, &cfg).unwrap().unwrap();
+        assert_eq!(o.max_retries, 3);
+        assert_eq!(o.job_timeout, Some(1.5));
+        assert_eq!(o.retry_backoff, 0.25);
+        // garbage rejected
+        let cli = Cli::parse(&s(&["run", "x.json", "--retries", "lots"])).unwrap();
+        assert!(sched_overrides(&cli, &cfg).is_err());
     }
 
     #[test]

@@ -1,35 +1,40 @@
-//! The experiment loop — the paper's Algorithm 1.
+//! The experiment loop — the paper's Algorithm 1, re-plumbed onto the
+//! shared [`crate::scheduler`].
 //!
 //! ```text
 //! aup.Experiment(experiment.json, env.ini, code_path)
 //! while not proposer.finished():
-//!     resource <- resource_manager.get_available()
-//!     if not resource: sleep
 //!     hyperparameters <- proposer.get_param()
-//!     Job <- aup.run(hyperparameters, resource)
-//!     if Job.callback(): proposer.update()
+//!     scheduler.submit(hyperparameters)        # queue on the shared pool
+//! on completion(job):                          # the callback() of §III-B2
+//!     proposer.update(); tracker.record()
 //! aup.finish()   # wait for unfinished jobs
 //! ```
 //!
-//! Jobs run on worker threads (one per in-flight job); completion flows
-//! back through an mpsc channel — the `callback()` of §III-B2 — and the
-//! loop invokes `proposer.update()`, records the result in the tracking
-//! store and frees the resource.
+//! An [`Experiment`] no longer spawns job threads itself: it *submits*
+//! into a [`Scheduler`] and reacts to completion events. That indirection
+//! is what enables `aup batch` — several experiments sharing one resource
+//! pool (see [`run_batch`]) — plus retries, per-job timeouts and
+//! cancellation, and lets the whole loop run under the deterministic
+//! virtual clock in tests (see [`run_batch_sim`]).
 
 pub mod config;
 pub mod tracker;
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use crate::experiment::config::ExperimentConfig;
 use crate::experiment::tracker::Tracker;
 use crate::proposer::{new_proposer, ProposeResult, Proposer};
 use crate::resource::executor::{executor_from_script, Executor};
-use crate::resource::job::{spawn_job, JobDone};
 use crate::resource::ResourceManager;
+use crate::scheduler::{
+    Completion, Dispatcher, JobState, SchedEvent, Scheduler, SchedulerConfig, SimDispatcher,
+    SimExecutor, SubId, ThreadDispatcher, Transition,
+};
 use crate::store::Store;
 use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
 use crate::{log_debug, log_info, log_warn};
 
 /// Knobs not present in experiment.json (they belong to the environment,
@@ -44,6 +49,12 @@ pub struct ExperimentOptions {
     pub resource_manager: Option<Box<dyn ResourceManager>>,
     /// user name recorded in the `user` table
     pub user: String,
+    /// scheduler knobs override; `None` -> read `job_retries` /
+    /// `retry_backoff` / `job_timeout` from experiment.json
+    pub scheduler: Option<SchedulerConfig>,
+    /// queue priority override; `None` -> the config's `priority` key
+    /// (default 0; higher wins contended pools)
+    pub priority: Option<i32>,
 }
 
 impl Default for ExperimentOptions {
@@ -53,6 +64,8 @@ impl Default for ExperimentOptions {
             executor: None,
             resource_manager: None,
             user: std::env::var("USER").unwrap_or_else(|_| "aup".to_string()),
+            scheduler: None,
+            priority: None,
         }
     }
 }
@@ -71,13 +84,24 @@ pub struct ExperimentSummary {
     pub history: Vec<(u64, f64, f64)>,
 }
 
-/// One experiment: proposer + resource manager + executor + tracker.
+/// One experiment: proposer + tracker + an executor submitted into a
+/// (possibly shared) scheduler.
 pub struct Experiment {
     cfg: ExperimentConfig,
     proposer: Box<dyn Proposer>,
-    rm: Box<dyn ResourceManager>,
+    /// built eagerly from the config; [`run`](Experiment::run) feeds it
+    /// to the private scheduler, batch modes ignore it in favor of the
+    /// shared pool
+    rm: Option<Box<dyn ResourceManager>>,
     executor: Arc<dyn Executor>,
     tracker: Tracker,
+    sched_cfg: SchedulerConfig,
+    priority: i32,
+    // -- per-run state ----------------------------------------------------
+    n_jobs: usize,
+    n_failed: usize,
+    best: Option<(f64, crate::search::BasicConfig)>,
+    history: Vec<(u64, f64, f64)>,
 }
 
 impl Experiment {
@@ -103,180 +127,56 @@ impl Experiment {
             None => Store::in_memory(),
         };
         let tracker = Tracker::new(store, &options.user, &cfg)?;
-        Ok(Experiment { cfg, proposer, rm, executor, tracker })
+        let sched_cfg = options
+            .scheduler
+            .unwrap_or_else(|| SchedulerConfig::from_json(&cfg.raw));
+        let priority = options.priority.unwrap_or_else(|| {
+            cfg.raw
+                .get("priority")
+                .and_then(Json::as_i64)
+                .unwrap_or(0) as i32
+        });
+        Ok(Experiment {
+            cfg,
+            proposer,
+            rm: Some(rm),
+            executor,
+            tracker,
+            sched_cfg,
+            priority,
+            n_jobs: 0,
+            n_failed: 0,
+            best: None,
+            history: Vec::new(),
+        })
     }
 
-    /// Run Algorithm 1 to completion.
+    /// Run Algorithm 1 to completion on a private scheduler + this
+    /// experiment's own resource pool.
     pub fn run(&mut self) -> Result<ExperimentSummary> {
         let start = std::time::Instant::now();
-        let (tx, rx) = channel::<JobDone>();
-        let mut inflight = 0usize;
-        let mut n_jobs = 0usize;
-        let mut n_failed = 0usize;
-        let mut best: Option<(f64, crate::search::BasicConfig)> = None;
-        let mut history: Vec<(u64, f64, f64)> = Vec::new();
-        let maximize = self.cfg.maximize;
-        let n_parallel = self.cfg.n_parallel;
-
+        let rm = match self.rm.take() {
+            Some(rm) => rm,
+            None => self.cfg.resource.build()?,
+        };
+        let mut sched = Scheduler::new(rm, ThreadDispatcher::new());
+        let sub = sched.add_submission(self.priority, self.sched_cfg.clone());
+        sched.dispatcher_mut().add_executor(sub, self.executor.clone());
         log_info!(
             "experiment",
-            "eid={} proposer={} script={} n_parallel={}",
+            "eid={} proposer={} script={} n_parallel={} retries={} timeout={:?}",
             self.tracker.eid(),
             self.proposer.name(),
             self.cfg.script,
-            n_parallel
+            self.cfg.n_parallel,
+            self.sched_cfg.max_retries,
+            self.sched_cfg.job_timeout
         );
-
-        let handle_done = |done: JobDone,
-                               proposer: &mut Box<dyn Proposer>,
-                               rm: &mut Box<dyn ResourceManager>,
-                               tracker: &mut Tracker,
-                               inflight: &mut usize,
-                               n_failed: &mut usize,
-                               best: &mut Option<(f64, crate::search::BasicConfig)>,
-                               history: &mut Vec<(u64, f64, f64)>|
-         -> Result<()> {
-            *inflight -= 1;
-            rm.release(&done.handle);
-            // a non-finite score is a protocol violation — treat it as a
-            // failed job (otherwise NaN would poison best-score tracking)
-            let outcome = match &done.outcome {
-                Ok(s) if !s.is_finite() => Err(format!("non-finite score {s}")),
-                other => other.clone(),
-            };
-            match &outcome {
-                Ok(score) => {
-                    proposer.update(done.job_id, &done.config, Some(*score));
-                    tracker.job_finished(done.job_id, Some(*score))?;
-                    let better = match best {
-                        None => true,
-                        Some((b, _)) => {
-                            if maximize {
-                                score > b
-                            } else {
-                                score < b
-                            }
-                        }
-                    };
-                    if better {
-                        *best = Some((*score, done.config.clone()));
-                    }
-                    history.push((done.job_id, *score, best.as_ref().unwrap().0));
-                    log_debug!(
-                        "experiment",
-                        "job {} -> {:.6} (best {:.6})",
-                        done.job_id,
-                        score,
-                        best.as_ref().unwrap().0
-                    );
-                }
-                Err(msg) => {
-                    *n_failed += 1;
-                    proposer.update(done.job_id, &done.config, None);
-                    tracker.job_finished(done.job_id, None)?;
-                    log_warn!("experiment", "job {} failed: {msg}", done.job_id);
-                }
-            }
-            Ok(())
-        };
-
-        loop {
-            // drain any completions without blocking
-            while let Ok(done) = rx.try_recv() {
-                handle_done(
-                    done,
-                    &mut self.proposer,
-                    &mut self.rm,
-                    &mut self.tracker,
-                    &mut inflight,
-                    &mut n_failed,
-                    &mut best,
-                    &mut history,
-                )?;
-            }
-            if self.proposer.finished() && inflight == 0 {
-                break;
-            }
-            // capacity for another job?
-            if inflight < n_parallel && !self.proposer.finished() {
-                match self.rm.get_available() {
-                    Some(handle) => match self.proposer.get_param() {
-                        ProposeResult::Config(config) => {
-                            let job_id = config.job_id().ok_or_else(|| {
-                                AupError::Proposer(
-                                    "proposer returned a config without job_id".into(),
-                                )
-                            })?;
-                            self.tracker.job_started(job_id, handle.rid, &config)?;
-                            n_jobs += 1;
-                            inflight += 1;
-                            spawn_job(self.executor.clone(), config, handle, tx.clone());
-                            continue; // try to fill more slots immediately
-                        }
-                        ProposeResult::Wait | ProposeResult::Done => {
-                            self.rm.release(&handle);
-                            if inflight == 0 {
-                                if self.proposer.finished() {
-                                    break;
-                                }
-                                // Wait with nothing in flight would deadlock —
-                                // treat as proposer bug
-                                return Err(AupError::Proposer(format!(
-                                    "proposer '{}' returned Wait with no jobs in flight",
-                                    self.proposer.name()
-                                )));
-                            }
-                        }
-                    },
-                    None => {
-                        // paper Algorithm 1: "sleep {wait for available resource}"
-                        if inflight == 0 {
-                            return Err(AupError::Resource(
-                                "no resources available and none in flight".into(),
-                            ));
-                        }
-                    }
-                }
-            }
-            // block for the next callback (aup.finish(): wait for
-            // unfinished jobs)
-            if inflight > 0 {
-                let done = rx
-                    .recv()
-                    .map_err(|_| AupError::Job("job channel closed unexpectedly".into()))?;
-                handle_done(
-                    done,
-                    &mut self.proposer,
-                    &mut self.rm,
-                    &mut self.tracker,
-                    &mut inflight,
-                    &mut n_failed,
-                    &mut best,
-                    &mut history,
-                )?;
-            }
+        {
+            let mut runs = [(sub, &mut *self)];
+            drive(&mut runs, &mut sched)?;
         }
-
-        let wall_time = start.elapsed().as_secs_f64();
-        let best_score = best.as_ref().map(|(s, _)| *s);
-        self.tracker.experiment_finished(best_score)?;
-        log_info!(
-            "experiment",
-            "done: {} jobs ({} failed), best {:?}, {:.3}s",
-            n_jobs,
-            n_failed,
-            best_score,
-            wall_time
-        );
-        Ok(ExperimentSummary {
-            eid: self.tracker.eid(),
-            n_jobs,
-            n_failed,
-            best_score,
-            best_config: best.map(|(_, c)| c),
-            wall_time,
-            history,
-        })
+        self.finish(start.elapsed().as_secs_f64())
     }
 
     /// Access the tracking store after the run (e.g. for `aup viz`).
@@ -287,6 +187,217 @@ impl Experiment {
     pub fn proposer_name(&self) -> &str {
         self.proposer.name()
     }
+
+    pub fn eid(&self) -> i64 {
+        self.tracker.eid()
+    }
+
+    // -- scheduler plumbing ------------------------------------------------
+
+    /// Propose + submit while this experiment has spare parallelism.
+    fn pump<D: Dispatcher>(&mut self, sched: &mut Scheduler<D>, sub: SubId) -> Result<()> {
+        while sched.outstanding(sub) < self.cfg.n_parallel && !self.proposer.finished() {
+            match self.proposer.get_param() {
+                ProposeResult::Config(config) => {
+                    let job_id = config.job_id().ok_or_else(|| {
+                        AupError::Proposer("proposer returned a config without job_id".into())
+                    })?;
+                    self.tracker.job_submitted(job_id, &config)?;
+                    self.n_jobs += 1;
+                    sched.submit(sub, config)?;
+                }
+                ProposeResult::Wait | ProposeResult::Done => {
+                    if sched.outstanding(sub) == 0 {
+                        if self.proposer.finished() {
+                            break;
+                        }
+                        // Wait with nothing in flight would deadlock —
+                        // treat as proposer bug
+                        return Err(AupError::Proposer(format!(
+                            "proposer '{}' returned Wait with no jobs in flight",
+                            self.proposer.name()
+                        )));
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_transition(&mut self, t: &Transition) -> Result<()> {
+        self.tracker.log_transition(t)?;
+        if t.state == JobState::Running {
+            if let Some(rid) = t.rid {
+                self.tracker.job_running(t.job_id, rid)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The callback() of §III-B2: a job reached a terminal state.
+    fn on_done(&mut self, done: &Completion) -> Result<()> {
+        match (done.state, &done.outcome) {
+            (JobState::Done, Ok(score)) => {
+                self.proposer.update(done.job_id, &done.config, Some(*score));
+                self.tracker.job_finished(done.job_id, Some(*score))?;
+                let better = match &self.best {
+                    None => true,
+                    Some((b, _)) => {
+                        if self.cfg.maximize {
+                            score > b
+                        } else {
+                            score < b
+                        }
+                    }
+                };
+                if better {
+                    self.best = Some((*score, done.config.clone()));
+                }
+                self.history
+                    .push((done.job_id, *score, self.best.as_ref().unwrap().0));
+                log_debug!(
+                    "experiment",
+                    "job {} -> {:.6} (best {:.6}, {} attempt(s))",
+                    done.job_id,
+                    score,
+                    self.best.as_ref().unwrap().0,
+                    done.attempts
+                );
+            }
+            (JobState::Cancelled, _) => {
+                self.n_failed += 1;
+                self.proposer.update(done.job_id, &done.config, None);
+                self.tracker.job_cancelled(done.job_id)?;
+                log_warn!("experiment", "job {} cancelled", done.job_id);
+            }
+            (_, outcome) => {
+                self.n_failed += 1;
+                self.proposer.update(done.job_id, &done.config, None);
+                self.tracker.job_finished(done.job_id, None)?;
+                let msg = outcome.as_ref().err().cloned().unwrap_or_default();
+                log_warn!(
+                    "experiment",
+                    "job {} failed after {} attempt(s): {msg}",
+                    done.job_id,
+                    done.attempts
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, wall_time: f64) -> Result<ExperimentSummary> {
+        let best_score = self.best.as_ref().map(|(s, _)| *s);
+        self.tracker.experiment_finished(best_score)?;
+        log_info!(
+            "experiment",
+            "done: {} jobs ({} failed), best {:?}, {:.3}s",
+            self.n_jobs,
+            self.n_failed,
+            best_score,
+            wall_time
+        );
+        Ok(ExperimentSummary {
+            eid: self.tracker.eid(),
+            n_jobs: self.n_jobs,
+            n_failed: self.n_failed,
+            best_score,
+            best_config: self.best.take().map(|(_, c)| c),
+            wall_time,
+            history: std::mem::take(&mut self.history),
+        })
+    }
+}
+
+/// Cooperative multi-experiment loop over one scheduler: pump every
+/// experiment's proposer, then block on scheduler events and route them
+/// back by submission id.
+fn drive<D: Dispatcher>(
+    runs: &mut [(SubId, &mut Experiment)],
+    sched: &mut Scheduler<D>,
+) -> Result<()> {
+    loop {
+        let mut all_done = true;
+        for (sub, exp) in runs.iter_mut() {
+            exp.pump(sched, *sub)?;
+            if !(exp.proposer.finished() && sched.outstanding(*sub) == 0) {
+                all_done = false;
+            }
+        }
+        if all_done {
+            return Ok(());
+        }
+        let events = sched.poll(true)?;
+        for ev in events {
+            match ev {
+                SchedEvent::Transition(t) => {
+                    if let Some((_, exp)) = runs.iter_mut().find(|(s, _)| *s == t.sub) {
+                        exp.on_transition(&t)?;
+                    }
+                }
+                SchedEvent::Done(done) => {
+                    if let Some((_, exp)) = runs.iter_mut().find(|(s, _)| *s == done.sub) {
+                        exp.on_done(&done)?;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `aup batch`: run several experiments against ONE shared resource pool
+/// (thread mode, wall clock). Each experiment keeps its own proposer,
+/// tracker and executor; placement order under contention follows
+/// submission priority, then FIFO.
+pub fn run_batch(
+    experiments: Vec<Experiment>,
+    pool: Box<dyn ResourceManager>,
+) -> Result<Vec<ExperimentSummary>> {
+    let start = std::time::Instant::now();
+    let mut exps = experiments;
+    let mut sched = Scheduler::new(pool, ThreadDispatcher::new());
+    {
+        let mut runs: Vec<(SubId, &mut Experiment)> = Vec::new();
+        for exp in exps.iter_mut() {
+            let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
+            sched.dispatcher_mut().add_executor(sub, exp.executor.clone());
+            runs.push((sub, exp));
+        }
+        drive(&mut runs, &mut sched)?;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    exps.iter_mut().map(|e| e.finish(wall)).collect()
+}
+
+/// The deterministic flavor of [`run_batch`]: same loop, virtual clock.
+/// `sims` supplies one [`SimExecutor`] per experiment (scores + virtual
+/// durations); `wall_time` in the summaries is virtual seconds. This is
+/// the harness the scalability and chaos tests run on — zero sleeps,
+/// bit-identical reruns.
+pub fn run_batch_sim(
+    experiments: Vec<Experiment>,
+    pool: Box<dyn ResourceManager>,
+    sims: Vec<Box<dyn SimExecutor>>,
+) -> Result<Vec<ExperimentSummary>> {
+    if sims.len() != experiments.len() {
+        return Err(AupError::Config(
+            "run_batch_sim: need exactly one sim executor per experiment".into(),
+        ));
+    }
+    let mut exps = experiments;
+    let mut sched = Scheduler::new(pool, SimDispatcher::new());
+    {
+        let mut runs: Vec<(SubId, &mut Experiment)> = Vec::new();
+        for (exp, sim) in exps.iter_mut().zip(sims) {
+            let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
+            sched.dispatcher_mut().add_executor(sub, sim);
+            runs.push((sub, exp));
+        }
+        drive(&mut runs, &mut sched)?;
+    }
+    let virtual_elapsed = sched.now();
+    exps.iter_mut().map(|e| e.finish(virtual_elapsed)).collect()
 }
 
 #[cfg(test)]
@@ -406,6 +517,38 @@ mod tests {
     }
 
     #[test]
+    fn retries_rescue_deterministically_flaky_jobs() {
+        // fails on the first attempt of every job, succeeds on the second
+        use std::collections::BTreeMap;
+        use std::sync::Mutex;
+        let tries: Arc<Mutex<BTreeMap<u64, u32>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let t2 = tries.clone();
+        let exec = Arc::new(FnExecutor::new("flaky-once", move |c, _| {
+            let id = c.job_id().unwrap();
+            let mut m = t2.lock().unwrap();
+            let n = m.entry(id).or_insert(0);
+            *n += 1;
+            if *n == 1 {
+                Err(crate::util::error::AupError::Job("first attempt".into()))
+            } else {
+                Ok(crate::workload::rosenbrock(c))
+            }
+        }));
+        let mut opts = ExperimentOptions::default();
+        opts.executor = Some(exec);
+        opts.scheduler = Some(SchedulerConfig {
+            max_retries: 1,
+            retry_backoff: 0.0,
+            job_timeout: None,
+        });
+        let mut exp = Experiment::new(rosen_cfg("random", 9, 3), opts).unwrap();
+        let s = exp.run().unwrap();
+        assert_eq!(s.n_jobs, 9);
+        assert_eq!(s.n_failed, 0, "every job must be rescued by its retry");
+        assert!(tries.lock().unwrap().values().all(|&n| n == 2));
+    }
+
+    #[test]
     fn tracking_store_has_all_jobs() {
         let mut exp =
             Experiment::new(rosen_cfg("random", 12, 2), ExperimentOptions::default()).unwrap();
@@ -423,6 +566,9 @@ mod tests {
             crate::store::schema::get_experiment(&mut store, s.eid).unwrap().unwrap();
         assert_eq!(exp_row.best_score, s.best_score);
         assert!(exp_row.end_time.is_some());
+        // the scheduler journal has at least queue + run + done per job
+        let evs = crate::store::schema::job_events_of(&mut store, s.eid).unwrap();
+        assert!(evs.len() >= 36, "expected >= 3 transitions per job, got {}", evs.len());
     }
 
     #[test]
@@ -450,5 +596,52 @@ mod tests {
         let s = exp.run().unwrap();
         assert!(s.n_jobs > 5);
         assert!(s.best_score.is_some());
+    }
+
+    #[test]
+    fn batch_shares_one_pool_across_experiments() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let mk_exec = |peak: Arc<AtomicUsize>, cur: Arc<AtomicUsize>| {
+            Arc::new(FnExecutor::new("pooled", move |c, _| {
+                let now = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                cur.fetch_sub(1, Ordering::SeqCst);
+                Ok(crate::workload::rosenbrock(c))
+            }))
+        };
+        let mut exps = Vec::new();
+        for seed in [1u64, 2] {
+            let cfg = ExperimentConfig::from_json_str(&format!(
+                r#"{{
+                    "proposer": "random", "script": "builtin:rosenbrock",
+                    "n_samples": 10, "n_parallel": 4, "target": "min",
+                    "random_seed": {seed},
+                    "parameter_config": [
+                        {{"name": "x", "type": "float", "range": [-5, 10]}},
+                        {{"name": "y", "type": "float", "range": [-5, 10]}}
+                    ]
+                }}"#
+            ))
+            .unwrap();
+            let mut opts = ExperimentOptions::default();
+            opts.executor = Some(mk_exec(peak.clone(), cur.clone()));
+            exps.push(Experiment::new(cfg, opts).unwrap());
+        }
+        let pool = Box::new(crate::resource::local::CpuManager::new(3));
+        let summaries = run_batch(exps, pool).unwrap();
+        assert_eq!(summaries.len(), 2);
+        for s in &summaries {
+            assert_eq!(s.n_jobs, 10);
+            assert_eq!(s.n_failed, 0);
+            assert_eq!(s.history.len(), 10);
+        }
+        // different seeds explored different spaces
+        assert_ne!(summaries[0].best_score, summaries[1].best_score);
+        // the 3-slot pool bounds global concurrency even though each
+        // experiment alone would run 4 wide
+        assert!(peak.load(Ordering::SeqCst) <= 3, "pool oversubscribed");
     }
 }

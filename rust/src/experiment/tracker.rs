@@ -23,6 +23,12 @@ pub struct Tracker {
     store: Store,
     eid: i64,
     maximize: bool,
+    /// next free store jid; proposer job_ids restart at 0 per experiment,
+    /// so the tracker allocates globally unique primary keys and keeps
+    /// the mapping (this is what lets several experiments — `aup batch`,
+    /// or sequential `aup run --db` calls — share one durable store)
+    next_jid: i64,
+    jids: std::collections::BTreeMap<u64, i64>,
 }
 
 impl Tracker {
@@ -46,17 +52,38 @@ impl Tracker {
             &cfg.raw.to_string(),
             now(),
         )?;
-        Ok(Tracker { store, eid, maximize: cfg.maximize })
+        let next_jid = schema::next_job_id(&mut store)?;
+        Ok(Tracker {
+            store,
+            eid,
+            maximize: cfg.maximize,
+            next_jid,
+            jids: std::collections::BTreeMap::new(),
+        })
     }
 
     pub fn eid(&self) -> i64 {
         self.eid
     }
 
+    fn alloc_jid(&mut self, job_id: u64) -> i64 {
+        let jid = self.next_jid;
+        self.next_jid += 1;
+        self.jids.insert(job_id, jid);
+        jid
+    }
+
+    /// Store jid of an experiment-local job_id (jobs not seen by this
+    /// tracker map to -1, which matches no row).
+    pub fn jid_of(&self, job_id: u64) -> i64 {
+        self.jids.get(&job_id).copied().unwrap_or(-1)
+    }
+
     pub fn job_started(&mut self, job_id: u64, rid: i64, config: &BasicConfig) -> Result<()> {
+        let jid = self.alloc_jid(job_id);
         schema::start_job(
             &mut self.store,
-            job_id as i64,
+            jid,
             self.eid,
             rid,
             &config.to_json_string(),
@@ -64,8 +91,48 @@ impl Tracker {
         )
     }
 
+    /// Scheduler-era entry point: the job exists (and is tracked) from
+    /// the moment it is queued, before any resource is assigned.
+    pub fn job_submitted(&mut self, job_id: u64, config: &BasicConfig) -> Result<()> {
+        let jid = self.alloc_jid(job_id);
+        schema::start_job_queued(
+            &mut self.store,
+            jid,
+            self.eid,
+            &config.to_json_string(),
+            now(),
+        )
+    }
+
+    /// The scheduler placed the job on resource `rid`.
+    pub fn job_running(&mut self, job_id: u64, rid: i64) -> Result<()> {
+        schema::set_job_running(&mut self.store, self.jid_of(job_id), rid)
+    }
+
+    /// Journal one scheduler transition into `job_event` (retry
+    /// accounting). The `time` column uses the same epoch base as
+    /// `job.start_time` so `aup sql` can correlate the tables; the
+    /// scheduler-clock timestamp (virtual seconds in sim runs) is kept in
+    /// the detail as `t=…` for deterministic offsets.
+    pub fn log_transition(&mut self, t: &crate::scheduler::Transition) -> Result<()> {
+        schema::log_job_event(
+            &mut self.store,
+            self.jid_of(t.job_id),
+            self.eid,
+            t.attempt as i64,
+            t.state.name(),
+            now(),
+            &format!("[t={:.3}] {}", t.at, t.detail),
+        )?;
+        Ok(())
+    }
+
+    pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
+        schema::cancel_job(&mut self.store, self.jid_of(job_id), now())
+    }
+
     pub fn job_finished(&mut self, job_id: u64, score: Option<f64>) -> Result<()> {
-        schema::finish_job(&mut self.store, job_id as i64, score, score.is_some(), now())
+        schema::finish_job(&mut self.store, self.jid_of(job_id), score, score.is_some(), now())
     }
 
     pub fn experiment_finished(&mut self, best: Option<f64>) -> Result<()> {
@@ -111,6 +178,44 @@ mod tests {
         let mut store = t.into_store();
         let row = schema::get_experiment(&mut store, 0).unwrap().unwrap();
         assert!(row.exp_config.contains("random"));
+    }
+
+    #[test]
+    fn scheduler_lifecycle_with_transitions() {
+        use crate::scheduler::{JobState, Transition};
+        let mut t = Tracker::new(Store::in_memory(), "tester", &cfg()).unwrap();
+        let mut c = BasicConfig::new();
+        c.set_num("x", 0.1).set_num("job_id", 0.0);
+        t.job_submitted(0, &c).unwrap();
+        t.log_transition(&Transition {
+            sub: 0,
+            job_id: 0,
+            state: JobState::Running,
+            attempt: 1,
+            at: 3.0,
+            rid: Some(2),
+            detail: "attempt 1 on cpu:2".into(),
+        })
+        .unwrap();
+        t.job_running(0, 2).unwrap();
+        t.job_finished(0, Some(0.5)).unwrap();
+        t.job_submitted(1, &c).unwrap();
+        t.job_cancelled(1).unwrap();
+        t.experiment_finished(Some(0.5)).unwrap();
+        let eid = t.eid();
+        let mut store = t.into_store();
+        let jobs = schema::jobs_of(&mut store, eid).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].status, schema::JobStatus::Finished);
+        assert_eq!(jobs[0].rid, 2);
+        assert_eq!(jobs[1].status, schema::JobStatus::Cancelled);
+        let evs = schema::job_events_of(&mut store, eid).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].state, "RUNNING");
+        // epoch-based time column (correlates with job.start_time), with
+        // the scheduler-clock offset preserved in the detail
+        assert!(evs[0].time > 1.0e9);
+        assert!(evs[0].detail.starts_with("[t=3.000]"), "{}", evs[0].detail);
     }
 
     #[test]

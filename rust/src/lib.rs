@@ -7,8 +7,10 @@
 //! The crate is the Layer-3 coordinator: it owns the experiment loop
 //! (Algorithm 1 in the paper), the [`proposer`] API over nine HPO
 //! algorithms, the [`resource`] manager that maps jobs onto compute, the
-//! [`store`] tracking database (Fig. 2 schema) and the PJRT [`runtime`]
-//! that executes the AOT-compiled JAX/Pallas CNN the paper tunes in §IV.
+//! shared [`scheduler`] (priority queue, retries, timeouts, cancellation
+//! over one resource pool — `aup batch`), the [`store`] tracking database
+//! (Fig. 2 schema) and the PJRT [`runtime`] that executes the
+//! AOT-compiled JAX/Pallas CNN the paper tunes in §IV.
 //!
 //! ## Quickstart
 //!
@@ -39,6 +41,7 @@ pub mod proposer;
 pub mod nas;
 pub mod workload;
 pub mod resource;
+pub mod scheduler;
 pub mod experiment;
 pub mod runtime;
 pub mod viz;
@@ -51,6 +54,10 @@ pub mod prelude {
     pub use crate::experiment::{Experiment, ExperimentOptions, ExperimentSummary};
     pub use crate::proposer::{Proposer, ProposeResult, new_proposer};
     pub use crate::resource::{ResourceManager, ResourceSpec};
+    pub use crate::scheduler::{
+        Completion, JobState, SchedEvent, Scheduler, SchedulerConfig, SimScheduler,
+        ThreadScheduler,
+    };
     pub use crate::search::{BasicConfig, ParamSpec, ParamType, SearchSpace};
     pub use crate::store::Store;
     pub use crate::util::error::{AupError, Result};

@@ -108,14 +108,20 @@ impl ScriptExecutor {
 
 /// Parse the job's stdout for the reported score.
 ///
-/// Accepted forms (last matching line wins):
+/// Accepted forms (last matching line wins, across BOTH forms — a
+/// `result:` line does not outrank a later bare float):
 /// * the paper's `print_result`: a line `result: <float>[, extra...]` —
 ///   anything after a comma is "additional information ... passed to
 ///   Proposer as an arbitrary string" (§III-B2);
-/// * a bare float on the last non-empty line (MATLAB/R users, §IV-C).
+/// * a bare *finite* float on a non-empty line (MATLAB/R users, §IV-C).
+///   Bare `nan`/`inf` lines are rejected: they are far more likely to be
+///   stray diagnostics (a printed loss gone bad) than an intentional
+///   score, and a NaN score would only poison best-score tracking.
+///   An explicit `result: nan` is still parsed — the protocol line is an
+///   unambiguous statement by the job — and the scheduler then fails the
+///   job for reporting a non-finite score.
 pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
-    let mut fallback: Option<f64> = None;
-    let mut result: Option<(f64, Option<String>)> = None;
+    let mut last: Option<(f64, Option<String>)> = None;
     for line in stdout.lines() {
         let line = line.trim();
         if line.is_empty() {
@@ -128,22 +134,31 @@ pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
                 None => (rest, None),
             };
             if let Ok(v) = num_part.parse::<f64>() {
-                result = Some((v, extra));
+                last = Some((v, extra));
             }
         } else if let Ok(v) = line.parse::<f64>() {
-            fallback = Some(v);
+            if v.is_finite() {
+                last = Some((v, None));
+            }
         }
     }
-    result.or(fallback.map(|v| (v, None)))
+    last
 }
 
 impl Executor for ScriptExecutor {
     fn execute(&self, config: &BasicConfig, env: &JobEnv) -> Result<f64> {
-        let job_id = config.job_id().unwrap_or_else(|| {
-            self.counter.fetch_add(1, Ordering::Relaxed)
-        });
+        // Configs without a job_id get a namespaced fallback file name:
+        // a bare counter could collide with an explicit job_id from
+        // another config and silently overwrite its job_N.json.
+        let cfg_name = match config.job_id() {
+            Some(id) => format!("job_{id}.json"),
+            None => format!(
+                "job_anon_{}.json",
+                self.counter.fetch_add(1, Ordering::Relaxed)
+            ),
+        };
         std::fs::create_dir_all(&self.workdir)?;
-        let cfg_path = self.workdir.join(format!("job_{job_id}.json"));
+        let cfg_path = self.workdir.join(cfg_name);
         config.save(&cfg_path)?;
 
         let mut cmd = Command::new(&self.script);
@@ -212,6 +227,24 @@ mod tests {
         assert_eq!(parse_result("result: 1\nresult: 2"), Some((2.0, None)));
         assert_eq!(parse_result("no numbers here"), None);
         assert_eq!(parse_result(""), None);
+        // "last matching line wins" holds ACROSS forms: a bare float
+        // after a result: line overrides it, and vice versa
+        assert_eq!(parse_result("result: 1\n0.5"), Some((0.5, None)));
+        assert_eq!(parse_result("0.5\nresult: 1"), Some((1.0, None)));
+        assert_eq!(
+            parse_result("result: 1, early\n2.0\nresult: 3, late"),
+            Some((3.0, Some("late".into())))
+        );
+        // bare non-finite lines are stray diagnostics, not scores
+        assert_eq!(parse_result("nan"), None);
+        assert_eq!(parse_result("inf"), None);
+        assert_eq!(parse_result("-inf\nNaN"), None);
+        assert_eq!(parse_result("loss exploded\nnan\nresult: 0.75"), Some((0.75, None)));
+        assert_eq!(parse_result("result: 0.75\nnan"), Some((0.75, None)));
+        // ... but an explicit result: nan is an unambiguous (bad) report
+        let (v, extra) = parse_result("result: nan").unwrap();
+        assert!(v.is_nan());
+        assert_eq!(extra, None);
     }
 
     #[test]
@@ -288,6 +321,38 @@ mod tests {
         ex.execute(&c, &env()).unwrap();
         let saved = BasicConfig::load(&dir.join("job_7.json")).unwrap();
         assert_eq!(saved, c);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn anon_config_files_never_collide_with_explicit_job_ids() {
+        // regression: the fallback counter started at 0, so a config
+        // without job_id would write job_0.json right over an explicit
+        // job 0's config file
+        let dir = temp_dir("aup-exec-anon").unwrap();
+        let script = write_script(&dir, "ok.sh", "#!/bin/sh\necho \"result: 1\"\n");
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut with_id = BasicConfig::new();
+        with_id.set_num("x", 42.0).set_num("job_id", 0.0);
+        ex.execute(&with_id, &env()).unwrap();
+        // two anonymous configs: distinct files, in the anon namespace
+        let mut anon_a = BasicConfig::new();
+        anon_a.set_num("x", 1.0);
+        let mut anon_b = BasicConfig::new();
+        anon_b.set_num("x", 2.0);
+        ex.execute(&anon_a, &env()).unwrap();
+        ex.execute(&anon_b, &env()).unwrap();
+        // the explicit job's file survives untouched
+        let saved = BasicConfig::load(&dir.join("job_0.json")).unwrap();
+        assert_eq!(saved, with_id);
+        assert_eq!(
+            BasicConfig::load(&dir.join("job_anon_0.json")).unwrap(),
+            anon_a
+        );
+        assert_eq!(
+            BasicConfig::load(&dir.join("job_anon_1.json")).unwrap(),
+            anon_b
+        );
         std::fs::remove_dir_all(dir).unwrap();
     }
 

@@ -1,0 +1,226 @@
+//! ChaosExecutor — seeded fault injection for the scheduler.
+//!
+//! Wraps a real [`Executor`] and perturbs attempts with failures, hangs
+//! and NaN scores. The perturbation for attempt `k` of job `j` is a pure
+//! function of `(seed, j, k)`, so a chaos run is reproducible regardless
+//! of thread interleaving or scheduler event order — which is what lets
+//! the property tests in `tests/integration_scheduler.rs` replay exact
+//! failure scenarios from a seed.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::resource::executor::Executor;
+use crate::resource::job::JobEnv;
+use crate::scheduler::dispatch::{SimExecutor, SimOutcome};
+use crate::search::BasicConfig;
+use crate::util::error::{AupError, Result};
+use crate::util::rng::Rng;
+
+/// Fault mix. Rates are per-attempt probabilities, drawn in the order
+/// hang → fail → nan; the rest of the mass is a clean run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// P(attempt errors out)
+    pub fail_rate: f64,
+    /// P(attempt hangs: sim = never completes, thread = sleeps `hang_secs`
+    /// then errors)
+    pub hang_rate: f64,
+    /// P(attempt reports a NaN score)
+    pub nan_rate: f64,
+    /// virtual duration range (uniform) of non-hung attempts
+    pub delay: (f64, f64),
+    /// thread-mode stand-in for a hang (kept small so wall tests finish)
+    pub hang_secs: f64,
+    /// attempts at index >= heal_after run clean (0 = never heals); lets
+    /// tests guarantee eventual success under bounded retries
+    pub heal_after: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            fail_rate: 0.2,
+            hang_rate: 0.0,
+            nan_rate: 0.1,
+            delay: (1.0, 10.0),
+            hang_secs: 0.05,
+            heal_after: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    Hang,
+    Fail,
+    Nan,
+    Clean,
+}
+
+/// The fault-injection wrapper. Implements both execution flavors:
+/// [`Executor`] for wall-clock runs and [`SimExecutor`] for the virtual
+/// clock harness.
+pub struct ChaosExecutor {
+    inner: Arc<dyn Executor>,
+    cfg: ChaosConfig,
+    seed: u64,
+    /// per-job attempt counters (shared across clones of the thread pool)
+    attempts: Mutex<BTreeMap<u64, u32>>,
+}
+
+impl ChaosExecutor {
+    pub fn new(inner: Arc<dyn Executor>, cfg: ChaosConfig, seed: u64) -> ChaosExecutor {
+        ChaosExecutor { inner, cfg, seed, attempts: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Deterministic per-(job, attempt) stream: mix the identifiers into
+    /// the seed, then let SplitMix64 (inside [`Rng::new`]) scramble it.
+    fn attempt_rng(&self, job_id: u64, attempt: u32) -> Rng {
+        let mixed = self
+            .seed
+            .wrapping_add(job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((attempt as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        Rng::new(mixed)
+    }
+
+    /// Draw the fault + duration for the next attempt of `job_id`.
+    fn decide(&self, job_id: u64) -> (Fault, f64) {
+        let attempt = {
+            let mut map = self.attempts.lock().unwrap();
+            let n = map.entry(job_id).or_insert(0);
+            let cur = *n;
+            *n += 1;
+            cur
+        };
+        let mut rng = self.attempt_rng(job_id, attempt);
+        let duration = rng.range(self.cfg.delay.0, self.cfg.delay.1.max(self.cfg.delay.0));
+        if self.cfg.heal_after > 0 && attempt >= self.cfg.heal_after {
+            return (Fault::Clean, duration);
+        }
+        let p = rng.uniform();
+        let fault = if p < self.cfg.hang_rate {
+            Fault::Hang
+        } else if p < self.cfg.hang_rate + self.cfg.fail_rate {
+            Fault::Fail
+        } else if p < self.cfg.hang_rate + self.cfg.fail_rate + self.cfg.nan_rate {
+            Fault::Nan
+        } else {
+            Fault::Clean
+        };
+        (fault, duration)
+    }
+}
+
+impl Executor for ChaosExecutor {
+    fn execute(&self, config: &BasicConfig, env: &JobEnv) -> Result<f64> {
+        let job_id = config.job_id().unwrap_or(u64::MAX);
+        let (fault, _duration) = self.decide(job_id);
+        match fault {
+            Fault::Hang => {
+                crate::util::sim::real_sleep(self.cfg.hang_secs);
+                Err(AupError::Job("chaos: attempt hung".into()))
+            }
+            Fault::Fail => Err(AupError::Job("chaos: injected failure".into())),
+            Fault::Nan => Ok(f64::NAN),
+            Fault::Clean => self.inner.execute(config, env),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("chaos(seed={})+{}", self.seed, self.inner.describe())
+    }
+}
+
+impl SimExecutor for ChaosExecutor {
+    fn run(&mut self, config: &BasicConfig, env: &JobEnv) -> SimOutcome {
+        let job_id = config.job_id().unwrap_or(u64::MAX);
+        let (fault, duration) = self.decide(job_id);
+        match fault {
+            Fault::Hang => SimOutcome::hang(),
+            Fault::Fail => SimOutcome::fail("chaos: injected failure", duration),
+            Fault::Nan => SimOutcome::ok(f64::NAN, duration),
+            Fault::Clean => match self.inner.execute(config, env) {
+                Ok(score) => SimOutcome::ok(score, duration),
+                Err(e) => SimOutcome::fail(e.to_string(), duration),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::executor::FnExecutor;
+
+    fn clean_inner() -> Arc<dyn Executor> {
+        Arc::new(FnExecutor::new("one", |_, _| Ok(1.0)))
+    }
+
+    fn cfg_all_fail() -> ChaosConfig {
+        ChaosConfig { fail_rate: 1.0, hang_rate: 0.0, nan_rate: 0.0, ..ChaosConfig::default() }
+    }
+
+    #[test]
+    fn deterministic_per_job_and_attempt() {
+        // two executors with the same seed must produce identical fault
+        // sequences for the same job ids, independent of call order
+        let mix = ChaosConfig {
+            fail_rate: 0.3,
+            hang_rate: 0.2,
+            nan_rate: 0.2,
+            ..ChaosConfig::default()
+        };
+        let a = ChaosExecutor::new(clean_inner(), mix.clone(), 42);
+        let b = ChaosExecutor::new(clean_inner(), mix, 42);
+        let seq = |ex: &ChaosExecutor, job: u64| -> Vec<(Fault, u64)> {
+            (0..6).map(|_| { let (f, d) = ex.decide(job); (f, d.to_bits()) }).collect()
+        };
+        // interleave job queries differently on purpose
+        let a3 = seq(&a, 3);
+        let a5 = seq(&a, 5);
+        let b5 = seq(&b, 5);
+        let b3 = seq(&b, 3);
+        assert_eq!(a3, b3);
+        assert_eq!(a5, b5);
+    }
+
+    #[test]
+    fn heal_after_guarantees_success() {
+        let mut ex = ChaosExecutor::new(
+            clean_inner(),
+            ChaosConfig { heal_after: 2, ..cfg_all_fail() },
+            7,
+        );
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        let env = JobEnv::default();
+        assert!(SimExecutor::run(&mut ex, &c, &env).result.is_err());
+        assert!(SimExecutor::run(&mut ex, &c, &env).result.is_err());
+        // third attempt (index 2) is healed
+        assert_eq!(SimExecutor::run(&mut ex, &c, &env).result.unwrap(), 1.0);
+    }
+
+    #[test]
+    fn thread_flavor_reports_errors() {
+        let ex = ChaosExecutor::new(clean_inner(), cfg_all_fail(), 1);
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 9.0);
+        let err = ex.execute(&c, &JobEnv::default()).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+    }
+
+    #[test]
+    fn nan_injection_surfaces_as_ok_nan() {
+        let mut ex = ChaosExecutor::new(
+            clean_inner(),
+            ChaosConfig { fail_rate: 0.0, hang_rate: 0.0, nan_rate: 1.0, ..ChaosConfig::default() },
+            3,
+        );
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 2.0);
+        let out = SimExecutor::run(&mut ex, &c, &JobEnv::default());
+        assert!(out.result.unwrap().is_nan());
+        assert!(out.duration.is_finite());
+    }
+}

@@ -1,0 +1,396 @@
+//! Attempt dispatchers — the scheduler's Clock + Spawner abstraction.
+//!
+//! The [`super::Scheduler`] state machine (queue, retries, timeouts,
+//! cancellation) is written against the [`Dispatcher`] trait so the same
+//! code runs in two modes:
+//!
+//! * [`ThreadDispatcher`] — production: one OS thread per attempt running
+//!   an [`Executor`], completions delivered over an mpsc channel, time is
+//!   the wall clock;
+//! * [`SimDispatcher`] — tests: attempts are evaluated synchronously and
+//!   their completions are scheduled on a [`SimClock`]-backed
+//!   [`EventQueue`], so the whole retry/timeout/preemption state machine
+//!   advances on virtual time with zero sleeps and full determinism.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::resource::executor::Executor;
+use crate::resource::job::JobEnv;
+use crate::search::BasicConfig;
+use crate::util::sim::{Clock, EventQueue, SimClock, WallClock};
+
+/// Scheduler-wide submission id (one per experiment in batch mode).
+pub type SubId = u32;
+
+/// Globally unique id of one execution attempt of one job.
+pub type AttemptId = u64;
+
+/// Completion of one attempt, delivered back to the scheduler.
+#[derive(Debug)]
+pub struct AttemptDone {
+    pub attempt: AttemptId,
+    pub outcome: Result<f64, String>,
+    /// seconds the attempt took on the dispatcher's clock
+    pub elapsed: f64,
+}
+
+/// What [`Dispatcher::wait`] produced.
+#[derive(Debug)]
+pub enum DispatchPoll {
+    /// An attempt finished.
+    Event(AttemptDone),
+    /// `wait_until` passed with no event — or, when waiting without a
+    /// deadline, the dispatcher knows no event can ever arrive (sim mode
+    /// with only hung attempts outstanding).
+    Idle,
+}
+
+/// How the scheduler launches attempts and observes time + completions.
+pub trait Dispatcher {
+    /// Seconds on this dispatcher's clock (wall or virtual).
+    fn now(&self) -> f64;
+
+    /// Launch one attempt. Its completion must eventually surface through
+    /// [`Dispatcher::wait`] unless the attempt hangs or is aborted.
+    fn dispatch(&mut self, attempt: AttemptId, sub: SubId, config: &BasicConfig, env: &JobEnv);
+
+    /// Block until the next attempt completion, or until the absolute
+    /// clock time `wait_until` passes (`None` = wait indefinitely).
+    fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll;
+
+    /// Try to hard-cancel a launched attempt. `true` means the attempt is
+    /// reaped: its completion will never be delivered and its resource
+    /// can be reused immediately. `false` means it cannot be interrupted
+    /// (thread mode) and will still deliver a completion later.
+    fn abort(&mut self, attempt: AttemptId) -> bool;
+}
+
+// ---------------------------------------------------------------------------
+// Thread mode
+// ---------------------------------------------------------------------------
+
+/// Wall-clock dispatcher: one OS thread per in-flight attempt, exactly
+/// the paper's n_parallel execution model.
+pub struct ThreadDispatcher {
+    clock: WallClock,
+    executors: BTreeMap<SubId, Arc<dyn Executor>>,
+    tx: Sender<AttemptDone>,
+    rx: Receiver<AttemptDone>,
+}
+
+impl ThreadDispatcher {
+    pub fn new() -> ThreadDispatcher {
+        let (tx, rx) = channel();
+        ThreadDispatcher { clock: WallClock::new(), executors: BTreeMap::new(), tx, rx }
+    }
+
+    /// Register the executor that runs this submission's jobs.
+    pub fn add_executor(&mut self, sub: SubId, executor: Arc<dyn Executor>) {
+        self.executors.insert(sub, executor);
+    }
+}
+
+impl Default for ThreadDispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher for ThreadDispatcher {
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn dispatch(&mut self, attempt: AttemptId, sub: SubId, config: &BasicConfig, env: &JobEnv) {
+        let executor = self
+            .executors
+            .get(&sub)
+            .unwrap_or_else(|| panic!("no executor registered for submission {sub}"))
+            .clone();
+        let tx = self.tx.clone();
+        let config = config.clone();
+        let env = env.clone();
+        std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            let outcome = executor.execute(&config, &env).map_err(|e| e.to_string());
+            // receiver gone => scheduler dropped; nothing to do
+            let _ = tx.send(AttemptDone {
+                attempt,
+                outcome,
+                elapsed: start.elapsed().as_secs_f64(),
+            });
+        });
+    }
+
+    fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
+        match wait_until {
+            None => match self.rx.recv() {
+                Ok(ev) => DispatchPoll::Event(ev),
+                Err(_) => DispatchPoll::Idle,
+            },
+            Some(t) => {
+                // clamp: a non-finite or absurd deadline (job_timeout: inf
+                // in a config) must degrade to a long wait, not a
+                // Duration::from_secs_f64 panic
+                let secs = (t - self.clock.now()).max(0.0);
+                let secs = if secs.is_finite() { secs.min(86_400.0 * 365.0) } else { 86_400.0 * 365.0 };
+                match self.rx.recv_timeout(Duration::from_secs_f64(secs)) {
+                    Ok(ev) => DispatchPoll::Event(ev),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                        DispatchPoll::Idle
+                    }
+                }
+            }
+        }
+    }
+
+    fn abort(&mut self, _attempt: AttemptId) -> bool {
+        // OS threads running blocking user code cannot be interrupted;
+        // the late completion is reported and discarded as stale.
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim mode
+// ---------------------------------------------------------------------------
+
+/// Outcome of one simulated attempt: result plus the virtual seconds it
+/// takes. `duration = f64::INFINITY` models a hang — the completion is
+/// never delivered and only a scheduler timeout can reclaim the job.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub result: Result<f64, String>,
+    pub duration: f64,
+}
+
+impl SimOutcome {
+    pub fn ok(score: f64, duration: f64) -> SimOutcome {
+        SimOutcome { result: Ok(score), duration }
+    }
+
+    pub fn fail(msg: impl Into<String>, duration: f64) -> SimOutcome {
+        SimOutcome { result: Err(msg.into()), duration }
+    }
+
+    pub fn hang() -> SimOutcome {
+        SimOutcome { result: Err("hung".into()), duration: f64::INFINITY }
+    }
+}
+
+/// A job body under the virtual clock: computes the attempt outcome and
+/// how long it takes in virtual seconds.
+pub trait SimExecutor {
+    fn run(&mut self, config: &BasicConfig, env: &JobEnv) -> SimOutcome;
+}
+
+/// Closure adapter for [`SimExecutor`].
+pub struct FnSimExecutor {
+    #[allow(clippy::type_complexity)]
+    f: Box<dyn FnMut(&BasicConfig, &JobEnv) -> SimOutcome>,
+}
+
+impl FnSimExecutor {
+    pub fn new(f: impl FnMut(&BasicConfig, &JobEnv) -> SimOutcome + 'static) -> FnSimExecutor {
+        FnSimExecutor { f: Box::new(f) }
+    }
+}
+
+impl SimExecutor for FnSimExecutor {
+    fn run(&mut self, config: &BasicConfig, env: &JobEnv) -> SimOutcome {
+        (self.f)(config, env)
+    }
+}
+
+/// Virtual-clock dispatcher: attempts are evaluated eagerly, completions
+/// are discrete events on the shared [`SimClock`]. Deterministic — event
+/// order is (time, schedule-order).
+pub struct SimDispatcher {
+    queue: EventQueue<AttemptDone>,
+    executors: BTreeMap<SubId, Box<dyn SimExecutor>>,
+    /// attempts whose events must be swallowed (aborted) or never existed
+    /// (hangs); both are reaped instantly in sim mode
+    cancelled: BTreeSet<AttemptId>,
+    /// hung attempts have no queued event at all
+    hung: BTreeSet<AttemptId>,
+}
+
+impl SimDispatcher {
+    pub fn new() -> SimDispatcher {
+        SimDispatcher {
+            queue: EventQueue::new(SimClock::new()),
+            executors: BTreeMap::new(),
+            cancelled: BTreeSet::new(),
+            hung: BTreeSet::new(),
+        }
+    }
+
+    /// Register the simulated executor for one submission.
+    pub fn add_executor(&mut self, sub: SubId, executor: Box<dyn SimExecutor>) {
+        self.executors.insert(sub, executor);
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        self.queue.clock()
+    }
+}
+
+impl Default for SimDispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher for SimDispatcher {
+    fn now(&self) -> f64 {
+        self.queue.clock().now()
+    }
+
+    fn dispatch(&mut self, attempt: AttemptId, sub: SubId, config: &BasicConfig, env: &JobEnv) {
+        let executor = self
+            .executors
+            .get_mut(&sub)
+            .unwrap_or_else(|| panic!("no sim executor registered for submission {sub}"));
+        let out = executor.run(config, env);
+        // simulated resources run at perf_factor × nominal speed
+        let perf = if env.perf_factor > 0.0 { env.perf_factor } else { 1.0 };
+        if out.duration.is_finite() {
+            let duration = (out.duration * perf).max(0.0);
+            self.queue.schedule_in(
+                duration,
+                AttemptDone { attempt, outcome: out.result, elapsed: duration },
+            );
+        } else {
+            self.hung.insert(attempt);
+        }
+    }
+
+    fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
+        loop {
+            match wait_until {
+                Some(t) => match self.queue.next_before(t) {
+                    Some((_, ev)) => {
+                        if self.cancelled.remove(&ev.attempt) {
+                            continue;
+                        }
+                        return DispatchPoll::Event(ev);
+                    }
+                    None => return DispatchPoll::Idle,
+                },
+                None => match self.queue.next() {
+                    Some((_, ev)) => {
+                        if self.cancelled.remove(&ev.attempt) {
+                            continue;
+                        }
+                        return DispatchPoll::Event(ev);
+                    }
+                    // nothing scheduled: no event can ever arrive
+                    None => return DispatchPoll::Idle,
+                },
+            }
+        }
+    }
+
+    fn abort(&mut self, attempt: AttemptId) -> bool {
+        if !self.hung.remove(&attempt) {
+            // a finite-duration event may still sit in the queue; swallow
+            // it when it surfaces
+            self.cancelled.insert(attempt);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::executor::FnExecutor;
+
+    fn env() -> JobEnv {
+        JobEnv { env: BTreeMap::new(), perf_factor: 1.0 }
+    }
+
+    #[test]
+    fn thread_dispatcher_roundtrip() {
+        let mut d = ThreadDispatcher::new();
+        d.add_executor(
+            0,
+            Arc::new(FnExecutor::new("x2", |c, _| Ok(c.get_num("x").unwrap() * 2.0))),
+        );
+        let mut c = BasicConfig::new();
+        c.set_num("x", 4.0);
+        d.dispatch(7, 0, &c, &env());
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => {
+                assert_eq!(ev.attempt, 7);
+                assert_eq!(ev.outcome.unwrap(), 8.0);
+            }
+            other => panic!("expected event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn thread_wait_deadline_expires() {
+        let mut d = ThreadDispatcher::new();
+        let t = d.now() + 0.01;
+        assert!(matches!(d.wait(Some(t)), DispatchPoll::Idle));
+        assert!(d.now() >= t - 1e-6);
+    }
+
+    #[test]
+    fn sim_dispatcher_virtual_time() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(0, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.5, 30.0))));
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => {
+                assert_eq!(ev.outcome.unwrap(), 1.5);
+                assert_eq!(ev.elapsed, 30.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.now(), 30.0);
+    }
+
+    #[test]
+    fn sim_hang_produces_no_event() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(0, Box::new(FnSimExecutor::new(|_, _| SimOutcome::hang())));
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        // deadline-bounded wait advances the virtual clock and reports idle
+        assert!(matches!(d.wait(Some(10.0)), DispatchPoll::Idle));
+        assert_eq!(d.now(), 10.0);
+        // unbounded wait knows nothing will ever arrive
+        assert!(matches!(d.wait(None), DispatchPoll::Idle));
+        assert!(d.abort(1));
+    }
+
+    #[test]
+    fn sim_abort_swallows_event() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(0, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 5.0))));
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        d.dispatch(2, 0, &BasicConfig::new(), &env());
+        assert!(d.abort(1));
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sim_perf_factor_scales_duration() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(0, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 10.0))));
+        let mut e = env();
+        e.perf_factor = 2.0;
+        d.dispatch(1, 0, &BasicConfig::new(), &e);
+        match d.wait(None) {
+            DispatchPoll::Event(_) => assert_eq!(d.now(), 20.0),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,1068 @@
+//! Shared job scheduler — the subsystem behind `aup run` and `aup batch`.
+//!
+//! The paper's Algorithm 1 interleaves proposing and job execution in one
+//! loop owned by a single experiment. That shape cannot share a resource
+//! pool across experiments, retry flaky jobs, or bound runaway ones. This
+//! module extracts execution into a first-class [`Scheduler`]:
+//!
+//! * a priority queue of submitted jobs (FIFO within a priority level);
+//! * a worker pool sized by a shared [`ResourceManager`] — multiple
+//!   experiments submit into one pool through per-experiment
+//!   *submissions*;
+//! * per-attempt deadlines ([`SchedulerConfig::job_timeout`]);
+//! * bounded retries with exponential backoff
+//!   ([`SchedulerConfig::max_retries`], [`SchedulerConfig::retry_backoff`]);
+//! * cancellation of queued, backing-off or running jobs.
+//!
+//! The state machine is written against the [`dispatch::Dispatcher`]
+//! abstraction, so the identical code runs on OS threads + wall clock in
+//! production and on a deterministic virtual clock in tests (see
+//! `tests/integration_scheduler.rs`), where [`chaos::ChaosExecutor`]
+//! drives it through seeded failure scenarios.
+//!
+//! Job lifecycle:
+//!
+//! ```text
+//!              ┌────────────(retry due)───────────┐
+//!              v                                  │
+//! submit -> QUEUED -(resource free)-> RUNNING -> BACKOFF   (attempt failed,
+//!              │                        │  │                retries left)
+//!              │                        │  └-> FAILED      (retries exhausted)
+//!              │                        └----> DONE        (finite score)
+//!              └---------(cancel, any non-terminal state)-> CANCELLED
+//! ```
+
+pub mod chaos;
+pub mod dispatch;
+
+use std::collections::{BinaryHeap, BTreeMap};
+
+use crate::resource::job::JobEnv;
+use crate::resource::{ResourceHandle, ResourceManager};
+use crate::search::BasicConfig;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+pub use dispatch::{
+    AttemptDone, AttemptId, DispatchPoll, Dispatcher, FnSimExecutor, SimDispatcher, SimExecutor,
+    SimOutcome, SubId, ThreadDispatcher,
+};
+pub use chaos::{ChaosConfig, ChaosExecutor};
+
+const EPS: f64 = 1e-9;
+
+/// Per-submission scheduling knobs (experiment.json keys in parens).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// retries after the first failed attempt (`job_retries`); a job gets
+    /// `1 + max_retries` attempts total
+    pub max_retries: u32,
+    /// base backoff seconds before retry k is `retry_backoff * 2^(k-1)`
+    /// (`retry_backoff`)
+    pub retry_backoff: f64,
+    /// per-attempt deadline in seconds (`job_timeout`); `None` = unbounded
+    pub job_timeout: Option<f64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_retries: 0, retry_backoff: 1.0, job_timeout: None }
+    }
+}
+
+impl SchedulerConfig {
+    /// Read the scheduler keys out of an experiment.json object; absent
+    /// keys keep their defaults.
+    pub fn from_json(j: &Json) -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::default();
+        if let Some(v) = j.get("job_retries").and_then(Json::as_i64) {
+            cfg.max_retries = v.max(0) as u32;
+        }
+        if let Some(v) = j.get("retry_backoff").and_then(Json::as_f64) {
+            if v.is_finite() {
+                cfg.retry_backoff = v.max(0.0);
+            }
+        }
+        if let Some(v) = j.get("job_timeout").and_then(Json::as_f64) {
+            if v > 0.0 && v.is_finite() {
+                cfg.job_timeout = Some(v);
+            }
+        }
+        cfg
+    }
+}
+
+/// Job lifecycle states (terminal: Done / Failed / Cancelled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Backoff,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "QUEUED",
+            JobState::Running => "RUNNING",
+            JobState::Backoff => "BACKOFF",
+            JobState::Done => "DONE",
+            JobState::Failed => "FAILED",
+            JobState::Cancelled => "CANCELLED",
+        }
+    }
+}
+
+/// One observed state change, emitted for tracking (persisted into the
+/// store's `job_event` table by the experiment layer).
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub sub: SubId,
+    pub job_id: u64,
+    pub state: JobState,
+    /// attempts started so far (0 while initially queued)
+    pub attempt: u32,
+    /// scheduler-clock timestamp (virtual seconds in sim mode)
+    pub at: f64,
+    /// resource id for Running transitions
+    pub rid: Option<i64>,
+    pub detail: String,
+}
+
+/// Terminal completion of a job, delivered exactly once.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub sub: SubId,
+    pub job_id: u64,
+    pub config: BasicConfig,
+    /// Done, Failed or Cancelled
+    pub state: JobState,
+    /// Ok(score) iff state == Done
+    pub outcome: Result<f64, String>,
+    /// attempts started over the job's lifetime
+    pub attempts: u32,
+    /// total execution seconds across attempts (scheduler clock)
+    pub elapsed: f64,
+}
+
+/// Events drained from [`Scheduler::poll`].
+#[derive(Debug, Clone)]
+pub enum SchedEvent {
+    Transition(Transition),
+    Done(Completion),
+}
+
+struct SubState {
+    priority: i32,
+    cfg: SchedulerConfig,
+    /// jobs submitted and not yet terminal
+    outstanding: usize,
+}
+
+struct Job {
+    config: BasicConfig,
+    priority: i32,
+    /// queue sequence of the *current* pending entry (re-queued jobs get
+    /// a fresh seq; older heap entries are recognized as stale)
+    seq: u64,
+    state: JobState,
+    /// attempts started
+    attempts: u32,
+    /// total executed seconds across attempts
+    elapsed: f64,
+    /// backoff eligibility time
+    next_due: f64,
+    /// running-attempt deadline on the dispatcher clock
+    deadline: Option<f64>,
+    /// running-attempt start time
+    started_at: f64,
+    attempt_id: Option<AttemptId>,
+    handle: Option<ResourceHandle>,
+}
+
+#[derive(PartialEq, Eq)]
+struct PendingEntry {
+    priority: i32,
+    seq: u64,
+    key: (SubId, u64),
+}
+
+// max-heap: highest priority first, FIFO (lowest seq) within a priority
+impl Ord for PendingEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for PendingEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The scheduler. Generic over the [`Dispatcher`] so production and sim
+/// flavors share one state machine; see [`ThreadScheduler`] /
+/// [`SimScheduler`].
+pub struct Scheduler<D: Dispatcher> {
+    rm: Box<dyn ResourceManager>,
+    dispatcher: D,
+    subs: BTreeMap<SubId, SubState>,
+    jobs: BTreeMap<(SubId, u64), Job>,
+    pending: BinaryHeap<PendingEntry>,
+    /// live attempt -> job
+    attempts: BTreeMap<AttemptId, (SubId, u64)>,
+    /// timed-out / cancelled thread attempts still pinning a resource
+    /// slot until their thread finishes
+    zombies: BTreeMap<AttemptId, ResourceHandle>,
+    next_attempt: AttemptId,
+    next_seq: u64,
+    next_sub: SubId,
+    /// non-terminal job count
+    active: usize,
+    out: Vec<SchedEvent>,
+}
+
+/// Production flavor: wall clock, one OS thread per attempt.
+pub type ThreadScheduler = Scheduler<ThreadDispatcher>;
+/// Test flavor: deterministic virtual clock.
+pub type SimScheduler = Scheduler<SimDispatcher>;
+
+impl<D: Dispatcher> Scheduler<D> {
+    pub fn new(rm: Box<dyn ResourceManager>, dispatcher: D) -> Scheduler<D> {
+        Scheduler {
+            rm,
+            dispatcher,
+            subs: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            pending: BinaryHeap::new(),
+            attempts: BTreeMap::new(),
+            zombies: BTreeMap::new(),
+            next_attempt: 0,
+            next_seq: 0,
+            next_sub: 0,
+            active: 0,
+            out: Vec::new(),
+        }
+    }
+
+    /// Open a submission — one per experiment. Jobs of higher-priority
+    /// submissions are placed first when the pool is contended.
+    pub fn add_submission(&mut self, priority: i32, cfg: SchedulerConfig) -> SubId {
+        let sub = self.next_sub;
+        self.next_sub += 1;
+        self.subs.insert(sub, SubState { priority, cfg, outstanding: 0 });
+        sub
+    }
+
+    /// Register executors etc. on the concrete dispatcher.
+    pub fn dispatcher_mut(&mut self) -> &mut D {
+        &mut self.dispatcher
+    }
+
+    pub fn dispatcher(&self) -> &D {
+        &self.dispatcher
+    }
+
+    /// Current scheduler-clock time.
+    pub fn now(&self) -> f64 {
+        self.dispatcher.now()
+    }
+
+    /// Non-terminal jobs of one submission.
+    pub fn outstanding(&self, sub: SubId) -> usize {
+        self.subs.get(&sub).map_or(0, |s| s.outstanding)
+    }
+
+    /// True when every submitted job has reached a terminal state.
+    pub fn idle(&self) -> bool {
+        self.active == 0
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.rm.capacity()
+    }
+
+    pub fn pool_free(&self) -> usize {
+        self.rm.free_count()
+    }
+
+    /// Hand the resource pool back (for leak assertions in tests).
+    pub fn into_pool(self) -> Box<dyn ResourceManager> {
+        self.rm
+    }
+
+    /// Submit one job. The config must carry a `job_id` unique within the
+    /// submission.
+    pub fn submit(&mut self, sub: SubId, config: BasicConfig) -> Result<u64> {
+        let job_id = config
+            .job_id()
+            .ok_or_else(|| AupError::Job("submitted config has no job_id".into()))?;
+        let key = (sub, job_id);
+        if self.jobs.contains_key(&key) {
+            return Err(AupError::Job(format!(
+                "duplicate job_id {job_id} in submission {sub}"
+            )));
+        }
+        let priority = self
+            .subs
+            .get_mut(&sub)
+            .ok_or_else(|| AupError::Job(format!("unknown submission {sub}")))?
+            .priority;
+        self.subs.get_mut(&sub).unwrap().outstanding += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let now = self.dispatcher.now();
+        self.jobs.insert(
+            key,
+            Job {
+                config,
+                priority,
+                seq,
+                state: JobState::Queued,
+                attempts: 0,
+                elapsed: 0.0,
+                next_due: now,
+                deadline: None,
+                started_at: now,
+                attempt_id: None,
+                handle: None,
+            },
+        );
+        self.pending.push(PendingEntry { priority, seq, key });
+        self.active += 1;
+        self.push_transition(key, JobState::Queued, 0, now, None, "submitted".to_string());
+        Ok(job_id)
+    }
+
+    /// Cancel a job in any non-terminal state. Returns false when the job
+    /// is unknown or already terminal.
+    pub fn cancel(&mut self, sub: SubId, job_id: u64) -> bool {
+        let key = (sub, job_id);
+        let state = match self.jobs.get(&key) {
+            Some(j) => j.state,
+            None => return false,
+        };
+        if state.is_terminal() {
+            return false;
+        }
+        let now = self.dispatcher.now();
+        if state == JobState::Running {
+            let (attempt_id, handle) = {
+                let j = self.jobs.get_mut(&key).unwrap();
+                j.deadline = None;
+                (j.attempt_id.take(), j.handle.take())
+            };
+            if let Some(a) = attempt_id {
+                self.attempts.remove(&a);
+                let reaped = self.dispatcher.abort(a);
+                if let Some(h) = handle {
+                    if reaped {
+                        self.rm.release(&h);
+                    } else {
+                        // the thread still runs user code on that slot;
+                        // reclaim it when the late completion arrives
+                        self.zombies.insert(a, h);
+                    }
+                }
+            }
+        }
+        // queued heap entries become stale and are skipped on pop
+        self.complete_job(key, JobState::Cancelled, Err("cancelled".into()), now);
+        true
+    }
+
+    /// Cancel everything outstanding in one submission.
+    pub fn cancel_submission(&mut self, sub: SubId) -> usize {
+        let ids: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|((s, _), j)| *s == sub && !j.state.is_terminal())
+            .map(|((_, id), _)| *id)
+            .collect();
+        let mut n = 0;
+        for id in ids {
+            if self.cancel(sub, id) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Advance the state machine and drain events.
+    ///
+    /// With `block = false` this fills free slots and returns whatever
+    /// events are ready. With `block = true` it waits (on the
+    /// dispatcher's clock) until at least one event is available, or
+    /// returns an empty vec when the scheduler is fully idle.
+    pub fn poll(&mut self, block: bool) -> Result<Vec<SchedEvent>> {
+        loop {
+            let now = self.dispatcher.now();
+            self.promote_backoffs(now);
+            self.fill_slots();
+            if !self.out.is_empty() || !block {
+                return Ok(std::mem::take(&mut self.out));
+            }
+            if self.idle() {
+                return Ok(Vec::new());
+            }
+            let wait_until = self.next_wakeup();
+            let executing = !self.attempts.is_empty() || !self.zombies.is_empty();
+            if !executing && wait_until.is_none() {
+                // jobs queued, nothing running, nothing to wait for: the
+                // pool can never free up
+                return Err(AupError::Resource(
+                    "scheduler stalled: jobs queued but no resource can become available"
+                        .into(),
+                ));
+            }
+            match self.dispatcher.wait(wait_until) {
+                DispatchPoll::Event(ev) => self.on_attempt_done(ev),
+                DispatchPoll::Idle => {
+                    if wait_until.is_some() {
+                        self.expire_deadlines();
+                    } else {
+                        // sim mode: every live attempt is hung and no
+                        // timeout is set — fail them so jobs still reach
+                        // a terminal state deterministically
+                        self.fail_hung_attempts();
+                    }
+                }
+            }
+        }
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn push_transition(
+        &mut self,
+        key: (SubId, u64),
+        state: JobState,
+        attempt: u32,
+        at: f64,
+        rid: Option<i64>,
+        detail: String,
+    ) {
+        self.out.push(SchedEvent::Transition(Transition {
+            sub: key.0,
+            job_id: key.1,
+            state,
+            attempt,
+            at,
+            rid,
+            detail,
+        }));
+    }
+
+    fn sub_cfg(&self, sub: SubId) -> SchedulerConfig {
+        self.subs
+            .get(&sub)
+            .map(|s| s.cfg.clone())
+            .unwrap_or_default()
+    }
+
+    /// Move due Backoff jobs back into the pending queue.
+    fn promote_backoffs(&mut self, now: f64) {
+        let due: Vec<(SubId, u64)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Backoff && j.next_due <= now + EPS)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in due {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            let (priority, attempts) = {
+                let j = self.jobs.get_mut(&key).unwrap();
+                j.state = JobState::Queued;
+                j.seq = seq;
+                (j.priority, j.attempts)
+            };
+            self.pending.push(PendingEntry { priority, seq, key });
+            self.push_transition(
+                key,
+                JobState::Queued,
+                attempts,
+                now,
+                None,
+                format!("retry {} queued", attempts + 1),
+            );
+        }
+    }
+
+    /// Start queued jobs while resources are free.
+    fn fill_slots(&mut self) {
+        loop {
+            // find the next live pending entry without burning a resource
+            let key = loop {
+                let (ekey, eseq) = match self.pending.peek() {
+                    None => return,
+                    Some(e) => (e.key, e.seq),
+                };
+                let stale = match self.jobs.get(&ekey) {
+                    Some(j) => j.state != JobState::Queued || j.seq != eseq,
+                    None => true,
+                };
+                if stale {
+                    self.pending.pop();
+                    continue;
+                }
+                break ekey;
+            };
+            let handle = match self.rm.get_available() {
+                Some(h) => h,
+                None => return,
+            };
+            self.pending.pop();
+            self.start_attempt(key, handle);
+        }
+    }
+
+    fn start_attempt(&mut self, key: (SubId, u64), handle: ResourceHandle) {
+        let attempt_id = self.next_attempt;
+        self.next_attempt += 1;
+        let now = self.dispatcher.now();
+        let timeout = self.sub_cfg(key.0).job_timeout;
+        let rid = handle.rid;
+        let label = handle.label.clone();
+        let env = JobEnv::from_handle(&handle);
+        let (config, attempts) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.attempts += 1;
+            j.state = JobState::Running;
+            j.attempt_id = Some(attempt_id);
+            j.handle = Some(handle);
+            j.started_at = now;
+            j.deadline = timeout.map(|t| now + t);
+            (j.config.clone(), j.attempts)
+        };
+        self.attempts.insert(attempt_id, key);
+        self.push_transition(
+            key,
+            JobState::Running,
+            attempts,
+            now,
+            Some(rid),
+            format!("attempt {attempts} on {label}"),
+        );
+        self.dispatcher.dispatch(attempt_id, key.0, &config, &env);
+    }
+
+    fn on_attempt_done(&mut self, ev: AttemptDone) {
+        let key = match self.attempts.remove(&ev.attempt) {
+            Some(k) => k,
+            None => {
+                // stale completion from a timed-out / cancelled thread
+                // attempt: its only job left is to free the slot
+                if let Some(h) = self.zombies.remove(&ev.attempt) {
+                    self.rm.release(&h);
+                }
+                return;
+            }
+        };
+        let now = self.dispatcher.now();
+        let handle = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.elapsed += ev.elapsed;
+            j.deadline = None;
+            j.attempt_id = None;
+            j.handle.take()
+        };
+        if let Some(h) = handle {
+            self.rm.release(&h);
+        }
+        match ev.outcome {
+            Ok(score) if score.is_finite() => {
+                self.complete_job(key, JobState::Done, Ok(score), now)
+            }
+            Ok(bad) => self.fail_attempt(key, format!("non-finite score {bad}"), now),
+            Err(msg) => self.fail_attempt(key, msg, now),
+        }
+    }
+
+    /// Time out every running attempt whose deadline passed.
+    fn expire_deadlines(&mut self) {
+        let now = self.dispatcher.now();
+        let expired: Vec<(SubId, u64)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| {
+                j.state == JobState::Running
+                    && j.deadline.is_some_and(|d| d <= now + EPS)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for key in expired {
+            let (attempt_id, handle, ran_for) = {
+                let j = self.jobs.get_mut(&key).unwrap();
+                j.deadline = None;
+                let ran = now - j.started_at;
+                j.elapsed += ran.max(0.0);
+                (j.attempt_id.take(), j.handle.take(), ran)
+            };
+            if let Some(a) = attempt_id {
+                self.attempts.remove(&a);
+                let reaped = self.dispatcher.abort(a);
+                if let Some(h) = handle {
+                    if reaped {
+                        self.rm.release(&h);
+                    } else {
+                        self.zombies.insert(a, h);
+                    }
+                }
+            }
+            self.fail_attempt(key, format!("timeout after {ran_for:.3}s"), now);
+        }
+    }
+
+    /// Sim-only: no event can ever arrive, so every live attempt is hung.
+    fn fail_hung_attempts(&mut self) {
+        let now = self.dispatcher.now();
+        let live: Vec<(AttemptId, (SubId, u64))> =
+            self.attempts.iter().map(|(a, k)| (*a, *k)).collect();
+        for (attempt, key) in live {
+            self.attempts.remove(&attempt);
+            self.dispatcher.abort(attempt);
+            let handle = self.jobs.get_mut(&key).and_then(|j| {
+                j.deadline = None;
+                j.attempt_id = None;
+                j.handle.take()
+            });
+            if let Some(h) = handle {
+                self.rm.release(&h);
+            }
+            self.fail_attempt(key, "hung with no timeout configured".into(), now);
+        }
+    }
+
+    /// An attempt failed: back off and retry, or fail terminally.
+    fn fail_attempt(&mut self, key: (SubId, u64), msg: String, now: f64) {
+        let cfg = self.sub_cfg(key.0);
+        let attempts = self.jobs.get(&key).map_or(0, |j| j.attempts);
+        // `attempts <= max_retries` (not `< max_retries + 1`): the latter
+        // wraps for max_retries = u32::MAX and would disable retries
+        if attempts <= cfg.max_retries {
+            // cap the exponential so huge retry counts can't push next_due
+            // to infinity (which would break the monotonic sim clock)
+            let backoff = (cfg.retry_backoff
+                * f64::powi(2.0, attempts.saturating_sub(1).min(60) as i32))
+            .min(86_400.0 * 365.0);
+            {
+                let j = self.jobs.get_mut(&key).unwrap();
+                j.state = JobState::Backoff;
+                j.next_due = now + backoff;
+            }
+            self.push_transition(
+                key,
+                JobState::Backoff,
+                attempts,
+                now,
+                None,
+                format!("attempt {attempts} failed: {msg}; retry in {backoff:.3}s"),
+            );
+        } else {
+            self.complete_job(key, JobState::Failed, Err(msg), now);
+        }
+    }
+
+    fn complete_job(
+        &mut self,
+        key: (SubId, u64),
+        state: JobState,
+        outcome: Result<f64, String>,
+        now: f64,
+    ) {
+        let (config, attempts, elapsed) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.state = state;
+            (j.config.clone(), j.attempts, j.elapsed)
+        };
+        self.active -= 1;
+        if let Some(s) = self.subs.get_mut(&key.0) {
+            s.outstanding = s.outstanding.saturating_sub(1);
+        }
+        let detail = match &outcome {
+            Ok(score) => format!("score {score}"),
+            Err(msg) => msg.clone(),
+        };
+        self.push_transition(key, state, attempts, now, None, detail);
+        self.out.push(SchedEvent::Done(Completion {
+            sub: key.0,
+            job_id: key.1,
+            config,
+            state,
+            outcome,
+            attempts,
+            elapsed,
+        }));
+    }
+
+    /// Earliest time something scheduled happens: a running attempt's
+    /// deadline or a backoff becoming due.
+    fn next_wakeup(&self) -> Option<f64> {
+        let mut t: Option<f64> = None;
+        for j in self.jobs.values() {
+            let candidate = match j.state {
+                JobState::Running => j.deadline,
+                JobState::Backoff => Some(j.next_due),
+                _ => None,
+            };
+            if let Some(c) = candidate {
+                t = Some(match t {
+                    Some(cur) => cur.min(c),
+                    None => c,
+                });
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::local::CpuManager;
+
+    fn cfg_with(retries: u32, backoff: f64, timeout: Option<f64>) -> SchedulerConfig {
+        SchedulerConfig { max_retries: retries, retry_backoff: backoff, job_timeout: timeout }
+    }
+
+    fn job(id: u64) -> BasicConfig {
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", id as f64).set_num("x", id as f64);
+        c
+    }
+
+    /// Drain the scheduler to idle, returning all completions in order.
+    fn drain(s: &mut SimScheduler) -> Vec<Completion> {
+        let mut done = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                if let SchedEvent::Done(c) = ev {
+                    done.push(c);
+                }
+            }
+        }
+        done
+    }
+
+    #[test]
+    fn single_job_completes_on_virtual_clock() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|c, _| SimOutcome::ok(c.get_num("x").unwrap(), 12.0))),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].state, JobState::Done);
+        assert_eq!(done[0].outcome.clone().unwrap(), 0.0);
+        assert_eq!(done[0].attempts, 1);
+        assert_eq!(s.now(), 12.0);
+        assert!(s.idle());
+        assert_eq!(s.pool_free(), 1);
+    }
+
+    #[test]
+    fn retry_with_exponential_backoff() {
+        // every attempt fails; 2 retries -> 3 attempts, backoffs 1s then 2s
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(2, 1.0, None));
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|_, _| SimOutcome::fail("boom", 10.0))),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].state, JobState::Failed);
+        assert_eq!(done[0].attempts, 3);
+        // 10 + 1 + 10 + 2 + 10 virtual seconds
+        assert!((s.now() - 33.0).abs() < 1e-6, "t = {}", s.now());
+        assert_eq!(s.pool_free(), 1);
+    }
+
+    #[test]
+    fn flaky_job_eventually_succeeds() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(3, 0.5, None));
+        let mut calls = 0u32;
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(move |_, _| {
+                calls += 1;
+                if calls < 3 {
+                    SimOutcome::fail("flaky", 1.0)
+                } else {
+                    SimOutcome::ok(0.25, 1.0)
+                }
+            })),
+        );
+        s.submit(sub, job(4)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done[0].state, JobState::Done);
+        assert_eq!(done[0].attempts, 3);
+        assert_eq!(done[0].outcome.clone().unwrap(), 0.25);
+    }
+
+    #[test]
+    fn timeout_reclaims_hung_job() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(0, 1.0, Some(30.0)));
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::hang())));
+        s.submit(sub, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done[0].state, JobState::Failed);
+        assert!(done[0].outcome.clone().unwrap_err().contains("timeout"));
+        assert!((s.now() - 30.0).abs() < 1e-6);
+        assert_eq!(s.pool_free(), 1, "timed-out sim attempt must free its slot");
+    }
+
+    #[test]
+    fn hang_without_timeout_still_terminates() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(2)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(0, 1.0, None));
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|c, _| {
+                if c.job_id().unwrap() == 0 {
+                    SimOutcome::hang()
+                } else {
+                    SimOutcome::ok(1.0, 5.0)
+                }
+            })),
+        );
+        s.submit(sub, job(0)).unwrap();
+        s.submit(sub, job(1)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 2);
+        let hung = done.iter().find(|c| c.job_id == 0).unwrap();
+        assert_eq!(hung.state, JobState::Failed);
+        assert!(hung.outcome.clone().unwrap_err().contains("hung"));
+        assert_eq!(s.pool_free(), 2);
+    }
+
+    #[test]
+    fn priorities_win_the_queue() {
+        // one slot, three queued jobs: the high-priority submission's job
+        // is placed first even though it was submitted last; within a
+        // priority level, FIFO order holds
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let lo = s.add_submission(0, SchedulerConfig::default());
+        let hi = s.add_submission(5, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(lo, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 10.0))));
+        s.dispatcher_mut()
+            .add_executor(hi, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))));
+        s.submit(lo, job(0)).unwrap();
+        s.submit(lo, job(1)).unwrap();
+        s.submit(hi, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 3);
+        // completion order: hi/0 (priority), then lo/0, lo/1 (FIFO)
+        assert_eq!((done[0].sub, done[0].job_id), (hi, 0));
+        assert_eq!((done[1].sub, done[1].job_id), (lo, 0));
+        assert_eq!((done[2].sub, done[2].job_id), (lo, 1));
+    }
+
+    #[test]
+    fn cancel_queued_and_running() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 100.0))));
+        s.submit(sub, job(0)).unwrap();
+        s.submit(sub, job(1)).unwrap();
+        // dispatch job 0 (non-blocking poll), job 1 stays queued
+        let _ = s.poll(false).unwrap();
+        assert!(s.cancel(sub, 0), "running job cancels");
+        assert!(s.cancel(sub, 1), "queued job cancels");
+        assert!(!s.cancel(sub, 1), "second cancel is a no-op");
+        assert!(!s.cancel(sub, 9), "unknown job");
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|c| c.state == JobState::Cancelled));
+        assert_eq!(s.pool_free(), 1);
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn duplicate_and_missing_job_ids_rejected() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        s.submit(sub, job(0)).unwrap();
+        assert!(s.submit(sub, job(0)).is_err(), "duplicate job_id");
+        assert!(s.submit(sub, BasicConfig::new()).is_err(), "missing job_id");
+    }
+
+    #[test]
+    fn non_finite_score_is_attempt_failure() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(1, 1.0, None));
+        let mut calls = 0u32;
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(move |_, _| {
+                calls += 1;
+                if calls == 1 {
+                    SimOutcome::ok(f64::NAN, 1.0)
+                } else {
+                    SimOutcome::ok(2.0, 1.0)
+                }
+            })),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done[0].state, JobState::Done);
+        assert_eq!(done[0].attempts, 2, "NaN attempt must be retried");
+        assert_eq!(done[0].outcome.clone().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn transitions_tell_the_whole_story() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(1, 2.0, None));
+        let mut calls = 0u32;
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(move |_, _| {
+                calls += 1;
+                if calls == 1 {
+                    SimOutcome::fail("first", 3.0)
+                } else {
+                    SimOutcome::ok(1.0, 3.0)
+                }
+            })),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let mut states = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                if let SchedEvent::Transition(t) = ev {
+                    states.push((t.state, t.attempt, t.at));
+                }
+            }
+        }
+        let expected = [
+            (JobState::Queued, 0, 0.0),
+            (JobState::Running, 1, 0.0),
+            (JobState::Backoff, 1, 3.0),
+            (JobState::Queued, 2, 5.0),
+            (JobState::Running, 2, 5.0),
+            (JobState::Done, 2, 8.0),
+        ];
+        assert_eq!(states.len(), expected.len(), "{states:?}");
+        for (got, want) in states.iter().zip(expected.iter()) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1, want.1);
+            assert!((got.2 - want.2).abs() < 1e-6, "{states:?}");
+        }
+    }
+
+    #[test]
+    fn stalled_scheduler_errors_instead_of_hanging() {
+        // a pool whose only slot is pinned by a zombie-free, never-free
+        // manager cannot place queued work — poll must error, not spin
+        struct EmptyRm;
+        impl ResourceManager for EmptyRm {
+            fn get_available(&mut self) -> Option<ResourceHandle> {
+                None
+            }
+            fn release(&mut self, _h: &ResourceHandle) {}
+            fn capacity(&self) -> usize {
+                1
+            }
+            fn free_count(&self) -> usize {
+                0
+            }
+            fn kind(&self) -> &'static str {
+                "empty"
+            }
+        }
+        let mut s = SimScheduler::new(Box::new(EmptyRm), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        s.submit(sub, job(0)).unwrap();
+        let _ = s.poll(false).unwrap(); // drains the Queued transition
+        assert!(s.poll(true).is_err());
+    }
+
+    #[test]
+    fn threaded_scheduler_smoke() {
+        use crate::resource::executor::FnExecutor;
+        use std::sync::Arc;
+        let mut s = ThreadScheduler::new(Box::new(CpuManager::new(2)), ThreadDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(1, 0.0, None));
+        s.dispatcher_mut().add_executor(
+            sub,
+            Arc::new(FnExecutor::new("sq", |c, _| {
+                let x = c.get_num("x").unwrap();
+                if x == 2.0 {
+                    Err(crate::util::error::AupError::Job("flaky".into()))
+                } else {
+                    Ok(x * x)
+                }
+            })),
+        );
+        for i in 0..4 {
+            s.submit(sub, job(i)).unwrap();
+        }
+        let mut done = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                if let SchedEvent::Done(c) = ev {
+                    done.push(c);
+                }
+            }
+        }
+        assert_eq!(done.len(), 4);
+        // job 2 fails its retry too and ends Failed; others succeed
+        for c in &done {
+            if c.job_id == 2 {
+                assert_eq!(c.state, JobState::Failed);
+                assert_eq!(c.attempts, 2);
+            } else {
+                assert_eq!(c.state, JobState::Done);
+                assert_eq!(c.outcome.clone().unwrap(), (c.job_id * c.job_id) as f64);
+            }
+        }
+        assert_eq!(s.pool_free(), 2);
+    }
+
+    #[test]
+    fn scheduler_config_from_json() {
+        let j = Json::parse(r#"{"job_retries": 3, "retry_backoff": 0.5, "job_timeout": 60}"#)
+            .unwrap();
+        let c = SchedulerConfig::from_json(&j);
+        assert_eq!(c.max_retries, 3);
+        assert_eq!(c.retry_backoff, 0.5);
+        assert_eq!(c.job_timeout, Some(60.0));
+        assert_eq!(SchedulerConfig::from_json(&Json::Null), SchedulerConfig::default());
+    }
+}

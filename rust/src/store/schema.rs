@@ -1,6 +1,9 @@
 //! The Auptimizer tracking schema (paper Fig. 2): `user`, `resource`,
 //! `experiment`, `job` tables plus typed accessors used by the
-//! experiment loop and `aup viz`.
+//! experiment loop and `aup viz`. The scheduler additionally journals
+//! every job state transition into `job_event` (append-only), which is
+//! what makes retry accounting and crash forensics queryable via
+//! `aup sql`.
 
 use crate::store::value::Value;
 use crate::store::{QueryResult, Store};
@@ -14,6 +17,7 @@ pub enum JobStatus {
     Running,
     Finished,
     Failed,
+    Cancelled,
 }
 
 impl JobStatus {
@@ -23,6 +27,7 @@ impl JobStatus {
             JobStatus::Running => "RUNNING",
             JobStatus::Finished => "FINISHED",
             JobStatus::Failed => "FAILED",
+            JobStatus::Cancelled => "CANCELLED",
         }
     }
 
@@ -32,8 +37,14 @@ impl JobStatus {
             "RUNNING" => Ok(JobStatus::Running),
             "FINISHED" => Ok(JobStatus::Finished),
             "FAILED" => Ok(JobStatus::Failed),
+            "CANCELLED" => Ok(JobStatus::Cancelled),
             other => Err(AupError::Store(format!("unknown job status '{other}'"))),
         }
+    }
+
+    /// Terminal states: no further transition is legal.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Finished | JobStatus::Failed | JobStatus::Cancelled)
     }
 }
 
@@ -112,12 +123,26 @@ pub fn init_schema(store: &mut Store) -> Result<()> {
              status TEXT, score REAL, start_time REAL, end_time REAL)",
         )?;
     }
+    if !store.has_table("job_event") {
+        store.execute(
+            "CREATE TABLE job_event (evid INT PRIMARY KEY, jid INT, eid INT, \
+             attempt INT, state TEXT, time REAL, detail TEXT)",
+        )?;
+    }
     Ok(())
 }
 
 fn next_id(store: &mut Store, table: &str, pk: &str) -> Result<i64> {
     let r = store.execute(&format!("SELECT {pk} FROM {table} ORDER BY {pk} DESC LIMIT 1"))?;
     Ok(r.scalar().and_then(Value::as_i64).map_or(0, |m| m + 1))
+}
+
+/// Next free primary key in the `job` table. The tracker allocates store
+/// jids from here so several experiments can share one durable store —
+/// proposer `job_id`s restart at 0 per experiment and would collide as
+/// primary keys.
+pub fn next_job_id(store: &mut Store) -> Result<i64> {
+    next_id(store, "job", "jid")
 }
 
 /// Register a user (id allocated).
@@ -193,6 +218,39 @@ pub fn start_job(
     Ok(())
 }
 
+/// Record a job submission that is waiting for a resource (scheduler
+/// queue); the row moves to RUNNING via [`set_job_running`].
+pub fn start_job_queued(
+    store: &mut Store,
+    jid: i64,
+    eid: i64,
+    config_json: &str,
+    now: f64,
+) -> Result<()> {
+    store.execute(&format!(
+        "INSERT INTO job (jid, eid, rid, config, status, start_time) \
+         VALUES ({jid}, {eid}, -1, {}, 'PENDING', {now})",
+        quote(config_json)
+    ))?;
+    Ok(())
+}
+
+/// The scheduler placed the job on a resource.
+pub fn set_job_running(store: &mut Store, jid: i64, rid: i64) -> Result<()> {
+    store.execute(&format!(
+        "UPDATE job SET status = 'RUNNING', rid = {rid} WHERE jid = {jid}"
+    ))?;
+    Ok(())
+}
+
+/// The job was cancelled before producing a score.
+pub fn cancel_job(store: &mut Store, jid: i64, now: f64) -> Result<()> {
+    store.execute(&format!(
+        "UPDATE job SET status = 'CANCELLED', end_time = {now} WHERE jid = {jid}"
+    ))?;
+    Ok(())
+}
+
 /// Job finished: record score + end time.
 pub fn finish_job(store: &mut Store, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
     let status = if ok { JobStatus::Finished } else { JobStatus::Failed };
@@ -206,16 +264,101 @@ pub fn finish_job(store: &mut Store, jid: i64, score: Option<f64>, ok: bool, now
     Ok(())
 }
 
-/// Crash recovery: mark every job still RUNNING as FAILED (the process
-/// that owned it is gone). Returns the number of recovered rows. Called
-/// when a durable store is reopened by `aup run`.
+/// Crash recovery: mark every job still RUNNING or PENDING as FAILED
+/// (the process that owned it is gone), journaling a `job_event` per
+/// recovered row so retry accounting stays complete. Returns the number
+/// of recovered rows. Called when a durable store is reopened by
+/// `aup run` / `aup batch`.
 pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
     if !store.has_table("job") {
         init_schema(store)?;
         return Ok(0);
     }
-    let r = store.execute("UPDATE job SET status = 'FAILED' WHERE status = 'RUNNING'")?;
-    Ok(r.count())
+    // older stores may predate the job_event table
+    init_schema(store)?;
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut recovered = 0;
+    for status in ["RUNNING", "PENDING"] {
+        let r = store.execute(&format!(
+            "SELECT jid, eid FROM job WHERE status = '{status}' ORDER BY jid"
+        ))?;
+        let stuck: Vec<(i64, i64)> = r
+            .rows()
+            .iter()
+            .map(|row| (row[0].as_i64().unwrap_or(-1), row[1].as_i64().unwrap_or(-1)))
+            .collect();
+        for (jid, eid) in stuck {
+            store.execute(&format!(
+                "UPDATE job SET status = 'FAILED', end_time = {now} WHERE jid = {jid}"
+            ))?;
+            log_job_event(
+                store,
+                jid,
+                eid,
+                0,
+                "FAILED",
+                now,
+                &format!("recovered: stuck {status} at reopen"),
+            )?;
+            recovered += 1;
+        }
+    }
+    Ok(recovered)
+}
+
+/// Typed view of a `job_event` row (scheduler state transitions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobEventRow {
+    pub evid: i64,
+    pub jid: i64,
+    pub eid: i64,
+    pub attempt: i64,
+    pub state: String,
+    pub time: f64,
+    pub detail: String,
+}
+
+/// Append one scheduler transition to the `job_event` journal.
+pub fn log_job_event(
+    store: &mut Store,
+    jid: i64,
+    eid: i64,
+    attempt: i64,
+    state: &str,
+    time: f64,
+    detail: &str,
+) -> Result<i64> {
+    let evid = next_id(store, "job_event", "evid")?;
+    store.execute(&format!(
+        "INSERT INTO job_event (evid, jid, eid, attempt, state, time, detail) \
+         VALUES ({evid}, {jid}, {eid}, {attempt}, {}, {time}, {})",
+        quote(state),
+        quote(detail)
+    ))?;
+    Ok(evid)
+}
+
+/// All transitions of one experiment, in journal order.
+pub fn job_events_of(store: &mut Store, eid: i64) -> Result<Vec<JobEventRow>> {
+    let r = store.execute(&format!(
+        "SELECT evid, jid, eid, attempt, state, time, detail \
+         FROM job_event WHERE eid = {eid} ORDER BY evid"
+    ))?;
+    Ok(r.rows()
+        .iter()
+        .map(|row| JobEventRow {
+            evid: row[0].as_i64().unwrap_or(-1),
+            jid: row[1].as_i64().unwrap_or(-1),
+            eid: row[2].as_i64().unwrap_or(-1),
+            attempt: row[3].as_i64().unwrap_or(0),
+            state: row[4].as_str().unwrap_or("").to_string(),
+            time: row[5].as_f64().unwrap_or(0.0),
+            detail: row[6].as_str().unwrap_or("").to_string(),
+        })
+        .collect())
 }
 
 fn opt_f64(v: &Value) -> Option<f64> {
@@ -334,7 +477,59 @@ mod tests {
         let mut s = Store::in_memory();
         init_schema(&mut s).unwrap();
         init_schema(&mut s).unwrap();
-        assert_eq!(s.table_names().len(), 4);
+        assert_eq!(s.table_names().len(), 5);
+    }
+
+    #[test]
+    fn job_event_journal_roundtrip() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        log_job_event(&mut s, 0, 7, 1, "RUNNING", 1.5, "attempt 1 on cpu:0").unwrap();
+        log_job_event(&mut s, 0, 7, 1, "BACKOFF", 2.5, "attempt 1 failed: boom").unwrap();
+        log_job_event(&mut s, 0, 7, 2, "DONE", 4.0, "score 0.5").unwrap();
+        log_job_event(&mut s, 9, 8, 1, "DONE", 5.0, "other experiment").unwrap();
+        let evs = job_events_of(&mut s, 7).unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].state, "RUNNING");
+        assert_eq!(evs[1].state, "BACKOFF");
+        assert!(evs[1].detail.contains("boom"));
+        assert_eq!(evs[2].attempt, 2);
+        assert!(evs[0].evid < evs[1].evid && evs[1].evid < evs[2].evid);
+    }
+
+    #[test]
+    fn queued_running_cancelled_lifecycle() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        start_job_queued(&mut s, 0, 0, "{}", 1.0).unwrap();
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[0].status, JobStatus::Pending);
+        assert_eq!(jobs[0].rid, -1);
+        set_job_running(&mut s, 0, 3).unwrap();
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[0].status, JobStatus::Running);
+        assert_eq!(jobs[0].rid, 3);
+        cancel_job(&mut s, 0, 2.0).unwrap();
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[0].status, JobStatus::Cancelled);
+        assert!(jobs[0].status.is_terminal());
+        assert_eq!(jobs[0].end_time, Some(2.0));
+    }
+
+    #[test]
+    fn recover_incomplete_covers_pending_and_journals() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        start_job_queued(&mut s, 0, 0, "{}", 0.0).unwrap(); // stuck PENDING
+        start_job(&mut s, 1, 0, 0, "{}", 0.0).unwrap(); // stuck RUNNING
+        finish_job(&mut s, 1, None, false, 1.0).unwrap(); // already terminal
+        start_job(&mut s, 2, 0, 0, "{}", 0.0).unwrap(); // stuck RUNNING
+        assert_eq!(recover_incomplete(&mut s).unwrap(), 2);
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert!(jobs.iter().all(|j| j.status.is_terminal()), "{jobs:?}");
+        let evs = job_events_of(&mut s, 0).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.detail.contains("recovered")));
     }
 
     #[test]

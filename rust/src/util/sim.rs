@@ -152,6 +152,22 @@ impl<T> EventQueue<T> {
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|Reverse(ev)| ev.at)
     }
+
+    /// Pop the next event only if it fires at or before `t`; otherwise
+    /// advance the clock to `t` and return `None`. This is the bounded
+    /// wait used by deadline-driven consumers (the scheduler's timeout
+    /// machinery): virtual time never runs past an unexpired deadline.
+    pub fn next_before(&mut self, t: f64) -> Option<(f64, T)> {
+        match self.peek_time() {
+            Some(at) if at <= t + 1e-12 => self.next(),
+            _ => {
+                if t > self.clock.now() {
+                    self.clock.advance_to(t);
+                }
+                None
+            }
+        }
+    }
 }
 
 /// Sleep helper usable with either clock flavor: real sleep for
@@ -188,6 +204,25 @@ mod tests {
         q.next();
         q.schedule_in(3.0, 2);
         assert_eq!(q.next(), Some((5.0, 2)));
+    }
+
+    #[test]
+    fn next_before_respects_deadline() {
+        let clock = SimClock::new();
+        let mut q: EventQueue<&str> = EventQueue::new(clock.clone());
+        q.schedule_in(5.0, "late");
+        // deadline before the event: clock stops at the deadline
+        assert_eq!(q.next_before(3.0), None);
+        assert_eq!(clock.now(), 3.0);
+        // deadline at/after the event: event pops normally
+        assert_eq!(q.next_before(7.0), Some((5.0, "late")));
+        assert_eq!(clock.now(), 5.0);
+        // empty queue: clock still advances to the deadline
+        assert_eq!(q.next_before(9.0), None);
+        assert_eq!(clock.now(), 9.0);
+        // deadline in the past is a no-op, not a panic
+        assert_eq!(q.next_before(8.0), None);
+        assert_eq!(clock.now(), 9.0);
     }
 
     #[test]

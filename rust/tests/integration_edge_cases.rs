@@ -107,6 +107,72 @@ fn nan_scores_treated_as_failures_in_store() {
 }
 
 #[test]
+fn thread_mode_timeout_fails_job_and_recycles_the_slot() {
+    // wall-clock counterpart of the sim timeout tests: a 1-slot pool, a
+    // job that sleeps far past its deadline. The scheduler cannot kill
+    // the OS thread, so the slot stays pinned (zombie) until the sleep
+    // ends — the second job must still run afterwards and the experiment
+    // must terminate with the hung job marked failed.
+    let cfg = exp_json(
+        r#"{
+            "proposer": "sequence", "script": "builtin:sphere",
+            "n_samples": 2, "n_parallel": 1, "target": "min",
+            "n_resource": 1,
+            "job_timeout": 0.02,
+            "configs": [{"x": 0.9}, {"x": 0.1}],
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let exec = Arc::new(FnExecutor::new("sleepy-first", |c, _| {
+        let x = c.get_num("x").unwrap();
+        if x > 0.5 {
+            // far beyond the 20ms deadline
+            std::thread::sleep(std::time::Duration::from_millis(80));
+        }
+        Ok(x * x)
+    }));
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 2);
+    assert_eq!(s.n_failed, 1, "the over-deadline job must fail");
+    assert_eq!(s.best_score, Some(0.1 * 0.1));
+    let mut store = exp.into_store();
+    let evs = auptimizer::store::schema::job_events_of(&mut store, s.eid).unwrap();
+    assert!(
+        evs.iter().any(|e| e.detail.contains("timeout")),
+        "timeout must be journaled: {evs:?}"
+    );
+}
+
+#[test]
+fn job_retries_knob_in_experiment_json_is_honored() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c2 = calls.clone();
+    let cfg = exp_json(
+        r#"{
+            "proposer": "random", "script": "builtin:sphere",
+            "n_samples": 3, "n_parallel": 1, "target": "min", "random_seed": 2,
+            "job_retries": 2, "retry_backoff": 0.0,
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+        }"#,
+    );
+    let exec = Arc::new(FnExecutor::new("alwaysfail", move |_, _| {
+        c2.fetch_add(1, Ordering::SeqCst);
+        Err(auptimizer::util::error::AupError::Job("injected".into()))
+    }));
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_failed, 3);
+    // 3 jobs × (1 attempt + 2 retries)
+    assert_eq!(calls.load(Ordering::SeqCst), 9);
+}
+
+#[test]
 fn sql_operator_matrix_over_job_table() {
     let mut store = Store::in_memory();
     auptimizer::store::schema::init_schema(&mut store).unwrap();

@@ -142,27 +142,30 @@ fn durable_store_survives_experiment_and_reopen() {
 }
 
 #[test]
-fn real_thread_scalability_shrinks_wall_time() {
-    // the non-simulated counterpart of Fig 3: sleep-jobs on real threads;
-    // 4 workers must be ≥2x faster than 1 worker
+fn scalability_shrinks_wall_time_on_the_virtual_clock() {
+    // Fig 3's mechanism, deterministically: identical 20-virtual-second
+    // jobs, so n_parallel=1 takes exactly 24×20s and n_parallel=4 takes
+    // exactly (24/4)×20s. The old version of this test timed real
+    // sleeping threads and was flaky on loaded single-CPU machines; the
+    // scheduler's virtual clock makes the speedup exact.
+    use auptimizer::experiment::run_batch_sim;
+    use auptimizer::resource::local::CpuManager;
+    use auptimizer::scheduler::{FnSimExecutor, SimExecutor, SimOutcome};
     let run_with = |n_parallel: usize| {
-        let exec = Arc::new(FnExecutor::new("sleep20", |c, _| {
-            std::thread::sleep(std::time::Duration::from_millis(20));
-            Ok(auptimizer::workload::rosenbrock(c))
-        }));
         let cfg =
             ExperimentConfig::from_json_str(&rosen_json("random", 24, n_parallel, "cpu")).unwrap();
-        let mut opts = ExperimentOptions::default();
-        opts.executor = Some(exec);
-        let mut exp = Experiment::new(cfg, opts).unwrap();
-        exp.run().unwrap().wall_time
+        let exp = Experiment::new(cfg, ExperimentOptions::default()).unwrap();
+        let sim: Box<dyn SimExecutor> = Box::new(FnSimExecutor::new(|c, _| {
+            SimOutcome::ok(auptimizer::workload::rosenbrock(c), 20.0)
+        }));
+        let s = run_batch_sim(vec![exp], Box::new(CpuManager::new(n_parallel)), vec![sim])
+            .unwrap();
+        s[0].wall_time
     };
     let t1 = run_with(1);
     let t4 = run_with(4);
-    assert!(
-        t4 < t1 / 2.0,
-        "4 workers should at least halve wall time: {t1:.3}s -> {t4:.3}s"
-    );
+    assert!((t1 - 480.0).abs() < 1e-6, "t1 = {t1}");
+    assert!((t4 - 120.0).abs() < 1e-6, "t4 = {t4}");
 }
 
 #[test]

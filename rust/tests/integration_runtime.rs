@@ -46,6 +46,41 @@ fn cnn_json(proposer: &str, n_samples: usize, extra: &str) -> String {
 }
 
 #[test]
+fn scheduler_drives_trainer_shaped_executors() {
+    // No artifacts needed: a trainer-shaped executor (slow, stateful,
+    // occasionally transiently failing — PJRT warm-up style) behind the
+    // thread scheduler with one retry. Mirrors how the real trainer is
+    // plugged in via ExperimentOptions::executor.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc as StdArc;
+    let warmups = StdArc::new(AtomicUsize::new(0));
+    let w2 = warmups.clone();
+    let exec = StdArc::new(auptimizer::resource::executor::FnExecutor::new(
+        "fake-trainer",
+        move |c, _| {
+            // first-ever call fails, as a cold PJRT client would
+            if w2.fetch_add(1, Ordering::SeqCst) == 0 {
+                return Err(auptimizer::util::error::AupError::Runtime(
+                    "client not warmed up".into(),
+                ));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let lr = c.get_num("learning_rate").unwrap_or(1e-3);
+            Ok((lr * 10.0).min(1.0)) // pseudo error-rate
+        },
+    ));
+    let cfg = ExperimentConfig::from_json_str(&cnn_json("random", 6, "\"job_retries\": 1,"))
+        .unwrap();
+    let mut opts = ExperimentOptions::default();
+    opts.executor = Some(exec);
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 6);
+    assert_eq!(s.n_failed, 0, "the warm-up failure must be retried away");
+    assert!(s.best_score.is_some());
+}
+
+#[test]
 fn random_hpo_over_real_pjrt_training() {
     if !artifacts_exist() {
         eprintln!("skipping: run `make artifacts` first");

@@ -1,0 +1,401 @@
+//! Deterministic simulation harness for the scheduler subsystem.
+//!
+//! Everything here runs on the virtual clock ([`SimScheduler`]): no
+//! sleeps, no wall-clock waits, bit-identical reruns, and safe under
+//! `--test-threads=1`. The [`ChaosExecutor`] drives the retry / timeout /
+//! cancellation state machine through seeded failure scenarios that
+//! wall-clock tests cannot reach, and the property tests assert the two
+//! system invariants: every submitted job ends in EXACTLY ONE terminal
+//! state, and no resource ever leaks from the shared pool.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use auptimizer::experiment::{run_batch_sim, Experiment, ExperimentOptions};
+use auptimizer::prelude::*;
+use auptimizer::resource::executor::FnExecutor;
+use auptimizer::resource::local::CpuManager;
+use auptimizer::scheduler::{
+    ChaosConfig, ChaosExecutor, FnSimExecutor, SimDispatcher, SimExecutor, SimOutcome,
+};
+use auptimizer::store::schema;
+
+fn job(id: u64) -> BasicConfig {
+    let mut c = BasicConfig::new();
+    c.set_num("job_id", id as f64).set_num("x", id as f64);
+    c
+}
+
+fn drain(s: &mut SimScheduler) -> Vec<Completion> {
+    let mut done = Vec::new();
+    loop {
+        let evs = s.poll(true).unwrap();
+        if evs.is_empty() {
+            return done;
+        }
+        for ev in evs {
+            if let SchedEvent::Done(c) = ev {
+                done.push(c);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: two experiments, one 4-slot pool, virtual clock
+// ---------------------------------------------------------------------------
+
+fn sim_experiment(seed: u64, n_samples: usize, n_parallel: usize) -> Experiment {
+    let cfg = ExperimentConfig::from_json_str(&format!(
+        r#"{{
+            "proposer": "random",
+            "script": "builtin:rosenbrock",
+            "n_samples": {n_samples},
+            "n_parallel": {n_parallel},
+            "target": "min",
+            "random_seed": {seed},
+            "parameter_config": [
+                {{"name": "x", "type": "float", "range": [-5, 10]}},
+                {{"name": "y", "type": "float", "range": [-5, 10]}}
+            ]
+        }}"#
+    ))
+    .unwrap();
+    Experiment::new(cfg, ExperimentOptions::default()).unwrap()
+}
+
+/// Scores rosenbrock; every job takes a fixed virtual duration.
+fn rosen_sim(duration: f64) -> Box<dyn SimExecutor> {
+    Box::new(FnSimExecutor::new(move |c, _| {
+        SimOutcome::ok(auptimizer::workload::rosenbrock(c), duration)
+    }))
+}
+
+#[test]
+fn two_experiments_share_a_four_slot_pool_deterministically() {
+    let run_once = || {
+        let exps = vec![sim_experiment(7, 12, 4), sim_experiment(8, 12, 4)];
+        let pool = Box::new(CpuManager::new(4));
+        run_batch_sim(exps, pool, vec![rosen_sim(10.0), rosen_sim(20.0)]).unwrap()
+    };
+    let a = run_once();
+    assert_eq!(a.len(), 2);
+    for s in &a {
+        assert_eq!(s.n_jobs, 12);
+        assert_eq!(s.n_failed, 0);
+        assert_eq!(s.history.len(), 12);
+        assert!(s.best_score.is_some());
+    }
+    // per-experiment histories are correct: every score matches
+    // rosenbrock of the best config's own experiment stream (cumulative
+    // best is monotone nonincreasing)
+    for s in &a {
+        let mut prev = f64::INFINITY;
+        for (_, _, b) in &s.history {
+            assert!(*b <= prev + 1e-12);
+            prev = *b;
+        }
+    }
+    // 24 jobs × {10,20}s over 4 slots: total work is 360 slot-seconds, so
+    // the virtual makespan is bounded below by 360/4 = 90s and above by
+    // the list-scheduling bound 90 + (1 - 1/4)·20 = 105s
+    assert_eq!(a[0].wall_time, a[1].wall_time);
+    assert!(
+        a[0].wall_time >= 90.0 - 1e-6 && a[0].wall_time <= 105.0 + 1e-6,
+        "makespan {}",
+        a[0].wall_time
+    );
+    // bit-identical rerun
+    let b = run_once();
+    assert_eq!(a[0].history, b[0].history);
+    assert_eq!(a[1].history, b[1].history);
+    assert_eq!(a[0].best_score, b[0].best_score);
+    assert_eq!(a[1].best_score, b[1].best_score);
+}
+
+#[test]
+fn shared_pool_scalability_on_the_virtual_clock() {
+    // the deterministic replacement for the old wall-clock "4 workers
+    // should halve wall time" test (which was flaky on loaded machines):
+    // 24 jobs × 20s each; a 1-wide experiment takes 480 virtual seconds,
+    // a 4-wide one exactly 120
+    let time_with = |n_parallel: usize| {
+        let exps = vec![sim_experiment(3, 24, n_parallel)];
+        let pool = Box::new(CpuManager::new(n_parallel));
+        let s = run_batch_sim(exps, pool, vec![rosen_sim(20.0)]).unwrap();
+        s[0].wall_time
+    };
+    assert!((time_with(1) - 480.0).abs() < 1e-6);
+    assert!((time_with(4) - 120.0).abs() < 1e-6);
+}
+
+#[test]
+fn retried_jobs_report_into_experiment_history_once() {
+    // chaos with heal_after=1: first attempt of every job is faulty, the
+    // retry always succeeds — histories must contain each job exactly once
+    let chaos_cfg = ChaosConfig {
+        fail_rate: 1.0,
+        nan_rate: 0.0,
+        hang_rate: 0.0,
+        heal_after: 1,
+        ..ChaosConfig::default()
+    };
+    let inner: Arc<dyn auptimizer::resource::executor::Executor> =
+        Arc::new(FnExecutor::new("rosen", |c, _| {
+            Ok(auptimizer::workload::rosenbrock(c))
+        }));
+    let chaos: Box<dyn SimExecutor> = Box::new(ChaosExecutor::new(inner, chaos_cfg, 99));
+    let cfg_json = r#"{
+        "proposer": "random", "script": "builtin:rosenbrock",
+        "n_samples": 10, "n_parallel": 4, "target": "min", "random_seed": 5,
+        "job_retries": 1, "retry_backoff": 2.0,
+        "parameter_config": [
+            {"name": "x", "type": "float", "range": [-5, 10]},
+            {"name": "y", "type": "float", "range": [-5, 10]}
+        ]
+    }"#;
+    let exp = Experiment::new(
+        ExperimentConfig::from_json_str(cfg_json).unwrap(),
+        ExperimentOptions::default(),
+    )
+    .unwrap();
+    let s = run_batch_sim(vec![exp], Box::new(CpuManager::new(4)), vec![chaos]).unwrap();
+    assert_eq!(s[0].n_jobs, 10);
+    assert_eq!(s[0].n_failed, 0, "heal_after=1 + one retry must rescue all jobs");
+    let mut ids: Vec<u64> = s[0].history.iter().map(|(id, _, _)| *id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 10, "a retried job must report exactly once");
+}
+
+// ---------------------------------------------------------------------------
+// chaos property tests (util/prop.rs harness)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chaos_every_job_reaches_exactly_one_terminal_state() {
+    auptimizer::util::prop::check(
+        "chaos scheduler invariants",
+        auptimizer::util::prop::PropConfig { cases: 24, seed: 0xC0FFEE },
+        |r| {
+            (
+                r.next_u64(),            // chaos seed
+                r.below(12) + 1,         // jobs
+                r.below(4) + 1,          // pool slots
+                r.below(3) as u32,       // retries
+                r.below(10) as f64 / 10.0, // fail rate
+                r.below(5) as f64 / 10.0,  // hang rate
+                r.below(5) as f64 / 10.0,  // nan rate
+                r.below(2) == 0,         // with timeout?
+            )
+        },
+        |&(seed, n_jobs, slots, retries, fail, hang, nan, with_timeout)| {
+            let inner: Arc<dyn auptimizer::resource::executor::Executor> =
+                Arc::new(FnExecutor::new("unit", |_, _| Ok(1.0)));
+            let chaos = ChaosExecutor::new(
+                inner,
+                ChaosConfig {
+                    fail_rate: fail,
+                    hang_rate: hang,
+                    nan_rate: nan,
+                    delay: (1.0, 5.0),
+                    hang_secs: 0.0,
+                    heal_after: 0,
+                },
+                seed,
+            );
+            let mut sched = SimScheduler::new(Box::new(CpuManager::new(slots)), SimDispatcher::new());
+            let sub = sched.add_submission(
+                0,
+                SchedulerConfig {
+                    max_retries: retries,
+                    retry_backoff: 0.5,
+                    job_timeout: if with_timeout { Some(10.0) } else { None },
+                },
+            );
+            sched.dispatcher_mut().add_executor(sub, Box::new(chaos));
+            for id in 0..n_jobs {
+                sched.submit(sub, job(id as u64)).map_err(|e| e.to_string())?;
+            }
+            let done = drain(&mut sched);
+            // exactly one terminal completion per submitted job
+            if done.len() != n_jobs {
+                return Err(format!("{} completions for {n_jobs} jobs", done.len()));
+            }
+            let mut seen = BTreeMap::new();
+            for c in &done {
+                *seen.entry(c.job_id).or_insert(0usize) += 1;
+                if !c.state.is_terminal() {
+                    return Err(format!("job {} completed non-terminal {:?}", c.job_id, c.state));
+                }
+                if c.attempts == 0 || c.attempts > retries + 1 {
+                    return Err(format!(
+                        "job {} used {} attempts (allowed 1..={})",
+                        c.job_id,
+                        c.attempts,
+                        retries + 1
+                    ));
+                }
+                match (c.state, &c.outcome) {
+                    (JobState::Done, Ok(score)) if score.is_finite() => {}
+                    (JobState::Done, _) => {
+                        return Err(format!("job {}: Done without finite score", c.job_id))
+                    }
+                    (_, Ok(_)) => {
+                        return Err(format!("job {}: {:?} carries Ok outcome", c.job_id, c.state))
+                    }
+                    _ => {}
+                }
+            }
+            if seen.len() != n_jobs || seen.values().any(|&n| n != 1) {
+                return Err(format!("duplicate/missing completions: {seen:?}"));
+            }
+            // no resource leaked from the pool
+            if !sched.idle() {
+                return Err("scheduler not idle after drain".into());
+            }
+            if sched.pool_free() != slots {
+                return Err(format!(
+                    "pool leak: {} of {} slots free",
+                    sched.pool_free(),
+                    slots
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chaos_runs_replay_exactly_from_seed() {
+    // same seed -> identical completion sequence (state, attempts, time)
+    let run = |seed: u64| {
+        let inner: Arc<dyn auptimizer::resource::executor::Executor> =
+            Arc::new(FnExecutor::new("unit", |_, _| Ok(2.5)));
+        let chaos = ChaosExecutor::new(
+            inner,
+            ChaosConfig {
+                fail_rate: 0.4,
+                hang_rate: 0.2,
+                nan_rate: 0.2,
+                delay: (1.0, 9.0),
+                hang_secs: 0.0,
+                heal_after: 0,
+            },
+            seed,
+        );
+        let mut sched = SimScheduler::new(Box::new(CpuManager::new(3)), SimDispatcher::new());
+        let sub = sched.add_submission(
+            0,
+            SchedulerConfig { max_retries: 2, retry_backoff: 1.0, job_timeout: Some(20.0) },
+        );
+        sched.dispatcher_mut().add_executor(sub, Box::new(chaos));
+        for id in 0..9 {
+            sched.submit(sub, job(id)).unwrap();
+        }
+        let done = drain(&mut sched);
+        let trace: Vec<(u64, &'static str, u32)> =
+            done.iter().map(|c| (c.job_id, c.state.name(), c.attempts)).collect();
+        (trace, sched.now())
+    };
+    assert_eq!(run(11), run(11));
+    assert_ne!(run(11).0, run(12).0, "different seeds should diverge");
+}
+
+// ---------------------------------------------------------------------------
+// store crash-consistency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_experiment_recovers_to_a_consistent_snapshot() {
+    let dir = auptimizer::util::fsutil::temp_dir("aup-crash").unwrap();
+    let eid;
+    {
+        // simulate an experiment that dies mid-run: jobs 0/1 finished,
+        // job 2 still RUNNING, job 3 still PENDING when the process goes
+        // away (the store is dropped without experiment_finished)
+        let mut store = Store::open(&dir).unwrap();
+        schema::init_schema(&mut store).unwrap();
+        let uid = schema::add_user(&mut store, "crash").unwrap();
+        eid = schema::start_experiment(&mut store, uid, "random", "{}", 0.0).unwrap();
+        schema::start_job_queued(&mut store, 0, eid, "{}", 1.0).unwrap();
+        schema::set_job_running(&mut store, 0, 0).unwrap();
+        schema::finish_job(&mut store, 0, Some(0.5), true, 2.0).unwrap();
+        schema::start_job_queued(&mut store, 1, eid, "{}", 1.0).unwrap();
+        schema::set_job_running(&mut store, 1, 1).unwrap();
+        schema::finish_job(&mut store, 1, None, false, 2.5).unwrap();
+        schema::start_job_queued(&mut store, 2, eid, "{}", 2.0).unwrap();
+        schema::set_job_running(&mut store, 2, 0).unwrap();
+        schema::start_job_queued(&mut store, 3, eid, "{}", 2.1).unwrap();
+        schema::log_job_event(&mut store, 2, eid, 1, "RUNNING", 2.0, "attempt 1").unwrap();
+        // no checkpoint, no finish: everything above lives in the WAL
+    }
+    // a torn final WAL line, as a crash mid-append would leave
+    auptimizer::util::fsutil::append_line(&dir.join("wal.jsonl"), r#"{"op":"update","tab"#)
+        .unwrap();
+
+    // reopen + recover
+    let mut store = Store::open(&dir).unwrap();
+    let recovered = schema::recover_incomplete(&mut store).unwrap();
+    assert_eq!(recovered, 2, "RUNNING job 2 + PENDING job 3");
+    let jobs = schema::jobs_of(&mut store, eid).unwrap();
+    assert_eq!(jobs.len(), 4);
+    for j in &jobs {
+        assert!(
+            j.status.is_terminal(),
+            "job {} stuck in {:?} after recovery",
+            j.jid,
+            j.status
+        );
+    }
+    // finished work survived intact
+    assert_eq!(jobs[0].status, schema::JobStatus::Finished);
+    assert_eq!(jobs[0].score, Some(0.5));
+    assert_eq!(jobs[1].status, schema::JobStatus::Failed);
+    assert_eq!(jobs[2].status, schema::JobStatus::Failed);
+    assert_eq!(jobs[3].status, schema::JobStatus::Failed);
+    // the journal records the recovery, after the pre-crash events
+    let evs = schema::job_events_of(&mut store, eid).unwrap();
+    let recovery_events: Vec<_> =
+        evs.iter().filter(|e| e.detail.contains("recovered")).collect();
+    assert_eq!(recovery_events.len(), 2);
+    // recovery is idempotent
+    assert_eq!(schema::recover_incomplete(&mut store).unwrap(), 0);
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn recovered_store_accepts_a_fresh_experiment() {
+    // after recovery, a new experiment over the same durable store works
+    // and allocates fresh ids
+    let dir = auptimizer::util::fsutil::temp_dir("aup-crash2").unwrap();
+    {
+        let mut store = Store::open(&dir).unwrap();
+        schema::init_schema(&mut store).unwrap();
+        let uid = schema::add_user(&mut store, "crash").unwrap();
+        let eid = schema::start_experiment(&mut store, uid, "random", "{}", 0.0).unwrap();
+        schema::start_job_queued(&mut store, 0, eid, "{}", 1.0).unwrap();
+    }
+    let mut store = Store::open(&dir).unwrap();
+    schema::recover_incomplete(&mut store).unwrap();
+    let cfg = ExperimentConfig::from_json_str(
+        r#"{
+            "proposer": "random", "script": "builtin:sphere",
+            "n_samples": 5, "n_parallel": 2, "target": "min", "random_seed": 1,
+            "parameter_config": [{"name": "x", "type": "float", "range": [-1, 1]}]
+        }"#,
+    )
+    .unwrap();
+    let mut opts = ExperimentOptions::default();
+    opts.store = Some(store);
+    opts.user = "crash".into();
+    let mut exp = Experiment::new(cfg, opts).unwrap();
+    let s = exp.run().unwrap();
+    assert_eq!(s.n_jobs, 5);
+    assert_eq!(s.eid, 1, "second experiment gets the next eid");
+    let mut store = exp.into_store();
+    let jobs = schema::jobs_of(&mut store, s.eid).unwrap();
+    assert_eq!(jobs.len(), 5);
+    assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished));
+    std::fs::remove_dir_all(dir).unwrap();
+}

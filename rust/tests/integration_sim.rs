@@ -82,6 +82,46 @@ fn overhead_accounting_sums() {
 }
 
 #[test]
+fn scheduler_reproduces_straggler_effect_on_virtual_clock() {
+    // the Fig-3 "last job drives experiment time" cause, replayed through
+    // the real scheduler instead of the bespoke fleet simulation: with as
+    // many slots as jobs, the virtual makespan equals the slowest job
+    use auptimizer::resource::local::CpuManager;
+    use auptimizer::scheduler::{
+        FnSimExecutor, SchedEvent, SimDispatcher, SimOutcome, SimScheduler,
+    };
+    let configs = cnn_configs(16, 11);
+    let durations: Vec<f64> = configs.iter().map(mnist_cnn_train_seconds).collect();
+    let slowest = durations.iter().cloned().fold(0.0, f64::max);
+
+    let mut sched = SimScheduler::new(Box::new(CpuManager::new(16)), SimDispatcher::new());
+    let sub = sched.add_submission(0, auptimizer::scheduler::SchedulerConfig::default());
+    sched.dispatcher_mut().add_executor(
+        sub,
+        Box::new(FnSimExecutor::new(|c, _| {
+            SimOutcome::ok(0.0, mnist_cnn_train_seconds(c))
+        })),
+    );
+    for c in &configs {
+        sched.submit(sub, c.clone()).unwrap();
+    }
+    let mut n_done = 0;
+    loop {
+        let evs = sched.poll(true).unwrap();
+        if evs.is_empty() {
+            break;
+        }
+        for ev in evs {
+            if let SchedEvent::Done(_) = ev {
+                n_done += 1;
+            }
+        }
+    }
+    assert_eq!(n_done, 16);
+    assert!((sched.now() - slowest).abs() < 1e-9);
+}
+
+#[test]
 fn fixed_seed_sweep_uses_identical_configs() {
     // the paper fixed the random seed so all sweep points explore the
     // same configurations — verify our configs are sweep-invariant and
