@@ -10,7 +10,10 @@
 //! (DESIGN.md §3): job durations come from the width-dependent training
 //! -time model calibrated to ~5 min at the mean config; the EC2 fleet
 //! model adds spawn latency + per-instance lognormal performance
-//! factors. Output: the two Fig-3 series + efficiency, and a CSV at
+//! factors. `simulate_experiment` runs the REAL scheduler under
+//! `SimDispatcher` over an `AwsManager::for_sim` fleet, so this bench
+//! and the scheduler tests exercise one shared fleet model. Output: the
+//! two Fig-3 series + efficiency, and a CSV at
 //! results/fig3_scalability.csv.
 //!
 //! Run: `cargo bench --bench fig3_scalability`

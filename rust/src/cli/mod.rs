@@ -80,10 +80,17 @@ USAGE:
                 [--retries N] [--timeout S] [--backoff S]
     aup batch   EXP1.json EXP2.json [...] [--pool N] [--db DIR] [--user NAME]
                 [--retries N] [--timeout S] [--backoff S] [--verbose]
-                run several experiments against ONE shared resource pool;
-                per-experiment 'priority' keys order placement under contention
+                run several experiments against ONE shared resource pool AND
+                one shared tracking store: with --db DIR every experiment's
+                rows land in the single store at DIR (served by the in-process
+                StoreServer; WAL writes are group-committed); per-experiment
+                'priority' keys order placement under contention
+    aup status  DB_DIR | --db DIR           per-experiment progress, retries
+                                            and best scores from the store
+    aup top     DB_DIR | --db DIR [--events N]
+                                            running jobs + recent transitions
     aup viz     --db DIR [--eid N] [--csv FILE]
-    aup sql     --db DIR \"SELECT ...\"        query the tracking store directly
+    aup sql     --db DIR \"SELECT ...\"        query the tracking store (read-only)
     aup algorithms                          list available HPO algorithms
     aup help
 
@@ -91,6 +98,14 @@ SCHEDULER KNOBS (run/batch; also experiment.json keys):
     --retries N   retry a failed/timed-out/NaN job up to N times   (job_retries)
     --timeout S   per-attempt deadline in seconds                  (job_timeout)
     --backoff S   base retry backoff, doubled per retry          (retry_backoff)
+
+STORE NOTES:
+    a store directory can be inspected (status/top/viz/sql) while a run is
+    writing it: readers replay the snapshot + WAL, tolerate a torn tail, and
+    retry across a concurrent checkpoint swap (worst case the view is one
+    checkpoint stale). Reopening a store for a NEW run sweeps jobs left
+    RUNNING/PENDING by a crashed process into FAILED (journaled as
+    'recovered' job_events).
 ";
 
 /// Entry point used by main.rs; returns the process exit code.
@@ -128,6 +143,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "init" => cmd_init(&cli),
         "run" => cmd_run(&cli),
         "batch" => cmd_batch(&cli),
+        "status" => cmd_status(&cli),
+        "top" => cmd_top(&cli),
         "viz" => cmd_viz(&cli),
         "sql" => cmd_sql(&cli),
         other => Err(AupError::Config(format!("unknown subcommand '{other}'"))),
@@ -244,7 +261,16 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
     options.scheduler = sched_overrides(cli, &cfg)?;
     let proposer_name = cfg.proposer.clone();
     let mut exp = Experiment::new(cfg, options)?;
-    let summary = exp.run()?;
+    let run_result = exp.run();
+    // always join the store server: its latched error names the root
+    // cause (e.g. disk full) where a failed run only sees "server gone"
+    let store_result = exp.shutdown_store();
+    let summary = match (run_result, store_result) {
+        (Ok(s), Ok(_)) => s,
+        (Ok(_), Err(store_err)) => return Err(store_err),
+        (Err(_), Err(store_err)) => return Err(store_err),
+        (Err(run_err), Ok(_)) => return Err(run_err),
+    };
     println!(
         "experiment {} ({proposer_name}): {} jobs, {} failed, best = {:?} in {:.2}s",
         summary.eid, summary.n_jobs, summary.n_failed, summary.best_score, summary.wall_time
@@ -261,13 +287,15 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
 }
 
 /// `aup batch exp1.json exp2.json [...]`: several experiments sharing
-/// ONE resource pool through the scheduler subsystem. Each experiment
-/// keeps its own proposer + tracking store; `--db DIR` lands experiment
-/// i in `DIR/exp<i>` so WALs never interleave.
+/// ONE resource pool AND — since the StoreServer refactor — ONE
+/// tracking store. `--db DIR` opens (or creates) a single durable store
+/// at DIR; every experiment's rows land in it through one in-process
+/// `StoreServer`, whose mailbox drains group-commit all trackers' WAL
+/// writes. Without `--db` the shared store is in-memory.
 pub fn cmd_batch(cli: &Cli) -> Result<()> {
     if cli.positional.is_empty() {
         return Err(AupError::Config(
-            "usage: aup batch EXP1.json EXP2.json [...] [--pool N]".into(),
+            "usage: aup batch EXP1.json EXP2.json [...] [--pool N] [--db DIR]".into(),
         ));
     }
     if cli.flag("verbose").is_some() {
@@ -281,22 +309,28 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             .ok_or_else(|| AupError::Config("--pool must be a positive integer".into()))?,
         None => 4,
     };
-    let mut exps = Vec::new();
-    let mut names = Vec::new();
-    for (i, path) in cli.positional.iter().enumerate() {
-        let cfg = ExperimentConfig::from_file(Path::new(path))?;
-        let mut options = ExperimentOptions::default();
-        if let Some(db) = cli.flag("db") {
-            let dir = Path::new(db).join(format!("exp{i}"));
-            let mut store = Store::open(&dir)?;
+    // ONE store for the whole batch — the paper's single bookkeeping db
+    let store = match cli.flag("db") {
+        Some(db) => {
+            let mut store = Store::open(Path::new(db))?;
             let recovered = crate::store::schema::recover_incomplete(&mut store)?;
             if recovered > 0 {
-                eprintln!(
-                    "exp{i}: recovered {recovered} interrupted job(s) from a previous run"
-                );
+                eprintln!("recovered {recovered} interrupted job(s) from a previous run");
             }
-            options.store = Some(store);
+            store
         }
+        None => Store::in_memory(),
+    };
+    let (server, client) =
+        crate::store::StoreServer::spawn(store, crate::store::ServerConfig::default())?;
+    let mut exps = Vec::new();
+    let mut names = Vec::new();
+    for path in &cli.positional {
+        let cfg = ExperimentConfig::from_file(Path::new(path))?;
+        let mut options = ExperimentOptions {
+            store_client: Some(client.clone()),
+            ..ExperimentOptions::default()
+        };
         if let Some(user) = cli.flag("user") {
             options.user = user.to_string();
         }
@@ -306,16 +340,104 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
     }
     let pool = Box::new(crate::resource::local::CpuManager::new(pool_n));
     println!(
-        "batch: {} experiment(s) over a shared {pool_n}-slot pool",
+        "batch: {} experiment(s) over a shared {pool_n}-slot pool, one shared store",
         exps.len()
     );
-    let summaries = crate::experiment::run_batch(exps, pool)?;
+    let summaries = match crate::experiment::run_batch(exps, pool) {
+        Ok(s) => s,
+        Err(run_err) => {
+            // a dead server is the likely cause; its latched error names
+            // the root problem, so prefer it over "server gone"
+            drop(client);
+            return Err(match server.shutdown() {
+                Err(store_err) => store_err,
+                Ok(_) => run_err,
+            });
+        }
+    };
     for (name, s) in names.iter().zip(&summaries) {
         println!(
             "  {name}: eid={} {} jobs, {} failed, best = {:?} in {:.2}s",
             s.eid, s.n_jobs, s.n_failed, s.best_score, s.wall_time
         );
     }
+    // live status straight from the server before it shuts down
+    let statuses = client.status()?;
+    print!("{}", crate::store::status::render_status(&statuses));
+    drop(client);
+    server.shutdown()?;
+    if let Some(db) = cli.flag("db") {
+        println!("tracking store: {db} (inspect with 'aup status {db}')");
+    }
+    Ok(())
+}
+
+/// Open a store directory named either positionally (`aup status DIR`)
+/// or via `--db DIR`. Read-side commands must not conjure a store out
+/// of a typo, so the directory has to exist already.
+///
+/// A reader can land exactly between a live server checkpoint's two
+/// atomic swaps (fresh snapshot already renamed, WAL not yet truncated)
+/// and replay duplicate records; the window is two renames wide, so a
+/// couple of retries make the read reliable. The opposite interleaving
+/// yields a consistent view that is merely one checkpoint stale.
+fn open_db_arg(cli: &Cli, usage: &str) -> Result<Store> {
+    let db = cli
+        .flag("db")
+        .or_else(|| cli.positional.first().map(String::as_str))
+        .ok_or_else(|| AupError::Config(usage.to_string()))?;
+    open_existing_store(db)
+}
+
+/// The retrying open shared by every read-side command (status, top,
+/// viz, sql). Read-only: never repairs a torn tail — it may be a live
+/// writer's append in flight, and truncating would destroy that
+/// writer's committed records.
+fn open_existing_store(db: &str) -> Result<Store> {
+    let path = Path::new(db);
+    if !path.is_dir() {
+        return Err(AupError::Config(format!("no store directory at '{db}'")));
+    }
+    let mut last_err = None;
+    for attempt in 0..3 {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        match Store::open_read_only(path) {
+            Ok(store) => return Ok(store),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap())
+}
+
+/// `aup status DIR`: per-experiment progress, retry counts and best
+/// scores — the paper's §III-C tracking story as a user-facing surface.
+/// Safe against a live store (readers tolerate a torn WAL tail).
+pub fn cmd_status(cli: &Cli) -> Result<()> {
+    let mut store = open_db_arg(cli, "usage: aup status DB_DIR (or --db DIR)")?;
+    let statuses = crate::store::status::experiment_statuses(&mut store)?;
+    if statuses.is_empty() {
+        println!("no experiments in this store");
+        return Ok(());
+    }
+    print!("{}", crate::store::status::render_status(&statuses));
+    Ok(())
+}
+
+/// `aup top DIR`: currently RUNNING jobs plus the most recent scheduler
+/// transitions from the `job_event` journal.
+pub fn cmd_top(cli: &Cli) -> Result<()> {
+    let mut store = open_db_arg(cli, "usage: aup top DB_DIR (or --db DIR) [--events N]")?;
+    let n_events: usize = match cli.flag("events") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| AupError::Config("--events must be a non-negative integer".into()))?,
+        None => 10,
+    };
+    let running = crate::store::status::running_jobs(&mut store)?;
+    let events = crate::store::status::recent_events(&mut store, n_events)?;
+    print!("{}", crate::store::status::render_top(&running, &events));
     Ok(())
 }
 
@@ -324,7 +446,7 @@ pub fn cmd_viz(cli: &Cli) -> Result<()> {
     let db = cli
         .flag("db")
         .ok_or_else(|| AupError::Config("usage: aup viz --db DIR [--eid N]".into()))?;
-    let mut store = Store::open(Path::new(db))?;
+    let mut store = open_existing_store(db)?;
     let eid: i64 = cli.flag("eid").unwrap_or("0").parse().map_err(|_| {
         AupError::Config("--eid must be an integer".into())
     })?;
@@ -368,7 +490,16 @@ pub fn cmd_sql(cli: &Cli) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| AupError::Config("usage: aup sql --db DIR \"SELECT ...\"".into()))?;
-    let mut store = Store::open(Path::new(db))?;
+    // inspection only: the store is opened read-only (it may belong to a
+    // live run, and a reader never repairs a torn WAL tail), so a
+    // mutation here would append onto a WAL this process doesn't own
+    let stmt = crate::store::sql::parse(query)?;
+    if !matches!(stmt, crate::store::sql::Stmt::Select { .. }) {
+        return Err(AupError::Config(
+            "aup sql is read-only: only SELECT is allowed (stores are written by runs)".into(),
+        ));
+    }
+    let mut store = open_existing_store(db)?;
     let result = store.execute(query)?;
     match &result {
         crate::store::QueryResult::Rows { cols, rows } => {
@@ -465,7 +596,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_runs_two_experiments_over_one_pool() {
+    fn batch_lands_both_experiments_in_one_shared_store() {
         let dir = temp_dir("aup-cli-batch").unwrap();
         let mut paths = Vec::new();
         for (i, proposer) in ["random", "hyperopt"].iter().enumerate() {
@@ -490,15 +621,49 @@ mod tests {
         ]))
         .unwrap();
         cmd_batch(&cli).unwrap();
-        // each experiment landed in its own store directory
-        for i in 0..2 {
-            let mut store = Store::open(&db.join(format!("exp{i}"))).unwrap();
-            let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
-            assert_eq!(r.scalar(), Some(&crate::store::Value::Int(6)), "exp{i}");
-            let evs = crate::store::schema::job_events_of(&mut store, 0).unwrap();
-            assert!(evs.len() >= 18, "exp{i}: transition journal too small");
+        // ONE store at DIR holds both experiments' rows
+        let mut store = Store::open(&db).unwrap();
+        let r = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(2)));
+        let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(12)));
+        let r = store.execute("SELECT COUNT(*) FROM user").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(1)), "user row reused");
+        for eid in 0..2 {
+            let jobs = crate::store::schema::jobs_of(&mut store, eid).unwrap();
+            assert_eq!(jobs.len(), 6, "eid {eid}");
+            assert!(jobs.iter().all(|j| j.status.is_terminal()), "eid {eid}");
+            let evs = crate::store::schema::job_events_of(&mut store, eid).unwrap();
+            assert!(evs.len() >= 18, "eid {eid}: transition journal too small");
         }
+        // jids are globally unique across the experiments
+        let r = store.execute("SELECT jid FROM job ORDER BY jid").unwrap();
+        let jids: Vec<i64> = r.rows().iter().filter_map(|row| row[0].as_i64()).collect();
+        let mut dedup = jids.clone();
+        dedup.dedup();
+        assert_eq!(jids.len(), dedup.len(), "duplicate jids: {jids:?}");
+        // aup status / aup top read the shared store back
+        let cli = Cli::parse(&s(&["status", db.to_str().unwrap()])).unwrap();
+        cmd_status(&cli).unwrap();
+        let cli = Cli::parse(&s(&["top", db.to_str().unwrap(), "--events", "5"])).unwrap();
+        cmd_top(&cli).unwrap();
+        let statuses = {
+            let mut store = Store::open(&db).unwrap();
+            crate::store::status::experiment_statuses(&mut store).unwrap()
+        };
+        assert_eq!(statuses.len(), 2);
+        assert!(statuses.iter().all(|st| st.done() && st.n_jobs == 6));
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn status_and_top_require_an_existing_db() {
+        assert!(cmd_status(&Cli::parse(&s(&["status"])).unwrap()).is_err());
+        assert!(cmd_top(&Cli::parse(&s(&["top"])).unwrap()).is_err());
+        // a typo'd path must error, not silently create a store
+        let bogus = "/nonexistent/aup-status-typo";
+        assert!(cmd_status(&Cli::parse(&s(&["status", bogus])).unwrap()).is_err());
+        assert!(!Path::new(bogus).exists());
     }
 
     #[test]
@@ -562,6 +727,24 @@ mod tests {
         let bad = Cli::parse(&s(&["sql", "--db", db.to_str().unwrap(), "DROP TABLE user"]))
             .unwrap();
         assert!(cmd_sql(&bad).is_err());
+        // mutations are rejected BEFORE touching the store: the sql
+        // surface is read-only (the store may belong to a live run)
+        let write = Cli::parse(&s(&[
+            "sql",
+            "--db",
+            db.to_str().unwrap(),
+            "DELETE FROM user WHERE uid = 0",
+        ]))
+        .unwrap();
+        assert!(cmd_sql(&write).is_err());
+        let check = Cli::parse(&s(&[
+            "sql",
+            "--db",
+            db.to_str().unwrap(),
+            "SELECT COUNT(*) FROM user",
+        ]))
+        .unwrap();
+        cmd_sql(&check).unwrap(); // user row still there, store still opens
         std::fs::remove_dir_all(dir).unwrap();
     }
 

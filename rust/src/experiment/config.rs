@@ -29,6 +29,13 @@ use crate::search::SearchSpace;
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
+/// The `target` spellings meaning maximization. The single source of
+/// truth — also used by the status views, which re-derive the direction
+/// leniently from the `exp_config` stored in the tracking database.
+pub fn target_means_maximize(target: &str) -> bool {
+    matches!(target, "max" | "maximize")
+}
+
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub proposer: String,
@@ -72,7 +79,7 @@ impl ExperimentConfig {
             .unwrap_or(1)
             .max(1) as usize;
         let maximize = match obj.get("target").and_then(Json::as_str) {
-            Some("max") | Some("maximize") => true,
+            Some(t) if target_means_maximize(t) => true,
             Some("min") | Some("minimize") | None => false,
             Some(other) => {
                 return Err(AupError::Config(format!(

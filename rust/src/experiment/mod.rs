@@ -32,7 +32,7 @@ use crate::scheduler::{
     Completion, Dispatcher, JobState, SchedEvent, Scheduler, SchedulerConfig, SimDispatcher,
     SimExecutor, SubId, ThreadDispatcher, Transition,
 };
-use crate::store::Store;
+use crate::store::{ServerConfig, Store, StoreClient, StoreServer, StoreServerHandle};
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 use crate::{log_debug, log_info, log_warn};
@@ -40,8 +40,14 @@ use crate::{log_debug, log_info, log_warn};
 /// Knobs not present in experiment.json (they belong to the environment,
 /// i.e. the paper's env.ini / `aup setup` side).
 pub struct ExperimentOptions {
-    /// tracking store; `None` -> fresh in-memory store
+    /// tracking store; `None` -> fresh in-memory store. The experiment
+    /// wraps it in a private [`StoreServer`] (ignored when
+    /// `store_client` is set).
     pub store: Option<Store>,
+    /// client onto a SHARED store server — `aup batch --db` hands every
+    /// experiment a clone of one client so all bookkeeping lands in ONE
+    /// durable store, the paper's single tracking database
+    pub store_client: Option<StoreClient>,
     /// executor override (examples plug the PJRT trainer in here);
     /// `None` -> built from the config's `script` field
     pub executor: Option<Arc<dyn Executor>>,
@@ -61,6 +67,7 @@ impl Default for ExperimentOptions {
     fn default() -> Self {
         ExperimentOptions {
             store: None,
+            store_client: None,
             executor: None,
             resource_manager: None,
             user: std::env::var("USER").unwrap_or_else(|_| "aup".to_string()),
@@ -95,6 +102,10 @@ pub struct Experiment {
     rm: Option<Box<dyn ResourceManager>>,
     executor: Arc<dyn Executor>,
     tracker: Tracker,
+    /// private store server when this experiment is not sharing one (the
+    /// handle's drop shuts it down gracefully after the tracker's last
+    /// send); `None` in shared-client mode
+    server: Option<StoreServerHandle>,
     sched_cfg: SchedulerConfig,
     priority: i32,
     // -- per-run state ----------------------------------------------------
@@ -122,11 +133,15 @@ impl Experiment {
                 Arc::from(executor_from_script(&cfg.script, &workdir)?)
             }
         };
-        let store = match options.store {
-            Some(s) => s,
-            None => Store::in_memory(),
+        let (client, server) = match options.store_client {
+            Some(c) => (c, None),
+            None => {
+                let store = options.store.unwrap_or_else(Store::in_memory);
+                let (handle, client) = StoreServer::spawn(store, ServerConfig::default())?;
+                (client, Some(handle))
+            }
         };
-        let tracker = Tracker::new(store, &options.user, &cfg)?;
+        let tracker = Tracker::new(client, &options.user, &cfg)?;
         let sched_cfg = options
             .scheduler
             .unwrap_or_else(|| SchedulerConfig::from_json(&cfg.raw));
@@ -142,6 +157,7 @@ impl Experiment {
             rm: Some(rm),
             executor,
             tracker,
+            server,
             sched_cfg,
             priority,
             n_jobs: 0,
@@ -179,9 +195,29 @@ impl Experiment {
         self.finish(start.elapsed().as_secs_f64())
     }
 
-    /// Access the tracking store after the run (e.g. for `aup viz`).
+    /// Gracefully stop this experiment's PRIVATE store server, surfacing
+    /// any store mutation/IO error that was latched during the run (a
+    /// dropped handle would only log it). Returns the store for
+    /// private-server experiments, `None` when this experiment shares a
+    /// server it does not own.
+    pub fn shutdown_store(self) -> Result<Option<Store>> {
+        let Experiment { tracker, server, .. } = self;
+        // the tracker's client must drop before shutdown joins the server
+        drop(tracker);
+        match server {
+            Some(handle) => Ok(Some(handle.shutdown()?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Shut down this experiment's PRIVATE store server and take the
+    /// store back (e.g. for `aup viz`). Panics on store errors and for
+    /// experiments that were handed a shared `store_client` — CLI paths
+    /// use [`Experiment::shutdown_store`] to exit non-zero instead.
     pub fn into_store(self) -> Store {
-        self.tracker.into_store()
+        self.shutdown_store()
+            .expect("store server failed")
+            .expect("into_store: experiment shares a store server it does not own")
     }
 
     pub fn proposer_name(&self) -> &str {
@@ -319,7 +355,13 @@ fn drive<D: Dispatcher>(
 ) -> Result<()> {
     loop {
         let mut all_done = true;
+        // heartbeat the store server(s) with the Dispatcher clock: the
+        // group-commit checkpoint timer advances on scheduler time, so
+        // under SimDispatcher checkpoints land at deterministic virtual
+        // instants
+        let now = sched.now();
         for (sub, exp) in runs.iter_mut() {
+            exp.tracker.tick(now)?;
             exp.pump(sched, *sub)?;
             if !(exp.proposer.finished() && sched.outstanding(*sub) == 0) {
                 all_done = false;

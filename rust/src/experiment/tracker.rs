@@ -3,13 +3,19 @@
 //! Auptimizer automatically checks in its training process in
 //! experiments, users are alleviated from the worry of losing
 //! reproducibility").
+//!
+//! Since the StoreServer refactor the tracker no longer owns a `Store`:
+//! it holds a [`StoreClient`] and fire-and-forgets its mutations into
+//! the server's mailbox, where one drain group-commits them as a single
+//! WAL append. Several trackers (one per experiment in `aup batch`)
+//! share one server — the paper's single bookkeeping database.
 
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::experiment::config::ExperimentConfig;
 use crate::search::BasicConfig;
 use crate::store::schema;
-use crate::store::Store;
+use crate::store::StoreClient;
 use crate::util::error::Result;
 
 fn now() -> f64 {
@@ -20,44 +26,22 @@ fn now() -> f64 {
 }
 
 pub struct Tracker {
-    store: Store,
+    client: StoreClient,
     eid: i64,
     maximize: bool,
-    /// next free store jid; proposer job_ids restart at 0 per experiment,
-    /// so the tracker allocates globally unique primary keys and keeps
-    /// the mapping (this is what lets several experiments — `aup batch`,
-    /// or sequential `aup run --db` calls — share one durable store)
-    next_jid: i64,
+    /// proposer job_ids restart at 0 per experiment, so store jids come
+    /// from the client's global allocator (shared across every
+    /// experiment on the server) and the mapping is kept here
     jids: std::collections::BTreeMap<u64, i64>,
 }
 
 impl Tracker {
-    pub fn new(mut store: Store, user: &str, cfg: &ExperimentConfig) -> Result<Tracker> {
-        schema::init_schema(&mut store)?;
-        // reuse the user row if present
-        let uid = {
-            let r = store.execute(&format!(
-                "SELECT uid FROM user WHERE name = {}",
-                crate::store::sql::quote(user)
-            ))?;
-            match r.scalar().and_then(crate::store::Value::as_i64) {
-                Some(uid) => uid,
-                None => schema::add_user(&mut store, user)?,
-            }
-        };
-        let eid = schema::start_experiment(
-            &mut store,
-            uid,
-            &cfg.proposer,
-            &cfg.raw.to_string(),
-            now(),
-        )?;
-        let next_jid = schema::next_job_id(&mut store)?;
+    pub fn new(client: StoreClient, user: &str, cfg: &ExperimentConfig) -> Result<Tracker> {
+        let eid = client.start_experiment(user, &cfg.proposer, &cfg.raw.to_string(), now())?;
         Ok(Tracker {
-            store,
+            client,
             eid,
             maximize: cfg.maximize,
-            next_jid,
             jids: std::collections::BTreeMap::new(),
         })
     }
@@ -66,9 +50,12 @@ impl Tracker {
         self.eid
     }
 
+    pub fn client(&self) -> &StoreClient {
+        &self.client
+    }
+
     fn alloc_jid(&mut self, job_id: u64) -> i64 {
-        let jid = self.next_jid;
-        self.next_jid += 1;
+        let jid = self.client.alloc_jid();
         self.jids.insert(job_id, jid);
         jid
     }
@@ -81,32 +68,21 @@ impl Tracker {
 
     pub fn job_started(&mut self, job_id: u64, rid: i64, config: &BasicConfig) -> Result<()> {
         let jid = self.alloc_jid(job_id);
-        schema::start_job(
-            &mut self.store,
-            jid,
-            self.eid,
-            rid,
-            &config.to_json_string(),
-            now(),
-        )
+        self.client
+            .start_job_running(jid, self.eid, rid, &config.to_json_string(), now())
     }
 
     /// Scheduler-era entry point: the job exists (and is tracked) from
     /// the moment it is queued, before any resource is assigned.
     pub fn job_submitted(&mut self, job_id: u64, config: &BasicConfig) -> Result<()> {
         let jid = self.alloc_jid(job_id);
-        schema::start_job_queued(
-            &mut self.store,
-            jid,
-            self.eid,
-            &config.to_json_string(),
-            now(),
-        )
+        self.client
+            .start_job_queued(jid, self.eid, &config.to_json_string(), now())
     }
 
     /// The scheduler placed the job on resource `rid`.
     pub fn job_running(&mut self, job_id: u64, rid: i64) -> Result<()> {
-        schema::set_job_running(&mut self.store, self.jid_of(job_id), rid)
+        self.client.set_job_running(self.jid_of(job_id), rid)
     }
 
     /// Journal one scheduler transition into `job_event` (retry
@@ -115,38 +91,37 @@ impl Tracker {
     /// scheduler-clock timestamp (virtual seconds in sim runs) is kept in
     /// the detail as `t=…` for deterministic offsets.
     pub fn log_transition(&mut self, t: &crate::scheduler::Transition) -> Result<()> {
-        schema::log_job_event(
-            &mut self.store,
+        self.client.log_job_event(
             self.jid_of(t.job_id),
             self.eid,
             t.attempt as i64,
             t.state.name(),
             now(),
             &format!("[t={:.3}] {}", t.at, t.detail),
-        )?;
-        Ok(())
+        )
     }
 
     pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
-        schema::cancel_job(&mut self.store, self.jid_of(job_id), now())
+        self.client.cancel_job(self.jid_of(job_id), now())
     }
 
     pub fn job_finished(&mut self, job_id: u64, score: Option<f64>) -> Result<()> {
-        schema::finish_job(&mut self.store, self.jid_of(job_id), score, score.is_some(), now())
+        self.client
+            .finish_job(self.jid_of(job_id), score, score.is_some(), now())
     }
 
     pub fn experiment_finished(&mut self, best: Option<f64>) -> Result<()> {
-        schema::finish_experiment(&mut self.store, self.eid, best, now())?;
-        self.store.checkpoint()?;
-        Ok(())
+        self.client.finish_experiment(self.eid, best, now())
+    }
+
+    /// Forward a Dispatcher-clock heartbeat so the server's group-commit
+    /// checkpoint timer advances (deterministically, in sim runs).
+    pub fn tick(&self, scheduler_now: f64) -> Result<()> {
+        self.client.tick(scheduler_now)
     }
 
     pub fn best_job(&mut self) -> Result<Option<schema::JobRow>> {
-        schema::best_job(&mut self.store, self.eid, self.maximize)
-    }
-
-    pub fn into_store(self) -> Store {
-        self.store
+        self.client.best_job(self.eid, self.maximize)
     }
 }
 
@@ -154,6 +129,7 @@ impl Tracker {
 mod tests {
     use super::*;
     use crate::experiment::config::ExperimentConfig;
+    use crate::store::{ServerConfig, Store, StoreServer, StoreServerHandle};
 
     fn cfg() -> ExperimentConfig {
         ExperimentConfig::from_json_str(
@@ -166,16 +142,22 @@ mod tests {
         .unwrap()
     }
 
+    fn server() -> (StoreServerHandle, crate::store::StoreClient) {
+        StoreServer::spawn(Store::in_memory(), ServerConfig::default()).unwrap()
+    }
+
     #[test]
     fn tracker_lifecycle() {
-        let mut t = Tracker::new(Store::in_memory(), "tester", &cfg()).unwrap();
+        let (handle, client) = server();
+        let mut t = Tracker::new(client, "tester", &cfg()).unwrap();
         let mut c = BasicConfig::new();
         c.set_num("x", 0.5).set_num("job_id", 0.0);
         t.job_started(0, 0, &c).unwrap();
         t.job_finished(0, Some(0.25)).unwrap();
         t.experiment_finished(Some(0.25)).unwrap();
         assert_eq!(t.best_job().unwrap().unwrap().score, Some(0.25));
-        let mut store = t.into_store();
+        drop(t);
+        let mut store = handle.shutdown().unwrap();
         let row = schema::get_experiment(&mut store, 0).unwrap().unwrap();
         assert!(row.exp_config.contains("random"));
     }
@@ -183,7 +165,8 @@ mod tests {
     #[test]
     fn scheduler_lifecycle_with_transitions() {
         use crate::scheduler::{JobState, Transition};
-        let mut t = Tracker::new(Store::in_memory(), "tester", &cfg()).unwrap();
+        let (handle, client) = server();
+        let mut t = Tracker::new(client, "tester", &cfg()).unwrap();
         let mut c = BasicConfig::new();
         c.set_num("x", 0.1).set_num("job_id", 0.0);
         t.job_submitted(0, &c).unwrap();
@@ -203,7 +186,8 @@ mod tests {
         t.job_cancelled(1).unwrap();
         t.experiment_finished(Some(0.5)).unwrap();
         let eid = t.eid();
-        let mut store = t.into_store();
+        drop(t);
+        let mut store = handle.shutdown().unwrap();
         let jobs = schema::jobs_of(&mut store, eid).unwrap();
         assert_eq!(jobs.len(), 2);
         assert_eq!(jobs[0].status, schema::JobStatus::Finished);
@@ -219,16 +203,35 @@ mod tests {
     }
 
     #[test]
-    fn user_row_reused_across_experiments() {
-        let mut store = Store::in_memory();
-        crate::store::schema::init_schema(&mut store).unwrap();
-        let t1 = Tracker::new(store, "alice", &cfg()).unwrap();
-        let store = t1.into_store();
-        let t2 = Tracker::new(store, "alice", &cfg()).unwrap();
-        let mut store = t2.into_store();
+    fn trackers_share_one_server_without_collisions() {
+        // the `aup batch --db` shape: two experiments, ONE store server;
+        // user row reused, eids sequential, jids globally unique
+        let (handle, client) = server();
+        let mut t1 = Tracker::new(client.clone(), "alice", &cfg()).unwrap();
+        let mut t2 = Tracker::new(client.clone(), "alice", &cfg()).unwrap();
+        assert_eq!((t1.eid(), t2.eid()), (0, 1));
+        let mut c = BasicConfig::new();
+        c.set_num("x", 0.1).set_num("job_id", 0.0);
+        // both experiments submit their local job 0 — distinct store jids
+        t1.job_submitted(0, &c).unwrap();
+        t2.job_submitted(0, &c).unwrap();
+        t1.job_finished(0, Some(1.0)).unwrap();
+        t2.job_finished(0, Some(2.0)).unwrap();
+        assert_ne!(t1.jid_of(0), t2.jid_of(0));
+        drop(t1);
+        drop(t2);
+        let mut store = handle.shutdown().unwrap();
         let r = store.execute("SELECT COUNT(*) FROM user").unwrap();
         assert_eq!(r.scalar(), Some(&crate::store::Value::Int(1)));
         let r = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
         assert_eq!(r.scalar(), Some(&crate::store::Value::Int(2)));
+        let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(2)));
+        // one finished job per experiment
+        for eid in [0, 1] {
+            let jobs = schema::jobs_of(&mut store, eid).unwrap();
+            assert_eq!(jobs.len(), 1, "eid {eid}");
+            assert_eq!(jobs[0].status, schema::JobStatus::Finished);
+        }
     }
 }

@@ -9,8 +9,9 @@
 //! algorithms, the [`resource`] manager that maps jobs onto compute, the
 //! shared [`scheduler`] (priority queue, retries, timeouts, cancellation
 //! over one resource pool — `aup batch`), the [`store`] tracking database
-//! (Fig. 2 schema) and the PJRT [`runtime`] that executes the
-//! AOT-compiled JAX/Pallas CNN the paper tunes in §IV.
+//! (Fig. 2 schema, served to all concurrent experiments by the
+//! group-committing `StoreServer` actor) and the PJRT [`runtime`] that
+//! executes the AOT-compiled JAX/Pallas CNN the paper tunes in §IV.
 //!
 //! ## Quickstart
 //!
@@ -59,7 +60,7 @@ pub mod prelude {
         ThreadScheduler,
     };
     pub use crate::search::{BasicConfig, ParamSpec, ParamType, SearchSpace};
-    pub use crate::store::Store;
+    pub use crate::store::{ServerConfig, Store, StoreClient, StoreServer, StoreServerHandle};
     pub use crate::util::error::{AupError, Result};
     pub use crate::util::json::Json;
     pub use crate::util::rng::Rng;

@@ -8,20 +8,24 @@
 //! non-linearity, so that fluctuation is a first-class model parameter
 //! here.
 //!
-//! Two consumers:
-//! * the thread-based experiment loop uses [`AwsManager`] like any other
-//!   RM (spawn latency becomes a real sleep, scaled down);
-//! * the Fig-3 bench uses [`simulate_experiment`], a deterministic
-//!   virtual-clock discrete-event simulation of Algorithm 1 over the
-//!   same fleet model — this is what regenerates the paper's figure in
-//!   milliseconds of real time.
+//! Since the StoreServer PR there is ONE fleet model: the manager
+//! reports cold-start latency on the [`ResourceHandle`]
+//! (`spawn_delay`), and the scheduler's dispatchers charge it — the
+//! `SimDispatcher` adds it to the attempt's virtual duration, so Fig-3
+//! benches and scheduler tests run the same code path.
+//! [`simulate_experiment`] is now a thin harness over
+//! `Scheduler<SimDispatcher>` instead of a bespoke event loop; in
+//! thread mode the manager still models the cold start as a scaled-down
+//! real sleep.
 
 use std::collections::BTreeMap;
 
 use crate::resource::{ResourceHandle, ResourceManager};
+use crate::scheduler::{
+    FnSimExecutor, SchedEvent, SchedulerConfig, SimDispatcher, SimOutcome, SimScheduler,
+};
 use crate::search::BasicConfig;
 use crate::util::rng::Rng;
-use crate::util::sim::{Clock, EventQueue, SimClock};
 
 /// One simulated EC2 instance.
 #[derive(Debug, Clone)]
@@ -50,8 +54,9 @@ pub struct AwsManager {
     instances: Vec<Instance>,
     free: Vec<usize>,
     spawn_latency: f64,
-    /// real-sleep scale for thread mode (sim uses virtual time instead);
-    /// 1 virtual second = `real_scale` real seconds
+    /// real-sleep scale for thread mode; 1 virtual second =
+    /// `real_scale` real seconds. Set 0 (see [`AwsManager::for_sim`])
+    /// when the scheduler's virtual clock charges the latency instead.
     pub real_scale: f64,
 }
 
@@ -72,15 +77,31 @@ impl AwsManager {
             real_scale: 1e-3, // thread mode: 30 s spawn -> 30 ms sleep
         }
     }
+
+    /// Virtual-clock flavor: no real sleeps; the cold start reaches the
+    /// dispatcher through `ResourceHandle::spawn_delay` and elapses on
+    /// the SimDispatcher clock.
+    pub fn for_sim(n: usize, spawn_latency: f64, perf_jitter: f64, seed: u64) -> AwsManager {
+        let mut m = AwsManager::new(n, spawn_latency, perf_jitter, seed);
+        m.real_scale = 0.0;
+        m
+    }
 }
 
 impl ResourceManager for AwsManager {
     fn get_available(&mut self) -> Option<ResourceHandle> {
         let idx = self.free.pop()?;
         let inst = &mut self.instances[idx];
+        let mut spawn_delay = 0.0;
         if !inst.spawned {
-            // boto3 run_instances + boot: cold-start latency on first use
-            crate::util::sim::real_sleep(self.spawn_latency * self.real_scale);
+            // boto3 run_instances + boot: cold-start latency on first use.
+            // Thread mode sleeps it (scaled down); sim mode charges it to
+            // the first attempt through the handle.
+            if self.real_scale > 0.0 {
+                crate::util::sim::real_sleep(self.spawn_latency * self.real_scale);
+            } else {
+                spawn_delay = self.spawn_latency;
+            }
             inst.spawned = true;
         }
         let mut env = BTreeMap::new();
@@ -90,6 +111,7 @@ impl ResourceManager for AwsManager {
             label: format!("aws:i-{:08x}", inst.id),
             env,
             perf_factor: inst.perf_factor,
+            spawn_delay,
         })
     }
 
@@ -137,10 +159,14 @@ impl SimReport {
     }
 }
 
-/// Deterministic discrete-event simulation of Algorithm 1 on a simulated
-/// EC2 fleet. `configs` are the jobs (fixed seed => identical across
-/// n_parallel sweeps, the paper's methodology); `duration` maps a config
-/// to its nominal training time; instance perf factors multiply it.
+/// Deterministic virtual-clock simulation of Algorithm 1 on a simulated
+/// EC2 fleet — now the SAME state machine the production scheduler runs
+/// (`Scheduler<SimDispatcher>` over [`AwsManager::for_sim`]), not a
+/// bespoke event loop: spawn latency and per-instance perf jitter flow
+/// through the Dispatcher clock. `configs` are the jobs (fixed seed =>
+/// identical across n_parallel sweeps, the paper's methodology);
+/// `duration` maps a config to its nominal training time; instance perf
+/// factors multiply it.
 ///
 /// `overhead_per_dispatch` models the coordinator's get_param + store
 /// round-trip (measured by the overhead bench; ~microseconds — the
@@ -155,70 +181,58 @@ pub fn simulate_experiment(
     overhead_per_dispatch: f64,
 ) -> SimReport {
     assert!(n_parallel > 0 && !configs.is_empty());
-    let perf: Vec<f64> = (0..n_parallel)
-        .map(|i| perf_factor_for(seed, i, perf_jitter))
-        .collect();
+    let fleet = AwsManager::for_sim(n_parallel, spawn_latency, perf_jitter, seed);
+    let mut sched = SimScheduler::new(Box::new(fleet), SimDispatcher::new());
+    let sub = sched.add_submission(0, SchedulerConfig::default());
 
-    #[derive(Debug)]
-    enum Ev {
-        InstanceReady(usize),
-        JobDone { instance: usize },
+    // nominal durations keyed by submission index — the index also
+    // becomes the scheduler job_id, so ANY config slice works (the old
+    // event loop never looked at job_ids; duplicates or missing ids in
+    // the caller's configs must not matter here either)
+    let mut jobs: Vec<BasicConfig> = Vec::with_capacity(configs.len());
+    let mut durs: BTreeMap<u64, f64> = BTreeMap::new();
+    for (i, c) in configs.iter().enumerate() {
+        let d = duration(c);
+        let mut c = c.clone();
+        c.set_num("job_id", i as f64);
+        durs.insert(i as u64, d);
+        jobs.push(c);
+    }
+    sched.dispatcher_mut().add_executor(
+        sub,
+        Box::new(FnSimExecutor::new(move |c: &BasicConfig, env| {
+            let d = c.job_id().and_then(|id| durs.get(&id).copied()).unwrap_or(0.0);
+            // the dispatcher multiplies the returned duration by the
+            // instance perf factor; coordinator overhead is machine-
+            // independent, so pre-divide to keep the old accounting of
+            // elapsed = duration·perf + overhead
+            let perf = if env.perf_factor > 0.0 { env.perf_factor } else { 1.0 };
+            SimOutcome::ok(0.0, d + overhead_per_dispatch / perf)
+        })),
+    );
+    for c in jobs {
+        sched.submit(sub, c).expect("index job ids are unique");
     }
 
-    let clock = SimClock::new();
-    let mut q: EventQueue<Ev> = EventQueue::new(clock.clone());
-    // all instances spawn concurrently at t=0 (boto3 batch launch)
-    for i in 0..n_parallel {
-        q.schedule_in(spawn_latency, Ev::InstanceReady(i));
-    }
-
-    let mut next_job = 0usize;
+    let n_jobs = configs.len();
     let mut total_job_time = 0.0;
-    let mut overhead_time = 0.0;
-    let mut jobs_done = 0usize;
-
-    let dispatch = |q: &mut EventQueue<Ev>,
-                        instance: usize,
-                        next_job: &mut usize,
-                        total_job_time: &mut f64,
-                        overhead_time: &mut f64| {
-        if *next_job >= configs.len() {
-            return;
-        }
-        let c = &configs[*next_job];
-        *next_job += 1;
-        let d = duration(c) * perf[instance] + overhead_per_dispatch;
-        *total_job_time += d;
-        *overhead_time += overhead_per_dispatch;
-        q.schedule_in(d, Ev::JobDone { instance });
-    };
-
-    while let Some((_, ev)) = q.next() {
-        match ev {
-            Ev::InstanceReady(i) => {
-                dispatch(&mut q, i, &mut next_job, &mut total_job_time, &mut overhead_time);
-            }
-            Ev::JobDone { instance } => {
-                jobs_done += 1;
-                dispatch(
-                    &mut q,
-                    instance,
-                    &mut next_job,
-                    &mut total_job_time,
-                    &mut overhead_time,
-                );
-            }
-        }
-        if jobs_done == configs.len() {
+    loop {
+        let events = sched.poll(true).expect("sim scheduler cannot stall");
+        if events.is_empty() {
             break;
+        }
+        for ev in events {
+            if let SchedEvent::Done(done) = ev {
+                total_job_time += done.elapsed;
+            }
         }
     }
     SimReport {
         n_parallel,
-        n_jobs: configs.len(),
-        experiment_time: clock.now(),
+        n_jobs,
+        experiment_time: sched.now(),
         total_job_time,
-        overhead_time,
+        overhead_time: overhead_per_dispatch * n_jobs as f64,
     }
 }
 
@@ -264,6 +278,47 @@ mod tests {
     }
 
     #[test]
+    fn spawn_latency_delays_cold_instances_on_the_virtual_clock() {
+        // 1 instance, 2 jobs of 100s, 45s cold start: only the first
+        // attempt pays the spawn — makespan 45 + 200
+        let configs = uniform_configs(2);
+        let r = simulate_experiment(&configs, &|_| 100.0, 1, 45.0, 0.0, 1, 0.0);
+        assert!((r.experiment_time - 245.0).abs() < 1e-9, "{}", r.experiment_time);
+        assert_eq!(r.total_job_time, 200.0, "cold start is not job time");
+    }
+
+    #[test]
+    fn arbitrary_config_slices_simulate_fine() {
+        // duplicate and missing job_ids in the input must not matter:
+        // the simulation keys jobs by submission index, exactly like the
+        // old bespoke event loop which never read job_ids
+        let mut a = BasicConfig::new();
+        a.set_num("job_id", 1.0);
+        let b = BasicConfig::new(); // no job_id at all
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 1.0); // duplicate of a
+        let r = simulate_experiment(&[a, b, c], &|_| 50.0, 2, 0.0, 0.0, 1, 0.0);
+        assert_eq!(r.n_jobs, 3);
+        assert_eq!(r.total_job_time, 150.0);
+        assert!((r.experiment_time - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_is_not_perf_scaled() {
+        // one instance with perf != 1 (jitter forces it): elapsed must be
+        // duration·perf + overhead, with the overhead term unscaled
+        let configs = uniform_configs(1);
+        let with = simulate_experiment(&configs, &|_| 100.0, 1, 0.0, 0.3, 5, 2.0);
+        let without = simulate_experiment(&configs, &|_| 100.0, 1, 0.0, 0.3, 5, 0.0);
+        assert!(
+            (with.total_job_time - without.total_job_time - 2.0).abs() < 1e-9,
+            "overhead delta {} != 2.0",
+            with.total_job_time - without.total_job_time
+        );
+        assert!((with.overhead_time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn perf_jitter_reduces_efficiency() {
         let configs = uniform_configs(128);
         let clean = simulate_experiment(&configs, &|_| 300.0, 16, 0.0, 0.0, 7, 0.0);
@@ -302,6 +357,18 @@ mod tests {
         let h = m.get_available().unwrap();
         assert!(h.env.contains_key("AUP_EC2_INSTANCE"));
         assert!(h.perf_factor > 0.4 && h.perf_factor < 2.1);
+        assert_eq!(h.spawn_delay, 0.0, "thread mode sleeps instead");
+        m.release(&h);
+    }
+
+    #[test]
+    fn sim_manager_reports_spawn_delay_once_per_instance() {
+        let mut m = AwsManager::for_sim(1, 30.0, 0.0, 1);
+        let h = m.get_available().unwrap();
+        assert_eq!(h.spawn_delay, 30.0, "cold");
+        m.release(&h);
+        let h = m.get_available().unwrap();
+        assert_eq!(h.spawn_delay, 0.0, "warm");
         m.release(&h);
     }
 }

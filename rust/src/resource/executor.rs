@@ -162,13 +162,40 @@ impl Executor for ScriptExecutor {
         config.save(&cfg_path)?;
 
         let mut cmd = Command::new(&self.script);
-        cmd.arg(&cfg_path).current_dir(&self.workdir);
+        cmd.arg(&cfg_path)
+            .current_dir(&self.workdir)
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped());
         for (k, v) in &env.env {
             cmd.env(k, v);
         }
-        let out = cmd.output().map_err(|e| {
+        // The child leads its own process group so a timeout/cancel can
+        // SIGKILL the whole tree (ROADMAP: a timed-out job must free its
+        // slot instead of pinning it as a zombie).
+        #[cfg(unix)]
+        {
+            use std::os::unix::process::CommandExt;
+            cmd.process_group(0);
+        }
+        let child = cmd.spawn().map_err(|e| {
             AupError::Job(format!("failed to spawn {}: {e}", self.script.display()))
         })?;
+        // group leader => pgid == child pid; register it so the
+        // scheduler's abort path can kill the group
+        env.cancel.register_pgid(child.id());
+        let out = child.wait_with_output().map_err(|e| {
+            AupError::Job(format!("failed to collect {}: {e}", self.script.display()))
+        });
+        // the child is reaped: its pid may be recycled, so a late abort
+        // must not SIGKILL whatever process group inherits that id
+        env.cancel.clear_pgid();
+        let out = out?;
+        if env.cancel.is_killed() {
+            return Err(AupError::Job(
+                "killed by scheduler (timeout or cancel)".to_string(),
+            ));
+        }
         let stdout = String::from_utf8_lossy(&out.stdout);
         if !out.status.success() {
             let stderr = String::from_utf8_lossy(&out.stderr);
@@ -294,6 +321,36 @@ mod tests {
         let c = BasicConfig::new();
         let err = ex.execute(&c, &env()).unwrap_err();
         assert!(err.to_string().contains("oops"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn killed_script_reports_kill_and_dies_fast() {
+        // a 30s job SIGKILLed via its process group must return within
+        // moments and report the kill, not pin the slot for 30s
+        let dir = temp_dir("aup-exec-kill").unwrap();
+        let script = write_script(
+            &dir,
+            "sleepy.sh",
+            "#!/bin/sh\nsleep 30\necho \"result: 1\"\n",
+        );
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        let e = env();
+        let cancel = e.cancel.clone();
+        let start = std::time::Instant::now();
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            cancel.kill();
+        });
+        let err = ex.execute(&c, &e).unwrap_err();
+        killer.join().unwrap();
+        assert!(err.to_string().contains("killed"), "{err}");
+        assert!(
+            start.elapsed().as_secs_f64() < 10.0,
+            "SIGKILL must cut the 30s sleep short"
+        );
         std::fs::remove_dir_all(dir).unwrap();
     }
 

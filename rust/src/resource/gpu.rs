@@ -33,6 +33,7 @@ impl ResourceManager for GpuManager {
                 label: format!("gpu:{id}"),
                 env,
                 perf_factor: 1.0,
+                spawn_delay: 0.0,
             }
         })
     }

@@ -4,25 +4,107 @@
 //! back to the experiment loop, which invokes `proposer.update()`.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::resource::executor::Executor;
 use crate::resource::ResourceHandle;
 use crate::search::BasicConfig;
 
-/// Environment a job runs with (resource env vars + perf factor for
-/// simulated resources).
+/// Cooperative kill switch for one job attempt. The dispatcher hands a
+/// fresh token to every attempt; on timeout/cancel it calls
+/// [`CancelToken::kill`], which SIGKILLs the attempt's registered
+/// subprocess *group* so a hung script frees its resource slot instead
+/// of pinning it as a zombie. Executors that run no subprocess simply
+/// never register — for them the scheduler's zombie fallback still
+/// applies.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<CancelInner>);
+
+#[derive(Debug, Default)]
+struct CancelInner {
+    killed: AtomicBool,
+    /// process-group id registered by the executor (the child is spawned
+    /// as its own group leader, so pgid == child pid)
+    pgid: Mutex<Option<u32>>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Executor side: announce the subprocess group running this
+    /// attempt. If the kill already happened (timeout raced the spawn),
+    /// the group is signalled immediately.
+    pub fn register_pgid(&self, pgid: u32) {
+        *self.0.pgid.lock().unwrap() = Some(pgid);
+        if self.is_killed() {
+            kill_process_group(pgid);
+        }
+    }
+
+    /// Executor side: the subprocess has been reaped — its pid (== pgid)
+    /// can be recycled by the OS for an unrelated process, so a late
+    /// kill() must no longer target it.
+    pub fn clear_pgid(&self) {
+        *self.0.pgid.lock().unwrap() = None;
+    }
+
+    /// Scheduler side: mark the attempt dead and SIGKILL its registered
+    /// process group (if any).
+    pub fn kill(&self) {
+        self.0.killed.store(true, Ordering::SeqCst);
+        if let Some(pgid) = *self.0.pgid.lock().unwrap() {
+            kill_process_group(pgid);
+        }
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.0.killed.load(Ordering::SeqCst)
+    }
+}
+
+/// SIGKILL every process in `pgid`'s group. Uses the external `kill`
+/// utility (no libc binding is vendored); failures are ignored — the
+/// zombie path remains the fallback for unkillable processes.
+#[cfg(unix)]
+fn kill_process_group(pgid: u32) {
+    let _ = std::process::Command::new("kill")
+        .args(["-s", "KILL", "--", &format!("-{pgid}")])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status();
+}
+
+#[cfg(not(unix))]
+fn kill_process_group(_pgid: u32) {}
+
+/// Environment a job runs with (resource env vars + perf factor and
+/// cold-start latency for simulated resources + the attempt's kill
+/// switch).
 #[derive(Debug, Clone, Default)]
 pub struct JobEnv {
     pub env: BTreeMap<String, String>,
     pub perf_factor: f64,
+    /// cold-start seconds charged to this attempt (first job on a fresh
+    /// AWS instance); the SimDispatcher adds it to the virtual duration
+    pub spawn_delay: f64,
+    /// per-attempt kill switch (see [`CancelToken`]); dispatchers insert
+    /// a fresh token per attempt
+    pub cancel: CancelToken,
 }
 
 impl JobEnv {
     pub fn from_handle(h: &ResourceHandle) -> JobEnv {
-        JobEnv { env: h.env.clone(), perf_factor: h.perf_factor }
+        JobEnv {
+            env: h.env.clone(),
+            perf_factor: h.perf_factor,
+            spawn_delay: h.spawn_delay,
+            cancel: CancelToken::new(),
+        }
     }
 }
 
@@ -79,7 +161,24 @@ mod tests {
             label: format!("cpu:{rid}"),
             env: BTreeMap::new(),
             perf_factor: 1.0,
+            spawn_delay: 0.0,
         }
+    }
+
+    #[test]
+    fn cancel_token_kill_before_and_after_register() {
+        let t = CancelToken::new();
+        assert!(!t.is_killed());
+        t.kill();
+        assert!(t.is_killed());
+        // registering after the kill signals immediately (no panic, no
+        // real process with this pgid in the test — kill fails silently)
+        t.register_pgid(u32::MAX - 1);
+        let t2 = t.clone();
+        assert!(t2.is_killed(), "clones share the switch");
+        // after the reap the pgid is cleared: a late kill targets nothing
+        t.clear_pgid();
+        t.kill();
     }
 
     #[test]

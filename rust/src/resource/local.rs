@@ -23,6 +23,7 @@ impl ResourceManager for CpuManager {
             label: format!("cpu:{rid}"),
             env: BTreeMap::new(),
             perf_factor: 1.0,
+            spawn_delay: 0.0,
         })
     }
 

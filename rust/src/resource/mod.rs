@@ -36,6 +36,12 @@ pub struct ResourceHandle {
     pub env: BTreeMap<String, String>,
     /// performance multiplier applied by simulated resources (1.0 = nominal)
     pub perf_factor: f64,
+    /// cold-start seconds charged to the first attempt placed on this
+    /// resource (AWS spawn latency). Flows through the Dispatcher clock:
+    /// the SimDispatcher adds it to the attempt's virtual duration, so
+    /// fleet spawn behaviour is part of the one shared fleet model
+    /// instead of a bespoke sleep. 0.0 for warm resources.
+    pub spawn_delay: f64,
 }
 
 /// The paper's RM interface.

@@ -32,6 +32,7 @@ impl ResourceManager for NodeManager {
                 label: format!("node:{}", self.names[i]),
                 env,
                 perf_factor: 1.0,
+                spawn_delay: 0.0,
             }
         })
     }

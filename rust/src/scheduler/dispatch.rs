@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::resource::executor::Executor;
-use crate::resource::job::JobEnv;
+use crate::resource::job::{CancelToken, JobEnv};
 use crate::search::BasicConfig;
 use crate::util::sim::{Clock, EventQueue, SimClock, WallClock};
 
@@ -79,12 +79,22 @@ pub struct ThreadDispatcher {
     executors: BTreeMap<SubId, Arc<dyn Executor>>,
     tx: Sender<AttemptDone>,
     rx: Receiver<AttemptDone>,
+    /// per-attempt kill switches: abort() SIGKILLs the attempt's
+    /// subprocess group so its (still undeliverable) completion arrives
+    /// promptly instead of pinning the slot for the job's natural length
+    cancels: BTreeMap<AttemptId, CancelToken>,
 }
 
 impl ThreadDispatcher {
     pub fn new() -> ThreadDispatcher {
         let (tx, rx) = channel();
-        ThreadDispatcher { clock: WallClock::new(), executors: BTreeMap::new(), tx, rx }
+        ThreadDispatcher {
+            clock: WallClock::new(),
+            executors: BTreeMap::new(),
+            tx,
+            rx,
+            cancels: BTreeMap::new(),
+        }
     }
 
     /// Register the executor that runs this submission's jobs.
@@ -112,7 +122,12 @@ impl Dispatcher for ThreadDispatcher {
             .clone();
         let tx = self.tx.clone();
         let config = config.clone();
-        let env = env.clone();
+        let mut env = env.clone();
+        // a fresh kill switch per attempt; abort() reaches the attempt's
+        // subprocess group through it
+        let token = CancelToken::new();
+        env.cancel = token.clone();
+        self.cancels.insert(attempt, token);
         std::thread::spawn(move || {
             let start = std::time::Instant::now();
             let outcome = executor.execute(&config, &env).map_err(|e| e.to_string());
@@ -126,7 +141,7 @@ impl Dispatcher for ThreadDispatcher {
     }
 
     fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
-        match wait_until {
+        let got = match wait_until {
             None => match self.rx.recv() {
                 Ok(ev) => DispatchPoll::Event(ev),
                 Err(_) => DispatchPoll::Idle,
@@ -144,12 +159,23 @@ impl Dispatcher for ThreadDispatcher {
                     }
                 }
             }
+        };
+        if let DispatchPoll::Event(ev) = &got {
+            self.cancels.remove(&ev.attempt);
         }
+        got
     }
 
-    fn abort(&mut self, _attempt: AttemptId) -> bool {
-        // OS threads running blocking user code cannot be interrupted;
-        // the late completion is reported and discarded as stale.
+    fn abort(&mut self, attempt: AttemptId) -> bool {
+        // The OS thread itself cannot be interrupted, so the attempt is
+        // NOT reaped (its completion still arrives and is discarded as
+        // stale) — but SIGKILLing the attempt's subprocess group makes
+        // that completion arrive in moments rather than whenever the
+        // runaway job would have ended. Executors without a subprocess
+        // keep the original zombie behaviour.
+        if let Some(token) = self.cancels.remove(&attempt) {
+            token.kill();
+        }
         false
     }
 }
@@ -255,12 +281,17 @@ impl Dispatcher for SimDispatcher {
             .get_mut(&sub)
             .unwrap_or_else(|| panic!("no sim executor registered for submission {sub}"));
         let out = executor.run(config, env);
-        // simulated resources run at perf_factor × nominal speed
+        // simulated resources run at perf_factor × nominal speed; a cold
+        // resource additionally charges its spawn latency to this (first)
+        // attempt — AWS fleet behaviour routed through the virtual clock
+        // instead of a bespoke sleep (elapsed excludes it: cold start is
+        // infrastructure time, not job time)
         let perf = if env.perf_factor > 0.0 { env.perf_factor } else { 1.0 };
+        let spawn = env.spawn_delay.max(0.0);
         if out.duration.is_finite() {
             let duration = (out.duration * perf).max(0.0);
             self.queue.schedule_in(
-                duration,
+                spawn + duration,
                 AttemptDone { attempt, outcome: out.result, elapsed: duration },
             );
         } else {
@@ -310,7 +341,7 @@ mod tests {
     use crate::resource::executor::FnExecutor;
 
     fn env() -> JobEnv {
-        JobEnv { env: BTreeMap::new(), perf_factor: 1.0 }
+        JobEnv { perf_factor: 1.0, ..JobEnv::default() }
     }
 
     #[test]
@@ -379,6 +410,57 @@ mod tests {
             DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 2),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn sim_spawn_delay_charges_cold_start_to_the_clock_not_the_job() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(0, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))));
+        let mut e = env();
+        e.spawn_delay = 45.0;
+        d.dispatch(1, 0, &BasicConfig::new(), &e);
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => {
+                assert_eq!(ev.elapsed, 10.0, "cold start is infra time, not job time");
+                assert_eq!(d.now(), 55.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn thread_abort_kills_registered_process_group() {
+        // dispatch an attempt that sleeps 30s in a subprocess; abort()
+        // must make its completion arrive almost immediately
+        use crate::resource::executor::ScriptExecutor;
+        use crate::util::fsutil::temp_dir;
+        use std::os::unix::fs::PermissionsExt;
+        let dir = temp_dir("aup-dispatch-kill").unwrap();
+        let script = dir.join("sleepy.sh");
+        std::fs::write(&script, "#!/bin/sh\nsleep 30\necho \"result: 1\"\n").unwrap();
+        let mut perm = std::fs::metadata(&script).unwrap().permissions();
+        perm.set_mode(0o755);
+        std::fs::set_permissions(&script, perm).unwrap();
+        let mut d = ThreadDispatcher::new();
+        d.add_executor(0, Arc::new(ScriptExecutor::new(&script, &dir)));
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        let start = std::time::Instant::now();
+        d.dispatch(1, 0, &c, &env());
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        assert!(!d.abort(1), "thread attempts are never reaped in place");
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => {
+                assert_eq!(ev.attempt, 1);
+                assert!(ev.outcome.unwrap_err().contains("killed"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            start.elapsed().as_secs_f64() < 10.0,
+            "the killed attempt must complete promptly"
+        );
+        std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]

@@ -534,14 +534,19 @@ impl<D: Dispatcher> Scheduler<D> {
         let rid = handle.rid;
         let label = handle.label.clone();
         let env = JobEnv::from_handle(&handle);
+        // a cold resource's spawn latency elapses BEFORE execution
+        // begins (thread mode sleeps it inside get_available), so the
+        // attempt's deadline and elapsed accounting start after it —
+        // otherwise a sim-mode cold start would eat the job_timeout
+        let spawn = env.spawn_delay.max(0.0);
         let (config, attempts) = {
             let j = self.jobs.get_mut(&key).unwrap();
             j.attempts += 1;
             j.state = JobState::Running;
             j.attempt_id = Some(attempt_id);
             j.handle = Some(handle);
-            j.started_at = now;
-            j.deadline = timeout.map(|t| now + t);
+            j.started_at = now + spawn;
+            j.deadline = timeout.map(|t| now + spawn + t);
             (j.config.clone(), j.attempts)
         };
         self.attempts.insert(attempt_id, key);
@@ -831,6 +836,27 @@ mod tests {
         assert!(done[0].outcome.clone().unwrap_err().contains("timeout"));
         assert!((s.now() - 30.0).abs() < 1e-6);
         assert_eq!(s.pool_free(), 1, "timed-out sim attempt must free its slot");
+    }
+
+    #[test]
+    fn spawn_delay_does_not_eat_the_job_timeout() {
+        // a cold AWS instance's 45s spawn latency must not count against
+        // a 30s job_timeout: the attempt's clock starts after the cold
+        // start, exactly as thread mode (which sleeps the spawn inside
+        // get_available before the deadline is armed)
+        use crate::resource::aws::AwsManager;
+        let rm = Box::new(AwsManager::for_sim(1, 45.0, 0.0, 1));
+        let mut s = SimScheduler::new(rm, SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(0, 1.0, Some(30.0)));
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done[0].state, JobState::Done, "{:?}", done[0].outcome);
+        assert!((s.now() - 55.0).abs() < 1e-9, "t = {}", s.now());
+        assert!((done[0].elapsed - 10.0).abs() < 1e-9, "spawn is not job time");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! StoreClient — the cheap cloneable handle onto a [`StoreServer`].
+//!
+//! Trackers, the scheduler journal and the CLI hold one of these instead
+//! of `Arc<Mutex<Store>>`. Mutations are fire-and-forget sends into the
+//! server's mailbox (they are group-committed by the next drain);
+//! queries block on a per-request reply channel. Sends are ordered, so a
+//! query observes every mutation this client issued before it.
+//!
+//! [`StoreServer`]: crate::store::server::StoreServer
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::store::schema::{JobEventRow, JobRow};
+use crate::store::server::StoreCmd;
+use crate::store::status::ExperimentStatus;
+use crate::store::QueryResult;
+use crate::util::error::{AupError, Result};
+
+/// Handle onto a live store server. Clones share the mailbox and the
+/// global jid allocator.
+#[derive(Clone)]
+pub struct StoreClient {
+    pub(crate) tx: Sender<StoreCmd>,
+    /// next free `job.jid`, seeded from the store at server start;
+    /// allocation is a lock-free fetch-add so the submit hot path never
+    /// round-trips to the server
+    pub(crate) next_jid: Arc<AtomicI64>,
+}
+
+fn gone() -> AupError {
+    AupError::Store("store server is gone (crashed or shut down)".into())
+}
+
+impl StoreClient {
+    /// Raw protocol send (tests drive manual servers with this).
+    pub fn send_cmd(&self, cmd: StoreCmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| gone())
+    }
+
+    fn request<T>(&self, make: impl FnOnce(Sender<Result<T>>) -> StoreCmd) -> Result<T> {
+        let (tx, rx) = channel();
+        self.send_cmd(make(tx))?;
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(gone()),
+        }
+    }
+
+    /// Allocate a globally-unique store jid (shared across every clone,
+    /// i.e. across all experiments on this server).
+    pub fn alloc_jid(&self) -> i64 {
+        self.next_jid.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Open an experiment (the server resolves-or-creates the user row);
+    /// returns the eid.
+    pub fn start_experiment(
+        &self,
+        user: &str,
+        proposer: &str,
+        exp_config: &str,
+        now: f64,
+    ) -> Result<i64> {
+        self.request(|reply| StoreCmd::StartExperiment {
+            user: user.to_string(),
+            proposer: proposer.to_string(),
+            exp_config: exp_config.to_string(),
+            now,
+            reply,
+        })
+    }
+
+    pub fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::FinishExperiment { eid, best, now })
+    }
+
+    pub fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::StartJobQueued { jid, eid, config: config.to_string(), now })
+    }
+
+    pub fn start_job_running(
+        &self,
+        jid: i64,
+        eid: i64,
+        rid: i64,
+        config: &str,
+        now: f64,
+    ) -> Result<()> {
+        self.send_cmd(StoreCmd::StartJobRunning {
+            jid,
+            eid,
+            rid,
+            config: config.to_string(),
+            now,
+        })
+    }
+
+    pub fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
+        self.send_cmd(StoreCmd::SetJobRunning { jid, rid })
+    }
+
+    pub fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::CancelJob { jid, now })
+    }
+
+    pub fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::FinishJob { jid, score, ok, now })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_job_event(
+        &self,
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: &str,
+        time: f64,
+        detail: &str,
+    ) -> Result<()> {
+        self.send_cmd(StoreCmd::LogJobEvent {
+            jid,
+            eid,
+            attempt,
+            state: state.to_string(),
+            time,
+            detail: detail.to_string(),
+        })
+    }
+
+    pub fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
+        self.request(|reply| StoreCmd::BestJob { eid, maximize, reply })
+    }
+
+    pub fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
+        self.request(|reply| StoreCmd::JobsOf { eid, reply })
+    }
+
+    pub fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
+        self.request(|reply| StoreCmd::JobEventsOf { eid, reply })
+    }
+
+    /// Run a mini-SQL statement against the live store.
+    pub fn sql(&self, query: &str) -> Result<QueryResult> {
+        self.request(|reply| StoreCmd::Sql { query: query.to_string(), reply })
+    }
+
+    /// Live bookkeeping summary (what `aup status` shows).
+    pub fn status(&self) -> Result<Vec<ExperimentStatus>> {
+        self.request(|reply| StoreCmd::Status { reply })
+    }
+
+    /// Force a checkpoint and wait for it.
+    pub fn checkpoint(&self) -> Result<()> {
+        self.request(|reply| StoreCmd::Checkpoint { reply })
+    }
+
+    /// Clock heartbeat (Dispatcher-clock seconds). Drives the server's
+    /// interval checkpoints; cheap enough to call every scheduler poll.
+    pub fn tick(&self, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::Tick { now })
+    }
+}

@@ -19,6 +19,9 @@ pub mod table;
 pub mod sql;
 pub mod wal;
 pub mod schema;
+pub mod server;
+pub mod client;
+pub mod status;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -26,28 +29,56 @@ use std::path::{Path, PathBuf};
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
+pub use client::StoreClient;
 pub use schema::{ExperimentRow, JobRow, JobStatus, ResourceRow, ResourceStatus};
+pub use server::{ServerConfig, StoreServer, StoreServerHandle};
 pub use table::{Row, Table, TableSchema};
 pub use value::{ColType, Value};
+pub use wal::WalStats;
 
 /// Embedded relational store: named tables + optional durability.
 pub struct Store {
     tables: BTreeMap<String, Table>,
     wal: Option<wal::Wal>,
+    /// group-commit mode: journal records are staged in `pending` and hit
+    /// the WAL as one append at [`Store::commit_batch`]
+    batching: bool,
+    pending: Vec<wal::Record>,
 }
 
 impl Store {
     /// Fresh in-memory store.
     pub fn in_memory() -> Store {
-        Store { tables: BTreeMap::new(), wal: None }
+        Store { tables: BTreeMap::new(), wal: None, batching: false, pending: Vec::new() }
     }
 
-    /// Open (or create) a durable store rooted at `dir`. Replays snapshot
-    /// + WAL on open.
+    /// Open (or create) a durable store rooted at `dir` as its EXCLUSIVE
+    /// writer. Replays snapshot + WAL on open; a torn final WAL record
+    /// (crash mid-append) is dropped AND truncated from the file so
+    /// subsequent appends start on a clean line.
     pub fn open(dir: &Path) -> Result<Store> {
+        Store::open_inner(dir, true)
+    }
+
+    /// Reader flavor for inspection commands (`aup status`/`top`/`viz`/
+    /// `sql`): requires the directory to exist, and tolerates a torn WAL
+    /// tail WITHOUT repairing the file — the store may belong to a live
+    /// writer whose append is simply in flight (truncating would destroy
+    /// its committed records), or sit on a directory this user cannot
+    /// write. Opening performs no filesystem writes; executing mutations
+    /// on the returned store is the caller's responsibility to avoid.
+    pub fn open_read_only(dir: &Path) -> Result<Store> {
+        Store::open_inner(dir, false)
+    }
+
+    fn open_inner(dir: &Path, repair: bool) -> Result<Store> {
         let mut store = Store::in_memory();
-        let wal = wal::Wal::open(dir)?;
-        for record in wal.replay()? {
+        let wal = if repair {
+            wal::Wal::open(dir)?
+        } else {
+            wal::Wal::open_existing(dir)?
+        };
+        for record in wal.replay(repair)? {
             store.apply(&record, false)?;
         }
         store.wal = Some(wal);
@@ -182,14 +213,71 @@ impl Store {
     }
 
     fn journal(&mut self, record: &wal::Record) -> Result<()> {
+        if self.wal.is_none() {
+            return Ok(());
+        }
+        if self.batching {
+            self.pending.push(record.clone());
+            Ok(())
+        } else {
+            self.wal.as_mut().unwrap().append(record)
+        }
+    }
+
+    /// Enter group-commit mode: subsequent mutations apply to memory
+    /// immediately (queries see them) but their journal records are
+    /// staged until [`Store::commit_batch`] writes them as ONE WAL
+    /// append. The durability window is the open batch — a crash loses
+    /// at most the uncommitted tail, never consistency (replay drops a
+    /// torn final record). Idempotent; no-op for in-memory stores.
+    pub fn begin_batch(&mut self) {
+        self.batching = true;
+    }
+
+    /// Flush the staged batch as a single WAL append. Returns the number
+    /// of records committed, and leaves group-commit mode.
+    pub fn commit_batch(&mut self) -> Result<usize> {
+        self.batching = false;
+        let records = std::mem::take(&mut self.pending);
         if let Some(w) = &mut self.wal {
-            w.append(record)?;
+            w.append_batch(&records)?;
+        }
+        Ok(records.len())
+    }
+
+    /// Serialized size of the staged batch (crash-test fault injection
+    /// uses it to cut an append mid-record).
+    #[doc(hidden)]
+    pub fn pending_batch_bytes(&self) -> usize {
+        self.pending
+            .iter()
+            .map(|r| r.to_json().to_string().len() + 1)
+            .sum()
+    }
+
+    /// Fault injection for crash tests: commit the staged batch but write
+    /// only its first `keep_bytes` bytes, as a kill mid-append would.
+    #[doc(hidden)]
+    pub fn commit_batch_torn(&mut self, keep_bytes: usize) -> Result<()> {
+        self.batching = false;
+        let records = std::mem::take(&mut self.pending);
+        if let Some(w) = &mut self.wal {
+            w.append_batch_torn(&records, keep_bytes)?;
         }
         Ok(())
     }
 
-    /// Compact the WAL into a snapshot (durable stores only).
+    /// WAL I/O counters (None for in-memory stores).
+    pub fn wal_stats(&self) -> Option<wal::WalStats> {
+        self.wal.as_ref().map(|w| w.stats())
+    }
+
+    /// Compact the WAL into a snapshot (durable stores only). Any staged
+    /// group-commit batch is flushed first so the snapshot covers it.
     pub fn checkpoint(&mut self) -> Result<()> {
+        if self.batching || !self.pending.is_empty() {
+            self.commit_batch()?;
+        }
         if let Some(w) = &mut self.wal {
             let snapshot = wal::snapshot_records(&self.tables);
             w.checkpoint(&snapshot)?;
@@ -398,6 +486,91 @@ mod tests {
             let r = s.execute("SELECT COUNT(*) FROM t").unwrap();
             assert_eq!(r.scalar(), Some(&Value::Int(21)));
         }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn read_only_open_requires_existing_dir_and_skips_repair() {
+        // a typo'd path must not conjure a store
+        let missing = std::env::temp_dir().join("aup-ro-missing-acbd1234");
+        let _ = std::fs::remove_dir_all(&missing);
+        assert!(Store::open_read_only(&missing).is_err());
+        assert!(!missing.exists(), "read-only open must not create the dir");
+        // a torn tail is tolerated but left untouched on disk
+        let dir = temp_dir("aup-ro-torn").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            s.execute("CREATE TABLE t (id INT PRIMARY KEY)").unwrap();
+            s.execute("INSERT INTO t (id) VALUES (1)").unwrap();
+        }
+        crate::util::fsutil::append_str(&dir.join("wal.jsonl"), r#"{"op":"ins"#).unwrap();
+        let before = std::fs::metadata(dir.join("wal.jsonl")).unwrap().len();
+        {
+            let mut s = Store::open_read_only(&dir).unwrap();
+            let r = s.execute("SELECT COUNT(*) FROM t").unwrap();
+            assert_eq!(r.scalar(), Some(&Value::Int(1)));
+        }
+        let after = std::fs::metadata(dir.join("wal.jsonl")).unwrap().len();
+        assert_eq!(before, after, "reader left the torn tail in place");
+        // the write-side open then repairs it
+        let _ = Store::open(&dir).unwrap();
+        let repaired = std::fs::metadata(dir.join("wal.jsonl")).unwrap().len();
+        assert!(repaired < before, "writer truncated the torn tail");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn group_commit_one_append_many_records() {
+        let dir = temp_dir("aup-store-batch").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            s.execute("CREATE TABLE t (id INT PRIMARY KEY, v REAL)").unwrap();
+            let before = s.wal_stats().unwrap();
+            s.begin_batch();
+            for i in 0..10 {
+                s.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, 0.5)")).unwrap();
+            }
+            // reads inside the batch see the staged mutations
+            let r = s.execute("SELECT COUNT(*) FROM t").unwrap();
+            assert_eq!(r.scalar(), Some(&Value::Int(10)));
+            assert_eq!(s.commit_batch().unwrap(), 10);
+            let after = s.wal_stats().unwrap();
+            assert_eq!(after.appends - before.appends, 1, "10 records, 1 append");
+            assert_eq!(after.records - before.records, 10);
+        }
+        // the batch is durable
+        let mut s = Store::open(&dir).unwrap();
+        let r = s.execute("SELECT COUNT(*) FROM t").unwrap();
+        assert_eq!(r.scalar(), Some(&Value::Int(10)));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn torn_group_commit_recovers_prefix() {
+        let dir = temp_dir("aup-store-torn").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            s.execute("CREATE TABLE t (id INT PRIMARY KEY, v REAL)").unwrap();
+            s.begin_batch();
+            for i in 0..8 {
+                s.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, 1.0)")).unwrap();
+            }
+            // crash mid-append: only ~half the batch bytes reach disk
+            s.commit_batch_torn(120).unwrap();
+        }
+        let mut s = Store::open(&dir).unwrap();
+        let n = s.execute("SELECT COUNT(*) FROM t").unwrap().count();
+        let survived = s
+            .execute("SELECT COUNT(*) FROM t")
+            .unwrap()
+            .scalar()
+            .and_then(Value::as_i64)
+            .unwrap();
+        assert!(n > 0, "reopen must succeed despite the torn tail");
+        assert!(
+            (0..8).contains(&survived),
+            "a prefix of the batch survives, never the whole batch: {survived}"
+        );
         std::fs::remove_dir_all(dir).unwrap();
     }
 

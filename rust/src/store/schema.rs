@@ -145,6 +145,13 @@ pub fn next_job_id(store: &mut Store) -> Result<i64> {
     next_id(store, "job", "jid")
 }
 
+/// Look up a user by name (the StoreServer reuses rows across
+/// experiments instead of registering duplicates).
+pub fn find_user(store: &mut Store, name: &str) -> Result<Option<i64>> {
+    let r = store.execute(&format!("SELECT uid FROM user WHERE name = {}", quote(name)))?;
+    Ok(r.scalar().and_then(Value::as_i64))
+}
+
 /// Register a user (id allocated).
 pub fn add_user(store: &mut Store, name: &str) -> Result<i64> {
     let uid = next_id(store, "user", "uid")?;
@@ -347,7 +354,13 @@ pub fn job_events_of(store: &mut Store, eid: i64) -> Result<Vec<JobEventRow>> {
         "SELECT evid, jid, eid, attempt, state, time, detail \
          FROM job_event WHERE eid = {eid} ORDER BY evid"
     ))?;
-    Ok(r.rows()
+    Ok(rows_to_events(&r))
+}
+
+/// Map `SELECT evid, jid, eid, attempt, state, time, detail` rows to
+/// typed events (shared by [`job_events_of`] and the status views).
+pub(crate) fn rows_to_events(r: &QueryResult) -> Vec<JobEventRow> {
+    r.rows()
         .iter()
         .map(|row| JobEventRow {
             evid: row[0].as_i64().unwrap_or(-1),
@@ -358,7 +371,7 @@ pub fn job_events_of(store: &mut Store, eid: i64) -> Result<Vec<JobEventRow>> {
             time: row[5].as_f64().unwrap_or(0.0),
             detail: row[6].as_str().unwrap_or("").to_string(),
         })
-        .collect())
+        .collect()
 }
 
 fn opt_f64(v: &Value) -> Option<f64> {

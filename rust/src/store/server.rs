@@ -1,0 +1,574 @@
+//! StoreServer — the actor that owns a [`Store`] and its WAL.
+//!
+//! The paper's §III-C bookkeeping is ONE shared record of users,
+//! resources, experiments and jobs. Before this module, every concurrent
+//! experiment loop needed its own store because `Store` is single-writer
+//! and the WAL cannot take interleaved appends. Following the
+//! service-centralizes-trial-state design of Tune and CHOPT, the store
+//! now lives behind an actor:
+//!
+//! * trackers, the scheduler journal and the CLI hold a cheap cloneable
+//!   [`super::StoreClient`] instead of `Arc<Mutex<Store>>`;
+//! * typed [`StoreCmd`]s flow over an mpsc mailbox; mutations are
+//!   fire-and-forget, queries carry a reply channel;
+//! * the server drains its mailbox in batches and **group-commits**:
+//!   every mutation of one drain becomes a SINGLE WAL append instead of
+//!   one write per transition (the scale win — see
+//!   `benches/store_wal_throughput.rs`);
+//! * checkpoints are driven by [`StoreCmd::Tick`] messages stamped from
+//!   the scheduler's `Dispatcher` clock, so group-commit and checkpoint
+//!   timing are deterministic under `SimDispatcher` — the server never
+//!   reads a wall clock.
+//!
+//! Durability contract: a crash loses at most the open batch; a torn
+//! final append is dropped on replay and `recover_incomplete` sweeps the
+//! jobs whose terminal transition was lost.
+
+use std::sync::atomic::AtomicI64;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::log_warn;
+use crate::store::client::StoreClient;
+use crate::store::schema::{self, JobEventRow, JobRow};
+use crate::store::status::{self, ExperimentStatus};
+use crate::store::{QueryResult, Store};
+use crate::util::error::{AupError, Result};
+
+/// The mailbox protocol. Mutations are fire-and-forget (group-committed
+/// by the next drain); queries answer on their `reply` channel.
+pub enum StoreCmd {
+    /// Resolve-or-create the user row, open an experiment; replies eid.
+    StartExperiment {
+        user: String,
+        proposer: String,
+        exp_config: String,
+        now: f64,
+        reply: Sender<Result<i64>>,
+    },
+    FinishExperiment { eid: i64, best: Option<f64>, now: f64 },
+    /// Insert a PENDING job row (scheduler queue entry).
+    StartJobQueued { jid: i64, eid: i64, config: String, now: f64 },
+    /// Insert a job row directly in RUNNING state (no queue phase).
+    StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
+    SetJobRunning { jid: i64, rid: i64 },
+    CancelJob { jid: i64, now: f64 },
+    FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
+    /// One scheduler transition into the `job_event` journal.
+    LogJobEvent { jid: i64, eid: i64, attempt: i64, state: String, time: f64, detail: String },
+    BestJob { eid: i64, maximize: bool, reply: Sender<Result<Option<JobRow>>> },
+    JobsOf { eid: i64, reply: Sender<Result<Vec<JobRow>>> },
+    JobEventsOf { eid: i64, reply: Sender<Result<Vec<JobEventRow>>> },
+    /// Run a mini-SQL statement against the live store.
+    Sql { query: String, reply: Sender<Result<QueryResult>> },
+    /// Live per-experiment bookkeeping summary (`aup status` / `aup top`).
+    Status { reply: Sender<Result<Vec<ExperimentStatus>>> },
+    /// Force a checkpoint now.
+    Checkpoint { reply: Sender<Result<()>> },
+    /// Clock heartbeat from the driving loop; `now` is Dispatcher-clock
+    /// seconds (virtual under SimDispatcher). Triggers interval
+    /// checkpoints.
+    Tick { now: f64 },
+    /// Drain what is queued, final-checkpoint, stop.
+    Shutdown,
+}
+
+/// Server knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// checkpoint every this many Dispatcher-clock seconds (ticks drive
+    /// it; 0 disables interval checkpoints — shutdown still checkpoints)
+    pub checkpoint_interval: f64,
+    /// max commands drained into one group-commit batch
+    pub max_batch: usize,
+    /// fault injection for crash tests: die mid-append while committing
+    /// the Nth batch (1-based)
+    #[doc(hidden)]
+    pub crash_after_batches: Option<u64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { checkpoint_interval: 60.0, max_batch: 4096, crash_after_batches: None }
+    }
+}
+
+/// Observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub commands: u64,
+    pub batches: u64,
+    pub checkpoints: u64,
+}
+
+/// What one [`StoreServer::drain_once`] call did.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Drain {
+    /// Processed this many commands as one group-committed batch.
+    Processed(usize),
+    /// Non-blocking drain found an empty mailbox.
+    Idle,
+    /// Shutdown was requested or every client is gone.
+    Stopped,
+}
+
+/// The actor. Owns the store exclusively; see the module docs.
+pub struct StoreServer {
+    store: Store,
+    rx: Receiver<StoreCmd>,
+    cfg: ServerConfig,
+    /// Dispatcher-clock time of the last interval checkpoint (armed by
+    /// the first tick)
+    last_checkpoint: Option<f64>,
+    stats: ServerStats,
+    /// first mutation failure; fire-and-forget commands cannot reply, so
+    /// the error is latched and surfaced at shutdown
+    poisoned: Option<String>,
+}
+
+impl StoreServer {
+    /// Wrap `store` in a server, returning it with a connected client.
+    /// The schema is initialized and the client's global jid allocator is
+    /// seeded from the `job` table, so several experiments can insert
+    /// into one store without key collisions.
+    pub fn new(mut store: Store, cfg: ServerConfig) -> Result<(StoreServer, StoreClient)> {
+        schema::init_schema(&mut store)?;
+        let next_jid = schema::next_job_id(&mut store)?;
+        let (tx, rx) = channel();
+        let client = StoreClient { tx, next_jid: Arc::new(AtomicI64::new(next_jid)) };
+        let server = StoreServer {
+            store,
+            rx,
+            cfg,
+            last_checkpoint: None,
+            stats: ServerStats::default(),
+            poisoned: None,
+        };
+        Ok((server, client))
+    }
+
+    /// Spawn the server on its own OS thread (production mode). The
+    /// handle shuts it down gracefully on drop; keep it alive for the
+    /// whole run.
+    pub fn spawn(store: Store, cfg: ServerConfig) -> Result<(StoreServerHandle, StoreClient)> {
+        let (server, client) = StoreServer::new(store, cfg)?;
+        let tx = client.tx.clone();
+        let join = std::thread::Builder::new()
+            .name("aup-store-server".into())
+            .spawn(move || server.run())?;
+        Ok((StoreServerHandle { tx: Some(tx), join: Some(join) }, client))
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats
+    }
+
+    /// Direct store access for manually-driven servers (tests).
+    pub fn store_mut(&mut self) -> &mut Store {
+        &mut self.store
+    }
+
+    /// Hand the store back (manually-driven servers).
+    pub fn into_store(self) -> Store {
+        self.store
+    }
+
+    /// Process the current mailbox contents as ONE group-committed batch:
+    /// apply every command in arrival order (queries reply inline and see
+    /// all earlier mutations of the batch), then write all staged journal
+    /// records with a single WAL append. `block` waits for the first
+    /// command; `false` is the manually-driven test mode.
+    pub fn drain_once(&mut self, block: bool) -> Result<Drain> {
+        let first = if block {
+            match self.rx.recv() {
+                Ok(c) => c,
+                Err(_) => return Ok(Drain::Stopped),
+            }
+        } else {
+            match self.rx.try_recv() {
+                Ok(c) => c,
+                Err(TryRecvError::Empty) => return Ok(Drain::Idle),
+                Err(TryRecvError::Disconnected) => return Ok(Drain::Stopped),
+            }
+        };
+        let mut batch = vec![first];
+        while batch.len() < self.cfg.max_batch {
+            match self.rx.try_recv() {
+                Ok(c) => batch.push(c),
+                Err(_) => break,
+            }
+        }
+        let n = batch.len();
+        let mut stop = false;
+        let mut tick: Option<f64> = None;
+        self.store.begin_batch();
+        for cmd in batch {
+            self.stats.commands += 1;
+            match cmd {
+                StoreCmd::Shutdown => stop = true,
+                StoreCmd::Tick { now } => {
+                    tick = Some(tick.map_or(now, |t: f64| t.max(now)));
+                }
+                other => self.handle(other),
+            }
+        }
+        self.stats.batches += 1;
+        if let Some(fatal) = self.cfg.crash_after_batches {
+            if self.stats.batches >= fatal {
+                let half = self.store.pending_batch_bytes() / 2;
+                self.store.commit_batch_torn(half)?;
+                return Err(AupError::Store("injected crash mid group commit".into()));
+            }
+        }
+        self.store.commit_batch()?;
+        if let Some(now) = tick {
+            self.maybe_checkpoint(now)?;
+        }
+        Ok(if stop { Drain::Stopped } else { Drain::Processed(n) })
+    }
+
+    /// Thread entry point: drain until Shutdown (or every client gone),
+    /// then final-checkpoint. Returns the store and the first latched
+    /// error, if any. An I/O failure (or injected crash) aborts WITHOUT
+    /// the final checkpoint — exactly what a kill leaves on disk.
+    pub fn run(mut self) -> (Store, Option<String>) {
+        loop {
+            match self.drain_once(true) {
+                Ok(Drain::Stopped) => break,
+                Ok(_) => {}
+                Err(e) => return (self.store, Some(e.to_string())),
+            }
+        }
+        if let Err(e) = self.store.checkpoint() {
+            return (self.store, Some(e.to_string()));
+        }
+        (self.store, self.poisoned)
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn handle(&mut self, cmd: StoreCmd) {
+        match cmd {
+            StoreCmd::StartExperiment { user, proposer, exp_config, now, reply } => {
+                let res = self.start_experiment(&user, &proposer, &exp_config, now);
+                let _ = reply.send(res);
+            }
+            StoreCmd::FinishExperiment { eid, best, now } => {
+                self.mutate(|s| schema::finish_experiment(s, eid, best, now));
+            }
+            StoreCmd::StartJobQueued { jid, eid, config, now } => {
+                self.mutate(|s| schema::start_job_queued(s, jid, eid, &config, now));
+            }
+            StoreCmd::StartJobRunning { jid, eid, rid, config, now } => {
+                self.mutate(|s| schema::start_job(s, jid, eid, rid, &config, now));
+            }
+            StoreCmd::SetJobRunning { jid, rid } => {
+                self.mutate(|s| schema::set_job_running(s, jid, rid));
+            }
+            StoreCmd::CancelJob { jid, now } => {
+                self.mutate(|s| schema::cancel_job(s, jid, now));
+            }
+            StoreCmd::FinishJob { jid, score, ok, now } => {
+                self.mutate(|s| schema::finish_job(s, jid, score, ok, now));
+            }
+            StoreCmd::LogJobEvent { jid, eid, attempt, state, time, detail } => {
+                self.mutate(|s| {
+                    schema::log_job_event(s, jid, eid, attempt, &state, time, &detail)
+                        .map(|_| ())
+                });
+            }
+            StoreCmd::BestJob { eid, maximize, reply } => {
+                let _ = reply.send(schema::best_job(&mut self.store, eid, maximize));
+            }
+            StoreCmd::JobsOf { eid, reply } => {
+                let _ = reply.send(schema::jobs_of(&mut self.store, eid));
+            }
+            StoreCmd::JobEventsOf { eid, reply } => {
+                let _ = reply.send(schema::job_events_of(&mut self.store, eid));
+            }
+            StoreCmd::Sql { query, reply } => {
+                let _ = reply.send(self.store.execute(&query));
+            }
+            StoreCmd::Status { reply } => {
+                let _ = reply.send(status::experiment_statuses(&mut self.store));
+            }
+            StoreCmd::Checkpoint { reply } => {
+                let res = self.checkpoint_now();
+                // a checkpoint flushes the open batch; re-enter group-
+                // commit mode for the rest of this drain
+                self.store.begin_batch();
+                let _ = reply.send(res);
+            }
+            // filtered out by drain_once
+            StoreCmd::Tick { .. } | StoreCmd::Shutdown => {}
+        }
+    }
+
+    fn start_experiment(
+        &mut self,
+        user: &str,
+        proposer: &str,
+        exp_config: &str,
+        now: f64,
+    ) -> Result<i64> {
+        let uid = match schema::find_user(&mut self.store, user)? {
+            Some(uid) => uid,
+            None => schema::add_user(&mut self.store, user)?,
+        };
+        schema::start_experiment(&mut self.store, uid, proposer, exp_config, now)
+    }
+
+    fn mutate(&mut self, f: impl FnOnce(&mut Store) -> Result<()>) {
+        if let Err(e) = f(&mut self.store) {
+            log_warn!("store::server", "mutation failed: {e}");
+            if self.poisoned.is_none() {
+                self.poisoned = Some(e.to_string());
+            }
+        }
+    }
+
+    fn maybe_checkpoint(&mut self, now: f64) -> Result<()> {
+        if self.cfg.checkpoint_interval <= 0.0 {
+            return Ok(());
+        }
+        match self.last_checkpoint {
+            None => {
+                // arm on the first tick: interval counts from run start
+                self.last_checkpoint = Some(now);
+                Ok(())
+            }
+            Some(last) if now - last >= self.cfg.checkpoint_interval - 1e-9 => {
+                self.last_checkpoint = Some(now);
+                self.checkpoint_now()
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn checkpoint_now(&mut self) -> Result<()> {
+        self.store.checkpoint()?;
+        self.stats.checkpoints += 1;
+        Ok(())
+    }
+}
+
+/// The canonical per-job store traffic of one scheduler-driven job
+/// lifecycle (5 mutations: queue insert, RUNNING event, running update,
+/// DONE event, finish update). Defined ONCE so the WAL-throughput bench
+/// artifact and the tier-1 acceptance test measure the same workload.
+#[doc(hidden)]
+pub mod wal_workload {
+    use super::*;
+
+    pub const MUTATIONS_PER_JOB: u64 = 5;
+
+    /// Baseline flavor: direct schema calls, one WAL append each.
+    pub fn apply_direct(store: &mut Store, jid: i64) -> Result<()> {
+        schema::start_job_queued(store, jid, 0, "{}", 0.0)?;
+        schema::log_job_event(store, jid, 0, 1, "RUNNING", 1.0, "attempt 1")?;
+        schema::set_job_running(store, jid, 0)?;
+        schema::log_job_event(store, jid, 0, 1, "DONE", 2.0, "score 1")?;
+        schema::finish_job(store, jid, Some(1.0), true, 2.0)
+    }
+
+    /// Group-commit flavor: the same five mutations as mailbox sends.
+    pub fn send_via_client(client: &StoreClient, jid: i64) -> Result<()> {
+        client.start_job_queued(jid, 0, "{}", 0.0)?;
+        client.log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1")?;
+        client.set_job_running(jid, 0)?;
+        client.log_job_event(jid, 0, 1, "DONE", 2.0, "score 1")?;
+        client.finish_job(jid, Some(1.0), true, 2.0)
+    }
+}
+
+/// Owner handle for a spawned server: shuts down gracefully (drain +
+/// final checkpoint) on [`StoreServerHandle::shutdown`] or drop.
+pub struct StoreServerHandle {
+    tx: Option<Sender<StoreCmd>>,
+    join: Option<JoinHandle<(Store, Option<String>)>>,
+}
+
+impl StoreServerHandle {
+    /// Stop the server after it drains everything already sent, and take
+    /// the store back. Errs if any fire-and-forget mutation had failed.
+    pub fn shutdown(mut self) -> Result<Store> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Result<Store> {
+        if let Some(tx) = self.tx.take() {
+            // send failure means the server already stopped; join tells us how
+            let _ = tx.send(StoreCmd::Shutdown);
+        }
+        let join = self
+            .join
+            .take()
+            .ok_or_else(|| AupError::Store("store server already shut down".into()))?;
+        match join.join() {
+            Ok((store, None)) => Ok(store),
+            Ok((_, Some(msg))) => Err(AupError::Store(format!("store server: {msg}"))),
+            Err(_) => Err(AupError::Store("store server thread panicked".into())),
+        }
+    }
+}
+
+impl Drop for StoreServerHandle {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            if let Err(e) = self.shutdown_inner() {
+                log_warn!("store::server", "shutdown on drop: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Value;
+    use crate::util::fsutil::temp_dir;
+
+    /// Manually-driven server: deterministic batch boundaries.
+    fn manual(dir: &std::path::Path, cfg: ServerConfig) -> (StoreServer, StoreClient) {
+        StoreServer::new(Store::open(dir).unwrap(), cfg).unwrap()
+    }
+
+    #[test]
+    fn mailbox_drain_is_one_group_commit() {
+        let dir = temp_dir("aup-srv-batch").unwrap();
+        let (mut server, client) = manual(&dir, ServerConfig::default());
+        let before = server.store_mut().wal_stats().unwrap();
+        for jid in 0..20 {
+            client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
+            client
+                .log_job_event(jid, 0, 0, "QUEUED", 0.0, "submitted")
+                .unwrap();
+        }
+        assert_eq!(server.drain_once(false).unwrap(), Drain::Processed(40));
+        let after = server.store_mut().wal_stats().unwrap();
+        assert_eq!(after.appends - before.appends, 1, "40 mutations, 1 append");
+        assert_eq!(after.records - before.records, 40);
+        assert_eq!(server.drain_once(false).unwrap(), Drain::Idle);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn queries_see_same_batch_mutations() {
+        let dir = temp_dir("aup-srv-query").unwrap();
+        let (mut server, client) = manual(&dir, ServerConfig::default());
+        let (tx, rx) = channel();
+        client
+            .send_cmd(StoreCmd::StartExperiment {
+                user: "alice".into(),
+                proposer: "random".into(),
+                exp_config: "{}".into(),
+                now: 0.0,
+                reply: tx,
+            })
+            .unwrap();
+        client.start_job_queued(0, 0, "{}", 1.0).unwrap();
+        let (qtx, qrx) = channel();
+        client
+            .send_cmd(StoreCmd::JobsOf { eid: 0, reply: qtx })
+            .unwrap();
+        server.drain_once(false).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), 0, "first eid");
+        let jobs = qrx.recv().unwrap().unwrap();
+        assert_eq!(jobs.len(), 1, "query in the same batch sees the insert");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_ticks_follow_the_given_clock() {
+        let dir = temp_dir("aup-srv-tick").unwrap();
+        let cfg = ServerConfig { checkpoint_interval: 10.0, ..ServerConfig::default() };
+        let (mut server, client) = manual(&dir, cfg);
+        client.start_job_queued(0, 0, "{}", 0.0).unwrap();
+        client.tick(0.0).unwrap(); // arms the interval
+        server.drain_once(false).unwrap();
+        assert_eq!(server.stats().checkpoints, 0);
+        client.tick(9.5).unwrap(); // not due yet
+        server.drain_once(false).unwrap();
+        assert_eq!(server.stats().checkpoints, 0);
+        client.tick(10.0).unwrap(); // due exactly at the interval
+        server.drain_once(false).unwrap();
+        assert_eq!(server.stats().checkpoints, 1);
+        assert!(dir.join("snapshot.jsonl").exists());
+        client.tick(15.0).unwrap(); // interval restarts at 10.0
+        server.drain_once(false).unwrap();
+        assert_eq!(server.stats().checkpoints, 1);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn spawned_server_full_lifecycle() {
+        let dir = temp_dir("aup-srv-spawn").unwrap();
+        {
+            let (handle, client) =
+                StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+            let eid = client.start_experiment("bob", "random", "{}", 0.0).unwrap();
+            let jid = client.alloc_jid();
+            client.start_job_queued(jid, eid, "{\"x\":1}", 1.0).unwrap();
+            client.set_job_running(jid, 0).unwrap();
+            client.finish_job(jid, Some(0.5), true, 2.0).unwrap();
+            client.finish_experiment(eid, Some(0.5), 3.0).unwrap();
+            let best = client.best_job(eid, false).unwrap().unwrap();
+            assert_eq!(best.jid, jid);
+            assert_eq!(best.score, Some(0.5));
+            let mut store = handle.shutdown().unwrap();
+            let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+            assert_eq!(r.scalar(), Some(&Value::Int(1)));
+        }
+        // graceful shutdown checkpointed; reopen sees everything
+        let mut store = Store::open(&dir).unwrap();
+        let r = store.execute("SELECT best_score FROM experiment WHERE eid = 0").unwrap();
+        assert_eq!(r.rows()[0][0], Value::Real(0.5));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn jid_allocator_is_global_across_clients() {
+        let dir = temp_dir("aup-srv-jid").unwrap();
+        let (server, client) = manual(&dir, ServerConfig::default());
+        let c2 = client.clone();
+        let a = client.alloc_jid();
+        let b = c2.alloc_jid();
+        let c = client.alloc_jid();
+        assert_eq!((a, b, c), (0, 1, 2));
+        drop(server);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn injected_crash_leaves_recoverable_store() {
+        let dir = temp_dir("aup-srv-crash").unwrap();
+        {
+            let cfg = ServerConfig {
+                crash_after_batches: Some(2),
+                ..ServerConfig::default()
+            };
+            let (mut server, client) = manual(&dir, cfg);
+            for jid in 0..4 {
+                client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
+            }
+            assert!(matches!(server.drain_once(false), Ok(Drain::Processed(4))));
+            for jid in 0..4 {
+                client.set_job_running(jid, 0).unwrap();
+                client
+                    .log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1")
+                    .unwrap();
+            }
+            let err = server.drain_once(false).unwrap_err();
+            assert!(err.to_string().contains("injected crash"), "{err}");
+            // server dropped here without checkpoint — the kill
+        }
+        let mut store = Store::open(&dir).unwrap();
+        let swept = schema::recover_incomplete(&mut store).unwrap();
+        assert_eq!(swept, 4, "all jobs were non-terminal at the crash");
+        let jobs = schema::jobs_of(&mut store, 0).unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert!(jobs.iter().all(|j| j.status.is_terminal()));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

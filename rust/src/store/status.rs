@@ -1,0 +1,320 @@
+//! Live bookkeeping queries — the paper's §III-C "tracking" story as a
+//! user-facing surface (`aup status` / `aup top`).
+//!
+//! Everything here works on a plain `&mut Store`, so the same code
+//! serves two paths: the [`StoreServer`] answers [`StoreCmd::Status`]
+//! against the live store mid-run, and the CLI reopens a store directory
+//! read-only after (or during) a run.
+//!
+//! [`StoreServer`]: crate::store::server::StoreServer
+//! [`StoreCmd::Status`]: crate::store::server::StoreCmd::Status
+
+use crate::store::schema::{self, JobEventRow, JobStatus};
+use crate::store::{Store, Value};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Per-experiment progress summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentStatus {
+    pub eid: i64,
+    pub user: String,
+    pub proposer: String,
+    pub maximize: bool,
+    pub start_time: f64,
+    /// None while the experiment is still running
+    pub end_time: Option<f64>,
+    pub n_jobs: usize,
+    pub pending: usize,
+    pub running: usize,
+    pub finished: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+    /// retry attempts recorded in the `job_event` journal (BACKOFF rows)
+    pub retries: usize,
+    pub best_score: Option<f64>,
+    pub best_jid: Option<i64>,
+}
+
+impl ExperimentStatus {
+    pub fn done(&self) -> bool {
+        self.end_time.is_some()
+    }
+}
+
+/// One RUNNING job (for `aup top`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunningJob {
+    pub jid: i64,
+    pub eid: i64,
+    pub rid: i64,
+    pub start_time: f64,
+    pub config: String,
+}
+
+/// True when the Fig-2 tables this module reads are all present. Status
+/// views must stay STRICTLY read-only — creating missing tables here
+/// would append CREATE records into a WAL another process may be
+/// writing concurrently.
+fn has_schema(store: &Store) -> bool {
+    ["user", "experiment", "job", "job_event"]
+        .iter()
+        .all(|t| store.has_table(t))
+}
+
+/// Summarize every experiment in the store, in eid order.
+pub fn experiment_statuses(store: &mut Store) -> Result<Vec<ExperimentStatus>> {
+    if !has_schema(store) {
+        return Ok(Vec::new());
+    }
+    let eids: Vec<i64> = store
+        .execute("SELECT eid FROM experiment ORDER BY eid")?
+        .rows()
+        .iter()
+        .filter_map(|r| r.first().and_then(Value::as_i64))
+        .collect();
+    let mut out = Vec::with_capacity(eids.len());
+    for eid in eids {
+        let exp = match schema::get_experiment(store, eid)? {
+            Some(e) => e,
+            None => continue,
+        };
+        let user = store
+            .execute(&format!("SELECT name FROM user WHERE uid = {}", exp.uid))?
+            .scalar()
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_default();
+        let maximize = Json::parse(&exp.exp_config)
+            .ok()
+            .and_then(|j| j.get("target").and_then(|t| t.as_str().map(str::to_string)))
+            .is_some_and(|t| crate::experiment::config::target_means_maximize(&t));
+        let jobs = schema::jobs_of(store, eid)?;
+        let count = |s: JobStatus| jobs.iter().filter(|j| j.status == s).count();
+        let retries = store
+            .execute(&format!(
+                "SELECT COUNT(*) FROM job_event WHERE eid = {eid} AND state = 'BACKOFF'"
+            ))?
+            .scalar()
+            .and_then(Value::as_i64)
+            .unwrap_or(0) as usize;
+        let best = schema::best_job(store, eid, maximize)?;
+        let best_score = exp
+            .best_score
+            .or_else(|| best.as_ref().and_then(|b| b.score));
+        out.push(ExperimentStatus {
+            eid,
+            user,
+            proposer: exp.proposer,
+            maximize,
+            start_time: exp.start_time,
+            end_time: exp.end_time,
+            n_jobs: jobs.len(),
+            pending: count(JobStatus::Pending),
+            running: count(JobStatus::Running),
+            finished: count(JobStatus::Finished),
+            failed: count(JobStatus::Failed),
+            cancelled: count(JobStatus::Cancelled),
+            retries,
+            best_score,
+            best_jid: best.map(|b| b.jid),
+        });
+    }
+    Ok(out)
+}
+
+/// All RUNNING jobs across experiments, oldest first.
+pub fn running_jobs(store: &mut Store) -> Result<Vec<RunningJob>> {
+    if !store.has_table("job") {
+        return Ok(Vec::new());
+    }
+    let r = store.execute(
+        "SELECT jid, eid, rid, start_time, config FROM job \
+         WHERE status = 'RUNNING' ORDER BY start_time",
+    )?;
+    Ok(r.rows()
+        .iter()
+        .map(|row| RunningJob {
+            jid: row[0].as_i64().unwrap_or(-1),
+            eid: row[1].as_i64().unwrap_or(-1),
+            rid: row[2].as_i64().unwrap_or(-1),
+            start_time: row[3].as_f64().unwrap_or(0.0),
+            config: row[4].as_str().unwrap_or("").to_string(),
+        })
+        .collect())
+}
+
+/// The most recent `limit` scheduler transitions, oldest of them first.
+pub fn recent_events(store: &mut Store, limit: usize) -> Result<Vec<JobEventRow>> {
+    if !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    let r = store.execute(&format!(
+        "SELECT evid, jid, eid, attempt, state, time, detail \
+         FROM job_event ORDER BY evid DESC LIMIT {limit}"
+    ))?;
+    let mut events = schema::rows_to_events(&r);
+    events.reverse();
+    Ok(events)
+}
+
+fn fmt_score(s: Option<f64>) -> String {
+    match s {
+        Some(v) => format!("{v:.6}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Render the `aup status` table.
+pub fn render_status(statuses: &[ExperimentStatus]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>7} {:>14} {:<8}\n",
+        "eid", "user", "proposer", "jobs", "pend", "run", "done", "fail", "canc", "retries",
+        "best", "state"
+    ));
+    for s in statuses {
+        out.push_str(&format!(
+            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>7} {:>14} {:<8}\n",
+            s.eid,
+            truncate(&s.user, 10),
+            truncate(&s.proposer, 10),
+            s.n_jobs,
+            s.pending,
+            s.running,
+            s.finished,
+            s.failed,
+            s.cancelled,
+            s.retries,
+            fmt_score(s.best_score),
+            if s.done() { "done" } else { "running" },
+        ));
+    }
+    out
+}
+
+/// Render the `aup top` view: running jobs + recent transitions.
+pub fn render_top(running: &[RunningJob], events: &[JobEventRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{} running job(s)\n", running.len()));
+    if !running.is_empty() {
+        out.push_str(&format!(
+            "{:>6} {:>4} {:>4} {:>14} config\n",
+            "jid", "eid", "rid", "started"
+        ));
+        for j in running {
+            out.push_str(&format!(
+                "{:>6} {:>4} {:>4} {:>14.3} {}\n",
+                j.jid,
+                j.eid,
+                j.rid,
+                j.start_time,
+                truncate(&j.config, 48)
+            ));
+        }
+    }
+    if !events.is_empty() {
+        out.push_str(&format!("\nlast {} transition(s):\n", events.len()));
+        for e in events {
+            out.push_str(&format!(
+                "  ev{:<5} jid={:<4} eid={:<3} attempt={} {:<9} {}\n",
+                e.evid,
+                e.jid,
+                e.eid,
+                e.attempt,
+                e.state,
+                truncate(&e.detail, 60)
+            ));
+        }
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded_store() -> Store {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        let uid = schema::add_user(&mut s, "alice").unwrap();
+        // experiment 0: minimization, finished
+        let e0 = schema::start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0)
+            .unwrap();
+        schema::start_job_queued(&mut s, 0, e0, "{}", 1.0).unwrap();
+        schema::set_job_running(&mut s, 0, 0).unwrap();
+        schema::finish_job(&mut s, 0, Some(0.25), true, 2.0).unwrap();
+        schema::start_job_queued(&mut s, 1, e0, "{}", 1.0).unwrap();
+        schema::finish_job(&mut s, 1, None, false, 2.0).unwrap();
+        schema::log_job_event(&mut s, 1, e0, 1, "BACKOFF", 1.5, "attempt 1 failed").unwrap();
+        schema::finish_experiment(&mut s, e0, Some(0.25), 3.0).unwrap();
+        // experiment 1: maximization (long spelling), still running
+        let e1 = schema::start_experiment(&mut s, uid, "tpe", r#"{"target":"maximize"}"#, 4.0)
+            .unwrap();
+        schema::start_job_queued(&mut s, 2, e1, r#"{"x":3}"#, 5.0).unwrap();
+        schema::set_job_running(&mut s, 2, 1).unwrap();
+        schema::start_job_queued(&mut s, 3, e1, "{}", 5.5).unwrap();
+        s
+    }
+
+    #[test]
+    fn statuses_cover_both_experiments() {
+        let mut s = seeded_store();
+        let sts = experiment_statuses(&mut s).unwrap();
+        assert_eq!(sts.len(), 2);
+        let s0 = &sts[0];
+        assert_eq!((s0.eid, s0.n_jobs, s0.finished, s0.failed), (0, 2, 1, 1));
+        assert_eq!(s0.retries, 1);
+        assert_eq!(s0.best_score, Some(0.25));
+        assert_eq!(s0.best_jid, Some(0));
+        assert!(s0.done());
+        assert!(!s0.maximize);
+        let s1 = &sts[1];
+        assert_eq!((s1.eid, s1.running, s1.pending), (1, 1, 1));
+        assert!(s1.maximize);
+        assert!(!s1.done());
+        assert_eq!(s1.best_score, None);
+        assert_eq!(s1.user, "alice");
+    }
+
+    #[test]
+    fn running_and_recent_views() {
+        let mut s = seeded_store();
+        let running = running_jobs(&mut s).unwrap();
+        assert_eq!(running.len(), 1);
+        assert_eq!(running[0].jid, 2);
+        assert_eq!(running[0].eid, 1);
+        let evs = recent_events(&mut s, 10).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].state, "BACKOFF");
+    }
+
+    #[test]
+    fn renderers_dont_panic_and_mention_the_data() {
+        let mut s = seeded_store();
+        let sts = experiment_statuses(&mut s).unwrap();
+        let txt = render_status(&sts);
+        assert!(txt.contains("random"), "{txt}");
+        assert!(txt.contains("running"), "{txt}");
+        let top = render_top(&running_jobs(&mut s).unwrap(), &recent_events(&mut s, 5).unwrap());
+        assert!(top.contains("1 running job(s)"), "{top}");
+        assert!(top.contains("BACKOFF"), "{top}");
+    }
+
+    #[test]
+    fn empty_store_is_fine() {
+        let mut s = Store::in_memory();
+        assert!(experiment_statuses(&mut s).unwrap().is_empty());
+        assert!(running_jobs(&mut s).unwrap().is_empty());
+        assert!(recent_events(&mut s, 5).unwrap().is_empty());
+    }
+}

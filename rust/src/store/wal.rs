@@ -143,19 +143,47 @@ fn json_to_named(j: &Json) -> Result<BTreeMap<String, Value>> {
         .collect()
 }
 
+/// Cumulative WAL I/O counters. `appends` counts physical write calls
+/// (the thing group commit minimizes), `records` the logical mutations
+/// journaled through them — `records / appends` is the achieved batch
+/// size.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalStats {
+    pub appends: u64,
+    pub records: u64,
+    pub checkpoints: u64,
+}
+
 /// WAL manager for one store directory.
 pub struct Wal {
     dir: PathBuf,
+    stats: WalStats,
 }
 
 impl Wal {
     pub fn open(dir: &Path) -> Result<Wal> {
         std::fs::create_dir_all(dir)?;
-        Ok(Wal { dir: dir.to_path_buf() })
+        Ok(Wal { dir: dir.to_path_buf(), stats: WalStats::default() })
+    }
+
+    /// Reader flavor: requires the directory to already exist — a
+    /// read-only open must never conjure a store out of a typo'd path.
+    pub fn open_existing(dir: &Path) -> Result<Wal> {
+        if !dir.is_dir() {
+            return Err(AupError::Store(format!(
+                "no store directory at '{}'",
+                dir.display()
+            )));
+        }
+        Ok(Wal { dir: dir.to_path_buf(), stats: WalStats::default() })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    pub fn stats(&self) -> WalStats {
+        self.stats
     }
 
     fn wal_path(&self) -> PathBuf {
@@ -167,36 +195,95 @@ impl Wal {
     }
 
     pub fn append(&mut self, record: &Record) -> Result<()> {
-        fsutil::append_line(&self.wal_path(), &record.to_json().to_string())
+        self.append_batch(std::slice::from_ref(record))
+    }
+
+    /// Group commit: journal many records with ONE physical append. This
+    /// is the StoreServer's hot path — one mailbox drain becomes one
+    /// write instead of one per transition.
+    pub fn append_batch(&mut self, records: &[Record]) -> Result<()> {
+        if records.is_empty() {
+            return Ok(());
+        }
+        let mut text = String::new();
+        for r in records {
+            text.push_str(&r.to_json().to_string());
+            text.push('\n');
+        }
+        self.stats.appends += 1;
+        self.stats.records += records.len() as u64;
+        fsutil::append_str(&self.wal_path(), &text)
+    }
+
+    /// Fault injection for crash tests: write only the first `keep_bytes`
+    /// bytes of the batch, as a process killed mid-append would. The
+    /// replay path must drop the torn tail record and keep everything
+    /// before it.
+    #[doc(hidden)]
+    pub fn append_batch_torn(&mut self, records: &[Record], keep_bytes: usize) -> Result<()> {
+        let mut text = String::new();
+        for r in records {
+            text.push_str(&r.to_json().to_string());
+            text.push('\n');
+        }
+        let mut k = keep_bytes.min(text.len());
+        while k > 0 && !text.is_char_boundary(k) {
+            k -= 1;
+        }
+        text.truncate(k);
+        self.stats.appends += 1;
+        fsutil::append_str(&self.wal_path(), &text)
     }
 
     /// Replay snapshot then WAL. Tolerates a torn last WAL line.
-    pub fn replay(&self) -> Result<Vec<Record>> {
+    ///
+    /// With `repair = true` (write-side opens ONLY) the torn bytes are
+    /// additionally truncated from the file: a later O_APPEND write
+    /// would otherwise glue its first record onto the unterminated line,
+    /// turning a recoverable torn tail into a corrupt MIDDLE record that
+    /// fails every future open (the crash → recover → crash sequence).
+    /// Readers MUST pass `repair = false` — they may be inspecting a
+    /// store a live writer is appending to (what looks like a torn tail
+    /// can be a write in flight), or a directory they cannot write.
+    pub fn replay(&self, repair: bool) -> Result<Vec<Record>> {
         let mut records = Vec::new();
         for (path, is_wal) in [(self.snapshot_path(), false), (self.wal_path(), true)] {
             if !path.exists() {
                 continue;
             }
             let text = fsutil::read_to_string(&path)?;
-            let lines: Vec<&str> = text.lines().collect();
-            for (idx, line) in lines.iter().enumerate() {
+            // keep byte offsets so a torn tail can be truncated in place
+            let segs: Vec<&str> = text.split_inclusive('\n').collect();
+            let mut pos: usize = 0;
+            let mut torn_at: Option<usize> = None;
+            for (idx, seg) in segs.iter().enumerate() {
+                let start = pos;
+                pos += seg.len();
+                let line = seg.trim_end_matches('\n');
                 if line.trim().is_empty() {
                     continue;
                 }
                 match Json::parse(line).and_then(|j| Record::from_json(&j)) {
                     Ok(r) => records.push(r),
                     Err(e) => {
-                        if is_wal && idx == lines.len() - 1 {
+                        if is_wal && idx == segs.len() - 1 {
                             // torn tail from a crash mid-append: drop it
                             crate::util::logging::log(
                                 crate::util::logging::Level::Warn,
                                 "store::wal",
                                 &format!("dropping torn WAL tail: {e}"),
                             );
+                            torn_at = Some(start);
                         } else {
                             return Err(e);
                         }
                     }
+                }
+            }
+            if repair {
+                if let Some(start) = torn_at {
+                    let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+                    f.set_len(start as u64)?;
                 }
             }
         }
@@ -205,6 +292,7 @@ impl Wal {
 
     /// Write `snapshot` atomically and truncate the WAL.
     pub fn checkpoint(&mut self, snapshot: &[Record]) -> Result<()> {
+        self.stats.checkpoints += 1;
         let mut text = String::new();
         for r in snapshot {
             text.push_str(&r.to_json().to_string());
@@ -271,8 +359,73 @@ mod tests {
         w.append(&Record::Delete { table: "t".into(), key: Value::Int(1) }).unwrap();
         // simulate crash mid-append
         fsutil::append_line(&dir.join("wal.jsonl"), r#"{"op":"delete","tab"#).unwrap();
-        let records = w.replay().unwrap();
+        // read-only replay tolerates the torn tail and leaves the file alone
+        let before = std::fs::metadata(dir.join("wal.jsonl")).unwrap().len();
+        let records = w.replay(false).unwrap();
         assert_eq!(records.len(), 1);
+        let after = std::fs::metadata(dir.join("wal.jsonl")).unwrap().len();
+        assert_eq!(before, after, "readers must not repair the file");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn batch_append_is_one_write_many_records() {
+        let dir = temp_dir("aup-wal-batch").unwrap();
+        let mut w = Wal::open(&dir).unwrap();
+        let records: Vec<Record> = (0..5)
+            .map(|i| Record::Delete { table: "t".into(), key: Value::Int(i) })
+            .collect();
+        w.append_batch(&records).unwrap();
+        assert_eq!(w.stats(), WalStats { appends: 1, records: 5, checkpoints: 0 });
+        assert_eq!(w.replay(false).unwrap(), records);
+        // single appends keep counting both
+        w.append(&records[0]).unwrap();
+        assert_eq!(w.stats().appends, 2);
+        assert_eq!(w.stats().records, 6);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn torn_batch_keeps_whole_records_drops_tail() {
+        let dir = temp_dir("aup-wal-torn-batch").unwrap();
+        let mut w = Wal::open(&dir).unwrap();
+        let records: Vec<Record> = (0..4)
+            .map(|i| Record::Delete { table: "t".into(), key: Value::Int(i) })
+            .collect();
+        let full: usize = records
+            .iter()
+            .map(|r| r.to_json().to_string().len() + 1)
+            .sum();
+        // cut inside the last record: first three survive, tail dropped
+        w.append_batch_torn(&records, full - 3).unwrap();
+        let replayed = w.replay(false).unwrap();
+        assert_eq!(replayed, records[..3].to_vec());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_so_later_appends_dont_glue() {
+        // crash 1 leaves a torn, newline-less tail; recovery appends new
+        // records; crash 2 must still leave an openable store — i.e. the
+        // torn bytes must be GONE from the file, not merely skipped
+        let dir = temp_dir("aup-wal-repair").unwrap();
+        let mut w = Wal::open(&dir).unwrap();
+        w.append(&Record::Delete { table: "t".into(), key: Value::Int(1) }).unwrap();
+        // crash mid-append: partial record, no trailing newline
+        fsutil::append_str(&dir.join("wal.jsonl"), r#"{"op":"delete","tab"#).unwrap();
+        // reopen 1 (write-side): torn tail dropped AND truncated away
+        let mut w2 = Wal::open(&dir).unwrap();
+        assert_eq!(w2.replay(true).unwrap().len(), 1);
+        // post-recovery append starts on a fresh line
+        w2.append(&Record::Delete { table: "t".into(), key: Value::Int(2) }).unwrap();
+        // reopen 2: both records parse — nothing was glued together
+        let w3 = Wal::open(&dir).unwrap();
+        let replayed = w3.replay(false).unwrap();
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(
+            replayed[1],
+            Record::Delete { table: "t".into(), key: Value::Int(2) }
+        );
         std::fs::remove_dir_all(dir).unwrap();
     }
 
@@ -282,7 +435,8 @@ mod tests {
         let mut w = Wal::open(&dir).unwrap();
         fsutil::append_line(&dir.join("wal.jsonl"), r#"{"op":"delete","tab"#).unwrap();
         w.append(&Record::Delete { table: "t".into(), key: Value::Int(1) }).unwrap();
-        assert!(w.replay().is_err());
+        assert!(w.replay(false).is_err());
+        assert!(w.replay(true).is_err(), "repair never rescues a corrupt middle");
         std::fs::remove_dir_all(dir).unwrap();
     }
 }

@@ -24,8 +24,22 @@ pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
     Ok(())
 }
 
-/// Append a line to a file, creating it if needed.
+/// Append a line to a file, creating it if needed. One write call
+/// including the newline — a crash can tear the line's tail but never
+/// leave a completed line missing its terminator (which would glue the
+/// NEXT append onto it and turn a recoverable torn tail into a corrupt
+/// middle record).
 pub fn append_line(path: &Path, line: &str) -> Result<()> {
+    let mut text = String::with_capacity(line.len() + 1);
+    text.push_str(line);
+    text.push('\n');
+    append_str(path, &text)
+}
+
+/// Append raw text (caller supplies newlines) in ONE write call — the
+/// primitive behind WAL group commit: a multi-record batch must reach
+/// the file as a single append, not one write per record.
+pub fn append_str(path: &Path, text: &str) -> Result<()> {
     use std::io::Write;
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -33,8 +47,7 @@ pub fn append_line(path: &Path, line: &str) -> Result<()> {
         }
     }
     let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
-    f.write_all(line.as_bytes())?;
-    f.write_all(b"\n")?;
+    f.write_all(text.as_bytes())?;
     Ok(())
 }
 
