@@ -22,12 +22,20 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::experiment::config::ExperimentConfig;
-use crate::experiment::{Experiment, ExperimentOptions};
-use crate::store::Store;
+use crate::experiment::{BatchSubmit, Experiment, ExperimentOptions};
+use crate::store::service::{self, SubmitRequest, SOCKET_FILE};
+use crate::store::{RemoteStoreClient, Store, StoreApi, StoreService};
 use crate::util::error::{AupError, Result};
 use crate::util::ini::Ini;
+use crate::util::json::Json;
+
+/// Flags that never take a value, so `aup batch exp.json --serve` can't
+/// swallow a following positional as the flag's argument.
+const BOOL_FLAGS: &[&str] = &["verbose", "serve", "offline"];
 
 /// Parsed command line: subcommand, positional args, `--flag value` map.
 #[derive(Debug, PartialEq)]
@@ -51,7 +59,10 @@ impl Cli {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                } else if !BOOL_FLAGS.contains(&key)
+                    && i + 1 < args.len()
+                    && !args[i + 1].starts_with("--")
+                {
                     flags.insert(key.to_string(), args[i + 1].clone());
                     i += 1;
                 } else {
@@ -80,15 +91,30 @@ USAGE:
                 [--retries N] [--timeout S] [--backoff S]
     aup batch   EXP1.json EXP2.json [...] [--pool N] [--db DIR] [--user NAME]
                 [--retries N] [--timeout S] [--backoff S] [--verbose]
+                [--serve] [--tcp HOST:PORT]
                 run several experiments against ONE shared resource pool AND
                 one shared tracking store: with --db DIR every experiment's
                 rows land in the single store at DIR (served by the in-process
                 StoreServer; WAL writes are group-committed); per-experiment
-                'priority' keys order placement under contention
-    aup status  DB_DIR | --db DIR           per-experiment progress, retries
-                                            and best scores from the store
-    aup top     DB_DIR | --db DIR [--events N]
+                'priority' keys order placement under contention.
+                --serve additionally publishes the live store at
+                DIR/store.sock (requires --db): 'aup status'/'aup top' from
+                other shells attach to the running server, and 'aup submit'
+                enqueues NEW experiments into this run's pool. --tcp serves
+                the same protocol on a TCP address (dashboards, other hosts)
+    aup submit  DB_DIR EXPERIMENT.json [--user NAME]
+                enqueue an experiment into a live 'aup batch --serve' run:
+                it joins the running pool and lands in the same shared store
+                (with --tcp ADDR, connect over TCP instead of DB_DIR's socket)
+    aup status  DB_DIR | --db DIR [--offline]
+                                            per-experiment progress, retries
+                                            and best scores. Attaches to the
+                                            live server via DIR/store.sock
+                                            when one is running (--offline
+                                            forces the directory read)
+    aup top     DB_DIR | --db DIR [--events N] [--offline]
                                             running jobs + recent transitions
+                                            (auto-attaches like status)
     aup viz     --db DIR [--eid N] [--csv FILE]
     aup sql     --db DIR \"SELECT ...\"        query the tracking store (read-only)
     aup algorithms                          list available HPO algorithms
@@ -143,6 +169,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "init" => cmd_init(&cli),
         "run" => cmd_run(&cli),
         "batch" => cmd_batch(&cli),
+        "submit" => cmd_submit(&cli),
         "status" => cmd_status(&cli),
         "top" => cmd_top(&cli),
         "viz" => cmd_viz(&cli),
@@ -343,7 +370,65 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
         "batch: {} experiment(s) over a shared {pool_n}-slot pool, one shared store",
         exps.len()
     );
-    let summaries = match crate::experiment::run_batch(exps, pool) {
+    // --serve / --tcp: put the socket front-end in front of the live
+    // StoreServer and open an experiment intake for `aup submit`
+    let serve = cli.flag("serve").is_some();
+    let tcp_addr = cli.flag("tcp");
+    let mut services: Vec<StoreService> = Vec::new();
+    let intake = if serve || tcp_addr.is_some() {
+        let (tx, rx) = std::sync::mpsc::channel::<BatchSubmit>();
+        // validate on the service thread so `aup submit` gets config
+        // errors synchronously; valid configs go to the batch loop, and
+        // the reply waits for the loop's ADMISSION ack — a submitter is
+        // told "accepted" only once its experiment has an eid and a
+        // scheduler submission, never for work a finishing batch drops
+        let handler: service::SubmitHandler = Arc::new(move |req: SubmitRequest| {
+            let SubmitRequest { config, user } = req;
+            let cfg = ExperimentConfig::from_json(config)?;
+            let proposer = cfg.proposer.clone();
+            let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+            tx.send(BatchSubmit { cfg, user, ack: Some(ack_tx) }).map_err(|_| {
+                AupError::Store("the batch is no longer accepting submissions".into())
+            })?;
+            match ack_rx.recv() {
+                Ok(Ok(eid)) => Ok(Json::str(format!("accepted ({proposer}) as eid {eid}"))),
+                Ok(Err(msg)) => Err(AupError::Store(msg)),
+                Err(_) => Err(AupError::Store(
+                    "the batch ended before the submission could be admitted".into(),
+                )),
+            }
+        });
+        if serve {
+            let db = cli.flag("db").ok_or_else(|| {
+                AupError::Config(
+                    "--serve requires --db DIR (the socket is published at DIR/store.sock)"
+                        .into(),
+                )
+            })?;
+            let sock = Path::new(db).join(SOCKET_FILE);
+            services.push(StoreService::serve_unix(&sock, client.clone(), Some(handler.clone()))?);
+            println!(
+                "serving live store at {} — try 'aup top {db}' or \
+                 'aup submit {db} EXP.json' from another shell",
+                sock.display()
+            );
+        }
+        if let Some(addr) = tcp_addr {
+            let svc = StoreService::serve_tcp(addr, client.clone(), Some(handler.clone()))?;
+            if let Some(local) = svc.local_addr() {
+                println!("serving live store on tcp://{local}");
+            }
+            services.push(svc);
+        }
+        Some((rx, client.clone()))
+    } else {
+        None
+    };
+    let run_result = crate::experiment::run_batch_serve(exps, pool, intake);
+    // stop accepting + remove the socket BEFORE the server winds down,
+    // so late remote clients see "no socket" rather than a dead mailbox
+    drop(services);
+    let summaries = match run_result {
         Ok(s) => s,
         Err(run_err) => {
             // a dead server is the likely cause; its latched error names
@@ -361,6 +446,12 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             s.eid, s.n_jobs, s.n_failed, s.best_score, s.wall_time
         );
     }
+    for s in summaries.iter().skip(names.len()) {
+        println!(
+            "  (submitted live): eid={} {} jobs, {} failed, best = {:?} in {:.2}s",
+            s.eid, s.n_jobs, s.n_failed, s.best_score, s.wall_time
+        );
+    }
     // live status straight from the server before it shuts down
     let statuses = client.status()?;
     print!("{}", crate::store::status::render_status(&statuses));
@@ -372,21 +463,27 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// Open a store directory named either positionally (`aup status DIR`)
-/// or via `--db DIR`. Read-side commands must not conjure a store out
-/// of a typo, so the directory has to exist already.
-///
-/// A reader can land exactly between a live server checkpoint's two
-/// atomic swaps (fresh snapshot already renamed, WAL not yet truncated)
-/// and replay duplicate records; the window is two renames wide, so a
-/// couple of retries make the read reliable. The opposite interleaving
-/// yields a consistent view that is merely one checkpoint stale.
-fn open_db_arg(cli: &Cli, usage: &str) -> Result<Store> {
-    let db = cli
-        .flag("db")
+/// The store-directory argument (positional or `--db`), unopened.
+/// Read-side commands must not conjure a store out of a typo, so
+/// [`open_existing_store`] requires the directory to exist already.
+fn db_arg<'a>(cli: &'a Cli, usage: &str) -> Result<&'a str> {
+    cli.flag("db")
         .or_else(|| cli.positional.first().map(String::as_str))
-        .ok_or_else(|| AupError::Config(usage.to_string()))?;
-    open_existing_store(db)
+        .ok_or_else(|| AupError::Config(usage.to_string()))
+}
+
+/// Auto-attach for the read-side commands: a live service at
+/// `DIR/store.sock` beats the directory read (it sees the open
+/// group-commit batch and never races a checkpoint swap). `--offline`
+/// skips the attempt; a stale socket or unresponsive server silently
+/// falls back to the directory path.
+fn attach_live(cli: &Cli, db: &str) -> Option<RemoteStoreClient> {
+    if cli.flag("offline").is_some() {
+        return None;
+    }
+    let remote = service::connect_live(Path::new(db), Duration::from_millis(500))?;
+    eprintln!("(attached to live store service at {db}/{SOCKET_FILE})");
+    Some(remote)
 }
 
 /// The retrying open shared by every read-side command (status, top,
@@ -413,31 +510,114 @@ fn open_existing_store(db: &str) -> Result<Store> {
 
 /// `aup status DIR`: per-experiment progress, retry counts and best
 /// scores — the paper's §III-C tracking story as a user-facing surface.
-/// Safe against a live store (readers tolerate a torn WAL tail).
+/// Attaches to a live `aup batch --serve` server when one publishes
+/// `DIR/store.sock`; otherwise (or with `--offline`) reads the
+/// directory, which is safe against a live store (readers tolerate a
+/// torn WAL tail).
 pub fn cmd_status(cli: &Cli) -> Result<()> {
-    let mut store = open_db_arg(cli, "usage: aup status DB_DIR (or --db DIR)")?;
-    let statuses = crate::store::status::experiment_statuses(&mut store)?;
-    if statuses.is_empty() {
-        println!("no experiments in this store");
-        return Ok(());
+    let db = db_arg(cli, "usage: aup status DB_DIR (or --db DIR) [--offline]")?;
+    if let Some(remote) = attach_live(cli, db) {
+        match remote.status() {
+            Ok(statuses) => {
+                print_statuses(&statuses);
+                return Ok(());
+            }
+            Err(e) => {
+                eprintln!("live attach failed ({e}); falling back to the store directory");
+            }
+        }
     }
-    print!("{}", crate::store::status::render_status(&statuses));
+    let mut store = open_existing_store(db)?;
+    let statuses = crate::store::status::experiment_statuses(&mut store)?;
+    print_statuses(&statuses);
     Ok(())
 }
 
+fn print_statuses(statuses: &[crate::store::status::ExperimentStatus]) {
+    if statuses.is_empty() {
+        println!("no experiments in this store");
+    } else {
+        print!("{}", crate::store::status::render_status(statuses));
+    }
+}
+
 /// `aup top DIR`: currently RUNNING jobs plus the most recent scheduler
-/// transitions from the `job_event` journal.
+/// transitions from the `job_event` journal. Auto-attaches to a live
+/// server like `aup status` — the way to tail a running batch from a
+/// second shell.
 pub fn cmd_top(cli: &Cli) -> Result<()> {
-    let mut store = open_db_arg(cli, "usage: aup top DB_DIR (or --db DIR) [--events N]")?;
+    let db = db_arg(cli, "usage: aup top DB_DIR (or --db DIR) [--events N] [--offline]")?;
     let n_events: usize = match cli.flag("events") {
         Some(v) => v
             .parse()
             .map_err(|_| AupError::Config("--events must be a non-negative integer".into()))?,
         None => 10,
     };
+    if let Some(remote) = attach_live(cli, db) {
+        match remote.top(n_events) {
+            Ok((running, events)) => {
+                print!("{}", crate::store::status::render_top(&running, &events));
+                return Ok(());
+            }
+            Err(e) => {
+                eprintln!("live attach failed ({e}); falling back to the store directory");
+            }
+        }
+    }
+    let mut store = open_existing_store(db)?;
     let running = crate::store::status::running_jobs(&mut store)?;
     let events = crate::store::status::recent_events(&mut store, n_events)?;
     print!("{}", crate::store::status::render_top(&running, &events));
+    Ok(())
+}
+
+/// `aup submit DIR exp.json`: enqueue an experiment into an
+/// already-running `aup batch --serve` pool from a second process. The
+/// config is validated locally first (fast, good errors), then shipped
+/// over the socket; the serving batch gives it a scheduler submission
+/// and an eid in the SAME shared store.
+pub fn cmd_submit(cli: &Cli) -> Result<()> {
+    const USAGE: &str =
+        "usage: aup submit DB_DIR EXPERIMENT.json [--user NAME] (or --tcp ADDR EXPERIMENT.json)";
+    let tcp = cli.flag("tcp");
+    let (db, exp_path): (Option<&str>, &str) = if tcp.is_some() {
+        let exp = cli
+            .positional
+            .first()
+            .ok_or_else(|| AupError::Config(USAGE.into()))?;
+        (None, exp.as_str())
+    } else {
+        match &cli.positional[..] {
+            [db, exp] => (Some(db.as_str()), exp.as_str()),
+            _ => return Err(AupError::Config(USAGE.into())),
+        }
+    };
+    // validate locally BEFORE touching the socket: bad configs never
+    // need a server to be rejected, and the errors point at the file
+    let cfg = ExperimentConfig::from_file(Path::new(exp_path))?;
+    if !crate::proposer::ALGORITHMS.contains(&cfg.proposer.as_str()) {
+        return Err(AupError::Config(format!(
+            "unknown proposer '{}' (see 'aup algorithms')",
+            cfg.proposer
+        )));
+    }
+    let (remote, target) = match (tcp, db) {
+        (Some(addr), _) => (RemoteStoreClient::connect_tcp(addr)?, addr.to_string()),
+        (None, Some(db)) => {
+            let sock = Path::new(db).join(SOCKET_FILE);
+            let remote = RemoteStoreClient::connect_unix(&sock).map_err(|e| {
+                AupError::Config(format!(
+                    "no live server for '{db}' ({e}); \
+                     start one with 'aup batch ... --db {db} --serve'"
+                ))
+            })?;
+            (remote, db.to_string())
+        }
+        (None, None) => return Err(AupError::Config(USAGE.into())),
+    };
+    remote.set_timeout(Some(Duration::from_secs(10)))?;
+    let ack = remote.submit(cfg.raw.clone(), cli.flag("user"))?;
+    println!("submitted {exp_path} to the live run at {target}: {ack}");
     Ok(())
 }
 
@@ -653,6 +833,51 @@ mod tests {
         };
         assert_eq!(statuses.len(), 2);
         assert!(statuses.iter().all(|st| st.done() && st.n_jobs == 6));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn bool_flags_never_swallow_positionals() {
+        let cli =
+            Cli::parse(&s(&["batch", "a.json", "--serve", "b.json", "--db", "dir"])).unwrap();
+        assert_eq!(cli.flag("serve"), Some("true"));
+        assert_eq!(cli.positional, vec!["a.json", "b.json"]);
+        assert_eq!(cli.flag("db"), Some("dir"));
+        let cli = Cli::parse(&s(&["status", "dir", "--offline"])).unwrap();
+        assert_eq!(cli.flag("offline"), Some("true"));
+        assert_eq!(cli.positional, vec!["dir"]);
+    }
+
+    #[test]
+    fn serve_requires_db() {
+        let dir = temp_dir("aup-cli-serve-nodb").unwrap();
+        let p = dir.join("exp.json");
+        let text = crate::experiment::config::ExperimentConfig::template("random")
+            .to_pretty()
+            .replace("\"n_samples\": 200", "\"n_samples\": 1");
+        std::fs::write(&p, text).unwrap();
+        let cli = Cli::parse(&s(&["batch", p.to_str().unwrap(), "--serve"])).unwrap();
+        let err = cmd_batch(&cli).unwrap_err();
+        assert!(err.to_string().contains("--serve requires --db"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn submit_requires_a_live_server_and_sane_usage() {
+        let dir = temp_dir("aup-cli-submit").unwrap();
+        let exp = dir.join("exp.json");
+        std::fs::write(
+            &exp,
+            crate::experiment::config::ExperimentConfig::template("random").to_pretty(),
+        )
+        .unwrap();
+        let db = dir.join("db");
+        std::fs::create_dir_all(&db).unwrap();
+        let cli =
+            Cli::parse(&s(&["submit", db.to_str().unwrap(), exp.to_str().unwrap()])).unwrap();
+        let err = cmd_submit(&cli).unwrap_err();
+        assert!(err.to_string().contains("no live server"), "{err}");
+        assert!(cmd_submit(&Cli::parse(&s(&["submit"])).unwrap()).is_err());
         std::fs::remove_dir_all(dir).unwrap();
     }
 

@@ -396,20 +396,158 @@ pub fn run_batch(
     experiments: Vec<Experiment>,
     pool: Box<dyn ResourceManager>,
 ) -> Result<Vec<ExperimentSummary>> {
+    run_batch_serve(experiments, pool, None)
+}
+
+/// One experiment submission accepted while a batch is live — the `aup
+/// submit` path. The serving side's [`SubmitHandler`] validates the
+/// config (so the remote submitter gets parse errors synchronously)
+/// before the request reaches this channel.
+///
+/// [`SubmitHandler`]: crate::store::service::SubmitHandler
+pub struct BatchSubmit {
+    pub cfg: ExperimentConfig,
+    /// user recorded in the `user` table; `None` -> the serving
+    /// process's default user
+    pub user: Option<String>,
+    /// Two-phase acknowledgement: the batch loop answers `Ok(eid)` once
+    /// the experiment is ADMITTED (or `Err` when building it failed), so
+    /// a submitter is never told "accepted" for work that will not run.
+    /// If the loop exits first, the channel drops and the submitter gets
+    /// a disconnect error instead of a false ack. `None` = caller does
+    /// not care (tests).
+    pub ack: Option<std::sync::mpsc::Sender<std::result::Result<i64, String>>>,
+}
+
+/// The serving flavor of [`run_batch`]: same shared pool + shared store,
+/// plus a live intake channel. Each loop iteration first drains the
+/// intake — a submitted experiment gets its own proposer/tracker (an eid
+/// from the SHARED store server) and a fresh scheduler submission, then
+/// competes for the same pool slots as the initial experiments.
+///
+/// The run ends when every experiment (initial and submitted) is done
+/// and the intake has been quiet for a short linger, so a submission the
+/// service already acknowledged is not dropped by a photo-finish exit.
+/// A submitted config that fails to build (e.g. unknown proposer) is
+/// logged and skipped — one bad remote submission must not kill N live
+/// experiments.
+pub fn run_batch_serve(
+    experiments: Vec<Experiment>,
+    pool: Box<dyn ResourceManager>,
+    intake: Option<(std::sync::mpsc::Receiver<BatchSubmit>, StoreClient)>,
+) -> Result<Vec<ExperimentSummary>> {
     let start = std::time::Instant::now();
-    let mut exps = experiments;
     let mut sched = Scheduler::new(pool, ThreadDispatcher::new());
-    {
-        let mut runs: Vec<(SubId, &mut Experiment)> = Vec::new();
-        for exp in exps.iter_mut() {
-            let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
-            sched.dispatcher_mut().add_executor(sub, exp.executor.clone());
-            runs.push((sub, exp));
+    let mut slots: Vec<(SubId, Experiment)> = Vec::new();
+    for exp in experiments {
+        admit(&mut sched, &mut slots, exp);
+    }
+    loop {
+        if let Some((rx, client)) = &intake {
+            while let Ok(req) = rx.try_recv() {
+                accept_submit(&mut sched, &mut slots, client, req);
+            }
         }
-        drive(&mut runs, &mut sched)?;
+        let now = sched.now();
+        let mut all_done = true;
+        for (sub, exp) in slots.iter_mut() {
+            exp.tracker.tick(now)?;
+            exp.pump(&mut sched, *sub)?;
+            if !(exp.proposer.finished() && sched.outstanding(*sub) == 0) {
+                all_done = false;
+            }
+        }
+        if all_done {
+            match &intake {
+                None => break,
+                Some((rx, client)) => {
+                    match rx.recv_timeout(std::time::Duration::from_millis(300)) {
+                        Ok(req) => {
+                            accept_submit(&mut sched, &mut slots, client, req);
+                            continue;
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+        let events = if intake.is_some() {
+            // stay responsive to intake while jobs run: non-blocking
+            // poll with a short park instead of a blocking wait
+            let events = sched.poll(false)?;
+            if events.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                continue;
+            }
+            events
+        } else {
+            sched.poll(true)?
+        };
+        for ev in events {
+            match ev {
+                SchedEvent::Transition(t) => {
+                    if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == t.sub) {
+                        exp.on_transition(&t)?;
+                    }
+                }
+                SchedEvent::Done(done) => {
+                    if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == done.sub) {
+                        exp.on_done(&done)?;
+                    }
+                }
+            }
+        }
     }
     let wall = start.elapsed().as_secs_f64();
-    exps.iter_mut().map(|e| e.finish(wall)).collect()
+    slots.iter_mut().map(|(_, exp)| exp.finish(wall)).collect()
+}
+
+/// Register one experiment with the live scheduler.
+fn admit(
+    sched: &mut Scheduler<ThreadDispatcher>,
+    slots: &mut Vec<(SubId, Experiment)>,
+    exp: Experiment,
+) {
+    let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
+    sched.dispatcher_mut().add_executor(sub, exp.executor.clone());
+    slots.push((sub, exp));
+}
+
+/// Build and admit a submitted experiment against the SHARED store
+/// server; rejections are logged, never fatal to the batch.
+fn accept_submit(
+    sched: &mut Scheduler<ThreadDispatcher>,
+    slots: &mut Vec<(SubId, Experiment)>,
+    client: &StoreClient,
+    req: BatchSubmit,
+) {
+    let proposer = req.cfg.proposer.clone();
+    let mut options = ExperimentOptions {
+        store_client: Some(client.clone()),
+        ..ExperimentOptions::default()
+    };
+    if let Some(user) = req.user {
+        options.user = user;
+    }
+    match Experiment::new(req.cfg, options) {
+        Ok(exp) => {
+            log_info!(
+                "experiment",
+                "accepted submitted experiment eid={} ({proposer})",
+                exp.eid()
+            );
+            if let Some(ack) = req.ack {
+                let _ = ack.send(Ok(exp.eid()));
+            }
+            admit(sched, slots, exp);
+        }
+        Err(e) => {
+            log_warn!("experiment", "rejected submitted experiment ({proposer}): {e}");
+            if let Some(ack) = req.ack {
+                let _ = ack.send(Err(e.to_string()));
+            }
+        }
+    }
 }
 
 /// The deterministic flavor of [`run_batch`]: same loop, virtual clock.

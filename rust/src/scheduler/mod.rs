@@ -256,6 +256,13 @@ impl<D: Dispatcher> Scheduler<D> {
 
     /// Open a submission — one per experiment. Jobs of higher-priority
     /// submissions are placed first when the pool is contended.
+    ///
+    /// Submissions may be opened at ANY point in the scheduler's life,
+    /// including between [`Scheduler::poll`] calls while other
+    /// submissions' jobs run — this is what lets `aup submit` enqueue an
+    /// experiment into an already-running `aup batch --serve` pool. The
+    /// new submission simply joins the priority queue; nothing already
+    /// placed is disturbed.
     pub fn add_submission(&mut self, priority: i32, cfg: SchedulerConfig) -> SubId {
         let sub = self.next_sub;
         self.next_sub += 1;
@@ -1079,6 +1086,43 @@ mod tests {
             }
         }
         assert_eq!(s.pool_free(), 2);
+    }
+
+    #[test]
+    fn submission_added_mid_run_completes_alongside_live_jobs() {
+        // the `aup submit` shape: a second experiment's submission is
+        // opened while the first one's jobs are already running
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(2)), SimDispatcher::new());
+        let first = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut().add_executor(
+            first,
+            Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 50.0))),
+        );
+        for id in 0..2 {
+            s.submit(first, job(id)).unwrap();
+        }
+        // both slots busy; drain the QUEUED/RUNNING transitions
+        let evs = s.poll(false).unwrap();
+        assert!(evs
+            .iter()
+            .all(|e| matches!(e, SchedEvent::Transition(_))));
+        assert_eq!(s.pool_free(), 0);
+        // mid-run: open a LATE submission with its own executor + knobs
+        let late = s.add_submission(5, cfg_with(1, 0.5, None));
+        s.dispatcher_mut().add_executor(
+            late,
+            Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(2.0, 10.0))),
+        );
+        s.submit(late, job(0)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.state, JobState::Done);
+            let expect = if c.sub == late { 2.0 } else { 1.0 };
+            assert_eq!(c.outcome.clone().unwrap(), expect);
+        }
+        assert!(s.idle());
+        assert_eq!(s.pool_free(), 2, "no slot leaked across the late submission");
     }
 
     #[test]

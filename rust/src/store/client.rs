@@ -14,9 +14,68 @@ use std::sync::Arc;
 
 use crate::store::schema::{JobEventRow, JobRow};
 use crate::store::server::StoreCmd;
-use crate::store::status::ExperimentStatus;
+use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::wal::WalStats;
 use crate::store::QueryResult;
 use crate::util::error::{AupError, Result};
+
+/// The store-client call surface, independent of transport. Implemented
+/// by [`StoreClient`] (in-process mpsc mailbox) and by
+/// [`RemoteStoreClient`] (length-prefixed frames over a Unix or TCP
+/// socket), so code that talks to a live store — `aup status`, `aup top`,
+/// dashboards — is written once against this trait and attaches through
+/// whichever transport reaches the server.
+///
+/// Contract (both transports): mutations are fire-and-forget — they are
+/// durable once the server's next mailbox drain group-commits them;
+/// queries are synchronous and observe every mutation previously issued
+/// through the SAME handle.
+///
+/// [`RemoteStoreClient`]: crate::store::service::RemoteStoreClient
+pub trait StoreApi: Send {
+    /// Reserve `n` globally-unique store jids; returns the first of the
+    /// contiguous range.
+    fn alloc_jids(&self, n: i64) -> Result<i64>;
+    fn start_experiment(
+        &self,
+        user: &str,
+        proposer: &str,
+        exp_config: &str,
+        now: f64,
+    ) -> Result<i64>;
+    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()>;
+    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()>;
+    fn start_job_running(
+        &self,
+        jid: i64,
+        eid: i64,
+        rid: i64,
+        config: &str,
+        now: f64,
+    ) -> Result<()>;
+    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()>;
+    fn cancel_job(&self, jid: i64, now: f64) -> Result<()>;
+    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()>;
+    #[allow(clippy::too_many_arguments)]
+    fn log_job_event(
+        &self,
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: &str,
+        time: f64,
+        detail: &str,
+    ) -> Result<()>;
+    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>>;
+    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>>;
+    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>>;
+    fn sql(&self, query: &str) -> Result<QueryResult>;
+    fn status(&self) -> Result<Vec<ExperimentStatus>>;
+    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)>;
+    fn wal_stats(&self) -> Result<Option<WalStats>>;
+    fn checkpoint(&self) -> Result<()>;
+    fn tick(&self, now: f64) -> Result<()>;
+}
 
 /// Handle onto a live store server. Clones share the mailbox and the
 /// global jid allocator.
@@ -29,8 +88,13 @@ pub struct StoreClient {
     pub(crate) next_jid: Arc<AtomicI64>,
 }
 
+/// The transport-failure message shared by both client flavors: the
+/// service layer matches on it to tell "the StoreServer actor died"
+/// apart from ordinary per-request store errors.
+pub(crate) const SERVER_GONE: &str = "store server is gone (crashed or shut down)";
+
 fn gone() -> AupError {
-    AupError::Store("store server is gone (crashed or shut down)".into())
+    AupError::Store(SERVER_GONE.into())
 }
 
 impl StoreClient {
@@ -52,6 +116,12 @@ impl StoreClient {
     /// i.e. across all experiments on this server).
     pub fn alloc_jid(&self) -> i64 {
         self.next_jid.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Reserve `n` jids at once (the store service allocates ranges on
+    /// behalf of remote clients); returns the first of the range.
+    pub fn alloc_jid_range(&self, n: i64) -> i64 {
+        self.next_jid.fetch_add(n.max(0), Ordering::SeqCst)
     }
 
     /// Open an experiment (the server resolves-or-creates the user row);
@@ -151,6 +221,16 @@ impl StoreClient {
         self.request(|reply| StoreCmd::Status { reply })
     }
 
+    /// Live `aup top` view: RUNNING jobs + the last `events` transitions.
+    pub fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+        self.request(|reply| StoreCmd::Top { events, reply })
+    }
+
+    /// WAL I/O counters of the server's store (None when in-memory).
+    pub fn wal_stats(&self) -> Result<Option<WalStats>> {
+        self.request(|reply| StoreCmd::WalStats { reply })
+    }
+
     /// Force a checkpoint and wait for it.
     pub fn checkpoint(&self) -> Result<()> {
         self.request(|reply| StoreCmd::Checkpoint { reply })
@@ -160,5 +240,103 @@ impl StoreClient {
     /// interval checkpoints; cheap enough to call every scheduler poll.
     pub fn tick(&self, now: f64) -> Result<()> {
         self.send_cmd(StoreCmd::Tick { now })
+    }
+}
+
+/// The in-process transport: every trait method delegates to the
+/// inherent method of the same name (jid allocation is local and
+/// infallible — the atomic allocator never round-trips to the server).
+impl StoreApi for StoreClient {
+    fn alloc_jids(&self, n: i64) -> Result<i64> {
+        Ok(self.alloc_jid_range(n))
+    }
+
+    fn start_experiment(
+        &self,
+        user: &str,
+        proposer: &str,
+        exp_config: &str,
+        now: f64,
+    ) -> Result<i64> {
+        StoreClient::start_experiment(self, user, proposer, exp_config, now)
+    }
+
+    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
+        StoreClient::finish_experiment(self, eid, best, now)
+    }
+
+    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
+        StoreClient::start_job_queued(self, jid, eid, config, now)
+    }
+
+    fn start_job_running(
+        &self,
+        jid: i64,
+        eid: i64,
+        rid: i64,
+        config: &str,
+        now: f64,
+    ) -> Result<()> {
+        StoreClient::start_job_running(self, jid, eid, rid, config, now)
+    }
+
+    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
+        StoreClient::set_job_running(self, jid, rid)
+    }
+
+    fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
+        StoreClient::cancel_job(self, jid, now)
+    }
+
+    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
+        StoreClient::finish_job(self, jid, score, ok, now)
+    }
+
+    fn log_job_event(
+        &self,
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: &str,
+        time: f64,
+        detail: &str,
+    ) -> Result<()> {
+        StoreClient::log_job_event(self, jid, eid, attempt, state, time, detail)
+    }
+
+    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
+        StoreClient::best_job(self, eid, maximize)
+    }
+
+    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
+        StoreClient::jobs_of(self, eid)
+    }
+
+    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
+        StoreClient::job_events_of(self, eid)
+    }
+
+    fn sql(&self, query: &str) -> Result<QueryResult> {
+        StoreClient::sql(self, query)
+    }
+
+    fn status(&self) -> Result<Vec<ExperimentStatus>> {
+        StoreClient::status(self)
+    }
+
+    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+        StoreClient::top(self, events)
+    }
+
+    fn wal_stats(&self) -> Result<Option<WalStats>> {
+        StoreClient::wal_stats(self)
+    }
+
+    fn checkpoint(&self) -> Result<()> {
+        StoreClient::checkpoint(self)
+    }
+
+    fn tick(&self, now: f64) -> Result<()> {
+        StoreClient::tick(self, now)
     }
 }

@@ -22,6 +22,8 @@ pub mod schema;
 pub mod server;
 pub mod client;
 pub mod status;
+pub mod proto;
+pub mod service;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -29,9 +31,10 @@ use std::path::{Path, PathBuf};
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
-pub use client::StoreClient;
+pub use client::{StoreApi, StoreClient};
 pub use schema::{ExperimentRow, JobRow, JobStatus, ResourceRow, ResourceStatus};
 pub use server::{ServerConfig, StoreServer, StoreServerHandle};
+pub use service::{RemoteStoreClient, StoreService};
 pub use table::{Row, Table, TableSchema};
 pub use value::{ColType, Value};
 pub use wal::WalStats;

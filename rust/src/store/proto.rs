@@ -1,0 +1,708 @@
+//! Wire protocol for the cross-process store service.
+//!
+//! The in-process [`StoreCmd`] mailbox protocol cannot cross a process
+//! boundary (reply channels are mpsc `Sender`s), so `aup serve` speaks
+//! this serialized twin of it instead: every request is one JSON object
+//! tagged by `"cmd"`, every reply is `{"ok": true, "value": …}` or
+//! `{"ok": false, "error": "…"}`, and both directions are framed as a
+//! 4-byte big-endian length followed by that many bytes of UTF-8 JSON.
+//!
+//! The translation is intentionally one-to-one: a [`Request`] variant
+//! maps onto exactly one [`StoreCmd`] send (plus the few service-level
+//! verbs a remote process needs — jid allocation, experiment submission,
+//! a ping). That keeps the socket front-end a thin multiplexer: remote
+//! mutations enter the SAME server mailbox as in-process ones and are
+//! group-committed in the same WAL batches.
+//!
+//! [`StoreCmd`]: crate::store::server::StoreCmd
+
+use std::io::{Read, Write};
+
+use crate::store::schema::{JobEventRow, JobRow, JobStatus};
+use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::wal::WalStats;
+use crate::store::{QueryResult, Value};
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+/// Hard cap on one frame's payload. Far above anything the protocol
+/// legitimately produces; protects both sides from a garbage length
+/// prefix (e.g. an HTTP client connecting to the socket by mistake).
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &str) -> Result<()> {
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(AupError::Store(format!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte protocol cap",
+            bytes.len()
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF on a frame boundary (the
+/// peer closed the connection); EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<String>> {
+    let mut len_buf = [0u8; 4];
+    match r.read(&mut len_buf[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    r.read_exact(&mut len_buf[1..])?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(AupError::Store(format!(
+            "peer announced a {len}-byte frame (cap {MAX_FRAME}); not a store-service peer?"
+        )));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| AupError::Store("frame payload is not UTF-8".into()))
+}
+
+/// One remote request — the serializable twin of [`StoreCmd`], plus the
+/// service-level verbs (`Ping`, `AllocJids`, `Submit`) that only make
+/// sense across a process boundary.
+///
+/// [`StoreCmd`]: crate::store::server::StoreCmd
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness handshake; also how `aup status` decides a socket file is
+    /// live rather than stale.
+    Ping,
+    Status,
+    Top { events: usize },
+    Sql { query: String },
+    BestJob { eid: i64, maximize: bool },
+    JobsOf { eid: i64 },
+    JobEventsOf { eid: i64 },
+    WalStats,
+    /// Reserve `n` globally-unique store jids; replies the first of the
+    /// contiguous range (allocation happens on the serving side's atomic
+    /// allocator, so remote and local trackers never collide).
+    AllocJids { n: i64 },
+    /// Enqueue an experiment into the serving process's live batch run
+    /// (`aup submit`). The config is the experiment.json object.
+    Submit { config: Json, user: Option<String> },
+    StartExperiment { user: String, proposer: String, exp_config: String, now: f64 },
+    FinishExperiment { eid: i64, best: Option<f64>, now: f64 },
+    StartJobQueued { jid: i64, eid: i64, config: String, now: f64 },
+    StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
+    SetJobRunning { jid: i64, rid: i64 },
+    CancelJob { jid: i64, now: f64 },
+    FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
+    LogJobEvent { jid: i64, eid: i64, attempt: i64, state: String, time: f64, detail: String },
+    Tick { now: f64 },
+    Checkpoint,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("cmd", Json::str("ping"))]),
+            Request::Status => Json::obj(vec![("cmd", Json::str("status"))]),
+            Request::Top { events } => Json::obj(vec![
+                ("cmd", Json::str("top")),
+                ("events", Json::int(*events as i64)),
+            ]),
+            Request::Sql { query } => Json::obj(vec![
+                ("cmd", Json::str("sql")),
+                ("query", Json::str(query.clone())),
+            ]),
+            Request::BestJob { eid, maximize } => Json::obj(vec![
+                ("cmd", Json::str("best_job")),
+                ("eid", Json::int(*eid)),
+                ("maximize", Json::Bool(*maximize)),
+            ]),
+            Request::JobsOf { eid } => Json::obj(vec![
+                ("cmd", Json::str("jobs_of")),
+                ("eid", Json::int(*eid)),
+            ]),
+            Request::JobEventsOf { eid } => Json::obj(vec![
+                ("cmd", Json::str("job_events_of")),
+                ("eid", Json::int(*eid)),
+            ]),
+            Request::WalStats => Json::obj(vec![("cmd", Json::str("wal_stats"))]),
+            Request::AllocJids { n } => Json::obj(vec![
+                ("cmd", Json::str("alloc_jids")),
+                ("n", Json::int(*n)),
+            ]),
+            Request::Submit { config, user } => Json::obj(vec![
+                ("cmd", Json::str("submit")),
+                ("config", config.clone()),
+                ("user", user.clone().map_or(Json::Null, Json::str)),
+            ]),
+            Request::StartExperiment { user, proposer, exp_config, now } => Json::obj(vec![
+                ("cmd", Json::str("start_experiment")),
+                ("user", Json::str(user.clone())),
+                ("proposer", Json::str(proposer.clone())),
+                ("exp_config", Json::str(exp_config.clone())),
+                ("now", Json::num(*now)),
+            ]),
+            Request::FinishExperiment { eid, best, now } => Json::obj(vec![
+                ("cmd", Json::str("finish_experiment")),
+                ("eid", Json::int(*eid)),
+                ("best", best.map_or(Json::Null, Json::num)),
+                ("now", Json::num(*now)),
+            ]),
+            Request::StartJobQueued { jid, eid, config, now } => Json::obj(vec![
+                ("cmd", Json::str("start_job_queued")),
+                ("jid", Json::int(*jid)),
+                ("eid", Json::int(*eid)),
+                ("config", Json::str(config.clone())),
+                ("now", Json::num(*now)),
+            ]),
+            Request::StartJobRunning { jid, eid, rid, config, now } => Json::obj(vec![
+                ("cmd", Json::str("start_job_running")),
+                ("jid", Json::int(*jid)),
+                ("eid", Json::int(*eid)),
+                ("rid", Json::int(*rid)),
+                ("config", Json::str(config.clone())),
+                ("now", Json::num(*now)),
+            ]),
+            Request::SetJobRunning { jid, rid } => Json::obj(vec![
+                ("cmd", Json::str("set_job_running")),
+                ("jid", Json::int(*jid)),
+                ("rid", Json::int(*rid)),
+            ]),
+            Request::CancelJob { jid, now } => Json::obj(vec![
+                ("cmd", Json::str("cancel_job")),
+                ("jid", Json::int(*jid)),
+                ("now", Json::num(*now)),
+            ]),
+            Request::FinishJob { jid, score, ok, now } => Json::obj(vec![
+                ("cmd", Json::str("finish_job")),
+                ("jid", Json::int(*jid)),
+                ("score", score.map_or(Json::Null, Json::num)),
+                ("job_ok", Json::Bool(*ok)),
+                ("now", Json::num(*now)),
+            ]),
+            Request::LogJobEvent { jid, eid, attempt, state, time, detail } => Json::obj(vec![
+                ("cmd", Json::str("log_job_event")),
+                ("jid", Json::int(*jid)),
+                ("eid", Json::int(*eid)),
+                ("attempt", Json::int(*attempt)),
+                ("state", Json::str(state.clone())),
+                ("time", Json::num(*time)),
+                ("detail", Json::str(detail.clone())),
+            ]),
+            Request::Tick { now } => {
+                Json::obj(vec![("cmd", Json::str("tick")), ("now", Json::num(*now))])
+            }
+            Request::Checkpoint => Json::obj(vec![("cmd", Json::str("checkpoint"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let cmd = j
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Store("request missing 'cmd'".into()))?;
+        let str_field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let i64_field = |k: &str| -> Result<i64> {
+            j.get(k)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let f64_field = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let opt_f64 = |k: &str| j.get(k).filter(|v| !v.is_null()).and_then(Json::as_f64);
+        Ok(match cmd {
+            "ping" => Request::Ping,
+            "status" => Request::Status,
+            "top" => Request::Top { events: i64_field("events")?.max(0) as usize },
+            "sql" => Request::Sql { query: str_field("query")? },
+            "best_job" => Request::BestJob {
+                eid: i64_field("eid")?,
+                maximize: j.get("maximize").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "jobs_of" => Request::JobsOf { eid: i64_field("eid")? },
+            "job_events_of" => Request::JobEventsOf { eid: i64_field("eid")? },
+            "wal_stats" => Request::WalStats,
+            "alloc_jids" => Request::AllocJids { n: i64_field("n")? },
+            "submit" => Request::Submit {
+                config: j
+                    .get("config")
+                    .cloned()
+                    .ok_or_else(|| AupError::Store("'submit' request missing 'config'".into()))?,
+                user: j.get("user").and_then(Json::as_str).map(str::to_string),
+            },
+            "start_experiment" => Request::StartExperiment {
+                user: str_field("user")?,
+                proposer: str_field("proposer")?,
+                exp_config: str_field("exp_config")?,
+                now: f64_field("now")?,
+            },
+            "finish_experiment" => Request::FinishExperiment {
+                eid: i64_field("eid")?,
+                best: opt_f64("best"),
+                now: f64_field("now")?,
+            },
+            "start_job_queued" => Request::StartJobQueued {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                config: str_field("config")?,
+                now: f64_field("now")?,
+            },
+            "start_job_running" => Request::StartJobRunning {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                rid: i64_field("rid")?,
+                config: str_field("config")?,
+                now: f64_field("now")?,
+            },
+            "set_job_running" => Request::SetJobRunning {
+                jid: i64_field("jid")?,
+                rid: i64_field("rid")?,
+            },
+            "cancel_job" => Request::CancelJob { jid: i64_field("jid")?, now: f64_field("now")? },
+            "finish_job" => Request::FinishJob {
+                jid: i64_field("jid")?,
+                score: opt_f64("score"),
+                ok: j.get("job_ok").and_then(Json::as_bool).unwrap_or(false),
+                now: f64_field("now")?,
+            },
+            "log_job_event" => Request::LogJobEvent {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                attempt: i64_field("attempt")?,
+                state: str_field("state")?,
+                time: f64_field("time")?,
+                detail: str_field("detail")?,
+            },
+            "tick" => Request::Tick { now: f64_field("now")? },
+            "checkpoint" => Request::Checkpoint,
+            other => return Err(AupError::Store(format!("unknown request cmd '{other}'"))),
+        })
+    }
+}
+
+/// Build a success reply.
+pub fn reply_ok(value: Json) -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("value", value)])
+}
+
+/// Build an error reply.
+pub fn reply_err(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+/// Unwrap a reply into its value (or the peer's error).
+pub fn parse_reply(j: &Json) -> Result<Json> {
+    match j.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(j.get("value").cloned().unwrap_or(Json::Null)),
+        Some(false) => Err(AupError::Store(
+            j.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("store service error")
+                .to_string(),
+        )),
+        None => Err(AupError::Store("malformed reply (missing 'ok')".into())),
+    }
+}
+
+// -- row / view serde -------------------------------------------------------
+//
+// The typed store views cross the wire as plain JSON objects. `Option`
+// fields use JSON null; `Value` cells reuse the WAL's Value <-> Json
+// mapping (Real(1.0) and Int(1) collapse, matching SQL semantics).
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::num)
+}
+
+fn get_opt_f64(j: &Json, k: &str) -> Option<f64> {
+    j.get(k).filter(|v| !v.is_null()).and_then(Json::as_f64)
+}
+
+fn get_opt_i64(j: &Json, k: &str) -> Option<i64> {
+    j.get(k).filter(|v| !v.is_null()).and_then(Json::as_i64)
+}
+
+fn req_i64(j: &Json, k: &str, what: &str) -> Result<i64> {
+    j.get(k)
+        .and_then(Json::as_i64)
+        .ok_or_else(|| AupError::Store(format!("{what} missing '{k}'")))
+}
+
+fn req_f64(j: &Json, k: &str, what: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| AupError::Store(format!("{what} missing '{k}'")))
+}
+
+fn req_str(j: &Json, k: &str, what: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| AupError::Store(format!("{what} missing '{k}'")))
+}
+
+pub fn job_row_to_json(r: &JobRow) -> Json {
+    Json::obj(vec![
+        ("jid", Json::int(r.jid)),
+        ("eid", Json::int(r.eid)),
+        ("rid", Json::int(r.rid)),
+        ("config", Json::str(r.config.clone())),
+        ("status", Json::str(r.status.name())),
+        ("score", opt_num(r.score)),
+        ("start_time", Json::num(r.start_time)),
+        ("end_time", opt_num(r.end_time)),
+    ])
+}
+
+pub fn job_row_from_json(j: &Json) -> Result<JobRow> {
+    Ok(JobRow {
+        jid: req_i64(j, "jid", "job row")?,
+        eid: req_i64(j, "eid", "job row")?,
+        rid: req_i64(j, "rid", "job row")?,
+        config: req_str(j, "config", "job row")?,
+        status: JobStatus::parse(&req_str(j, "status", "job row")?)?,
+        score: get_opt_f64(j, "score"),
+        start_time: req_f64(j, "start_time", "job row")?,
+        end_time: get_opt_f64(j, "end_time"),
+    })
+}
+
+pub fn job_event_to_json(e: &JobEventRow) -> Json {
+    Json::obj(vec![
+        ("evid", Json::int(e.evid)),
+        ("jid", Json::int(e.jid)),
+        ("eid", Json::int(e.eid)),
+        ("attempt", Json::int(e.attempt)),
+        ("state", Json::str(e.state.clone())),
+        ("time", Json::num(e.time)),
+        ("detail", Json::str(e.detail.clone())),
+    ])
+}
+
+pub fn job_event_from_json(j: &Json) -> Result<JobEventRow> {
+    Ok(JobEventRow {
+        evid: req_i64(j, "evid", "job event")?,
+        jid: req_i64(j, "jid", "job event")?,
+        eid: req_i64(j, "eid", "job event")?,
+        attempt: req_i64(j, "attempt", "job event")?,
+        state: req_str(j, "state", "job event")?,
+        time: req_f64(j, "time", "job event")?,
+        detail: req_str(j, "detail", "job event")?,
+    })
+}
+
+pub fn running_job_to_json(r: &RunningJob) -> Json {
+    Json::obj(vec![
+        ("jid", Json::int(r.jid)),
+        ("eid", Json::int(r.eid)),
+        ("rid", Json::int(r.rid)),
+        ("start_time", Json::num(r.start_time)),
+        ("config", Json::str(r.config.clone())),
+    ])
+}
+
+pub fn running_job_from_json(j: &Json) -> Result<RunningJob> {
+    Ok(RunningJob {
+        jid: req_i64(j, "jid", "running job")?,
+        eid: req_i64(j, "eid", "running job")?,
+        rid: req_i64(j, "rid", "running job")?,
+        start_time: req_f64(j, "start_time", "running job")?,
+        config: req_str(j, "config", "running job")?,
+    })
+}
+
+pub fn status_to_json(s: &ExperimentStatus) -> Json {
+    Json::obj(vec![
+        ("eid", Json::int(s.eid)),
+        ("user", Json::str(s.user.clone())),
+        ("proposer", Json::str(s.proposer.clone())),
+        ("maximize", Json::Bool(s.maximize)),
+        ("start_time", Json::num(s.start_time)),
+        ("end_time", opt_num(s.end_time)),
+        ("n_jobs", Json::int(s.n_jobs as i64)),
+        ("pending", Json::int(s.pending as i64)),
+        ("running", Json::int(s.running as i64)),
+        ("finished", Json::int(s.finished as i64)),
+        ("failed", Json::int(s.failed as i64)),
+        ("cancelled", Json::int(s.cancelled as i64)),
+        ("retries", Json::int(s.retries as i64)),
+        ("best_score", opt_num(s.best_score)),
+        ("best_jid", s.best_jid.map_or(Json::Null, Json::int)),
+    ])
+}
+
+pub fn status_from_json(j: &Json) -> Result<ExperimentStatus> {
+    let count = |k: &str| -> Result<usize> { Ok(req_i64(j, k, "status")?.max(0) as usize) };
+    Ok(ExperimentStatus {
+        eid: req_i64(j, "eid", "status")?,
+        user: req_str(j, "user", "status")?,
+        proposer: req_str(j, "proposer", "status")?,
+        maximize: j.get("maximize").and_then(Json::as_bool).unwrap_or(false),
+        start_time: req_f64(j, "start_time", "status")?,
+        end_time: get_opt_f64(j, "end_time"),
+        n_jobs: count("n_jobs")?,
+        pending: count("pending")?,
+        running: count("running")?,
+        finished: count("finished")?,
+        failed: count("failed")?,
+        cancelled: count("cancelled")?,
+        retries: count("retries")?,
+        best_score: get_opt_f64(j, "best_score"),
+        best_jid: get_opt_i64(j, "best_jid"),
+    })
+}
+
+pub fn wal_stats_to_json(s: &Option<WalStats>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => Json::obj(vec![
+            ("appends", Json::int(s.appends as i64)),
+            ("records", Json::int(s.records as i64)),
+            ("checkpoints", Json::int(s.checkpoints as i64)),
+        ]),
+    }
+}
+
+pub fn wal_stats_from_json(j: &Json) -> Result<Option<WalStats>> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    Ok(Some(WalStats {
+        appends: req_i64(j, "appends", "wal stats")?.max(0) as u64,
+        records: req_i64(j, "records", "wal stats")?.max(0) as u64,
+        checkpoints: req_i64(j, "checkpoints", "wal stats")?.max(0) as u64,
+    }))
+}
+
+pub fn query_result_to_json(r: &QueryResult) -> Json {
+    match r {
+        QueryResult::Unit => Json::obj(vec![("kind", Json::str("unit"))]),
+        QueryResult::Affected(n) => Json::obj(vec![
+            ("kind", Json::str("affected")),
+            ("n", Json::int(*n as i64)),
+        ]),
+        QueryResult::Rows { cols, rows } => Json::obj(vec![
+            ("kind", Json::str("rows")),
+            ("cols", Json::arr(cols.iter().map(|c| Json::str(c.clone())).collect())),
+            (
+                "rows",
+                Json::arr(
+                    rows.iter()
+                        .map(|r| Json::arr(r.iter().map(Value::to_json).collect()))
+                        .collect(),
+                ),
+            ),
+        ]),
+    }
+}
+
+pub fn query_result_from_json(j: &Json) -> Result<QueryResult> {
+    match j.get("kind").and_then(Json::as_str) {
+        Some("unit") => Ok(QueryResult::Unit),
+        Some("affected") => Ok(QueryResult::Affected(
+            req_i64(j, "n", "query result")?.max(0) as usize
+        )),
+        Some("rows") => {
+            let cols = j
+                .get("cols")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| AupError::Store("query result missing 'cols'".into()))?
+                .iter()
+                .map(|c| {
+                    c.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| AupError::Store("non-string column name".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let rows = j
+                .get("rows")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| AupError::Store("query result missing 'rows'".into()))?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| AupError::Store("non-array result row".into()))?
+                        .iter()
+                        .map(Value::from_json)
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(QueryResult::Rows { cols, rows })
+        }
+        _ => Err(AupError::Store("query result missing 'kind'".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "hello").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "wörld").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("hello"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(""));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("wörld"));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF on boundary");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "hello").unwrap();
+        buf.truncate(buf.len() - 2); // cut inside the payload
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err(), "mid-frame EOF must error");
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected() {
+        // an HTTP GET line read as a length prefix must not trigger a
+        // gigabyte allocation
+        let mut r = std::io::Cursor::new(b"GET / HTTP/1.1\r\n".to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        let all = vec![
+            Request::Ping,
+            Request::Status,
+            Request::Top { events: 12 },
+            Request::Sql { query: "SELECT * FROM job".into() },
+            Request::BestJob { eid: 3, maximize: true },
+            Request::JobsOf { eid: 0 },
+            Request::JobEventsOf { eid: 1 },
+            Request::WalStats,
+            Request::AllocJids { n: 8 },
+            Request::Submit {
+                config: Json::obj(vec![("proposer", Json::str("random"))]),
+                user: Some("alice".into()),
+            },
+            Request::Submit { config: Json::Null, user: None },
+            Request::StartExperiment {
+                user: "bob".into(),
+                proposer: "tpe".into(),
+                exp_config: "{}".into(),
+                now: 1.5,
+            },
+            Request::FinishExperiment { eid: 2, best: Some(0.5), now: 9.0 },
+            Request::FinishExperiment { eid: 2, best: None, now: 9.0 },
+            Request::StartJobQueued { jid: 1, eid: 0, config: "{}".into(), now: 0.5 },
+            Request::StartJobRunning { jid: 1, eid: 0, rid: 4, config: "{}".into(), now: 0.5 },
+            Request::SetJobRunning { jid: 1, rid: 2 },
+            Request::CancelJob { jid: 1, now: 3.0 },
+            Request::FinishJob { jid: 1, score: Some(0.25), ok: true, now: 4.0 },
+            Request::FinishJob { jid: 1, score: None, ok: false, now: 4.0 },
+            Request::LogJobEvent {
+                jid: 1,
+                eid: 0,
+                attempt: 2,
+                state: "BACKOFF".into(),
+                time: 2.5,
+                detail: "attempt 2 failed: boom".into(),
+            },
+            Request::Tick { now: 60.0 },
+            Request::Checkpoint,
+        ];
+        for req in all {
+            let j = req.to_json();
+            let back = Request::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let ok = reply_ok(Json::int(7));
+        assert_eq!(parse_reply(&ok).unwrap(), Json::int(7));
+        let err = reply_err("boom");
+        assert!(parse_reply(&err).unwrap_err().to_string().contains("boom"));
+        assert!(parse_reply(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn row_and_view_serde_roundtrip() {
+        let job = JobRow {
+            jid: 5,
+            eid: 1,
+            rid: -1,
+            config: r#"{"x":1}"#.into(),
+            status: JobStatus::Pending,
+            score: None,
+            start_time: 1.0,
+            end_time: None,
+        };
+        assert_eq!(job_row_from_json(&job_row_to_json(&job)).unwrap(), job);
+        let ev = JobEventRow {
+            evid: 9,
+            jid: 5,
+            eid: 1,
+            attempt: 1,
+            state: "RUNNING".into(),
+            time: 2.0,
+            detail: "attempt 1 on cpu:0".into(),
+        };
+        assert_eq!(job_event_from_json(&job_event_to_json(&ev)).unwrap(), ev);
+        let run = RunningJob { jid: 5, eid: 1, rid: 0, start_time: 2.0, config: "{}".into() };
+        assert_eq!(running_job_from_json(&running_job_to_json(&run)).unwrap(), run);
+        let st = ExperimentStatus {
+            eid: 1,
+            user: "alice".into(),
+            proposer: "random".into(),
+            maximize: false,
+            start_time: 0.0,
+            end_time: Some(9.0),
+            n_jobs: 4,
+            pending: 0,
+            running: 0,
+            finished: 3,
+            failed: 1,
+            cancelled: 0,
+            retries: 2,
+            best_score: Some(0.125),
+            best_jid: Some(2),
+        };
+        assert_eq!(status_from_json(&status_to_json(&st)).unwrap(), st);
+        let ws = Some(WalStats { appends: 3, records: 40, checkpoints: 1 });
+        assert_eq!(wal_stats_from_json(&wal_stats_to_json(&ws)).unwrap(), ws);
+        assert_eq!(wal_stats_from_json(&wal_stats_to_json(&None)).unwrap(), None);
+    }
+
+    #[test]
+    fn query_result_serde_roundtrip() {
+        for r in [
+            QueryResult::Unit,
+            QueryResult::Affected(3),
+            QueryResult::Rows {
+                cols: vec!["jid".into(), "score".into(), "note".into()],
+                rows: vec![
+                    vec![Value::Int(1), Value::Real(0.5), Value::Text("a".into())],
+                    vec![Value::Int(2), Value::Null, Value::Text("it's".into())],
+                ],
+            },
+        ] {
+            let j = query_result_to_json(&r);
+            let back = query_result_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+}

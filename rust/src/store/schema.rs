@@ -132,9 +132,14 @@ pub fn init_schema(store: &mut Store) -> Result<()> {
     Ok(())
 }
 
-fn next_id(store: &mut Store, table: &str, pk: &str) -> Result<i64> {
-    let r = store.execute(&format!("SELECT {pk} FROM {table} ORDER BY {pk} DESC LIMIT 1"))?;
-    Ok(r.scalar().and_then(Value::as_i64).map_or(0, |m| m + 1))
+/// O(1) id allocation off the table's integer-pk high-water mark (ROADMAP
+/// "Scale": the `job_event` journal allocated ids with a full-table scan
+/// + sort PER INSERT — at 10^5 events that dominated every group-commit
+/// batch). Within a process the mark is monotonic across deletes, so a
+/// live run never reissues an id it handed out; allocation after a
+/// reopen matches the old SELECT-max behavior (see `Table::max_int_pk`).
+fn next_id(store: &mut Store, table: &str) -> Result<i64> {
+    Ok(store.table(table)?.max_int_pk().map_or(0, |m| m + 1))
 }
 
 /// Next free primary key in the `job` table. The tracker allocates store
@@ -142,7 +147,7 @@ fn next_id(store: &mut Store, table: &str, pk: &str) -> Result<i64> {
 /// proposer `job_id`s restart at 0 per experiment and would collide as
 /// primary keys.
 pub fn next_job_id(store: &mut Store) -> Result<i64> {
-    next_id(store, "job", "jid")
+    next_id(store, "job")
 }
 
 /// Look up a user by name (the StoreServer reuses rows across
@@ -154,7 +159,7 @@ pub fn find_user(store: &mut Store, name: &str) -> Result<Option<i64>> {
 
 /// Register a user (id allocated).
 pub fn add_user(store: &mut Store, name: &str) -> Result<i64> {
-    let uid = next_id(store, "user", "uid")?;
+    let uid = next_id(store, "user")?;
     store.execute(&format!(
         "INSERT INTO user (uid, name, permission) VALUES ({uid}, {}, 1)",
         quote(name)
@@ -164,7 +169,7 @@ pub fn add_user(store: &mut Store, name: &str) -> Result<i64> {
 
 /// Register a resource (paper: cpu/gpu/node/aws entries written by `aup setup`).
 pub fn add_resource(store: &mut Store, rtype: &str, name: &str) -> Result<i64> {
-    let rid = next_id(store, "resource", "rid")?;
+    let rid = next_id(store, "resource")?;
     store.execute(&format!(
         "INSERT INTO resource (rid, type, name, status) VALUES ({rid}, {}, {}, 'FREE')",
         quote(rtype),
@@ -189,7 +194,7 @@ pub fn start_experiment(
     exp_config_json: &str,
     now: f64,
 ) -> Result<i64> {
-    let eid = next_id(store, "experiment", "eid")?;
+    let eid = next_id(store, "experiment")?;
     store.execute(&format!(
         "INSERT INTO experiment (eid, uid, proposer, exp_config, start_time) \
          VALUES ({eid}, {uid}, {}, {}, {now})",
@@ -338,7 +343,7 @@ pub fn log_job_event(
     time: f64,
     detail: &str,
 ) -> Result<i64> {
-    let evid = next_id(store, "job_event", "evid")?;
+    let evid = next_id(store, "job_event")?;
     store.execute(&format!(
         "INSERT INTO job_event (evid, jid, eid, attempt, state, time, detail) \
          VALUES ({evid}, {jid}, {eid}, {attempt}, {}, {time}, {})",

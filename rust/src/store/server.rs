@@ -32,7 +32,8 @@ use std::thread::JoinHandle;
 use crate::log_warn;
 use crate::store::client::StoreClient;
 use crate::store::schema::{self, JobEventRow, JobRow};
-use crate::store::status::{self, ExperimentStatus};
+use crate::store::status::{self, ExperimentStatus, RunningJob};
+use crate::store::wal::WalStats;
 use crate::store::{QueryResult, Store};
 use crate::util::error::{AupError, Result};
 
@@ -64,6 +65,14 @@ pub enum StoreCmd {
     Sql { query: String, reply: Sender<Result<QueryResult>> },
     /// Live per-experiment bookkeeping summary (`aup status` / `aup top`).
     Status { reply: Sender<Result<Vec<ExperimentStatus>>> },
+    /// Live `aup top` view: RUNNING jobs + the last `events` transitions.
+    Top {
+        events: usize,
+        reply: Sender<Result<(Vec<RunningJob>, Vec<JobEventRow>)>>,
+    },
+    /// WAL I/O counters of the owned store (None for in-memory stores).
+    /// Lets remote clients and tests observe group-commit batching live.
+    WalStats { reply: Sender<Result<Option<WalStats>>> },
     /// Force a checkpoint now.
     Checkpoint { reply: Sender<Result<()>> },
     /// Clock heartbeat from the driving loop; `now` is Dispatcher-clock
@@ -292,6 +301,17 @@ impl StoreServer {
             }
             StoreCmd::Status { reply } => {
                 let _ = reply.send(status::experiment_statuses(&mut self.store));
+            }
+            StoreCmd::Top { events, reply } => {
+                let res = match status::running_jobs(&mut self.store) {
+                    Ok(running) => status::recent_events(&mut self.store, events)
+                        .map(|events| (running, events)),
+                    Err(e) => Err(e),
+                };
+                let _ = reply.send(res);
+            }
+            StoreCmd::WalStats { reply } => {
+                let _ = reply.send(Ok(self.store.wal_stats()));
             }
             StoreCmd::Checkpoint { reply } => {
                 let res = self.checkpoint_now();

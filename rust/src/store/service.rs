@@ -1,0 +1,787 @@
+//! Cross-process store service: the socket front-end on the [`StoreCmd`]
+//! protocol.
+//!
+//! `StoreServer` (the actor) is in-process: its mailbox protocol uses
+//! mpsc reply channels that cannot cross a process boundary, so until
+//! this module a live `aup status` had to read the store DIRECTORY
+//! behind the server's back. Following the long-lived-service design of
+//! Tune and CHOPT (experiment state behind a service that CLIs and
+//! dashboards attach to), this module puts a listener in front of the
+//! live server:
+//!
+//! * [`StoreService`] accepts N concurrent clients on a Unix-domain
+//!   socket (published at `DIR/store.sock` by `aup batch --serve`) or a
+//!   TCP socket (`--tcp HOST:PORT`); each connection gets a handler
+//!   thread holding a cloned [`StoreClient`];
+//! * requests/replies are length-prefixed JSON frames ([`super::proto`]);
+//!   every wire mutation is translated into the SAME mailbox send an
+//!   in-process tracker would make, so remote mutations ride the same
+//!   group-commit WAL batches as local ones;
+//! * [`RemoteStoreClient`] is the connecting side — it implements
+//!   [`StoreApi`] so `aup status` / `aup top` render a live server and a
+//!   reopened directory with the same code;
+//! * experiment submission (`aup submit`) is a service-level verb: the
+//!   serving process installs a [`SubmitHandler`] that validates the
+//!   config and feeds the batch loop's intake channel.
+//!
+//! Failure contract: if the StoreServer actor dies (crash, poisoned
+//! I/O), a pending request is answered with the server-gone error and
+//! the connection is then CLOSED, so a remote reader observes one clean
+//! error/disconnect — never a hang — and can fall back to reading the
+//! store directory, which after reopen shows the recovered
+//! at-most-one-open-batch-lost state.
+//!
+//! [`StoreCmd`]: crate::store::server::StoreCmd
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::store::client::{StoreApi, StoreClient, SERVER_GONE};
+use crate::store::proto::{self, Request};
+use crate::store::schema::{JobEventRow, JobRow};
+use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::wal::WalStats;
+use crate::store::QueryResult;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+use crate::{log_debug, log_warn};
+
+/// Socket file name published inside the store directory.
+pub const SOCKET_FILE: &str = "store.sock";
+
+/// Largest jid range one `alloc_jids` request may reserve (a garbage
+/// remote request must not burn the 63-bit jid space).
+const MAX_JID_RANGE: i64 = 1 << 20;
+
+/// An experiment submission received over the wire (`aup submit`).
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    /// The experiment.json object, unparsed (the handler validates).
+    pub config: Json,
+    pub user: Option<String>,
+}
+
+/// Installed by the serving process to accept [`Request::Submit`]s:
+/// validates the config and hands it to the live batch loop. The
+/// returned JSON is the reply value the submitter sees; an `Err` is
+/// reported to the submitter verbatim (e.g. a config parse error).
+pub type SubmitHandler = Arc<dyn Fn(SubmitRequest) -> Result<Json> + Send + Sync>;
+
+// -- the serving side -------------------------------------------------------
+
+enum AnyListener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+/// A running listener. Dropping (or [`StoreService::shutdown`]) stops
+/// the accept loop and removes the socket file; connections already
+/// accepted drain naturally as their peers disconnect.
+pub struct StoreService {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+    sock_path: Option<PathBuf>,
+    local_addr: Option<SocketAddr>,
+}
+
+impl StoreService {
+    /// Serve the store at a Unix-domain socket path (conventionally
+    /// `DIR/store.sock`, see [`SOCKET_FILE`]). A stale socket file from
+    /// a killed process is replaced; a LIVE one (something accepts and
+    /// answers) is an error — two servers must not share a store.
+    pub fn serve_unix(
+        sock_path: &Path,
+        client: StoreClient,
+        submit: Option<SubmitHandler>,
+    ) -> Result<StoreService> {
+        if sock_path.exists() {
+            if UnixStream::connect(sock_path).is_ok() {
+                return Err(AupError::Store(format!(
+                    "another live store service already serves {}",
+                    sock_path.display()
+                )));
+            }
+            // stale file from a killed process: safe to replace
+            std::fs::remove_file(sock_path)?;
+        }
+        let listener = UnixListener::bind(sock_path).map_err(|e| {
+            AupError::Store(format!("cannot bind {}: {e}", sock_path.display()))
+        })?;
+        listener.set_nonblocking(true)?;
+        StoreService::start(
+            AnyListener::Unix(listener),
+            Some(sock_path.to_path_buf()),
+            None,
+            client,
+            submit,
+        )
+    }
+
+    /// Serve the store over TCP (`aup batch --tcp HOST:PORT`; pass port
+    /// 0 to let the OS pick — [`StoreService::local_addr`] has the
+    /// bound address). The protocol is identical to the Unix flavor.
+    pub fn serve_tcp(
+        addr: &str,
+        client: StoreClient,
+        submit: Option<SubmitHandler>,
+    ) -> Result<StoreService> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| AupError::Store(format!("cannot bind tcp {addr}: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr().ok();
+        StoreService::start(AnyListener::Tcp(listener), None, local, client, submit)
+    }
+
+    fn start(
+        listener: AnyListener,
+        sock_path: Option<PathBuf>,
+        local_addr: Option<SocketAddr>,
+        client: StoreClient,
+        submit: Option<SubmitHandler>,
+    ) -> Result<StoreService> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("aup-store-service".into())
+            .spawn(move || accept_loop(listener, stop2, client, submit))?;
+        Ok(StoreService { stop, join: Some(join), sock_path, local_addr })
+    }
+
+    /// Bound address of a TCP service.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// Socket path of a Unix service.
+    pub fn sock_path(&self) -> Option<&Path> {
+        self.sock_path.as_deref()
+    }
+
+    /// Stop accepting and remove the socket file.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+        if let Some(path) = self.sock_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for StoreService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Accept until stopped. The listener is non-blocking so shutdown never
+/// needs a wake-up connection; 10ms polls are invisible next to job
+/// runtimes.
+fn accept_loop(
+    listener: AnyListener,
+    stop: Arc<AtomicBool>,
+    client: StoreClient,
+    submit: Option<SubmitHandler>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let accepted: std::io::Result<Box<dyn Conn>> = match &listener {
+            AnyListener::Unix(l) => l.accept().map(|(s, _)| Box::new(s) as Box<dyn Conn>),
+            AnyListener::Tcp(l) => l.accept().map(|(s, _)| Box::new(s) as Box<dyn Conn>),
+        };
+        match accepted {
+            Ok(conn) => {
+                let client = client.clone();
+                let submit = submit.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("aup-store-conn".into())
+                    .spawn(move || serve_conn(conn, client, submit));
+                if let Err(e) = spawned {
+                    log_warn!("store::service", "cannot spawn connection handler: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log_warn!("store::service", "accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Read/write both socket flavors through one object-safe surface.
+trait Conn: Read + Write + Send {
+    fn set_blocking_with_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()>;
+}
+
+impl Conn for UnixStream {
+    fn set_blocking_with_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.set_nonblocking(false)?;
+        self.set_read_timeout(timeout)
+    }
+}
+
+impl Conn for TcpStream {
+    fn set_blocking_with_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.set_nonblocking(false)?;
+        self.set_read_timeout(timeout)
+    }
+}
+
+/// One connection: sequential request/reply frames until the peer
+/// disconnects or the StoreServer actor dies.
+fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, submit: Option<SubmitHandler>) {
+    // accepted sockets inherit the listener's non-blocking flag; handler
+    // threads want plain blocking reads (no timeout: an idle attached
+    // dashboard is legitimate)
+    if let Err(e) = conn.set_blocking_with_timeout(None) {
+        log_warn!("store::service", "cannot configure connection: {e}");
+        return;
+    }
+    loop {
+        let payload = match proto::read_frame(&mut conn) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // peer closed cleanly
+            Err(e) => {
+                log_debug!("store::service", "dropping connection: {e}");
+                return;
+            }
+        };
+        let parsed = Json::parse(&payload).and_then(|j| Request::from_json(&j));
+        let (reply, keep_alive) = match parsed {
+            Ok(req) => handle_request(&client, &submit, req),
+            Err(e) => (proto::reply_err(&e.to_string()), true),
+        };
+        if proto::write_frame(&mut conn, &reply.to_string()).is_err() {
+            return;
+        }
+        if !keep_alive {
+            // the actor is gone: close so the peer sees a clean
+            // disconnect instead of retrying into a dead mailbox
+            return;
+        }
+    }
+}
+
+/// Translate one wire request into client calls. Returns the reply and
+/// whether the connection should stay open.
+fn handle_request(
+    client: &StoreClient,
+    submit: &Option<SubmitHandler>,
+    req: Request,
+) -> (Json, bool) {
+    let res: Result<Json> = match req {
+        Request::Ping => Ok(Json::str("pong")),
+        Request::Status => client.status().map(|v| {
+            Json::arr(v.iter().map(proto::status_to_json).collect())
+        }),
+        Request::Top { events } => client.top(events).map(|(running, events)| {
+            Json::obj(vec![
+                (
+                    "running",
+                    Json::arr(running.iter().map(proto::running_job_to_json).collect()),
+                ),
+                (
+                    "events",
+                    Json::arr(events.iter().map(proto::job_event_to_json).collect()),
+                ),
+            ])
+        }),
+        Request::Sql { query } => {
+            // remote SQL is read-only: arbitrary mutations would bypass
+            // the typed protocol on a store a live run owns
+            match crate::store::sql::parse(&query) {
+                Ok(crate::store::sql::Stmt::Select { .. }) => {
+                    client.sql(&query).map(|r| proto::query_result_to_json(&r))
+                }
+                Ok(_) => Err(AupError::Store(
+                    "remote sql is read-only: only SELECT is allowed".into(),
+                )),
+                Err(e) => Err(e),
+            }
+        }
+        Request::BestJob { eid, maximize } => client
+            .best_job(eid, maximize)
+            .map(|o| o.map_or(Json::Null, |r| proto::job_row_to_json(&r))),
+        Request::JobsOf { eid } => client
+            .jobs_of(eid)
+            .map(|v| Json::arr(v.iter().map(proto::job_row_to_json).collect())),
+        Request::JobEventsOf { eid } => client
+            .job_events_of(eid)
+            .map(|v| Json::arr(v.iter().map(proto::job_event_to_json).collect())),
+        Request::WalStats => client.wal_stats().map(|s| proto::wal_stats_to_json(&s)),
+        Request::AllocJids { n } => {
+            if n <= 0 || n > MAX_JID_RANGE {
+                Err(AupError::Store(format!(
+                    "alloc_jids: n must be in 1..={MAX_JID_RANGE}, got {n}"
+                )))
+            } else {
+                Ok(Json::int(client.alloc_jid_range(n)))
+            }
+        }
+        Request::Submit { config, user } => match submit {
+            None => Err(AupError::Store(
+                "this store service does not accept experiment submissions \
+                 (the serving process is not running a batch intake)"
+                    .into(),
+            )),
+            Some(handler) => (handler.as_ref())(SubmitRequest { config, user }),
+        },
+        Request::StartExperiment { user, proposer, exp_config, now } => client
+            .start_experiment(&user, &proposer, &exp_config, now)
+            .map(Json::int),
+        Request::FinishExperiment { eid, best, now } => {
+            client.finish_experiment(eid, best, now).map(|()| Json::Null)
+        }
+        Request::StartJobQueued { jid, eid, config, now } => {
+            client.start_job_queued(jid, eid, &config, now).map(|()| Json::Null)
+        }
+        Request::StartJobRunning { jid, eid, rid, config, now } => client
+            .start_job_running(jid, eid, rid, &config, now)
+            .map(|()| Json::Null),
+        Request::SetJobRunning { jid, rid } => {
+            client.set_job_running(jid, rid).map(|()| Json::Null)
+        }
+        Request::CancelJob { jid, now } => client.cancel_job(jid, now).map(|()| Json::Null),
+        Request::FinishJob { jid, score, ok, now } => {
+            client.finish_job(jid, score, ok, now).map(|()| Json::Null)
+        }
+        Request::LogJobEvent { jid, eid, attempt, state, time, detail } => client
+            .log_job_event(jid, eid, attempt, &state, time, &detail)
+            .map(|()| Json::Null),
+        Request::Tick { now } => client.tick(now).map(|()| Json::Null),
+        Request::Checkpoint => client.checkpoint().map(|()| Json::Null),
+    };
+    match res {
+        Ok(v) => (proto::reply_ok(v), true),
+        Err(e) => {
+            let msg = e.to_string();
+            let actor_gone = msg.contains(SERVER_GONE);
+            (proto::reply_err(&msg), !actor_gone)
+        }
+    }
+}
+
+// -- the connecting side ----------------------------------------------------
+
+/// Client half of the wire protocol: connects to a live service and
+/// implements [`StoreApi`], so everything written against the trait
+/// (status/top rendering, trackers, dashboards) works transparently over
+/// the socket. One request is in flight at a time per client (framed
+/// request/reply); clone-free — open a second connection for a second
+/// thread.
+pub struct RemoteStoreClient {
+    conn: Mutex<Box<dyn Conn>>,
+    /// printable peer (socket path or address), for error messages
+    peer: String,
+    /// set on any transport-level failure (write error, EOF, timeout,
+    /// unparseable frame): the request/reply framing may be desynced —
+    /// a late reply to request N must never be handed to request N+1 —
+    /// so every later request fails fast instead of reading stale frames
+    poisoned: std::sync::atomic::AtomicBool,
+}
+
+fn disconnected(peer: &str) -> AupError {
+    AupError::Store(format!(
+        "store service at {peer} disconnected (live server gone?)"
+    ))
+}
+
+impl RemoteStoreClient {
+    /// Connect to a Unix-domain service socket.
+    pub fn connect_unix(sock_path: &Path) -> Result<RemoteStoreClient> {
+        let stream = UnixStream::connect(sock_path).map_err(|e| {
+            AupError::Store(format!("cannot connect to {}: {e}", sock_path.display()))
+        })?;
+        Ok(RemoteStoreClient {
+            conn: Mutex::new(Box::new(stream)),
+            peer: sock_path.display().to_string(),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    /// Connect to a TCP service.
+    pub fn connect_tcp(addr: &str) -> Result<RemoteStoreClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| AupError::Store(format!("cannot connect to tcp {addr}: {e}")))?;
+        Ok(RemoteStoreClient {
+            conn: Mutex::new(Box::new(stream)),
+            peer: addr.to_string(),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    /// Bound the wait on one reply (protects `aup status` from a wedged
+    /// serving process). `None` = wait forever.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        let conn = self.conn.lock().map_err(|_| disconnected(&self.peer))?;
+        conn.set_blocking_with_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Liveness handshake (also what auto-attach uses to rule out a
+    /// stale socket file).
+    pub fn ping(&self) -> Result<()> {
+        let v = self.request(Request::Ping)?;
+        if v.as_str() == Some("pong") {
+            Ok(())
+        } else {
+            Err(AupError::Store(format!("unexpected ping reply: {v:?}")))
+        }
+    }
+
+    /// Submit an experiment.json object into the serving process's live
+    /// batch run; returns the service's acknowledgement text.
+    pub fn submit(&self, config: Json, user: Option<&str>) -> Result<String> {
+        let v = self.request(Request::Submit { config, user: user.map(str::to_string) })?;
+        Ok(v.as_str().unwrap_or("accepted").to_string())
+    }
+
+    /// One framed request/reply round trip. Any transport failure
+    /// poisons the client (see the `poisoned` field): per-request store
+    /// errors reported by the peer do NOT — the stream is still in sync.
+    fn request(&self, req: Request) -> Result<Json> {
+        use std::sync::atomic::Ordering;
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(disconnected(&self.peer));
+        }
+        let poison = || {
+            self.poisoned.store(true, Ordering::SeqCst);
+            disconnected(&self.peer)
+        };
+        let mut conn = self.conn.lock().map_err(|_| disconnected(&self.peer))?;
+        proto::write_frame(&mut *conn, &req.to_json().to_string()).map_err(|_| poison())?;
+        match proto::read_frame(&mut *conn) {
+            Ok(Some(payload)) => match Json::parse(&payload) {
+                Ok(reply) => proto::parse_reply(&reply),
+                Err(_) => Err(poison()),
+            },
+            Ok(None) => Err(poison()),
+            Err(_) => Err(poison()),
+        }
+    }
+
+    fn request_unit(&self, req: Request) -> Result<()> {
+        self.request(req).map(|_| ())
+    }
+}
+
+impl StoreApi for RemoteStoreClient {
+    fn alloc_jids(&self, n: i64) -> Result<i64> {
+        self.request(Request::AllocJids { n })?
+            .as_i64()
+            .ok_or_else(|| AupError::Store("alloc_jids: non-integer reply".into()))
+    }
+
+    fn start_experiment(
+        &self,
+        user: &str,
+        proposer: &str,
+        exp_config: &str,
+        now: f64,
+    ) -> Result<i64> {
+        self.request(Request::StartExperiment {
+            user: user.to_string(),
+            proposer: proposer.to_string(),
+            exp_config: exp_config.to_string(),
+            now,
+        })?
+        .as_i64()
+        .ok_or_else(|| AupError::Store("start_experiment: non-integer reply".into()))
+    }
+
+    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
+        self.request_unit(Request::FinishExperiment { eid, best, now })
+    }
+
+    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
+        self.request_unit(Request::StartJobQueued {
+            jid,
+            eid,
+            config: config.to_string(),
+            now,
+        })
+    }
+
+    fn start_job_running(
+        &self,
+        jid: i64,
+        eid: i64,
+        rid: i64,
+        config: &str,
+        now: f64,
+    ) -> Result<()> {
+        self.request_unit(Request::StartJobRunning {
+            jid,
+            eid,
+            rid,
+            config: config.to_string(),
+            now,
+        })
+    }
+
+    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
+        self.request_unit(Request::SetJobRunning { jid, rid })
+    }
+
+    fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
+        self.request_unit(Request::CancelJob { jid, now })
+    }
+
+    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
+        self.request_unit(Request::FinishJob { jid, score, ok, now })
+    }
+
+    fn log_job_event(
+        &self,
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: &str,
+        time: f64,
+        detail: &str,
+    ) -> Result<()> {
+        self.request_unit(Request::LogJobEvent {
+            jid,
+            eid,
+            attempt,
+            state: state.to_string(),
+            time,
+            detail: detail.to_string(),
+        })
+    }
+
+    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
+        let v = self.request(Request::BestJob { eid, maximize })?;
+        if v.is_null() {
+            Ok(None)
+        } else {
+            proto::job_row_from_json(&v).map(Some)
+        }
+    }
+
+    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
+        self.request(Request::JobsOf { eid })?
+            .as_arr()
+            .ok_or_else(|| AupError::Store("jobs_of: non-array reply".into()))?
+            .iter()
+            .map(proto::job_row_from_json)
+            .collect()
+    }
+
+    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
+        self.request(Request::JobEventsOf { eid })?
+            .as_arr()
+            .ok_or_else(|| AupError::Store("job_events_of: non-array reply".into()))?
+            .iter()
+            .map(proto::job_event_from_json)
+            .collect()
+    }
+
+    fn sql(&self, query: &str) -> Result<QueryResult> {
+        let v = self.request(Request::Sql { query: query.to_string() })?;
+        proto::query_result_from_json(&v)
+    }
+
+    fn status(&self) -> Result<Vec<ExperimentStatus>> {
+        self.request(Request::Status)?
+            .as_arr()
+            .ok_or_else(|| AupError::Store("status: non-array reply".into()))?
+            .iter()
+            .map(proto::status_from_json)
+            .collect()
+    }
+
+    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+        let v = self.request(Request::Top { events })?;
+        let running = v
+            .get("running")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| AupError::Store("top: missing 'running'".into()))?
+            .iter()
+            .map(proto::running_job_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let events = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| AupError::Store("top: missing 'events'".into()))?
+            .iter()
+            .map(proto::job_event_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((running, events))
+    }
+
+    fn wal_stats(&self) -> Result<Option<WalStats>> {
+        let v = self.request(Request::WalStats)?;
+        proto::wal_stats_from_json(&v)
+    }
+
+    fn checkpoint(&self) -> Result<()> {
+        self.request_unit(Request::Checkpoint)
+    }
+
+    fn tick(&self, now: f64) -> Result<()> {
+        self.request_unit(Request::Tick { now })
+    }
+}
+
+/// Auto-attach for `aup status DIR` / `aup top DIR`: `Some(client)` when
+/// `DIR/store.sock` exists AND a live service answers a ping within
+/// `timeout`; `None` for no socket, a stale socket file (bound by a
+/// since-killed process), or an unresponsive peer — callers then fall
+/// back to reading the directory.
+pub fn connect_live(db_dir: &Path, timeout: Duration) -> Option<RemoteStoreClient> {
+    let sock = db_dir.join(SOCKET_FILE);
+    if !sock.exists() {
+        return None;
+    }
+    let client = RemoteStoreClient::connect_unix(&sock).ok()?;
+    client.set_timeout(Some(timeout)).ok()?;
+    client.ping().ok()?;
+    // pings answered: give real queries a more generous bound
+    client.set_timeout(Some(timeout.max(Duration::from_secs(10)))).ok()?;
+    Some(client)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::server::{ServerConfig, StoreServer};
+    use crate::store::Store;
+    use crate::util::fsutil::temp_dir;
+
+    fn spawn_served(
+        dir: &Path,
+    ) -> (crate::store::StoreServerHandle, StoreClient, StoreService, PathBuf) {
+        let (handle, client) =
+            StoreServer::spawn(Store::open(dir).unwrap(), ServerConfig::default()).unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        (handle, client, service, sock)
+    }
+
+    #[test]
+    fn unix_roundtrip_ping_status_and_mutations() {
+        let dir = temp_dir("aup-svc-rt").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        remote.ping().unwrap();
+        // a full remote experiment lifecycle
+        let eid = remote.start_experiment("remote", "random", "{}", 0.0).unwrap();
+        let jid = remote.alloc_jids(2).unwrap();
+        remote.start_job_queued(jid, eid, "{\"x\":1}", 1.0).unwrap();
+        remote.set_job_running(jid, 0).unwrap();
+        remote.finish_job(jid, Some(0.5), true, 2.0).unwrap();
+        remote.start_job_queued(jid + 1, eid, "{}", 1.0).unwrap();
+        remote.cancel_job(jid + 1, 3.0).unwrap();
+        remote.finish_experiment(eid, Some(0.5), 4.0).unwrap();
+        // remote queries see the mutations (same mailbox ordering…
+        // modulo the service hop, which the reply acks serialize)
+        let jobs = remote.jobs_of(eid).unwrap();
+        assert_eq!(jobs.len(), 2);
+        let best = remote.best_job(eid, false).unwrap().unwrap();
+        assert_eq!(best.jid, jid);
+        let statuses = remote.status().unwrap();
+        assert_eq!(statuses.len(), 1);
+        assert_eq!(statuses[0].finished, 1);
+        assert_eq!(statuses[0].cancelled, 1);
+        // the in-process client sees the same store
+        assert_eq!(client.jobs_of(eid).unwrap().len(), 2);
+        drop(remote);
+        drop(service);
+        drop(client);
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn remote_sql_is_select_only() {
+        let dir = temp_dir("aup-svc-sql").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let r = remote.sql("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(r.scalar(), Some(&crate::store::Value::Int(0)));
+        let err = remote.sql("DELETE FROM job").unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err}");
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn tcp_flavor_speaks_the_same_protocol() {
+        let dir = temp_dir("aup-svc-tcp").unwrap();
+        let (handle, client) =
+            StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+        let service = StoreService::serve_tcp("127.0.0.1:0", client.clone(), None).unwrap();
+        let addr = service.local_addr().unwrap();
+        let remote = RemoteStoreClient::connect_tcp(&addr.to_string()).unwrap();
+        remote.ping().unwrap();
+        let eid = remote.start_experiment("tcp", "grid", "{}", 0.0).unwrap();
+        assert_eq!(remote.status().unwrap()[0].eid, eid);
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn submit_without_intake_is_rejected_with_a_clear_error() {
+        let dir = temp_dir("aup-svc-nosub").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let err = remote.submit(Json::obj(vec![]), None).unwrap_err();
+        assert!(err.to_string().contains("does not accept"), "{err}");
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn stale_socket_file_is_replaced_and_connect_live_skips_it() {
+        let dir = temp_dir("aup-svc-stale").unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        // a socket file whose listener is gone (killed process)
+        drop(UnixListener::bind(&sock).unwrap());
+        assert!(sock.exists());
+        assert!(
+            connect_live(&dir, Duration::from_millis(200)).is_none(),
+            "stale socket must not auto-attach"
+        );
+        // serving replaces the stale file
+        let (handle, client) =
+            StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let live = connect_live(&dir, Duration::from_millis(500)).expect("live attach");
+        live.ping().unwrap();
+        // a second service on the same LIVE socket is refused
+        let err = StoreService::serve_unix(&sock, client.clone(), None).unwrap_err();
+        assert!(err.to_string().contains("already serves"), "{err}");
+        drop((live, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn service_shutdown_removes_the_socket_file() {
+        let dir = temp_dir("aup-svc-rm").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        assert!(sock.exists());
+        service.shutdown();
+        assert!(!sock.exists(), "socket file must be cleaned up");
+        drop(client);
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

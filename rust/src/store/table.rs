@@ -37,6 +37,18 @@ pub struct Table {
     schema: TableSchema,
     rows: Vec<Row>,
     pk_map: BTreeMap<String, usize>,
+    /// High-water mark over every integer-valued primary key inserted
+    /// into THIS in-memory table — a delete does not lower it. Id
+    /// allocators (`schema::next_id`, the jid seed) read this for O(1)
+    /// allocation instead of scanning the table per insert. Scope of the
+    /// monotonicity guarantee: within one process lifetime, and across
+    /// reopens whose replay still carries the inserts (WAL tail). A
+    /// checkpoint snapshots only SURVIVING rows, so after
+    /// delete-max + checkpoint + reopen the mark can regress to the max
+    /// live pk — same behavior as the SELECT-max scan this replaced. No
+    /// schema path deletes rows today; if one ever does, persist the
+    /// mark in the snapshot before relying on never-reissued ids.
+    max_int_pk: Option<i64>,
 }
 
 /// Primary keys are mapped through a canonical string (so Int 1 and
@@ -53,7 +65,7 @@ fn pk_key(v: &Value) -> String {
 
 impl Table {
     pub fn new(schema: TableSchema) -> Table {
-        Table { schema, rows: Vec::new(), pk_map: BTreeMap::new() }
+        Table { schema, rows: Vec::new(), pk_map: BTreeMap::new(), max_int_pk: None }
     }
 
     pub fn schema(&self) -> &TableSchema {
@@ -119,10 +131,26 @@ impl Table {
             .iter()
             .map(|c| named.get(&c.name).cloned().unwrap_or(Value::Null).coerce(c.ctype))
             .collect();
-        let key = pk_key(&values[self.schema.pk_index]);
+        let pk = &values[self.schema.pk_index];
+        let pk_int = match pk {
+            Value::Int(i) => Some(*i),
+            Value::Real(r) if r.fract() == 0.0 => Some(*r as i64),
+            _ => None,
+        };
+        if let Some(i) = pk_int {
+            self.max_int_pk = Some(self.max_int_pk.map_or(i, |m| m.max(i)));
+        }
+        let key = pk_key(pk);
         self.rows.push(Row { values });
         self.pk_map.insert(key, self.rows.len() - 1);
         Ok(())
+    }
+
+    /// Largest integer primary key inserted into this table instance
+    /// (None for empty tables and non-integer keys). Unaffected by
+    /// deletes; see the field docs for the guarantee's exact scope.
+    pub fn max_int_pk(&self) -> Option<i64> {
+        self.max_int_pk
     }
 
     pub fn validate_update(&self, key: &Value, sets: &BTreeMap<String, Value>) -> Result<()> {
@@ -239,6 +267,21 @@ mod tests {
         let mut sets = BTreeMap::new();
         sets.insert("id".to_string(), Value::Int(5));
         assert!(t.update(&Value::Int(1), &sets).is_err());
+    }
+
+    #[test]
+    fn max_int_pk_is_a_monotonic_high_water_mark() {
+        let mut t = Table::new(schema());
+        assert_eq!(t.max_int_pk(), None);
+        t.insert(named(5, 0.1, "a")).unwrap();
+        t.insert(named(2, 0.2, "b")).unwrap();
+        assert_eq!(t.max_int_pk(), Some(5), "max, not last-inserted");
+        // deleting the max row must NOT lower the mark: the next
+        // allocated id may never collide with journal references
+        t.delete(&Value::Int(5)).unwrap();
+        assert_eq!(t.max_int_pk(), Some(5));
+        t.insert(named(9, 0.3, "c")).unwrap();
+        assert_eq!(t.max_int_pk(), Some(9));
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! TRUE cross-process integration for the store service: `aup batch
+//! --serve` runs as a child process; this test process plays the second
+//! shell — `aup submit`, `aup top`, `aup status` attach to the child's
+//! socket, and a raw `RemoteStoreClient` asserts the serving store is
+//! group-committing (WalStats over the wire).
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use auptimizer::store::schema;
+use auptimizer::store::service::{RemoteStoreClient, SOCKET_FILE};
+use auptimizer::store::{Store, StoreApi, Value};
+use auptimizer::util::fsutil::temp_dir;
+
+const AUP: &str = env!("CARGO_BIN_EXE_aup");
+
+/// A job script slow enough that the batch is still live when the
+/// second shell attaches.
+fn write_slow_script(dir: &Path) -> PathBuf {
+    use std::os::unix::fs::PermissionsExt;
+    let path = dir.join("slow_job.sh");
+    std::fs::write(&path, "#!/bin/sh\nsleep 0.4\necho \"result: 0.5\"\n").unwrap();
+    std::fs::set_permissions(&path, std::fs::Permissions::from_mode(0o755)).unwrap();
+    path
+}
+
+fn write_exp(dir: &Path, name: &str, script: &Path, n_samples: usize) -> PathBuf {
+    let path = dir.join(name);
+    let text = format!(
+        r#"{{
+            "proposer": "random",
+            "script": "{}",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 7,
+            "parameter_config": [{{"name": "x", "type": "float", "range": [0, 1]}}]
+        }}"#,
+        script.display()
+    );
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+fn wait_exit(child: &mut Child, limit: Duration) -> ExitStatus {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("child process did not exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn run_aup(args: &[&str]) -> (ExitStatus, String, String) {
+    let out = Command::new(AUP)
+        .args(args)
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    (
+        out.status,
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn submit_and_top_from_a_second_process_against_a_live_serve_run() {
+    let dir = temp_dir("aup-serve-cli").unwrap();
+    let script = write_slow_script(&dir);
+    let exp1 = write_exp(&dir, "exp1.json", &script, 10);
+    let exp2 = write_exp(&dir, "exp2.json", &script, 3);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    // shell 1: a live batch serving its store
+    let mut child = Command::new(AUP)
+        .args([
+            "batch",
+            exp1.to_str().unwrap(),
+            "--pool",
+            "2",
+            "--db",
+            db_s,
+            "--user",
+            "shell-one",
+            "--serve",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // wait for the socket to be published
+    let sock = db.join(SOCKET_FILE);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !sock.exists() {
+        assert!(
+            child.try_wait().unwrap().is_none(),
+            "serving batch exited before publishing its socket"
+        );
+        assert!(Instant::now() < deadline, "socket never appeared");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // shell 2: enqueue another experiment into the RUNNING pool
+    let (status, stdout, stderr) = run_aup(&[
+        "submit",
+        db_s,
+        exp2.to_str().unwrap(),
+        "--user",
+        "shell-two",
+    ]);
+    assert!(status.success(), "aup submit failed: {stderr}");
+    assert!(stdout.contains("submitted"), "{stdout}");
+    assert!(stdout.contains("accepted"), "{stdout}");
+
+    // shell 2: tail the live run — top/status auto-attach to the socket
+    let (status, _stdout, stderr) = run_aup(&["top", db_s, "--events", "5"]);
+    assert!(status.success(), "aup top failed: {stderr}");
+    assert!(
+        stderr.contains("attached to live store service"),
+        "top did not auto-attach: {stderr}"
+    );
+    let (status, stdout, stderr) = run_aup(&["status", db_s]);
+    assert!(status.success(), "aup status failed: {stderr}");
+    assert!(stderr.contains("attached to live store service"), "{stderr}");
+    assert!(stdout.contains("random"), "{stdout}");
+
+    // the serving process is group-committing: WAL counters over the wire
+    let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+    remote.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    let stats = remote.wal_stats().unwrap().expect("durable store has WAL stats");
+    assert!(stats.records > 0);
+    assert!(
+        stats.appends < stats.records,
+        "group commit must batch records into fewer appends: {stats:?}"
+    );
+    drop(remote);
+
+    // shell 1 drains both experiments and reports the submitted one
+    let status = wait_exit(&mut child, Duration::from_secs(120));
+    let out = child.wait_with_output().unwrap();
+    let child_stdout = String::from_utf8_lossy(&out.stdout);
+    let child_stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(status.success(), "serving batch failed: {child_stderr}");
+    assert!(child_stdout.contains("serving live store"), "{child_stdout}");
+    assert!(
+        child_stdout.contains("(submitted live)"),
+        "submitted experiment missing from the batch report: {child_stdout}"
+    );
+
+    // the socket is cleaned up, and a post-run `aup status` silently
+    // falls back to the directory
+    assert!(!sock.exists(), "socket file must be removed at shutdown");
+    let (status, stdout, stderr) = run_aup(&["status", db_s]);
+    assert!(status.success(), "{stderr}");
+    assert!(!stderr.contains("attached"), "{stderr}");
+    assert!(stdout.contains("done"), "{stdout}");
+
+    // ONE durable store holds both shells' experiments, fully terminal
+    let mut store = Store::open(&db).unwrap();
+    assert_eq!(schema::recover_incomplete(&mut store).unwrap(), 0, "clean shutdown");
+    let r = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
+    assert_eq!(r.scalar(), Some(&Value::Int(2)));
+    let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+    assert_eq!(r.scalar(), Some(&Value::Int(13)), "10 + 3 jobs across both shells");
+    let r = store.execute("SELECT name FROM user ORDER BY uid").unwrap();
+    let users: Vec<&str> = r.rows().iter().filter_map(|row| row[0].as_str()).collect();
+    assert_eq!(users, vec!["shell-one", "shell-two"]);
+    for eid in 0..2 {
+        let jobs = schema::jobs_of(&mut store, eid).unwrap();
+        assert!(!jobs.is_empty(), "eid {eid}");
+        assert!(
+            jobs.iter().all(|j| j.status == schema::JobStatus::Finished),
+            "eid {eid}: {jobs:?}"
+        );
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn submit_validates_locally_before_touching_the_socket() {
+    let dir = temp_dir("aup-submit-validate").unwrap();
+    let db = dir.join("db");
+    std::fs::create_dir_all(&db).unwrap();
+    // malformed JSON never needs a server to be rejected
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{ not json").unwrap();
+    let (status, _out, stderr) =
+        run_aup(&["submit", db.to_str().unwrap(), bad.to_str().unwrap()]);
+    assert!(!status.success());
+    assert!(stderr.contains("error"), "{stderr}");
+    // unknown proposer is caught locally too
+    let unknown = dir.join("unknown.json");
+    std::fs::write(
+        &unknown,
+        r#"{"proposer": "skynet", "script": "builtin:sphere", "n_samples": 1,
+            "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]}"#,
+    )
+    .unwrap();
+    let (status, _out, stderr) =
+        run_aup(&["submit", db.to_str().unwrap(), unknown.to_str().unwrap()]);
+    assert!(!status.success());
+    assert!(stderr.contains("unknown proposer"), "{stderr}");
+    std::fs::remove_dir_all(dir).unwrap();
+}

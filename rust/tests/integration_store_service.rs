@@ -1,0 +1,293 @@
+//! Integration tests for the cross-process store service: remote
+//! clients multiplexed into the live StoreServer mailbox.
+//!
+//! The durable invariants under test:
+//! * a remote mutation enters the SAME mailbox as an in-process one and
+//!   is group-committed in the SAME WAL batch (asserted via WalStats on
+//!   a manually-drained server — deterministic batch boundaries);
+//! * an experiment submitted over the socket joins a live batch run,
+//!   gets its own eid in the shared store, and its jobs share the pool;
+//! * when the server crashes mid group-commit, an attached status
+//!   reader observes ONE clean error/disconnect — never a hang — and
+//!   the store directory, reopened, shows the recovered
+//!   at-most-one-open-batch-lost state.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use auptimizer::experiment::{run_batch_serve, BatchSubmit, Experiment, ExperimentOptions};
+use auptimizer::prelude::*;
+use auptimizer::resource::local::CpuManager;
+use auptimizer::store::schema;
+use auptimizer::store::server::Drain;
+use auptimizer::store::service::{
+    connect_live, RemoteStoreClient, StoreService, SubmitHandler, SubmitRequest, SOCKET_FILE,
+};
+use auptimizer::store::{StoreApi, Value};
+use auptimizer::util::fsutil::temp_dir;
+
+fn rosen_cfg_json(n_samples: usize, seed: u64) -> String {
+    format!(
+        r#"{{
+            "proposer": "random",
+            "script": "builtin:rosenbrock",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": {seed},
+            "parameter_config": [
+                {{"name": "x", "type": "float", "range": [-5, 10]}},
+                {{"name": "y", "type": "float", "range": [-5, 10]}}
+            ]
+        }}"#
+    )
+}
+
+#[test]
+fn remote_and_local_mutations_share_one_group_commit_batch() {
+    // manually-drained server => deterministic batch boundaries: ten
+    // remote mutations (acked over the socket, so they are in the
+    // mailbox) plus ten local ones become EXACTLY ONE WAL append
+    let dir = temp_dir("aup-svc-batchshare").unwrap();
+    let (mut server, client) =
+        StoreServer::new(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+    let sock = dir.join(SOCKET_FILE);
+    let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+    let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+
+    let before = server.store_mut().wal_stats().unwrap();
+    for jid in 0..10 {
+        // the reply ack serializes: once this returns, the command is in
+        // the server mailbox
+        remote.start_job_queued(jid, 0, "{}", 0.0).unwrap();
+    }
+    for jid in 10..20 {
+        client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
+    }
+    assert_eq!(server.drain_once(false).unwrap(), Drain::Processed(20));
+    let after = server.store_mut().wal_stats().unwrap();
+    assert_eq!(
+        after.appends - before.appends,
+        1,
+        "remote + local mutations must share one group-commit append"
+    );
+    assert_eq!(after.records - before.records, 20);
+
+    // and the data is really there
+    let jobs = schema::jobs_of(server.store_mut(), 0).unwrap();
+    assert_eq!(jobs.len(), 20);
+
+    drop(remote);
+    drop(service);
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn submitted_experiment_joins_a_live_batch() {
+    // the full `aup submit` path minus process boundaries: a service
+    // with a validating submit handler feeds the batch loop's intake
+    let dir = temp_dir("aup-svc-submit").unwrap();
+    let store_back;
+    {
+        let (server, client) =
+            StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+        let (tx, rx) = channel::<BatchSubmit>();
+        // one-phase flavor (ack: None): this test submits BEFORE the
+        // batch loop starts, so blocking on the admission ack — what the
+        // CLI handler does — would deadlock the single test thread
+        let handler: SubmitHandler = Arc::new(move |req: SubmitRequest| {
+            let SubmitRequest { config, user } = req;
+            let cfg = ExperimentConfig::from_json(config)?;
+            tx.send(BatchSubmit { cfg, user, ack: None }).map_err(|_| {
+                AupError::Store("the batch is no longer accepting submissions".into())
+            })?;
+            Ok(Json::str("accepted"))
+        });
+        let sock = dir.join(SOCKET_FILE);
+        let service =
+            StoreService::serve_unix(&sock, client.clone(), Some(handler)).unwrap();
+
+        // a second "process": submit BEFORE the loop starts, so the
+        // intake pickup is deterministic
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let ack = remote
+            .submit(Json::parse(&rosen_cfg_json(4, 9)).unwrap(), Some("remote-user"))
+            .unwrap();
+        assert_eq!(ack, "accepted");
+        // an invalid config is rejected SYNCHRONOUSLY by the handler
+        let err = remote.submit(Json::str("nonsense"), None).unwrap_err();
+        assert!(
+            err.to_string().contains("must be an object"),
+            "bad config must surface to the submitter: {err}"
+        );
+
+        let cfg = ExperimentConfig::from_json_str(&rosen_cfg_json(6, 3)).unwrap();
+        let opts = ExperimentOptions {
+            store_client: Some(client.clone()),
+            user: "shared".into(),
+            ..ExperimentOptions::default()
+        };
+        let initial = Experiment::new(cfg, opts).unwrap();
+        let summaries = run_batch_serve(
+            vec![initial],
+            Box::new(CpuManager::new(2)),
+            Some((rx, client.clone())),
+        )
+        .unwrap();
+        assert_eq!(summaries.len(), 2, "initial + submitted experiment");
+        assert_eq!(summaries[0].n_jobs, 6);
+        assert_eq!(summaries[1].n_jobs, 4, "submitted experiment ran its jobs");
+        assert!(summaries.iter().all(|s| s.n_failed == 0));
+
+        drop(remote);
+        drop(service);
+        drop(client);
+        store_back = server.shutdown().unwrap();
+    }
+    let mut store = store_back;
+    // ONE shared store holds both experiments, distinct users, unique jids
+    let r = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
+    assert_eq!(r.scalar(), Some(&Value::Int(2)));
+    let r = store.execute("SELECT COUNT(*) FROM job").unwrap();
+    assert_eq!(r.scalar(), Some(&Value::Int(10)));
+    let r = store
+        .execute("SELECT name FROM user ORDER BY uid")
+        .unwrap();
+    let users: Vec<String> = r
+        .rows()
+        .iter()
+        .filter_map(|row| row[0].as_str().map(str::to_string))
+        .collect();
+    assert_eq!(users, vec!["shared".to_string(), "remote-user".to_string()]);
+    for eid in 0..2 {
+        let jobs = schema::jobs_of(&mut store, eid).unwrap();
+        assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished), "eid {eid}");
+    }
+    let r = store.execute("SELECT jid FROM job ORDER BY jid").unwrap();
+    let jids: Vec<i64> = r.rows().iter().filter_map(|row| row[0].as_i64()).collect();
+    let mut dedup = jids.clone();
+    dedup.dedup();
+    assert_eq!(jids.len(), dedup.len(), "duplicate jids: {jids:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn crashing_server_gives_attached_reader_a_clean_error_then_directory_recovers() {
+    let dir = temp_dir("aup-svc-crash").unwrap();
+    {
+        // crash while committing the SECOND batch: batch 1 (the
+        // experiment row) is durable, the open batch is lost
+        let cfg = ServerConfig { crash_after_batches: Some(2), ..ServerConfig::default() };
+        let (handle, client) = StoreServer::spawn(Store::open(&dir).unwrap(), cfg).unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let remote = connect_live(&dir, Duration::from_millis(500)).expect("live attach");
+
+        // batch 1: the experiment row (query replies come from the drain
+        // that crashes batches are counted on, so this one commits)
+        let eid = remote.start_experiment("crash", "random", "{}", 0.0).unwrap();
+        assert_eq!(eid, 0);
+
+        // trigger the crashing batch with fire-and-forget inserts
+        for jid in 0..4 {
+            if remote.start_job_queued(jid, eid, "{}", 1.0).is_err() {
+                break; // server already gone; ack path reported it cleanly
+            }
+        }
+
+        // the attached reader observes ONE clean error (reply error or
+        // disconnect) — never a hang
+        let mut saw_error = None;
+        for _ in 0..500 {
+            match remote.status() {
+                Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => {
+                    saw_error = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        let msg = saw_error.expect("status reader never saw the crash");
+        assert!(
+            msg.contains("gone") || msg.contains("disconnected"),
+            "expected a clean server-gone/disconnect error, got: {msg}"
+        );
+        // the connection was closed: every further call fails fast too
+        let err = remote.status().unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
+
+        drop(remote);
+        drop(service);
+        drop(client);
+        // the owning handle surfaces the injected crash as the root cause
+        let err = handle.shutdown().unwrap_err();
+        assert!(err.to_string().contains("injected crash"), "{err}");
+    }
+    // directory fallback: reopen tolerates the torn tail; the durable
+    // prefix is intact and recovery sweeps the mid-flight jobs
+    let mut store = Store::open(&dir).unwrap();
+    let exps = store.execute("SELECT COUNT(*) FROM experiment").unwrap();
+    assert_eq!(exps.scalar(), Some(&Value::Int(1)), "batch 1 survived the crash");
+    let swept = schema::recover_incomplete(&mut store).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert!(jobs.len() <= 4, "at most the open batch existed");
+    assert_eq!(swept, jobs.len(), "every surviving insert was mid-flight");
+    assert!(jobs.iter().all(|j| j.status.is_terminal()));
+    let statuses = auptimizer::store::status::experiment_statuses(&mut store).unwrap();
+    assert_eq!(statuses.len(), 1);
+    assert_eq!(statuses[0].failed, jobs.len());
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn concurrent_remote_clients_are_all_served() {
+    // N clients on N connections hammer the service concurrently; every
+    // mutation lands exactly once (the mailbox serializes them)
+    let dir = temp_dir("aup-svc-many").unwrap();
+    {
+        let (handle, client) =
+            StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let n_clients = 4;
+        let per_client = 25;
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let sock = sock.clone();
+            joins.push(std::thread::spawn(move || {
+                let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+                let base = remote.alloc_jids(per_client).unwrap();
+                for k in 0..per_client {
+                    remote.start_job_queued(base + k, c, "{}", 0.0).unwrap();
+                    remote
+                        .finish_job(base + k, Some(k as f64), true, 1.0)
+                        .unwrap();
+                }
+                base
+            }));
+        }
+        let bases: Vec<i64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        // jid ranges are disjoint
+        let mut sorted = bases.clone();
+        sorted.sort();
+        for w in sorted.windows(2) {
+            assert!(w[1] - w[0] >= per_client, "overlapping jid ranges: {bases:?}");
+        }
+        // all rows present, observed through one more remote client
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let r = remote.sql("SELECT COUNT(*) FROM job").unwrap();
+        assert_eq!(
+            r.scalar(),
+            Some(&Value::Int(n_clients * per_client)),
+            "every remote mutation landed exactly once"
+        );
+        drop(remote);
+        drop(service);
+        drop(client);
+        handle.shutdown().unwrap();
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}

@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Gate CI on the WAL-throughput trajectory.
+
+Usage: check_bench_regression.py FRESH.json BASELINE.json
+
+FRESH.json is the report the bench smoke step just wrote;
+BASELINE.json is the committed trajectory point from the previous main
+push (results/BENCH_store.json). The gated metric is `append_reduction`
+(baseline appends / group-commit appends): the whole point of the
+StoreServer is that group commit collapses WAL writes, so a >30% drop
+in the reduction factor is a perf regression and fails the build.
+
+Wall-clock numbers in the report are informative only — CI runners are
+too noisy to gate on seconds, but the append COUNTS are deterministic
+for a fixed workload.
+
+A missing baseline (first run ever, or a fresh fork) passes: the commit
+step will create the first trajectory point.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    fresh_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no committed baseline at {baseline_path} yet; nothing to compare")
+        return 0
+    f_red = float(fresh["append_reduction"])
+    b_red = float(baseline["append_reduction"])
+    floor = b_red * 0.7
+    print(
+        f"append_reduction: fresh {f_red:.2f}x vs baseline {b_red:.2f}x "
+        f"(regression floor {floor:.2f}x)"
+    )
+    for name in ("baseline", "grouped", "grouped_live"):
+        fm, bm = fresh.get(name, {}), baseline.get(name, {})
+        print(
+            f"  {name:>12}: appends {bm.get('appends')} -> {fm.get('appends')}, "
+            f"records {bm.get('records')} -> {fm.get('records')}"
+        )
+    if f_red < floor:
+        print(
+            f"::error::WAL append-reduction regressed more than 30%: "
+            f"{f_red:.2f}x < {floor:.2f}x (baseline {b_red:.2f}x)"
+        )
+        return 1
+    print("ok: group-commit append reduction within 30% of the trajectory")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
