@@ -1,0 +1,240 @@
+//! Query-throughput bench for the indexed read path (ISSUE 4): the
+//! status/best_job workload at 10^5 jobs, scan baseline vs indexed.
+//!
+//! Three measurements:
+//! * `status`   — the old N+1 shape (4+ SQL roundtrips per experiment:
+//!                user name, jobs_of, BACKOFF COUNT(*), best_job) with
+//!                the planner forced off, vs the materialized-aggregate
+//!                `experiment_statuses` — the asserted ≥10x;
+//! * `best_job` — the old filter-sort-clone SQL with the planner off,
+//!                vs the typed `(eid, score)` index stream — ≥10x;
+//! * `live`     — `StoreCmd::Status` latency against spawned servers at
+//!                N/10 and N jobs: the ratio must stay near 1 (flat in
+//!                job count), where the scan path would scale ~10x.
+//!
+//! Run: `cargo bench --bench store_query_throughput [-- --smoke] [-- --out FILE]`
+//! Writes a JSON report (default results/BENCH_query.json) that
+//! `scripts/check_bench_regression.py` gates in CI alongside the WAL
+//! numbers.
+
+use std::time::Instant;
+
+use auptimizer::store::{schema, status, ServerConfig, Store, StoreServer};
+
+const N_EXPS: i64 = 8;
+
+/// Populate a store with `n_jobs` jobs over N_EXPS experiments: mostly
+/// FINISHED with scores (ties included), a sprinkle of RUNNING/FAILED,
+/// and a BACKOFF journal entry for every 10th job.
+fn populate(n_jobs: i64) -> Store {
+    let mut s = Store::in_memory();
+    schema::init_schema(&mut s).unwrap();
+    let uid = schema::add_user(&mut s, "bench").unwrap();
+    let rid = schema::add_resource(&mut s, "cpu", "localhost:0").unwrap();
+    for e in 0..N_EXPS {
+        let eid =
+            schema::start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0).unwrap();
+        assert_eq!(eid, e);
+    }
+    for jid in 0..n_jobs {
+        let eid = jid % N_EXPS;
+        schema::start_job_queued(&mut s, jid, eid, "{}", jid as f64).unwrap();
+        schema::set_job_running(&mut s, jid, rid).unwrap();
+        if jid % 10 == 0 {
+            schema::log_job_event(&mut s, jid, eid, 1, "BACKOFF", jid as f64, "retry").unwrap();
+        }
+        if jid % 50 == 7 {
+            continue; // stays RUNNING
+        }
+        if jid % 17 == 3 {
+            schema::finish_job(&mut s, jid, None, false, jid as f64 + 1.0).unwrap();
+        } else {
+            // coarse score grid -> plenty of exact ties for the
+            // (score, jid) tie-break to matter
+            let score = (jid % 1000) as f64 / 1000.0;
+            schema::finish_job(&mut s, jid, Some(score), true, jid as f64 + 1.0).unwrap();
+        }
+    }
+    s
+}
+
+/// The PRE-INDEX status read, verbatim: per experiment, four SQL
+/// statements that each filter-sort-clone their table.
+fn status_n_plus_one(s: &mut Store) -> usize {
+    let eids: Vec<i64> = s
+        .execute("SELECT eid FROM experiment ORDER BY eid")
+        .unwrap()
+        .rows()
+        .iter()
+        .filter_map(|r| r.first().and_then(auptimizer::store::Value::as_i64))
+        .collect();
+    let mut lines = 0;
+    for eid in eids {
+        let exp = s
+            .execute(&format!(
+                "SELECT uid, proposer FROM experiment WHERE eid = {eid}"
+            ))
+            .unwrap();
+        let uid = exp.rows()[0][0].as_i64().unwrap();
+        let _user = s
+            .execute(&format!("SELECT name FROM user WHERE uid = {uid}"))
+            .unwrap();
+        let jobs = s
+            .execute(&format!(
+                "SELECT jid, status, score FROM job WHERE eid = {eid} ORDER BY jid"
+            ))
+            .unwrap();
+        let _retries = s
+            .execute(&format!(
+                "SELECT COUNT(*) FROM job_event WHERE eid = {eid} AND state = 'BACKOFF'"
+            ))
+            .unwrap();
+        let _best = s
+            .execute(&format!(
+                "SELECT jid, score FROM job WHERE eid = {eid} AND status = 'FINISHED' \
+                 AND score IS NOT NULL ORDER BY score DESC LIMIT 1"
+            ))
+            .unwrap();
+        lines += jobs.count().min(1);
+    }
+    lines
+}
+
+fn time<F: FnMut() -> usize>(iters: usize, mut f: F) -> (f64, usize) {
+    let mut sink = 0;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink += f();
+    }
+    (t0.elapsed().as_secs_f64() / iters as f64, sink)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .windows(2)
+        .find(|w| w[0] == "--out")
+        .map(|w| w[1].clone())
+        .unwrap_or_else(|| "results/BENCH_query.json".to_string());
+    let n_jobs: i64 = if smoke { 20_000 } else { 100_000 };
+
+    println!("=== store query throughput: scan baseline vs indexed read path ===");
+    println!("{n_jobs} jobs over {N_EXPS} experiments\n");
+
+    let mut store = populate(n_jobs);
+
+    // -- status: old N+1 scan shape vs materialized aggregates -------------
+    store.set_index_planning(false);
+    let (status_scan, a) = time(3, || status_n_plus_one(&mut store));
+    store.set_index_planning(true);
+    let (status_indexed, b) = time(if smoke { 200 } else { 100 }, || {
+        status::experiment_statuses(&store).unwrap().len()
+    });
+    assert_eq!(a.min(1), b.min(1), "both flavors saw experiments");
+
+    // the two paths must AGREE before their timings mean anything
+    let fast = status::experiment_statuses(&store).unwrap();
+    let slow = status::experiment_statuses_scan(&store).unwrap();
+    assert_eq!(fast, slow, "aggregate path diverged from the scan oracle");
+
+    // -- best_job: filter-sort-clone SQL vs ordered-index stream -----------
+    store.set_index_planning(false);
+    let (best_scan, _) = time(if smoke { 20 } else { 10 }, || {
+        let mut hits = 0;
+        for eid in 0..N_EXPS {
+            let r = store
+                .execute(&format!(
+                    "SELECT jid FROM job WHERE eid = {eid} AND status = 'FINISHED' \
+                     AND score IS NOT NULL ORDER BY score DESC LIMIT 1"
+                ))
+                .unwrap();
+            hits += r.count();
+        }
+        hits
+    });
+    store.set_index_planning(true);
+    let (best_indexed, _) = time(if smoke { 500 } else { 200 }, || {
+        let mut hits = 0;
+        for eid in 0..N_EXPS {
+            if schema::best_job(&store, eid, true).unwrap().is_some() {
+                hits += 1;
+            }
+        }
+        hits
+    });
+
+    let status_speedup = status_scan / status_indexed.max(1e-12);
+    let best_speedup = best_scan / best_indexed.max(1e-12);
+
+    // -- live servers: StoreCmd::Status latency must be flat in job count --
+    let live = |n: i64| -> f64 {
+        let (handle, client) =
+            StoreServer::spawn(populate(n), ServerConfig::default()).unwrap();
+        // warm-up + measure round-trips through the real mailbox
+        client.status().unwrap();
+        let iters = 30;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            assert_eq!(client.status().unwrap().len(), N_EXPS as usize);
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        drop(client);
+        handle.shutdown().unwrap();
+        per
+    };
+    let live_small = live(n_jobs / 10);
+    let live_large = live(n_jobs);
+    let live_ratio = live_large / live_small.max(1e-12);
+
+    println!(
+        "      status: scan {:>10.3}ms vs indexed {:>10.4}ms -> {status_speedup:>8.1}x",
+        status_scan * 1e3,
+        status_indexed * 1e3
+    );
+    println!(
+        "    best_job: scan {:>10.3}ms vs indexed {:>10.4}ms -> {best_speedup:>8.1}x",
+        best_scan * 1e3,
+        best_indexed * 1e3
+    );
+    println!(
+        " live status: {:>10.4}ms at {} jobs vs {:>10.4}ms at {} jobs -> ratio {live_ratio:.2}",
+        live_small * 1e3,
+        n_jobs / 10,
+        live_large * 1e3,
+        n_jobs
+    );
+
+    // acceptance: >=10x on both hot reads at this scale
+    assert!(
+        status_speedup >= 10.0,
+        "status must be >=10x over the scan baseline (got {status_speedup:.1}x)"
+    );
+    assert!(
+        best_speedup >= 10.0,
+        "best_job must be >=10x over the scan baseline (got {best_speedup:.1}x)"
+    );
+    // flatness: O(experiments) answers cannot scale with job count; the
+    // loose factor absorbs CI timer noise (a scan path would be ~10x)
+    assert!(
+        live_ratio <= 5.0,
+        "live StoreCmd::Status latency grew with job count: {live_ratio:.2}x"
+    );
+
+    let json = format!(
+        "{{\n  \"n_jobs\": {n_jobs},\n  \"n_experiments\": {N_EXPS},\n  \
+         \"status\": {{\"scan_secs\": {status_scan:.9}, \"indexed_secs\": {status_indexed:.9}}},\n  \
+         \"best_job\": {{\"scan_secs\": {best_scan:.9}, \"indexed_secs\": {best_indexed:.9}}},\n  \
+         \"live\": {{\"small_secs\": {live_small:.9}, \"large_secs\": {live_large:.9}}},\n  \
+         \"status_speedup\": {status_speedup:.2},\n  \
+         \"best_job_speedup\": {best_speedup:.2},\n  \
+         \"live_ratio\": {live_ratio:.3}\n}}\n"
+    );
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).unwrap();
+        }
+    }
+    std::fs::write(&out_path, json).unwrap();
+    println!("wrote {out_path}");
+}

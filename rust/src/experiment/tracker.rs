@@ -5,17 +5,23 @@
 //! reproducibility").
 //!
 //! Since the StoreServer refactor the tracker no longer owns a `Store`:
-//! it holds a [`StoreClient`] and fire-and-forgets its mutations into
-//! the server's mailbox, where one drain group-commits them as a single
-//! WAL append. Several trackers (one per experiment in `aup batch`)
-//! share one server — the paper's single bookkeeping database.
+//! it holds a [`StoreApi`] handle and fire-and-forgets its mutations
+//! into the server's mailbox, where one drain group-commits them as a
+//! single WAL append. Several trackers (one per experiment in `aup
+//! batch`) share one server — the paper's single bookkeeping database.
+//!
+//! The tracker is generic over the transport: the default
+//! [`StoreClient`] is the in-process mpsc handle, while a worker
+//! process on another host journals into the serving store through
+//! `RemoteStoreClient` (the socket flavor) — same code, same ordering
+//! contract, because both implement [`StoreApi`].
 
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::experiment::config::ExperimentConfig;
 use crate::search::BasicConfig;
 use crate::store::schema;
-use crate::store::StoreClient;
+use crate::store::{StoreApi, StoreClient};
 use crate::util::error::Result;
 
 fn now() -> f64 {
@@ -25,8 +31,8 @@ fn now() -> f64 {
         .unwrap_or(0.0)
 }
 
-pub struct Tracker {
-    client: StoreClient,
+pub struct Tracker<C: StoreApi = StoreClient> {
+    client: C,
     eid: i64,
     maximize: bool,
     /// proposer job_ids restart at 0 per experiment, so store jids come
@@ -35,8 +41,8 @@ pub struct Tracker {
     jids: std::collections::BTreeMap<u64, i64>,
 }
 
-impl Tracker {
-    pub fn new(client: StoreClient, user: &str, cfg: &ExperimentConfig) -> Result<Tracker> {
+impl<C: StoreApi> Tracker<C> {
+    pub fn new(client: C, user: &str, cfg: &ExperimentConfig) -> Result<Tracker<C>> {
         let eid = client.start_experiment(user, &cfg.proposer, &cfg.raw.to_string(), now())?;
         Ok(Tracker {
             client,
@@ -50,14 +56,17 @@ impl Tracker {
         self.eid
     }
 
-    pub fn client(&self) -> &StoreClient {
+    pub fn client(&self) -> &C {
         &self.client
     }
 
-    fn alloc_jid(&mut self, job_id: u64) -> i64 {
-        let jid = self.client.alloc_jid();
+    /// Reserve a store jid through the transport (the in-process client
+    /// answers from its lock-free atomic; a remote client round-trips
+    /// once so the range is globally unique across hosts).
+    fn alloc_jid(&mut self, job_id: u64) -> Result<i64> {
+        let jid = self.client.alloc_jids(1)?;
         self.jids.insert(job_id, jid);
-        jid
+        Ok(jid)
     }
 
     /// Store jid of an experiment-local job_id (jobs not seen by this
@@ -67,7 +76,7 @@ impl Tracker {
     }
 
     pub fn job_started(&mut self, job_id: u64, rid: i64, config: &BasicConfig) -> Result<()> {
-        let jid = self.alloc_jid(job_id);
+        let jid = self.alloc_jid(job_id)?;
         self.client
             .start_job_running(jid, self.eid, rid, &config.to_json_string(), now())
     }
@@ -75,7 +84,7 @@ impl Tracker {
     /// Scheduler-era entry point: the job exists (and is tracked) from
     /// the moment it is queued, before any resource is assigned.
     pub fn job_submitted(&mut self, job_id: u64, config: &BasicConfig) -> Result<()> {
-        let jid = self.alloc_jid(job_id);
+        let jid = self.alloc_jid(job_id)?;
         self.client
             .start_job_queued(jid, self.eid, &config.to_json_string(), now())
     }

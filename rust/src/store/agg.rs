@@ -1,0 +1,369 @@
+//! Materialized per-experiment aggregates — the O(experiments) read
+//! path behind `StoreCmd::Status` / `aup top`.
+//!
+//! Every mutation funnels through [`Store::apply`], which forwards it
+//! here, so the aggregates are updated *as each mutation lands*: status
+//! counts, retry (BACKOFF) totals and the best FINISHED score per
+//! experiment are always current, and a status query never scans the
+//! `job`/`job_event` tables. The same incremental path runs during WAL
+//! replay and checkpoint load, so a read-only directory open
+//! ([`Store::open_read_only`]) gets the aggregates built exactly once,
+//! at open.
+//!
+//! Tie semantics mirror the query layer's deterministic ORDER BY: the
+//! best job minimizes/maximizes `(score, jid)` lexicographically, which
+//! is what `best_job`'s `ORDER BY score [DESC]` (tie-broken by primary
+//! key) returns.
+//!
+//! Tracking is resolved per table NAME: a table called `job` is tracked
+//! when it carries `eid`/`status`/`score` columns, `job_event` when it
+//! carries `eid`/`state`. A same-named table WITHOUT those columns
+//! disables aggregates for the whole store ([`Aggregates::available`]
+//! turns false) and status queries fall back to the one-pass scan.
+//!
+//! [`Store::apply`]: crate::store::Store
+//! [`Store::open_read_only`]: crate::store::Store::open_read_only
+
+use std::collections::BTreeMap;
+
+use crate::store::schema::opt_f64;
+use crate::store::schema_names;
+use crate::store::table::Table;
+use crate::store::value::Value;
+
+/// Live bookkeeping totals of one experiment.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExperimentAggregate {
+    /// all rows of this eid in `job`, whatever their status string
+    pub n_jobs: usize,
+    pub pending: usize,
+    pub running: usize,
+    pub finished: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+    /// BACKOFF rows of this eid in `job_event`
+    pub retries: usize,
+    /// FINISHED job minimizing (score, jid) — the `target: min` best
+    pub best_min: Option<(f64, i64)>,
+    /// FINISHED job maximizing (score, jid) — the `target: max` best
+    pub best_max: Option<(f64, i64)>,
+}
+
+impl ExperimentAggregate {
+    fn bump(&mut self, status: Option<&str>, delta: isize) {
+        let apply = |c: &mut usize| *c = c.wrapping_add_signed(delta);
+        apply(&mut self.n_jobs);
+        match status {
+            Some("PENDING") => apply(&mut self.pending),
+            Some("RUNNING") => apply(&mut self.running),
+            Some("FINISHED") => apply(&mut self.finished),
+            Some("FAILED") => apply(&mut self.failed),
+            Some("CANCELLED") => apply(&mut self.cancelled),
+            _ => {}
+        }
+    }
+
+    /// Best (score, jid) for the given optimization direction.
+    pub fn best(&self, maximize: bool) -> Option<(f64, i64)> {
+        if maximize {
+            self.best_max
+        } else {
+            self.best_min
+        }
+    }
+
+    /// Account one job row. Shared by the incremental path (insert /
+    /// re-add after update) and the one-pass scan fallback in
+    /// `status.rs`, so both produce identical aggregates by
+    /// construction.
+    pub fn add_job(&mut self, status: Option<&str>, score: Option<f64>, jid: i64) {
+        self.bump(status, 1);
+        if status == Some("FINISHED") {
+            if let Some(s) = score {
+                challenge(self, (s, jid));
+            }
+        }
+    }
+
+    /// Account one job_event row (retry bookkeeping).
+    pub fn add_event(&mut self, state: Option<&str>) {
+        if state == Some("BACKOFF") {
+            self.retries += 1;
+        }
+    }
+}
+
+/// Compare two (score, jid) pairs the way the deterministic ORDER BY
+/// does: score first (total order, -0.0 folded onto 0.0), jid breaks
+/// ties.
+fn pair_cmp(a: (f64, i64), b: (f64, i64)) -> std::cmp::Ordering {
+    let norm = |f: f64| if f == 0.0 { 0.0 } else { f };
+    norm(a.0).total_cmp(&norm(b.0)).then(a.1.cmp(&b.1))
+}
+
+/// Column slots of a tracked `job` table.
+#[derive(Debug, Clone)]
+struct JobCols {
+    pk: usize,
+    /// pk column NAME, for reading INSERT column maps
+    pk_name: String,
+    eid: usize,
+    status: usize,
+    score: usize,
+}
+
+/// Column slots of a tracked `job_event` table.
+#[derive(Debug, Clone, Copy)]
+struct EventCols {
+    eid: usize,
+    state: usize,
+}
+
+/// Pre-mutation snapshot of the aggregate-relevant fields of one row,
+/// captured by [`Store::apply`] before an UPDATE/DELETE lands.
+///
+/// [`Store::apply`]: crate::store::Store
+#[derive(Debug)]
+pub(crate) enum Captured {
+    Job { eid: Option<i64>, status: Option<String>, score: Option<f64>, jid: i64 },
+    Event { eid: Option<i64>, backoff: bool },
+    None,
+}
+
+/// The aggregate store. One per [`Store`](crate::store::Store).
+#[derive(Default)]
+pub(crate) struct Aggregates {
+    job_cols: Option<JobCols>,
+    event_cols: Option<EventCols>,
+    /// a `job`/`job_event` table exists whose schema this module cannot
+    /// track — every answer would be wrong, so none are given
+    disabled: bool,
+    per_exp: BTreeMap<i64, ExperimentAggregate>,
+}
+
+impl Aggregates {
+    /// False when a same-named table defeated column resolution; status
+    /// readers must fall back to scanning.
+    pub fn available(&self) -> bool {
+        !self.disabled
+    }
+
+    pub fn get(&self, eid: i64) -> Option<&ExperimentAggregate> {
+        self.per_exp.get(&eid)
+    }
+
+    /// A table was created: resolve tracked-column slots by name.
+    pub fn on_create(&mut self, name: &str, table: &Table) {
+        let s = table.schema();
+        if name == schema_names::JOB {
+            match (s.col_index("eid"), s.col_index("status"), s.col_index("score")) {
+                (Some(eid), Some(status), Some(score)) => {
+                    self.job_cols = Some(JobCols {
+                        pk: s.pk_index,
+                        pk_name: s.cols[s.pk_index].name.clone(),
+                        eid,
+                        status,
+                        score,
+                    });
+                }
+                _ => self.disabled = true,
+            }
+        } else if name == schema_names::JOB_EVENT {
+            match (s.col_index("eid"), s.col_index("state")) {
+                (Some(eid), Some(state)) => {
+                    self.event_cols = Some(EventCols { eid, state });
+                }
+                _ => self.disabled = true,
+            }
+        }
+    }
+
+    /// Capture the aggregate-relevant old values of the row `key`
+    /// addresses, before it is mutated or deleted.
+    pub fn capture(&self, tables: &BTreeMap<String, Table>, name: &str, key: &Value) -> Captured {
+        if self.disabled {
+            return Captured::None;
+        }
+        if name == schema_names::JOB {
+            if let (Some(c), Some(t)) = (self.job_cols.as_ref(), tables.get(name)) {
+                if let Some(row) = t.get(key) {
+                    return Captured::Job {
+                        eid: row.values[c.eid].as_i64(),
+                        status: row.values[c.status].as_str().map(str::to_string),
+                        score: opt_f64(&row.values[c.score]),
+                        jid: row.values[c.pk].as_i64().unwrap_or(-1),
+                    };
+                }
+            }
+        } else if name == schema_names::JOB_EVENT {
+            if let (Some(c), Some(t)) = (self.event_cols.as_ref(), tables.get(name)) {
+                if let Some(row) = t.get(key) {
+                    return Captured::Event {
+                        eid: row.values[c.eid].as_i64(),
+                        backoff: row.values[c.state].as_str() == Some("BACKOFF"),
+                    };
+                }
+            }
+        }
+        Captured::None
+    }
+
+    /// A row was inserted (`named` is the INSERT's column map).
+    pub fn on_insert(&mut self, name: &str, named: &BTreeMap<String, Value>) {
+        if self.disabled {
+            return;
+        }
+        if let (true, Some(c)) = (name == schema_names::JOB, self.job_cols.as_ref()) {
+            let Some(eid) = named.get("eid").and_then(Value::as_i64) else { return };
+            let status = named.get("status").and_then(Value::as_str);
+            let score = named.get("score").and_then(opt_f64);
+            let jid = named.get(&c.pk_name).and_then(Value::as_i64).unwrap_or(-1);
+            self.per_exp.entry(eid).or_default().add_job(status, score, jid);
+        } else if name == schema_names::JOB_EVENT && self.event_cols.is_some() {
+            let Some(eid) = named.get("eid").and_then(Value::as_i64) else { return };
+            self.per_exp
+                .entry(eid)
+                .or_default()
+                .add_event(named.get("state").and_then(Value::as_str));
+        }
+    }
+
+    /// A row was updated; `old` is the pre-mutation capture, the new
+    /// values are read back from the (already mutated) table.
+    pub fn on_update(
+        &mut self,
+        tables: &BTreeMap<String, Table>,
+        name: &str,
+        key: &Value,
+        old: Captured,
+    ) {
+        if self.disabled {
+            return;
+        }
+        match old {
+            Captured::Job { .. } => {
+                self.retire_job(tables, old);
+                if let (Some(c), Some(t)) = (self.job_cols.as_ref(), tables.get(name)) {
+                    if let Some(row) = t.get(key) {
+                        if let Some(eid) = row.values[c.eid].as_i64() {
+                            let status = row.values[c.status].as_str().map(str::to_string);
+                            let score = opt_f64(&row.values[c.score]);
+                            let jid = row.values[c.pk].as_i64().unwrap_or(-1);
+                            self.per_exp
+                                .entry(eid)
+                                .or_default()
+                                .add_job(status.as_deref(), score, jid);
+                        }
+                    }
+                }
+            }
+            Captured::Event { eid, backoff } => {
+                if let Some(eid) = eid {
+                    if backoff {
+                        let agg = self.per_exp.entry(eid).or_default();
+                        agg.retries = agg.retries.saturating_sub(1);
+                    }
+                }
+                if let (Some(c), Some(t)) = (self.event_cols.as_ref(), tables.get(name)) {
+                    if let Some(row) = t.get(key) {
+                        if let (Some(eid), Some("BACKOFF")) =
+                            (row.values[c.eid].as_i64(), row.values[c.state].as_str())
+                        {
+                            self.per_exp.entry(eid).or_default().retries += 1;
+                        }
+                    }
+                }
+            }
+            Captured::None => {}
+        }
+    }
+
+    /// A row was deleted; `old` is the pre-mutation capture.
+    pub fn on_delete(&mut self, tables: &BTreeMap<String, Table>, old: Captured) {
+        if self.disabled {
+            return;
+        }
+        match old {
+            Captured::Job { .. } => self.retire_job(tables, old),
+            Captured::Event { eid: Some(eid), backoff: true } => {
+                let agg = self.per_exp.entry(eid).or_default();
+                agg.retries = agg.retries.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+
+    /// Remove one job row's contribution. If it held a best slot, the
+    /// experiment's bests are recomputed from the table (O(jobs of that
+    /// eid) through the eid index — dethroning is rare: terminal rows
+    /// normally never change again).
+    fn retire_job(&mut self, tables: &BTreeMap<String, Table>, old: Captured) {
+        let Captured::Job { eid: Some(eid), status, score, jid } = old else { return };
+        let agg = self.per_exp.entry(eid).or_default();
+        agg.bump(status.as_deref(), -1);
+        if status.as_deref() == Some("FINISHED") {
+            if let Some(s) = score {
+                let was_min = agg.best_min.is_some_and(|b| pair_cmp(b, (s, jid)).is_eq());
+                let was_max = agg.best_max.is_some_and(|b| pair_cmp(b, (s, jid)).is_eq());
+                if was_min || was_max {
+                    let (best_min, best_max) =
+                        recompute_best(tables, self.job_cols.as_ref(), eid);
+                    let agg = self.per_exp.entry(eid).or_default();
+                    agg.best_min = best_min;
+                    agg.best_max = best_max;
+                }
+            }
+        }
+    }
+}
+
+/// Offer (score, jid) as a new best in both directions.
+fn challenge(agg: &mut ExperimentAggregate, pair: (f64, i64)) {
+    agg.best_min = Some(match agg.best_min {
+        Some(b) if pair_cmp(b, pair).is_le() => b,
+        _ => pair,
+    });
+    agg.best_max = Some(match agg.best_max {
+        Some(b) if pair_cmp(b, pair).is_ge() => b,
+        _ => pair,
+    });
+}
+
+/// Full recompute of one experiment's bests (the dethroned-best path).
+/// Uses the job table's eid index when present, else scans.
+fn recompute_best(
+    tables: &BTreeMap<String, Table>,
+    cols: Option<&JobCols>,
+    eid: i64,
+) -> (Option<(f64, i64)>, Option<(f64, i64)>) {
+    let (Some(c), Some(t)) = (cols, tables.get(schema_names::JOB)) else {
+        return (None, None);
+    };
+    let key = Value::Int(eid);
+    let mut best_min: Option<(f64, i64)> = None;
+    let mut best_max: Option<(f64, i64)> = None;
+    let mut consider = |row: &crate::store::table::Row| {
+        if row.values[c.status].as_str() != Some("FINISHED") {
+            return;
+        }
+        let Some(s) = opt_f64(&row.values[c.score]) else { return };
+        let jid = row.values[c.pk].as_i64().unwrap_or(-1);
+        let pair = (s, jid);
+        best_min = Some(match best_min {
+            Some(b) if pair_cmp(b, pair).is_le() => b,
+            _ => pair,
+        });
+        best_max = Some(match best_max {
+            Some(b) if pair_cmp(b, pair).is_ge() => b,
+            _ => pair,
+        });
+    };
+    match t.lookup_eq("eid", &key) {
+        Some(rows) => rows.into_iter().for_each(&mut consider),
+        None => t
+            .rows()
+            .filter(|r| r.values[c.eid].ix_key() == key.ix_key())
+            .for_each(&mut consider),
+    }
+    (best_min, best_max)
+}

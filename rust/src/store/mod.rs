@@ -4,26 +4,53 @@
 //! in SQLite (Fig. 2). SQLite is not available offline, so this module
 //! implements an embedded relational store with the same semantics:
 //!
-//! * typed tables with primary keys ([`table`]),
+//! * typed tables with primary keys and secondary indexes ([`table`]),
 //! * a mini-SQL dialect for queries ([`sql`]) — `CREATE TABLE`, `INSERT`,
-//!   `SELECT … WHERE … ORDER BY … LIMIT`, `UPDATE`, `DELETE`,
+//!   `SELECT … WHERE … ORDER BY … LIMIT`, `UPDATE`, `DELETE` — with a
+//!   small planner that routes `WHERE col = k` and
+//!   `ORDER BY col LIMIT n` through an index when one exists,
 //! * durability via a JSON-lines write-ahead log + snapshot ([`wal`]),
-//! * the Auptimizer schema itself ([`schema`]).
+//! * the Auptimizer schema itself ([`schema`]),
+//! * materialized per-experiment aggregates ([`agg`]) kept current by
+//!   [`Store::apply`], so status reads are O(experiments).
 //!
-//! The store is `Send` and wrapped in a mutex by the experiment loop; at
-//! HPO scale (thousands of rows) full scans are instant, so there are no
-//! secondary indexes.
+//! The hot tables carry secondary indexes (equality on `job.eid`,
+//! `job.status`, `job_event.eid`; ordered on `job.(eid, score)`),
+//! attached when the table is created — which includes WAL replay and
+//! checkpoint load, so indexes rebuild on every open — and maintained
+//! incrementally on insert/update/delete. ORDER BY is deterministic:
+//! rows sort by `(order column, primary key)` and DESC reverses the
+//! whole order, so an index stream and a scan-sort of the same query
+//! are bit-identical (the property the planner relies on).
 
 pub mod value;
 pub mod table;
 pub mod sql;
 pub mod wal;
+pub(crate) mod agg;
 pub mod schema;
 pub mod server;
 pub mod client;
 pub mod status;
 pub mod proto;
 pub mod service;
+
+/// Canonical table names of the Fig-2 schema, shared by the aggregate
+/// tracker and the default-index registry.
+pub(crate) mod schema_names {
+    pub const JOB: &str = "job";
+    pub const JOB_EVENT: &str = "job_event";
+}
+
+/// Secondary indexes every store attaches to the hot tables at CREATE
+/// time (including replay — this is how indexes rebuild on open).
+fn default_index_specs(table: &str) -> &'static [(&'static str, Option<&'static str>)] {
+    match table {
+        schema_names::JOB => &[("eid", None), ("status", None), ("eid", Some("score"))],
+        schema_names::JOB_EVENT => &[("eid", None)],
+        _ => &[],
+    }
+}
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -47,12 +74,25 @@ pub struct Store {
     /// the WAL as one append at [`Store::commit_batch`]
     batching: bool,
     pending: Vec<wal::Record>,
+    /// per-experiment status/retry/best aggregates, updated as each
+    /// mutation is applied (replay included)
+    aggs: agg::Aggregates,
+    /// planner toggle; tests flip it off to force the scan path as an
+    /// equivalence oracle
+    planning: bool,
 }
 
 impl Store {
     /// Fresh in-memory store.
     pub fn in_memory() -> Store {
-        Store { tables: BTreeMap::new(), wal: None, batching: false, pending: Vec::new() }
+        Store {
+            tables: BTreeMap::new(),
+            wal: None,
+            batching: false,
+            pending: Vec::new(),
+            aggs: agg::Aggregates::default(),
+            planning: true,
+        }
     }
 
     /// Open (or create) a durable store rooted at `dir` as its EXCLUSIVE
@@ -112,41 +152,33 @@ impl Store {
             }
             sql::Stmt::Select { table, cols, filter, order_by, desc, limit } => {
                 let t = self.table(&table)?;
-                let mut rows: Vec<Row> = t
-                    .rows()
-                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(t.schema(), r)))
-                    .cloned()
-                    .collect();
                 if let Some(key) = &order_by {
-                    let idx = t.schema().col_index(key).ok_or_else(|| {
-                        AupError::Store(format!("unknown ORDER BY column '{key}'"))
-                    })?;
-                    rows.sort_by(|a, b| {
-                        a.values[idx]
-                            .partial_cmp(&b.values[idx])
-                            .unwrap_or(std::cmp::Ordering::Equal)
-                    });
-                    if desc {
-                        rows.reverse();
+                    if t.schema().col_index(key).is_none() {
+                        return Err(AupError::Store(format!(
+                            "unknown ORDER BY column '{key}'"
+                        )));
                     }
                 }
-                if let Some(n) = limit {
-                    rows.truncate(n);
-                }
-                // project columns
-                let schema = t.schema().clone();
-                let (names, projected) = project(&schema, &cols, rows)?;
+                let rows = plan_rows(
+                    t,
+                    filter.as_ref(),
+                    order_by.as_deref(),
+                    desc,
+                    limit,
+                    self.planning,
+                );
+                let (names, projected) = project(t.schema(), &cols, rows)?;
                 Ok(QueryResult::Rows { cols: names, rows: projected })
             }
             sql::Stmt::Update { ref table, ref sets, ref filter } => {
                 // compute affected keys first (borrowck), then apply via WAL
                 let t = self.table(table)?;
-                let schema = t.schema().clone();
-                let keys: Vec<Value> = t
-                    .rows()
-                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(&schema, r)))
-                    .map(|r| r.values[schema.pk_index].clone())
-                    .collect();
+                let pk = t.schema().pk_index;
+                let keys: Vec<Value> =
+                    plan_rows(t, filter.as_ref(), None, false, None, self.planning)
+                        .into_iter()
+                        .map(|r| r.values[pk].clone())
+                        .collect();
                 let n = keys.len();
                 for key in keys {
                     let record = wal::Record::Update {
@@ -160,12 +192,12 @@ impl Store {
             }
             sql::Stmt::Delete { ref table, ref filter } => {
                 let t = self.table(table)?;
-                let schema = t.schema().clone();
-                let keys: Vec<Value> = t
-                    .rows()
-                    .filter(|r| filter.as_ref().map_or(true, |f| f.eval(&schema, r)))
-                    .map(|r| r.values[schema.pk_index].clone())
-                    .collect();
+                let pk = t.schema().pk_index;
+                let keys: Vec<Value> =
+                    plan_rows(t, filter.as_ref(), None, false, None, self.planning)
+                        .into_iter()
+                        .map(|r| r.values[pk].clone())
+                        .collect();
                 let n = keys.len();
                 for key in keys {
                     let record = wal::Record::Delete { table: table.clone(), key };
@@ -176,7 +208,11 @@ impl Store {
         }
     }
 
-    /// Apply a mutation record, optionally journaling it first.
+    /// Apply a mutation record, optionally journaling it first. This is
+    /// the single funnel every mutation passes through — SQL, typed
+    /// schema calls, WAL replay and checkpoint load alike — so it is
+    /// also where secondary indexes attach (on Create) and where the
+    /// per-experiment aggregates are kept current.
     fn apply(&mut self, record: &wal::Record, journal: bool) -> Result<()> {
         // validate & stage
         match record {
@@ -187,7 +223,17 @@ impl Store {
                 if journal {
                     self.journal(record)?;
                 }
-                self.tables.insert(table.clone(), Table::new(schema.clone()));
+                let mut t = Table::new(schema.clone());
+                for (eq, ord) in default_index_specs(table) {
+                    // a same-named table missing the hot columns simply
+                    // skips the index; the planner falls back to scans
+                    let _ = t.add_index(table::IndexSpec {
+                        eq_col: (*eq).to_string(),
+                        ord_col: ord.map(str::to_string),
+                    });
+                }
+                self.aggs.on_create(table, &t);
+                self.tables.insert(table.clone(), t);
             }
             wal::Record::Insert { table, row } => {
                 let t = self.table_mut(table)?;
@@ -196,20 +242,25 @@ impl Store {
                     self.journal(record)?;
                 }
                 self.table_mut(table)?.insert(row.clone())?;
+                self.aggs.on_insert(table, row);
             }
             wal::Record::Update { table, key, sets } => {
                 let t = self.table_mut(table)?;
                 t.validate_update(key, sets)?;
+                let old = self.aggs.capture(&self.tables, table, key);
                 if journal {
                     self.journal(record)?;
                 }
                 self.table_mut(table)?.update(key, sets)?;
+                self.aggs.on_update(&self.tables, table, key, old);
             }
             wal::Record::Delete { table, key } => {
+                let old = self.aggs.capture(&self.tables, table, key);
                 if journal {
                     self.journal(record)?;
                 }
                 self.table_mut(table)?.delete(key)?;
+                self.aggs.on_delete(&self.tables, old);
             }
         }
         Ok(())
@@ -277,15 +328,50 @@ impl Store {
 
     /// Compact the WAL into a snapshot (durable stores only). Any staged
     /// group-commit batch is flushed first so the snapshot covers it.
+    /// Table backing vectors are compacted here too: deleted rows leave
+    /// dead slots behind, and the checkpoint is the natural point to
+    /// reclaim them (the snapshot only carries surviving rows anyway).
     pub fn checkpoint(&mut self) -> Result<()> {
         if self.batching || !self.pending.is_empty() {
             self.commit_batch()?;
+        }
+        for t in self.tables.values_mut() {
+            t.compact();
         }
         if let Some(w) = &mut self.wal {
             let snapshot = wal::snapshot_records(&self.tables);
             w.checkpoint(&snapshot)?;
         }
         Ok(())
+    }
+
+    /// Materialized per-experiment aggregates (status counts, retries,
+    /// best scores), current as of the last applied mutation. `None`
+    /// when a misshapen `job`/`job_event` table defeated tracking —
+    /// status readers then fall back to the one-pass scan.
+    pub(crate) fn aggregates(&self) -> Option<&agg::Aggregates> {
+        if self.aggs.available() {
+            Some(&self.aggs)
+        } else {
+            None
+        }
+    }
+
+    /// Attach a secondary index to a table. In-memory metadata only —
+    /// never journaled, idempotent, errs on unknown table/columns.
+    pub fn ensure_index(&mut self, table: &str, eq_col: &str, ord_col: Option<&str>) -> Result<()> {
+        self.table_mut(table)?.add_index(table::IndexSpec {
+            eq_col: eq_col.to_string(),
+            ord_col: ord_col.map(str::to_string),
+        })
+    }
+
+    /// Oracle switch for equivalence tests: `false` forces every query
+    /// down the filter-sort scan path. Results must be identical either
+    /// way — that invariant is what the property tests assert.
+    #[doc(hidden)]
+    pub fn set_index_planning(&mut self, on: bool) {
+        self.planning = on;
     }
 
     pub fn table(&self, name: &str) -> Result<&Table> {
@@ -309,15 +395,88 @@ impl Store {
     }
 }
 
+/// Execute the access path chosen by [`sql::plan`] and return candidate
+/// row refs — filtered, ordered (when requested) and truncated, but NOT
+/// yet cloned: projection copies only the surviving rows, so a
+/// `LIMIT 1` over 10^5 rows clones one row instead of all of them.
+fn plan_rows<'t>(
+    t: &'t Table,
+    filter: Option<&sql::Expr>,
+    order_by: Option<&str>,
+    desc: bool,
+    limit: Option<usize>,
+    planning: bool,
+) -> Vec<&'t Row> {
+    let schema = t.schema();
+    // the FULL filter re-evaluates over every candidate (the index only
+    // narrows the scan), so a plan can never change the result set
+    let residual = |r: &Row| filter.map_or(true, |f| f.eval(schema, r));
+    let plan = if planning { sql::plan(t, filter, order_by) } else { sql::Plan::Scan };
+    let mut rows: Vec<&Row> = match plan {
+        sql::Plan::PkEq(key) => t.get(key).into_iter().filter(|r| residual(r)).collect(),
+        sql::Plan::IndexEq { col, key, ordered: true } => {
+            let it = t
+                .lookup_ord(col, key, order_by.expect("ordered plan implies ORDER BY"), desc)
+                .expect("planner verified the index")
+                .filter(|r| residual(r));
+            match limit {
+                Some(n) => it.take(n).collect(),
+                None => it.collect(),
+            }
+        }
+        sql::Plan::IndexEq { col, key, ordered: false } => {
+            let mut rows: Vec<&Row> = t
+                .lookup_eq(col, key)
+                .expect("planner verified the index")
+                .into_iter()
+                .filter(|r| residual(r))
+                .collect();
+            sort_rows(schema, &mut rows, order_by, desc);
+            rows
+        }
+        sql::Plan::PkOrder => {
+            let it: Box<dyn Iterator<Item = &Row>> =
+                if desc { Box::new(t.rows_rev()) } else { Box::new(t.rows()) };
+            let it = it.filter(|r| residual(r));
+            match limit {
+                Some(n) => it.take(n).collect(),
+                None => it.collect(),
+            }
+        }
+        sql::Plan::Scan => {
+            let mut rows: Vec<&Row> = t.rows().filter(|r| residual(r)).collect();
+            sort_rows(schema, &mut rows, order_by, desc);
+            rows
+        }
+    };
+    if let Some(n) = limit {
+        rows.truncate(n);
+    }
+    rows
+}
+
+/// Deterministic ORDER BY: sort by `(order column, primary key)` via
+/// [`Value::ix_key`]; DESC reverses the WHOLE order, ties included, so
+/// an index's reverse iteration is bit-identical to a scan's sort.
+fn sort_rows(schema: &TableSchema, rows: &mut [&Row], order_by: Option<&str>, desc: bool) {
+    let Some(key) = order_by else { return };
+    let ci = schema.col_index(key).expect("caller validated the ORDER BY column");
+    let pk = schema.pk_index;
+    rows.sort_by_cached_key(|r| (r.values[ci].ix_key(), r.values[pk].ix_key()));
+    if desc {
+        rows.reverse();
+    }
+}
+
 fn project(
     schema: &TableSchema,
     cols: &sql::Projection,
-    rows: Vec<Row>,
+    rows: Vec<&Row>,
 ) -> Result<(Vec<String>, Vec<Vec<Value>>)> {
     match cols {
         sql::Projection::All => Ok((
             schema.cols.iter().map(|c| c.name.clone()).collect(),
-            rows.into_iter().map(|r| r.values).collect(),
+            rows.into_iter().map(|r| r.values.clone()).collect(),
         )),
         sql::Projection::Cols(names) => {
             let idx: Vec<usize> = names

@@ -4,9 +4,19 @@
 //! every job state transition into `job_event` (append-only), which is
 //! what makes retry accounting and crash forensics queryable via
 //! `aup sql`.
+//!
+//! The hot read accessors (`best_job`, `jobs_of`, `get_experiment`,
+//! `job_events_of`) no longer build `format!`-ed SQL strings: they call
+//! the table layer's typed index lookups directly — `best_job` streams
+//! the ordered `(eid, score)` index and stops at the first FINISHED
+//! row, `get_experiment` is one pk-map probe — and fall back to a scan
+//! only for tables created outside [`init_schema`] (which carry no
+//! indexes). They take `&Store` now: reads don't need the mutable
+//! receiver the SQL path required.
 
+use crate::store::table::{Row, TableSchema};
 use crate::store::value::Value;
-use crate::store::{QueryResult, Store};
+use crate::store::Store;
 use crate::store::sql::quote;
 use crate::util::error::{AupError, Result};
 
@@ -129,6 +139,28 @@ pub fn init_schema(store: &mut Store) -> Result<()> {
              attempt INT, state TEXT, time REAL, detail TEXT)",
         )?;
     }
+    ensure_indexes(store)?;
+    Ok(())
+}
+
+/// Attach the hot-path secondary indexes. The store already does this
+/// automatically when the tables are CREATEd (including WAL replay), so
+/// this is a belt-and-braces no-op on every normal path; it exists so a
+/// store whose tables predate the index registry still gets indexed the
+/// moment a schema consumer touches it. In-memory metadata only — never
+/// journaled, safe on read-only opens.
+pub fn ensure_indexes(store: &mut Store) -> Result<()> {
+    // a same-named table missing the hot columns skips its indexes (the
+    // planner scans instead) — never an error, matching CREATE-time
+    // attachment
+    if store.has_table("job") {
+        let _ = store.ensure_index("job", "eid", None);
+        let _ = store.ensure_index("job", "status", None);
+        let _ = store.ensure_index("job", "eid", Some("score"));
+    }
+    if store.has_table("job_event") {
+        let _ = store.ensure_index("job_event", "eid", None);
+    }
     Ok(())
 }
 
@@ -151,10 +183,18 @@ pub fn next_job_id(store: &mut Store) -> Result<i64> {
 }
 
 /// Look up a user by name (the StoreServer reuses rows across
-/// experiments instead of registering duplicates).
-pub fn find_user(store: &mut Store, name: &str) -> Result<Option<i64>> {
-    let r = store.execute(&format!("SELECT uid FROM user WHERE name = {}", quote(name)))?;
-    Ok(r.scalar().and_then(Value::as_i64))
+/// experiments instead of registering duplicates). Typed scan — the
+/// user table stays tiny.
+pub fn find_user(store: &Store, name: &str) -> Result<Option<i64>> {
+    let t = store.table("user")?;
+    let s = t.schema();
+    let (uid_ci, name_ci) = match (s.col_index("uid"), s.col_index("name")) {
+        (Some(u), Some(n)) => (u, n),
+        _ => return Err(AupError::Store("user table is missing uid/name".into())),
+    };
+    Ok(t.rows()
+        .find(|r| r.values[name_ci].as_str() == Some(name))
+        .and_then(|r| r.values[uid_ci].as_i64()))
 }
 
 /// Register a user (id allocated).
@@ -280,7 +320,9 @@ pub fn finish_job(store: &mut Store, jid: i64, score: Option<f64>, ok: bool, now
 /// (the process that owned it is gone), journaling a `job_event` per
 /// recovered row so retry accounting stays complete. Returns the number
 /// of recovered rows. Called when a durable store is reopened by
-/// `aup run` / `aup batch`.
+/// `aup run` / `aup batch`. The stuck-row sweep reads the `job.status`
+/// index (jid order), so recovery cost scales with the stuck set, not
+/// the table.
 pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
     if !store.has_table("job") {
         init_schema(store)?;
@@ -294,14 +336,23 @@ pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
         .unwrap_or(0.0);
     let mut recovered = 0;
     for status in ["RUNNING", "PENDING"] {
-        let r = store.execute(&format!(
-            "SELECT jid, eid FROM job WHERE status = '{status}' ORDER BY jid"
-        ))?;
-        let stuck: Vec<(i64, i64)> = r
-            .rows()
-            .iter()
-            .map(|row| (row[0].as_i64().unwrap_or(-1), row[1].as_i64().unwrap_or(-1)))
-            .collect();
+        let stuck: Vec<(i64, i64)> = {
+            let t = store.table("job")?;
+            let c = JobCols::resolve(t.schema())?;
+            let key = Value::Text(status.to_string());
+            let rows = match t.lookup_eq("status", &key) {
+                Some(rows) => rows,
+                None => t.rows().filter(|r| r.values[c.status].sql_eq(&key)).collect(),
+            };
+            rows.iter()
+                .map(|r| {
+                    (
+                        r.values[c.jid].as_i64().unwrap_or(-1),
+                        r.values[c.eid].as_i64().unwrap_or(-1),
+                    )
+                })
+                .collect()
+        };
         for (jid, eid) in stuck {
             store.execute(&format!(
                 "UPDATE job SET status = 'FAILED', end_time = {now} WHERE jid = {jid}"
@@ -353,92 +404,198 @@ pub fn log_job_event(
     Ok(evid)
 }
 
-/// All transitions of one experiment, in journal order.
-pub fn job_events_of(store: &mut Store, eid: i64) -> Result<Vec<JobEventRow>> {
-    let r = store.execute(&format!(
-        "SELECT evid, jid, eid, attempt, state, time, detail \
-         FROM job_event WHERE eid = {eid} ORDER BY evid"
-    ))?;
-    Ok(rows_to_events(&r))
-}
-
-/// Map `SELECT evid, jid, eid, attempt, state, time, detail` rows to
-/// typed events (shared by [`job_events_of`] and the status views).
-pub(crate) fn rows_to_events(r: &QueryResult) -> Vec<JobEventRow> {
-    r.rows()
-        .iter()
-        .map(|row| JobEventRow {
-            evid: row[0].as_i64().unwrap_or(-1),
-            jid: row[1].as_i64().unwrap_or(-1),
-            eid: row[2].as_i64().unwrap_or(-1),
-            attempt: row[3].as_i64().unwrap_or(0),
-            state: row[4].as_str().unwrap_or("").to_string(),
-            time: row[5].as_f64().unwrap_or(0.0),
-            detail: row[6].as_str().unwrap_or("").to_string(),
-        })
-        .collect()
-}
-
-fn opt_f64(v: &Value) -> Option<f64> {
+/// NULL-aware numeric read: NULL is "no score", everything else goes
+/// through `as_f64`. The single definition shared by the typed
+/// accessors, the aggregate tracker and the status scan, so the
+/// score-extraction rule cannot drift between paths.
+pub(crate) fn opt_f64(v: &Value) -> Option<f64> {
     match v {
         Value::Null => None,
         v => v.as_f64(),
     }
 }
 
-/// All jobs of an experiment, in jid order.
-pub fn jobs_of(store: &mut Store, eid: i64) -> Result<Vec<JobRow>> {
-    let r = store.execute(&format!(
-        "SELECT jid, eid, rid, config, status, score, start_time, end_time \
-         FROM job WHERE eid = {eid} ORDER BY jid"
-    ))?;
-    rows_to_jobs(&r)
+fn need(s: &TableSchema, col: &str) -> Result<usize> {
+    s.col_index(col).ok_or_else(|| {
+        AupError::Store(format!("table '{}' is missing column '{col}'", s.name))
+    })
 }
 
-fn rows_to_jobs(r: &QueryResult) -> Result<Vec<JobRow>> {
-    r.rows()
-        .iter()
-        .map(|row| {
-            Ok(JobRow {
-                jid: row[0].as_i64().ok_or_else(|| AupError::Store("bad jid".into()))?,
-                eid: row[1].as_i64().unwrap_or(-1),
-                rid: row[2].as_i64().unwrap_or(-1),
-                config: row[3].as_str().unwrap_or("").to_string(),
-                status: JobStatus::parse(row[4].as_str().unwrap_or(""))?,
-                score: opt_f64(&row[5]),
-                start_time: row[6].as_f64().unwrap_or(0.0),
-                end_time: opt_f64(&row[7]),
-            })
+/// Resolved column slots of the `job` table — accessors resolve names
+/// once per call, not once per row.
+pub(crate) struct JobCols {
+    pub jid: usize,
+    pub eid: usize,
+    pub rid: usize,
+    pub config: usize,
+    pub status: usize,
+    pub score: usize,
+    pub start_time: usize,
+    pub end_time: usize,
+}
+
+impl JobCols {
+    pub fn resolve(s: &TableSchema) -> Result<JobCols> {
+        Ok(JobCols {
+            jid: need(s, "jid")?,
+            eid: need(s, "eid")?,
+            rid: need(s, "rid")?,
+            config: need(s, "config")?,
+            status: need(s, "status")?,
+            score: need(s, "score")?,
+            start_time: need(s, "start_time")?,
+            end_time: need(s, "end_time")?,
         })
-        .collect()
+    }
+
+    pub fn row(&self, row: &Row) -> Result<JobRow> {
+        Ok(JobRow {
+            jid: row.values[self.jid]
+                .as_i64()
+                .ok_or_else(|| AupError::Store("bad jid".into()))?,
+            eid: row.values[self.eid].as_i64().unwrap_or(-1),
+            rid: row.values[self.rid].as_i64().unwrap_or(-1),
+            config: row.values[self.config].as_str().unwrap_or("").to_string(),
+            status: JobStatus::parse(row.values[self.status].as_str().unwrap_or(""))?,
+            score: opt_f64(&row.values[self.score]),
+            start_time: row.values[self.start_time].as_f64().unwrap_or(0.0),
+            end_time: opt_f64(&row.values[self.end_time]),
+        })
+    }
+}
+
+/// Resolved column slots of the `job_event` table.
+pub(crate) struct EventCols {
+    pub evid: usize,
+    pub jid: usize,
+    pub eid: usize,
+    pub attempt: usize,
+    pub state: usize,
+    pub time: usize,
+    pub detail: usize,
+}
+
+impl EventCols {
+    pub fn resolve(s: &TableSchema) -> Result<EventCols> {
+        Ok(EventCols {
+            evid: need(s, "evid")?,
+            jid: need(s, "jid")?,
+            eid: need(s, "eid")?,
+            attempt: need(s, "attempt")?,
+            state: need(s, "state")?,
+            time: need(s, "time")?,
+            detail: need(s, "detail")?,
+        })
+    }
+
+    pub fn row(&self, row: &Row) -> JobEventRow {
+        JobEventRow {
+            evid: row.values[self.evid].as_i64().unwrap_or(-1),
+            jid: row.values[self.jid].as_i64().unwrap_or(-1),
+            eid: row.values[self.eid].as_i64().unwrap_or(-1),
+            attempt: row.values[self.attempt].as_i64().unwrap_or(0),
+            state: row.values[self.state].as_str().unwrap_or("").to_string(),
+            time: row.values[self.time].as_f64().unwrap_or(0.0),
+            detail: row.values[self.detail].as_str().unwrap_or("").to_string(),
+        }
+    }
+}
+
+fn experiment_from_row(s: &TableSchema, row: &Row) -> Result<ExperimentRow> {
+    Ok(ExperimentRow {
+        eid: row.values[need(s, "eid")?].as_i64().unwrap_or(-1),
+        uid: row.values[need(s, "uid")?].as_i64().unwrap_or(-1),
+        proposer: row.values[need(s, "proposer")?].as_str().unwrap_or("").to_string(),
+        exp_config: row.values[need(s, "exp_config")?].as_str().unwrap_or("").to_string(),
+        start_time: row.values[need(s, "start_time")?].as_f64().unwrap_or(0.0),
+        end_time: opt_f64(&row.values[need(s, "end_time")?]),
+        best_score: opt_f64(&row.values[need(s, "best_score")?]),
+    })
+}
+
+/// All transitions of one experiment, in journal order — one probe of
+/// the `job_event.eid` index (groups iterate in evid order).
+pub fn job_events_of(store: &Store, eid: i64) -> Result<Vec<JobEventRow>> {
+    let t = store.table("job_event")?;
+    let c = EventCols::resolve(t.schema())?;
+    let key = Value::Int(eid);
+    let rows = match t.lookup_eq("eid", &key) {
+        Some(rows) => rows,
+        None => t.rows().filter(|r| r.values[c.eid].sql_eq(&key)).collect(),
+    };
+    Ok(rows.into_iter().map(|r| c.row(r)).collect())
+}
+
+/// All jobs of an experiment, in jid order — one probe of the `job.eid`
+/// index (groups iterate in pk order).
+pub fn jobs_of(store: &Store, eid: i64) -> Result<Vec<JobRow>> {
+    let t = store.table("job")?;
+    let c = JobCols::resolve(t.schema())?;
+    let key = Value::Int(eid);
+    let rows = match t.lookup_eq("eid", &key) {
+        Some(rows) => rows,
+        None => t.rows().filter(|r| r.values[c.eid].sql_eq(&key)).collect(),
+    };
+    rows.into_iter().map(|r| c.row(r)).collect()
 }
 
 /// The best finished job of an experiment (min or max by `maximize`).
-pub fn best_job(store: &mut Store, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
-    let order = if maximize { "DESC" } else { "ASC" };
-    let r = store.execute(&format!(
-        "SELECT jid, eid, rid, config, status, score, start_time, end_time \
-         FROM job WHERE eid = {eid} AND status = 'FINISHED' AND score IS NOT NULL \
-         ORDER BY score {order} LIMIT 1"
-    ))?;
-    Ok(rows_to_jobs(&r)?.into_iter().next())
+/// Streams the ordered `(eid, score)` index — descending for maximize —
+/// and returns at the FIRST finished, scored row, so the cost is
+/// O(log n + skipped rows), not a table scan + sort. Ties on score
+/// resolve to the larger jid when maximizing and the smaller when
+/// minimizing (the deterministic `(score, pk)` ORDER BY).
+pub fn best_job(store: &Store, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
+    let t = store.table("job")?;
+    let c = JobCols::resolve(t.schema())?;
+    let key = Value::Int(eid);
+    if let Some(iter) = t.lookup_ord("eid", &key, "score", maximize) {
+        for row in iter {
+            if row.values[c.status].as_str() == Some(JobStatus::Finished.name())
+                && !matches!(row.values[c.score], Value::Null)
+            {
+                return Ok(Some(c.row(row)?));
+            }
+        }
+        return Ok(None);
+    }
+    // no ordered index (table created outside init_schema): scan
+    let mut best: Option<&Row> = None;
+    for row in t.rows() {
+        if !row.values[c.eid].sql_eq(&key)
+            || row.values[c.status].as_str() != Some(JobStatus::Finished.name())
+            || matches!(row.values[c.score], Value::Null)
+        {
+            continue;
+        }
+        best = Some(match best {
+            None => row,
+            Some(b) => {
+                let kb = (b.values[c.score].ix_key(), b.values[c.jid].ix_key());
+                let kr = (row.values[c.score].ix_key(), row.values[c.jid].ix_key());
+                if (kr > kb) == maximize && kr != kb {
+                    row
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best.map(|r| c.row(r)).transpose()
 }
 
-/// Load an experiment row.
-pub fn get_experiment(store: &mut Store, eid: i64) -> Result<Option<ExperimentRow>> {
-    let r = store.execute(&format!(
-        "SELECT eid, uid, proposer, exp_config, start_time, end_time, best_score \
-         FROM experiment WHERE eid = {eid}"
-    ))?;
-    Ok(r.rows().first().map(|row| ExperimentRow {
-        eid: row[0].as_i64().unwrap_or(-1),
-        uid: row[1].as_i64().unwrap_or(-1),
-        proposer: row[2].as_str().unwrap_or("").to_string(),
-        exp_config: row[3].as_str().unwrap_or("").to_string(),
-        start_time: row[4].as_f64().unwrap_or(0.0),
-        end_time: opt_f64(&row[5]),
-        best_score: opt_f64(&row[6]),
-    }))
+/// Load an experiment row: one pk-map probe.
+pub fn get_experiment(store: &Store, eid: i64) -> Result<Option<ExperimentRow>> {
+    let t = store.table("experiment")?;
+    t.get(&Value::Int(eid))
+        .map(|row| experiment_from_row(t.schema(), row))
+        .transpose()
+}
+
+/// Every experiment row, in eid order (the status views' driver).
+pub fn all_experiments(store: &Store) -> Result<Vec<ExperimentRow>> {
+    let t = store.table("experiment")?;
+    t.rows().map(|row| experiment_from_row(t.schema(), row)).collect()
 }
 
 #[cfg(test)]

@@ -707,6 +707,46 @@ mod tests {
     }
 
     #[test]
+    fn tracker_journals_through_the_remote_transport() {
+        // the ROADMAP open item: experiment::Tracker is generic over
+        // StoreApi, so a worker process on another host can journal into
+        // the serving store through RemoteStoreClient — here: a tracker
+        // whose client is the SOCKET flavor, asserted against the
+        // in-process view of the same store
+        let dir = temp_dir("aup-svc-tracker").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let cfg = crate::experiment::config::ExperimentConfig::from_json_str(
+            r#"{
+                "proposer": "random", "script": "builtin:sphere",
+                "n_samples": 2, "target": "min",
+                "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]
+            }"#,
+        )
+        .unwrap();
+        let mut tracker =
+            crate::experiment::tracker::Tracker::new(remote, "remote-worker", &cfg).unwrap();
+        let mut c = crate::search::BasicConfig::new();
+        c.set_num("x", 0.5).set_num("job_id", 0.0);
+        tracker.job_submitted(0, &c).unwrap();
+        tracker.job_running(0, 3).unwrap();
+        tracker.job_finished(0, Some(0.25)).unwrap();
+        tracker.experiment_finished(Some(0.25)).unwrap();
+        let eid = tracker.eid();
+        assert_eq!(tracker.best_job().unwrap().unwrap().score, Some(0.25));
+        // the in-process client sees the remotely journaled rows
+        let jobs = client.jobs_of(eid).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].rid, 3);
+        assert_eq!(client.status().unwrap()[0].user, "remote-worker");
+        drop(tracker);
+        drop(service);
+        drop(client);
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
     fn remote_sql_is_select_only() {
         let dir = temp_dir("aup-svc-sql").unwrap();
         let (handle, client, service, sock) = spawn_served(&dir);

@@ -18,7 +18,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::store::table::{ColDef, Row, TableSchema};
+use crate::store::table::{ColDef, Row, Table, TableSchema};
 use crate::store::value::{ColType, Value};
 use crate::util::error::{AupError, Result};
 
@@ -101,6 +101,103 @@ impl Expr {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// planner
+
+/// Access path chosen by [`plan`] for one statement's filter. The
+/// executor (in `store::mod`) applies the FULL original filter as a
+/// residual over whatever candidate rows the path yields, so a plan can
+/// only ever narrow the scan — never change the result set.
+#[derive(Debug, PartialEq)]
+pub enum Plan<'q> {
+    /// `WHERE pk = k` (conjunct on the primary key): at most one row,
+    /// straight out of the pk map.
+    PkEq(&'q Value),
+    /// An equality conjunct covered by a secondary index. `ordered` is
+    /// true when the chosen index also sorts by the query's ORDER BY
+    /// column, so rows stream pre-sorted and LIMIT stops early.
+    IndexEq { col: &'q str, key: &'q Value, ordered: bool },
+    /// `ORDER BY pk [DESC]`: stream the pk map in (reverse) order —
+    /// no sort, LIMIT stops early (the `recent_events` shape).
+    PkOrder,
+    /// Nothing usable: filter + sort over all live rows.
+    Scan,
+}
+
+/// Collect the top-level AND conjuncts of a filter tree.
+fn conjuncts<'q>(e: &'q Expr, out: &mut Vec<&'q Expr>) {
+    match e {
+        Expr::And(a, b) => {
+            conjuncts(a, out);
+            conjuncts(b, out);
+        }
+        other => out.push(other),
+    }
+}
+
+/// True when `v` can key an index probe: NULL never equals anything
+/// (`col = NULL` is three-valued false), and NaN or a magnitude at/past
+/// 2^53 breaks the index-group/sql_eq correspondence (sql_eq compares
+/// through f64, which folds adjacent giant integers together; the index
+/// key keeps them distinct) — all of those fall back to the scan, whose
+/// residual filter uses sql_eq directly.
+fn probeable(v: &Value) -> bool {
+    const F64_EXACT_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+    match v {
+        Value::Null => false,
+        Value::Int(i) => (i.unsigned_abs() as f64) < F64_EXACT_INT,
+        Value::Real(r) => !r.is_nan() && r.abs() < F64_EXACT_INT,
+        Value::Text(_) => true,
+    }
+}
+
+/// Choose an access path for `filter` (+ optional ORDER BY column)
+/// against `table`. Pure analysis — no rows are touched.
+pub fn plan<'q>(
+    table: &Table,
+    filter: Option<&'q Expr>,
+    order_by: Option<&str>,
+) -> Plan<'q> {
+    let mut cs: Vec<&Expr> = Vec::new();
+    if let Some(f) = filter {
+        conjuncts(f, &mut cs);
+    }
+    // 1) a primary-key equality beats everything (single-row lookup)
+    for c in &cs {
+        if let Expr::Cmp { col, op: CmpOp::Eq, val } = c {
+            if col == table.pk_col() && probeable(val) {
+                return Plan::PkEq(val);
+            }
+        }
+    }
+    // 2) an indexed equality; prefer one whose ordered index matches
+    //    the ORDER BY so the sort disappears too
+    let mut best: Option<Plan<'q>> = None;
+    for c in &cs {
+        if let Expr::Cmp { col, op: CmpOp::Eq, val } = c {
+            if !probeable(val) {
+                continue;
+            }
+            if let Some(ord) = order_by {
+                if table.has_ord_index(col, ord) {
+                    return Plan::IndexEq { col, key: val, ordered: true };
+                }
+            }
+            if best.is_none() && table.has_eq_index(col) {
+                best = Some(Plan::IndexEq { col, key: val, ordered: false });
+            }
+        }
+    }
+    if let Some(p) = best {
+        return p;
+    }
+    // 3) ORDER BY the primary key streams from the pk map
+    if order_by == Some(table.pk_col()) {
+        return Plan::PkOrder;
+    }
+    Plan::Scan
 }
 
 // ---------------------------------------------------------------------------
@@ -571,5 +668,75 @@ mod tests {
     #[test]
     fn quote_escapes() {
         assert_eq!(quote("a'b"), "'a''b'");
+    }
+
+    fn planner_table() -> Table {
+        use crate::store::table::IndexSpec;
+        let mut t = Table::new(TableSchema {
+            name: "job".into(),
+            cols: vec![
+                ColDef { name: "jid".into(), ctype: ColType::Int },
+                ColDef { name: "eid".into(), ctype: ColType::Int },
+                ColDef { name: "score".into(), ctype: ColType::Real },
+                ColDef { name: "status".into(), ctype: ColType::Text },
+            ],
+            pk_index: 0,
+        });
+        t.add_index(IndexSpec { eq_col: "eid".into(), ord_col: None }).unwrap();
+        t.add_index(IndexSpec { eq_col: "eid".into(), ord_col: Some("score".into()) })
+            .unwrap();
+        t
+    }
+
+    fn filter_of(sql: &str) -> Option<Expr> {
+        match parse(sql).unwrap() {
+            Stmt::Select { filter, .. } => filter,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn planner_picks_pk_then_index_then_scan() {
+        let t = planner_table();
+        let f = filter_of("SELECT * FROM job WHERE eid = 3 AND jid = 7");
+        assert_eq!(plan(&t, f.as_ref(), None), Plan::PkEq(&Value::Int(7)));
+
+        let f = filter_of("SELECT * FROM job WHERE status = 'FINISHED' AND eid = 3");
+        assert_eq!(
+            plan(&t, f.as_ref(), None),
+            Plan::IndexEq { col: "eid", key: &Value::Int(3), ordered: false }
+        );
+        // ORDER BY score upgrades to the ordered (eid, score) index
+        assert_eq!(
+            plan(&t, f.as_ref(), Some("score")),
+            Plan::IndexEq { col: "eid", key: &Value::Int(3), ordered: true }
+        );
+
+        let f = filter_of("SELECT * FROM job WHERE score >= 0.5");
+        assert_eq!(plan(&t, f.as_ref(), None), Plan::Scan);
+        assert_eq!(plan(&t, f.as_ref(), Some("jid")), Plan::PkOrder);
+        assert_eq!(plan(&t, None, Some("jid")), Plan::PkOrder);
+        assert_eq!(plan(&t, None, None), Plan::Scan);
+    }
+
+    #[test]
+    fn planner_never_probes_null_nan_or_giant_ints() {
+        let t = planner_table();
+        let f = filter_of("SELECT * FROM job WHERE eid = NULL");
+        assert_eq!(plan(&t, f.as_ref(), None), Plan::Scan);
+        let f = Expr::Cmp { col: "eid".into(), op: CmpOp::Eq, val: Value::Real(f64::NAN) };
+        assert_eq!(plan(&t, Some(&f), None), Plan::Scan);
+        // at 2^53 sql_eq folds adjacent ints together but the index key
+        // keeps them apart — a probe would miss rows the scan matches
+        let f = Expr::Cmp { col: "eid".into(), op: CmpOp::Eq, val: Value::Int(1i64 << 53) };
+        assert_eq!(plan(&t, Some(&f), None), Plan::Scan);
+        let f = Expr::Cmp { col: "jid".into(), op: CmpOp::Eq, val: Value::Int(-(1i64 << 53)) };
+        assert_eq!(plan(&t, Some(&f), None), Plan::Scan);
+        let f =
+            Expr::Cmp { col: "eid".into(), op: CmpOp::Eq, val: Value::Int((1i64 << 53) - 1) };
+        assert!(matches!(plan(&t, Some(&f), None), Plan::IndexEq { .. }));
+        // OR trees are not conjuncts — scan
+        let f = filter_of("SELECT * FROM job WHERE eid = 1 OR eid = 2");
+        assert_eq!(plan(&t, f.as_ref(), None), Plan::Scan);
     }
 }

@@ -1,15 +1,30 @@
 //! Live bookkeeping queries — the paper's §III-C "tracking" story as a
 //! user-facing surface (`aup status` / `aup top`).
 //!
-//! Everything here works on a plain `&mut Store`, so the same code
-//! serves two paths: the [`StoreServer`] answers [`StoreCmd::Status`]
-//! against the live store mid-run, and the CLI reopens a store directory
+//! Everything here works on a plain `&Store`, so the same code serves
+//! two paths: the [`StoreServer`] answers [`StoreCmd::Status`] against
+//! the live store mid-run, and the CLI reopens a store directory
 //! read-only after (or during) a run.
+//!
+//! Cost model: [`experiment_statuses`] reads the store's materialized
+//! per-experiment aggregates — O(experiments), independent of job
+//! count, with zero table scans — because [`Store::apply`] keeps them
+//! current on every mutation (and builds them during replay, so the
+//! read-only/--offline path has them the moment the store opens). When
+//! aggregates are unavailable (a misshapen `job` table), the fallback
+//! [`experiment_statuses_scan`] computes the same answer in ONE pass
+//! per table — the old shape issued 4+ queries *per experiment* (user
+//! name, `jobs_of`, a BACKOFF `COUNT(*)`, `best_job`), going
+//! quadratic-ish exactly when a live `aup top` mattered most.
 //!
 //! [`StoreServer`]: crate::store::server::StoreServer
 //! [`StoreCmd::Status`]: crate::store::server::StoreCmd::Status
+//! [`Store::apply`]: crate::store::Store
 
-use crate::store::schema::{self, JobEventRow, JobStatus};
+use std::collections::BTreeMap;
+
+use crate::store::agg::ExperimentAggregate;
+use crate::store::schema::{self, EventCols, ExperimentRow, JobCols, JobEventRow};
 use crate::store::{Store, Value};
 use crate::util::error::Result;
 use crate::util::json::Json;
@@ -62,98 +77,163 @@ fn has_schema(store: &Store) -> bool {
         .all(|t| store.has_table(t))
 }
 
-/// Summarize every experiment in the store, in eid order.
-pub fn experiment_statuses(store: &mut Store) -> Result<Vec<ExperimentStatus>> {
-    if !has_schema(store) {
-        return Ok(Vec::new());
-    }
-    let eids: Vec<i64> = store
-        .execute("SELECT eid FROM experiment ORDER BY eid")?
-        .rows()
-        .iter()
-        .filter_map(|r| r.first().and_then(Value::as_i64))
-        .collect();
-    let mut out = Vec::with_capacity(eids.len());
-    for eid in eids {
-        let exp = match schema::get_experiment(store, eid)? {
-            Some(e) => e,
-            None => continue,
-        };
-        let user = store
-            .execute(&format!("SELECT name FROM user WHERE uid = {}", exp.uid))?
-            .scalar()
-            .and_then(Value::as_str)
-            .map(str::to_string)
-            .unwrap_or_default();
-        let maximize = Json::parse(&exp.exp_config)
-            .ok()
-            .and_then(|j| j.get("target").and_then(|t| t.as_str().map(str::to_string)))
-            .is_some_and(|t| crate::experiment::config::target_means_maximize(&t));
-        let jobs = schema::jobs_of(store, eid)?;
-        let count = |s: JobStatus| jobs.iter().filter(|j| j.status == s).count();
-        let retries = store
-            .execute(&format!(
-                "SELECT COUNT(*) FROM job_event WHERE eid = {eid} AND state = 'BACKOFF'"
-            ))?
-            .scalar()
-            .and_then(Value::as_i64)
-            .unwrap_or(0) as usize;
-        let best = schema::best_job(store, eid, maximize)?;
-        let best_score = exp
-            .best_score
-            .or_else(|| best.as_ref().and_then(|b| b.score));
-        out.push(ExperimentStatus {
-            eid,
-            user,
-            proposer: exp.proposer,
-            maximize,
-            start_time: exp.start_time,
-            end_time: exp.end_time,
-            n_jobs: jobs.len(),
-            pending: count(JobStatus::Pending),
-            running: count(JobStatus::Running),
-            finished: count(JobStatus::Finished),
-            failed: count(JobStatus::Failed),
-            cancelled: count(JobStatus::Cancelled),
-            retries,
-            best_score,
-            best_jid: best.map(|b| b.jid),
-        });
-    }
-    Ok(out)
-}
-
-/// All RUNNING jobs across experiments, oldest first.
-pub fn running_jobs(store: &mut Store) -> Result<Vec<RunningJob>> {
-    if !store.has_table("job") {
-        return Ok(Vec::new());
-    }
-    let r = store.execute(
-        "SELECT jid, eid, rid, start_time, config FROM job \
-         WHERE status = 'RUNNING' ORDER BY start_time",
-    )?;
-    Ok(r.rows()
-        .iter()
-        .map(|row| RunningJob {
-            jid: row[0].as_i64().unwrap_or(-1),
-            eid: row[1].as_i64().unwrap_or(-1),
-            rid: row[2].as_i64().unwrap_or(-1),
-            start_time: row[3].as_f64().unwrap_or(0.0),
-            config: row[4].as_str().unwrap_or("").to_string(),
+/// Names of every user, keyed by uid (one pass over the tiny table).
+fn user_names(store: &Store) -> Result<BTreeMap<i64, String>> {
+    let t = store.table("user")?;
+    let s = t.schema();
+    let (Some(uid_ci), Some(name_ci)) = (s.col_index("uid"), s.col_index("name")) else {
+        return Ok(BTreeMap::new());
+    };
+    Ok(t.rows()
+        .filter_map(|r| {
+            let uid = r.values[uid_ci].as_i64()?;
+            Some((uid, r.values[name_ci].as_str().unwrap_or("").to_string()))
         })
         .collect())
 }
 
-/// The most recent `limit` scheduler transitions, oldest of them first.
-pub fn recent_events(store: &mut Store, limit: usize) -> Result<Vec<JobEventRow>> {
+fn parse_maximize(exp_config: &str) -> bool {
+    Json::parse(exp_config)
+        .ok()
+        .and_then(|j| j.get("target").and_then(|t| t.as_str().map(str::to_string)))
+        .is_some_and(|t| crate::experiment::config::target_means_maximize(&t))
+}
+
+/// Assemble one status line from an experiment row + its aggregate.
+/// Used identically by the materialized path and the scan fallback, so
+/// the two can only differ if the aggregates themselves drifted (which
+/// the equivalence property test would catch).
+fn assemble(
+    exp: ExperimentRow,
+    users: &BTreeMap<i64, String>,
+    a: &ExperimentAggregate,
+) -> ExperimentStatus {
+    let maximize = parse_maximize(&exp.exp_config);
+    let best = a.best(maximize);
+    ExperimentStatus {
+        eid: exp.eid,
+        user: users.get(&exp.uid).cloned().unwrap_or_default(),
+        proposer: exp.proposer,
+        maximize,
+        start_time: exp.start_time,
+        end_time: exp.end_time,
+        n_jobs: a.n_jobs,
+        pending: a.pending,
+        running: a.running,
+        finished: a.finished,
+        failed: a.failed,
+        cancelled: a.cancelled,
+        retries: a.retries,
+        best_score: exp.best_score.or(best.map(|(s, _)| s)),
+        best_jid: best.map(|(_, j)| j),
+    }
+}
+
+/// Summarize every experiment in the store, in eid order.
+/// O(experiments): reads the materialized aggregates — no table scans,
+/// so the cost of a live `aup status`/`aup top` is independent of job
+/// count. Falls back to [`experiment_statuses_scan`] when aggregate
+/// tracking is unavailable.
+pub fn experiment_statuses(store: &Store) -> Result<Vec<ExperimentStatus>> {
+    if !has_schema(store) {
+        return Ok(Vec::new());
+    }
+    let Some(aggs) = store.aggregates() else {
+        return experiment_statuses_scan(store);
+    };
+    let users = user_names(store)?;
+    let empty = ExperimentAggregate::default();
+    Ok(schema::all_experiments(store)?
+        .into_iter()
+        .map(|exp| {
+            let a = aggs.get(exp.eid).unwrap_or(&empty);
+            assemble(exp, &users, a)
+        })
+        .collect())
+}
+
+/// The scan flavor of [`experiment_statuses`]: ONE pass over each of
+/// `job` and `job_event` (the old shape was 4+ queries per experiment).
+/// Serves stores without aggregate tracking — and doubles as the oracle
+/// the property tests compare the materialized path against.
+pub fn experiment_statuses_scan(store: &Store) -> Result<Vec<ExperimentStatus>> {
+    if !has_schema(store) {
+        return Ok(Vec::new());
+    }
+    let users = user_names(store)?;
+    let mut per_exp: BTreeMap<i64, ExperimentAggregate> = BTreeMap::new();
+    {
+        let t = store.table("job")?;
+        let c = JobCols::resolve(t.schema())?;
+        for row in t.rows() {
+            let Some(eid) = row.values[c.eid].as_i64() else { continue };
+            let score = schema::opt_f64(&row.values[c.score]);
+            per_exp.entry(eid).or_default().add_job(
+                row.values[c.status].as_str(),
+                score,
+                row.values[c.jid].as_i64().unwrap_or(-1),
+            );
+        }
+    }
+    {
+        let t = store.table("job_event")?;
+        let c = EventCols::resolve(t.schema())?;
+        for row in t.rows() {
+            let Some(eid) = row.values[c.eid].as_i64() else { continue };
+            per_exp
+                .entry(eid)
+                .or_default()
+                .add_event(row.values[c.state].as_str());
+        }
+    }
+    let empty = ExperimentAggregate::default();
+    Ok(schema::all_experiments(store)?
+        .into_iter()
+        .map(|exp| {
+            let a = per_exp.get(&exp.eid).unwrap_or(&empty);
+            assemble(exp, &users, a)
+        })
+        .collect())
+}
+
+/// All RUNNING jobs across experiments, oldest first (ties by jid) —
+/// one probe of the `job.status` index, so the cost scales with the
+/// running set, not the table.
+pub fn running_jobs(store: &Store) -> Result<Vec<RunningJob>> {
+    if !store.has_table("job") {
+        return Ok(Vec::new());
+    }
+    let t = store.table("job")?;
+    let c = JobCols::resolve(t.schema())?;
+    let key = Value::Text("RUNNING".to_string());
+    let rows = match t.lookup_eq("status", &key) {
+        Some(rows) => rows,
+        None => t.rows().filter(|r| r.values[c.status].sql_eq(&key)).collect(),
+    };
+    let mut out: Vec<RunningJob> = rows
+        .into_iter()
+        .map(|row| RunningJob {
+            jid: row.values[c.jid].as_i64().unwrap_or(-1),
+            eid: row.values[c.eid].as_i64().unwrap_or(-1),
+            rid: row.values[c.rid].as_i64().unwrap_or(-1),
+            start_time: row.values[c.start_time].as_f64().unwrap_or(0.0),
+            config: row.values[c.config].as_str().unwrap_or("").to_string(),
+        })
+        .collect();
+    out.sort_by(|a, b| a.start_time.total_cmp(&b.start_time).then(a.jid.cmp(&b.jid)));
+    Ok(out)
+}
+
+/// The most recent `limit` scheduler transitions, oldest of them first
+/// — streamed off the tail of the pk map (evid order), no scan, no
+/// sort.
+pub fn recent_events(store: &Store, limit: usize) -> Result<Vec<JobEventRow>> {
     if !store.has_table("job_event") {
         return Ok(Vec::new());
     }
-    let r = store.execute(&format!(
-        "SELECT evid, jid, eid, attempt, state, time, detail \
-         FROM job_event ORDER BY evid DESC LIMIT {limit}"
-    ))?;
-    let mut events = schema::rows_to_events(&r);
+    let t = store.table("job_event")?;
+    let c = EventCols::resolve(t.schema())?;
+    let mut events: Vec<JobEventRow> = t.rows_rev().take(limit).map(|r| c.row(r)).collect();
     events.reverse();
     Ok(events)
 }

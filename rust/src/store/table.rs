@@ -1,8 +1,30 @@
-//! Typed table with a primary key.
+//! Typed table with a primary key and secondary indexes.
+//!
+//! The primary-key map and every secondary index are keyed by
+//! [`IxKey`], the total order shared with the scan path's ORDER BY
+//! comparator — so an index scan and a filter-sort scan of the same
+//! query return rows in the SAME order, which is what lets the planner
+//! swap one for the other without changing results.
+//!
+//! Two index shapes (see [`IndexSpec`]):
+//!
+//! * equality (`eq_col`): groups rows by one column; a group iterates
+//!   in primary-key order;
+//! * ordered (`eq_col` + `ord_col`): groups rows by `eq_col` and keeps
+//!   each group sorted by `(ord_col, pk)`, so
+//!   `WHERE eq_col = k ORDER BY ord_col [DESC] LIMIT n` streams without
+//!   sorting (the `best_job` shape: `(eid, score)`).
+//!
+//! Indexes are maintained incrementally on insert/update/delete and are
+//! rebuilt for free on WAL replay / checkpoint load because replay
+//! funnels through the same mutation calls. Deleted rows leave a dead
+//! slot in the backing `Vec<Row>` (payload dropped immediately); slots
+//! are reclaimed by [`Table::compact`], which the store runs at every
+//! checkpoint.
 
 use std::collections::BTreeMap;
 
-use crate::store::value::{ColType, Value};
+use crate::store::value::{ColType, IxKey, Value};
 use crate::util::error::{AupError, Result};
 
 /// Column definition.
@@ -32,11 +54,60 @@ pub struct Row {
     pub values: Vec<Value>,
 }
 
-/// Table: rows stored in insertion order, with a pk -> row-index map.
+/// Declaration of a secondary index (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexSpec {
+    /// equality column: serves `WHERE eq_col = k`
+    pub eq_col: String,
+    /// optional ordering column: each `k` group stays sorted by
+    /// `(ord_col, pk)` so `ORDER BY ord_col LIMIT n` streams
+    pub ord_col: Option<String>,
+}
+
+/// One maintained secondary index.
+struct Index {
+    spec: IndexSpec,
+    eq_ci: usize,
+    ord_ci: Option<usize>,
+    /// eq group -> (ord key [Null for eq-only indexes], pk key) -> slot
+    map: BTreeMap<IxKey, BTreeMap<(IxKey, IxKey), usize>>,
+}
+
+impl Index {
+    fn entry_key(&self, pk: &IxKey, row: &Row) -> (IxKey, (IxKey, IxKey)) {
+        let eq = row.values[self.eq_ci].ix_key();
+        let ord = match self.ord_ci {
+            Some(ci) => row.values[ci].ix_key(),
+            None => IxKey::Null,
+        };
+        (eq, (ord, pk.clone()))
+    }
+
+    fn add(&mut self, pk: &IxKey, row: &Row, slot: usize) {
+        let (eq, sub) = self.entry_key(pk, row);
+        self.map.entry(eq).or_default().insert(sub, slot);
+    }
+
+    fn remove(&mut self, pk: &IxKey, row: &Row) {
+        let (eq, sub) = self.entry_key(pk, row);
+        if let Some(group) = self.map.get_mut(&eq) {
+            group.remove(&sub);
+            if group.is_empty() {
+                self.map.remove(&eq);
+            }
+        }
+    }
+}
+
+/// Table: rows in a slot vector, with a pk -> slot map and secondary
+/// indexes. Iteration ([`Table::rows`]) is in primary-key order.
 pub struct Table {
     schema: TableSchema,
     rows: Vec<Row>,
-    pk_map: BTreeMap<String, usize>,
+    /// live pk -> slot; BTreeMap over [`IxKey`], so int keys iterate in
+    /// NUMERIC order (the old string-keyed map ordered "n10" < "n2")
+    pk_map: BTreeMap<IxKey, usize>,
+    indexes: Vec<Index>,
     /// High-water mark over every integer-valued primary key inserted
     /// into THIS in-memory table — a delete does not lower it. Id
     /// allocators (`schema::next_id`, the jid seed) read this for O(1)
@@ -51,25 +122,31 @@ pub struct Table {
     max_int_pk: Option<i64>,
 }
 
-/// Primary keys are mapped through a canonical string (so Int 1 and
-/// Real 1.0 collide, matching SQL semantics).
-fn pk_key(v: &Value) -> String {
-    match v {
-        Value::Null => "null".to_string(),
-        Value::Int(i) => format!("n{i}"),
-        Value::Real(r) if r.fract() == 0.0 => format!("n{}", *r as i64),
-        Value::Real(r) => format!("r{r}"),
-        Value::Text(s) => format!("t{s}"),
-    }
+/// Primary keys are mapped through [`Value::ix_key`], so Int 1 and
+/// Real 1.0 collide (SQL semantics) and int keys order numerically.
+fn pk_key(v: &Value) -> IxKey {
+    v.ix_key()
 }
 
 impl Table {
     pub fn new(schema: TableSchema) -> Table {
-        Table { schema, rows: Vec::new(), pk_map: BTreeMap::new(), max_int_pk: None }
+        Table {
+            schema,
+            rows: Vec::new(),
+            pk_map: BTreeMap::new(),
+            indexes: Vec::new(),
+            max_int_pk: None,
+        }
     }
 
     pub fn schema(&self) -> &TableSchema {
         &self.schema
+    }
+
+    /// Name of the primary-key column (planner: `WHERE pk = k` is a map
+    /// lookup, no index needed).
+    pub fn pk_col(&self) -> &str {
+        &self.schema.cols[self.schema.pk_index].name
     }
 
     pub fn len(&self) -> usize {
@@ -80,10 +157,115 @@ impl Table {
         self.pk_map.is_empty()
     }
 
-    /// Live rows (deleted slots skipped).
+    /// Slots currently held by the backing vector, INCLUDING dead ones
+    /// (tombstone accounting; tests assert [`Table::compact`] reclaims).
+    #[doc(hidden)]
+    pub fn raw_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Live rows in primary-key order.
     pub fn rows(&self) -> impl Iterator<Item = &Row> {
         self.pk_map.values().map(move |&i| &self.rows[i])
     }
+
+    /// Live rows in REVERSE primary-key order (`ORDER BY pk DESC LIMIT
+    /// n` streams from here — the `recent_events` shape).
+    pub fn rows_rev(&self) -> impl Iterator<Item = &Row> {
+        self.pk_map.values().rev().map(move |&i| &self.rows[i])
+    }
+
+    // -- secondary indexes -------------------------------------------------
+
+    /// Attach (and build) a secondary index. Idempotent: re-adding an
+    /// identical spec is a no-op. Errs on unknown columns.
+    pub fn add_index(&mut self, spec: IndexSpec) -> Result<()> {
+        if self.indexes.iter().any(|ix| ix.spec == spec) {
+            return Ok(());
+        }
+        let eq_ci = self.schema.col_index(&spec.eq_col).ok_or_else(|| {
+            AupError::Store(format!(
+                "no column '{}' to index in table '{}'",
+                spec.eq_col, self.schema.name
+            ))
+        })?;
+        let ord_ci = match &spec.ord_col {
+            Some(c) => Some(self.schema.col_index(c).ok_or_else(|| {
+                AupError::Store(format!(
+                    "no column '{c}' to index in table '{}'",
+                    self.schema.name
+                ))
+            })?),
+            None => None,
+        };
+        let mut ix = Index { spec, eq_ci, ord_ci, map: BTreeMap::new() };
+        for (pk, &slot) in &self.pk_map {
+            ix.add(pk, &self.rows[slot], slot);
+        }
+        self.indexes.push(ix);
+        Ok(())
+    }
+
+    /// True when an equality lookup on `col` can be served by an index.
+    pub fn has_eq_index(&self, col: &str) -> bool {
+        self.indexes.iter().any(|ix| ix.spec.eq_col == col)
+    }
+
+    /// True when `WHERE eq_col = k ORDER BY ord_col` can stream
+    /// pre-sorted from an ordered index.
+    pub fn has_ord_index(&self, eq_col: &str, ord_col: &str) -> bool {
+        self.indexes
+            .iter()
+            .any(|ix| ix.spec.eq_col == eq_col && ix.spec.ord_col.as_deref() == Some(ord_col))
+    }
+
+    fn index_on(&self, eq_col: &str, ord_col: Option<&str>) -> Option<&Index> {
+        self.indexes
+            .iter()
+            .find(|ix| ix.spec.eq_col == eq_col && ix.spec.ord_col.as_deref() == ord_col)
+    }
+
+    /// Equality lookup: every live row with `col` sql-equal to `key`,
+    /// in primary-key order. `None` when no index covers `col` (callers
+    /// fall back to a scan).
+    pub fn lookup_eq(&self, col: &str, key: &Value) -> Option<Vec<&Row>> {
+        // prefer the eq-only index (its groups are already pk-ordered)
+        let ix = self
+            .index_on(col, None)
+            .or_else(|| self.indexes.iter().find(|ix| ix.spec.eq_col == col))?;
+        let mut out: Vec<&Row> = match ix.map.get(&key.ix_key()) {
+            Some(group) => group.values().map(|&slot| &self.rows[slot]).collect(),
+            None => Vec::new(),
+        };
+        if ix.ord_ci.is_some() {
+            // ordered index groups sort by (ord, pk); restore pk order
+            out.sort_by_cached_key(|r| r.values[self.schema.pk_index].ix_key());
+        }
+        Some(out)
+    }
+
+    /// Ordered lookup: rows with `eq_col = key`, streamed in
+    /// `(ord_col, pk)` order (reversed when `desc`). Requires the exact
+    /// `(eq_col, ord_col)` index; `None` otherwise.
+    pub fn lookup_ord(
+        &self,
+        eq_col: &str,
+        key: &Value,
+        ord_col: &str,
+        desc: bool,
+    ) -> Option<Box<dyn Iterator<Item = &Row> + '_>> {
+        let ix = self.index_on(eq_col, Some(ord_col))?;
+        let iter: Box<dyn Iterator<Item = &Row> + '_> = match ix.map.get(&key.ix_key()) {
+            Some(group) if desc => {
+                Box::new(group.values().rev().map(move |&slot| &self.rows[slot]))
+            }
+            Some(group) => Box::new(group.values().map(move |&slot| &self.rows[slot])),
+            None => Box::new(std::iter::empty()),
+        };
+        Some(iter)
+    }
+
+    // -- mutations ---------------------------------------------------------
 
     /// Check an insert without mutating (used so the WAL never records a
     /// mutation that would fail).
@@ -141,8 +323,12 @@ impl Table {
             self.max_int_pk = Some(self.max_int_pk.map_or(i, |m| m.max(i)));
         }
         let key = pk_key(pk);
+        let slot = self.rows.len();
         self.rows.push(Row { values });
-        self.pk_map.insert(key, self.rows.len() - 1);
+        for ix in &mut self.indexes {
+            ix.add(&key, &self.rows[slot], slot);
+        }
+        self.pk_map.insert(key, slot);
         Ok(())
     }
 
@@ -177,19 +363,77 @@ impl Table {
 
     pub fn update(&mut self, key: &Value, sets: &BTreeMap<String, Value>) -> Result<()> {
         self.validate_update(key, sets)?;
-        let idx = *self.pk_map.get(&pk_key(key)).unwrap();
+        let pk = pk_key(key);
+        let slot = *self.pk_map.get(&pk).unwrap();
+        // unhook the old row from every index that watches a changed
+        // column, BEFORE mutating (the entry key derives from old values)
+        let changed: Vec<usize> = sets
+            .keys()
+            .filter_map(|c| self.schema.col_index(c))
+            .collect();
+        let touched: Vec<usize> = (0..self.indexes.len())
+            .filter(|&i| {
+                let ix = &self.indexes[i];
+                changed.contains(&ix.eq_ci)
+                    || ix.ord_ci.is_some_and(|ci| changed.contains(&ci))
+            })
+            .collect();
+        for &i in &touched {
+            let (row, ix) = (&self.rows[slot], &mut self.indexes[i]);
+            ix.remove(&pk, row);
+        }
         for (col, v) in sets {
             let ci = self.schema.col_index(col).unwrap();
-            self.rows[idx].values[ci] = v.clone().coerce(self.schema.cols[ci].ctype);
+            self.rows[slot].values[ci] = v.clone().coerce(self.schema.cols[ci].ctype);
+        }
+        for &i in &touched {
+            let (row, ix) = (&self.rows[slot], &mut self.indexes[i]);
+            ix.add(&pk, row, slot);
         }
         Ok(())
     }
 
     pub fn delete(&mut self, key: &Value) -> Result<()> {
-        self.pk_map
-            .remove(&pk_key(key))
+        let pk = pk_key(key);
+        let slot = self
+            .pk_map
+            .remove(&pk)
             .ok_or_else(|| AupError::Store(format!("no row with key {key:?}")))?;
+        for ix in &mut self.indexes {
+            let row = &self.rows[slot];
+            ix.remove(&pk, row);
+        }
+        // drop the payload now; the dead slot itself is reclaimed by
+        // compact() at the next checkpoint
+        self.rows[slot].values = Vec::new();
         Ok(())
+    }
+
+    /// Reclaim dead slots left by deletes: rebuild the backing vector
+    /// with live rows only (pk order) and rebuild pk map + indexes over
+    /// the new slots. `max_int_pk` is NOT lowered — the allocator
+    /// guarantee survives compaction within a process lifetime. Run by
+    /// the store at checkpoint; a no-op when nothing was deleted.
+    pub fn compact(&mut self) {
+        if self.rows.len() == self.pk_map.len() {
+            return;
+        }
+        let mut rows = Vec::with_capacity(self.pk_map.len());
+        let mut pk_map = BTreeMap::new();
+        for (pk, &slot) in &self.pk_map {
+            pk_map.insert(pk.clone(), rows.len());
+            rows.push(std::mem::replace(&mut self.rows[slot], Row { values: Vec::new() }));
+        }
+        self.rows = rows;
+        self.pk_map = pk_map;
+        for ix in &mut self.indexes {
+            ix.map.clear();
+        }
+        for (pk, &slot) in &self.pk_map {
+            for ix in &mut self.indexes {
+                ix.add(pk, &self.rows[slot], slot);
+            }
+        }
     }
 
     /// Fetch one row by primary key.
@@ -220,6 +464,13 @@ mod tests {
         m.insert("v".into(), Value::Real(v));
         m.insert("tag".into(), Value::Text(tag.into()));
         m
+    }
+
+    fn indexed_table() -> Table {
+        let mut t = Table::new(schema());
+        t.add_index(IndexSpec { eq_col: "tag".into(), ord_col: None }).unwrap();
+        t.add_index(IndexSpec { eq_col: "tag".into(), ord_col: Some("v".into()) }).unwrap();
+        t
     }
 
     #[test]
@@ -291,5 +542,122 @@ mod tests {
         let mut m = BTreeMap::new();
         m.insert("id".into(), Value::Real(1.0));
         assert!(t.insert(m).is_err(), "Real(1.0) must collide with Int(1)");
+    }
+
+    #[test]
+    fn rows_iterate_in_numeric_pk_order() {
+        let mut t = Table::new(schema());
+        for id in [10, 2, 1, 30] {
+            t.insert(named(id, 0.0, "x")).unwrap();
+        }
+        let ids: Vec<i64> = t
+            .rows()
+            .map(|r| r.values[0].as_i64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![1, 2, 10, 30], "numeric, not lexicographic");
+        let rev: Vec<i64> = t
+            .rows_rev()
+            .map(|r| r.values[0].as_i64().unwrap())
+            .collect();
+        assert_eq!(rev, vec![30, 10, 2, 1]);
+    }
+
+    #[test]
+    fn eq_index_tracks_mutations() {
+        let mut t = indexed_table();
+        t.insert(named(1, 0.5, "a")).unwrap();
+        t.insert(named(2, 0.7, "b")).unwrap();
+        t.insert(named(3, 0.2, "a")).unwrap();
+        let ids = |t: &Table, tag: &str| -> Vec<i64> {
+            t.lookup_eq("tag", &Value::Text(tag.into()))
+                .unwrap()
+                .iter()
+                .map(|r| r.values[0].as_i64().unwrap())
+                .collect()
+        };
+        assert_eq!(ids(&t, "a"), vec![1, 3], "pk order within the group");
+        // update moves the row between groups
+        let mut sets = BTreeMap::new();
+        sets.insert("tag".to_string(), Value::Text("b".into()));
+        t.update(&Value::Int(1), &sets).unwrap();
+        assert_eq!(ids(&t, "a"), vec![3]);
+        assert_eq!(ids(&t, "b"), vec![1, 2]);
+        // delete unhooks
+        t.delete(&Value::Int(2)).unwrap();
+        assert_eq!(ids(&t, "b"), vec![1]);
+        // unindexed column -> None (caller scans)
+        assert!(t.lookup_eq("v", &Value::Real(0.2)).is_none());
+    }
+
+    #[test]
+    fn ordered_index_streams_sorted_with_pk_tiebreak() {
+        let mut t = indexed_table();
+        t.insert(named(1, 0.5, "a")).unwrap();
+        t.insert(named(2, 0.5, "a")).unwrap(); // tie on v
+        t.insert(named(3, 0.9, "a")).unwrap();
+        t.insert(named(4, 0.1, "b")).unwrap();
+        let mut m = BTreeMap::new(); // NULL v sorts first
+        m.insert("id".into(), Value::Int(5));
+        m.insert("tag".into(), Value::Text("a".into()));
+        t.insert(m).unwrap();
+        let ids = |desc: bool| -> Vec<i64> {
+            t.lookup_ord("tag", &Value::Text("a".into()), "v", desc)
+                .unwrap()
+                .map(|r| r.values[0].as_i64().unwrap())
+                .collect()
+        };
+        assert_eq!(ids(false), vec![5, 1, 2, 3], "NULL first, ties by pk");
+        assert_eq!(ids(true), vec![3, 2, 1, 5], "desc is the exact reverse");
+        // wrong ord column -> None
+        assert!(t.lookup_ord("tag", &Value::Text("a".into()), "id", false).is_none());
+    }
+
+    #[test]
+    fn compact_reclaims_dead_slots_and_keeps_indexes_correct() {
+        let mut t = indexed_table();
+        for id in 0..10 {
+            t.insert(named(id, id as f64 * 0.1, if id % 2 == 0 { "e" } else { "o" })).unwrap();
+        }
+        for id in [0, 2, 4, 6] {
+            t.delete(&Value::Int(id)).unwrap();
+        }
+        assert_eq!(t.raw_len(), 10, "tombstones before compact");
+        assert_eq!(t.len(), 6);
+        t.compact();
+        assert_eq!(t.raw_len(), 6, "dead slots reclaimed");
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.max_int_pk(), Some(9));
+        let evens: Vec<i64> = t
+            .lookup_eq("tag", &Value::Text("e".into()))
+            .unwrap()
+            .iter()
+            .map(|r| r.values[0].as_i64().unwrap())
+            .collect();
+        assert_eq!(evens, vec![8]);
+        let ord: Vec<i64> = t
+            .lookup_ord("tag", &Value::Text("o".into()), "v", true)
+            .unwrap()
+            .map(|r| r.values[0].as_i64().unwrap())
+            .collect();
+        assert_eq!(ord, vec![9, 7, 5, 3, 1]);
+        // table still fully usable after compaction
+        t.insert(named(100, 1.0, "e")).unwrap();
+        assert_eq!(t.get(&Value::Int(100)).unwrap().values[1], Value::Real(1.0));
+    }
+
+    #[test]
+    fn add_index_is_idempotent_and_validates_columns() {
+        let mut t = Table::new(schema());
+        t.insert(named(1, 0.5, "a")).unwrap();
+        let spec = IndexSpec { eq_col: "tag".into(), ord_col: None };
+        t.add_index(spec.clone()).unwrap();
+        t.add_index(spec).unwrap(); // no-op, no duplicate entries
+        assert_eq!(t.lookup_eq("tag", &Value::Text("a".into())).unwrap().len(), 1);
+        assert!(t
+            .add_index(IndexSpec { eq_col: "nope".into(), ord_col: None })
+            .is_err());
+        assert!(t
+            .add_index(IndexSpec { eq_col: "tag".into(), ord_col: Some("nope".into()) })
+            .is_err());
     }
 }

@@ -132,6 +132,73 @@ impl Value {
             _ => self == other,
         }
     }
+
+    /// Total-order key for this value — the ordering backbone shared by
+    /// the table's primary-key map, the secondary indexes, AND the scan
+    /// path's ORDER BY comparator, so "index order" and "scan-sort
+    /// order" can never drift apart. Follows [`Value::partial_cmp`]:
+    /// NULL first, numbers next (Int/Real unified numerically), text
+    /// last — but total (NaN has a defined slot, after +inf).
+    pub fn ix_key(&self) -> IxKey {
+        match self {
+            Value::Null => IxKey::Null,
+            Value::Int(i) => IxKey::Num(OrdNum::from_int(*i)),
+            Value::Real(r) => IxKey::Num(OrdNum::from_real(*r)),
+            Value::Text(s) => IxKey::Text(s.clone()),
+        }
+    }
+}
+
+/// Totally-ordered numeric key: Int and Real collide when numerically
+/// equal (SQL semantics, `Int 1 == Real 1.0`), while integers beyond
+/// 2^53 stay distinct via the exact-int tie-break that the f64
+/// projection alone would fold together.
+#[derive(Debug, Clone)]
+pub struct OrdNum {
+    /// f64 projection (primary sort key; -0.0 normalized to 0.0)
+    f: f64,
+    /// exact integer tie-break (0 for non-integral reals)
+    i: i64,
+}
+
+impl OrdNum {
+    fn from_int(i: i64) -> OrdNum {
+        OrdNum { f: i as f64, i }
+    }
+
+    fn from_real(r: f64) -> OrdNum {
+        let f = if r == 0.0 { 0.0 } else { r };
+        let i = if r.fract() == 0.0 && r.abs() < 9.1e18 { r as i64 } else { 0 };
+        OrdNum { f, i }
+    }
+}
+
+impl PartialEq for OrdNum {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for OrdNum {}
+
+impl PartialOrd for OrdNum {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdNum {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.f.total_cmp(&other.f).then(self.i.cmp(&other.i))
+    }
+}
+
+/// See [`Value::ix_key`]. Variant order IS the sort order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IxKey {
+    Null,
+    Num(OrdNum),
+    Text(String),
 }
 
 #[cfg(test)]
@@ -165,6 +232,35 @@ mod tests {
         assert!(Value::Int(1).sql_eq(&Value::Real(1.0)));
         assert!(!Value::Int(1).sql_eq(&Value::Real(1.5)));
         assert!(Value::Text("a".into()).sql_eq(&Value::Text("a".into())));
+    }
+
+    #[test]
+    fn ix_key_matches_sql_semantics() {
+        // numeric unification: Int 1 == Real 1.0, same index group
+        assert_eq!(Value::Int(1).ix_key(), Value::Real(1.0).ix_key());
+        // -0.0 folds onto 0.0 (sql_eq treats them equal)
+        assert_eq!(Value::Real(-0.0).ix_key(), Value::Int(0).ix_key());
+        // giant ints stay distinct even though their f64 projections tie
+        let big = 1i64 << 53;
+        assert_ne!(Value::Int(big).ix_key(), Value::Int(big + 1).ix_key());
+        assert!(Value::Int(big).ix_key() < Value::Int(big + 1).ix_key());
+        // ordering: NULL < numbers < text, numbers numeric
+        let mut keys = vec![
+            Value::Text("a".into()).ix_key(),
+            Value::Real(1.5).ix_key(),
+            Value::Null.ix_key(),
+            Value::Int(-3).ix_key(),
+        ];
+        keys.sort();
+        assert_eq!(
+            keys,
+            vec![
+                Value::Null.ix_key(),
+                Value::Int(-3).ix_key(),
+                Value::Real(1.5).ix_key(),
+                Value::Text("a".into()).ix_key(),
+            ]
+        );
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! (`snapshot.jsonl`, written atomically) and truncates the WAL. On open,
 //! the snapshot is replayed first, then the WAL tail. A torn final WAL
 //! line (crash mid-append) is tolerated and dropped.
+//!
+//! Replay feeds records through the same `Store::apply` funnel as live
+//! traffic, which is how the secondary indexes (attached when a Create
+//! record lands) and the per-experiment aggregates rebuild themselves on
+//! every open — the WAL format carries no index or aggregate state.
+//! Snapshots serialize rows in primary-key order ([`Table::rows`]) and
+//! only surviving rows, so a checkpoint is also when tombstoned slots
+//! vanish from disk.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -1,18 +1,28 @@
 #!/usr/bin/env python3
-"""Gate CI on the WAL-throughput trajectory.
+"""Gate CI on the store perf trajectory (WAL writes + query reads).
 
-Usage: check_bench_regression.py FRESH.json BASELINE.json
+Usage: check_bench_regression.py FRESH.json BASELINE.json [FRESH2 BASELINE2 ...]
 
-FRESH.json is the report the bench smoke step just wrote;
-BASELINE.json is the committed trajectory point from the previous main
-push (results/BENCH_store.json). The gated metric is `append_reduction`
-(baseline appends / group-commit appends): the whole point of the
-StoreServer is that group commit collapses WAL writes, so a >30% drop
-in the reduction factor is a perf regression and fails the build.
+Each FRESH/BASELINE pair is a bench report plus the committed
+trajectory point from the previous main push. The report kind is
+dispatched on its keys:
 
-Wall-clock numbers in the report are informative only — CI runners are
-too noisy to gate on seconds, but the append COUNTS are deterministic
-for a fixed workload.
+* WAL reports (benches/store_wal_throughput.rs, `append_reduction`):
+  - `append_reduction` (baseline appends / grouped appends) may not
+    drop more than 30% below the committed trajectory — group commit is
+    the whole point of the StoreServer;
+  - `grouped_live` is gated the same way now that the trajectory has
+    history: live reduction = baseline appends / grouped_live appends,
+    30% floor. Append COUNTS are deterministic for a fixed workload, so
+    these gates do not flap on runner noise.
+
+* query reports (benches/store_query_throughput.rs, `status_speedup`):
+  - hard floors: `status_speedup` and `best_job_speedup` must stay
+    >= 10x (the ISSUE-4 acceptance bar; the bench itself asserts the
+    same, this re-checks the artifact), `live_ratio` <= 5 (StoreCmd::
+    Status latency flat in job count);
+  - the trajectory comparison is printed but NOT gated: speedups are
+    time ratios and CI runners are too noisy for a tight relative gate.
 
 A missing baseline (first run ever, or a fresh fork) passes: the commit
 step will create the first trajectory point.
@@ -22,19 +32,13 @@ import json
 import sys
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    fresh_path, baseline_path = sys.argv[1], sys.argv[2]
-    with open(fresh_path) as f:
-        fresh = json.load(f)
-    try:
-        with open(baseline_path) as f:
-            baseline = json.load(f)
-    except FileNotFoundError:
-        print(f"no committed baseline at {baseline_path} yet; nothing to compare")
-        return 0
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate_wal(fresh, baseline) -> int:
+    rc = 0
     f_red = float(fresh["append_reduction"])
     b_red = float(baseline["append_reduction"])
     floor = b_red * 0.7
@@ -53,9 +57,90 @@ def main() -> int:
             f"::error::WAL append-reduction regressed more than 30%: "
             f"{f_red:.2f}x < {floor:.2f}x (baseline {b_red:.2f}x)"
         )
-        return 1
-    print("ok: group-commit append reduction within 30% of the trajectory")
-    return 0
+        rc = 1
+    # grouped_live: same metric for the PRODUCTION drain loop
+    def live_red(report):
+        base = report.get("baseline", {}).get("appends")
+        live = report.get("grouped_live", {}).get("appends")
+        if not base or not live:
+            return None
+        return float(base) / float(live)
+
+    f_live, b_live = live_red(fresh), live_red(baseline)
+    if f_live is not None and b_live is not None:
+        live_floor = b_live * 0.7
+        print(
+            f"live_reduction: fresh {f_live:.2f}x vs baseline {b_live:.2f}x "
+            f"(regression floor {live_floor:.2f}x)"
+        )
+        if f_live < live_floor:
+            print(
+                f"::error::grouped_live append-reduction regressed more than 30%: "
+                f"{f_live:.2f}x < {live_floor:.2f}x (baseline {b_live:.2f}x)"
+            )
+            rc = 1
+    if rc == 0:
+        print("ok: group-commit append reduction within 30% of the trajectory")
+    return rc
+
+
+def gate_query(fresh, baseline) -> int:
+    rc = 0
+    status = float(fresh["status_speedup"])
+    best = float(fresh["best_job_speedup"])
+    # required like the other floors: a report missing the flatness
+    # metric must fail loudly, not pass vacuously
+    live = float(fresh["live_ratio"])
+    n = fresh.get("n_jobs")
+    print(f"query bench at {n} jobs:")
+    print(f"  status_speedup:   {status:.1f}x (floor 10x)")
+    print(f"  best_job_speedup: {best:.1f}x (floor 10x)")
+    print(f"  live_ratio:       {live:.2f} (ceiling 5, flat-in-job-count)")
+    if baseline is not None:
+        print(
+            f"  trajectory (informative): status {baseline.get('status_speedup')}x -> "
+            f"{status:.1f}x, best_job {baseline.get('best_job_speedup')}x -> {best:.1f}x"
+        )
+    if status < 10.0:
+        print(f"::error::status speedup below the 10x floor: {status:.1f}x")
+        rc = 1
+    if best < 10.0:
+        print(f"::error::best_job speedup below the 10x floor: {best:.1f}x")
+        rc = 1
+    if live > 5.0:
+        print(f"::error::live StoreCmd::Status latency grew with job count: {live:.2f}x")
+        rc = 1
+    if rc == 0:
+        print("ok: indexed read path holds the 10x floors and stays flat live")
+    return rc
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if len(args) < 2 or len(args) % 2 != 0:
+        print(__doc__)
+        return 2
+    rc = 0
+    for fresh_path, baseline_path in zip(args[::2], args[1::2]):
+        print(f"--- {fresh_path} vs {baseline_path}")
+        fresh = load(fresh_path)
+        try:
+            baseline = load(baseline_path)
+        except FileNotFoundError:
+            baseline = None
+        if "append_reduction" in fresh:
+            if baseline is None:
+                print(f"no committed baseline at {baseline_path} yet; nothing to compare")
+                continue
+            rc |= gate_wal(fresh, baseline)
+        elif "status_speedup" in fresh:
+            # query floors are absolute — they apply with or without a
+            # trajectory point
+            rc |= gate_query(fresh, baseline)
+        else:
+            print(f"::error::unrecognized bench report shape in {fresh_path}")
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":
