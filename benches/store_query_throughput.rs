@@ -41,7 +41,8 @@ fn populate(n_jobs: i64) -> Store {
         schema::start_job_queued(&mut s, jid, eid, "{}", jid as f64).unwrap();
         schema::set_job_running(&mut s, jid, rid).unwrap();
         if jid % 10 == 0 {
-            schema::log_job_event(&mut s, jid, eid, 1, "BACKOFF", jid as f64, "retry").unwrap();
+            schema::log_job_event(&mut s, jid, eid, 1, "BACKOFF", jid as f64, "retry", jid % 8, 1.0)
+                .unwrap();
         }
         if jid % 50 == 7 {
             continue; // stays RUNNING

@@ -555,8 +555,8 @@ pub fn cmd_top(cli: &Cli) -> Result<()> {
     };
     if let Some(remote) = attach_live(cli, db) {
         match remote.top(n_events) {
-            Ok((running, events)) => {
-                print!("{}", crate::store::status::render_top(&running, &events));
+            Ok((running, events, util)) => {
+                print!("{}", crate::store::status::render_top(&running, &events, &util));
                 return Ok(());
             }
             Err(e) => {
@@ -567,7 +567,8 @@ pub fn cmd_top(cli: &Cli) -> Result<()> {
     let mut store = open_existing_store(db)?;
     let running = crate::store::status::running_jobs(&mut store)?;
     let events = crate::store::status::recent_events(&mut store, n_events)?;
-    print!("{}", crate::store::status::render_top(&running, &events));
+    let util = crate::store::status::resource_utilization(&store)?;
+    print!("{}", crate::store::status::render_top(&running, &events, &util));
     Ok(())
 }
 

@@ -232,9 +232,21 @@ impl Experiment {
 
     /// Propose + submit while this experiment has spare parallelism.
     fn pump<D: Dispatcher>(&mut self, sched: &mut Scheduler<D>, sub: SubId) -> Result<()> {
+        // an experiment may pin all its jobs to one kind of a shared
+        // heterogeneous pool (`job_resource_kind` in experiment.json);
+        // the scheduler's per-kind ready queues take it from there
+        let kind = self
+            .cfg
+            .raw
+            .get("job_resource_kind")
+            .and_then(Json::as_str)
+            .map(str::to_string);
         while sched.outstanding(sub) < self.cfg.n_parallel && !self.proposer.finished() {
             match self.proposer.get_param() {
-                ProposeResult::Config(config) => {
+                ProposeResult::Config(mut config) => {
+                    if let Some(k) = &kind {
+                        config.set_str(crate::scheduler::RESOURCE_KIND_KEY, k);
+                    }
                     let job_id = config.job_id().ok_or_else(|| {
                         AupError::Proposer("proposer returned a config without job_id".into())
                     })?;

@@ -94,11 +94,13 @@ impl<C: StoreApi> Tracker<C> {
         self.client.set_job_running(self.jid_of(job_id), rid)
     }
 
-    /// Journal one scheduler transition into `job_event` (retry
-    /// accounting). The `time` column uses the same epoch base as
-    /// `job.start_time` so `aup sql` can correlate the tables; the
-    /// scheduler-clock timestamp (virtual seconds in sim runs) is kept in
-    /// the detail as `t=…` for deterministic offsets.
+    /// Journal one scheduler transition into `job_event` (retry +
+    /// utilization accounting). The `time` column uses the same epoch
+    /// base as `job.start_time` so `aup sql` can correlate the tables;
+    /// the scheduler-clock timestamp (virtual seconds in sim runs) is
+    /// kept in the detail as `t=…` for deterministic offsets. The
+    /// transition's `rid`/`busy` stamp (set when an attempt ended) rides
+    /// along, feeding the store's per-resource busy-seconds aggregates.
     pub fn log_transition(&mut self, t: &crate::scheduler::Transition) -> Result<()> {
         self.client.log_job_event(
             self.jid_of(t.job_id),
@@ -107,6 +109,8 @@ impl<C: StoreApi> Tracker<C> {
             t.state.name(),
             now(),
             &format!("[t={:.3}] {}", t.at, t.detail),
+            t.rid.unwrap_or(-1),
+            t.busy,
         )
     }
 
@@ -186,6 +190,7 @@ mod tests {
             attempt: 1,
             at: 3.0,
             rid: Some(2),
+            busy: 0.0,
             detail: "attempt 1 on cpu:2".into(),
         })
         .unwrap();

@@ -362,6 +362,15 @@ mod tests {
     }
 
     #[test]
+    fn kind_api_serves_aws_only() {
+        let mut m = AwsManager::for_sim(1, 0.0, 0.0, 1);
+        assert_eq!(m.free_count_kind("aws"), 1);
+        assert_eq!(m.free_count_kind("cpu"), 0);
+        assert!(m.get_available_kind("cpu").is_none());
+        assert!(m.get_available_kind("aws").is_some());
+    }
+
+    #[test]
     fn sim_manager_reports_spawn_delay_once_per_instance() {
         let mut m = AwsManager::for_sim(1, 30.0, 0.0, 1);
         let h = m.get_available().unwrap();

@@ -79,6 +79,16 @@ mod tests {
     }
 
     #[test]
+    fn kind_api_serves_gpu_only() {
+        let mut m = GpuManager::new(vec![0]);
+        assert_eq!(m.free_count_kind("gpu"), 1);
+        assert_eq!(m.free_count_kind("cpu"), 0);
+        assert!(m.get_available_kind("cpu").is_none());
+        let h = m.get_available_kind("gpu").unwrap();
+        assert_eq!(h.env.get("CUDA_VISIBLE_DEVICES").unwrap(), "0");
+    }
+
+    #[test]
     fn prop_every_allocation_unique_while_held() {
         crate::util::prop::check_default(
             "gpu ids unique among held handles",

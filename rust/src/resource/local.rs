@@ -66,4 +66,13 @@ mod tests {
         assert_eq!(a.label, "cpu:0");
         assert_eq!(a.perf_factor, 1.0);
     }
+
+    #[test]
+    fn kind_api_serves_cpu_only() {
+        let mut m = CpuManager::new(2);
+        assert_eq!(m.free_count_kind("cpu"), 2);
+        assert_eq!(m.free_count_kind("gpu"), 0);
+        assert!(m.get_available_kind("gpu").is_none());
+        assert!(m.get_available_kind("cpu").is_some());
+    }
 }

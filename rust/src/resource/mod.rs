@@ -44,7 +44,12 @@ pub struct ResourceHandle {
     pub spawn_delay: f64,
 }
 
-/// The paper's RM interface.
+/// The paper's RM interface, extended with per-kind lookups so the
+/// scheduler's sharded ready queues can match a kind-pinned job against
+/// exactly the resources that can serve it. Single-kind managers
+/// (CPU/GPU/node/AWS) get the per-kind flavors for free from the default
+/// implementations; [`CompositeManager`] overrides them to route into
+/// the matching sub-pool.
 pub trait ResourceManager: Send {
     /// `get_available()`: take a free resource, or None if all busy.
     fn get_available(&mut self) -> Option<ResourceHandle>;
@@ -60,6 +65,108 @@ pub trait ResourceManager: Send {
 
     /// Manager kind name ("cpu" / "gpu" / "node" / "aws").
     fn kind(&self) -> &'static str;
+
+    /// Take a free resource of one specific kind, or None when this
+    /// manager has none (free or at all) of that kind.
+    fn get_available_kind(&mut self, kind: &str) -> Option<ResourceHandle> {
+        if kind == self.kind() {
+            self.get_available()
+        } else {
+            None
+        }
+    }
+
+    /// Free resources of one specific kind.
+    fn free_count_kind(&self, kind: &str) -> usize {
+        if kind == self.kind() {
+            self.free_count()
+        } else {
+            0
+        }
+    }
+}
+
+/// rid namespace stride of [`CompositeManager`]: sub-pool `i`'s handles
+/// surface as `i * STRIDE + rid`, so handles from different sub-pools
+/// never collide and `release` can route back without bookkeeping.
+const COMPOSITE_RID_STRIDE: i64 = 1i64 << 32;
+
+/// A heterogeneous pool: several managers (one per kind) behind the one
+/// `ResourceManager` surface. `aup batch` uses this to serve CPU + GPU
+/// jobs from a single scheduler — the per-kind ready queues match each
+/// job against the sub-pool that can actually run it.
+pub struct CompositeManager {
+    pools: Vec<Box<dyn ResourceManager>>,
+}
+
+impl CompositeManager {
+    pub fn new(pools: Vec<Box<dyn ResourceManager>>) -> CompositeManager {
+        assert!(!pools.is_empty(), "composite pool needs at least one sub-pool");
+        for p in &pools {
+            // a nested composite would emit rids >= STRIDE of its own,
+            // which the outer offset math would misroute on release —
+            // flatten instead of nesting
+            assert!(p.kind() != "mixed", "composite pools cannot nest; flatten the sub-pools");
+            assert!(
+                (p.capacity() as i64) < COMPOSITE_RID_STRIDE,
+                "sub-pool too large for the composite rid namespace"
+            );
+        }
+        CompositeManager { pools }
+    }
+
+    fn offset(idx: usize, mut h: ResourceHandle) -> ResourceHandle {
+        h.rid += idx as i64 * COMPOSITE_RID_STRIDE;
+        h
+    }
+}
+
+impl ResourceManager for CompositeManager {
+    fn get_available(&mut self) -> Option<ResourceHandle> {
+        for (i, p) in self.pools.iter_mut().enumerate() {
+            if p.free_count() > 0 {
+                if let Some(h) = p.get_available() {
+                    return Some(Self::offset(i, h));
+                }
+            }
+        }
+        None
+    }
+
+    fn get_available_kind(&mut self, kind: &str) -> Option<ResourceHandle> {
+        for (i, p) in self.pools.iter_mut().enumerate() {
+            if p.free_count_kind(kind) > 0 {
+                if let Some(h) = p.get_available_kind(kind) {
+                    return Some(Self::offset(i, h));
+                }
+            }
+        }
+        None
+    }
+
+    fn release(&mut self, handle: &ResourceHandle) {
+        let idx = (handle.rid / COMPOSITE_RID_STRIDE) as usize;
+        let idx = idx.min(self.pools.len() - 1);
+        let mut inner = handle.clone();
+        inner.rid = handle.rid % COMPOSITE_RID_STRIDE;
+        self.pools[idx].release(&inner);
+    }
+
+    fn capacity(&self) -> usize {
+        self.pools.iter().map(|p| p.capacity()).sum()
+    }
+
+    fn free_count(&self) -> usize {
+        self.pools.iter().map(|p| p.free_count()).sum()
+    }
+
+    fn free_count_kind(&self, kind: &str) -> usize {
+        self.pools.iter().map(|p| p.free_count_kind(kind)).sum()
+    }
+
+    fn kind(&self) -> &'static str {
+        "mixed"
+    }
 }
 
 /// Resource request parsed from experiment.json: the `resource` kind and
@@ -75,6 +182,9 @@ pub struct ResourceSpec {
     /// aws: std-dev of the per-instance performance fluctuation
     pub perf_jitter: f64,
     pub seed: u64,
+    /// `resource: "mixed"`: the sub-pool specs (one per kind), parsed
+    /// from the `pools` array
+    pub pools: Vec<ResourceSpec>,
 }
 
 impl Default for ResourceSpec {
@@ -87,6 +197,7 @@ impl Default for ResourceSpec {
             spawn_latency: 30.0,
             perf_jitter: 0.1,
             seed: 0,
+            pools: vec![],
         }
     }
 }
@@ -131,6 +242,12 @@ impl ResourceSpec {
         if let Some(v) = j.get("random_seed").and_then(Json::as_i64) {
             spec.seed = v as u64;
         }
+        if let Some(pools) = j.get("pools").and_then(Json::as_arr) {
+            spec.pools = pools
+                .iter()
+                .map(ResourceSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+        }
         Ok(spec)
     }
 
@@ -160,8 +277,29 @@ impl ResourceSpec {
                 self.perf_jitter,
                 self.seed,
             ))),
+            "mixed" => {
+                if self.pools.is_empty() {
+                    return Err(AupError::Resource(
+                        "resource 'mixed' needs a non-empty 'pools' array".into(),
+                    ));
+                }
+                // nesting would break the composite rid namespace —
+                // reject with a config error rather than the assert
+                if self.pools.iter().any(|p| p.kind == "mixed") {
+                    return Err(AupError::Resource(
+                        "'mixed' pools cannot nest; list every concrete pool at the top level"
+                            .into(),
+                    ));
+                }
+                let pools = self
+                    .pools
+                    .iter()
+                    .map(ResourceSpec::build)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Box::new(CompositeManager::new(pools)))
+            }
             other => Err(AupError::Resource(format!(
-                "unknown resource kind '{other}' (cpu, gpu, node, aws)"
+                "unknown resource kind '{other}' (cpu, gpu, node, aws, mixed)"
             ))),
         }
     }
@@ -205,6 +343,87 @@ mod tests {
         let mut bad = ResourceSpec::default();
         bad.kind = "tpu".into();
         assert!(bad.build().is_err());
+    }
+
+    #[test]
+    fn per_kind_defaults_answer_for_every_manager() {
+        // the default per-kind implementations must make each single-kind
+        // manager answer for its own kind and nothing else
+        for kind in ["cpu", "gpu", "node", "aws"] {
+            let mut spec = ResourceSpec::default();
+            spec.kind = kind.to_string();
+            spec.n = 2;
+            spec.spawn_latency = 0.0;
+            let mut m = spec.build().unwrap();
+            assert_eq!(m.free_count_kind(kind), 2, "{kind}");
+            assert_eq!(m.free_count_kind("nope"), 0, "{kind}");
+            assert!(m.get_available_kind("nope").is_none(), "{kind}");
+            let h = m.get_available_kind(kind).unwrap();
+            assert_eq!(m.free_count_kind(kind), 1, "{kind}");
+            m.release(&h);
+            assert_eq!(m.free_count_kind(kind), 2, "{kind}");
+        }
+    }
+
+    #[test]
+    fn composite_pool_routes_kinds_and_namespaces_rids() {
+        let mut m = CompositeManager::new(vec![
+            Box::new(local::CpuManager::new(2)),
+            Box::new(gpu::GpuManager::new(vec![0, 1])),
+        ]);
+        assert_eq!(m.kind(), "mixed");
+        assert_eq!(m.capacity(), 4);
+        assert_eq!(m.free_count(), 4);
+        assert_eq!(m.free_count_kind("cpu"), 2);
+        assert_eq!(m.free_count_kind("gpu"), 2);
+        assert_eq!(m.free_count_kind("aws"), 0);
+        let g = m.get_available_kind("gpu").unwrap();
+        assert!(g.env.contains_key("CUDA_VISIBLE_DEVICES"));
+        let c = m.get_available_kind("cpu").unwrap();
+        assert_ne!(g.rid, c.rid, "rids from different sub-pools must not collide");
+        assert_eq!(m.free_count(), 2);
+        // any-kind acquisition drains whatever is left
+        let a = m.get_available().unwrap();
+        let b = m.get_available().unwrap();
+        assert!(m.get_available().is_none());
+        for h in [&g, &c, &a, &b] {
+            m.release(h);
+        }
+        assert_eq!(m.free_count(), 4, "all handles route back to their sub-pool");
+        assert_eq!(m.free_count_kind("gpu"), 2);
+    }
+
+    #[test]
+    fn mixed_spec_builds_a_composite() {
+        let j = Json::parse(
+            r#"{"resource": "mixed", "pools": [
+                {"resource": "cpu", "n_resource": 3},
+                {"resource": "gpu", "n_resource": 1}
+            ]}"#,
+        )
+        .unwrap();
+        let spec = ResourceSpec::from_json(&j).unwrap();
+        let m = spec.build().unwrap();
+        assert_eq!(m.capacity(), 4);
+        assert_eq!(m.free_count_kind("cpu"), 3);
+        assert_eq!(m.free_count_kind("gpu"), 1);
+        // mixed without pools is a config error
+        let bad = ResourceSpec::from_json(&Json::parse(r#"{"resource": "mixed"}"#).unwrap())
+            .unwrap();
+        assert!(bad.build().is_err());
+        // nested mixed pools are rejected (the rid namespace cannot nest)
+        let nested = ResourceSpec::from_json(
+            &Json::parse(
+                r#"{"resource": "mixed", "pools": [
+                    {"resource": "cpu", "n_resource": 1},
+                    {"resource": "mixed", "pools": [{"resource": "gpu", "n_resource": 1}]}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let err = nested.build().unwrap_err();
+        assert!(err.to_string().contains("nest"), "{err}");
     }
 
     #[test]

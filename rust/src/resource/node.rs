@@ -68,6 +68,14 @@ mod tests {
     }
 
     #[test]
+    fn kind_api_serves_node_only() {
+        let mut m = NodeManager::new(vec!["a".into()]);
+        assert_eq!(m.free_count_kind("node"), 1);
+        assert_eq!(m.free_count_kind("cpu"), 0);
+        assert!(m.get_available_kind("node").is_some());
+    }
+
+    #[test]
     fn pool_exhausts() {
         let mut m = NodeManager::new(vec!["a".into()]);
         let h = m.get_available().unwrap();

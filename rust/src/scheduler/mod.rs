@@ -5,7 +5,9 @@
 //! pool across experiments, retry flaky jobs, or bound runaway ones. This
 //! module extracts execution into a first-class [`Scheduler`]:
 //!
-//! * a priority queue of submitted jobs (FIFO within a priority level);
+//! * sharded per-resource-kind ready queues (FIFO within a priority
+//!   level; a job may pin a kind via the `resource_kind` config key, so a
+//!   free GPU is never stalled behind a CPU-only job at a queue head);
 //! * a worker pool sized by a shared [`ResourceManager`] — multiple
 //!   experiments submit into one pool through per-experiment
 //!   *submissions*;
@@ -13,6 +15,20 @@
 //! * bounded retries with exponential backoff
 //!   ([`SchedulerConfig::max_retries`], [`SchedulerConfig::retry_backoff`]);
 //! * cancellation of queued, backing-off or running jobs.
+//!
+//! The hot path is EVENT-DRIVEN: backoff due-times and running-job
+//! deadlines live in two lazy min-heaps keyed by time, so one `poll`
+//! iteration costs O(transitions · log live) instead of a full scan of
+//! every job ever submitted. Stale heap entries (from cancels, retries
+//! and completed attempts) are invalidated by `(seq, attempt)` stamps and
+//! skipped on pop; a queue whose tombstones outnumber its live entries is
+//! rebuilt in place so cancel-heavy workloads cannot pin peak memory.
+//! Terminal jobs leave the hot maps entirely — their summary moves into a
+//! compact completed log — so per-poll cost is a function of LIVE jobs,
+//! not lifetime submissions. The pre-heap full-scan implementation is
+//! kept behind [`Scheduler::scan_baseline`] as the oracle for the
+//! equivalence property tests and the baseline for
+//! `benches/sched_throughput.rs`.
 //!
 //! The state machine is written against the [`dispatch::Dispatcher`]
 //! abstraction, so the identical code runs on OS threads + wall clock in
@@ -35,7 +51,8 @@
 pub mod chaos;
 pub mod dispatch;
 
-use std::collections::{BinaryHeap, BTreeMap};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::resource::job::JobEnv;
 use crate::resource::{ResourceHandle, ResourceManager};
@@ -43,13 +60,17 @@ use crate::search::BasicConfig;
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
+pub use chaos::{ChaosConfig, ChaosExecutor};
 pub use dispatch::{
     AttemptDone, AttemptId, DispatchPoll, Dispatcher, FnSimExecutor, SimDispatcher, SimExecutor,
     SimOutcome, SubId, ThreadDispatcher,
 };
-pub use chaos::{ChaosConfig, ChaosExecutor};
 
 const EPS: f64 = 1e-9;
+
+/// Config key a job may set to pin itself to one resource kind (e.g.
+/// `"gpu"`); absent/empty means "any free resource".
+pub const RESOURCE_KIND_KEY: &str = "resource_kind";
 
 /// Per-submission scheduling knobs (experiment.json keys in parens).
 #[derive(Debug, Clone, PartialEq)]
@@ -64,9 +85,14 @@ pub struct SchedulerConfig {
     pub job_timeout: Option<f64>,
 }
 
+/// Shared fallback for unknown submissions: [`Scheduler::sub_cfg`]
+/// returns a borrow, so the hot retry/start path never clones a config.
+const DEFAULT_SUB_CFG: SchedulerConfig =
+    SchedulerConfig { max_retries: 0, retry_backoff: 1.0, job_timeout: None };
+
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_retries: 0, retry_backoff: 1.0, job_timeout: None }
+        DEFAULT_SUB_CFG
     }
 }
 
@@ -131,8 +157,15 @@ pub struct Transition {
     pub attempt: u32,
     /// scheduler-clock timestamp (virtual seconds in sim mode)
     pub at: f64,
-    /// resource id for Running transitions
+    /// resource id: set on Running transitions AND on every transition
+    /// that ends an attempt (Backoff / Done / Failed / timeout /
+    /// Cancelled-while-running), so utilization accounting never has to
+    /// pair events
     pub rid: Option<i64>,
+    /// seconds the just-ended attempt occupied its resource (0.0 on
+    /// transitions that do not end an attempt) — the store aggregates
+    /// these into per-resource busy time
+    pub busy: f64,
     pub detail: String,
 }
 
@@ -152,6 +185,19 @@ pub struct Completion {
     pub elapsed: f64,
 }
 
+/// Compact record of one terminal job — what remains after the job is
+/// evicted from the hot maps (no config, no handles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletedRecord {
+    pub sub: SubId,
+    pub job_id: u64,
+    pub state: JobState,
+    pub attempts: u32,
+    pub elapsed: f64,
+    /// scheduler-clock completion time
+    pub at: f64,
+}
+
 /// Events drained from [`Scheduler::poll`].
 #[derive(Debug, Clone)]
 pub enum SchedEvent {
@@ -162,16 +208,22 @@ pub enum SchedEvent {
 struct SubState {
     priority: i32,
     cfg: SchedulerConfig,
-    /// jobs submitted and not yet terminal
-    outstanding: usize,
+    /// non-terminal job ids — the live index behind `outstanding` and
+    /// `cancel_submission` (no scans of the job map)
+    live: BTreeSet<u64>,
+    /// every job id ever submitted (duplicate detection survives the
+    /// terminal eviction from the hot map)
+    used: BTreeSet<u64>,
 }
 
 struct Job {
     config: BasicConfig,
     priority: i32,
-    /// queue sequence of the *current* pending entry (re-queued jobs get
-    /// a fresh seq; older heap entries are recognized as stale)
+    /// queue sequence of the *current* pending/backoff entry (re-queued
+    /// jobs get a fresh seq; older heap entries are recognized as stale)
     seq: u64,
+    /// required resource kind ("" = any) — selects the ready-queue shard
+    kind: String,
     state: JobState,
     /// attempts started
     attempts: u32,
@@ -209,6 +261,111 @@ impl PartialOrd for PendingEntry {
     }
 }
 
+/// One time-keyed heap entry: a backoff due-time (stamp = the job's seq
+/// at the moment it entered Backoff) or a running-attempt deadline
+/// (stamp = the attempt id). The stamp invalidates stale entries the
+/// same way the pending queue's seq does.
+struct TimerEntry {
+    at: f64,
+    stamp: u64,
+    key: (SubId, u64),
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for TimerEntry {}
+
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `at` is finite by construction (backoff caps the exponential,
+        // deadlines are now + finite timeout)
+        self.at
+            .total_cmp(&other.at)
+            .then_with(|| self.stamp.cmp(&other.stamp))
+            .then_with(|| self.key.cmp(&other.key))
+    }
+}
+
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Rebuild threshold shared by every lazy queue: below this size a few
+/// tombstones are cheaper than a rebuild.
+const SHRINK_MIN: usize = 64;
+
+/// A heap with a live-entry counter: `live` counts entries whose stamp
+/// is still current, so the heap can be rebuilt when tombstones
+/// outnumber live entries. Used max-first for the ready-queue shards
+/// (`PendingEntry`) and min-first for the timer heaps
+/// (`Reverse<TimerEntry>`).
+struct LazyHeap<T: Ord> {
+    heap: BinaryHeap<T>,
+    live: usize,
+}
+
+// manual impl: derive(Default) would demand T: Default, which heap
+// entries don't (and shouldn't) implement
+impl<T: Ord> Default for LazyHeap<T> {
+    fn default() -> Self {
+        LazyHeap { heap: BinaryHeap::new(), live: 0 }
+    }
+}
+
+impl<T: Ord> LazyHeap<T> {
+    fn push_live(&mut self, e: T) {
+        self.heap.push(e);
+        self.live += 1;
+    }
+
+    /// An entry died in place (cancel, attempt completed before its
+    /// deadline) — it stays in the heap as a tombstone until popped or
+    /// the heap is rebuilt.
+    fn note_dead(&mut self) {
+        self.live = self.live.saturating_sub(1);
+    }
+
+    fn peek(&self) -> Option<&T> {
+        self.heap.peek()
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.heap.pop()
+    }
+
+    /// Drop tombstones when they outnumber live entries, so a
+    /// cancel-heavy workload cannot hold the heap at peak size forever.
+    fn maybe_shrink(&mut self, valid: impl Fn(&T) -> bool) {
+        if self.heap.len() < SHRINK_MIN || self.heap.len() < 2 * self.live {
+            return;
+        }
+        let kept: Vec<T> = std::mem::take(&mut self.heap).into_iter().filter(valid).collect();
+        self.live = kept.len();
+        self.heap = BinaryHeap::from(kept);
+    }
+}
+
+/// Min-heap of backoff due-times / running deadlines.
+type TimerHeap = LazyHeap<Reverse<TimerEntry>>;
+/// One ready-queue shard (per resource kind), max-(priority, FIFO) first.
+type ShardQueue = LazyHeap<PendingEntry>;
+
+/// Which timer implementation `poll` uses. `Event` is the production
+/// path; `Scan` preserves the pre-heap O(all jobs ever) full-scan
+/// behavior as a comparison oracle and bench baseline — it also skips
+/// the terminal-job eviction, so its cost grows with lifetime
+/// submissions exactly like the old code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PollPath {
+    Event,
+    Scan,
+}
+
 /// The scheduler. Generic over the [`Dispatcher`] so production and sim
 /// flavors share one state machine; see [`ThreadScheduler`] /
 /// [`SimScheduler`].
@@ -216,8 +373,15 @@ pub struct Scheduler<D: Dispatcher> {
     rm: Box<dyn ResourceManager>,
     dispatcher: D,
     subs: BTreeMap<SubId, SubState>,
+    /// LIVE jobs only (event path); the scan baseline keeps terminal
+    /// jobs here, faithfully reproducing the old cost model
     jobs: BTreeMap<(SubId, u64), Job>,
-    pending: BinaryHeap<PendingEntry>,
+    /// ready queues sharded by required resource kind ("" = any)
+    shards: BTreeMap<String, ShardQueue>,
+    /// backoff due-times, a lazy min-heap feeding `promote_backoffs`
+    backoffs: TimerHeap,
+    /// running-attempt deadlines, a lazy min-heap feeding `expire_deadlines`
+    deadlines: TimerHeap,
     /// live attempt -> job
     attempts: BTreeMap<AttemptId, (SubId, u64)>,
     /// timed-out / cancelled thread attempts still pinning a resource
@@ -228,6 +392,9 @@ pub struct Scheduler<D: Dispatcher> {
     next_sub: SubId,
     /// non-terminal job count
     active: usize,
+    /// compact summaries of evicted terminal jobs
+    completed: Vec<CompletedRecord>,
+    path: PollPath,
     out: Vec<SchedEvent>,
 }
 
@@ -243,15 +410,34 @@ impl<D: Dispatcher> Scheduler<D> {
             dispatcher,
             subs: BTreeMap::new(),
             jobs: BTreeMap::new(),
-            pending: BinaryHeap::new(),
+            shards: BTreeMap::new(),
+            backoffs: TimerHeap::default(),
+            deadlines: TimerHeap::default(),
             attempts: BTreeMap::new(),
             zombies: BTreeMap::new(),
             next_attempt: 0,
             next_seq: 0,
             next_sub: 0,
             active: 0,
+            completed: Vec::new(),
+            path: PollPath::Event,
             out: Vec::new(),
         }
+    }
+
+    /// The pre-heap implementation: timers found by scanning EVERY job
+    /// ever submitted (terminal ones included — nothing is evicted).
+    /// Kept as the transition-sequence oracle for the equivalence
+    /// property tests and as the baseline `benches/sched_throughput.rs`
+    /// measures the event-driven path against. Not for production use.
+    pub fn scan_baseline(rm: Box<dyn ResourceManager>, dispatcher: D) -> Scheduler<D> {
+        let mut s = Scheduler::new(rm, dispatcher);
+        s.path = PollPath::Scan;
+        s
+    }
+
+    fn event_path(&self) -> bool {
+        self.path == PollPath::Event
     }
 
     /// Open a submission — one per experiment. Jobs of higher-priority
@@ -266,7 +452,10 @@ impl<D: Dispatcher> Scheduler<D> {
     pub fn add_submission(&mut self, priority: i32, cfg: SchedulerConfig) -> SubId {
         let sub = self.next_sub;
         self.next_sub += 1;
-        self.subs.insert(sub, SubState { priority, cfg, outstanding: 0 });
+        self.subs.insert(
+            sub,
+            SubState { priority, cfg, live: BTreeSet::new(), used: BTreeSet::new() },
+        );
         sub
     }
 
@@ -284,9 +473,9 @@ impl<D: Dispatcher> Scheduler<D> {
         self.dispatcher.now()
     }
 
-    /// Non-terminal jobs of one submission.
+    /// Non-terminal jobs of one submission — O(1) off the live index.
     pub fn outstanding(&self, sub: SubId) -> usize {
-        self.subs.get(&sub).map_or(0, |s| s.outstanding)
+        self.subs.get(&sub).map_or(0, |s| s.live.len())
     }
 
     /// True when every submitted job has reached a terminal state.
@@ -302,29 +491,52 @@ impl<D: Dispatcher> Scheduler<D> {
         self.rm.free_count()
     }
 
+    /// Compact summaries of every job that reached a terminal state (in
+    /// completion order). This is where terminal jobs live after their
+    /// eviction from the hot maps.
+    pub fn completed_log(&self) -> &[CompletedRecord] {
+        &self.completed
+    }
+
+    /// Total entries currently sitting in the ready-queue shards,
+    /// tombstones included (tests assert the rebuild bound with this).
+    pub fn pending_heap_len(&self) -> usize {
+        self.shards.values().map(|q| q.heap.len()).sum()
+    }
+
+    /// Ready-queue entries that are still live (queued jobs).
+    pub fn pending_live(&self) -> usize {
+        self.shards.values().map(|q| q.live).sum()
+    }
+
     /// Hand the resource pool back (for leak assertions in tests).
     pub fn into_pool(self) -> Box<dyn ResourceManager> {
         self.rm
     }
 
     /// Submit one job. The config must carry a `job_id` unique within the
-    /// submission.
+    /// submission; an optional `resource_kind` entry pins it to one
+    /// resource kind of the pool.
     pub fn submit(&mut self, sub: SubId, config: BasicConfig) -> Result<u64> {
         let job_id = config
             .job_id()
             .ok_or_else(|| AupError::Job("submitted config has no job_id".into()))?;
         let key = (sub, job_id);
-        if self.jobs.contains_key(&key) {
+        let sub_state = self
+            .subs
+            .get_mut(&sub)
+            .ok_or_else(|| AupError::Job(format!("unknown submission {sub}")))?;
+        if !sub_state.used.insert(job_id) {
             return Err(AupError::Job(format!(
                 "duplicate job_id {job_id} in submission {sub}"
             )));
         }
-        let priority = self
-            .subs
-            .get_mut(&sub)
-            .ok_or_else(|| AupError::Job(format!("unknown submission {sub}")))?
-            .priority;
-        self.subs.get_mut(&sub).unwrap().outstanding += 1;
+        sub_state.live.insert(job_id);
+        let priority = sub_state.priority;
+        let kind = config
+            .get_str(RESOURCE_KIND_KEY)
+            .unwrap_or("")
+            .to_string();
         let seq = self.next_seq;
         self.next_seq += 1;
         let now = self.dispatcher.now();
@@ -334,6 +546,7 @@ impl<D: Dispatcher> Scheduler<D> {
                 config,
                 priority,
                 seq,
+                kind: kind.clone(),
                 state: JobState::Queued,
                 attempts: 0,
                 elapsed: 0.0,
@@ -344,9 +557,12 @@ impl<D: Dispatcher> Scheduler<D> {
                 handle: None,
             },
         );
-        self.pending.push(PendingEntry { priority, seq, key });
+        self.shards
+            .entry(kind)
+            .or_default()
+            .push_live(PendingEntry { priority, seq, key });
         self.active += 1;
-        self.push_transition(key, JobState::Queued, 0, now, None, "submitted".to_string());
+        self.push_transition(key, JobState::Queued, 0, now, None, 0.0, "submitted".to_string());
         Ok(job_id)
     }
 
@@ -355,46 +571,83 @@ impl<D: Dispatcher> Scheduler<D> {
     pub fn cancel(&mut self, sub: SubId, job_id: u64) -> bool {
         let key = (sub, job_id);
         let state = match self.jobs.get(&key) {
-            Some(j) => j.state,
-            None => return false,
+            Some(j) if !j.state.is_terminal() => j.state,
+            _ => return false,
         };
-        if state.is_terminal() {
-            return false;
-        }
         let now = self.dispatcher.now();
-        if state == JobState::Running {
-            let (attempt_id, handle) = {
-                let j = self.jobs.get_mut(&key).unwrap();
-                j.deadline = None;
-                (j.attempt_id.take(), j.handle.take())
-            };
-            if let Some(a) = attempt_id {
-                self.attempts.remove(&a);
-                let reaped = self.dispatcher.abort(a);
-                if let Some(h) = handle {
-                    if reaped {
-                        self.rm.release(&h);
-                    } else {
-                        // the thread still runs user code on that slot;
-                        // reclaim it when the late completion arrives
-                        self.zombies.insert(a, h);
+        let mut ended: Option<(i64, f64)> = None;
+        // the dying entry's queue, rebuilt AFTER the job turns terminal
+        // so the rebuild's validity filter sees it as a tombstone
+        let mut shrink_shard: Option<String> = None;
+        let mut shrink_backoffs = false;
+        match state {
+            JobState::Running => {
+                let (attempt_id, handle, had_deadline, ran) = {
+                    let j = self.jobs.get_mut(&key).unwrap();
+                    let had_deadline = j.deadline.take().is_some();
+                    let ran = (now - j.started_at).max(0.0);
+                    (j.attempt_id.take(), j.handle.take(), had_deadline, ran)
+                };
+                if had_deadline {
+                    self.deadlines.note_dead();
+                }
+                if let Some(a) = attempt_id {
+                    self.attempts.remove(&a);
+                    let reaped = self.dispatcher.abort(a);
+                    if let Some(h) = handle {
+                        ended = Some((h.rid, ran));
+                        if reaped {
+                            self.rm.release(&h);
+                        } else {
+                            // the thread still runs user code on that slot;
+                            // reclaim it when the late completion arrives
+                            self.zombies.insert(a, h);
+                        }
                     }
                 }
             }
+            JobState::Queued => {
+                // the pending heap entry becomes a tombstone, skipped on
+                // pop; rebuild when tombstones dominate
+                let kind = self.jobs.get(&key).unwrap().kind.clone();
+                if let Some(q) = self.shards.get_mut(&kind) {
+                    q.note_dead();
+                }
+                shrink_shard = Some(kind);
+            }
+            JobState::Backoff => {
+                self.backoffs.note_dead();
+                shrink_backoffs = true;
+            }
+            _ => {}
         }
-        // queued heap entries become stale and are skipped on pop
-        self.complete_job(key, JobState::Cancelled, Err("cancelled".into()), now);
+        self.complete_job(key, JobState::Cancelled, Err("cancelled".into()), now, ended);
+        if let Some(kind) = shrink_shard {
+            if let Some(q) = self.shards.get_mut(&kind) {
+                let jobs = &self.jobs;
+                q.maybe_shrink(|e| {
+                    jobs.get(&e.key)
+                        .is_some_and(|j| j.state == JobState::Queued && j.seq == e.seq)
+                });
+            }
+        }
+        if shrink_backoffs {
+            let jobs = &self.jobs;
+            self.backoffs.maybe_shrink(|Reverse(e)| {
+                jobs.get(&e.key)
+                    .is_some_and(|j| j.state == JobState::Backoff && j.seq == e.stamp)
+            });
+        }
         true
     }
 
-    /// Cancel everything outstanding in one submission.
+    /// Cancel everything outstanding in one submission — reads the
+    /// submission's live index instead of scanning the whole job map.
     pub fn cancel_submission(&mut self, sub: SubId) -> usize {
-        let ids: Vec<u64> = self
-            .jobs
-            .iter()
-            .filter(|((s, _), j)| *s == sub && !j.state.is_terminal())
-            .map(|((_, id), _)| *id)
-            .collect();
+        let ids: Vec<u64> = match self.subs.get(&sub) {
+            Some(s) => s.live.iter().copied().collect(),
+            None => return 0,
+        };
         let mut n = 0;
         for id in ids {
             if self.cancel(sub, id) {
@@ -449,6 +702,7 @@ impl<D: Dispatcher> Scheduler<D> {
 
     // -- internals ---------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn push_transition(
         &mut self,
         key: (SubId, u64),
@@ -456,6 +710,7 @@ impl<D: Dispatcher> Scheduler<D> {
         attempt: u32,
         at: f64,
         rid: Option<i64>,
+        busy: f64,
         detail: String,
     ) {
         self.out.push(SchedEvent::Transition(Transition {
@@ -465,71 +720,136 @@ impl<D: Dispatcher> Scheduler<D> {
             attempt,
             at,
             rid,
+            busy,
             detail,
         }));
     }
 
-    fn sub_cfg(&self, sub: SubId) -> SchedulerConfig {
-        self.subs
-            .get(&sub)
-            .map(|s| s.cfg.clone())
-            .unwrap_or_default()
+    /// Borrow one submission's knobs — no clone on the retry/start path.
+    fn sub_cfg(&self, sub: SubId) -> &SchedulerConfig {
+        self.subs.get(&sub).map_or(&DEFAULT_SUB_CFG, |s| &s.cfg)
     }
 
-    /// Move due Backoff jobs back into the pending queue.
+    /// Put a due Backoff job back into its ready-queue shard (fresh seq;
+    /// the old pending/backoff entries become stale). Shared by both
+    /// poll paths so promote order implies identical transitions.
+    fn requeue(&mut self, key: (SubId, u64), now: f64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let (priority, attempts, kind) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.state = JobState::Queued;
+            j.seq = seq;
+            (j.priority, j.attempts, j.kind.clone())
+        };
+        self.shards
+            .entry(kind)
+            .or_default()
+            .push_live(PendingEntry { priority, seq, key });
+        self.push_transition(
+            key,
+            JobState::Queued,
+            attempts,
+            now,
+            None,
+            0.0,
+            format!("retry {} queued", attempts + 1),
+        );
+    }
+
+    /// Move due Backoff jobs back into the pending queue. Event path:
+    /// pop only due entries off the backoff heap — O(due · log live).
+    /// Scan path: the old full scan of every job.
     fn promote_backoffs(&mut self, now: f64) {
-        let due: Vec<(SubId, u64)> = self
-            .jobs
-            .iter()
-            .filter(|(_, j)| j.state == JobState::Backoff && j.next_due <= now + EPS)
-            .map(|(k, _)| *k)
-            .collect();
-        for key in due {
-            let seq = self.next_seq;
-            self.next_seq += 1;
-            let (priority, attempts) = {
-                let j = self.jobs.get_mut(&key).unwrap();
-                j.state = JobState::Queued;
-                j.seq = seq;
-                (j.priority, j.attempts)
-            };
-            self.pending.push(PendingEntry { priority, seq, key });
-            self.push_transition(
-                key,
-                JobState::Queued,
-                attempts,
-                now,
-                None,
-                format!("retry {} queued", attempts + 1),
-            );
+        let mut due: Vec<(SubId, u64)> = match self.path {
+            PollPath::Scan => self
+                .jobs
+                .iter()
+                .filter(|(_, j)| j.state == JobState::Backoff && j.next_due <= now + EPS)
+                .map(|(k, _)| *k)
+                .collect(),
+            PollPath::Event => {
+                let mut due = Vec::new();
+                while let Some(Reverse(top)) = self.backoffs.peek() {
+                    if top.at > now + EPS {
+                        break;
+                    }
+                    let Reverse(e) = self.backoffs.pop().unwrap();
+                    let valid = self
+                        .jobs
+                        .get(&e.key)
+                        .is_some_and(|j| j.state == JobState::Backoff && j.seq == e.stamp);
+                    if valid {
+                        self.backoffs.note_dead();
+                        due.push(e.key);
+                    }
+                }
+                // key order, exactly as the scan path collects them —
+                // the heap orders by (due, stamp), which may differ on
+                // same-instant ties
+                due.sort_unstable();
+                due
+            }
+        };
+        for key in due.drain(..) {
+            self.requeue(key, now);
         }
     }
 
-    /// Start queued jobs while resources are free.
+    /// Start queued jobs while resources are free. Kind-aware: each
+    /// shard's head competes for a resource of its kind ("" = any), so a
+    /// free GPU is claimed by the best gpu-or-any job even when an
+    /// unplaceable cpu-only job leads another shard.
     fn fill_slots(&mut self) {
         loop {
-            // find the next live pending entry without burning a resource
-            let key = loop {
-                let (ekey, eseq) = match self.pending.peek() {
-                    None => return,
-                    Some(e) => (e.key, e.seq),
+            // prune stale heads, then pick the best-placed live head
+            // among shards whose kind has capacity right now
+            let mut best: Option<(String, i32, u64)> = None;
+            for (kind, q) in self.shards.iter_mut() {
+                let head = loop {
+                    match q.heap.peek() {
+                        None => break None,
+                        Some(e) => {
+                            let stale = match self.jobs.get(&e.key) {
+                                Some(j) => j.state != JobState::Queued || j.seq != e.seq,
+                                None => true,
+                            };
+                            if stale {
+                                q.heap.pop();
+                                continue;
+                            }
+                            break Some((e.priority, e.seq));
+                        }
+                    }
                 };
-                let stale = match self.jobs.get(&ekey) {
-                    Some(j) => j.state != JobState::Queued || j.seq != eseq,
-                    None => true,
+                let Some((priority, seq)) = head else { continue };
+                let free = if kind.is_empty() {
+                    self.rm.free_count() > 0
+                } else {
+                    self.rm.free_count_kind(kind) > 0
                 };
-                if stale {
-                    self.pending.pop();
+                if !free {
                     continue;
                 }
-                break ekey;
+                let better = match &best {
+                    None => true,
+                    Some((_, bp, bs)) => priority > *bp || (priority == *bp && seq < *bs),
+                };
+                if better {
+                    best = Some((kind.clone(), priority, seq));
+                }
+            }
+            let Some((kind, _, _)) = best else { return };
+            let handle = if kind.is_empty() {
+                self.rm.get_available()
+            } else {
+                self.rm.get_available_kind(&kind)
             };
-            let handle = match self.rm.get_available() {
-                Some(h) => h,
-                None => return,
-            };
-            self.pending.pop();
-            self.start_attempt(key, handle);
+            let Some(handle) = handle else { return };
+            let q = self.shards.get_mut(&kind).unwrap();
+            let entry = q.heap.pop().unwrap();
+            q.note_dead();
+            self.start_attempt(entry.key, handle);
         }
     }
 
@@ -546,7 +866,7 @@ impl<D: Dispatcher> Scheduler<D> {
         // attempt's deadline and elapsed accounting start after it —
         // otherwise a sim-mode cold start would eat the job_timeout
         let spawn = env.spawn_delay.max(0.0);
-        let (config, attempts) = {
+        let (config, attempts, deadline) = {
             let j = self.jobs.get_mut(&key).unwrap();
             j.attempts += 1;
             j.state = JobState::Running;
@@ -554,8 +874,14 @@ impl<D: Dispatcher> Scheduler<D> {
             j.handle = Some(handle);
             j.started_at = now + spawn;
             j.deadline = timeout.map(|t| now + spawn + t);
-            (j.config.clone(), j.attempts)
+            (j.config.clone(), j.attempts, j.deadline)
         };
+        if let Some(d) = deadline {
+            if self.event_path() {
+                self.deadlines
+                    .push_live(Reverse(TimerEntry { at: d, stamp: attempt_id, key }));
+            }
+        }
         self.attempts.insert(attempt_id, key);
         self.push_transition(
             key,
@@ -563,6 +889,7 @@ impl<D: Dispatcher> Scheduler<D> {
             attempts,
             now,
             Some(rid),
+            0.0,
             format!("attempt {attempts} on {label}"),
         );
         self.dispatcher.dispatch(attempt_id, key.0, &config, &env);
@@ -581,38 +908,70 @@ impl<D: Dispatcher> Scheduler<D> {
             }
         };
         let now = self.dispatcher.now();
-        let handle = {
+        let (handle, had_deadline) = {
             let j = self.jobs.get_mut(&key).unwrap();
             j.elapsed += ev.elapsed;
-            j.deadline = None;
+            let had_deadline = j.deadline.take().is_some();
             j.attempt_id = None;
-            j.handle.take()
+            (j.handle.take(), had_deadline)
         };
+        if had_deadline {
+            // the deadline entry outlives the attempt as a tombstone
+            self.deadlines.note_dead();
+            let jobs = &self.jobs;
+            self.deadlines.maybe_shrink(|Reverse(e)| {
+                jobs.get(&e.key).is_some_and(|j| j.attempt_id == Some(e.stamp))
+            });
+        }
+        let mut ended = None;
         if let Some(h) = handle {
+            ended = Some((h.rid, ev.elapsed));
             self.rm.release(&h);
         }
         match ev.outcome {
             Ok(score) if score.is_finite() => {
-                self.complete_job(key, JobState::Done, Ok(score), now)
+                self.complete_job(key, JobState::Done, Ok(score), now, ended)
             }
-            Ok(bad) => self.fail_attempt(key, format!("non-finite score {bad}"), now),
-            Err(msg) => self.fail_attempt(key, msg, now),
+            Ok(bad) => self.fail_attempt(key, format!("non-finite score {bad}"), now, ended),
+            Err(msg) => self.fail_attempt(key, msg, now, ended),
         }
     }
 
-    /// Time out every running attempt whose deadline passed.
+    /// Time out every running attempt whose deadline passed. Event path:
+    /// pop only due entries off the deadline heap; scan path: full scan.
     fn expire_deadlines(&mut self) {
         let now = self.dispatcher.now();
-        let expired: Vec<(SubId, u64)> = self
-            .jobs
-            .iter()
-            .filter(|(_, j)| {
-                j.state == JobState::Running
-                    && j.deadline.is_some_and(|d| d <= now + EPS)
-            })
-            .map(|(k, _)| *k)
-            .collect();
-        for key in expired {
+        let mut expired: Vec<(SubId, u64)> = match self.path {
+            PollPath::Scan => self
+                .jobs
+                .iter()
+                .filter(|(_, j)| {
+                    j.state == JobState::Running
+                        && j.deadline.is_some_and(|d| d <= now + EPS)
+                })
+                .map(|(k, _)| *k)
+                .collect(),
+            PollPath::Event => {
+                let mut due = Vec::new();
+                while let Some(Reverse(top)) = self.deadlines.peek() {
+                    if top.at > now + EPS {
+                        break;
+                    }
+                    let Reverse(e) = self.deadlines.pop().unwrap();
+                    let valid = self
+                        .jobs
+                        .get(&e.key)
+                        .is_some_and(|j| j.attempt_id == Some(e.stamp));
+                    if valid {
+                        self.deadlines.note_dead();
+                        due.push(e.key);
+                    }
+                }
+                due.sort_unstable();
+                due
+            }
+        };
+        for key in expired.drain(..) {
             let (attempt_id, handle, ran_for) = {
                 let j = self.jobs.get_mut(&key).unwrap();
                 j.deadline = None;
@@ -620,10 +979,12 @@ impl<D: Dispatcher> Scheduler<D> {
                 j.elapsed += ran.max(0.0);
                 (j.attempt_id.take(), j.handle.take(), ran)
             };
+            let mut ended = None;
             if let Some(a) = attempt_id {
                 self.attempts.remove(&a);
                 let reaped = self.dispatcher.abort(a);
                 if let Some(h) = handle {
+                    ended = Some((h.rid, ran_for.max(0.0)));
                     if reaped {
                         self.rm.release(&h);
                     } else {
@@ -631,7 +992,7 @@ impl<D: Dispatcher> Scheduler<D> {
                     }
                 }
             }
-            self.fail_attempt(key, format!("timeout after {ran_for:.3}s"), now);
+            self.fail_attempt(key, format!("timeout after {ran_for:.3}s"), now, ended);
         }
     }
 
@@ -643,45 +1004,71 @@ impl<D: Dispatcher> Scheduler<D> {
         for (attempt, key) in live {
             self.attempts.remove(&attempt);
             self.dispatcher.abort(attempt);
-            let handle = self.jobs.get_mut(&key).and_then(|j| {
-                j.deadline = None;
-                j.attempt_id = None;
-                j.handle.take()
-            });
+            let (handle, had_deadline, ran) = match self.jobs.get_mut(&key) {
+                Some(j) => {
+                    let had_deadline = j.deadline.take().is_some();
+                    j.attempt_id = None;
+                    (j.handle.take(), had_deadline, (now - j.started_at).max(0.0))
+                }
+                None => (None, false, 0.0),
+            };
+            if had_deadline {
+                self.deadlines.note_dead();
+            }
+            let mut ended = None;
             if let Some(h) = handle {
+                ended = Some((h.rid, ran));
                 self.rm.release(&h);
             }
-            self.fail_attempt(key, "hung with no timeout configured".into(), now);
+            self.fail_attempt(key, "hung with no timeout configured".into(), now, ended);
         }
     }
 
     /// An attempt failed: back off and retry, or fail terminally.
-    fn fail_attempt(&mut self, key: (SubId, u64), msg: String, now: f64) {
+    /// `ended` carries (rid, busy seconds) of the attempt that just
+    /// released its resource, stamped onto the transition for
+    /// utilization accounting.
+    fn fail_attempt(
+        &mut self,
+        key: (SubId, u64),
+        msg: String,
+        now: f64,
+        ended: Option<(i64, f64)>,
+    ) {
         let cfg = self.sub_cfg(key.0);
+        let (max_retries, retry_backoff) = (cfg.max_retries, cfg.retry_backoff);
         let attempts = self.jobs.get(&key).map_or(0, |j| j.attempts);
         // `attempts <= max_retries` (not `< max_retries + 1`): the latter
         // wraps for max_retries = u32::MAX and would disable retries
-        if attempts <= cfg.max_retries {
+        if attempts <= max_retries {
             // cap the exponential so huge retry counts can't push next_due
             // to infinity (which would break the monotonic sim clock)
-            let backoff = (cfg.retry_backoff
+            let backoff = (retry_backoff
                 * f64::powi(2.0, attempts.saturating_sub(1).min(60) as i32))
             .min(86_400.0 * 365.0);
+            let seq = self.next_seq;
+            self.next_seq += 1;
             {
                 let j = self.jobs.get_mut(&key).unwrap();
                 j.state = JobState::Backoff;
+                j.seq = seq;
                 j.next_due = now + backoff;
+            }
+            if self.event_path() {
+                self.backoffs
+                    .push_live(Reverse(TimerEntry { at: now + backoff, stamp: seq, key }));
             }
             self.push_transition(
                 key,
                 JobState::Backoff,
                 attempts,
                 now,
-                None,
+                ended.map(|(rid, _)| rid),
+                ended.map_or(0.0, |(_, busy)| busy),
                 format!("attempt {attempts} failed: {msg}; retry in {backoff:.3}s"),
             );
         } else {
-            self.complete_job(key, JobState::Failed, Err(msg), now);
+            self.complete_job(key, JobState::Failed, Err(msg), now, ended);
         }
     }
 
@@ -691,21 +1078,45 @@ impl<D: Dispatcher> Scheduler<D> {
         state: JobState,
         outcome: Result<f64, String>,
         now: f64,
+        ended: Option<(i64, f64)>,
     ) {
-        let (config, attempts, elapsed) = {
+        // event path: the job leaves the hot map for good (its config is
+        // MOVED into the completion); the scan baseline keeps terminal
+        // rows in place, reproducing the old O(lifetime) cost
+        let (config, attempts, elapsed) = if self.event_path() {
+            let mut j = self.jobs.remove(&key).expect("completing unknown job");
+            j.state = state;
+            (std::mem::take(&mut j.config), j.attempts, j.elapsed)
+        } else {
             let j = self.jobs.get_mut(&key).unwrap();
             j.state = state;
             (j.config.clone(), j.attempts, j.elapsed)
         };
         self.active -= 1;
         if let Some(s) = self.subs.get_mut(&key.0) {
-            s.outstanding = s.outstanding.saturating_sub(1);
+            s.live.remove(&key.1);
         }
+        self.completed.push(CompletedRecord {
+            sub: key.0,
+            job_id: key.1,
+            state,
+            attempts,
+            elapsed,
+            at: now,
+        });
         let detail = match &outcome {
             Ok(score) => format!("score {score}"),
             Err(msg) => msg.clone(),
         };
-        self.push_transition(key, state, attempts, now, None, detail);
+        self.push_transition(
+            key,
+            state,
+            attempts,
+            now,
+            ended.map(|(rid, _)| rid),
+            ended.map_or(0.0, |(_, busy)| busy),
+            detail,
+        );
         self.out.push(SchedEvent::Done(Completion {
             sub: key.0,
             job_id: key.1,
@@ -718,23 +1129,62 @@ impl<D: Dispatcher> Scheduler<D> {
     }
 
     /// Earliest time something scheduled happens: a running attempt's
-    /// deadline or a backoff becoming due.
-    fn next_wakeup(&self) -> Option<f64> {
-        let mut t: Option<f64> = None;
-        for j in self.jobs.values() {
-            let candidate = match j.state {
-                JobState::Running => j.deadline,
-                JobState::Backoff => Some(j.next_due),
-                _ => None,
-            };
-            if let Some(c) = candidate {
-                t = Some(match t {
-                    Some(cur) => cur.min(c),
-                    None => c,
-                });
+    /// deadline or a backoff becoming due. Event path: O(1) off the two
+    /// heap tops (stale tops popped lazily); scan path: full scan.
+    fn next_wakeup(&mut self) -> Option<f64> {
+        match self.path {
+            PollPath::Scan => {
+                let mut t: Option<f64> = None;
+                for j in self.jobs.values() {
+                    let candidate = match j.state {
+                        JobState::Running => j.deadline,
+                        JobState::Backoff => Some(j.next_due),
+                        _ => None,
+                    };
+                    if let Some(c) = candidate {
+                        t = Some(match t {
+                            Some(cur) => cur.min(c),
+                            None => c,
+                        });
+                    }
+                }
+                t
+            }
+            PollPath::Event => {
+                // drop stale tops so a dead timer can't truncate a wait
+                loop {
+                    let stale = match self.backoffs.peek() {
+                        None => break,
+                        Some(Reverse(e)) => !self
+                            .jobs
+                            .get(&e.key)
+                            .is_some_and(|j| j.state == JobState::Backoff && j.seq == e.stamp),
+                    };
+                    if !stale {
+                        break;
+                    }
+                    self.backoffs.pop();
+                }
+                loop {
+                    let stale = match self.deadlines.peek() {
+                        None => break,
+                        Some(Reverse(e)) => {
+                            !self.jobs.get(&e.key).is_some_and(|j| j.attempt_id == Some(e.stamp))
+                        }
+                    };
+                    if !stale {
+                        break;
+                    }
+                    self.deadlines.pop();
+                }
+                match (self.backoffs.peek(), self.deadlines.peek()) {
+                    (Some(Reverse(b)), Some(Reverse(d))) => Some(b.at.min(d.at)),
+                    (Some(Reverse(b)), None) => Some(b.at),
+                    (None, Some(Reverse(d))) => Some(d.at),
+                    (None, None) => None,
+                }
             }
         }
-        t
     }
 }
 
@@ -787,6 +1237,10 @@ mod tests {
         assert_eq!(s.now(), 12.0);
         assert!(s.idle());
         assert_eq!(s.pool_free(), 1);
+        // the terminal job left the hot map for the completed log
+        assert_eq!(s.completed_log().len(), 1);
+        assert_eq!(s.completed_log()[0].state, JobState::Done);
+        assert!(s.jobs.is_empty(), "terminal jobs are evicted");
     }
 
     #[test]
@@ -943,6 +1397,11 @@ mod tests {
         s.submit(sub, job(0)).unwrap();
         assert!(s.submit(sub, job(0)).is_err(), "duplicate job_id");
         assert!(s.submit(sub, BasicConfig::new()).is_err(), "missing job_id");
+        // duplicate detection survives the job reaching a terminal state
+        // and leaving the hot map
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert!(s.submit(sub, job(0)).is_err(), "duplicate job_id after completion");
     }
 
     #[test]
@@ -1014,6 +1473,49 @@ mod tests {
     }
 
     #[test]
+    fn attempt_ending_transitions_carry_rid_and_busy_seconds() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(1, 2.0, None));
+        let mut calls = 0u32;
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(move |_, _| {
+                calls += 1;
+                if calls == 1 {
+                    SimOutcome::fail("first", 3.0)
+                } else {
+                    SimOutcome::ok(1.0, 5.0)
+                }
+            })),
+        );
+        s.submit(sub, job(0)).unwrap();
+        let mut seen = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                if let SchedEvent::Transition(t) = ev {
+                    seen.push((t.state, t.rid, t.busy));
+                }
+            }
+        }
+        // Backoff ends attempt 1 (3s on cpu:0); Done ends attempt 2 (5s)
+        let backoff = seen.iter().find(|(st, _, _)| *st == JobState::Backoff).unwrap();
+        assert_eq!(backoff.1, Some(0));
+        assert!((backoff.2 - 3.0).abs() < 1e-9, "{seen:?}");
+        let done = seen.iter().find(|(st, _, _)| *st == JobState::Done).unwrap();
+        assert_eq!(done.1, Some(0));
+        assert!((done.2 - 5.0).abs() < 1e-9, "{seen:?}");
+        // Queued/Running transitions report no busy time
+        assert!(seen
+            .iter()
+            .filter(|(st, _, _)| !matches!(st, JobState::Backoff | JobState::Done))
+            .all(|(_, _, busy)| *busy == 0.0));
+    }
+
+    #[test]
     fn stalled_scheduler_errors_instead_of_hanging() {
         // a pool whose only slot is pinned by a zombie-free, never-free
         // manager cannot place queued work — poll must error, not spin
@@ -1040,6 +1542,84 @@ mod tests {
         s.submit(sub, job(0)).unwrap();
         let _ = s.poll(false).unwrap(); // drains the Queued transition
         assert!(s.poll(true).is_err());
+    }
+
+    #[test]
+    fn kind_pinned_job_without_matching_pool_stalls_cleanly() {
+        // a gpu-only job over a cpu pool can never be placed: poll must
+        // error out (the pool has free slots, but none of that kind)
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        let mut c = job(0);
+        c.set_str(RESOURCE_KIND_KEY, "gpu");
+        s.submit(sub, c).unwrap();
+        let _ = s.poll(false).unwrap();
+        assert!(s.poll(true).is_err());
+        assert_eq!(s.pool_free(), 1, "no slot was burnt on the unplaceable job");
+    }
+
+    #[test]
+    fn kind_pinned_jobs_do_not_stall_other_kinds() {
+        // one cpu + one gpu slot; a cpu-only job ahead of a gpu-only job
+        // in submission order must not block the gpu job when only the
+        // gpu is free
+        use crate::resource::gpu::GpuManager;
+        use crate::resource::CompositeManager;
+        let pool = CompositeManager::new(vec![
+            Box::new(CpuManager::new(1)),
+            Box::new(GpuManager::new(vec![0])),
+        ]);
+        let mut s = SimScheduler::new(Box::new(pool), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))),
+        );
+        // two cpu-pinned jobs then a gpu-pinned one: with a single FIFO
+        // queue the gpu job would wait behind cpu job 1 for the one cpu
+        // slot; sharded queues place it immediately
+        for id in 0..2 {
+            let mut c = job(id);
+            c.set_str(RESOURCE_KIND_KEY, "cpu");
+            s.submit(sub, c).unwrap();
+        }
+        let mut g = job(2);
+        g.set_str(RESOURCE_KIND_KEY, "gpu");
+        s.submit(sub, g).unwrap();
+        let _ = s.poll(false).unwrap();
+        assert_eq!(s.pool_free(), 0, "cpu job 0 AND gpu job 2 both placed");
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|c| c.state == JobState::Done));
+        // gpu job finished in the first wave at t=10, cpu job 1 at t=20
+        assert!((s.now() - 20.0).abs() < 1e-9);
+        assert_eq!(s.pool_free(), 2);
+    }
+
+    #[test]
+    fn cancel_heavy_queue_rebuilds_its_tombstones() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        let n = 4 * super::SHRINK_MIN as u64;
+        for id in 0..n {
+            s.submit(sub, job(id)).unwrap();
+        }
+        // cancel everything still queued (all but what fill_slots takes)
+        for id in 1..n {
+            s.cancel(sub, id);
+        }
+        assert!(
+            s.pending_heap_len() <= 2 * s.pending_live().max(1) + super::SHRINK_MIN,
+            "tombstones must not pin the heap at peak size: {} entries for {} live",
+            s.pending_heap_len(),
+            s.pending_live()
+        );
+        let done = drain(&mut s);
+        assert_eq!(done.len(), n as usize);
     }
 
     #[test]
@@ -1134,5 +1714,56 @@ mod tests {
         assert_eq!(c.retry_backoff, 0.5);
         assert_eq!(c.job_timeout, Some(60.0));
         assert_eq!(SchedulerConfig::from_json(&Json::Null), SchedulerConfig::default());
+    }
+
+    #[test]
+    fn scan_baseline_matches_event_path_exactly() {
+        // unit-sized version of the integration oracle test: same
+        // submissions, same flaky executor, both paths — identical
+        // transition sequences
+        let run = |scan: bool| {
+            let rm = Box::new(CpuManager::new(2));
+            let mut s = if scan {
+                SimScheduler::scan_baseline(rm, SimDispatcher::new())
+            } else {
+                SimScheduler::new(rm, SimDispatcher::new())
+            };
+            let sub = s.add_submission(0, cfg_with(2, 1.5, Some(8.0)));
+            s.dispatcher_mut().add_executor(
+                sub,
+                Box::new(FnSimExecutor::new(|c, _| {
+                    let id = c.job_id().unwrap();
+                    match id % 3 {
+                        0 => SimOutcome::fail("boom", 2.0),
+                        1 => SimOutcome::hang(),
+                        _ => SimOutcome::ok(id as f64, 3.0),
+                    }
+                })),
+            );
+            for id in 0..9 {
+                s.submit(sub, job(id)).unwrap();
+            }
+            let mut trace = Vec::new();
+            loop {
+                let evs = s.poll(true).unwrap();
+                if evs.is_empty() {
+                    break;
+                }
+                for ev in evs {
+                    if let SchedEvent::Transition(t) = ev {
+                        trace.push((
+                            t.job_id,
+                            t.state.name(),
+                            t.attempt,
+                            t.at.to_bits(),
+                            t.rid,
+                            t.busy.to_bits(),
+                        ));
+                    }
+                }
+            }
+            (trace, s.now())
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -112,11 +112,85 @@ struct JobCols {
     score: usize,
 }
 
-/// Column slots of a tracked `job_event` table.
+/// Live utilization totals of one resource, accumulated from the
+/// `job_event` journal's `rid`/`busy` columns (each attempt-ending
+/// transition reports the seconds it occupied its resource) — the
+/// fleet-saturation view behind `aup top`, O(resources) to read, no
+/// job-history scan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceUtil {
+    pub rid: i64,
+    /// total seconds attempts occupied this resource
+    pub busy_secs: f64,
+    /// attempts that reported busy time on this resource
+    pub attempts: usize,
+    /// journal time of the first/last busy report — the observation
+    /// window saturation is computed over
+    pub first_time: f64,
+    pub last_time: f64,
+}
+
+impl ResourceUtil {
+    fn new(rid: i64) -> ResourceUtil {
+        // sentinel window: the first absorb collapses it to [t, t]; an
+        // entry is only ever exposed after at least one absorb
+        ResourceUtil {
+            rid,
+            busy_secs: 0.0,
+            attempts: 0,
+            first_time: f64::INFINITY,
+            last_time: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Busy fraction over the observed window (0 when the window is
+    /// empty or degenerate). May exceed 1 for resources reused faster
+    /// than the journal clock's resolution.
+    pub fn saturation(&self) -> f64 {
+        let span = self.last_time - self.first_time;
+        if span > 0.0 {
+            self.busy_secs / span
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Account one attempt's busy report. The single definition shared by
+/// the incremental path and the one-pass scan fallback in `status.rs`,
+/// so on the journal's normal append-only life both produce identical
+/// utilization by construction (min/max are order-independent). The
+/// only divergence window: a manual `DELETE FROM job_event` keeps the
+/// incremental window at its high-water endpoints where a rescan would
+/// shrink it — see `retire_util`.
+pub(crate) fn absorb_util(
+    map: &mut BTreeMap<i64, ResourceUtil>,
+    rid: Option<i64>,
+    busy: Option<f64>,
+    time: Option<f64>,
+) {
+    let (Some(rid), Some(busy)) = (rid, busy) else { return };
+    if rid < 0 || !busy.is_finite() || busy <= 0.0 {
+        return;
+    }
+    let u = map.entry(rid).or_insert_with(|| ResourceUtil::new(rid));
+    u.busy_secs += busy;
+    u.attempts += 1;
+    let t = time.unwrap_or(0.0);
+    u.first_time = u.first_time.min(t);
+    u.last_time = u.last_time.max(t);
+}
+
+/// Column slots of a tracked `job_event` table. `rid`/`busy`/`time` are
+/// optional — a journal from before the utilization columns simply
+/// contributes no busy time.
 #[derive(Debug, Clone, Copy)]
 struct EventCols {
     eid: usize,
     state: usize,
+    rid: Option<usize>,
+    busy: Option<usize>,
+    time: Option<usize>,
 }
 
 /// Pre-mutation snapshot of the aggregate-relevant fields of one row,
@@ -126,7 +200,7 @@ struct EventCols {
 #[derive(Debug)]
 pub(crate) enum Captured {
     Job { eid: Option<i64>, status: Option<String>, score: Option<f64>, jid: i64 },
-    Event { eid: Option<i64>, backoff: bool },
+    Event { eid: Option<i64>, backoff: bool, rid: Option<i64>, busy: Option<f64> },
     None,
 }
 
@@ -139,6 +213,7 @@ pub(crate) struct Aggregates {
     /// track — every answer would be wrong, so none are given
     disabled: bool,
     per_exp: BTreeMap<i64, ExperimentAggregate>,
+    per_rid: BTreeMap<i64, ResourceUtil>,
 }
 
 impl Aggregates {
@@ -150,6 +225,11 @@ impl Aggregates {
 
     pub fn get(&self, eid: i64) -> Option<&ExperimentAggregate> {
         self.per_exp.get(&eid)
+    }
+
+    /// Per-resource busy-time totals, in rid order.
+    pub fn utilization(&self) -> Vec<ResourceUtil> {
+        self.per_rid.values().cloned().collect()
     }
 
     /// A table was created: resolve tracked-column slots by name.
@@ -171,7 +251,13 @@ impl Aggregates {
         } else if name == schema_names::JOB_EVENT {
             match (s.col_index("eid"), s.col_index("state")) {
                 (Some(eid), Some(state)) => {
-                    self.event_cols = Some(EventCols { eid, state });
+                    self.event_cols = Some(EventCols {
+                        eid,
+                        state,
+                        rid: s.col_index("rid"),
+                        busy: s.col_index("busy"),
+                        time: s.col_index("time"),
+                    });
                 }
                 _ => self.disabled = true,
             }
@@ -201,6 +287,8 @@ impl Aggregates {
                     return Captured::Event {
                         eid: row.values[c.eid].as_i64(),
                         backoff: row.values[c.state].as_str() == Some("BACKOFF"),
+                        rid: c.rid.and_then(|i| row.values[i].as_i64()),
+                        busy: c.busy.and_then(|i| opt_f64(&row.values[i])),
                     };
                 }
             }
@@ -220,6 +308,12 @@ impl Aggregates {
             let jid = named.get(&c.pk_name).and_then(Value::as_i64).unwrap_or(-1);
             self.per_exp.entry(eid).or_default().add_job(status, score, jid);
         } else if name == schema_names::JOB_EVENT && self.event_cols.is_some() {
+            absorb_util(
+                &mut self.per_rid,
+                named.get("rid").and_then(Value::as_i64),
+                named.get("busy").and_then(opt_f64),
+                named.get("time").and_then(opt_f64),
+            );
             let Some(eid) = named.get("eid").and_then(Value::as_i64) else { return };
             self.per_exp
                 .entry(eid)
@@ -257,20 +351,28 @@ impl Aggregates {
                     }
                 }
             }
-            Captured::Event { eid, backoff } => {
+            Captured::Event { eid, backoff, rid, busy } => {
                 if let Some(eid) = eid {
                     if backoff {
                         let agg = self.per_exp.entry(eid).or_default();
                         agg.retries = agg.retries.saturating_sub(1);
                     }
                 }
-                if let (Some(c), Some(t)) = (self.event_cols.as_ref(), tables.get(name)) {
+                self.retire_util(rid, busy);
+                if let (Some(c), Some(t)) = (self.event_cols.as_ref().copied(), tables.get(name))
+                {
                     if let Some(row) = t.get(key) {
                         if let (Some(eid), Some("BACKOFF")) =
                             (row.values[c.eid].as_i64(), row.values[c.state].as_str())
                         {
                             self.per_exp.entry(eid).or_default().retries += 1;
                         }
+                        absorb_util(
+                            &mut self.per_rid,
+                            c.rid.and_then(|i| row.values[i].as_i64()),
+                            c.busy.and_then(|i| opt_f64(&row.values[i])),
+                            c.time.and_then(|i| opt_f64(&row.values[i])),
+                        );
                     }
                 }
             }
@@ -285,11 +387,40 @@ impl Aggregates {
         }
         match old {
             Captured::Job { .. } => self.retire_job(tables, old),
-            Captured::Event { eid: Some(eid), backoff: true } => {
-                let agg = self.per_exp.entry(eid).or_default();
-                agg.retries = agg.retries.saturating_sub(1);
+            Captured::Event { eid, backoff, rid, busy } => {
+                if let (Some(eid), true) = (eid, backoff) {
+                    let agg = self.per_exp.entry(eid).or_default();
+                    agg.retries = agg.retries.saturating_sub(1);
+                }
+                self.retire_util(rid, busy);
             }
             _ => {}
+        }
+    }
+
+    /// Remove one journal row's utilization contribution. No schema path
+    /// ever UPDATEs/DELETEs `job_event` rows, so this only fires on
+    /// manual SQL. Busy/attempt totals subtract exactly; the window
+    /// endpoints are high-water marks (shrinking them would need a
+    /// rescan), so a PARTIALLY deleted rid may report a wider window
+    /// than `resource_utilization_scan` until its entry empties — a rid
+    /// whose last attempt is retired drops out entirely, converging with
+    /// the scan again.
+    fn retire_util(&mut self, rid: Option<i64>, busy: Option<f64>) {
+        let (Some(rid), Some(busy)) = (rid, busy) else { return };
+        if rid < 0 || !busy.is_finite() || busy <= 0.0 {
+            return;
+        }
+        let emptied = match self.per_rid.get_mut(&rid) {
+            Some(u) => {
+                u.busy_secs = (u.busy_secs - busy).max(0.0);
+                u.attempts = u.attempts.saturating_sub(1);
+                u.attempts == 0
+            }
+            None => false,
+        };
+        if emptied {
+            self.per_rid.remove(&rid);
         }
     }
 

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::store::schema::{JobEventRow, JobRow};
 use crate::store::server::StoreCmd;
-use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::QueryResult;
 use crate::util::error::{AupError, Result};
@@ -56,6 +56,8 @@ pub trait StoreApi: Send {
     fn set_job_running(&self, jid: i64, rid: i64) -> Result<()>;
     fn cancel_job(&self, jid: i64, now: f64) -> Result<()>;
     fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()>;
+    /// Journal one scheduler transition; `rid`/`busy` report resource
+    /// occupancy of an attempt-ending transition (`-1, 0.0` otherwise).
     #[allow(clippy::too_many_arguments)]
     fn log_job_event(
         &self,
@@ -65,13 +67,17 @@ pub trait StoreApi: Send {
         state: &str,
         time: f64,
         detail: &str,
+        rid: i64,
+        busy: f64,
     ) -> Result<()>;
     fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>>;
     fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>>;
     fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>>;
     fn sql(&self, query: &str) -> Result<QueryResult>;
     fn status(&self) -> Result<Vec<ExperimentStatus>>;
-    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)>;
+    #[allow(clippy::type_complexity)]
+    fn top(&self, events: usize)
+        -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>;
     fn wal_stats(&self) -> Result<Option<WalStats>>;
     fn checkpoint(&self) -> Result<()>;
     fn tick(&self, now: f64) -> Result<()>;
@@ -188,6 +194,8 @@ impl StoreClient {
         state: &str,
         time: f64,
         detail: &str,
+        rid: i64,
+        busy: f64,
     ) -> Result<()> {
         self.send_cmd(StoreCmd::LogJobEvent {
             jid,
@@ -196,6 +204,8 @@ impl StoreClient {
             state: state.to_string(),
             time,
             detail: detail.to_string(),
+            rid,
+            busy,
         })
     }
 
@@ -221,8 +231,13 @@ impl StoreClient {
         self.request(|reply| StoreCmd::Status { reply })
     }
 
-    /// Live `aup top` view: RUNNING jobs + the last `events` transitions.
-    pub fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
+    /// and per-resource utilization.
+    #[allow(clippy::type_complexity)]
+    pub fn top(
+        &self,
+        events: usize,
+    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
         self.request(|reply| StoreCmd::Top { events, reply })
     }
 
@@ -292,6 +307,7 @@ impl StoreApi for StoreClient {
         StoreClient::finish_job(self, jid, score, ok, now)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn log_job_event(
         &self,
         jid: i64,
@@ -300,8 +316,10 @@ impl StoreApi for StoreClient {
         state: &str,
         time: f64,
         detail: &str,
+        rid: i64,
+        busy: f64,
     ) -> Result<()> {
-        StoreClient::log_job_event(self, jid, eid, attempt, state, time, detail)
+        StoreClient::log_job_event(self, jid, eid, attempt, state, time, detail, rid, busy)
     }
 
     fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
@@ -324,7 +342,11 @@ impl StoreApi for StoreClient {
         StoreClient::status(self)
     }
 
-    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+    #[allow(clippy::type_complexity)]
+    fn top(
+        &self,
+        events: usize,
+    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
         StoreClient::top(self, events)
     }
 

@@ -19,7 +19,7 @@
 use std::io::{Read, Write};
 
 use crate::store::schema::{JobEventRow, JobRow, JobStatus};
-use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::{QueryResult, Value};
 use crate::util::error::{AupError, Result};
@@ -100,7 +100,18 @@ pub enum Request {
     SetJobRunning { jid: i64, rid: i64 },
     CancelJob { jid: i64, now: f64 },
     FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
-    LogJobEvent { jid: i64, eid: i64, attempt: i64, state: String, time: f64, detail: String },
+    LogJobEvent {
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: String,
+        time: f64,
+        detail: String,
+        /// resource occupancy of an attempt-ending transition (`-1, 0.0`
+        /// otherwise); optional on the wire for older peers
+        rid: i64,
+        busy: f64,
+    },
     Tick { now: f64 },
     Checkpoint,
 }
@@ -186,15 +197,19 @@ impl Request {
                 ("job_ok", Json::Bool(*ok)),
                 ("now", Json::num(*now)),
             ]),
-            Request::LogJobEvent { jid, eid, attempt, state, time, detail } => Json::obj(vec![
-                ("cmd", Json::str("log_job_event")),
-                ("jid", Json::int(*jid)),
-                ("eid", Json::int(*eid)),
-                ("attempt", Json::int(*attempt)),
-                ("state", Json::str(state.clone())),
-                ("time", Json::num(*time)),
-                ("detail", Json::str(detail.clone())),
-            ]),
+            Request::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => {
+                Json::obj(vec![
+                    ("cmd", Json::str("log_job_event")),
+                    ("jid", Json::int(*jid)),
+                    ("eid", Json::int(*eid)),
+                    ("attempt", Json::int(*attempt)),
+                    ("state", Json::str(state.clone())),
+                    ("time", Json::num(*time)),
+                    ("detail", Json::str(detail.clone())),
+                    ("rid", Json::int(*rid)),
+                    ("busy", Json::num(*busy)),
+                ])
+            }
             Request::Tick { now } => {
                 Json::obj(vec![("cmd", Json::str("tick")), ("now", Json::num(*now))])
             }
@@ -286,6 +301,10 @@ impl Request {
                 state: str_field("state")?,
                 time: f64_field("time")?,
                 detail: str_field("detail")?,
+                // optional: a peer from before the utilization columns
+                // simply reports no busy time
+                rid: j.get("rid").and_then(Json::as_i64).unwrap_or(-1),
+                busy: j.get("busy").and_then(Json::as_f64).unwrap_or(0.0),
             },
             "tick" => Request::Tick { now: f64_field("now")? },
             "checkpoint" => Request::Checkpoint,
@@ -390,6 +409,8 @@ pub fn job_event_to_json(e: &JobEventRow) -> Json {
         ("state", Json::str(e.state.clone())),
         ("time", Json::num(e.time)),
         ("detail", Json::str(e.detail.clone())),
+        ("rid", Json::int(e.rid)),
+        ("busy", Json::num(e.busy)),
     ])
 }
 
@@ -402,6 +423,30 @@ pub fn job_event_from_json(j: &Json) -> Result<JobEventRow> {
         state: req_str(j, "state", "job event")?,
         time: req_f64(j, "time", "job event")?,
         detail: req_str(j, "detail", "job event")?,
+        // optional on the wire: an older peer's events carry no
+        // utilization columns
+        rid: j.get("rid").and_then(Json::as_i64).unwrap_or(-1),
+        busy: j.get("busy").and_then(Json::as_f64).unwrap_or(0.0),
+    })
+}
+
+pub fn resource_util_to_json(u: &ResourceUtil) -> Json {
+    Json::obj(vec![
+        ("rid", Json::int(u.rid)),
+        ("busy_secs", Json::num(u.busy_secs)),
+        ("attempts", Json::int(u.attempts as i64)),
+        ("first_time", Json::num(u.first_time)),
+        ("last_time", Json::num(u.last_time)),
+    ])
+}
+
+pub fn resource_util_from_json(j: &Json) -> Result<ResourceUtil> {
+    Ok(ResourceUtil {
+        rid: req_i64(j, "rid", "resource util")?,
+        busy_secs: req_f64(j, "busy_secs", "resource util")?,
+        attempts: req_i64(j, "attempts", "resource util")?.max(0) as usize,
+        first_time: req_f64(j, "first_time", "resource util")?,
+        last_time: req_f64(j, "last_time", "resource util")?,
     })
 }
 
@@ -619,6 +664,8 @@ mod tests {
                 state: "BACKOFF".into(),
                 time: 2.5,
                 detail: "attempt 2 failed: boom".into(),
+                rid: 3,
+                busy: 1.25,
             },
             Request::Tick { now: 60.0 },
             Request::Checkpoint,
@@ -660,8 +707,26 @@ mod tests {
             state: "RUNNING".into(),
             time: 2.0,
             detail: "attempt 1 on cpu:0".into(),
+            rid: 2,
+            busy: 1.5,
         };
         assert_eq!(job_event_from_json(&job_event_to_json(&ev)).unwrap(), ev);
+        // an old peer's event (no rid/busy fields) parses with defaults
+        let mut legacy = job_event_to_json(&ev);
+        if let Json::Obj(fields) = &mut legacy {
+            fields.remove("rid");
+            fields.remove("busy");
+        }
+        let parsed = job_event_from_json(&legacy).unwrap();
+        assert_eq!((parsed.rid, parsed.busy), (-1, 0.0));
+        let util = ResourceUtil {
+            rid: 4,
+            busy_secs: 12.5,
+            attempts: 3,
+            first_time: 1.0,
+            last_time: 9.0,
+        };
+        assert_eq!(resource_util_from_json(&resource_util_to_json(&util)).unwrap(), util);
         let run = RunningJob { jid: 5, eid: 1, rid: 0, start_time: 2.0, config: "{}".into() };
         assert_eq!(running_job_from_json(&running_job_to_json(&run)).unwrap(), run);
         let st = ExperimentStatus {

@@ -134,9 +134,13 @@ pub fn init_schema(store: &mut Store) -> Result<()> {
         )?;
     }
     if !store.has_table("job_event") {
+        // rid/busy: the resource an attempt ran on and the seconds it
+        // occupied it — the per-resource utilization aggregates are fed
+        // from these two columns (older stores lack them; every reader
+        // treats them as optional)
         store.execute(
             "CREATE TABLE job_event (evid INT PRIMARY KEY, jid INT, eid INT, \
-             attempt INT, state TEXT, time REAL, detail TEXT)",
+             attempt INT, state TEXT, time REAL, detail TEXT, rid INT, busy REAL)",
         )?;
     }
     ensure_indexes(store)?;
@@ -365,6 +369,8 @@ pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
                 "FAILED",
                 now,
                 &format!("recovered: stuck {status} at reopen"),
+                -1,
+                0.0,
             )?;
             recovered += 1;
         }
@@ -382,9 +388,18 @@ pub struct JobEventRow {
     pub state: String,
     pub time: f64,
     pub detail: String,
+    /// resource the (ending) attempt ran on; -1 when the transition did
+    /// not end an attempt or the store predates the column
+    pub rid: i64,
+    /// seconds that attempt occupied the resource (0.0 when n/a)
+    pub busy: f64,
 }
 
-/// Append one scheduler transition to the `job_event` journal.
+/// Append one scheduler transition to the `job_event` journal. A
+/// transition that ends an attempt carries the resource id and the
+/// seconds it was occupied (`rid >= 0`, `busy`); everything else passes
+/// `rid = -1, busy = 0.0`.
+#[allow(clippy::too_many_arguments)]
 pub fn log_job_event(
     store: &mut Store,
     jid: i64,
@@ -393,14 +408,36 @@ pub fn log_job_event(
     state: &str,
     time: f64,
     detail: &str,
+    rid: i64,
+    busy: f64,
 ) -> Result<i64> {
-    let evid = next_id(store, "job_event")?;
-    store.execute(&format!(
-        "INSERT INTO job_event (evid, jid, eid, attempt, state, time, detail) \
-         VALUES ({evid}, {jid}, {eid}, {attempt}, {}, {time}, {})",
-        quote(state),
-        quote(detail)
-    ))?;
+    // one table lookup serves both the id allocation and the schema
+    // probe — this runs once per scheduler transition, so no redundant
+    // map walks on the journal hot path. Stores created before the
+    // utilization columns keep working via the narrow insert below.
+    let (evid, has_util) = {
+        let t = store.table("job_event")?;
+        (
+            t.max_int_pk().map_or(0, |m| m + 1),
+            t.schema().col_index("rid").is_some(),
+        )
+    };
+    if has_util {
+        let busy = if busy.is_finite() { busy.max(0.0) } else { 0.0 };
+        store.execute(&format!(
+            "INSERT INTO job_event (evid, jid, eid, attempt, state, time, detail, rid, busy) \
+             VALUES ({evid}, {jid}, {eid}, {attempt}, {}, {time}, {}, {rid}, {busy})",
+            quote(state),
+            quote(detail)
+        ))?;
+    } else {
+        store.execute(&format!(
+            "INSERT INTO job_event (evid, jid, eid, attempt, state, time, detail) \
+             VALUES ({evid}, {jid}, {eid}, {attempt}, {}, {time}, {})",
+            quote(state),
+            quote(detail)
+        ))?;
+    }
     Ok(evid)
 }
 
@@ -464,7 +501,9 @@ impl JobCols {
     }
 }
 
-/// Resolved column slots of the `job_event` table.
+/// Resolved column slots of the `job_event` table. `rid`/`busy` are
+/// optional: stores from before the utilization columns read as
+/// `rid = -1, busy = 0.0`.
 pub(crate) struct EventCols {
     pub evid: usize,
     pub jid: usize,
@@ -473,6 +512,8 @@ pub(crate) struct EventCols {
     pub state: usize,
     pub time: usize,
     pub detail: usize,
+    pub rid: Option<usize>,
+    pub busy: Option<usize>,
 }
 
 impl EventCols {
@@ -485,6 +526,8 @@ impl EventCols {
             state: need(s, "state")?,
             time: need(s, "time")?,
             detail: need(s, "detail")?,
+            rid: s.col_index("rid"),
+            busy: s.col_index("busy"),
         })
     }
 
@@ -497,6 +540,14 @@ impl EventCols {
             state: row.values[self.state].as_str().unwrap_or("").to_string(),
             time: row.values[self.time].as_f64().unwrap_or(0.0),
             detail: row.values[self.detail].as_str().unwrap_or("").to_string(),
+            rid: self
+                .rid
+                .and_then(|i| row.values[i].as_i64())
+                .unwrap_or(-1),
+            busy: self
+                .busy
+                .and_then(|i| opt_f64(&row.values[i]))
+                .unwrap_or(0.0),
         }
     }
 }
@@ -659,10 +710,11 @@ mod tests {
     fn job_event_journal_roundtrip() {
         let mut s = Store::in_memory();
         init_schema(&mut s).unwrap();
-        log_job_event(&mut s, 0, 7, 1, "RUNNING", 1.5, "attempt 1 on cpu:0").unwrap();
-        log_job_event(&mut s, 0, 7, 1, "BACKOFF", 2.5, "attempt 1 failed: boom").unwrap();
-        log_job_event(&mut s, 0, 7, 2, "DONE", 4.0, "score 0.5").unwrap();
-        log_job_event(&mut s, 9, 8, 1, "DONE", 5.0, "other experiment").unwrap();
+        log_job_event(&mut s, 0, 7, 1, "RUNNING", 1.5, "attempt 1 on cpu:0", -1, 0.0).unwrap();
+        log_job_event(&mut s, 0, 7, 1, "BACKOFF", 2.5, "attempt 1 failed: boom", 0, 1.0)
+            .unwrap();
+        log_job_event(&mut s, 0, 7, 2, "DONE", 4.0, "score 0.5", 0, 1.5).unwrap();
+        log_job_event(&mut s, 9, 8, 1, "DONE", 5.0, "other experiment", -1, 0.0).unwrap();
         let evs = job_events_of(&mut s, 7).unwrap();
         assert_eq!(evs.len(), 3);
         assert_eq!(evs[0].state, "RUNNING");
@@ -670,6 +722,10 @@ mod tests {
         assert!(evs[1].detail.contains("boom"));
         assert_eq!(evs[2].attempt, 2);
         assert!(evs[0].evid < evs[1].evid && evs[1].evid < evs[2].evid);
+        // utilization columns round-trip through the typed view
+        assert_eq!((evs[0].rid, evs[0].busy), (-1, 0.0));
+        assert_eq!((evs[1].rid, evs[1].busy), (0, 1.0));
+        assert_eq!((evs[2].rid, evs[2].busy), (0, 1.5));
     }
 
     #[test]

@@ -38,7 +38,7 @@ use std::thread::JoinHandle;
 use crate::log_warn;
 use crate::store::client::StoreClient;
 use crate::store::schema::{self, JobEventRow, JobRow};
-use crate::store::status::{self, ExperimentStatus, RunningJob};
+use crate::store::status::{self, ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::{QueryResult, Store};
 use crate::util::error::{AupError, Result};
@@ -62,8 +62,20 @@ pub enum StoreCmd {
     SetJobRunning { jid: i64, rid: i64 },
     CancelJob { jid: i64, now: f64 },
     FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
-    /// One scheduler transition into the `job_event` journal.
-    LogJobEvent { jid: i64, eid: i64, attempt: i64, state: String, time: f64, detail: String },
+    /// One scheduler transition into the `job_event` journal. `rid` /
+    /// `busy` report the resource occupancy of an attempt-ending
+    /// transition (`rid = -1, busy = 0.0` otherwise) — they feed the
+    /// per-resource utilization aggregates.
+    LogJobEvent {
+        jid: i64,
+        eid: i64,
+        attempt: i64,
+        state: String,
+        time: f64,
+        detail: String,
+        rid: i64,
+        busy: f64,
+    },
     BestJob { eid: i64, maximize: bool, reply: Sender<Result<Option<JobRow>>> },
     JobsOf { eid: i64, reply: Sender<Result<Vec<JobRow>>> },
     JobEventsOf { eid: i64, reply: Sender<Result<Vec<JobEventRow>>> },
@@ -73,11 +85,13 @@ pub enum StoreCmd {
     /// top`). Served from the store's materialized aggregates:
     /// O(experiments), flat in job count.
     Status { reply: Sender<Result<Vec<ExperimentStatus>>> },
-    /// Live `aup top` view: RUNNING jobs + the last `events` transitions
-    /// (status-index probe + pk-tail stream — no scans).
+    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
+    /// and per-resource utilization (status-index probe + pk-tail stream
+    /// + O(resources) aggregate read — no scans).
     Top {
         events: usize,
-        reply: Sender<Result<(Vec<RunningJob>, Vec<JobEventRow>)>>,
+        #[allow(clippy::type_complexity)]
+        reply: Sender<Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>>,
     },
     /// WAL I/O counters of the owned store (None for in-memory stores).
     /// Lets remote clients and tests observe group-commit batching live.
@@ -290,9 +304,9 @@ impl StoreServer {
             StoreCmd::FinishJob { jid, score, ok, now } => {
                 self.mutate(|s| schema::finish_job(s, jid, score, ok, now));
             }
-            StoreCmd::LogJobEvent { jid, eid, attempt, state, time, detail } => {
+            StoreCmd::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => {
                 self.mutate(|s| {
-                    schema::log_job_event(s, jid, eid, attempt, &state, time, &detail)
+                    schema::log_job_event(s, jid, eid, attempt, &state, time, &detail, rid, busy)
                         .map(|_| ())
                 });
             }
@@ -312,11 +326,11 @@ impl StoreServer {
                 let _ = reply.send(status::experiment_statuses(&mut self.store));
             }
             StoreCmd::Top { events, reply } => {
-                let res = match status::running_jobs(&mut self.store) {
-                    Ok(running) => status::recent_events(&mut self.store, events)
-                        .map(|events| (running, events)),
-                    Err(e) => Err(e),
-                };
+                let res = status::running_jobs(&mut self.store).and_then(|running| {
+                    let events = status::recent_events(&mut self.store, events)?;
+                    let util = status::resource_utilization(&self.store)?;
+                    Ok((running, events, util))
+                });
                 let _ = reply.send(res);
             }
             StoreCmd::WalStats { reply } => {
@@ -395,18 +409,18 @@ pub mod wal_workload {
     /// Baseline flavor: direct schema calls, one WAL append each.
     pub fn apply_direct(store: &mut Store, jid: i64) -> Result<()> {
         schema::start_job_queued(store, jid, 0, "{}", 0.0)?;
-        schema::log_job_event(store, jid, 0, 1, "RUNNING", 1.0, "attempt 1")?;
+        schema::log_job_event(store, jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)?;
         schema::set_job_running(store, jid, 0)?;
-        schema::log_job_event(store, jid, 0, 1, "DONE", 2.0, "score 1")?;
+        schema::log_job_event(store, jid, 0, 1, "DONE", 2.0, "score 1", 0, 1.0)?;
         schema::finish_job(store, jid, Some(1.0), true, 2.0)
     }
 
     /// Group-commit flavor: the same five mutations as mailbox sends.
     pub fn send_via_client(client: &StoreClient, jid: i64) -> Result<()> {
         client.start_job_queued(jid, 0, "{}", 0.0)?;
-        client.log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1")?;
+        client.log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)?;
         client.set_job_running(jid, 0)?;
-        client.log_job_event(jid, 0, 1, "DONE", 2.0, "score 1")?;
+        client.log_job_event(jid, 0, 1, "DONE", 2.0, "score 1", 0, 1.0)?;
         client.finish_job(jid, Some(1.0), true, 2.0)
     }
 }
@@ -471,7 +485,7 @@ mod tests {
         for jid in 0..20 {
             client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
             client
-                .log_job_event(jid, 0, 0, "QUEUED", 0.0, "submitted")
+                .log_job_event(jid, 0, 0, "QUEUED", 0.0, "submitted", -1, 0.0)
                 .unwrap();
         }
         assert_eq!(server.drain_once(false).unwrap(), Drain::Processed(40));
@@ -585,7 +599,7 @@ mod tests {
             for jid in 0..4 {
                 client.set_job_running(jid, 0).unwrap();
                 client
-                    .log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1")
+                    .log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)
                     .unwrap();
             }
             let err = server.drain_once(false).unwrap_err();

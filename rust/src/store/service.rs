@@ -45,7 +45,7 @@ use std::time::Duration;
 use crate::store::client::{StoreApi, StoreClient, SERVER_GONE};
 use crate::store::proto::{self, Request};
 use crate::store::schema::{JobEventRow, JobRow};
-use crate::store::status::{ExperimentStatus, RunningJob};
+use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::QueryResult;
 use crate::util::error::{AupError, Result};
@@ -287,7 +287,7 @@ fn handle_request(
         Request::Status => client.status().map(|v| {
             Json::arr(v.iter().map(proto::status_to_json).collect())
         }),
-        Request::Top { events } => client.top(events).map(|(running, events)| {
+        Request::Top { events } => client.top(events).map(|(running, events, util)| {
             Json::obj(vec![
                 (
                     "running",
@@ -296,6 +296,10 @@ fn handle_request(
                 (
                     "events",
                     Json::arr(events.iter().map(proto::job_event_to_json).collect()),
+                ),
+                (
+                    "util",
+                    Json::arr(util.iter().map(proto::resource_util_to_json).collect()),
                 ),
             ])
         }),
@@ -358,8 +362,8 @@ fn handle_request(
         Request::FinishJob { jid, score, ok, now } => {
             client.finish_job(jid, score, ok, now).map(|()| Json::Null)
         }
-        Request::LogJobEvent { jid, eid, attempt, state, time, detail } => client
-            .log_job_event(jid, eid, attempt, &state, time, &detail)
+        Request::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => client
+            .log_job_event(jid, eid, attempt, &state, time, &detail, rid, busy)
             .map(|()| Json::Null),
         Request::Tick { now } => client.tick(now).map(|()| Json::Null),
         Request::Checkpoint => client.checkpoint().map(|()| Json::Null),
@@ -544,6 +548,7 @@ impl StoreApi for RemoteStoreClient {
         self.request_unit(Request::FinishJob { jid, score, ok, now })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn log_job_event(
         &self,
         jid: i64,
@@ -552,6 +557,8 @@ impl StoreApi for RemoteStoreClient {
         state: &str,
         time: f64,
         detail: &str,
+        rid: i64,
+        busy: f64,
     ) -> Result<()> {
         self.request_unit(Request::LogJobEvent {
             jid,
@@ -560,6 +567,8 @@ impl StoreApi for RemoteStoreClient {
             state: state.to_string(),
             time,
             detail: detail.to_string(),
+            rid,
+            busy,
         })
     }
 
@@ -604,7 +613,11 @@ impl StoreApi for RemoteStoreClient {
             .collect()
     }
 
-    fn top(&self, events: usize) -> Result<(Vec<RunningJob>, Vec<JobEventRow>)> {
+    #[allow(clippy::type_complexity)]
+    fn top(
+        &self,
+        events: usize,
+    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
         let v = self.request(Request::Top { events })?;
         let running = v
             .get("running")
@@ -620,7 +633,15 @@ impl StoreApi for RemoteStoreClient {
             .iter()
             .map(proto::job_event_from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok((running, events))
+        // optional: an older serving side sends no utilization
+        let util = match v.get("util").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(proto::resource_util_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok((running, events, util))
     }
 
     fn wal_stats(&self) -> Result<Option<WalStats>> {

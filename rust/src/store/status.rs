@@ -23,7 +23,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::store::agg::ExperimentAggregate;
+use crate::store::agg::{absorb_util, ExperimentAggregate};
+pub use crate::store::agg::ResourceUtil;
 use crate::store::schema::{self, EventCols, ExperimentRow, JobCols, JobEventRow};
 use crate::store::{Store, Value};
 use crate::util::error::Result;
@@ -224,6 +225,45 @@ pub fn running_jobs(store: &Store) -> Result<Vec<RunningJob>> {
     Ok(out)
 }
 
+/// Per-resource busy-time totals (fleet saturation for `aup top`), in
+/// rid order. Reads the store's materialized utilization aggregates —
+/// O(resources), no job-history scan; falls back to one pass over
+/// `job_event` when aggregate tracking is unavailable.
+pub fn resource_utilization(store: &Store) -> Result<Vec<ResourceUtil>> {
+    if !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    if let Some(aggs) = store.aggregates() {
+        return Ok(aggs.utilization());
+    }
+    resource_utilization_scan(store)
+}
+
+/// The scan flavor of [`resource_utilization`]: ONE pass over
+/// `job_event`, accumulating through the same `absorb_util` the
+/// incremental path uses — it doubles as the oracle the property tests
+/// compare the materialized path against. Identical on the journal's
+/// append-only life; after a manual `DELETE FROM job_event` the
+/// materialized window keeps its high-water endpoints where this
+/// rescan shrinks them (see `agg::retire_util`).
+pub fn resource_utilization_scan(store: &Store) -> Result<Vec<ResourceUtil>> {
+    if !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    let t = store.table("job_event")?;
+    let c = EventCols::resolve(t.schema())?;
+    let mut per_rid: BTreeMap<i64, ResourceUtil> = BTreeMap::new();
+    for row in t.rows() {
+        absorb_util(
+            &mut per_rid,
+            c.rid.and_then(|i| row.values[i].as_i64()),
+            c.busy.and_then(|i| schema::opt_f64(&row.values[i])),
+            schema::opt_f64(&row.values[c.time]),
+        );
+    }
+    Ok(per_rid.into_values().collect())
+}
+
 /// The most recent `limit` scheduler transitions, oldest of them first
 /// — streamed off the tail of the pk map (evid order), no scan, no
 /// sort.
@@ -273,8 +313,13 @@ pub fn render_status(statuses: &[ExperimentStatus]) -> String {
     out
 }
 
-/// Render the `aup top` view: running jobs + recent transitions.
-pub fn render_top(running: &[RunningJob], events: &[JobEventRow]) -> String {
+/// Render the `aup top` view: running jobs, per-resource utilization
+/// (the fleet-saturation column) and recent transitions.
+pub fn render_top(
+    running: &[RunningJob],
+    events: &[JobEventRow],
+    util: &[ResourceUtil],
+) -> String {
     let mut out = String::new();
     out.push_str(&format!("{} running job(s)\n", running.len()));
     if !running.is_empty() {
@@ -290,6 +335,41 @@ pub fn render_top(running: &[RunningJob], events: &[JobEventRow]) -> String {
                 j.rid,
                 j.start_time,
                 truncate(&j.config, 48)
+            ));
+        }
+    }
+    if !util.is_empty() {
+        let total_busy: f64 = util.iter().map(|u| u.busy_secs).sum();
+        let window = util
+            .iter()
+            .map(|u| u.last_time)
+            .fold(f64::NEG_INFINITY, f64::max)
+            - util.iter().map(|u| u.first_time).fold(f64::INFINITY, f64::min);
+        let fleet = if window > 0.0 {
+            (total_busy / (window * util.len() as f64) * 100.0).min(999.0)
+        } else {
+            0.0
+        };
+        // "active" deliberately: resources that never reported busy time
+        // have no aggregate row, so this is saturation OF THE ACTIVE
+        // SET, not of total pool capacity (which the store doesn't know)
+        out.push_str(&format!(
+            "\nfleet: {} active resource(s), {:.1}s busy, active saturation {:.0}%\n",
+            util.len(),
+            total_busy,
+            fleet
+        ));
+        out.push_str(&format!(
+            "{:>6} {:>10} {:>9} {:>6}\n",
+            "rid", "busy_s", "attempts", "sat%"
+        ));
+        for u in util {
+            out.push_str(&format!(
+                "{:>6} {:>10.2} {:>9} {:>6.0}\n",
+                u.rid,
+                u.busy_secs,
+                u.attempts,
+                (u.saturation() * 100.0).min(999.0)
             ));
         }
     }
@@ -335,7 +415,8 @@ mod tests {
         schema::finish_job(&mut s, 0, Some(0.25), true, 2.0).unwrap();
         schema::start_job_queued(&mut s, 1, e0, "{}", 1.0).unwrap();
         schema::finish_job(&mut s, 1, None, false, 2.0).unwrap();
-        schema::log_job_event(&mut s, 1, e0, 1, "BACKOFF", 1.5, "attempt 1 failed").unwrap();
+        schema::log_job_event(&mut s, 1, e0, 1, "BACKOFF", 1.5, "attempt 1 failed", 0, 0.5)
+            .unwrap();
         schema::finish_experiment(&mut s, e0, Some(0.25), 3.0).unwrap();
         // experiment 1: maximization (long spelling), still running
         let e1 = schema::start_experiment(&mut s, uid, "tpe", r#"{"target":"maximize"}"#, 4.0)
@@ -385,9 +466,39 @@ mod tests {
         let txt = render_status(&sts);
         assert!(txt.contains("random"), "{txt}");
         assert!(txt.contains("running"), "{txt}");
-        let top = render_top(&running_jobs(&mut s).unwrap(), &recent_events(&mut s, 5).unwrap());
+        let top = render_top(
+            &running_jobs(&mut s).unwrap(),
+            &recent_events(&mut s, 5).unwrap(),
+            &resource_utilization(&s).unwrap(),
+        );
         assert!(top.contains("1 running job(s)"), "{top}");
         assert!(top.contains("BACKOFF"), "{top}");
+        assert!(top.contains("fleet:"), "{top}");
+    }
+
+    #[test]
+    fn utilization_aggregates_match_the_scan_oracle() {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        // two resources; rid 0 sees two attempts, rid 1 one; a rid-less
+        // transition contributes nothing
+        schema::log_job_event(&mut s, 0, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0).unwrap();
+        schema::log_job_event(&mut s, 0, 0, 1, "BACKOFF", 3.0, "failed", 0, 2.0).unwrap();
+        schema::log_job_event(&mut s, 0, 0, 2, "DONE", 6.0, "score 1", 0, 2.5).unwrap();
+        schema::log_job_event(&mut s, 1, 0, 1, "DONE", 5.0, "score 2", 1, 4.0).unwrap();
+        let fast = resource_utilization(&s).unwrap();
+        let slow = resource_utilization_scan(&s).unwrap();
+        assert_eq!(fast, slow, "materialized utilization diverged from the scan");
+        assert_eq!(fast.len(), 2);
+        assert_eq!(fast[0].rid, 0);
+        assert!((fast[0].busy_secs - 4.5).abs() < 1e-9);
+        assert_eq!(fast[0].attempts, 2);
+        assert_eq!((fast[0].first_time, fast[0].last_time), (3.0, 6.0));
+        // saturation = 4.5 busy over the [3, 6] window
+        assert!((fast[0].saturation() - 1.5).abs() < 1e-9);
+        assert_eq!(fast[1].rid, 1);
+        assert!((fast[1].busy_secs - 4.0).abs() < 1e-9);
+        assert_eq!(fast[1].saturation(), 0.0, "single report: empty window");
     }
 
     #[test]

@@ -303,6 +303,232 @@ fn prop_chaos_runs_replay_exactly_from_seed() {
 }
 
 // ---------------------------------------------------------------------------
+// event-driven scheduler vs the scan-based oracle
+// ---------------------------------------------------------------------------
+
+/// One full chaos run: submit `n_jobs`, cancel a deterministic subset
+/// after the first placement wave, drain to idle. Returns the COMPLETE
+/// transition trace (job, state, attempt, time-bits, rid, busy-bits),
+/// the completion trace and the final clock — everything observable.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn chaos_trace(
+    scan_oracle: bool,
+    seed: u64,
+    n_jobs: usize,
+    slots: usize,
+    retries: u32,
+    fail: f64,
+    hang: f64,
+    nan: f64,
+    timeout: Option<f64>,
+    cancel_every: u64,
+) -> (Vec<(u64, &'static str, u32, u64, Option<i64>, u64)>, Vec<(u64, &'static str, u32)>, u64) {
+    let inner: Arc<dyn auptimizer::resource::executor::Executor> =
+        Arc::new(FnExecutor::new("unit", |_, _| Ok(1.0)));
+    let chaos = ChaosExecutor::new(
+        inner,
+        ChaosConfig {
+            fail_rate: fail,
+            hang_rate: hang,
+            nan_rate: nan,
+            delay: (1.0, 7.0),
+            hang_secs: 0.0,
+            heal_after: 0,
+        },
+        seed,
+    );
+    let rm = Box::new(CpuManager::new(slots));
+    let mut sched = if scan_oracle {
+        SimScheduler::scan_baseline(rm, SimDispatcher::new())
+    } else {
+        SimScheduler::new(rm, SimDispatcher::new())
+    };
+    let sub = sched.add_submission(
+        0,
+        SchedulerConfig { max_retries: retries, retry_backoff: 0.5, job_timeout: timeout },
+    );
+    sched.dispatcher_mut().add_executor(sub, Box::new(chaos));
+    for id in 0..n_jobs {
+        sched.submit(sub, job(id as u64)).unwrap();
+    }
+    let mut transitions = Vec::new();
+    let mut completions = Vec::new();
+    let mut record = |evs: Vec<SchedEvent>| {
+        for ev in evs {
+            match ev {
+                SchedEvent::Transition(t) => transitions.push((
+                    t.job_id,
+                    t.state.name(),
+                    t.attempt,
+                    t.at.to_bits(),
+                    t.rid,
+                    t.busy.to_bits(),
+                )),
+                SchedEvent::Done(c) => {
+                    completions.push((c.job_id, c.state.name(), c.attempts))
+                }
+            }
+        }
+    };
+    // first placement wave, then a deterministic cancel burst (hits
+    // queued AND running jobs), then drain
+    record(sched.poll(false).unwrap());
+    if cancel_every > 0 {
+        for id in (0..n_jobs as u64).filter(|id| id % cancel_every == 0) {
+            sched.cancel(sub, id);
+        }
+    }
+    loop {
+        let evs = sched.poll(true).unwrap();
+        if evs.is_empty() {
+            break;
+        }
+        record(evs);
+    }
+    assert!(sched.idle());
+    assert_eq!(sched.pool_free(), slots, "pool leak");
+    (transitions, completions, sched.now().to_bits())
+}
+
+#[test]
+fn prop_event_scheduler_replays_the_scan_oracle_exactly() {
+    // the tentpole acceptance property: under seeded chaos (failures,
+    // hangs, NaNs, retries+backoff, timeouts, cancels) the event-driven
+    // scheduler must emit the IDENTICAL transition sequence as the
+    // pre-heap full-scan implementation — backoff/deadline tie ordering
+    // included (times compared bit-exact)
+    auptimizer::util::prop::check(
+        "event-driven scheduler == scan oracle",
+        auptimizer::util::prop::PropConfig { cases: 20, seed: 0x0E5EED },
+        |r| {
+            (
+                r.next_u64(),               // chaos seed
+                r.below(16) + 1,            // jobs
+                r.below(4) + 1,             // pool slots
+                r.below(3) as u32,          // retries
+                r.below(10) as f64 / 10.0,  // fail rate
+                r.below(4) as f64 / 10.0,   // hang rate
+                r.below(4) as f64 / 10.0,   // nan rate
+                r.below(2) == 0,            // with timeout?
+                r.below(4) as u64,          // cancel every k-th job (0 = none)
+            )
+        },
+        |&(seed, n_jobs, slots, retries, fail, hang, nan, with_timeout, cancel_every)| {
+            let timeout = if with_timeout { Some(6.0) } else { None };
+            let event = chaos_trace(
+                false, seed, n_jobs, slots, retries, fail, hang, nan, timeout, cancel_every,
+            );
+            let scan = chaos_trace(
+                true, seed, n_jobs, slots, retries, fail, hang, nan, timeout, cancel_every,
+            );
+            if event != scan {
+                return Err(format!(
+                    "divergence: event {} transitions vs scan {}\nevent: {:?}\nscan:  {:?}",
+                    event.0.len(),
+                    scan.0.len(),
+                    event.0,
+                    scan.0
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_queues_keep_the_scheduler_invariants() {
+    // the ISSUE-5 re-run of exactly-one-terminal-state + zero-pool-leak
+    // against the SHARDED ready queues: a heterogeneous cpu+gpu pool,
+    // every job pinned to a kind (or floating), chaos faults on top
+    use auptimizer::resource::gpu::GpuManager;
+    use auptimizer::resource::CompositeManager;
+    use auptimizer::scheduler::RESOURCE_KIND_KEY;
+    auptimizer::util::prop::check(
+        "sharded-queue chaos invariants",
+        auptimizer::util::prop::PropConfig { cases: 16, seed: 0x5A4D },
+        |r| {
+            (
+                r.next_u64(),              // chaos seed
+                r.below(14) + 2,           // jobs
+                r.below(3) + 1,            // cpu slots
+                r.below(2) + 1,            // gpus
+                r.below(3) as u32,         // retries
+                r.below(8) as f64 / 10.0,  // fail rate
+            )
+        },
+        |&(seed, n_jobs, cpus, gpus, retries, fail)| {
+            let inner: Arc<dyn auptimizer::resource::executor::Executor> =
+                Arc::new(FnExecutor::new("unit", |_, _| Ok(1.0)));
+            let chaos = ChaosExecutor::new(
+                inner,
+                ChaosConfig {
+                    fail_rate: fail,
+                    hang_rate: 0.2,
+                    nan_rate: 0.1,
+                    delay: (1.0, 5.0),
+                    hang_secs: 0.0,
+                    heal_after: 0,
+                },
+                seed,
+            );
+            let pool = CompositeManager::new(vec![
+                Box::new(CpuManager::new(cpus)),
+                Box::new(GpuManager::new((0..gpus as u32).collect())),
+            ]);
+            let capacity = cpus + gpus;
+            let mut sched =
+                SimScheduler::new(Box::new(pool), SimDispatcher::new());
+            let sub = sched.add_submission(
+                0,
+                SchedulerConfig {
+                    max_retries: retries,
+                    retry_backoff: 0.5,
+                    job_timeout: Some(10.0),
+                },
+            );
+            sched.dispatcher_mut().add_executor(sub, Box::new(chaos));
+            for id in 0..n_jobs as u64 {
+                let mut c = job(id);
+                match id % 3 {
+                    0 => {
+                        c.set_str(RESOURCE_KIND_KEY, "cpu");
+                    }
+                    1 => {
+                        c.set_str(RESOURCE_KIND_KEY, "gpu");
+                    }
+                    _ => {} // floating: any kind
+                }
+                sched.submit(sub, c).map_err(|e| e.to_string())?;
+            }
+            let done = drain(&mut sched);
+            if done.len() != n_jobs {
+                return Err(format!("{} completions for {n_jobs} jobs", done.len()));
+            }
+            let mut seen = BTreeMap::new();
+            for c in &done {
+                *seen.entry(c.job_id).or_insert(0usize) += 1;
+                if !c.state.is_terminal() {
+                    return Err(format!("job {} non-terminal {:?}", c.job_id, c.state));
+                }
+            }
+            if seen.len() != n_jobs || seen.values().any(|&n| n != 1) {
+                return Err(format!("duplicate/missing completions: {seen:?}"));
+            }
+            if !sched.idle() {
+                return Err("scheduler not idle after drain".into());
+            }
+            if sched.pool_free() != capacity {
+                return Err(format!(
+                    "pool leak: {} of {capacity} slots free",
+                    sched.pool_free()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // store crash-consistency
 // ---------------------------------------------------------------------------
 
@@ -327,7 +553,7 @@ fn killed_experiment_recovers_to_a_consistent_snapshot() {
         schema::start_job_queued(&mut store, 2, eid, "{}", 2.0).unwrap();
         schema::set_job_running(&mut store, 2, 0).unwrap();
         schema::start_job_queued(&mut store, 3, eid, "{}", 2.1).unwrap();
-        schema::log_job_event(&mut store, 2, eid, 1, "RUNNING", 2.0, "attempt 1").unwrap();
+        schema::log_job_event(&mut store, 2, eid, 1, "RUNNING", 2.0, "attempt 1", -1, 0.0).unwrap();
         // no checkpoint, no finish: everything above lives in the WAL
     }
     // a torn final WAL line, as a crash mid-append would leave

@@ -86,7 +86,8 @@ fn build_store(ops: &[Op]) -> Store {
             }
             Op::Cancel { jid } => schema::cancel_job(&mut s, jid, 1.0).map(|_| ()),
             Op::Backoff { jid, eid } => {
-                schema::log_job_event(&mut s, jid, eid, 1, "BACKOFF", 1.0, "retry").map(|_| ())
+                schema::log_job_event(&mut s, jid, eid, 1, "BACKOFF", 1.0, "retry", -1, 0.0)
+                    .map(|_| ())
             }
             Op::DeleteJob { jid } => s
                 .execute(&format!("DELETE FROM job WHERE jid = {jid}"))
@@ -225,7 +226,7 @@ fn apply_op(s: &mut Store, op: &Op) {
         }
         Op::Cancel { jid } => schema::cancel_job(s, jid, 1.0).map(|_| ()),
         Op::Backoff { jid, eid } => {
-            schema::log_job_event(s, jid, eid, 1, "BACKOFF", 1.0, "retry").map(|_| ())
+            schema::log_job_event(s, jid, eid, 1, "BACKOFF", 1.0, "retry", -1, 0.0).map(|_| ())
         }
         Op::DeleteJob { jid } => s
             .execute(&format!("DELETE FROM job WHERE jid = {jid}"))
@@ -316,7 +317,7 @@ fn read_only_open_builds_aggregates_and_serves_status() {
                 schema::finish_job(&mut s, jid, Some(jid as f64), true, jid as f64).unwrap();
             }
         }
-        schema::log_job_event(&mut s, 1, eid, 1, "BACKOFF", 1.0, "retry").unwrap();
+        schema::log_job_event(&mut s, 1, eid, 1, "BACKOFF", 1.0, "retry", -1, 0.0).unwrap();
     }
     let s = Store::open_read_only(&dir).unwrap();
     let fast = status::experiment_statuses(&s).unwrap();
@@ -344,7 +345,7 @@ fn recent_events_and_running_jobs_match_scan() {
     let eid = schema::start_experiment(&mut s, uid, "random", "{}", 0.0).unwrap();
     for jid in 0..30 {
         schema::start_job_queued(&mut s, jid, eid, "{}", (30 - jid) as f64).unwrap();
-        schema::log_job_event(&mut s, jid, eid, 1, "QUEUED", jid as f64, "q").unwrap();
+        schema::log_job_event(&mut s, jid, eid, 1, "QUEUED", jid as f64, "q", -1, 0.0).unwrap();
         if jid % 3 == 0 {
             schema::set_job_running(&mut s, jid, 0).unwrap();
         }

@@ -205,7 +205,7 @@ fn killed_server_mid_batch_recovers_consistently() {
         for jid in 0..2 {
             client.set_job_running(jid, jid).unwrap();
             client
-                .log_job_event(jid, eid, 1, "RUNNING", 2.0, "attempt 1")
+                .log_job_event(jid, eid, 1, "RUNNING", 2.0, "attempt 1", -1, 0.0)
                 .unwrap();
             client.finish_job(jid, Some(0.5 + jid as f64), true, 3.0).unwrap();
         }
@@ -215,7 +215,7 @@ fn killed_server_mid_batch_recovers_consistently() {
         for jid in 2..4 {
             client.set_job_running(jid, jid).unwrap();
             client
-                .log_job_event(jid, eid, 1, "RUNNING", 4.0, "attempt 1")
+                .log_job_event(jid, eid, 1, "RUNNING", 4.0, "attempt 1", -1, 0.0)
                 .unwrap();
         }
         let err = server.drain_once(false).unwrap_err();

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Render the committed bench trajectory as a markdown job summary.
+
+Every push to main commits fresh results/BENCH_*.json files, so
+`git log -- results/<file>` IS the perf history of the project. This
+script walks that history, extracts one headline metric per report
+kind, and renders a markdown table plus a unicode sparkline — written
+to $GITHUB_STEP_SUMMARY when set (the GitHub Actions job summary),
+stdout otherwise.
+
+Usage: bench_trajectory.py [--max-points N] [FILE ...]
+
+Defaults to the three tracked reports:
+  results/BENCH_store.json  -> append_reduction   (group-commit win)
+  results/BENCH_query.json  -> status_speedup     (indexed read win)
+  results/BENCH_sched.json  -> sched_speedup      (event-driven core win)
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_FILES = [
+    "results/BENCH_store.json",
+    "results/BENCH_query.json",
+    "results/BENCH_sched.json",
+]
+
+# report kind -> (headline metric, secondary metrics shown in the table)
+METRICS = {
+    "append_reduction": ("append_reduction", ["grouped_live"]),
+    "status_speedup": ("status_speedup", ["best_job_speedup", "live_ratio"]),
+    "sched_speedup": ("sched_speedup", ["poll_flat_ratio"]),
+}
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values):
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    span = hi - lo
+    out = []
+    for v in values:
+        if v is None:
+            out.append(" ")
+        elif span <= 0:
+            out.append(SPARK[3])
+        else:
+            out.append(SPARK[round((v - lo) / span * (len(SPARK) - 1))])
+    return "".join(out)
+
+
+def git(*args):
+    return subprocess.run(
+        ["git", *args], capture_output=True, text=True, check=False
+    ).stdout
+
+
+def history(path, max_points):
+    """(short-sha, date, parsed-json) per commit touching `path`, oldest first."""
+    log = git(
+        "log", f"--max-count={max_points}", "--format=%h %cs", "--", path
+    ).strip()
+    points = []
+    for line in reversed(log.splitlines()):
+        sha, date = line.split(maxsplit=1)
+        raw = git("show", f"{sha}:{path}")
+        try:
+            points.append((sha, date, json.loads(raw)))
+        except (json.JSONDecodeError, ValueError):
+            continue
+    return points
+
+
+def headline_of(report):
+    for key, (metric, _) in METRICS.items():
+        if key in report:
+            return metric
+    return None
+
+
+def num(report, key):
+    try:
+        return float(report[key])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def render_file(path, max_points):
+    points = history(path, max_points)
+    lines = [f"### {os.path.basename(path)}", ""]
+    if not points:
+        lines.append("_no trajectory yet (first run commits the initial point)_")
+        lines.append("")
+        return "\n".join(lines)
+    metric = headline_of(points[-1][2])
+    if metric is None:
+        lines.append("_unrecognized report shape_")
+        lines.append("")
+        return "\n".join(lines)
+    secondary = dict(METRICS.values()).get(metric, [])
+    # header
+    cols = ["commit", "date", metric] + secondary
+    lines.append("| " + " | ".join(cols) + " |")
+    lines.append("|" + "---|" * len(cols))
+    series = []
+    for sha, date, report in points:
+        if metric == "append_reduction":
+            # grouped_live is nested: derive the live reduction
+            base = report.get("baseline", {}).get("appends")
+            live = report.get("grouped_live", {}).get("appends")
+            extra = [
+                f"{float(base) / float(live):.2f}x" if base and live else "-"
+            ]
+        else:
+            extra = [
+                f"{num(report, k):.2f}" if num(report, k) is not None else "-"
+                for k in secondary
+            ]
+        v = num(report, metric)
+        series.append(v)
+        shown = f"{v:.2f}x" if v is not None else "-"
+        lines.append("| " + " | ".join([f"`{sha}`", date, shown] + extra) + " |")
+    lines.append("")
+    lines.append(f"`{sparkline(series)}`  ({metric}, oldest → newest)")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    max_points = 30
+    if "--max-points" in args:
+        i = args.index("--max-points")
+        max_points = int(args[i + 1])
+        del args[i : i + 2]
+    files = args or DEFAULT_FILES
+    out = ["## Bench trajectory", ""]
+    out.append(
+        "Each row is one main-push trajectory point "
+        "(`git log -- results/` is the full history).\n"
+    )
+    for path in files:
+        out.append(render_file(path, max_points))
+    text = "\n".join(out)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text + "\n")
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

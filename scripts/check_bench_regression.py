@@ -24,6 +24,14 @@ dispatched on its keys:
   - the trajectory comparison is printed but NOT gated: speedups are
     time ratios and CI runners are too noisy for a tight relative gate.
 
+* scheduler reports (benches/sched_throughput.rs, `sched_speedup`):
+  - hard floors: `sched_speedup` >= 10x (event-driven core vs the
+    full-scan baseline, the ISSUE-5 acceptance bar) and
+    `poll_flat_ratio` <= 3 (per-poll cost flat in lifetime job count —
+    the live window is fixed, so growth means terminal jobs leaked back
+    into the hot path);
+  - like the query report, the trajectory is printed, not gated.
+
 A missing baseline (first run ever, or a fresh fork) passes: the commit
 step will create the first trajectory point.
 """
@@ -115,6 +123,32 @@ def gate_query(fresh, baseline) -> int:
     return rc
 
 
+def gate_sched(fresh, baseline) -> int:
+    rc = 0
+    speedup = float(fresh["sched_speedup"])
+    # required: a report missing the flatness metric must fail loudly
+    flat = float(fresh["poll_flat_ratio"])
+    n = fresh.get("n_jobs")
+    scan_n = fresh.get("scan_jobs")
+    print(f"scheduler bench at {n} jobs (scan baseline capped at {scan_n}):")
+    print(f"  sched_speedup:   {speedup:.1f}x (floor 10x)")
+    print(f"  poll_flat_ratio: {flat:.2f} (ceiling 3, flat-in-lifetime-jobs)")
+    if baseline is not None:
+        print(
+            f"  trajectory (informative): speedup {baseline.get('sched_speedup')}x -> "
+            f"{speedup:.1f}x, flat {baseline.get('poll_flat_ratio')} -> {flat:.2f}"
+        )
+    if speedup < 10.0:
+        print(f"::error::scheduler speedup below the 10x floor: {speedup:.1f}x")
+        rc = 1
+    if flat > 3.0:
+        print(f"::error::scheduler per-poll cost grew with lifetime jobs: {flat:.2f}x")
+        rc = 1
+    if rc == 0:
+        print("ok: event-driven scheduler holds the 10x floor and stays flat per poll")
+    return rc
+
+
 def main() -> int:
     args = sys.argv[1:]
     if len(args) < 2 or len(args) % 2 != 0:
@@ -137,6 +171,9 @@ def main() -> int:
             # query floors are absolute — they apply with or without a
             # trajectory point
             rc |= gate_query(fresh, baseline)
+        elif "sched_speedup" in fresh:
+            # scheduler floors are absolute too
+            rc |= gate_sched(fresh, baseline)
         else:
             print(f"::error::unrecognized bench report shape in {fresh_path}")
             rc = 1
