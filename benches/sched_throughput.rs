@@ -27,11 +27,18 @@
 //! `scripts/check_bench_regression.py` gates in CI alongside the WAL
 //! and query numbers.
 
+//! * `lease_flat_ratio` — per-operation cost of the worker-lease path
+//!   (`lease_next` / `heartbeat_lease` / `complete_lease`, PR 6) at
+//!   `n_jobs` vs `n_jobs / 10`: lease bookkeeping rides the same
+//!   ready-queue shards and deadline heap, so it must stay flat in
+//!   lifetime job count too.
+
 use std::time::Instant;
 
 use auptimizer::resource::local::CpuManager;
 use auptimizer::scheduler::{
     FnSimExecutor, SchedEvent, SchedulerConfig, SimDispatcher, SimOutcome, SimScheduler,
+    RESOURCE_KIND_KEY,
 };
 use auptimizer::search::BasicConfig;
 
@@ -105,6 +112,80 @@ fn run_workload(scan_baseline: bool, n_jobs: u64) -> RunStats {
     }
 }
 
+struct LeaseStats {
+    secs: f64,
+    /// lease-path operations (lease + heartbeat + complete calls)
+    ops: usize,
+}
+
+/// Drive `n_jobs` entirely through the worker-lease path: every job is
+/// pinned to a kind the local pool lacks, so `lease_next` /
+/// `heartbeat_lease` / `complete_lease` do ALL the work. A simulated
+/// fleet holds up to 16 concurrent leases; ~5% of leases are abandoned
+/// (the "worker" dies) and re-driven after expiry, so the deadline-heap
+/// expiry path is in the measured loop too.
+fn run_lease_workload(n_jobs: u64) -> LeaseStats {
+    let rm = Box::new(CpuManager::new(SLOTS));
+    let mut s = SimScheduler::new(rm, SimDispatcher::new());
+    let sub = s.add_submission(
+        0,
+        SchedulerConfig { max_retries: 2, retry_backoff: 0.5, job_timeout: None },
+    );
+    // executor never fires: nothing is ever placed locally
+    s.dispatcher_mut()
+        .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+    s.set_lease_timeout(5.0);
+    let clock = s.dispatcher_mut().clock().clone();
+    let t0 = Instant::now();
+    let mut submitted: u64 = 0;
+    let mut done: usize = 0;
+    let mut ops: usize = 0;
+    let mut held = Vec::with_capacity(16);
+    // expiry keeps the retry budget intact, so a re-leased job looks
+    // exactly like its first attempt — remember who already died once
+    let mut died_once = std::collections::BTreeSet::new();
+    while done < n_jobs as usize {
+        while submitted < n_jobs && s.outstanding(sub) < WINDOW {
+            let mut c = BasicConfig::new();
+            c.set_num("job_id", submitted as f64);
+            c.set_str(RESOURCE_KIND_KEY, "remote");
+            s.submit(sub, c).expect("unique job ids");
+            submitted += 1;
+        }
+        while held.len() < 16 {
+            match s.lease_next("bench-rig") {
+                Some(lj) => {
+                    ops += 1;
+                    held.push(lj);
+                }
+                None => break,
+            }
+        }
+        for lj in held.drain(..) {
+            if lj.job_id % 19 == 0 && died_once.insert(lj.job_id) {
+                // abandoned: no complete — reaped by lease expiry below
+                continue;
+            }
+            if lj.job_id % 19 == 1 {
+                assert!(s.heartbeat_lease(lj.lease));
+                ops += 1;
+            }
+            assert!(s.complete_lease(lj.lease, Ok(lj.job_id as f64), 1.0));
+            ops += 1;
+        }
+        // past every abandoned lease's deadline AND the requeue backoff
+        clock.advance_to(s.now() + 6.0);
+        for ev in s.poll(false).expect("lease workload cannot stall") {
+            if let SchedEvent::Done(_) = ev {
+                done += 1;
+            }
+        }
+    }
+    assert!(s.idle(), "lease driver drained every job");
+    assert_eq!(s.lease_count(), 0, "no leaked leases");
+    LeaseStats { secs: t0.elapsed().as_secs_f64(), ops }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -145,6 +226,14 @@ fn main() {
     let per_poll_large = large.secs / large.polls.max(1) as f64;
     let poll_flat_ratio = per_poll_large / per_poll_small.max(1e-12);
 
+    // worker-lease path (PR 6): same fixed-window discipline, so the
+    // per-operation cost must be flat in lifetime job count too
+    let lease_small = run_lease_workload(n_jobs / 10);
+    let lease_large = run_lease_workload(n_jobs);
+    let per_lease_small = lease_small.secs / lease_small.ops.max(1) as f64;
+    let per_lease_large = lease_large.secs / lease_large.ops.max(1) as f64;
+    let lease_flat_ratio = per_lease_large / per_lease_small.max(1e-12);
+
     println!(
         "   drive {scan_jobs} jobs: scan {:>9.3}ms vs event {:>9.3}ms -> {sched_speedup:>7.1}x \
          (~{extrapolated:.0}x at {n_jobs})",
@@ -156,6 +245,13 @@ fn main() {
         per_poll_small * 1e6,
         n_jobs / 10,
         per_poll_large * 1e6,
+        n_jobs
+    );
+    println!(
+        "   per-lease-op:     {:>9.3}us at {} jobs vs {:>9.3}us at {} -> ratio {lease_flat_ratio:.2}",
+        per_lease_small * 1e6,
+        n_jobs / 10,
+        per_lease_large * 1e6,
         n_jobs
     );
 
@@ -171,6 +267,10 @@ fn main() {
         poll_flat_ratio <= 3.0,
         "per-poll cost grew with lifetime job count: {poll_flat_ratio:.2}x"
     );
+    assert!(
+        lease_flat_ratio <= 3.0,
+        "lease bookkeeping cost grew with lifetime job count: {lease_flat_ratio:.2}x"
+    );
 
     let json = format!(
         "{{\n  \"n_jobs\": {n_jobs},\n  \"scan_jobs\": {scan_jobs},\n  \
@@ -179,8 +279,12 @@ fn main() {
          \"extrapolated_speedup\": {extrapolated:.2},\n  \
          \"per_poll_small_secs\": {per_poll_small:.12},\n  \
          \"per_poll_large_secs\": {per_poll_large:.12},\n  \
-         \"poll_flat_ratio\": {poll_flat_ratio:.3},\n  \"polls\": {}\n}}\n",
-        scan.secs, event_same.secs, large.secs, large.polls
+         \"poll_flat_ratio\": {poll_flat_ratio:.3},\n  \
+         \"per_lease_small_secs\": {per_lease_small:.12},\n  \
+         \"per_lease_large_secs\": {per_lease_large:.12},\n  \
+         \"lease_flat_ratio\": {lease_flat_ratio:.3},\n  \
+         \"lease_ops\": {},\n  \"polls\": {}\n}}\n",
+        scan.secs, event_same.secs, large.secs, lease_large.ops, large.polls
     );
     if let Some(parent) = std::path::Path::new(&out_path).parent() {
         if !parent.as_os_str().is_empty() {

@@ -26,9 +26,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::experiment::config::ExperimentConfig;
-use crate::experiment::{BatchSubmit, Experiment, ExperimentOptions};
-use crate::store::service::{self, SubmitRequest, SOCKET_FILE};
+use crate::experiment::{BatchSubmit, Experiment, ExperimentOptions, GatewayCall, WorkerGateway};
+use crate::store::service::{self, AttachFail, ServiceHooks, SubmitRequest, SOCKET_FILE};
 use crate::store::{RemoteStoreClient, Store, StoreApi, StoreService};
+use crate::worker::{self, WorkerOptions};
 use crate::util::error::{AupError, Result};
 use crate::util::ini::Ini;
 use crate::util::json::Json;
@@ -101,18 +102,31 @@ USAGE:
                 DIR/store.sock (requires --db): 'aup status'/'aup top' from
                 other shells attach to the running server, and 'aup submit'
                 enqueues NEW experiments into this run's pool. --tcp serves
-                the same protocol on a TCP address (dashboards, other hosts)
+                the same protocol on a TCP address (dashboards, other hosts).
+                --lease-timeout S sets the heartbeat window granted to
+                'aup worker' processes (default 15s)
+    aup worker  DB_DIR | --connect HOST:PORT [--name N] [--workdir DIR]
+                [--poll-ms MS] [--max-jobs N] [--deadline S]
+                pull-based remote executor: lease queued jobs from a live
+                'aup batch --serve' (or --tcp) run, execute them locally
+                via the script protocol, report scores back over the wire.
+                Run one per host/shell; a killed worker is reaped by lease
+                expiry and its job retries elsewhere. --deadline bounds
+                every control-socket call (connect/read/write)
     aup submit  DB_DIR EXPERIMENT.json [--user NAME]
                 enqueue an experiment into a live 'aup batch --serve' run:
                 it joins the running pool and lands in the same shared store
                 (with --tcp ADDR, connect over TCP instead of DB_DIR's socket)
-    aup status  DB_DIR | --db DIR [--offline]
+    aup status  DB_DIR | --db DIR [--offline] [--attach-ms MS]
                                             per-experiment progress, retries
                                             and best scores. Attaches to the
                                             live server via DIR/store.sock
                                             when one is running (--offline
-                                            forces the directory read)
-    aup top     DB_DIR | --db DIR [--events N] [--offline]
+                                            forces the directory read;
+                                            --attach-ms bounds the attach
+                                            attempt, default 500 — a wedged
+                                            server can't hang the command)
+    aup top     DB_DIR | --db DIR [--events N] [--offline] [--attach-ms MS]
                                             running jobs + recent transitions
                                             (auto-attaches like status)
     aup viz     --db DIR [--eid N] [--csv FILE]
@@ -169,6 +183,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "init" => cmd_init(&cli),
         "run" => cmd_run(&cli),
         "batch" => cmd_batch(&cli),
+        "worker" => cmd_worker(&cli),
         "submit" => cmd_submit(&cli),
         "status" => cmd_status(&cli),
         "top" => cmd_top(&cli),
@@ -374,8 +389,19 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
     // StoreServer and open an experiment intake for `aup submit`
     let serve = cli.flag("serve").is_some();
     let tcp_addr = cli.flag("tcp");
+    let lease_timeout = match cli.flag("lease-timeout") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .ok()
+                .filter(|s| s.is_finite() && *s > 0.0)
+                .ok_or_else(|| {
+                    AupError::Config("--lease-timeout must be positive seconds".into())
+                })?,
+        ),
+        None => None,
+    };
     let mut services: Vec<StoreService> = Vec::new();
-    let intake = if serve || tcp_addr.is_some() {
+    let (intake, gateway) = if serve || tcp_addr.is_some() {
         let (tx, rx) = std::sync::mpsc::channel::<BatchSubmit>();
         // validate on the service thread so `aup submit` gets config
         // errors synchronously; valid configs go to the batch loop, and
@@ -398,6 +424,26 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
                 )),
             }
         });
+        // the worker gateway: each connection thread forwards its
+        // Lease/Heartbeat/Complete verb into the batch loop (the
+        // scheduler's owner) and blocks for the loop's answer — exactly
+        // the submit channel's shape, so worker calls can never race
+        // the deadline heap
+        let (gw_tx, gw_rx) = std::sync::mpsc::channel::<GatewayCall>();
+        let worker_handler: service::WorkerHandler = Arc::new(move |verb| {
+            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+            gw_tx
+                .send(GatewayCall { verb, reply: reply_tx })
+                .map_err(|_| AupError::Store("the batch is no longer leasing jobs".into()))?;
+            match reply_rx.recv() {
+                Ok(Ok(json)) => Ok(json),
+                Ok(Err(msg)) => Err(AupError::Store(msg)),
+                Err(_) => Err(AupError::Store(
+                    "the batch ended before the worker call was answered".into(),
+                )),
+            }
+        });
+        let hooks = ServiceHooks { submit: Some(handler), worker: Some(worker_handler) };
         if serve {
             let db = cli.flag("db").ok_or_else(|| {
                 AupError::Config(
@@ -406,25 +452,28 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
                 )
             })?;
             let sock = Path::new(db).join(SOCKET_FILE);
-            services.push(StoreService::serve_unix(&sock, client.clone(), Some(handler.clone()))?);
+            services.push(StoreService::serve_unix(&sock, client.clone(), hooks.clone())?);
             println!(
-                "serving live store at {} — try 'aup top {db}' or \
-                 'aup submit {db} EXP.json' from another shell",
+                "serving live store at {} — try 'aup top {db}', \
+                 'aup submit {db} EXP.json' or 'aup worker {db}' from another shell",
                 sock.display()
             );
         }
         if let Some(addr) = tcp_addr {
-            let svc = StoreService::serve_tcp(addr, client.clone(), Some(handler.clone()))?;
+            let svc = StoreService::serve_tcp(addr, client.clone(), hooks.clone())?;
             if let Some(local) = svc.local_addr() {
                 println!("serving live store on tcp://{local}");
             }
             services.push(svc);
         }
-        Some((rx, client.clone()))
+        (
+            Some((rx, client.clone())),
+            Some(WorkerGateway { calls: gw_rx, lease_timeout }),
+        )
     } else {
-        None
+        (None, None)
     };
-    let run_result = crate::experiment::run_batch_serve(exps, pool, intake);
+    let run_result = crate::experiment::run_batch_serve(exps, pool, intake, gateway);
     // stop accepting + remove the socket BEFORE the server winds down,
     // so late remote clients see "no socket" rather than a dead mailbox
     drop(services);
@@ -463,6 +512,70 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `aup worker`: the pull-based remote executor. Connects to a serving
+/// batch (`aup batch --serve` / `--tcp`), leases queued jobs over the
+/// wire, runs them locally with the ordinary script machinery, and
+/// reports results back; a worker that dies is reaped by lease expiry
+/// on the serving side. See [`crate::worker`].
+pub fn cmd_worker(cli: &Cli) -> Result<()> {
+    const USAGE: &str = "usage: aup worker DB_DIR | --connect HOST:PORT \
+                         [--name N] [--workdir DIR] [--poll-ms MS] [--max-jobs N] [--deadline S]";
+    let target: String = match cli.flag("connect") {
+        Some(t) => t.to_string(),
+        None => cli
+            .positional
+            .first()
+            .cloned()
+            .ok_or_else(|| AupError::Config(USAGE.into()))?,
+    };
+    if cli.flag("verbose").is_some() {
+        crate::util::logging::set_level(crate::util::logging::Level::Debug);
+    }
+    let mut opts = WorkerOptions {
+        // keep generated job_N.json files out of the user's cwd
+        workdir: std::env::temp_dir().join(format!("aup-worker-{}", std::process::id())),
+        ..WorkerOptions::default()
+    };
+    if let Some(name) = cli.flag("name") {
+        opts.name = name.to_string();
+    }
+    if let Some(dir) = cli.flag("workdir") {
+        opts.workdir = PathBuf::from(dir);
+    }
+    if let Some(v) = cli.flag("poll-ms") {
+        let ms: u64 = v
+            .parse()
+            .ok()
+            .filter(|n| *n > 0)
+            .ok_or_else(|| AupError::Config("--poll-ms must be positive milliseconds".into()))?;
+        opts.poll = Duration::from_millis(ms);
+    }
+    if let Some(v) = cli.flag("max-jobs") {
+        let n: usize = v
+            .parse()
+            .ok()
+            .filter(|n| *n > 0)
+            .ok_or_else(|| AupError::Config("--max-jobs must be a positive integer".into()))?;
+        opts.max_jobs = Some(n);
+    }
+    if let Some(v) = cli.flag("deadline") {
+        let secs: f64 = v
+            .parse()
+            .ok()
+            .filter(|s: &f64| s.is_finite() && *s > 0.0)
+            .ok_or_else(|| AupError::Config("--deadline must be positive seconds".into()))?;
+        opts.timeout = Duration::from_secs_f64(secs);
+    }
+    let remote = worker::connect_target(&target, opts.timeout)?;
+    println!("worker '{}' connected to {target}; leasing jobs", opts.name);
+    let report = worker::run_worker(&remote, &opts)?;
+    println!(
+        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost",
+        opts.name, report.executed, report.failed, report.expired
+    );
+    Ok(())
+}
+
 /// The store-directory argument (positional or `--db`), unopened.
 /// Read-side commands must not conjure a store out of a typo, so
 /// [`open_existing_store`] requires the directory to exist already.
@@ -475,15 +588,31 @@ fn db_arg<'a>(cli: &'a Cli, usage: &str) -> Result<&'a str> {
 /// Auto-attach for the read-side commands: a live service at
 /// `DIR/store.sock` beats the directory read (it sees the open
 /// group-commit batch and never races a checkpoint swap). `--offline`
-/// skips the attempt; a stale socket or unresponsive server silently
-/// falls back to the directory path.
+/// skips the attempt. No socket file is the normal offline case and
+/// stays silent; a socket that EXISTS but won't answer (stale file,
+/// wedged server) gets a one-line stderr note before the directory
+/// fallback — so users debugging "stale" output learn the real cause.
+/// `--attach-ms` bounds the whole attempt (connect + ping).
 fn attach_live(cli: &Cli, db: &str) -> Option<RemoteStoreClient> {
     if cli.flag("offline").is_some() {
         return None;
     }
-    let remote = service::connect_live(Path::new(db), Duration::from_millis(500))?;
-    eprintln!("(attached to live store service at {db}/{SOCKET_FILE})");
-    Some(remote)
+    let ms: u64 = cli
+        .flag("attach-ms")
+        .and_then(|v| v.parse().ok())
+        .filter(|v| *v > 0)
+        .unwrap_or(500);
+    match service::try_connect_live(Path::new(db), Duration::from_millis(ms)) {
+        Ok(remote) => {
+            eprintln!("(attached to live store service at {db}/{SOCKET_FILE})");
+            Some(remote)
+        }
+        Err(AttachFail::NoSocket) => None,
+        Err(AttachFail::Failed(why)) => {
+            eprintln!("(live attach failed: {why}; showing the directory snapshot)");
+            None
+        }
+    }
 }
 
 /// The retrying open shared by every read-side command (status, top,

@@ -32,6 +32,8 @@ use crate::scheduler::{
     Completion, Dispatcher, JobState, SchedEvent, Scheduler, SchedulerConfig, SimDispatcher,
     SimExecutor, SubId, ThreadDispatcher, Transition,
 };
+use crate::store::proto;
+use crate::store::service::WorkerVerb;
 use crate::store::{ServerConfig, Store, StoreClient, StoreServer, StoreServerHandle};
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
@@ -408,7 +410,7 @@ pub fn run_batch(
     experiments: Vec<Experiment>,
     pool: Box<dyn ResourceManager>,
 ) -> Result<Vec<ExperimentSummary>> {
-    run_batch_serve(experiments, pool, None)
+    run_batch_serve(experiments, pool, None, None)
 }
 
 /// One experiment submission accepted while a batch is live — the `aup
@@ -431,6 +433,73 @@ pub struct BatchSubmit {
     pub ack: Option<std::sync::mpsc::Sender<std::result::Result<i64, String>>>,
 }
 
+/// One worker-protocol call forwarded from a service connection thread
+/// into the batch loop — the loop owns the scheduler, so lease state is
+/// only ever touched between polls (no locking, no racing the deadline
+/// heap). The connection thread blocks on `reply`; if the batch exits
+/// first the channel drops and the worker sees a clean error instead of
+/// a hang.
+///
+/// [`WorkerHandler`]: crate::store::service::WorkerHandler
+pub struct GatewayCall {
+    pub verb: WorkerVerb,
+    pub reply: std::sync::mpsc::Sender<std::result::Result<Json, String>>,
+}
+
+/// The scheduler side of the worker fleet: the receiving end of the
+/// [`GatewayCall`] channel plus the serving batch's lease policy.
+pub struct WorkerGateway {
+    pub calls: std::sync::mpsc::Receiver<GatewayCall>,
+    /// heartbeat window granted to workers; `None` -> the scheduler's
+    /// [`DEFAULT_LEASE_TIMEOUT`](crate::scheduler::DEFAULT_LEASE_TIMEOUT)
+    pub lease_timeout: Option<f64>,
+}
+
+/// Answer one worker verb against the live scheduler. Runs inside the
+/// batch loop between polls; every state change it makes (lease grants,
+/// completions) surfaces as ordinary scheduler events on the next poll,
+/// so journaling stays exactly-once on the serving side.
+fn answer_worker(
+    sched: &mut Scheduler<ThreadDispatcher>,
+    slots: &mut [(SubId, Experiment)],
+    verb: WorkerVerb,
+) -> std::result::Result<Json, String> {
+    match verb {
+        WorkerVerb::Lease { worker } => match sched.lease_next(&worker) {
+            None => Ok(Json::Null),
+            Some(lj) => {
+                let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == lj.sub) else {
+                    return Err(format!("lease {}: no owning experiment", lj.lease));
+                };
+                Ok(proto::lease_offer_to_json(&proto::LeaseOffer {
+                    lease: lj.lease as i64,
+                    job_id: lj.job_id,
+                    jid: exp.tracker.jid_of(lj.job_id),
+                    eid: exp.eid(),
+                    attempt: lj.attempt as u64,
+                    config: lj.config.to_json_string(),
+                    script: exp.cfg.script.clone(),
+                    job_timeout: lj.job_timeout,
+                    lease_timeout: lj.lease_timeout,
+                }))
+            }
+        },
+        WorkerVerb::Heartbeat { lease } => {
+            let alive = lease >= 0 && sched.heartbeat_lease(lease as u64);
+            Ok(Json::obj(vec![("alive", Json::Bool(alive))]))
+        }
+        WorkerVerb::Complete { lease, ok, score, error, elapsed } => {
+            let outcome = if ok {
+                Ok(score.unwrap_or(f64::NAN))
+            } else {
+                Err(error.unwrap_or_else(|| "worker reported failure".to_string()))
+            };
+            let accepted = lease >= 0 && sched.complete_lease(lease as u64, outcome, elapsed);
+            Ok(Json::obj(vec![("accepted", Json::Bool(accepted))]))
+        }
+    }
+}
+
 /// The serving flavor of [`run_batch`]: same shared pool + shared store,
 /// plus a live intake channel. Each loop iteration first drains the
 /// intake — a submitted experiment gets its own proposer/tracker (an eid
@@ -447,9 +516,15 @@ pub fn run_batch_serve(
     experiments: Vec<Experiment>,
     pool: Box<dyn ResourceManager>,
     intake: Option<(std::sync::mpsc::Receiver<BatchSubmit>, StoreClient)>,
+    gateway: Option<WorkerGateway>,
 ) -> Result<Vec<ExperimentSummary>> {
     let start = std::time::Instant::now();
     let mut sched = Scheduler::new(pool, ThreadDispatcher::new());
+    if let Some(g) = &gateway {
+        if let Some(secs) = g.lease_timeout {
+            sched.set_lease_timeout(secs);
+        }
+    }
     let mut slots: Vec<(SubId, Experiment)> = Vec::new();
     for exp in experiments {
         admit(&mut sched, &mut slots, exp);
@@ -458,6 +533,12 @@ pub fn run_batch_serve(
         if let Some((rx, client)) = &intake {
             while let Ok(req) = rx.try_recv() {
                 accept_submit(&mut sched, &mut slots, client, req);
+            }
+        }
+        if let Some(g) = &gateway {
+            while let Ok(call) = g.calls.try_recv() {
+                let reply = answer_worker(&mut sched, &mut slots, call.verb);
+                let _ = call.reply.send(reply);
             }
         }
         let now = sched.now();
@@ -483,9 +564,10 @@ pub fn run_batch_serve(
                 }
             }
         }
-        let events = if intake.is_some() {
-            // stay responsive to intake while jobs run: non-blocking
-            // poll with a short park instead of a blocking wait
+        let events = if intake.is_some() || gateway.is_some() {
+            // stay responsive to intake and worker leases while jobs
+            // run: non-blocking poll with a short park instead of a
+            // blocking wait
             let events = sched.poll(false)?;
             if events.is_empty() {
                 std::thread::sleep(std::time::Duration::from_millis(10));

@@ -44,6 +44,7 @@ pub mod workload;
 pub mod resource;
 pub mod scheduler;
 pub mod experiment;
+pub mod worker;
 pub mod runtime;
 pub mod viz;
 pub mod metrics;

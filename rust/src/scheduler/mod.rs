@@ -72,6 +72,10 @@ const EPS: f64 = 1e-9;
 /// `"gpu"`); absent/empty means "any free resource".
 pub const RESOURCE_KIND_KEY: &str = "resource_kind";
 
+/// Default seconds of heartbeat silence after which a worker lease
+/// expires and its job re-enters the queue (see [`Scheduler::lease_next`]).
+pub const DEFAULT_LEASE_TIMEOUT: f64 = 15.0;
+
 /// Per-submission scheduling knobs (experiment.json keys in parens).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
@@ -203,6 +207,30 @@ pub struct CompletedRecord {
 pub enum SchedEvent {
     Transition(Transition),
     Done(Completion),
+}
+
+/// One job handed to a remote worker. The lease id doubles as an
+/// attempt id, so the running-deadline min-heap expires a vanished
+/// worker exactly like a local timeout.
+struct Lease {
+    key: (SubId, u64),
+    worker: String,
+}
+
+/// What [`Scheduler::lease_next`] returns: everything the gateway needs
+/// to build the wire offer for the worker.
+#[derive(Debug, Clone)]
+pub struct LeasedJob {
+    pub lease: AttemptId,
+    pub sub: SubId,
+    pub job_id: u64,
+    pub config: BasicConfig,
+    /// attempts started including this leased one
+    pub attempt: u32,
+    /// the submission's per-attempt budget (the worker enforces it)
+    pub job_timeout: Option<f64>,
+    /// heartbeat window granted to the worker
+    pub lease_timeout: f64,
 }
 
 struct SubState {
@@ -352,6 +380,16 @@ impl<T: Ord> LazyHeap<T> {
 
 /// Min-heap of backoff due-times / running deadlines.
 type TimerHeap = LazyHeap<Reverse<TimerEntry>>;
+
+/// Is a deadline-heap entry still current? The attempt stamp must match
+/// AND the entry's time must be the job's CURRENT deadline: a heartbeat
+/// extends a lease by pushing a fresh entry, which turns the earlier
+/// (earlier-firing) entry for the same attempt into a tombstone.
+fn deadline_entry_valid(jobs: &BTreeMap<(SubId, u64), Job>, e: &TimerEntry) -> bool {
+    jobs.get(&e.key).is_some_and(|j| {
+        j.attempt_id == Some(e.stamp) && j.deadline.is_some_and(|d| (d - e.at).abs() <= EPS)
+    })
+}
 /// One ready-queue shard (per resource kind), max-(priority, FIFO) first.
 type ShardQueue = LazyHeap<PendingEntry>;
 
@@ -384,6 +422,11 @@ pub struct Scheduler<D: Dispatcher> {
     deadlines: TimerHeap,
     /// live attempt -> job
     attempts: BTreeMap<AttemptId, (SubId, u64)>,
+    /// attempts leased to remote workers (disjoint from `attempts`:
+    /// nothing was dispatched locally)
+    leases: BTreeMap<AttemptId, Lease>,
+    /// heartbeat window granted to workers
+    lease_timeout: f64,
     /// timed-out / cancelled thread attempts still pinning a resource
     /// slot until their thread finishes
     zombies: BTreeMap<AttemptId, ResourceHandle>,
@@ -414,6 +457,8 @@ impl<D: Dispatcher> Scheduler<D> {
             backoffs: TimerHeap::default(),
             deadlines: TimerHeap::default(),
             attempts: BTreeMap::new(),
+            leases: BTreeMap::new(),
+            lease_timeout: DEFAULT_LEASE_TIMEOUT,
             zombies: BTreeMap::new(),
             next_attempt: 0,
             next_seq: 0,
@@ -592,16 +637,22 @@ impl<D: Dispatcher> Scheduler<D> {
                     self.deadlines.note_dead();
                 }
                 if let Some(a) = attempt_id {
-                    self.attempts.remove(&a);
-                    let reaped = self.dispatcher.abort(a);
-                    if let Some(h) = handle {
-                        ended = Some((h.rid, ran));
-                        if reaped {
-                            self.rm.release(&h);
-                        } else {
-                            // the thread still runs user code on that slot;
-                            // reclaim it when the late completion arrives
-                            self.zombies.insert(a, h);
+                    if self.leases.remove(&a).is_some() {
+                        // leased to a remote worker: no local thread or
+                        // slot; a late Complete for this lease is refused
+                    } else {
+                        self.attempts.remove(&a);
+                        let reaped = self.dispatcher.abort(a);
+                        if let Some(h) = handle {
+                            ended = Some((h.rid, ran));
+                            if reaped {
+                                self.rm.release(&h);
+                            } else {
+                                // the thread still runs user code on that
+                                // slot; reclaim it when the late
+                                // completion arrives
+                                self.zombies.insert(a, h);
+                            }
                         }
                     }
                 }
@@ -657,6 +708,164 @@ impl<D: Dispatcher> Scheduler<D> {
         n
     }
 
+    // -- worker leases -------------------------------------------------------
+
+    /// Set the heartbeat window granted to remote workers.
+    pub fn set_lease_timeout(&mut self, secs: f64) {
+        if secs > 0.0 && secs.is_finite() {
+            self.lease_timeout = secs;
+        }
+    }
+
+    /// Leases currently held by workers (tests assert zero leaks).
+    pub fn lease_count(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Hand the best queued job to a remote worker. Ignores local pool
+    /// capacity — the worker brings its own compute — but respects
+    /// priority/FIFO order across every shard. The job turns Running
+    /// with a lease deadline on the running-deadline heap: if the worker
+    /// stops heartbeating, [`Scheduler::poll`] expires the lease and the
+    /// job re-enters backoff with its retry budget intact.
+    pub fn lease_next(&mut self, worker: &str) -> Option<LeasedJob> {
+        // prune stale heads, then pick the best (priority, FIFO) live
+        // head across all shards — same selection rule as fill_slots,
+        // minus the capacity check
+        let mut best: Option<(String, i32, u64)> = None;
+        for (kind, q) in self.shards.iter_mut() {
+            let head = loop {
+                match q.heap.peek() {
+                    None => break None,
+                    Some(e) => {
+                        let stale = match self.jobs.get(&e.key) {
+                            Some(j) => j.state != JobState::Queued || j.seq != e.seq,
+                            None => true,
+                        };
+                        if stale {
+                            q.heap.pop();
+                            continue;
+                        }
+                        break Some((e.priority, e.seq));
+                    }
+                }
+            };
+            let Some((priority, seq)) = head else { continue };
+            let better = match &best {
+                None => true,
+                Some((_, bp, bs)) => priority > *bp || (priority == *bp && seq < *bs),
+            };
+            if better {
+                best = Some((kind.clone(), priority, seq));
+            }
+        }
+        let (kind, _, _) = best?;
+        let q = self.shards.get_mut(&kind).unwrap();
+        let entry = q.heap.pop().unwrap();
+        q.note_dead();
+        let key = entry.key;
+        let attempt_id = self.next_attempt;
+        self.next_attempt += 1;
+        let now = self.dispatcher.now();
+        let job_timeout = self.sub_cfg(key.0).job_timeout;
+        let deadline = now + self.lease_timeout;
+        let (config, attempts) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.attempts += 1;
+            j.state = JobState::Running;
+            j.attempt_id = Some(attempt_id);
+            j.handle = None;
+            j.started_at = now;
+            j.deadline = Some(deadline);
+            (j.config.clone(), j.attempts)
+        };
+        if self.event_path() {
+            self.deadlines
+                .push_live(Reverse(TimerEntry { at: deadline, stamp: attempt_id, key }));
+        }
+        self.leases
+            .insert(attempt_id, Lease { key, worker: worker.to_string() });
+        self.push_transition(
+            key,
+            JobState::Running,
+            attempts,
+            now,
+            None,
+            0.0,
+            format!("attempt {attempts} leased to worker '{worker}'"),
+        );
+        Some(LeasedJob {
+            lease: attempt_id,
+            sub: key.0,
+            job_id: key.1,
+            config,
+            attempt: attempts,
+            job_timeout,
+            lease_timeout: self.lease_timeout,
+        })
+    }
+
+    /// Extend a live lease's deadline by one heartbeat window. Returns
+    /// false for an unknown or already-expired lease — the worker must
+    /// then kill the job and discard its result.
+    pub fn heartbeat_lease(&mut self, lease: AttemptId) -> bool {
+        let key = match self.leases.get(&lease) {
+            Some(l) => l.key,
+            None => return false,
+        };
+        let now = self.dispatcher.now();
+        let deadline = now + self.lease_timeout;
+        {
+            let j = self.jobs.get_mut(&key).unwrap();
+            debug_assert_eq!(j.attempt_id, Some(lease));
+            j.deadline = Some(deadline);
+        }
+        if self.event_path() {
+            // the earlier entry for this attempt no longer matches the
+            // job's deadline, so it is a tombstone from here on
+            self.deadlines.note_dead();
+            self.deadlines
+                .push_live(Reverse(TimerEntry { at: deadline, stamp: lease, key }));
+        }
+        true
+    }
+
+    /// A worker reports the outcome of a leased attempt. Returns false
+    /// for an unknown/expired lease (duplicate Complete, or Complete
+    /// after expiry): the result is discarded so a re-queued job still
+    /// reaches exactly one terminal state.
+    pub fn complete_lease(
+        &mut self,
+        lease: AttemptId,
+        outcome: Result<f64, String>,
+        elapsed: f64,
+    ) -> bool {
+        let key = match self.leases.remove(&lease) {
+            Some(l) => l.key,
+            None => return false,
+        };
+        let now = self.dispatcher.now();
+        let had_deadline = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.elapsed += elapsed.max(0.0);
+            j.attempt_id = None;
+            j.deadline.take().is_some()
+        };
+        if had_deadline {
+            self.deadlines.note_dead();
+            let jobs = &self.jobs;
+            self.deadlines.maybe_shrink(|Reverse(e)| deadline_entry_valid(jobs, e));
+        }
+        match outcome {
+            Ok(score) if score.is_finite() => {
+                self.complete_job(key, JobState::Done, Ok(score), now, None)
+            }
+            Ok(bad) => self.fail_attempt(key, format!("non-finite score {bad}"), now, None),
+            Err(msg) => self.fail_attempt(key, msg, now, None),
+        }
+        true
+    }
+
     /// Advance the state machine and drain events.
     ///
     /// With `block = false` this fills free slots and returns whatever
@@ -667,6 +876,11 @@ impl<D: Dispatcher> Scheduler<D> {
         loop {
             let now = self.dispatcher.now();
             self.promote_backoffs(now);
+            // expire due deadlines eagerly: a non-blocking poll (the
+            // `--serve` loop) otherwise NEVER reaches the expiry in the
+            // wait branch below, so hung jobs and vanished workers would
+            // pin their state forever in serve mode
+            self.expire_deadlines();
             self.fill_slots();
             if !self.out.is_empty() || !block {
                 return Ok(std::mem::take(&mut self.out));
@@ -675,7 +889,9 @@ impl<D: Dispatcher> Scheduler<D> {
                 return Ok(Vec::new());
             }
             let wait_until = self.next_wakeup();
-            let executing = !self.attempts.is_empty() || !self.zombies.is_empty();
+            let executing = !self.attempts.is_empty()
+                || !self.zombies.is_empty()
+                || !self.leases.is_empty();
             if !executing && wait_until.is_none() {
                 // jobs queued, nothing running, nothing to wait for: the
                 // pool can never free up
@@ -919,9 +1135,7 @@ impl<D: Dispatcher> Scheduler<D> {
             // the deadline entry outlives the attempt as a tombstone
             self.deadlines.note_dead();
             let jobs = &self.jobs;
-            self.deadlines.maybe_shrink(|Reverse(e)| {
-                jobs.get(&e.key).is_some_and(|j| j.attempt_id == Some(e.stamp))
-            });
+            self.deadlines.maybe_shrink(|Reverse(e)| deadline_entry_valid(jobs, e));
         }
         let mut ended = None;
         if let Some(h) = handle {
@@ -958,11 +1172,7 @@ impl<D: Dispatcher> Scheduler<D> {
                         break;
                     }
                     let Reverse(e) = self.deadlines.pop().unwrap();
-                    let valid = self
-                        .jobs
-                        .get(&e.key)
-                        .is_some_and(|j| j.attempt_id == Some(e.stamp));
-                    if valid {
+                    if deadline_entry_valid(&self.jobs, &e) {
                         self.deadlines.note_dead();
                         due.push(e.key);
                     }
@@ -972,6 +1182,32 @@ impl<D: Dispatcher> Scheduler<D> {
             }
         };
         for key in expired.drain(..) {
+            // a leased attempt expiring is a vanished worker, not a local
+            // timeout: there is no thread to abort and no slot to free
+            let leased = self
+                .jobs
+                .get(&key)
+                .and_then(|j| j.attempt_id)
+                .filter(|a| self.leases.contains_key(a));
+            if let Some(a) = leased {
+                let lease = self.leases.remove(&a).unwrap();
+                {
+                    let j = self.jobs.get_mut(&key).unwrap();
+                    j.deadline = None;
+                    j.attempt_id = None;
+                    // the worker died before reporting: this attempt never
+                    // consumed compute, so it keeps its retry budget —
+                    // fail_attempt re-reads `attempts` for the budget check
+                    j.attempts = j.attempts.saturating_sub(1);
+                }
+                self.fail_attempt(
+                    key,
+                    format!("lease expired (worker '{}' vanished)", lease.worker),
+                    now,
+                    None,
+                );
+                continue;
+            }
             let (attempt_id, handle, ran_for) = {
                 let j = self.jobs.get_mut(&key).unwrap();
                 j.deadline = None;
@@ -1168,9 +1404,7 @@ impl<D: Dispatcher> Scheduler<D> {
                 loop {
                     let stale = match self.deadlines.peek() {
                         None => break,
-                        Some(Reverse(e)) => {
-                            !self.jobs.get(&e.key).is_some_and(|j| j.attempt_id == Some(e.stamp))
-                        }
+                        Some(Reverse(e)) => !deadline_entry_valid(&self.jobs, e),
                     };
                     if !stale {
                         break;
@@ -1765,5 +1999,282 @@ mod tests {
             (trace, s.now())
         };
         assert_eq!(run(false), run(true));
+    }
+
+    // -- worker leases --------------------------------------------------
+
+    /// A scheduler whose jobs are pinned to a kind the local pool lacks:
+    /// only lease_next can ever run them (the CLI test uses the same
+    /// trick with `"job_resource_kind": "remote"`).
+    fn remote_only(n_jobs: u64, cfg: SchedulerConfig) -> (SimScheduler, SubId) {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg);
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        for id in 0..n_jobs {
+            let mut c = job(id);
+            c.set_str(RESOURCE_KIND_KEY, "remote");
+            s.submit(sub, c).unwrap();
+        }
+        (s, sub)
+    }
+
+    #[test]
+    fn lease_complete_reaches_done_exactly_once() {
+        let (mut s, _) = remote_only(1, SchedulerConfig::default());
+        s.set_lease_timeout(10.0);
+        let lj = s.lease_next("rig-a").expect("one queued job");
+        assert_eq!(lj.job_id, 0);
+        assert_eq!(lj.attempt, 1);
+        assert_eq!(lj.lease_timeout, 10.0);
+        assert_eq!(s.lease_count(), 1);
+        assert!(s.lease_next("rig-b").is_none(), "no second job to lease");
+        assert!(s.complete_lease(lj.lease, Ok(0.25), 2.0));
+        assert_eq!(s.lease_count(), 0);
+        // duplicate Complete is refused, not double-counted
+        assert!(!s.complete_lease(lj.lease, Ok(0.5), 1.0));
+        let evs = s.poll(false).unwrap();
+        let done: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e {
+                SchedEvent::Done(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].state, JobState::Done);
+        assert_eq!(done[0].outcome.clone().unwrap(), 0.25);
+        assert!(s.idle());
+        assert_eq!(s.pool_free(), 1, "leases never consume local slots");
+    }
+
+    #[test]
+    fn lease_expiry_requeues_with_retry_budget_intact() {
+        // max_retries = 0: ANY real attempt failure would be terminal,
+        // so reaching Done after two worker deaths proves expiry does
+        // not burn the budget
+        let (mut s, _) = remote_only(1, cfg_with(0, 1.0, None));
+        s.set_lease_timeout(5.0);
+        let clock = s.dispatcher_mut().clock().clone();
+        for round in 1..=2u64 {
+            let lj = s.lease_next("doomed").expect("job queued");
+            assert_eq!(lj.attempt, 1, "round {round}: budget rolled back");
+            // the worker vanishes: no heartbeat, no complete — poll(true)
+            // advances the virtual clock to the lease deadline
+            let evs = s.poll(true).unwrap();
+            assert!(
+                evs.iter().any(|e| matches!(
+                    e,
+                    SchedEvent::Transition(t)
+                        if t.state == JobState::Backoff && t.detail.contains("lease expired")
+                )),
+                "round {round}: expiry journaled"
+            );
+            assert_eq!(s.lease_count(), 0, "round {round}: no leaked lease");
+            // duplicate Complete AFTER expiry is refused
+            assert!(!s.complete_lease(lj.lease, Ok(9.9), 1.0));
+            assert!(!s.heartbeat_lease(lj.lease), "late heartbeat refused");
+            // ride out the backoff so the job is Queued again
+            clock.advance_to(s.now() + 1.5);
+            let _ = s.poll(false).unwrap();
+        }
+        // third worker survives and completes
+        let lj = s.lease_next("survivor").expect("requeued after two deaths");
+        assert_eq!(lj.attempt, 1);
+        assert!(s.complete_lease(lj.lease, Ok(0.5), 1.0));
+        let evs = s.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Done(c) if c.state == JobState::Done
+        )));
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn heartbeat_extends_the_lease_deadline() {
+        let (mut s, _) = remote_only(1, cfg_with(0, 1.0, None));
+        s.set_lease_timeout(5.0);
+        let clock = s.dispatcher_mut().clock().clone();
+        let lj = s.lease_next("steady").unwrap();
+        // three heartbeats, each inside the window, carry the lease far
+        // past the original 5s deadline
+        for _ in 0..3 {
+            clock.advance_to(s.now() + 4.0);
+            let _ = s.poll(false).unwrap();
+            assert!(s.heartbeat_lease(lj.lease), "in-window heartbeat accepted");
+            assert_eq!(s.lease_count(), 1, "heartbeat must not expire the lease");
+        }
+        assert!(s.now() >= 12.0);
+        assert!(s.complete_lease(lj.lease, Ok(1.0), 12.0));
+        let evs = s.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Done(c) if c.state == JobState::Done && c.attempts == 1
+        )));
+        // ... but silence past the extended deadline still expires: the
+        // tombstoned earlier heap entries must NOT fire early (regression
+        // guard for the deadline-entry validity check)
+        let (mut s2, _) = remote_only(1, cfg_with(0, 1.0, None));
+        s2.set_lease_timeout(5.0);
+        let clock2 = s2.dispatcher_mut().clock().clone();
+        let lj2 = s2.lease_next("fades").unwrap();
+        clock2.advance_to(4.0);
+        let _ = s2.poll(false).unwrap();
+        assert!(s2.heartbeat_lease(lj2.lease)); // deadline now 9.0
+        clock2.advance_to(5.5); // past the ORIGINAL deadline only
+        let evs = s2.poll(false).unwrap();
+        assert!(
+            !evs.iter().any(|e| matches!(e, SchedEvent::Transition(t) if t.state == JobState::Backoff)),
+            "superseded deadline entry must not expire an extended lease"
+        );
+        assert_eq!(s2.lease_count(), 1);
+        clock2.advance_to(9.5); // past the extended deadline
+        let evs = s2.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Transition(t)
+                if t.state == JobState::Backoff && t.detail.contains("fades")
+        )));
+        assert_eq!(s2.lease_count(), 0);
+    }
+
+    #[test]
+    fn cancel_revokes_a_leased_job() {
+        let (mut s, sub) = remote_only(1, SchedulerConfig::default());
+        let lj = s.lease_next("rig").unwrap();
+        assert!(s.cancel(sub, lj.job_id));
+        assert_eq!(s.lease_count(), 0);
+        // the worker's late result is refused — cancel stays terminal
+        assert!(!s.complete_lease(lj.lease, Ok(1.0), 1.0));
+        let evs = s.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Done(c) if c.state == JobState::Cancelled
+        )));
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn lease_order_follows_priority_then_fifo_across_shards() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let lo = s.add_submission(0, SchedulerConfig::default());
+        let hi = s.add_submission(5, SchedulerConfig::default());
+        for sub in [lo, hi] {
+            s.dispatcher_mut()
+                .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        }
+        // different kinds land in different shards; lease order must
+        // still be priority first, then FIFO
+        let mut a = job(0);
+        a.set_str(RESOURCE_KIND_KEY, "remote");
+        s.submit(lo, a).unwrap();
+        let mut b = job(1);
+        b.set_str(RESOURCE_KIND_KEY, "gpu");
+        s.submit(hi, b).unwrap();
+        let mut c = job(2);
+        c.set_str(RESOURCE_KIND_KEY, "remote");
+        s.submit(hi, c).unwrap();
+        let first = s.lease_next("w").unwrap();
+        assert_eq!((first.sub, first.job_id), (hi, 1), "priority wins");
+        let second = s.lease_next("w").unwrap();
+        assert_eq!((second.sub, second.job_id), (hi, 2), "FIFO within priority");
+        let third = s.lease_next("w").unwrap();
+        assert_eq!((third.sub, third.job_id), (lo, 0));
+        for lj in [first, second, third] {
+            assert!(s.complete_lease(lj.lease, Ok(lj.job_id as f64), 1.0));
+        }
+        let _ = s.poll(false).unwrap();
+        assert!(s.idle());
+        assert_eq!(s.lease_count(), 0);
+    }
+
+    #[test]
+    fn worker_churn_chaos_exactly_one_terminal_state() {
+        // N jobs, a population of simulated workers that die mid-job,
+        // heartbeat late, or double-complete — driven deterministically
+        // off a seeded RNG. Invariants: every job reaches EXACTLY one
+        // terminal state, no lease leaks, and the run drains.
+        let n_jobs = 40u64;
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(2)), SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(3, 0.5, None));
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|c, _| {
+                SimOutcome::ok(c.get_num("x").unwrap(), 1.0)
+            })));
+        for id in 0..n_jobs {
+            let mut c = job(id);
+            c.set_str(RESOURCE_KIND_KEY, "remote");
+            s.submit(sub, c).unwrap();
+        }
+        s.set_lease_timeout(4.0);
+        let clock = s.dispatcher_mut().clock().clone();
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        let mut terminal: BTreeMap<u64, JobState> = BTreeMap::new();
+        let mut expired_leases: Vec<AttemptId> = Vec::new();
+        let mut guard = 0;
+        while !s.idle() {
+            guard += 1;
+            assert!(guard < 100_000, "churn run did not drain");
+            for ev in s.poll(false).unwrap() {
+                if let SchedEvent::Done(c) = ev {
+                    let prev = terminal.insert(c.job_id, c.state);
+                    assert!(prev.is_none(), "job {} terminal twice", c.job_id);
+                }
+            }
+            match s.lease_next(&format!("rig-{}", rng.below(8))) {
+                None => {
+                    // nothing leasable: let backoffs/deadlines fire
+                    clock.advance_to(s.now() + 0.7);
+                }
+                Some(lj) => match rng.below(10) {
+                    // 0-1: worker dies mid-job — silence until expiry
+                    0 | 1 => {
+                        expired_leases.push(lj.lease);
+                        clock.advance_to(s.now() + 5.0);
+                    }
+                    // 2: delayed heartbeat — too late, lease already gone
+                    2 => {
+                        clock.advance_to(s.now() + 5.0);
+                        let _ = s.poll(false).unwrap();
+                        assert!(!s.heartbeat_lease(lj.lease), "late heartbeat must fail");
+                        expired_leases.push(lj.lease);
+                    }
+                    // 3: duplicate Complete after expiry — refused
+                    3 => {
+                        clock.advance_to(s.now() + 5.0);
+                        let _ = s.poll(false).unwrap();
+                        assert!(!s.complete_lease(lj.lease, Ok(7.7), 1.0));
+                        expired_leases.push(lj.lease);
+                    }
+                    // 4: worker reports a failure (burns a retry)
+                    4 => {
+                        assert!(s.complete_lease(lj.lease, Err("worker oom".into()), 0.5));
+                    }
+                    // 5-9: healthy — heartbeat once, then complete; the
+                    // second Complete of the SAME lease must be refused
+                    _ => {
+                        clock.advance_to(s.now() + 2.0);
+                        assert!(s.heartbeat_lease(lj.lease));
+                        assert!(s.complete_lease(lj.lease, Ok(lj.job_id as f64), 2.0));
+                        assert!(!s.complete_lease(lj.lease, Ok(0.0), 0.0));
+                    }
+                },
+            }
+        }
+        for ev in s.poll(false).unwrap() {
+            if let SchedEvent::Done(c) = ev {
+                let prev = terminal.insert(c.job_id, c.state);
+                assert!(prev.is_none(), "job {} terminal twice", c.job_id);
+            }
+        }
+        assert_eq!(terminal.len() as u64, n_jobs, "every job terminal exactly once");
+        assert_eq!(s.lease_count(), 0, "zero leaked leases");
+        assert_eq!(s.completed_log().len() as u64, n_jobs);
+        // dead leases stay dead: none of the expired ids resurrect
+        for lease in expired_leases {
+            assert!(!s.heartbeat_lease(lease));
+            assert!(!s.complete_lease(lease, Ok(0.0), 0.0));
+        }
+        assert_eq!(s.pool_free(), 2, "leases never touched the local pool");
     }
 }

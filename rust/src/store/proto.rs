@@ -114,6 +114,26 @@ pub enum Request {
     },
     Tick { now: f64 },
     Checkpoint,
+    /// Worker fleet: ask the serving batch for one runnable job. Replies
+    /// a [`LeaseOffer`] object, or null when nothing is leasable right
+    /// now (the worker backs off and re-polls).
+    Lease { worker: String },
+    /// Worker fleet: prove the leased attempt is still alive; extends
+    /// the lease deadline. Replies `{"alive": bool}` — false means the
+    /// lease already expired and the worker must kill the job.
+    Heartbeat { lease: i64 },
+    /// Worker fleet: report the outcome of a leased attempt. Replies
+    /// `{"accepted": bool}` — false means the lease had already expired
+    /// (the job was re-queued) and the result was discarded, preserving
+    /// exactly-one-terminal-state.
+    Complete {
+        lease: i64,
+        ok: bool,
+        score: Option<f64>,
+        error: Option<String>,
+        /// wall-clock seconds the attempt ran on the worker
+        elapsed: f64,
+    },
 }
 
 impl Request {
@@ -214,6 +234,22 @@ impl Request {
                 Json::obj(vec![("cmd", Json::str("tick")), ("now", Json::num(*now))])
             }
             Request::Checkpoint => Json::obj(vec![("cmd", Json::str("checkpoint"))]),
+            Request::Lease { worker } => Json::obj(vec![
+                ("cmd", Json::str("lease")),
+                ("worker", Json::str(worker.clone())),
+            ]),
+            Request::Heartbeat { lease } => Json::obj(vec![
+                ("cmd", Json::str("heartbeat")),
+                ("lease", Json::int(*lease)),
+            ]),
+            Request::Complete { lease, ok, score, error, elapsed } => Json::obj(vec![
+                ("cmd", Json::str("complete")),
+                ("lease", Json::int(*lease)),
+                ("job_ok", Json::Bool(*ok)),
+                ("score", score.map_or(Json::Null, Json::num)),
+                ("error", error.clone().map_or(Json::Null, Json::str)),
+                ("elapsed", Json::num(*elapsed)),
+            ]),
         }
     }
 
@@ -308,6 +344,15 @@ impl Request {
             },
             "tick" => Request::Tick { now: f64_field("now")? },
             "checkpoint" => Request::Checkpoint,
+            "lease" => Request::Lease { worker: str_field("worker")? },
+            "heartbeat" => Request::Heartbeat { lease: i64_field("lease")? },
+            "complete" => Request::Complete {
+                lease: i64_field("lease")?,
+                ok: j.get("job_ok").and_then(Json::as_bool).unwrap_or(false),
+                score: opt_f64("score"),
+                error: j.get("error").and_then(Json::as_str).map(str::to_string),
+                elapsed: f64_field("elapsed")?,
+            },
             other => return Err(AupError::Store(format!("unknown request cmd '{other}'"))),
         })
     }
@@ -427,6 +472,55 @@ pub fn job_event_from_json(j: &Json) -> Result<JobEventRow> {
         // utilization columns
         rid: j.get("rid").and_then(Json::as_i64).unwrap_or(-1),
         busy: j.get("busy").and_then(Json::as_f64).unwrap_or(0.0),
+    })
+}
+
+/// Everything a worker needs to execute one leased attempt: identity
+/// (lease id, scheduler job id, store jid, eid, attempt number), the
+/// BasicConfig as a JSON string, the script to run, and the two
+/// deadlines (job timeout, lease/heartbeat window).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseOffer {
+    pub lease: i64,
+    pub job_id: u64,
+    pub jid: i64,
+    pub eid: i64,
+    pub attempt: u64,
+    /// BasicConfig serialized with `to_json_string`
+    pub config: String,
+    /// experiment.json `script` field (path or `builtin:` name)
+    pub script: String,
+    /// per-attempt wall-clock budget; None = unlimited
+    pub job_timeout: Option<f64>,
+    /// seconds of heartbeat silence after which the lease expires
+    pub lease_timeout: f64,
+}
+
+pub fn lease_offer_to_json(o: &LeaseOffer) -> Json {
+    Json::obj(vec![
+        ("lease", Json::int(o.lease)),
+        ("job_id", Json::int(o.job_id as i64)),
+        ("jid", Json::int(o.jid)),
+        ("eid", Json::int(o.eid)),
+        ("attempt", Json::int(o.attempt as i64)),
+        ("config", Json::str(o.config.clone())),
+        ("script", Json::str(o.script.clone())),
+        ("job_timeout", opt_num(o.job_timeout)),
+        ("lease_timeout", Json::num(o.lease_timeout)),
+    ])
+}
+
+pub fn lease_offer_from_json(j: &Json) -> Result<LeaseOffer> {
+    Ok(LeaseOffer {
+        lease: req_i64(j, "lease", "lease offer")?,
+        job_id: req_i64(j, "job_id", "lease offer")?.max(0) as u64,
+        jid: req_i64(j, "jid", "lease offer")?,
+        eid: req_i64(j, "eid", "lease offer")?,
+        attempt: req_i64(j, "attempt", "lease offer")?.max(0) as u64,
+        config: req_str(j, "config", "lease offer")?,
+        script: req_str(j, "script", "lease offer")?,
+        job_timeout: get_opt_f64(j, "job_timeout"),
+        lease_timeout: req_f64(j, "lease_timeout", "lease offer")?,
     })
 }
 
@@ -669,6 +763,22 @@ mod tests {
             },
             Request::Tick { now: 60.0 },
             Request::Checkpoint,
+            Request::Lease { worker: "rig-7".into() },
+            Request::Heartbeat { lease: 42 },
+            Request::Complete {
+                lease: 42,
+                ok: true,
+                score: Some(0.75),
+                error: None,
+                elapsed: 3.5,
+            },
+            Request::Complete {
+                lease: 43,
+                ok: false,
+                score: None,
+                error: Some("script exited with 2".into()),
+                elapsed: 0.25,
+            },
         ];
         for req in all {
             let j = req.to_json();
@@ -750,6 +860,34 @@ mod tests {
         let ws = Some(WalStats { appends: 3, records: 40, checkpoints: 1 });
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&ws)).unwrap(), ws);
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&None)).unwrap(), None);
+        for offer in [
+            LeaseOffer {
+                lease: 7,
+                job_id: 3,
+                jid: 12,
+                eid: 1,
+                attempt: 2,
+                config: r#"{"x": 0.5, "job_id": 3}"#.into(),
+                script: "/tmp/train.sh".into(),
+                job_timeout: Some(30.0),
+                lease_timeout: 10.0,
+            },
+            LeaseOffer {
+                lease: 8,
+                job_id: 0,
+                jid: 0,
+                eid: 0,
+                attempt: 1,
+                config: "{}".into(),
+                script: "builtin:sphere".into(),
+                job_timeout: None,
+                lease_timeout: 15.0,
+            },
+        ] {
+            let j = lease_offer_to_json(&offer);
+            let back = lease_offer_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, offer);
+        }
     }
 
     #[test]

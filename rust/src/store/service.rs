@@ -55,6 +55,10 @@ use crate::{log_debug, log_warn};
 /// Socket file name published inside the store directory.
 pub const SOCKET_FILE: &str = "store.sock";
 
+/// Default bound on establishing a TCP connection; a wedged or
+/// unroutable peer must fail fast, not pin the CLI.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// Largest jid range one `alloc_jids` request may reserve (a garbage
 /// remote request must not burn the 63-bit jid space).
 const MAX_JID_RANGE: i64 = 1 << 20;
@@ -72,6 +76,39 @@ pub struct SubmitRequest {
 /// returned JSON is the reply value the submitter sees; an `Err` is
 /// reported to the submitter verbatim (e.g. a config parse error).
 pub type SubmitHandler = Arc<dyn Fn(SubmitRequest) -> Result<Json> + Send + Sync>;
+
+/// One worker-fleet verb, decoded from the wire and handed to the
+/// serving process's gateway (see [`WorkerHandler`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerVerb {
+    /// `aup worker` asks for one runnable job; the reply value is a
+    /// lease-offer object or null.
+    Lease { worker: String },
+    /// extend a live lease; reply `{"alive": bool}`
+    Heartbeat { lease: i64 },
+    /// report a leased attempt's outcome; reply `{"accepted": bool}`
+    Complete {
+        lease: i64,
+        ok: bool,
+        score: Option<f64>,
+        error: Option<String>,
+        elapsed: f64,
+    },
+}
+
+/// Installed by a serving batch to answer worker-fleet verbs
+/// (lease/heartbeat/complete). Mirrors [`SubmitHandler`]: the returned
+/// JSON is the reply value, an `Err` is reported verbatim.
+pub type WorkerHandler = Arc<dyn Fn(WorkerVerb) -> Result<Json> + Send + Sync>;
+
+/// The service-level verbs a serving process chooses to accept. A bare
+/// bookkeeping export (`aup serve` on a finished store) installs
+/// neither; `aup batch --serve` installs both.
+#[derive(Clone, Default)]
+pub struct ServiceHooks {
+    pub submit: Option<SubmitHandler>,
+    pub worker: Option<WorkerHandler>,
+}
 
 // -- the serving side -------------------------------------------------------
 
@@ -98,7 +135,7 @@ impl StoreService {
     pub fn serve_unix(
         sock_path: &Path,
         client: StoreClient,
-        submit: Option<SubmitHandler>,
+        hooks: ServiceHooks,
     ) -> Result<StoreService> {
         if sock_path.exists() {
             if UnixStream::connect(sock_path).is_ok() {
@@ -119,7 +156,7 @@ impl StoreService {
             Some(sock_path.to_path_buf()),
             None,
             client,
-            submit,
+            hooks,
         )
     }
 
@@ -129,13 +166,13 @@ impl StoreService {
     pub fn serve_tcp(
         addr: &str,
         client: StoreClient,
-        submit: Option<SubmitHandler>,
+        hooks: ServiceHooks,
     ) -> Result<StoreService> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| AupError::Store(format!("cannot bind tcp {addr}: {e}")))?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr().ok();
-        StoreService::start(AnyListener::Tcp(listener), None, local, client, submit)
+        StoreService::start(AnyListener::Tcp(listener), None, local, client, hooks)
     }
 
     fn start(
@@ -143,13 +180,13 @@ impl StoreService {
         sock_path: Option<PathBuf>,
         local_addr: Option<SocketAddr>,
         client: StoreClient,
-        submit: Option<SubmitHandler>,
+        hooks: ServiceHooks,
     ) -> Result<StoreService> {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let join = std::thread::Builder::new()
             .name("aup-store-service".into())
-            .spawn(move || accept_loop(listener, stop2, client, submit))?;
+            .spawn(move || accept_loop(listener, stop2, client, hooks))?;
         Ok(StoreService { stop, join: Some(join), sock_path, local_addr })
     }
 
@@ -192,7 +229,7 @@ fn accept_loop(
     listener: AnyListener,
     stop: Arc<AtomicBool>,
     client: StoreClient,
-    submit: Option<SubmitHandler>,
+    hooks: ServiceHooks,
 ) {
     while !stop.load(Ordering::SeqCst) {
         let accepted: std::io::Result<Box<dyn Conn>> = match &listener {
@@ -202,10 +239,10 @@ fn accept_loop(
         match accepted {
             Ok(conn) => {
                 let client = client.clone();
-                let submit = submit.clone();
+                let hooks = hooks.clone();
                 let spawned = std::thread::Builder::new()
                     .name("aup-store-conn".into())
-                    .spawn(move || serve_conn(conn, client, submit));
+                    .spawn(move || serve_conn(conn, client, hooks));
                 if let Err(e) = spawned {
                     log_warn!("store::service", "cannot spawn connection handler: {e}");
                 }
@@ -229,20 +266,24 @@ trait Conn: Read + Write + Send {
 impl Conn for UnixStream {
     fn set_blocking_with_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
         self.set_nonblocking(false)?;
-        self.set_read_timeout(timeout)
+        self.set_read_timeout(timeout)?;
+        // writes can block too (peer alive but not draining its socket);
+        // bound them by the same deadline so no client call hangs forever
+        self.set_write_timeout(timeout)
     }
 }
 
 impl Conn for TcpStream {
     fn set_blocking_with_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
         self.set_nonblocking(false)?;
-        self.set_read_timeout(timeout)
+        self.set_read_timeout(timeout)?;
+        self.set_write_timeout(timeout)
     }
 }
 
 /// One connection: sequential request/reply frames until the peer
 /// disconnects or the StoreServer actor dies.
-fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, submit: Option<SubmitHandler>) {
+fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, hooks: ServiceHooks) {
     // accepted sockets inherit the listener's non-blocking flag; handler
     // threads want plain blocking reads (no timeout: an idle attached
     // dashboard is legitimate)
@@ -261,7 +302,7 @@ fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, submit: Option<Submi
         };
         let parsed = Json::parse(&payload).and_then(|j| Request::from_json(&j));
         let (reply, keep_alive) = match parsed {
-            Ok(req) => handle_request(&client, &submit, req),
+            Ok(req) => handle_request(&client, &hooks, req),
             Err(e) => (proto::reply_err(&e.to_string()), true),
         };
         if proto::write_frame(&mut conn, &reply.to_string()).is_err() {
@@ -279,7 +320,7 @@ fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, submit: Option<Submi
 /// whether the connection should stay open.
 fn handle_request(
     client: &StoreClient,
-    submit: &Option<SubmitHandler>,
+    hooks: &ServiceHooks,
     req: Request,
 ) -> (Json, bool) {
     let res: Result<Json> = match req {
@@ -335,7 +376,7 @@ fn handle_request(
                 Ok(Json::int(client.alloc_jid_range(n)))
             }
         }
-        Request::Submit { config, user } => match submit {
+        Request::Submit { config, user } => match &hooks.submit {
             None => Err(AupError::Store(
                 "this store service does not accept experiment submissions \
                  (the serving process is not running a batch intake)"
@@ -343,6 +384,26 @@ fn handle_request(
             )),
             Some(handler) => (handler.as_ref())(SubmitRequest { config, user }),
         },
+        Request::Lease { .. } | Request::Heartbeat { .. } | Request::Complete { .. } => {
+            match &hooks.worker {
+                None => Err(AupError::Store(
+                    "this store service has no worker gateway \
+                     (the serving process is not running a live batch)"
+                        .into(),
+                )),
+                Some(handler) => {
+                    let verb = match req {
+                        Request::Lease { worker } => WorkerVerb::Lease { worker },
+                        Request::Heartbeat { lease } => WorkerVerb::Heartbeat { lease },
+                        Request::Complete { lease, ok, score, error, elapsed } => {
+                            WorkerVerb::Complete { lease, ok, score, error, elapsed }
+                        }
+                        _ => unreachable!(),
+                    };
+                    (handler.as_ref())(verb)
+                }
+            }
+        }
         Request::StartExperiment { user, proposer, exp_config, now } => client
             .start_experiment(&user, &proposer, &exp_config, now)
             .map(Json::int),
@@ -416,15 +477,37 @@ impl RemoteStoreClient {
         })
     }
 
-    /// Connect to a TCP service.
+    /// Connect to a TCP service, bounded by
+    /// [`DEFAULT_CONNECT_TIMEOUT`] (a plain `TcpStream::connect` to an
+    /// unroutable host can block for minutes).
     pub fn connect_tcp(addr: &str) -> Result<RemoteStoreClient> {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| AupError::Store(format!("cannot connect to tcp {addr}: {e}")))?;
-        Ok(RemoteStoreClient {
-            conn: Mutex::new(Box::new(stream)),
-            peer: addr.to_string(),
-            poisoned: std::sync::atomic::AtomicBool::new(false),
-        })
+        RemoteStoreClient::connect_tcp_timeout(addr, DEFAULT_CONNECT_TIMEOUT)
+    }
+
+    /// Connect to a TCP service with an explicit connect deadline.
+    pub fn connect_tcp_timeout(addr: &str, timeout: Duration) -> Result<RemoteStoreClient> {
+        use std::net::ToSocketAddrs;
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| AupError::Store(format!("cannot resolve tcp {addr}: {e}")))?
+            .collect();
+        let mut last: Option<std::io::Error> = None;
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, timeout) {
+                Ok(stream) => {
+                    return Ok(RemoteStoreClient {
+                        conn: Mutex::new(Box::new(stream)),
+                        peer: addr.to_string(),
+                        poisoned: std::sync::atomic::AtomicBool::new(false),
+                    });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(AupError::Store(match last {
+            Some(e) => format!("cannot connect to tcp {addr}: {e}"),
+            None => format!("cannot resolve tcp {addr}: no addresses"),
+        }))
     }
 
     /// Bound the wait on one reply (protects `aup status` from a wedged
@@ -465,8 +548,20 @@ impl RemoteStoreClient {
             self.poisoned.store(true, Ordering::SeqCst);
             disconnected(&self.peer)
         };
+        // enforce the frame cap BEFORE any bytes hit the wire: an
+        // oversized payload (giant experiment.json) gets the clear
+        // protocol error, and since nothing was sent the stream is still
+        // in sync — the client stays usable, no poisoning
+        let payload = req.to_json().to_string();
+        if payload.len() > proto::MAX_FRAME {
+            return Err(AupError::Store(format!(
+                "request of {} bytes exceeds the {}-byte frame cap; nothing was sent",
+                payload.len(),
+                proto::MAX_FRAME
+            )));
+        }
         let mut conn = self.conn.lock().map_err(|_| disconnected(&self.peer))?;
-        proto::write_frame(&mut *conn, &req.to_json().to_string()).map_err(|_| poison())?;
+        proto::write_frame(&mut *conn, &payload).map_err(|_| poison())?;
         match proto::read_frame(&mut *conn) {
             Ok(Some(payload)) => match Json::parse(&payload) {
                 Ok(reply) => proto::parse_reply(&reply),
@@ -479,6 +574,40 @@ impl RemoteStoreClient {
 
     fn request_unit(&self, req: Request) -> Result<()> {
         self.request(req).map(|_| ())
+    }
+
+    // -- worker-fleet verbs (`aup worker`) ----------------------------------
+
+    /// Ask the serving batch for one runnable job. `None` = nothing
+    /// leasable right now; back off and re-poll.
+    pub fn lease(&self, worker: &str) -> Result<Option<proto::LeaseOffer>> {
+        let v = self.request(Request::Lease { worker: worker.to_string() })?;
+        if v.is_null() {
+            Ok(None)
+        } else {
+            proto::lease_offer_from_json(&v).map(Some)
+        }
+    }
+
+    /// Prove the leased attempt is still alive. `false` = the lease
+    /// already expired; the worker must kill the job and drop the result.
+    pub fn heartbeat(&self, lease: i64) -> Result<bool> {
+        let v = self.request(Request::Heartbeat { lease })?;
+        Ok(v.get("alive").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// Report a leased attempt's outcome. `false` = the lease had
+    /// already expired and the result was discarded.
+    pub fn complete(
+        &self,
+        lease: i64,
+        ok: bool,
+        score: Option<f64>,
+        error: Option<String>,
+        elapsed: f64,
+    ) -> Result<bool> {
+        let v = self.request(Request::Complete { lease, ok, score, error, elapsed })?;
+        Ok(v.get("accepted").and_then(Json::as_bool).unwrap_or(false))
     }
 }
 
@@ -658,22 +787,52 @@ impl StoreApi for RemoteStoreClient {
     }
 }
 
-/// Auto-attach for `aup status DIR` / `aup top DIR`: `Some(client)` when
+/// Why a live auto-attach yielded no client (see [`try_connect_live`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttachFail {
+    /// No socket file in the directory — the normal offline case;
+    /// nothing to report.
+    NoSocket,
+    /// A socket file EXISTS but the attach failed: stale file from a
+    /// killed process, or a wedged server that accepts without
+    /// answering the ping within the deadline. Worth a stderr note so
+    /// users stop debugging phantom staleness in the directory snapshot.
+    Failed(String),
+}
+
+/// Auto-attach for `aup status DIR` / `aup top DIR`: `Ok(client)` when
 /// `DIR/store.sock` exists AND a live service answers a ping within
-/// `timeout`; `None` for no socket, a stale socket file (bound by a
-/// since-killed process), or an unresponsive peer — callers then fall
-/// back to reading the directory.
-pub fn connect_live(db_dir: &Path, timeout: Duration) -> Option<RemoteStoreClient> {
+/// `timeout`; otherwise the reason, so callers can explain the fallback
+/// to the directory snapshot.
+pub fn try_connect_live(
+    db_dir: &Path,
+    timeout: Duration,
+) -> std::result::Result<RemoteStoreClient, AttachFail> {
     let sock = db_dir.join(SOCKET_FILE);
     if !sock.exists() {
-        return None;
+        return Err(AttachFail::NoSocket);
     }
-    let client = RemoteStoreClient::connect_unix(&sock).ok()?;
-    client.set_timeout(Some(timeout)).ok()?;
-    client.ping().ok()?;
+    let fail = |e: AupError| AttachFail::Failed(e.to_string());
+    let client = RemoteStoreClient::connect_unix(&sock).map_err(fail)?;
+    client.set_timeout(Some(timeout)).map_err(fail)?;
+    client.ping().map_err(|_| {
+        AttachFail::Failed(format!(
+            "socket {} did not answer a ping within {timeout:?} \
+             (stale file or wedged server)",
+            sock.display()
+        ))
+    })?;
     // pings answered: give real queries a more generous bound
-    client.set_timeout(Some(timeout.max(Duration::from_secs(10)))).ok()?;
-    Some(client)
+    client
+        .set_timeout(Some(timeout.max(Duration::from_secs(10))))
+        .map_err(fail)?;
+    Ok(client)
+}
+
+/// [`try_connect_live`] without the reason — for callers that fall back
+/// silently.
+pub fn connect_live(db_dir: &Path, timeout: Duration) -> Option<RemoteStoreClient> {
+    try_connect_live(db_dir, timeout).ok()
 }
 
 #[cfg(test)]
@@ -689,7 +848,8 @@ mod tests {
         let (handle, client) =
             StoreServer::spawn(Store::open(dir).unwrap(), ServerConfig::default()).unwrap();
         let sock = dir.join(SOCKET_FILE);
-        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let service =
+            StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default()).unwrap();
         (handle, client, service, sock)
     }
 
@@ -786,7 +946,9 @@ mod tests {
         let dir = temp_dir("aup-svc-tcp").unwrap();
         let (handle, client) =
             StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
-        let service = StoreService::serve_tcp("127.0.0.1:0", client.clone(), None).unwrap();
+        let service =
+            StoreService::serve_tcp("127.0.0.1:0", client.clone(), ServiceHooks::default())
+                .unwrap();
         let addr = service.local_addr().unwrap();
         let remote = RemoteStoreClient::connect_tcp(&addr.to_string()).unwrap();
         remote.ping().unwrap();
@@ -823,15 +985,128 @@ mod tests {
         // serving replaces the stale file
         let (handle, client) =
             StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
-        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let service =
+            StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default()).unwrap();
         let live = connect_live(&dir, Duration::from_millis(500)).expect("live attach");
         live.ping().unwrap();
         // a second service on the same LIVE socket is refused
-        let err = StoreService::serve_unix(&sock, client.clone(), None).unwrap_err();
+        let err = StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default())
+            .unwrap_err();
         assert!(err.to_string().contains("already serves"), "{err}");
         drop((live, service, client));
         handle.shutdown().unwrap();
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn worker_verbs_without_gateway_are_rejected() {
+        let dir = temp_dir("aup-svc-nowrk").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let err = remote.lease("rig-1").unwrap_err();
+        assert!(err.to_string().contains("no worker gateway"), "{err}");
+        let err = remote.heartbeat(0).unwrap_err();
+        assert!(err.to_string().contains("no worker gateway"), "{err}");
+        // the error is per-request, not transport: the client stays live
+        remote.ping().unwrap();
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn worker_verbs_route_through_the_gateway() {
+        let dir = temp_dir("aup-svc-wrk").unwrap();
+        let (handle, client) =
+            StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        let handler: WorkerHandler = Arc::new(|verb| match verb {
+            WorkerVerb::Lease { worker } => {
+                assert_eq!(worker, "rig-1");
+                Ok(proto::lease_offer_to_json(&proto::LeaseOffer {
+                    lease: 5,
+                    job_id: 2,
+                    jid: 9,
+                    eid: 0,
+                    attempt: 1,
+                    config: "{}".into(),
+                    script: "builtin:sphere".into(),
+                    job_timeout: None,
+                    lease_timeout: 12.0,
+                }))
+            }
+            WorkerVerb::Heartbeat { lease } => {
+                Ok(Json::obj(vec![("alive", Json::Bool(lease == 5))]))
+            }
+            WorkerVerb::Complete { lease, ok, score, .. } => {
+                assert!(ok);
+                assert_eq!(score, Some(0.5));
+                Ok(Json::obj(vec![("accepted", Json::Bool(lease == 5))]))
+            }
+        });
+        let hooks = ServiceHooks { submit: None, worker: Some(handler) };
+        let service = StoreService::serve_unix(&sock, client.clone(), hooks).unwrap();
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        let offer = remote.lease("rig-1").unwrap().expect("an offer");
+        assert_eq!((offer.lease, offer.job_id, offer.jid), (5, 2, 9));
+        assert!(remote.heartbeat(5).unwrap());
+        assert!(!remote.heartbeat(6).unwrap(), "stale lease reports dead");
+        assert!(remote.complete(5, true, Some(0.5), None, 1.5).unwrap());
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn oversized_request_fails_client_side_without_poisoning() {
+        let dir = temp_dir("aup-svc-cap").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        // a query body bigger than MAX_FRAME must be refused before any
+        // bytes hit the wire, with the protocol-cap message — not the
+        // server's misleading "not a store-service peer?"
+        let giant = "x".repeat(proto::MAX_FRAME + 1);
+        let err = remote.sql(&giant).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("frame cap"), "{msg}");
+        assert!(msg.contains("nothing was sent"), "{msg}");
+        // nothing was written, so the stream is still in sync
+        remote.ping().unwrap();
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn wedged_server_attach_fails_within_the_deadline() {
+        // a listener that accepts but never answers: auto-attach must
+        // give up at the read deadline and report why, instead of
+        // hanging `aup status` forever
+        let dir = temp_dir("aup-svc-wedge").unwrap();
+        let sock = dir.join(SOCKET_FILE);
+        let _listener = UnixListener::bind(&sock).unwrap();
+        let start = std::time::Instant::now();
+        let res = try_connect_live(&dir, Duration::from_millis(300));
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "attach to a wedged server must respect the deadline"
+        );
+        match res {
+            Err(AttachFail::Failed(msg)) => {
+                assert!(msg.contains("ping"), "{msg}")
+            }
+            Err(other) => panic!("expected AttachFail::Failed, got {other:?}"),
+            Ok(_) => panic!("a wedged server must not attach"),
+        }
+        // and no socket at all is the silent case
+        let empty = temp_dir("aup-svc-wedge2").unwrap();
+        match try_connect_live(&empty, Duration::from_millis(100)) {
+            Err(AttachFail::NoSocket) => {}
+            Err(other) => panic!("expected NoSocket, got {other:?}"),
+            Ok(_) => panic!("an empty dir must not attach"),
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+        std::fs::remove_dir_all(empty).unwrap();
     }
 
     #[test]

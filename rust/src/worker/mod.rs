@@ -1,0 +1,269 @@
+//! `aup worker` — the pull-based remote executor (the paper's
+//! distributed setting: "use all available computing resources in
+//! distributed settings for model training").
+//!
+//! A worker owns no scheduler state. It connects a [`RemoteStoreClient`]
+//! to a serving batch (`aup batch --serve`), then loops:
+//!
+//! 1. **Lease** — ask the scheduler-side gateway for one queued job.
+//!    The offer carries everything needed to run it remotely: the
+//!    BasicConfig JSON, the script name, the per-attempt timeout, and
+//!    the heartbeat window.
+//! 2. **Execute** — run the config through the ordinary
+//!    [`ScriptExecutor`](crate::resource::executor::ScriptExecutor)
+//!    machinery (`builtin:` names work too), heartbeating every third of
+//!    the lease window so the serving side keeps extending the
+//!    running-deadline entry.
+//! 3. **Complete** — report the outcome. The server answers
+//!    `accepted=false` when the lease already expired (the job was
+//!    re-queued); the result is discarded so the job still reaches
+//!    exactly one terminal state.
+//!
+//! A worker that dies mid-job needs no cleanup protocol: its heartbeats
+//! stop, the lease deadline fires on the serving side, and the attempt
+//! re-enters backoff with its retry budget intact. Conversely, when the
+//! serving batch exits, the worker's next control-socket call fails and
+//! the loop ends — `aup worker` is safe to leave running in a shell.
+//!
+//! Progress is journaled through the same wire connection as free-text
+//! `job_event` rows (`W_START` / `W_END`), so `aup top` in a third shell
+//! shows which host ran which attempt.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::resource::executor::executor_from_script;
+use crate::resource::job::JobEnv;
+use crate::search::BasicConfig;
+use crate::store::proto::LeaseOffer;
+use crate::store::service::{RemoteStoreClient, DEFAULT_CONNECT_TIMEOUT, SOCKET_FILE};
+use crate::store::StoreApi;
+use crate::util::error::{AupError, Result};
+use crate::{log_info, log_warn};
+
+/// Knobs for one `aup worker` process.
+pub struct WorkerOptions {
+    /// name recorded in lease transitions and `W_*` journal events
+    pub name: String,
+    /// where job config files are written and scripts are run
+    pub workdir: PathBuf,
+    /// idle poll interval when the queue is empty
+    pub poll: Duration,
+    /// exit after this many executed jobs (tests); `None` = run until
+    /// the serving batch goes away
+    pub max_jobs: Option<usize>,
+    /// connect/read/write deadline on the control socket
+    pub timeout: Duration,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            name: format!("worker-{}", std::process::id()),
+            workdir: PathBuf::from("."),
+            poll: Duration::from_millis(200),
+            max_jobs: None,
+            timeout: DEFAULT_CONNECT_TIMEOUT,
+        }
+    }
+}
+
+/// What one worker run did, for the CLI's exit report.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct WorkerReport {
+    /// attempts whose outcome the server accepted
+    pub executed: usize,
+    /// accepted attempts that reported a job failure
+    pub failed: usize,
+    /// leases lost mid-run (expired under us or refused at Complete)
+    pub expired: usize,
+}
+
+/// Connect the worker's control socket. `target` is either a db
+/// directory / socket path (unix) or `host:port` (tcp). Pings before
+/// returning, so a stale socket file fails here and not mid-lease.
+pub fn connect_target(target: &str, timeout: Duration) -> Result<RemoteStoreClient> {
+    let remote = if target.contains(':') {
+        RemoteStoreClient::connect_tcp_timeout(target, timeout)?
+    } else {
+        let path = Path::new(target);
+        let sock = if path.is_dir() { path.join(SOCKET_FILE) } else { path.to_path_buf() };
+        RemoteStoreClient::connect_unix(&sock)?
+    };
+    remote.set_timeout(Some(timeout))?;
+    remote.ping()?;
+    Ok(remote)
+}
+
+/// The worker loop: lease → execute → complete until the serving batch
+/// goes away (any control-socket failure ends the loop) or `max_jobs`
+/// is reached.
+pub fn run_worker(remote: &RemoteStoreClient, opts: &WorkerOptions) -> Result<WorkerReport> {
+    let start = Instant::now();
+    let mut report = WorkerReport::default();
+    loop {
+        if opts.max_jobs.is_some_and(|n| report.executed + report.expired >= n) {
+            break;
+        }
+        match remote.lease(&opts.name) {
+            Ok(Some(offer)) => run_one(remote, opts, &offer, start, &mut report)?,
+            Ok(None) => std::thread::sleep(opts.poll),
+            Err(e) => {
+                // the batch drained and shut its service down — normal end
+                log_info!("worker", "serving batch gone ({e}); exiting");
+                break;
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Execute one leased job: run the script on an executor thread,
+/// heartbeat every third of the lease window, enforce the per-attempt
+/// timeout worker-side, then report through Complete.
+fn run_one(
+    remote: &RemoteStoreClient,
+    opts: &WorkerOptions,
+    offer: &LeaseOffer,
+    worker_start: Instant,
+    report: &mut WorkerReport,
+) -> Result<()> {
+    let config = BasicConfig::from_json_str(&offer.config)
+        .map_err(|e| AupError::Job(format!("lease {} carried a bad config: {e}", offer.lease)))?;
+    journal(
+        remote,
+        offer,
+        worker_start,
+        "W_START",
+        &format!("job {} attempt {} leased by worker '{}'", offer.job_id, offer.attempt, opts.name),
+    );
+    let started = Instant::now();
+    let outcome = match executor_from_script(&offer.script, &opts.workdir) {
+        // e.g. the script path does not exist on THIS host — report it as
+        // the attempt's failure, don't kill the worker
+        Err(e) => Err(e.to_string()),
+        Ok(executor) => {
+            let env = JobEnv::default();
+            let cancel = env.cancel.clone();
+            let cfg = config.clone();
+            let (tx, rx) = mpsc::channel();
+            let thread = std::thread::spawn(move || {
+                let _ = tx.send(executor.execute(&cfg, &env));
+            });
+            let hb_every = Duration::from_secs_f64((offer.lease_timeout / 3.0).clamp(0.05, 5.0));
+            let mut lost = false;
+            let outcome: std::result::Result<f64, String> = loop {
+                match rx.recv_timeout(hb_every) {
+                    Ok(res) => break res.map_err(|e| e.to_string()),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        break Err("executor thread vanished".to_string());
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if offer
+                            .job_timeout
+                            .is_some_and(|t| started.elapsed().as_secs_f64() > t)
+                        {
+                            cancel.kill();
+                            break Err(format!(
+                                "timeout: exceeded {}s on worker '{}'",
+                                offer.job_timeout.unwrap(),
+                                opts.name
+                            ));
+                        }
+                        match remote.heartbeat(offer.lease) {
+                            Ok(true) => {}
+                            Ok(false) => {
+                                // the serving side already expired us and
+                                // re-queued the job; abandon the attempt
+                                lost = true;
+                                cancel.kill();
+                                break Err("lease expired under the worker".to_string());
+                            }
+                            Err(e) => {
+                                cancel.kill();
+                                let _ = thread.join();
+                                return Err(AupError::Job(format!(
+                                    "control socket lost mid-job (job {}): {e}",
+                                    offer.job_id
+                                )));
+                            }
+                        }
+                    }
+                }
+            };
+            let _ = thread.join();
+            if lost {
+                report.expired += 1;
+                journal(remote, offer, worker_start, "W_END", "lease expired under the worker");
+                return Ok(());
+            }
+            outcome
+        }
+    };
+    let elapsed = started.elapsed().as_secs_f64();
+    let (ok, score, error) = match &outcome {
+        Ok(s) => (true, Some(*s), None),
+        Err(e) => (false, None, Some(e.clone())),
+    };
+    let detail = match &outcome {
+        Ok(s) => format!("score {s} in {elapsed:.3}s on worker '{}'", opts.name),
+        Err(e) => format!("failed on worker '{}': {e}", opts.name),
+    };
+    journal(remote, offer, worker_start, "W_END", &detail);
+    let accepted = remote.complete(offer.lease, ok, score, error, elapsed)?;
+    if accepted {
+        report.executed += 1;
+        if !ok {
+            report.failed += 1;
+        }
+    } else {
+        report.expired += 1;
+        log_info!(
+            "worker",
+            "lease {} expired before completion; result for job {} discarded",
+            offer.lease,
+            offer.job_id
+        );
+    }
+    Ok(())
+}
+
+/// Best-effort free-text journal entry on the job's event stream. The
+/// `W_*` states are the worker's own vocabulary — distinct from the
+/// scheduler's RUNNING/BACKOFF rows so aggregates never mistake them for
+/// attempt transitions. Failures are logged, never fatal: journaling is
+/// evidence, not control flow.
+fn journal(
+    remote: &RemoteStoreClient,
+    offer: &LeaseOffer,
+    worker_start: Instant,
+    state: &str,
+    detail: &str,
+) {
+    let at = worker_start.elapsed().as_secs_f64();
+    if let Err(e) =
+        remote.log_job_event(offer.jid, offer.eid, offer.attempt as i64, state, at, detail, -1, 0.0)
+    {
+        log_warn!("worker", "could not journal {state} for job {}: {e}", offer.job_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_are_sane() {
+        let o = WorkerOptions::default();
+        assert!(o.name.starts_with("worker-"));
+        assert!(o.max_jobs.is_none());
+        assert!(o.poll >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn connect_target_rejects_missing_unix_socket() {
+        let err = connect_target("/nonexistent/db-dir/socket", Duration::from_millis(200));
+        assert!(err.is_err());
+    }
+}

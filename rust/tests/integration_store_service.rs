@@ -22,7 +22,8 @@ use auptimizer::resource::local::CpuManager;
 use auptimizer::store::schema;
 use auptimizer::store::server::Drain;
 use auptimizer::store::service::{
-    connect_live, RemoteStoreClient, StoreService, SubmitHandler, SubmitRequest, SOCKET_FILE,
+    connect_live, RemoteStoreClient, ServiceHooks, StoreService, SubmitHandler, SubmitRequest,
+    SOCKET_FILE,
 };
 use auptimizer::store::{StoreApi, Value};
 use auptimizer::util::fsutil::temp_dir;
@@ -53,7 +54,7 @@ fn remote_and_local_mutations_share_one_group_commit_batch() {
     let (mut server, client) =
         StoreServer::new(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
     let sock = dir.join(SOCKET_FILE);
-    let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+    let service = StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default()).unwrap();
     let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
 
     let before = server.store_mut().wal_stats().unwrap();
@@ -108,7 +109,7 @@ fn submitted_experiment_joins_a_live_batch() {
         });
         let sock = dir.join(SOCKET_FILE);
         let service =
-            StoreService::serve_unix(&sock, client.clone(), Some(handler)).unwrap();
+            StoreService::serve_unix(&sock, client.clone(), ServiceHooks { submit: Some(handler), worker: None }).unwrap();
 
         // a second "process": submit BEFORE the loop starts, so the
         // intake pickup is deterministic
@@ -183,7 +184,7 @@ fn crashing_server_gives_attached_reader_a_clean_error_then_directory_recovers()
         let cfg = ServerConfig { crash_after_batches: Some(2), ..ServerConfig::default() };
         let (handle, client) = StoreServer::spawn(Store::open(&dir).unwrap(), cfg).unwrap();
         let sock = dir.join(SOCKET_FILE);
-        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let service = StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default()).unwrap();
         let remote = connect_live(&dir, Duration::from_millis(500)).expect("live attach");
 
         // batch 1: the experiment row (query replies come from the drain
@@ -251,7 +252,7 @@ fn concurrent_remote_clients_are_all_served() {
         let (handle, client) =
             StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
         let sock = dir.join(SOCKET_FILE);
-        let service = StoreService::serve_unix(&sock, client.clone(), None).unwrap();
+        let service = StoreService::serve_unix(&sock, client.clone(), ServiceHooks::default()).unwrap();
         let n_clients = 4;
         let per_client = 25;
         let mut joins = Vec::new();

@@ -1,0 +1,337 @@
+//! TRUE cross-process integration for `aup worker`: a serving batch
+//! (`aup batch --serve`) in one child process, pull-based workers in
+//! others. Covers the happy path (jobs leased over the wire, executed
+//! remotely, journaled as `W_*` job events), the crash path (a
+//! SIGKILLed worker is reaped by lease expiry and its job re-runs
+//! elsewhere with the retry budget intact), and the wedged-server
+//! fallback for the read-side commands.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use auptimizer::store::schema::{self, JobEventRow};
+use auptimizer::store::service::SOCKET_FILE;
+use auptimizer::store::Store;
+use auptimizer::util::fsutil::temp_dir;
+
+const AUP: &str = env!("CARGO_BIN_EXE_aup");
+
+/// An experiment whose jobs are pinned to the `remote` resource kind:
+/// the batch's local cpu pool can never place them, so ONLY `aup
+/// worker` processes can run this experiment.
+fn write_remote_exp(dir: &Path, name: &str, script: &Path, n_samples: usize) -> PathBuf {
+    let path = dir.join(name);
+    let text = format!(
+        r#"{{
+            "proposer": "random",
+            "script": "{}",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 7,
+            "job_resource_kind": "remote",
+            "parameter_config": [{{"name": "x", "type": "float", "range": [0, 1]}}]
+        }}"#,
+        script.display()
+    );
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+fn write_script(dir: &Path, name: &str, body: &str) -> PathBuf {
+    use std::os::unix::fs::PermissionsExt;
+    let path = dir.join(name);
+    std::fs::write(&path, body).unwrap();
+    std::fs::set_permissions(&path, std::fs::Permissions::from_mode(0o755)).unwrap();
+    path
+}
+
+fn spawn_aup(args: &[&str]) -> Child {
+    Command::new(AUP)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap()
+}
+
+fn wait_exit(child: &mut Child, limit: Duration, who: &str) -> ExitStatus {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("{who} did not exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn wait_socket(child: &mut Child, sock: &Path) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !sock.exists() {
+        assert!(
+            child.try_wait().unwrap().is_none(),
+            "serving batch exited before publishing its socket"
+        );
+        assert!(Instant::now() < deadline, "socket never appeared");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Poll the durable store (directory read, like `aup status --offline`)
+/// until a job event matching `pred` has been group-committed. The
+/// batch keeps serving while we read — exactly the concurrent-reader
+/// scenario the read-side fallback exists for.
+fn wait_for_event(db: &Path, pred: impl Fn(&JobEventRow) -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(store) = Store::open_read_only(db) {
+            if let Ok(evs) = schema::job_events_of(&store, 0) {
+                if evs.iter().any(&pred) {
+                    return;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "never observed: {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn read_events(db: &Path) -> Vec<JobEventRow> {
+    let store = Store::open_read_only(db).unwrap();
+    schema::job_events_of(&store, 0).unwrap()
+}
+
+#[test]
+fn worker_leases_executes_and_journals_over_the_wire() {
+    let dir = temp_dir("aup-worker-cli").unwrap();
+    let script = write_script(&dir, "job.sh", "#!/bin/sh\nsleep 0.2\necho \"result: 0.5\"\n");
+    let exp = write_remote_exp(&dir, "exp.json", &script, 3);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    // shell 1: a serving batch whose jobs ONLY a worker can run
+    let mut batch = spawn_aup(&[
+        "batch",
+        exp.to_str().unwrap(),
+        "--pool",
+        "1",
+        "--db",
+        db_s,
+        "--serve",
+        "--lease-timeout",
+        "10",
+    ]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+
+    // shell 2: the worker pulls every job over the wire
+    let mut worker = spawn_aup(&["worker", db_s, "--name", "rig-a", "--poll-ms", "25"]);
+
+    // the batch drains via the worker alone and exits
+    let status = wait_exit(&mut batch, Duration::from_secs(120), "serving batch");
+    let out = batch.wait_with_output().unwrap();
+    let batch_stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(status.success(), "batch failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(batch_stdout.contains("aup worker"), "serve banner: {batch_stdout}");
+
+    // the worker notices the batch is gone and exits on its own
+    let status = wait_exit(&mut worker, Duration::from_secs(30), "worker");
+    let out = worker.wait_with_output().unwrap();
+    let worker_stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(status.success(), "worker failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(worker_stdout.contains("connected to"), "{worker_stdout}");
+    assert!(
+        worker_stdout.contains("3 job(s) executed, 0 failed"),
+        "worker report: {worker_stdout}"
+    );
+
+    // ONE durable store: every job Finished, with the full remote story
+    // journaled — lease transition, the worker's own W_START/W_END rows
+    // (rid = -1: no local resource was ever occupied), and exactly one
+    // terminal DONE per job
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert_eq!(jobs.len(), 3);
+    assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished), "{jobs:?}");
+    let evs = schema::job_events_of(&store, 0).unwrap();
+    assert!(
+        evs.iter()
+            .any(|e| e.state == "RUNNING" && e.detail.contains("leased to worker 'rig-a'")),
+        "no lease transition journaled"
+    );
+    for job in &jobs {
+        let of_job: Vec<&JobEventRow> = evs.iter().filter(|e| e.jid == job.jid).collect();
+        assert!(
+            of_job.iter().any(|e| e.state == "W_START" && e.detail.contains("rig-a")),
+            "job {}: no W_START from the worker", job.jid
+        );
+        assert!(
+            of_job.iter().any(|e| e.state == "W_END" && e.detail.contains("score")),
+            "job {}: no W_END from the worker", job.jid
+        );
+        assert!(of_job.iter().all(|e| e.rid == -1), "remote attempts hold no local rid");
+        let terminal = of_job
+            .iter()
+            .filter(|e| matches!(e.state.as_str(), "DONE" | "FAILED" | "CANCELLED"))
+            .count();
+        assert_eq!(terminal, 1, "job {}: exactly one terminal state", job.jid);
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn a_sigkilled_worker_is_reaped_by_lease_expiry_and_the_job_reruns() {
+    let dir = temp_dir("aup-worker-churn").unwrap();
+    // first attempt parks forever; any re-run (the marker exists by
+    // then) succeeds instantly — so the job can ONLY finish if the
+    // scheduler reaps the murdered first worker and re-leases
+    let marker = dir.join("first_attempt_started");
+    let script = write_script(
+        &dir,
+        "flaky_host.sh",
+        &format!(
+            "#!/bin/sh\nif [ -e {m} ]; then echo \"result: 0.5\"; exit 0; fi\n\
+             touch {m}\nsleep 600\n",
+            m = marker.display()
+        ),
+    );
+    let exp = write_remote_exp(&dir, "exp.json", &script, 1);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    let mut batch = spawn_aup(&[
+        "batch",
+        exp.to_str().unwrap(),
+        "--pool",
+        "1",
+        "--db",
+        db_s,
+        "--serve",
+        "--lease-timeout",
+        "1",
+    ]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+
+    // worker 1 leases the job and parks in the 600s sleep
+    let mut doomed = spawn_aup(&["worker", db_s, "--name", "doomed", "--poll-ms", "25"]);
+    wait_for_event(
+        &db,
+        |e| e.state == "W_START" && e.detail.contains("doomed"),
+        "worker 'doomed' starting the job",
+    );
+    // give it a beat to be genuinely mid-execution, then SIGKILL: no
+    // Complete, no goodbye — heartbeats just stop
+    std::thread::sleep(Duration::from_millis(300));
+    doomed.kill().unwrap();
+    let _ = doomed.wait();
+
+    // the lease (1s window) expires server-side and the job re-queues;
+    // worker 2 picks it up and finishes it
+    wait_for_event(
+        &db,
+        |e| e.state == "BACKOFF" && e.detail.contains("lease expired"),
+        "lease expiry after the worker vanished",
+    );
+    let mut savior = spawn_aup(&["worker", db_s, "--name", "savior", "--max-jobs", "1", "--poll-ms", "25"]);
+
+    let status = wait_exit(&mut batch, Duration::from_secs(60), "serving batch");
+    let out = batch.wait_with_output().unwrap();
+    assert!(status.success(), "batch failed: {}", String::from_utf8_lossy(&out.stderr));
+    let status = wait_exit(&mut savior, Duration::from_secs(30), "second worker");
+    let out = savior.wait_with_output().unwrap();
+    let savior_stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(status.success(), "savior failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(savior_stdout.contains("1 job(s) executed, 0 failed"), "{savior_stdout}");
+
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].status, schema::JobStatus::Finished, "{jobs:?}");
+    let evs = read_events(&db);
+    // the full churn story, in the journal: leased to 'doomed', expiry
+    // names the vanished worker, re-leased to 'savior' with the retry
+    // budget INTACT (attempt 1 again, not 2), exactly one terminal row
+    assert!(evs.iter().any(|e| e.detail.contains("leased to worker 'doomed'")), "{evs:?}");
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "BACKOFF" && e.detail.contains("lease expired (worker 'doomed' vanished)")
+        }),
+        "{evs:?}"
+    );
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "RUNNING" && e.detail.contains("attempt 1 leased to worker 'savior'")
+        }),
+        "budget must be intact after expiry: {evs:?}"
+    );
+    assert!(evs.iter().any(|e| e.state == "W_START" && e.detail.contains("savior")));
+    let terminal = evs
+        .iter()
+        .filter(|e| matches!(e.state.as_str(), "DONE" | "FAILED" | "CANCELLED"))
+        .count();
+    assert_eq!(terminal, 1, "exactly one terminal state: {evs:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn status_against_a_wedged_server_falls_back_to_the_directory() {
+    let dir = temp_dir("aup-wedged-server").unwrap();
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    // seed a durable store with a quick offline batch
+    let exp = {
+        let path = dir.join("exp.json");
+        std::fs::write(
+            &path,
+            r#"{"proposer": "random", "script": "builtin:sphere", "n_samples": 2,
+                "n_parallel": 1, "target": "min", "random_seed": 7,
+                "parameter_config": [{"name": "x", "type": "float", "range": [0, 1]}]}"#,
+        )
+        .unwrap();
+        path
+    };
+    let mut seed = spawn_aup(&["batch", exp.to_str().unwrap(), "--db", db_s]);
+    let status = wait_exit(&mut seed, Duration::from_secs(60), "seeding batch");
+    assert!(status.success());
+
+    // a socket that accepts but never answers: the worst case for
+    // auto-attach (a stale file would at least fail the connect)
+    let sock = db.join(SOCKET_FILE);
+    let _wedged = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+
+    let started = Instant::now();
+    let out = Command::new(AUP)
+        .args(["status", db_s, "--attach-ms", "300"])
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    let elapsed = started.elapsed();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    // bounded by the read deadline, not wedged forever
+    assert!(elapsed < Duration::from_secs(10), "status took {elapsed:?}");
+    assert!(out.status.success(), "status failed: {stderr}");
+    // the failure is explained (not silently swallowed) and the
+    // directory snapshot is still delivered
+    assert!(stderr.contains("live attach failed"), "{stderr}");
+    assert!(stderr.contains("directory snapshot"), "{stderr}");
+    assert!(!stderr.contains("attached to live store service"), "{stderr}");
+    assert!(stdout.contains("random"), "{stdout}");
+
+    // --offline never even glances at the socket
+    let out = Command::new(AUP)
+        .args(["status", db_s, "--offline"])
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!stderr.contains("attach"), "{stderr}");
+    std::fs::remove_dir_all(dir).unwrap();
+}

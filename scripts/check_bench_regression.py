@@ -30,6 +30,11 @@ dispatched on its keys:
     `poll_flat_ratio` <= 3 (per-poll cost flat in lifetime job count —
     the live window is fixed, so growth means terminal jobs leaked back
     into the hot path);
+  - `lease_flat_ratio` <= 3: the worker-lease path (lease / heartbeat /
+    complete) rides the same shards and deadline heap, so its
+    per-operation cost must stay flat too. Required in fresh reports;
+    trajectory points committed before the worker path existed simply
+    lack the key and compare as informative-only;
   - like the query report, the trajectory is printed, not gated.
 
 A missing baseline (first run ever, or a fresh fork) passes: the commit
@@ -133,16 +138,28 @@ def gate_sched(fresh, baseline) -> int:
     print(f"scheduler bench at {n} jobs (scan baseline capped at {scan_n}):")
     print(f"  sched_speedup:   {speedup:.1f}x (floor 10x)")
     print(f"  poll_flat_ratio: {flat:.2f} (ceiling 3, flat-in-lifetime-jobs)")
+    lease = fresh.get("lease_flat_ratio")
+    if lease is not None:
+        print(f"  lease_flat_ratio: {float(lease):.2f} (ceiling 3, flat-in-lifetime-jobs)")
     if baseline is not None:
         print(
             f"  trajectory (informative): speedup {baseline.get('sched_speedup')}x -> "
-            f"{speedup:.1f}x, flat {baseline.get('poll_flat_ratio')} -> {flat:.2f}"
+            f"{speedup:.1f}x, flat {baseline.get('poll_flat_ratio')} -> {flat:.2f}, "
+            f"lease flat {baseline.get('lease_flat_ratio')} -> {lease}"
         )
     if speedup < 10.0:
         print(f"::error::scheduler speedup below the 10x floor: {speedup:.1f}x")
         rc = 1
     if flat > 3.0:
         print(f"::error::scheduler per-poll cost grew with lifetime jobs: {flat:.2f}x")
+        rc = 1
+    # required in FRESH reports (the bench and this gate ship together);
+    # only committed baselines may predate the worker-lease path
+    if lease is None:
+        print("::error::sched report is missing lease_flat_ratio")
+        rc = 1
+    elif float(lease) > 3.0:
+        print(f"::error::lease bookkeeping cost grew with lifetime jobs: {float(lease):.2f}x")
         rc = 1
     if rc == 0:
         print("ok: event-driven scheduler holds the 10x floor and stays flat per poll")
