@@ -32,12 +32,18 @@
 //!   `n_jobs` vs `n_jobs / 10`: lease bookkeeping rides the same
 //!   ready-queue shards and deadline heap, so it must stay flat in
 //!   lifetime job count too.
+//! * `trial_flat_ratio` — per-report cost of the early-stopping path
+//!   (PR 7: every job streams a 4-point metric curve into a median
+//!   stopper that culls trailing trials mid-attempt) at `n_jobs` vs
+//!   `n_jobs / 10`: the trial scheduler's two-heap order statistics
+//!   keep the verdict O(log n), so per-report cost must stay near-flat
+//!   in lifetime trial count.
 
 use std::time::Instant;
 
 use auptimizer::resource::local::CpuManager;
 use auptimizer::scheduler::{
-    FnSimExecutor, SchedEvent, SchedulerConfig, SimDispatcher, SimOutcome, SimScheduler,
+    FnSimExecutor, JobState, SchedEvent, SchedulerConfig, SimDispatcher, SimOutcome, SimScheduler,
     RESOURCE_KIND_KEY,
 };
 use auptimizer::search::BasicConfig;
@@ -186,6 +192,66 @@ fn run_lease_workload(n_jobs: u64) -> LeaseStats {
     LeaseStats { secs: t0.elapsed().as_secs_f64(), ops }
 }
 
+struct TrialStats {
+    secs: f64,
+    /// intermediate reports ingested (drained via `take_reports`)
+    reports: usize,
+    /// jobs the median stopper killed mid-attempt
+    stopped: usize,
+}
+
+/// Drive `n_jobs` through the early-stopping path (PR 7): every job
+/// streams a 4-point metric curve; a median stopper culls the trials
+/// trailing their completed peers. Same fixed live window, so the
+/// per-report cost at `n_jobs` vs `n_jobs / 10` isolates how verdict
+/// cost scales with lifetime trial count (the two-heap order statistic
+/// keeps it O(log n)).
+fn run_trial_workload(n_jobs: u64) -> TrialStats {
+    let rm = Box::new(CpuManager::new(SLOTS));
+    let mut s = SimScheduler::new(rm, SimDispatcher::new());
+    let sub = s.add_submission(
+        0,
+        SchedulerConfig { max_retries: 0, retry_backoff: 0.5, job_timeout: None },
+    );
+    s.set_trial_scheduler(auptimizer::trial::by_name("median").expect("median is registered"));
+    s.dispatcher_mut().add_executor(
+        sub,
+        Box::new(FnSimExecutor::new(|c: &BasicConfig, _| {
+            let id = c.job_id().unwrap();
+            // a spread of flat curves (minimize): trials trailing the
+            // running median of their completed peers get culled at
+            // their first report past the grace step
+            let score = (id % 101) as f64;
+            SimOutcome::ok(score, 2.0 + (id % 3) as f64)
+                .with_curve((1..=4).map(|k| (0.2 * k as f64, k, score)).collect())
+        })),
+    );
+    let t0 = Instant::now();
+    let mut submitted: u64 = 0;
+    let mut done: usize = 0;
+    let mut reports: usize = 0;
+    let mut stopped: usize = 0;
+    while done < n_jobs as usize {
+        while submitted < n_jobs && s.outstanding(sub) < WINDOW {
+            let mut c = BasicConfig::new();
+            c.set_num("job_id", submitted as f64);
+            s.submit(sub, c).expect("unique job ids");
+            submitted += 1;
+        }
+        for ev in s.poll(true).expect("trial workload cannot stall") {
+            if let SchedEvent::Done(d) = ev {
+                done += 1;
+                if d.state == JobState::StoppedEarly {
+                    stopped += 1;
+                }
+            }
+        }
+        reports += s.take_reports().len();
+    }
+    assert!(s.idle(), "trial driver drained every job");
+    TrialStats { secs: t0.elapsed().as_secs_f64(), reports, stopped }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -234,6 +300,16 @@ fn main() {
     let per_lease_large = lease_large.secs / lease_large.ops.max(1) as f64;
     let lease_flat_ratio = per_lease_large / per_lease_small.max(1e-12);
 
+    // early-stopping path (PR 7): per-report verdict cost must stay
+    // near-flat in lifetime trial count
+    let trial_small = run_trial_workload(n_jobs / 10);
+    let trial_large = run_trial_workload(n_jobs);
+    assert!(trial_large.reports > 0, "trial workload streamed no reports");
+    assert!(trial_large.stopped > 0, "trial workload never exercised the stop path");
+    let per_report_small = trial_small.secs / trial_small.reports.max(1) as f64;
+    let per_report_large = trial_large.secs / trial_large.reports.max(1) as f64;
+    let trial_flat_ratio = per_report_large / per_report_small.max(1e-12);
+
     println!(
         "   drive {scan_jobs} jobs: scan {:>9.3}ms vs event {:>9.3}ms -> {sched_speedup:>7.1}x \
          (~{extrapolated:.0}x at {n_jobs})",
@@ -254,6 +330,15 @@ fn main() {
         per_lease_large * 1e6,
         n_jobs
     );
+    println!(
+        "   per-report:       {:>9.3}us at {} jobs vs {:>9.3}us at {} -> ratio \
+         {trial_flat_ratio:.2} ({} stopped early)",
+        per_report_small * 1e6,
+        n_jobs / 10,
+        per_report_large * 1e6,
+        n_jobs,
+        trial_large.stopped
+    );
 
     // acceptance: >=10x over the scan baseline, flat per-poll cost
     assert!(
@@ -271,6 +356,10 @@ fn main() {
         lease_flat_ratio <= 3.0,
         "lease bookkeeping cost grew with lifetime job count: {lease_flat_ratio:.2}x"
     );
+    assert!(
+        trial_flat_ratio <= 3.0,
+        "early-stopping verdict cost grew with lifetime trial count: {trial_flat_ratio:.2}x"
+    );
 
     let json = format!(
         "{{\n  \"n_jobs\": {n_jobs},\n  \"scan_jobs\": {scan_jobs},\n  \
@@ -283,8 +372,18 @@ fn main() {
          \"per_lease_small_secs\": {per_lease_small:.12},\n  \
          \"per_lease_large_secs\": {per_lease_large:.12},\n  \
          \"lease_flat_ratio\": {lease_flat_ratio:.3},\n  \
+         \"per_report_small_secs\": {per_report_small:.12},\n  \
+         \"per_report_large_secs\": {per_report_large:.12},\n  \
+         \"trial_flat_ratio\": {trial_flat_ratio:.3},\n  \
+         \"trial_reports\": {},\n  \"trial_stopped\": {},\n  \
          \"lease_ops\": {},\n  \"polls\": {}\n}}\n",
-        scan.secs, event_same.secs, large.secs, lease_large.ops, large.polls
+        scan.secs,
+        event_same.secs,
+        large.secs,
+        trial_large.reports,
+        trial_large.stopped,
+        lease_large.ops,
+        large.polls
     );
     if let Some(parent) = std::path::Path::new(&out_path).parent() {
         if !parent.as_os_str().is_empty() {

@@ -15,6 +15,8 @@
 //! * `--timeout S`  — per-attempt deadline in seconds (`job_timeout`);
 //! * `--backoff S`  — base retry backoff, doubled per retry
 //!   (`retry_backoff`);
+//! * `--trial-scheduler median|asha` — early-stop trials whose streamed
+//!   `intermediate:` metrics trail their peers (`trial_scheduler`);
 //! * `--pool N`     — (`batch` only) size of the shared CPU pool.
 //!
 //! Argument parsing is hand-rolled (clap is not vendored): flags are
@@ -90,8 +92,10 @@ USAGE:
     aup init    [--proposer NAME] [--out F] generate an experiment.json template
     aup run     EXPERIMENT.json [--db DIR] [--user NAME] [--verbose]
                 [--retries N] [--timeout S] [--backoff S]
+                [--trial-scheduler median|asha]
     aup batch   EXP1.json EXP2.json [...] [--pool N] [--db DIR] [--user NAME]
                 [--retries N] [--timeout S] [--backoff S] [--verbose]
+                [--trial-scheduler median|asha]
                 [--serve] [--tcp HOST:PORT]
                 run several experiments against ONE shared resource pool AND
                 one shared tracking store: with --db DIR every experiment's
@@ -138,6 +142,12 @@ SCHEDULER KNOBS (run/batch; also experiment.json keys):
     --retries N   retry a failed/timed-out/NaN job up to N times   (job_retries)
     --timeout S   per-attempt deadline in seconds                  (job_timeout)
     --backoff S   base retry backoff, doubled per retry          (retry_backoff)
+    --trial-scheduler median|asha
+                  early stopping from streamed metrics: jobs print
+                  'intermediate: STEP SCORE' lines while running; trials
+                  whose curve trails their peers are killed mid-attempt
+                  (STOPPED_EARLY — 'aup status' shows the compute saved)
+                                                             (trial_scheduler)
 
 STORE NOTES:
     a store directory can be inspected (status/top/viz/sql) while a run is
@@ -266,6 +276,23 @@ fn sched_overrides(
     Ok(if touched { Some(sched) } else { None })
 }
 
+/// Validate `--trial-scheduler` early so the error names the flag, not
+/// a config key. `None` = flag absent (the experiment.json
+/// `trial_scheduler` key, if any, then applies).
+fn trial_flag(cli: &Cli) -> Result<Option<String>> {
+    match cli.flag("trial-scheduler") {
+        None => Ok(None),
+        Some(name) => {
+            if crate::trial::by_name(name).is_none() {
+                return Err(AupError::Config(format!(
+                    "--trial-scheduler must be 'median' or 'asha' (got '{name}')"
+                )));
+            }
+            Ok(Some(name.to_string()))
+        }
+    }
+}
+
 /// `aup run experiment.json`.
 pub fn cmd_run(cli: &Cli) -> Result<()> {
     let path = cli
@@ -301,6 +328,7 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
         options.user = user.to_string();
     }
     options.scheduler = sched_overrides(cli, &cfg)?;
+    options.trial_scheduler = trial_flag(cli)?;
     let proposer_name = cfg.proposer.clone();
     let mut exp = Experiment::new(cfg, options)?;
     let run_result = exp.run();
@@ -377,6 +405,7 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             options.user = user.to_string();
         }
         options.scheduler = sched_overrides(cli, &cfg)?;
+        options.trial_scheduler = trial_flag(cli)?;
         names.push(format!("{} ({})", path, cfg.proposer));
         exps.push(Experiment::new(cfg, options)?);
     }
@@ -570,8 +599,8 @@ pub fn cmd_worker(cli: &Cli) -> Result<()> {
     println!("worker '{}' connected to {target}; leasing jobs", opts.name);
     let report = worker::run_worker(&remote, &opts)?;
     println!(
-        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost",
-        opts.name, report.executed, report.failed, report.expired
+        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost, {} stopped early",
+        opts.name, report.executed, report.failed, report.expired, report.stopped
     );
     Ok(())
 }
@@ -1052,6 +1081,14 @@ mod tests {
         // garbage rejected
         let cli = Cli::parse(&s(&["run", "x.json", "--retries", "lots"])).unwrap();
         assert!(sched_overrides(&cli, &cfg).is_err());
+        // --trial-scheduler validates against the trial registry
+        let cli = Cli::parse(&s(&["run", "x.json", "--trial-scheduler", "asha"])).unwrap();
+        assert_eq!(trial_flag(&cli).unwrap().as_deref(), Some("asha"));
+        let cli = Cli::parse(&s(&["run", "x.json"])).unwrap();
+        assert!(trial_flag(&cli).unwrap().is_none());
+        let cli = Cli::parse(&s(&["run", "x.json", "--trial-scheduler", "psychic"])).unwrap();
+        let err = trial_flag(&cli).unwrap_err();
+        assert!(err.to_string().contains("median"), "{err}");
     }
 
     #[test]

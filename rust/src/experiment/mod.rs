@@ -63,6 +63,10 @@ pub struct ExperimentOptions {
     /// queue priority override; `None` -> the config's `priority` key
     /// (default 0; higher wins contended pools)
     pub priority: Option<i32>,
+    /// early-stopping policy (`"median"` / `"asha"`, the CLI's
+    /// `--trial-scheduler`); `None` -> the config's `trial_scheduler`
+    /// key, absent -> no early stopping
+    pub trial_scheduler: Option<String>,
 }
 
 impl Default for ExperimentOptions {
@@ -75,6 +79,7 @@ impl Default for ExperimentOptions {
             user: std::env::var("USER").unwrap_or_else(|_| "aup".to_string()),
             scheduler: None,
             priority: None,
+            trial_scheduler: None,
         }
     }
 }
@@ -85,6 +90,9 @@ pub struct ExperimentSummary {
     pub eid: i64,
     pub n_jobs: usize,
     pub n_failed: usize,
+    /// jobs killed mid-attempt by the trial scheduler (`STOPPED_EARLY`);
+    /// not counted in `n_failed`
+    pub n_stopped: usize,
     pub best_score: Option<f64>,
     pub best_config: Option<crate::search::BasicConfig>,
     pub wall_time: f64,
@@ -110,9 +118,12 @@ pub struct Experiment {
     server: Option<StoreServerHandle>,
     sched_cfg: SchedulerConfig,
     priority: i32,
+    /// validated early-stopping policy name (`trial::by_name` key)
+    trial: Option<String>,
     // -- per-run state ----------------------------------------------------
     n_jobs: usize,
     n_failed: usize,
+    n_stopped: usize,
     best: Option<(f64, crate::search::BasicConfig)>,
     history: Vec<(u64, f64, f64)>,
 }
@@ -153,6 +164,19 @@ impl Experiment {
                 .and_then(Json::as_i64)
                 .unwrap_or(0) as i32
         });
+        let trial = options.trial_scheduler.or_else(|| {
+            cfg.raw
+                .get("trial_scheduler")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+        });
+        if let Some(name) = &trial {
+            if crate::trial::by_name(name).is_none() {
+                return Err(AupError::Config(format!(
+                    "unknown trial scheduler '{name}' (expected 'median' or 'asha')"
+                )));
+            }
+        }
         Ok(Experiment {
             cfg,
             proposer,
@@ -162,8 +186,10 @@ impl Experiment {
             server,
             sched_cfg,
             priority,
+            trial,
             n_jobs: 0,
             n_failed: 0,
+            n_stopped: 0,
             best: None,
             history: Vec::new(),
         })
@@ -180,6 +206,7 @@ impl Experiment {
         let mut sched = Scheduler::new(rm, ThreadDispatcher::new());
         let sub = sched.add_submission(self.priority, self.sched_cfg.clone());
         sched.dispatcher_mut().add_executor(sub, self.executor.clone());
+        install_trial(&mut sched, sub, self);
         log_info!(
             "experiment",
             "eid={} proposer={} script={} n_parallel={} retries={} timeout={:?}",
@@ -321,6 +348,17 @@ impl Experiment {
                 self.tracker.job_cancelled(done.job_id)?;
                 log_warn!("experiment", "job {} cancelled", done.job_id);
             }
+            (JobState::StoppedEarly, outcome) => {
+                // a trial-scheduler kill, not a failure: the proposer sees
+                // "no score" (same as a pruned hyperband rung) and the
+                // store records the distinct STOPPED_EARLY terminal so
+                // `aup status` can report compute saved
+                self.n_stopped += 1;
+                self.proposer.update(done.job_id, &done.config, None);
+                self.tracker.job_stopped_early(done.job_id)?;
+                let why = outcome.as_ref().err().cloned().unwrap_or_default();
+                log_info!("experiment", "job {} stopped early: {why}", done.job_id);
+            }
             (_, outcome) => {
                 self.n_failed += 1;
                 self.proposer.update(done.job_id, &done.config, None);
@@ -342,9 +380,10 @@ impl Experiment {
         self.tracker.experiment_finished(best_score)?;
         log_info!(
             "experiment",
-            "done: {} jobs ({} failed), best {:?}, {:.3}s",
+            "done: {} jobs ({} failed, {} stopped early), best {:?}, {:.3}s",
             self.n_jobs,
             self.n_failed,
+            self.n_stopped,
             best_score,
             wall_time
         );
@@ -352,6 +391,7 @@ impl Experiment {
             eid: self.tracker.eid(),
             n_jobs: self.n_jobs,
             n_failed: self.n_failed,
+            n_stopped: self.n_stopped,
             best_score,
             best_config: self.best.take().map(|(_, c)| c),
             wall_time,
@@ -385,6 +425,11 @@ fn drive<D: Dispatcher>(
             return Ok(());
         }
         let events = sched.poll(true)?;
+        for r in sched.take_reports() {
+            if let Some((_, exp)) = runs.iter_mut().find(|(s, _)| *s == r.sub) {
+                exp.tracker.log_report(&r)?;
+            }
+        }
         for ev in events {
             match ev {
                 SchedEvent::Transition(t) => {
@@ -488,6 +533,17 @@ fn answer_worker(
             let alive = lease >= 0 && sched.heartbeat_lease(lease as u64);
             Ok(Json::obj(vec![("alive", Json::Bool(alive))]))
         }
+        WorkerVerb::Report { lease, step, score } => {
+            // a dead/unknown lease answers stop=true: the attempt was
+            // already re-queued elsewhere, so the reporter should kill
+            // its copy rather than waste the slot
+            let stop = if lease < 0 {
+                true
+            } else {
+                sched.report_lease(lease as u64, step, score).unwrap_or(true)
+            };
+            Ok(Json::obj(vec![("stop", Json::Bool(stop))]))
+        }
         WorkerVerb::Complete { lease, ok, score, error, elapsed } => {
             let outcome = if ok {
                 Ok(score.unwrap_or(f64::NAN))
@@ -570,6 +626,10 @@ pub fn run_batch_serve(
             // blocking wait
             let events = sched.poll(false)?;
             if events.is_empty() {
+                // journal reports before parking: a Continue verdict
+                // produces a report but no scheduler event, and live
+                // curves should land in the store as they stream in
+                journal_reports(&mut sched, &mut slots)?;
                 std::thread::sleep(std::time::Duration::from_millis(10));
                 continue;
             }
@@ -577,6 +637,7 @@ pub fn run_batch_serve(
         } else {
             sched.poll(true)?
         };
+        journal_reports(&mut sched, &mut slots)?;
         for ev in events {
             match ev {
                 SchedEvent::Transition(t) => {
@@ -596,6 +657,20 @@ pub fn run_batch_serve(
     slots.iter_mut().map(|(_, exp)| exp.finish(wall)).collect()
 }
 
+/// Journal the intermediate metric reports surfaced since the last
+/// drain, routed to the owning experiment's tracker.
+fn journal_reports(
+    sched: &mut Scheduler<ThreadDispatcher>,
+    slots: &mut [(SubId, Experiment)],
+) -> Result<()> {
+    for r in sched.take_reports() {
+        if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == r.sub) {
+            exp.tracker.log_report(&r)?;
+        }
+    }
+    Ok(())
+}
+
 /// Register one experiment with the live scheduler.
 fn admit(
     sched: &mut Scheduler<ThreadDispatcher>,
@@ -604,7 +679,34 @@ fn admit(
 ) {
     let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
     sched.dispatcher_mut().add_executor(sub, exp.executor.clone());
+    install_trial(sched, sub, &exp);
     slots.push((sub, exp));
+}
+
+/// Per-submission trial-scheduler hookup: the first experiment asking
+/// for a policy installs it on the shared scheduler (later requests for
+/// a DIFFERENT policy are refused with a warning — one batch, one
+/// stopping rule), and every submission registers its objective
+/// direction so reported scores are signed correctly.
+fn install_trial<D: Dispatcher>(sched: &mut Scheduler<D>, sub: SubId, exp: &Experiment) {
+    if let Some(name) = exp.trial.as_deref() {
+        match sched.trial_scheduler_name() {
+            None => {
+                if let Some(t) = crate::trial::by_name(name) {
+                    sched.set_trial_scheduler(t);
+                }
+            }
+            Some(active) if active != name => {
+                log_warn!(
+                    "experiment",
+                    "eid={}: trial scheduler '{name}' ignored, batch already uses '{active}'",
+                    exp.eid()
+                );
+            }
+            Some(_) => {}
+        }
+    }
+    sched.set_trial_maximize(sub, exp.cfg.maximize);
 }
 
 /// Build and admit a submitted experiment against the SHARED store
@@ -666,6 +768,7 @@ pub fn run_batch_sim(
         for (exp, sim) in exps.iter_mut().zip(sims) {
             let sub = sched.add_submission(exp.priority, exp.sched_cfg.clone());
             sched.dispatcher_mut().add_executor(sub, sim);
+            install_trial(&mut sched, sub, exp);
             runs.push((sub, exp));
         }
         drive(&mut runs, &mut sched)?;
@@ -917,5 +1020,58 @@ mod tests {
         // the 3-slot pool bounds global concurrency even though each
         // experiment alone would run 4 wide
         assert!(peak.load(Ordering::SeqCst) <= 3, "pool oversubscribed");
+    }
+
+    #[test]
+    fn sim_batch_with_median_stopping_journals_curves_and_stops() {
+        use crate::scheduler::{FnSimExecutor, SimOutcome};
+        use crate::store::schema;
+
+        // shared store server so the test can inspect the journal after
+        // the batch (run_batch_sim consumes the experiments)
+        let (handle, client) =
+            StoreServer::spawn(Store::in_memory(), ServerConfig::default()).unwrap();
+        let mut opts = ExperimentOptions::default();
+        opts.store_client = Some(client);
+        opts.trial_scheduler = Some("median".to_string());
+        let exp = Experiment::new(rosen_cfg("random", 6, 2), opts).unwrap();
+        let eid = exp.eid();
+
+        // minimize: even jobs hold a flat raw 1.0 curve, odd jobs a flat
+        // raw 5.0 one. Job 1 finishes before any reference exists; once
+        // jobs 0+1 complete, the later bad jobs (3, 5) trail the median
+        // at their first report and are stopped early.
+        let sim: Box<dyn SimExecutor> = Box::new(FnSimExecutor::new(|c, _| {
+            let raw = if c.job_id().unwrap() % 2 == 0 { 1.0 } else { 5.0 };
+            SimOutcome::ok(raw, 10.0)
+                .with_curve((1..=4).map(|s| (0.2 * s as f64, s, raw)).collect())
+        }));
+        let pool = Box::new(crate::resource::local::CpuManager::new(2));
+        let s = run_batch_sim(vec![exp], pool, vec![sim])
+            .unwrap()
+            .pop()
+            .unwrap();
+        assert_eq!(s.n_jobs, 6);
+        assert_eq!(s.n_failed, 0, "early stops must not count as failures");
+        assert_eq!(s.n_stopped, 2, "jobs 3 and 5 trail the median");
+        assert_eq!(s.best_score, Some(1.0));
+
+        let store = handle.shutdown().unwrap();
+        let jobs = schema::jobs_of(&store, eid).unwrap();
+        let stopped: Vec<_> = jobs
+            .iter()
+            .filter(|j| j.status == schema::JobStatus::StoppedEarly)
+            .collect();
+        assert_eq!(stopped.len(), 2);
+        assert!(stopped.iter().all(|j| j.score.is_none()));
+        assert_eq!(
+            jobs.iter().filter(|j| j.status == schema::JobStatus::Finished).count(),
+            4
+        );
+        // live curves were journaled as INTERMEDIATE events while running
+        let evs = schema::job_events_of(&store, eid).unwrap();
+        let curves = evs.iter().filter(|e| e.state == "INTERMEDIATE").count();
+        assert!(curves >= 8, "expected streamed curve points, got {curves}");
+        assert!(evs.iter().any(|e| e.state == "STOPPED_EARLY" && e.detail.contains("median")));
     }
 }

@@ -114,8 +114,31 @@ impl<C: StoreApi> Tracker<C> {
         )
     }
 
+    /// Journal one live `intermediate: <step> <score>` report into the
+    /// `job_event` journal (state `INTERMEDIATE`), so a job's learning
+    /// curve is queryable while it still runs. Reports are not
+    /// attempt-ending: no rid/busy stamp.
+    pub fn log_report(&mut self, r: &crate::scheduler::MetricReport) -> Result<()> {
+        self.client.log_job_event(
+            self.jid_of(r.job_id),
+            self.eid,
+            r.attempt as i64,
+            "INTERMEDIATE",
+            now(),
+            &format!("[t={:.3}] step {} score {}", r.at, r.step, r.score),
+            -1,
+            0.0,
+        )
+    }
+
     pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
         self.client.cancel_job(self.jid_of(job_id), now())
+    }
+
+    /// The trial scheduler killed the job mid-attempt (early stopping).
+    /// Distinct from cancellation in `job.status`; records no score.
+    pub fn job_stopped_early(&mut self, job_id: u64) -> Result<()> {
+        self.client.stop_job_early(self.jid_of(job_id), now())
     }
 
     pub fn job_finished(&mut self, job_id: u64, score: Option<f64>) -> Result<()> {
@@ -214,6 +237,37 @@ mod tests {
         // the scheduler-clock offset preserved in the detail
         assert!(evs[0].time > 1.0e9);
         assert!(evs[0].detail.starts_with("[t=3.000]"), "{}", evs[0].detail);
+    }
+
+    #[test]
+    fn intermediate_reports_and_early_stop_are_journaled() {
+        use crate::scheduler::MetricReport;
+        let (handle, client) = server();
+        let mut t = Tracker::new(client, "tester", &cfg()).unwrap();
+        let mut c = BasicConfig::new();
+        c.set_num("x", 0.1).set_num("job_id", 0.0);
+        t.job_submitted(0, &c).unwrap();
+        t.log_report(&MetricReport {
+            sub: 0,
+            job_id: 0,
+            attempt: 1,
+            step: 2,
+            score: 0.75,
+            at: 1.5,
+        })
+        .unwrap();
+        t.job_stopped_early(0).unwrap();
+        t.experiment_finished(None).unwrap();
+        let eid = t.eid();
+        drop(t);
+        let mut store = handle.shutdown().unwrap();
+        let jobs = schema::jobs_of(&mut store, eid).unwrap();
+        assert_eq!(jobs[0].status, schema::JobStatus::StoppedEarly);
+        assert_eq!(jobs[0].score, None, "a stopped trial records no score");
+        let evs = schema::job_events_of(&mut store, eid).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].state, "INTERMEDIATE");
+        assert!(evs[0].detail.contains("step 2 score 0.75"), "{}", evs[0].detail);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod nas;
 pub mod workload;
 pub mod resource;
 pub mod scheduler;
+pub mod trial;
 pub mod experiment;
 pub mod worker;
 pub mod runtime;
@@ -62,6 +63,7 @@ pub mod prelude {
     };
     pub use crate::search::{BasicConfig, ParamSpec, ParamType, SearchSpace};
     pub use crate::store::{ServerConfig, Store, StoreClient, StoreServer, StoreServerHandle};
+    pub use crate::trial::{TrialScheduler, Verdict};
     pub use crate::util::error::{AupError, Result};
     pub use crate::util::json::Json;
     pub use crate::util::rng::Rng;

@@ -12,6 +12,17 @@
 //! rung drains, the top 1/η configurations are promoted to the next rung
 //! with η× budget. While a rung is draining, `get_param()` returns
 //! [`ProposeResult::Wait`].
+//!
+//! Note: this proposer-side rung drain is a *synchronous* approximation
+//! of successive halving — a straggler stalls its whole rung. The
+//! [`crate::trial`] subsystem's async ASHA ([`crate::trial::AsyncAsha`],
+//! `--trial-scheduler asha`) supersedes it for workloads that stream
+//! `intermediate:` metrics: decisions happen per report against
+//! whatever has been observed at the rung, so nothing ever waits for a
+//! rung to fill, and the kill is mid-attempt rather than
+//! end-of-budget. The two compose (hyperband allocating budgets,
+//! the trial layer culling hopeless curves early), since the trial
+//! scheduler is a separate axis from the search algorithm.
 
 use std::collections::HashMap;
 

@@ -14,6 +14,7 @@
 //! * [`FnExecutor`] — arbitrary closures; the PJRT CNN trainer plugs in
 //!   through this (see `runtime::trainer`).
 
+use std::io::{BufRead, BufReader, Read};
 use std::path::PathBuf;
 use std::process::Command;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -127,6 +128,13 @@ pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
         if line.is_empty() {
             continue;
         }
+        // intermediate-metric protocol lines are NEVER a final result —
+        // a trailing `intermediate: <step> <score>` must not shadow the
+        // real `result:`/bare-float report (they stream through
+        // parse_intermediate instead)
+        if line.starts_with("intermediate:") {
+            continue;
+        }
         if let Some(rest) = line.strip_prefix("result:") {
             let rest = rest.trim();
             let (num_part, extra) = match rest.split_once(',') {
@@ -143,6 +151,22 @@ pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
         }
     }
     last
+}
+
+/// Parse one `intermediate: <step> <score>` protocol line — the live
+/// metric report a running job streams while it trains. Strict on
+/// purpose: exactly two tokens, integer step, *finite* score (a NaN
+/// partial metric carries no ranking information for a trial scheduler
+/// and would only poison the stopping rule).
+pub fn parse_intermediate(line: &str) -> Option<(i64, f64)> {
+    let rest = line.trim().strip_prefix("intermediate:")?;
+    let mut it = rest.split_whitespace();
+    let step = it.next()?.parse::<i64>().ok()?;
+    let score = it.next()?.parse::<f64>().ok()?;
+    if it.next().is_some() || !score.is_finite() {
+        return None;
+    }
+    Some((step, score))
 }
 
 impl Executor for ScriptExecutor {
@@ -178,30 +202,57 @@ impl Executor for ScriptExecutor {
             use std::os::unix::process::CommandExt;
             cmd.process_group(0);
         }
-        let child = cmd.spawn().map_err(|e| {
+        let mut child = cmd.spawn().map_err(|e| {
             AupError::Job(format!("failed to spawn {}: {e}", self.script.display()))
         })?;
         // group leader => pgid == child pid; register it so the
         // scheduler's abort path can kill the group
         env.cancel.register_pgid(child.id());
-        let out = child.wait_with_output().map_err(|e| {
+        // stdout is STREAMED line by line (not collected after exit):
+        // `intermediate: <step> <score>` lines reach the report sink the
+        // moment the job prints them, so a trial scheduler can stop a
+        // losing run mid-attempt. stderr drains on a side thread so a
+        // chatty script can't deadlock on a full pipe.
+        let stderr_pipe = child.stderr.take();
+        let stderr_thread = stderr_pipe.map(|mut p| {
+            std::thread::spawn(move || {
+                let mut buf = String::new();
+                let _ = p.read_to_string(&mut buf);
+                buf
+            })
+        });
+        let mut stdout = String::new();
+        if let Some(pipe) = child.stdout.take() {
+            for line in BufReader::new(pipe).lines() {
+                let Ok(line) = line else { break };
+                if let Some((step, score)) = parse_intermediate(&line) {
+                    if let Some(sink) = &env.report {
+                        sink.send(step, score);
+                    }
+                }
+                stdout.push_str(&line);
+                stdout.push('\n');
+            }
+        }
+        let status = child.wait().map_err(|e| {
             AupError::Job(format!("failed to collect {}: {e}", self.script.display()))
         });
         // the child is reaped: its pid may be recycled, so a late abort
         // must not SIGKILL whatever process group inherits that id
         env.cancel.clear_pgid();
-        let out = out?;
+        let status = status?;
+        let stderr = stderr_thread
+            .and_then(|t| t.join().ok())
+            .unwrap_or_default();
         if env.cancel.is_killed() {
             return Err(AupError::Job(
                 "killed by scheduler (timeout or cancel)".to_string(),
             ));
         }
-        let stdout = String::from_utf8_lossy(&out.stdout);
-        if !out.status.success() {
-            let stderr = String::from_utf8_lossy(&out.stderr);
+        if !status.success() {
             return Err(AupError::Job(format!(
                 "script exited with {}: {}",
-                out.status,
+                status,
                 stderr.lines().last().unwrap_or("")
             )));
         }
@@ -272,6 +323,46 @@ mod tests {
         let (v, extra) = parse_result("result: nan").unwrap();
         assert!(v.is_nan());
         assert_eq!(extra, None);
+    }
+
+    #[test]
+    fn parse_result_never_mistakes_intermediate_lines() {
+        // regression: a TRAILING intermediate report must not shadow the
+        // final result under last-matching-wins
+        assert_eq!(
+            parse_result("result: 0.5\nintermediate: 9 0.99"),
+            Some((0.5, None))
+        );
+        assert_eq!(parse_result("0.5\nintermediate: 9 0.99"), Some((0.5, None)));
+        // intermediate lines alone are NOT a result
+        assert_eq!(parse_result("intermediate: 1 0.1\nintermediate: 2 0.2"), None);
+        // interleaved stream: the one real result line wins
+        assert_eq!(
+            parse_result("intermediate: 1 0.1\nresult: 0.75\nintermediate: 2 0.2"),
+            Some((0.75, None))
+        );
+        // last-matching-wins ACROSS forms still holds around them
+        assert_eq!(
+            parse_result("result: 1\nintermediate: 5 0.9\n0.25"),
+            Some((0.25, None))
+        );
+    }
+
+    #[test]
+    fn parse_intermediate_forms() {
+        assert_eq!(parse_intermediate("intermediate: 3 0.5"), Some((3, 0.5)));
+        assert_eq!(parse_intermediate("  intermediate:   10   -1.25  "), Some((10, -1.25)));
+        assert_eq!(parse_intermediate("intermediate:1 0.5"), Some((1, 0.5)));
+        // not the protocol line
+        assert_eq!(parse_intermediate("result: 0.5"), None);
+        assert_eq!(parse_intermediate("training epoch 3"), None);
+        // malformed: missing score, non-integer step, trailing junk
+        assert_eq!(parse_intermediate("intermediate: 3"), None);
+        assert_eq!(parse_intermediate("intermediate: x 0.5"), None);
+        assert_eq!(parse_intermediate("intermediate: 3 0.5 extra"), None);
+        // non-finite partial metrics carry no ranking information
+        assert_eq!(parse_intermediate("intermediate: 3 nan"), None);
+        assert_eq!(parse_intermediate("intermediate: 3 inf"), None);
     }
 
     #[test]
@@ -351,6 +442,41 @@ mod tests {
             start.elapsed().as_secs_f64() < 10.0,
             "SIGKILL must cut the 30s sleep short"
         );
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn script_streams_intermediate_reports_before_it_finishes() {
+        use crate::resource::job::ReportSink;
+        use std::sync::{Arc, Mutex};
+        let dir = temp_dir("aup-exec-stream").unwrap();
+        // the script reports twice, WAITS for an ack file (proof the
+        // reports arrived while it was still running), then finishes
+        let script = write_script(
+            &dir,
+            "streamy.sh",
+            "#!/bin/sh\n\
+             echo \"intermediate: 1 0.25\"\n\
+             echo \"intermediate: 2 0.5\"\n\
+             i=0\n\
+             while [ ! -f ack ] && [ $i -lt 100 ]; do sleep 0.05; i=$((i+1)); done\n\
+             echo \"result: 0.75\"\n",
+        );
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        let mut e = env();
+        let got: Arc<Mutex<Vec<(i64, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let got2 = got.clone();
+        let ack = dir.join("ack");
+        e.report = Some(ReportSink::new(move |step, score| {
+            got2.lock().unwrap().push((step, score));
+            if got2.lock().unwrap().len() == 2 {
+                std::fs::write(&ack, b"go").unwrap();
+            }
+        }));
+        assert_eq!(ex.execute(&c, &e).unwrap(), 0.75);
+        assert_eq!(*got.lock().unwrap(), vec![(1, 0.25), (2, 0.5)]);
         std::fs::remove_dir_all(dir).unwrap();
     }
 

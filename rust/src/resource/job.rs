@@ -82,6 +82,29 @@ fn kill_process_group(pgid: u32) {
 #[cfg(not(unix))]
 fn kill_process_group(_pgid: u32) {}
 
+/// Where a running attempt's `intermediate: <step> <score>` lines go.
+/// Dispatchers install one per attempt (with the attempt id baked in);
+/// executors call [`ReportSink::send`] as lines stream in. Cloneable so
+/// the executor thread can hand it to a stdout reader.
+#[derive(Clone)]
+pub struct ReportSink(Arc<dyn Fn(i64, f64) + Send + Sync>);
+
+impl ReportSink {
+    pub fn new(f: impl Fn(i64, f64) + Send + Sync + 'static) -> ReportSink {
+        ReportSink(Arc::new(f))
+    }
+
+    pub fn send(&self, step: i64, score: f64) {
+        (self.0)(step, score)
+    }
+}
+
+impl std::fmt::Debug for ReportSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ReportSink")
+    }
+}
+
 /// Environment a job runs with (resource env vars + perf factor and
 /// cold-start latency for simulated resources + the attempt's kill
 /// switch).
@@ -95,6 +118,9 @@ pub struct JobEnv {
     /// per-attempt kill switch (see [`CancelToken`]); dispatchers insert
     /// a fresh token per attempt
     pub cancel: CancelToken,
+    /// intermediate-metric channel: executors stream parsed
+    /// `intermediate:` lines here (None = nobody is listening)
+    pub report: Option<ReportSink>,
 }
 
 impl JobEnv {
@@ -104,6 +130,7 @@ impl JobEnv {
             perf_factor: h.perf_factor,
             spawn_delay: h.spawn_delay,
             cancel: CancelToken::new(),
+            report: None,
         }
     }
 }

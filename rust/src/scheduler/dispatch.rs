@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::resource::executor::Executor;
-use crate::resource::job::{CancelToken, JobEnv};
+use crate::resource::job::{CancelToken, JobEnv, ReportSink};
 use crate::search::BasicConfig;
 use crate::util::sim::{Clock, EventQueue, SimClock, WallClock};
 
@@ -42,6 +42,10 @@ pub struct AttemptDone {
 pub enum DispatchPoll {
     /// An attempt finished.
     Event(AttemptDone),
+    /// A still-running attempt reported an intermediate metric
+    /// (`intermediate: <step> <score>` from the job's stdout, or a
+    /// scheduled point of a [`SimOutcome`] curve).
+    Report { attempt: AttemptId, step: i64, score: f64 },
     /// `wait_until` passed with no event — or, when waiting without a
     /// deadline, the dispatcher knows no event can ever arrive (sim mode
     /// with only hung attempts outstanding).
@@ -72,13 +76,20 @@ pub trait Dispatcher {
 // Thread mode
 // ---------------------------------------------------------------------------
 
+/// What the per-attempt threads send back: a completion, or a streamed
+/// intermediate metric from a still-running attempt.
+enum ThreadEvent {
+    Done(AttemptDone),
+    Report { attempt: AttemptId, step: i64, score: f64 },
+}
+
 /// Wall-clock dispatcher: one OS thread per in-flight attempt, exactly
 /// the paper's n_parallel execution model.
 pub struct ThreadDispatcher {
     clock: WallClock,
     executors: BTreeMap<SubId, Arc<dyn Executor>>,
-    tx: Sender<AttemptDone>,
-    rx: Receiver<AttemptDone>,
+    tx: Sender<ThreadEvent>,
+    rx: Receiver<ThreadEvent>,
     /// per-attempt kill switches: abort() SIGKILLs the attempt's
     /// subprocess group so its (still undeliverable) completion arrives
     /// promptly instead of pinning the slot for the job's natural length
@@ -128,23 +139,29 @@ impl Dispatcher for ThreadDispatcher {
         let token = CancelToken::new();
         env.cancel = token.clone();
         self.cancels.insert(attempt, token);
+        // intermediate lines stream straight into the event channel, so a
+        // blocked wait() wakes the moment a running job reports
+        let report_tx = self.tx.clone();
+        env.report = Some(ReportSink::new(move |step, score| {
+            let _ = report_tx.send(ThreadEvent::Report { attempt, step, score });
+        }));
         std::thread::spawn(move || {
             let start = std::time::Instant::now();
             let outcome = executor.execute(&config, &env).map_err(|e| e.to_string());
             // receiver gone => scheduler dropped; nothing to do
-            let _ = tx.send(AttemptDone {
+            let _ = tx.send(ThreadEvent::Done(AttemptDone {
                 attempt,
                 outcome,
                 elapsed: start.elapsed().as_secs_f64(),
-            });
+            }));
         });
     }
 
     fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
         let got = match wait_until {
             None => match self.rx.recv() {
-                Ok(ev) => DispatchPoll::Event(ev),
-                Err(_) => DispatchPoll::Idle,
+                Ok(ev) => ev,
+                Err(_) => return DispatchPoll::Idle,
             },
             Some(t) => {
                 // clamp: a non-finite or absurd deadline (job_timeout: inf
@@ -153,17 +170,22 @@ impl Dispatcher for ThreadDispatcher {
                 let secs = (t - self.clock.now()).max(0.0);
                 let secs = if secs.is_finite() { secs.min(86_400.0 * 365.0) } else { 86_400.0 * 365.0 };
                 match self.rx.recv_timeout(Duration::from_secs_f64(secs)) {
-                    Ok(ev) => DispatchPoll::Event(ev),
+                    Ok(ev) => ev,
                     Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                        DispatchPoll::Idle
+                        return DispatchPoll::Idle
                     }
                 }
             }
         };
-        if let DispatchPoll::Event(ev) = &got {
-            self.cancels.remove(&ev.attempt);
+        match got {
+            ThreadEvent::Done(ev) => {
+                self.cancels.remove(&ev.attempt);
+                DispatchPoll::Event(ev)
+            }
+            ThreadEvent::Report { attempt, step, score } => {
+                DispatchPoll::Report { attempt, step, score }
+            }
         }
-        got
     }
 
     fn abort(&mut self, attempt: AttemptId) -> bool {
@@ -191,19 +213,31 @@ impl Dispatcher for ThreadDispatcher {
 pub struct SimOutcome {
     pub result: Result<f64, String>,
     pub duration: f64,
+    /// intermediate reports the simulated job emits while it runs:
+    /// `(fraction-of-duration, step, score)` — each surfaces as a
+    /// [`DispatchPoll::Report`] at `spawn + duration * perf * fraction`
+    /// on the virtual clock (hangs emit none)
+    pub curve: Vec<(f64, i64, f64)>,
 }
 
 impl SimOutcome {
     pub fn ok(score: f64, duration: f64) -> SimOutcome {
-        SimOutcome { result: Ok(score), duration }
+        SimOutcome { result: Ok(score), duration, curve: Vec::new() }
     }
 
     pub fn fail(msg: impl Into<String>, duration: f64) -> SimOutcome {
-        SimOutcome { result: Err(msg.into()), duration }
+        SimOutcome { result: Err(msg.into()), duration, curve: Vec::new() }
     }
 
     pub fn hang() -> SimOutcome {
-        SimOutcome { result: Err("hung".into()), duration: f64::INFINITY }
+        SimOutcome { result: Err("hung".into()), duration: f64::INFINITY, curve: Vec::new() }
+    }
+
+    /// Attach an intermediate-report curve (fraction in `[0, 1)`, step,
+    /// score).
+    pub fn with_curve(mut self, curve: Vec<(f64, i64, f64)>) -> SimOutcome {
+        self.curve = curve;
+        self
     }
 }
 
@@ -231,11 +265,19 @@ impl SimExecutor for FnSimExecutor {
     }
 }
 
+/// A discrete event on the virtual clock: an attempt completion or an
+/// intermediate report from a still-running attempt.
+#[derive(Debug)]
+enum SimEvent {
+    Done(AttemptDone),
+    Report { attempt: AttemptId, step: i64, score: f64 },
+}
+
 /// Virtual-clock dispatcher: attempts are evaluated eagerly, completions
 /// are discrete events on the shared [`SimClock`]. Deterministic — event
 /// order is (time, schedule-order).
 pub struct SimDispatcher {
-    queue: EventQueue<AttemptDone>,
+    queue: EventQueue<SimEvent>,
     executors: BTreeMap<SubId, Box<dyn SimExecutor>>,
     /// attempts whose events must be swallowed (aborted) or never existed
     /// (hangs); both are reaped instantly in sim mode
@@ -290,9 +332,13 @@ impl Dispatcher for SimDispatcher {
         let spawn = env.spawn_delay.max(0.0);
         if out.duration.is_finite() {
             let duration = (out.duration * perf).max(0.0);
+            for &(frac, step, score) in &out.curve {
+                let at = spawn + duration * frac.clamp(0.0, 1.0);
+                self.queue.schedule_in(at, SimEvent::Report { attempt, step, score });
+            }
             self.queue.schedule_in(
                 spawn + duration,
-                AttemptDone { attempt, outcome: out.result, elapsed: duration },
+                SimEvent::Done(AttemptDone { attempt, outcome: out.result, elapsed: duration }),
             );
         } else {
             self.hung.insert(attempt);
@@ -301,26 +347,27 @@ impl Dispatcher for SimDispatcher {
 
     fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
         loop {
-            match wait_until {
-                Some(t) => match self.queue.next_before(t) {
-                    Some((_, ev)) => {
-                        if self.cancelled.remove(&ev.attempt) {
-                            continue;
-                        }
-                        return DispatchPoll::Event(ev);
+            let next = match wait_until {
+                Some(t) => self.queue.next_before(t),
+                None => self.queue.next(),
+            };
+            // no queued event (before the deadline): nothing can arrive
+            let Some((_, ev)) = next else { return DispatchPoll::Idle };
+            match ev {
+                SimEvent::Done(ev) => {
+                    if self.cancelled.remove(&ev.attempt) {
+                        continue;
                     }
-                    None => return DispatchPoll::Idle,
-                },
-                None => match self.queue.next() {
-                    Some((_, ev)) => {
-                        if self.cancelled.remove(&ev.attempt) {
-                            continue;
-                        }
-                        return DispatchPoll::Event(ev);
+                    return DispatchPoll::Event(ev);
+                }
+                SimEvent::Report { attempt, step, score } => {
+                    // aborted attempts keep their tombstone until the Done
+                    // event surfaces; their late reports are swallowed
+                    if self.cancelled.contains(&attempt) {
+                        continue;
                     }
-                    // nothing scheduled: no event can ever arrive
-                    None => return DispatchPoll::Idle,
-                },
+                    return DispatchPoll::Report { attempt, step, score };
+                }
             }
         }
     }
@@ -461,6 +508,81 @@ mod tests {
             "the killed attempt must complete promptly"
         );
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn sim_curve_reports_surface_at_virtual_times() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(
+            0,
+            Box::new(FnSimExecutor::new(|_, _| {
+                SimOutcome::ok(1.0, 10.0).with_curve(vec![(0.2, 1, 0.3), (0.6, 2, 0.7)])
+            })),
+        );
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        match d.wait(None) {
+            DispatchPoll::Report { attempt: 1, step: 1, score } => {
+                assert_eq!(score, 0.3);
+                assert_eq!(d.now(), 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Report { step: 2, .. } => assert_eq!(d.now(), 6.0),
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => {
+                assert_eq!(ev.outcome.unwrap(), 1.0);
+                assert_eq!(d.now(), 10.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sim_abort_swallows_pending_reports() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(
+            0,
+            Box::new(FnSimExecutor::new(|_, _| {
+                SimOutcome::ok(1.0, 10.0).with_curve(vec![(0.5, 1, 0.5)])
+            })),
+        );
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        d.dispatch(2, 0, &BasicConfig::new(), &env());
+        assert!(d.abort(1));
+        match d.wait(None) {
+            DispatchPoll::Report { attempt: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn thread_report_sink_wakes_wait() {
+        let mut d = ThreadDispatcher::new();
+        d.add_executor(
+            0,
+            Arc::new(FnExecutor::new("reporting", |_, env| {
+                if let Some(sink) = &env.report {
+                    sink.send(3, 0.25);
+                }
+                Ok(1.0)
+            })),
+        );
+        d.dispatch(9, 0, &BasicConfig::new(), &env());
+        match d.wait(None) {
+            DispatchPoll::Report { attempt: 9, step: 3, score } => assert_eq!(score, 0.25),
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 9),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

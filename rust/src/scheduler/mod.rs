@@ -14,7 +14,13 @@
 //! * per-attempt deadlines ([`SchedulerConfig::job_timeout`]);
 //! * bounded retries with exponential backoff
 //!   ([`SchedulerConfig::max_retries`], [`SchedulerConfig::retry_backoff`]);
-//! * cancellation of queued, backing-off or running jobs.
+//! * cancellation of queued, backing-off or running jobs;
+//! * live intermediate metrics: running attempts stream
+//!   `intermediate: <step> <score>` reports through the dispatcher, and
+//!   an optional [`crate::trial::TrialScheduler`] (median-stop / async
+//!   ASHA) can turn a trailing learning curve into a `STOPPED_EARLY`
+//!   verdict mid-attempt — a terminal state distinct from CANCELLED, so
+//!   aggregates can report compute saved.
 //!
 //! The hot path is EVENT-DRIVEN: backoff due-times and running-job
 //! deadlines live in two lazy min-heaps keyed by time, so one `poll`
@@ -42,9 +48,11 @@
 //!              ┌────────────(retry due)───────────┐
 //!              v                                  │
 //! submit -> QUEUED -(resource free)-> RUNNING -> BACKOFF   (attempt failed,
-//!              │                        │  │                retries left)
-//!              │                        │  └-> FAILED      (retries exhausted)
-//!              │                        └----> DONE        (finite score)
+//!              │                        │ │ │               retries left)
+//!              │                        │ │ └-> FAILED     (retries exhausted)
+//!              │                        │ └---> DONE       (finite score)
+//!              │                        └-> STOPPED_EARLY  (trial-scheduler
+//!              │                                            stop verdict)
 //!              └---------(cancel, any non-terminal state)-> CANCELLED
 //! ```
 
@@ -57,6 +65,7 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use crate::resource::job::JobEnv;
 use crate::resource::{ResourceHandle, ResourceManager};
 use crate::search::BasicConfig;
+use crate::trial::{TrialScheduler, Verdict};
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
@@ -122,7 +131,8 @@ impl SchedulerConfig {
     }
 }
 
-/// Job lifecycle states (terminal: Done / Failed / Cancelled).
+/// Job lifecycle states (terminal: Done / Failed / Cancelled /
+/// StoppedEarly).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
     Queued,
@@ -131,11 +141,18 @@ pub enum JobState {
     Done,
     Failed,
     Cancelled,
+    /// killed mid-attempt by the trial scheduler's stop verdict — unlike
+    /// Cancelled this is a *policy* decision, counted separately so the
+    /// saved compute is visible in `aup status`
+    StoppedEarly,
 }
 
 impl JobState {
     pub fn is_terminal(self) -> bool {
-        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled | JobState::StoppedEarly
+        )
     }
 
     pub fn name(self) -> &'static str {
@@ -146,6 +163,7 @@ impl JobState {
             JobState::Done => "DONE",
             JobState::Failed => "FAILED",
             JobState::Cancelled => "CANCELLED",
+            JobState::StoppedEarly => "STOPPED_EARLY",
         }
     }
 }
@@ -173,13 +191,30 @@ pub struct Transition {
     pub detail: String,
 }
 
+/// One intermediate metric observed from a running attempt (local
+/// stdout stream or a remote worker's `Report` frame). Drained via
+/// [`Scheduler::take_reports`] and journaled as `INTERMEDIATE` job
+/// events by the experiment layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricReport {
+    pub sub: SubId,
+    pub job_id: u64,
+    /// attempt number the report came from
+    pub attempt: u32,
+    pub step: i64,
+    /// raw (un-signed) score exactly as the job reported it
+    pub score: f64,
+    /// scheduler-clock timestamp
+    pub at: f64,
+}
+
 /// Terminal completion of a job, delivered exactly once.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub sub: SubId,
     pub job_id: u64,
     pub config: BasicConfig,
-    /// Done, Failed or Cancelled
+    /// Done, Failed, Cancelled or StoppedEarly
     pub state: JobState,
     /// Ok(score) iff state == Done
     pub outcome: Result<f64, String>,
@@ -437,6 +472,14 @@ pub struct Scheduler<D: Dispatcher> {
     active: usize,
     /// compact summaries of evicted terminal jobs
     completed: Vec<CompletedRecord>,
+    /// optional early-stopping policy fed every intermediate report
+    trial: Option<Box<dyn TrialScheduler>>,
+    /// submissions whose objective is higher-is-better; scores handed to
+    /// the trial scheduler are signed per submission so policies always
+    /// see higher-is-better (absent = minimize, the experiment default)
+    trial_maximize: BTreeSet<SubId>,
+    /// intermediate reports observed since the last `take_reports`
+    reports: Vec<MetricReport>,
     path: PollPath,
     out: Vec<SchedEvent>,
 }
@@ -465,6 +508,9 @@ impl<D: Dispatcher> Scheduler<D> {
             next_sub: 0,
             active: 0,
             completed: Vec::new(),
+            trial: None,
+            trial_maximize: BTreeSet::new(),
+            reports: Vec::new(),
             path: PollPath::Event,
             out: Vec::new(),
         }
@@ -708,6 +754,156 @@ impl<D: Dispatcher> Scheduler<D> {
         n
     }
 
+    // -- trial scheduling (early stopping) -----------------------------------
+
+    /// Install an early-stopping policy. Every intermediate report of
+    /// every submission is fed to it; a [`Verdict::Stop`] kills the
+    /// reporting attempt and completes the job as `STOPPED_EARLY`.
+    pub fn set_trial_scheduler(&mut self, t: Box<dyn TrialScheduler>) {
+        self.trial = Some(t);
+    }
+
+    /// Name of the installed policy, if any.
+    pub fn trial_scheduler_name(&self) -> Option<&'static str> {
+        self.trial.as_deref().map(|t| t.name())
+    }
+
+    /// Declare a submission's objective direction (default: minimize).
+    /// Trial schedulers always see higher-is-better scores; this sets
+    /// the sign applied per submission.
+    pub fn set_trial_maximize(&mut self, sub: SubId, maximize: bool) {
+        if maximize {
+            self.trial_maximize.insert(sub);
+        } else {
+            self.trial_maximize.remove(&sub);
+        }
+    }
+
+    /// Drain the intermediate reports observed since the last call (the
+    /// experiment layer journals them as `INTERMEDIATE` job events).
+    pub fn take_reports(&mut self) -> Vec<MetricReport> {
+        std::mem::take(&mut self.reports)
+    }
+
+    fn signed_score(&self, sub: SubId, score: f64) -> f64 {
+        if self.trial_maximize.contains(&sub) {
+            score
+        } else {
+            -score
+        }
+    }
+
+    /// Kill a RUNNING job on a trial-scheduler verdict and complete it
+    /// as `STOPPED_EARLY`. Mirrors [`Scheduler::cancel`]'s running arm:
+    /// the local attempt is aborted and its slot released (or parked as
+    /// a zombie until the thread dies); a leased attempt's lease is
+    /// removed, so a worker's late `Complete` is refused. Returns false
+    /// unless the job is currently Running.
+    pub fn stop_early(&mut self, sub: SubId, job_id: u64, detail: String) -> bool {
+        let key = (sub, job_id);
+        match self.jobs.get(&key) {
+            Some(j) if j.state == JobState::Running => {}
+            _ => return false,
+        }
+        let now = self.dispatcher.now();
+        let (attempt_id, handle, had_deadline, ran) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            let had_deadline = j.deadline.take().is_some();
+            let ran = (now - j.started_at).max(0.0);
+            // unlike cancel, the partial attempt's compute was really
+            // spent: charge it so saved-compute accounting stays honest
+            j.elapsed += ran;
+            (j.attempt_id.take(), j.handle.take(), had_deadline, ran)
+        };
+        if had_deadline {
+            self.deadlines.note_dead();
+        }
+        let mut ended: Option<(i64, f64)> = None;
+        if let Some(a) = attempt_id {
+            if self.leases.remove(&a).is_some() {
+                // leased to a remote worker: the stop verdict rides back
+                // on the Report reply; a late Complete for this lease is
+                // refused exactly like after a cancel
+            } else {
+                self.attempts.remove(&a);
+                let reaped = self.dispatcher.abort(a);
+                if let Some(h) = handle {
+                    ended = Some((h.rid, ran));
+                    if reaped {
+                        self.rm.release(&h);
+                    } else {
+                        self.zombies.insert(a, h);
+                    }
+                }
+            }
+        }
+        self.complete_job(key, JobState::StoppedEarly, Err(detail), now, ended);
+        true
+    }
+
+    /// A remote worker streamed one intermediate report for a leased
+    /// attempt. Returns `Some(stop)` for a live lease (`stop == true`
+    /// means the job was just stopped early and the worker must kill
+    /// it); `None` for an unknown or expired lease — the gateway then
+    /// tells the worker to stop anyway, since its lease is dead.
+    pub fn report_lease(&mut self, lease: AttemptId, step: i64, score: f64) -> Option<bool> {
+        let key = self.leases.get(&lease)?.key;
+        // a streamed report is as good as a heartbeat: extend the lease
+        // so a chatty job never expires just because metric traffic
+        // crowded out the worker's heartbeat cadence
+        self.heartbeat_lease(lease);
+        if !score.is_finite() {
+            return Some(false);
+        }
+        let now = self.dispatcher.now();
+        let attempts = self.jobs.get(&key).map_or(0, |j| j.attempts);
+        self.reports.push(MetricReport {
+            sub: key.0,
+            job_id: key.1,
+            attempt: attempts,
+            step,
+            score,
+            at: now,
+        });
+        let signed = self.signed_score(key.0, score);
+        let Some(t) = self.trial.as_mut() else { return Some(false) };
+        match t.on_report((u64::from(key.0), key.1), step, signed) {
+            Verdict::Continue => Some(false),
+            Verdict::Stop(why) => {
+                self.stop_early(key.0, key.1, why);
+                Some(true)
+            }
+        }
+    }
+
+    /// A local attempt streamed one intermediate report through the
+    /// dispatcher. Reports from attempts that already ended (aborted,
+    /// timed out, completed) are dropped.
+    fn on_report(&mut self, attempt: AttemptId, step: i64, score: f64) {
+        let Some(&key) = self.attempts.get(&attempt) else { return };
+        if !score.is_finite() {
+            return;
+        }
+        let now = self.dispatcher.now();
+        let attempts = self.jobs.get(&key).map_or(0, |j| j.attempts);
+        self.reports.push(MetricReport {
+            sub: key.0,
+            job_id: key.1,
+            attempt: attempts,
+            step,
+            score,
+            at: now,
+        });
+        let signed = self.signed_score(key.0, score);
+        let verdict = match self.trial.as_mut() {
+            Some(t) => t.on_report((u64::from(key.0), key.1), step, signed),
+            None => return,
+        };
+        if let Verdict::Stop(why) = verdict {
+            self.stop_early(key.0, key.1, why);
+        }
+    }
+
     // -- worker leases -------------------------------------------------------
 
     /// Set the heartbeat window granted to remote workers.
@@ -902,6 +1098,9 @@ impl<D: Dispatcher> Scheduler<D> {
             }
             match self.dispatcher.wait(wait_until) {
                 DispatchPoll::Event(ev) => self.on_attempt_done(ev),
+                DispatchPoll::Report { attempt, step, score } => {
+                    self.on_report(attempt, step, score)
+                }
                 DispatchPoll::Idle => {
                     if wait_until.is_some() {
                         self.expire_deadlines();
@@ -1316,6 +1515,15 @@ impl<D: Dispatcher> Scheduler<D> {
         now: f64,
         ended: Option<(i64, f64)>,
     ) {
+        if let Some(t) = self.trial.as_mut() {
+            let tkey = (u64::from(key.0), key.1);
+            if state == JobState::Done {
+                // finished curves become reference data for future verdicts
+                t.on_done(tkey);
+            } else {
+                t.on_discard(tkey);
+            }
+        }
         // event path: the job leaves the hot map for good (its config is
         // MOVED into the completion); the scan baseline keeps terminal
         // rows in place, reproducing the old O(lifetime) cost
@@ -2276,5 +2484,139 @@ mod tests {
             assert!(!s.complete_lease(lease, Ok(0.0), 0.0));
         }
         assert_eq!(s.pool_free(), 2, "leases never touched the local pool");
+    }
+
+    // -- trial scheduling (early stopping) ------------------------------
+
+    #[test]
+    fn median_stop_kills_a_trailing_sim_trial_mid_attempt() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.set_trial_scheduler(crate::trial::by_name("median").unwrap());
+        s.set_trial_maximize(sub, true);
+        s.dispatcher_mut().add_executor(
+            sub,
+            Box::new(FnSimExecutor::new(|c, _| {
+                let top = if c.job_id().unwrap() == 0 { 1.0 } else { 0.1 };
+                SimOutcome::ok(top, 10.0).with_curve(vec![(0.2, 1, top * 0.5), (0.6, 2, top)])
+            })),
+        );
+        s.submit(sub, job(0)).unwrap();
+        s.submit(sub, job(1)).unwrap();
+        let done = drain(&mut s);
+        assert_eq!(done.len(), 2);
+        let good = done.iter().find(|c| c.job_id == 0).unwrap();
+        assert_eq!(good.state, JobState::Done);
+        assert_eq!(good.outcome.clone().unwrap(), 1.0);
+        // job 1 died at its FIRST trailing report (2s into a 10s run),
+        // with a terminal state distinct from Cancelled
+        let bad = done.iter().find(|c| c.job_id == 1).unwrap();
+        assert_eq!(bad.state, JobState::StoppedEarly);
+        assert!(bad.outcome.clone().unwrap_err().contains("median-stop"));
+        assert!((bad.elapsed - 2.0).abs() < 1e-9, "elapsed {}", bad.elapsed);
+        assert_eq!(s.pool_free(), 1, "the stopped attempt freed its slot");
+        // all three reports surfaced for the journal (2 from job 0, the
+        // fatal one from job 1)
+        let reports = s.take_reports();
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.sub == sub));
+        assert!(s.take_reports().is_empty(), "take_reports drains");
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn early_stop_on_a_leased_report_invalidates_the_lease() {
+        // satellite of the worker protocol: a STOPPED_EARLY verdict on a
+        // leased job must revoke the lease, so the worker's late
+        // Complete is refused — mirrors cancel_revokes_a_leased_job
+        let (mut s, sub) = remote_only(2, SchedulerConfig::default());
+        s.set_trial_scheduler(crate::trial::by_name("median").unwrap());
+        s.set_trial_maximize(sub, true);
+        // job 0 completes with a healthy curve -> reference data
+        let lj0 = s.lease_next("rig-a").unwrap();
+        assert_eq!(s.report_lease(lj0.lease, 1, 0.9), Some(false));
+        assert!(s.complete_lease(lj0.lease, Ok(0.9), 1.0));
+        let _ = s.poll(false).unwrap();
+        // job 1 trails the median mid-attempt: the Report reply says stop
+        let lj1 = s.lease_next("rig-b").unwrap();
+        assert_eq!(s.report_lease(lj1.lease, 1, 0.1), Some(true));
+        assert_eq!(s.lease_count(), 0, "the stop verdict revoked the lease");
+        // the worker's late result is refused — STOPPED_EARLY is terminal
+        assert!(!s.complete_lease(lj1.lease, Ok(0.1), 1.0));
+        assert!(!s.heartbeat_lease(lj1.lease));
+        let evs = s.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Done(c) if c.job_id == 1 && c.state == JobState::StoppedEarly
+        )));
+        assert!(s.idle());
+        // a report on the dead lease is unknown: the gateway answers
+        // "stop" on its own
+        assert_eq!(s.report_lease(lj1.lease, 2, 0.2), None);
+        assert_eq!(s.take_reports().len(), 2);
+    }
+
+    #[test]
+    fn early_stopping_preserves_the_best_score_and_saves_compute() {
+        // The subsystem's core property, asserted against a no-stopping
+        // oracle on the same seed: with monotone non-crossing curves
+        // (better at step s => better at the end), neither median-stop
+        // nor async ASHA may change the best score found — only the
+        // compute spent, which must strictly decrease on a workload
+        // where a large fraction of trials are clear losers.
+        let run = |policy: Option<&str>| -> (f64, f64, usize) {
+            let mut s = SimScheduler::new(Box::new(CpuManager::new(4)), SimDispatcher::new());
+            let sub = s.add_submission(0, SchedulerConfig::default());
+            if let Some(p) = policy {
+                s.set_trial_scheduler(crate::trial::by_name(p).unwrap());
+                s.set_trial_maximize(sub, true);
+            }
+            let mut rng = crate::util::rng::Rng::new(0xA5A5);
+            let finals: Vec<f64> = (0..30).map(|_| rng.uniform()).collect();
+            s.dispatcher_mut().add_executor(
+                sub,
+                Box::new(FnSimExecutor::new(move |c, _| {
+                    let top = finals[c.job_id().unwrap() as usize];
+                    let curve: Vec<(f64, i64, f64)> = (1..=8)
+                        .map(|step| {
+                            let frac = step as f64 / 8.0;
+                            (frac * 0.9, step, top * frac)
+                        })
+                        .collect();
+                    SimOutcome::ok(top, 16.0).with_curve(curve)
+                })),
+            );
+            for id in 0..30 {
+                s.submit(sub, job(id)).unwrap();
+            }
+            let done = drain(&mut s);
+            assert_eq!(done.len(), 30, "every trial reaches a terminal state");
+            let best = done
+                .iter()
+                .filter(|c| c.state == JobState::Done)
+                .filter_map(|c| c.outcome.clone().ok())
+                .fold(f64::NEG_INFINITY, f64::max);
+            let busy: f64 = done.iter().map(|c| c.elapsed).sum();
+            let stopped = done
+                .iter()
+                .filter(|c| c.state == JobState::StoppedEarly)
+                .count();
+            (best, busy, stopped)
+        };
+        let (oracle_best, oracle_busy, oracle_stopped) = run(None);
+        assert_eq!(oracle_stopped, 0);
+        for policy in ["median", "asha"] {
+            let (best, busy, stopped) = run(Some(policy));
+            assert_eq!(
+                best.to_bits(),
+                oracle_best.to_bits(),
+                "{policy}: best must be bit-identical to the oracle"
+            );
+            assert!(stopped > 0, "{policy}: the losing trials must be stopped");
+            assert!(
+                busy < oracle_busy - 1e-9,
+                "{policy}: busy {busy} must be strictly below the oracle's {oracle_busy}"
+            );
+        }
     }
 }

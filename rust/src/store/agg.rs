@@ -41,8 +41,17 @@ pub struct ExperimentAggregate {
     pub finished: usize,
     pub failed: usize,
     pub cancelled: usize,
+    /// STOPPED_EARLY rows — killed mid-attempt by the trial scheduler
+    pub stopped: usize,
     /// BACKOFF rows of this eid in `job_event`
     pub retries: usize,
+    /// busy seconds / count of DONE attempt-ending journal rows — the
+    /// calibration for the compute-saved estimate
+    pub finished_busy: f64,
+    pub finished_n: usize,
+    /// busy seconds / count of STOPPED_EARLY attempt-ending journal rows
+    pub stopped_busy: f64,
+    pub stopped_n: usize,
     /// FINISHED job minimizing (score, jid) — the `target: min` best
     pub best_min: Option<(f64, i64)>,
     /// FINISHED job maximizing (score, jid) — the `target: max` best
@@ -59,6 +68,7 @@ impl ExperimentAggregate {
             Some("FINISHED") => apply(&mut self.finished),
             Some("FAILED") => apply(&mut self.failed),
             Some("CANCELLED") => apply(&mut self.cancelled),
+            Some("STOPPED_EARLY") => apply(&mut self.stopped),
             _ => {}
         }
     }
@@ -85,11 +95,57 @@ impl ExperimentAggregate {
         }
     }
 
-    /// Account one job_event row (retry bookkeeping).
-    pub fn add_event(&mut self, state: Option<&str>) {
+    /// Account one job_event row (retry bookkeeping + the busy totals
+    /// behind the compute-saved estimate). `busy` is the row's resource
+    /// occupancy; only attempt-ending transitions report one > 0.
+    pub fn add_event(&mut self, state: Option<&str>, busy: Option<f64>) {
         if state == Some("BACKOFF") {
             self.retries += 1;
         }
+        let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
+        match (state, busy) {
+            (Some("DONE"), Some(b)) => {
+                self.finished_busy += b;
+                self.finished_n += 1;
+            }
+            (Some("STOPPED_EARLY"), Some(b)) => {
+                self.stopped_busy += b;
+                self.stopped_n += 1;
+            }
+            _ => {}
+        }
+    }
+
+    /// Inverse of [`add_event`](Self::add_event) (fires only on manual
+    /// UPDATE/DELETE of journal rows — no schema path rewrites them).
+    fn retire_event(&mut self, state: Option<&str>, busy: Option<f64>) {
+        if state == Some("BACKOFF") {
+            self.retries = self.retries.saturating_sub(1);
+        }
+        let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
+        match (state, busy) {
+            (Some("DONE"), Some(b)) => {
+                self.finished_busy = (self.finished_busy - b).max(0.0);
+                self.finished_n = self.finished_n.saturating_sub(1);
+            }
+            (Some("STOPPED_EARLY"), Some(b)) => {
+                self.stopped_busy = (self.stopped_busy - b).max(0.0);
+                self.stopped_n = self.stopped_n.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+
+    /// Estimated compute saved by early stopping: what the stopped
+    /// attempts would have burned had each run to the mean busy time of
+    /// a finished attempt, minus what they actually burned. 0 until a
+    /// finished attempt calibrates the mean (or nothing was stopped).
+    pub fn saved_secs(&self) -> f64 {
+        if self.finished_n == 0 || self.stopped_n == 0 {
+            return 0.0;
+        }
+        let mean = self.finished_busy / self.finished_n as f64;
+        (mean * self.stopped_n as f64 - self.stopped_busy).max(0.0)
     }
 }
 
@@ -200,7 +256,7 @@ struct EventCols {
 #[derive(Debug)]
 pub(crate) enum Captured {
     Job { eid: Option<i64>, status: Option<String>, score: Option<f64>, jid: i64 },
-    Event { eid: Option<i64>, backoff: bool, rid: Option<i64>, busy: Option<f64> },
+    Event { eid: Option<i64>, state: Option<String>, rid: Option<i64>, busy: Option<f64> },
     None,
 }
 
@@ -286,7 +342,7 @@ impl Aggregates {
                 if let Some(row) = t.get(key) {
                     return Captured::Event {
                         eid: row.values[c.eid].as_i64(),
-                        backoff: row.values[c.state].as_str() == Some("BACKOFF"),
+                        state: row.values[c.state].as_str().map(str::to_string),
                         rid: c.rid.and_then(|i| row.values[i].as_i64()),
                         busy: c.busy.and_then(|i| opt_f64(&row.values[i])),
                     };
@@ -315,10 +371,10 @@ impl Aggregates {
                 named.get("time").and_then(opt_f64),
             );
             let Some(eid) = named.get("eid").and_then(Value::as_i64) else { return };
-            self.per_exp
-                .entry(eid)
-                .or_default()
-                .add_event(named.get("state").and_then(Value::as_str));
+            self.per_exp.entry(eid).or_default().add_event(
+                named.get("state").and_then(Value::as_str),
+                named.get("busy").and_then(opt_f64),
+            );
         }
     }
 
@@ -351,21 +407,22 @@ impl Aggregates {
                     }
                 }
             }
-            Captured::Event { eid, backoff, rid, busy } => {
+            Captured::Event { eid, state, rid, busy } => {
                 if let Some(eid) = eid {
-                    if backoff {
-                        let agg = self.per_exp.entry(eid).or_default();
-                        agg.retries = agg.retries.saturating_sub(1);
-                    }
+                    self.per_exp
+                        .entry(eid)
+                        .or_default()
+                        .retire_event(state.as_deref(), busy);
                 }
                 self.retire_util(rid, busy);
                 if let (Some(c), Some(t)) = (self.event_cols.as_ref().copied(), tables.get(name))
                 {
                     if let Some(row) = t.get(key) {
-                        if let (Some(eid), Some("BACKOFF")) =
-                            (row.values[c.eid].as_i64(), row.values[c.state].as_str())
-                        {
-                            self.per_exp.entry(eid).or_default().retries += 1;
+                        if let Some(eid) = row.values[c.eid].as_i64() {
+                            self.per_exp.entry(eid).or_default().add_event(
+                                row.values[c.state].as_str(),
+                                c.busy.and_then(|i| opt_f64(&row.values[i])),
+                            );
                         }
                         absorb_util(
                             &mut self.per_rid,
@@ -387,10 +444,12 @@ impl Aggregates {
         }
         match old {
             Captured::Job { .. } => self.retire_job(tables, old),
-            Captured::Event { eid, backoff, rid, busy } => {
-                if let (Some(eid), true) = (eid, backoff) {
-                    let agg = self.per_exp.entry(eid).or_default();
-                    agg.retries = agg.retries.saturating_sub(1);
+            Captured::Event { eid, state, rid, busy } => {
+                if let Some(eid) = eid {
+                    self.per_exp
+                        .entry(eid)
+                        .or_default()
+                        .retire_event(state.as_deref(), busy);
                 }
                 self.retire_util(rid, busy);
             }

@@ -55,6 +55,9 @@ pub trait StoreApi: Send {
     ) -> Result<()>;
     fn set_job_running(&self, jid: i64, rid: i64) -> Result<()>;
     fn cancel_job(&self, jid: i64, now: f64) -> Result<()>;
+    /// Trial scheduler killed the job mid-attempt (early stopping);
+    /// records no score, distinct from `cancel_job` in `job.status`.
+    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()>;
     fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()>;
     /// Journal one scheduler transition; `rid`/`busy` report resource
     /// occupancy of an attempt-ending transition (`-1, 0.0` otherwise).
@@ -181,6 +184,10 @@ impl StoreClient {
         self.send_cmd(StoreCmd::CancelJob { jid, now })
     }
 
+    pub fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
+        self.send_cmd(StoreCmd::StopJobEarly { jid, now })
+    }
+
     pub fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
         self.send_cmd(StoreCmd::FinishJob { jid, score, ok, now })
     }
@@ -301,6 +308,10 @@ impl StoreApi for StoreClient {
 
     fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
         StoreClient::cancel_job(self, jid, now)
+    }
+
+    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
+        StoreClient::stop_job_early(self, jid, now)
     }
 
     fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {

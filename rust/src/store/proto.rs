@@ -99,6 +99,9 @@ pub enum Request {
     StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
     SetJobRunning { jid: i64, rid: i64 },
     CancelJob { jid: i64, now: f64 },
+    /// The trial scheduler killed the job mid-attempt (early stopping).
+    /// Distinct from CancelJob so saved compute stays countable.
+    StopJobEarly { jid: i64, now: f64 },
     FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
     LogJobEvent {
         jid: i64,
@@ -122,6 +125,11 @@ pub enum Request {
     /// the lease deadline. Replies `{"alive": bool}` — false means the
     /// lease already expired and the worker must kill the job.
     Heartbeat { lease: i64 },
+    /// Worker fleet: stream one `intermediate: <step> <score>` line from
+    /// a leased attempt. Replies `{"stop": bool}` — true means the trial
+    /// scheduler issued a stop verdict (or the lease is dead) and the
+    /// worker must kill the job instead of completing it.
+    Report { lease: i64, step: i64, score: f64 },
     /// Worker fleet: report the outcome of a leased attempt. Replies
     /// `{"accepted": bool}` — false means the lease had already expired
     /// (the job was re-queued) and the result was discarded, preserving
@@ -210,6 +218,11 @@ impl Request {
                 ("jid", Json::int(*jid)),
                 ("now", Json::num(*now)),
             ]),
+            Request::StopJobEarly { jid, now } => Json::obj(vec![
+                ("cmd", Json::str("stop_job_early")),
+                ("jid", Json::int(*jid)),
+                ("now", Json::num(*now)),
+            ]),
             Request::FinishJob { jid, score, ok, now } => Json::obj(vec![
                 ("cmd", Json::str("finish_job")),
                 ("jid", Json::int(*jid)),
@@ -241,6 +254,12 @@ impl Request {
             Request::Heartbeat { lease } => Json::obj(vec![
                 ("cmd", Json::str("heartbeat")),
                 ("lease", Json::int(*lease)),
+            ]),
+            Request::Report { lease, step, score } => Json::obj(vec![
+                ("cmd", Json::str("report")),
+                ("lease", Json::int(*lease)),
+                ("step", Json::int(*step)),
+                ("score", Json::num(*score)),
             ]),
             Request::Complete { lease, ok, score, error, elapsed } => Json::obj(vec![
                 ("cmd", Json::str("complete")),
@@ -324,6 +343,9 @@ impl Request {
                 rid: i64_field("rid")?,
             },
             "cancel_job" => Request::CancelJob { jid: i64_field("jid")?, now: f64_field("now")? },
+            "stop_job_early" => {
+                Request::StopJobEarly { jid: i64_field("jid")?, now: f64_field("now")? }
+            }
             "finish_job" => Request::FinishJob {
                 jid: i64_field("jid")?,
                 score: opt_f64("score"),
@@ -346,6 +368,11 @@ impl Request {
             "checkpoint" => Request::Checkpoint,
             "lease" => Request::Lease { worker: str_field("worker")? },
             "heartbeat" => Request::Heartbeat { lease: i64_field("lease")? },
+            "report" => Request::Report {
+                lease: i64_field("lease")?,
+                step: i64_field("step")?,
+                score: f64_field("score")?,
+            },
             "complete" => Request::Complete {
                 lease: i64_field("lease")?,
                 ok: j.get("job_ok").and_then(Json::as_bool).unwrap_or(false),
@@ -578,7 +605,9 @@ pub fn status_to_json(s: &ExperimentStatus) -> Json {
         ("finished", Json::int(s.finished as i64)),
         ("failed", Json::int(s.failed as i64)),
         ("cancelled", Json::int(s.cancelled as i64)),
+        ("stopped", Json::int(s.stopped as i64)),
         ("retries", Json::int(s.retries as i64)),
+        ("saved_secs", Json::num(s.saved_secs)),
         ("best_score", opt_num(s.best_score)),
         ("best_jid", s.best_jid.map_or(Json::Null, Json::int)),
     ])
@@ -599,7 +628,11 @@ pub fn status_from_json(j: &Json) -> Result<ExperimentStatus> {
         finished: count("finished")?,
         failed: count("failed")?,
         cancelled: count("cancelled")?,
+        // optional on the wire: a peer from before early stopping simply
+        // reports nothing stopped and nothing saved
+        stopped: j.get("stopped").and_then(Json::as_i64).unwrap_or(0).max(0) as usize,
         retries: count("retries")?,
+        saved_secs: j.get("saved_secs").and_then(Json::as_f64).unwrap_or(0.0),
         best_score: get_opt_f64(j, "best_score"),
         best_jid: get_opt_i64(j, "best_jid"),
     })
@@ -713,6 +746,28 @@ mod tests {
     }
 
     #[test]
+    fn truncated_length_prefix_is_an_error_not_eof() {
+        // EOF after 1-3 of the 4 length bytes is a torn frame, not a
+        // clean close on a boundary
+        for n in 1..4 {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, "hello").unwrap();
+            buf.truncate(n);
+            let mut r = std::io::Cursor::new(buf);
+            assert!(read_frame(&mut r).is_err(), "{n}-byte length prefix must error");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocation() {
+        // one byte over the cap: rejected from the prefix alone, before
+        // any payload buffer is allocated
+        let mut r = std::io::Cursor::new((MAX_FRAME as u32 + 1).to_be_bytes().to_vec());
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
     fn absurd_length_prefix_rejected() {
         // an HTTP GET line read as a length prefix must not trigger a
         // gigabyte allocation
@@ -749,6 +804,7 @@ mod tests {
             Request::StartJobRunning { jid: 1, eid: 0, rid: 4, config: "{}".into(), now: 0.5 },
             Request::SetJobRunning { jid: 1, rid: 2 },
             Request::CancelJob { jid: 1, now: 3.0 },
+            Request::StopJobEarly { jid: 1, now: 3.5 },
             Request::FinishJob { jid: 1, score: Some(0.25), ok: true, now: 4.0 },
             Request::FinishJob { jid: 1, score: None, ok: false, now: 4.0 },
             Request::LogJobEvent {
@@ -765,6 +821,7 @@ mod tests {
             Request::Checkpoint,
             Request::Lease { worker: "rig-7".into() },
             Request::Heartbeat { lease: 42 },
+            Request::Report { lease: 42, step: 3, score: 0.875 },
             Request::Complete {
                 lease: 42,
                 ok: true,
@@ -852,11 +909,21 @@ mod tests {
             finished: 3,
             failed: 1,
             cancelled: 0,
+            stopped: 2,
             retries: 2,
+            saved_secs: 12.5,
             best_score: Some(0.125),
             best_jid: Some(2),
         };
         assert_eq!(status_from_json(&status_to_json(&st)).unwrap(), st);
+        // a status from before early stopping parses with zero defaults
+        let mut legacy_st = status_to_json(&st);
+        if let Json::Obj(fields) = &mut legacy_st {
+            fields.remove("stopped");
+            fields.remove("saved_secs");
+        }
+        let parsed = status_from_json(&legacy_st).unwrap();
+        assert_eq!((parsed.stopped, parsed.saved_secs), (0, 0.0));
         let ws = Some(WalStats { appends: 3, records: 40, checkpoints: 1 });
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&ws)).unwrap(), ws);
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&None)).unwrap(), None);

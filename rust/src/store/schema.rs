@@ -28,6 +28,9 @@ pub enum JobStatus {
     Finished,
     Failed,
     Cancelled,
+    /// killed mid-attempt by the trial scheduler (early stopping) —
+    /// distinct from Cancelled so saved compute stays countable
+    StoppedEarly,
 }
 
 impl JobStatus {
@@ -38,6 +41,7 @@ impl JobStatus {
             JobStatus::Finished => "FINISHED",
             JobStatus::Failed => "FAILED",
             JobStatus::Cancelled => "CANCELLED",
+            JobStatus::StoppedEarly => "STOPPED_EARLY",
         }
     }
 
@@ -48,13 +52,20 @@ impl JobStatus {
             "FINISHED" => Ok(JobStatus::Finished),
             "FAILED" => Ok(JobStatus::Failed),
             "CANCELLED" => Ok(JobStatus::Cancelled),
+            "STOPPED_EARLY" => Ok(JobStatus::StoppedEarly),
             other => Err(AupError::Store(format!("unknown job status '{other}'"))),
         }
     }
 
     /// Terminal states: no further transition is legal.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobStatus::Finished | JobStatus::Failed | JobStatus::Cancelled)
+        matches!(
+            self,
+            JobStatus::Finished
+                | JobStatus::Failed
+                | JobStatus::Cancelled
+                | JobStatus::StoppedEarly
+        )
     }
 }
 
@@ -303,6 +314,16 @@ pub fn set_job_running(store: &mut Store, jid: i64, rid: i64) -> Result<()> {
 pub fn cancel_job(store: &mut Store, jid: i64, now: f64) -> Result<()> {
     store.execute(&format!(
         "UPDATE job SET status = 'CANCELLED', end_time = {now} WHERE jid = {jid}"
+    ))?;
+    Ok(())
+}
+
+/// The trial scheduler killed the job mid-attempt (early stopping).
+/// Deliberately records NO score: a stopped trial's partial curve must
+/// never compete with finished jobs for `best_job`.
+pub fn stop_job_early(store: &mut Store, jid: i64, now: f64) -> Result<()> {
+    store.execute(&format!(
+        "UPDATE job SET status = 'STOPPED_EARLY', end_time = {now} WHERE jid = {jid}"
     ))?;
     Ok(())
 }
@@ -745,6 +766,25 @@ mod tests {
         assert_eq!(jobs[0].status, JobStatus::Cancelled);
         assert!(jobs[0].status.is_terminal());
         assert_eq!(jobs[0].end_time, Some(2.0));
+    }
+
+    #[test]
+    fn stopped_early_is_terminal_and_never_best() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        start_job(&mut s, 0, 0, 0, "{}", 0.0).unwrap();
+        finish_job(&mut s, 0, Some(0.5), true, 1.0).unwrap();
+        start_job(&mut s, 1, 0, 0, "{}", 0.0).unwrap();
+        stop_job_early(&mut s, 1, 2.0).unwrap();
+        let jobs = jobs_of(&mut s, 0).unwrap();
+        assert_eq!(jobs[1].status, JobStatus::StoppedEarly);
+        assert!(jobs[1].status.is_terminal());
+        assert_eq!(jobs[1].end_time, Some(2.0));
+        assert_eq!(jobs[1].score, None, "stopped trials record no score");
+        // best_job only considers FINISHED rows in either direction
+        assert_eq!(best_job(&mut s, 0, true).unwrap().unwrap().jid, 0);
+        assert_eq!(best_job(&mut s, 0, false).unwrap().unwrap().jid, 0);
+        assert_eq!(JobStatus::parse("STOPPED_EARLY").unwrap(), JobStatus::StoppedEarly);
     }
 
     #[test]

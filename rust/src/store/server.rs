@@ -61,6 +61,9 @@ pub enum StoreCmd {
     StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
     SetJobRunning { jid: i64, rid: i64 },
     CancelJob { jid: i64, now: f64 },
+    /// Trial scheduler killed the job mid-attempt (early stopping).
+    /// Distinct from CancelJob so the aggregates can count saved compute.
+    StopJobEarly { jid: i64, now: f64 },
     FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
     /// One scheduler transition into the `job_event` journal. `rid` /
     /// `busy` report the resource occupancy of an attempt-ending
@@ -300,6 +303,9 @@ impl StoreServer {
             }
             StoreCmd::CancelJob { jid, now } => {
                 self.mutate(|s| schema::cancel_job(s, jid, now));
+            }
+            StoreCmd::StopJobEarly { jid, now } => {
+                self.mutate(|s| schema::stop_job_early(s, jid, now));
             }
             StoreCmd::FinishJob { jid, score, ok, now } => {
                 self.mutate(|s| schema::finish_job(s, jid, score, ok, now));

@@ -86,6 +86,9 @@ pub enum WorkerVerb {
     Lease { worker: String },
     /// extend a live lease; reply `{"alive": bool}`
     Heartbeat { lease: i64 },
+    /// stream one intermediate metric from a leased attempt; reply
+    /// `{"stop": bool}` — true tells the worker to kill the job
+    Report { lease: i64, step: i64, score: f64 },
     /// report a leased attempt's outcome; reply `{"accepted": bool}`
     Complete {
         lease: i64,
@@ -384,7 +387,10 @@ fn handle_request(
             )),
             Some(handler) => (handler.as_ref())(SubmitRequest { config, user }),
         },
-        Request::Lease { .. } | Request::Heartbeat { .. } | Request::Complete { .. } => {
+        Request::Lease { .. }
+        | Request::Heartbeat { .. }
+        | Request::Report { .. }
+        | Request::Complete { .. } => {
             match &hooks.worker {
                 None => Err(AupError::Store(
                     "this store service has no worker gateway \
@@ -395,6 +401,9 @@ fn handle_request(
                     let verb = match req {
                         Request::Lease { worker } => WorkerVerb::Lease { worker },
                         Request::Heartbeat { lease } => WorkerVerb::Heartbeat { lease },
+                        Request::Report { lease, step, score } => {
+                            WorkerVerb::Report { lease, step, score }
+                        }
                         Request::Complete { lease, ok, score, error, elapsed } => {
                             WorkerVerb::Complete { lease, ok, score, error, elapsed }
                         }
@@ -420,6 +429,9 @@ fn handle_request(
             client.set_job_running(jid, rid).map(|()| Json::Null)
         }
         Request::CancelJob { jid, now } => client.cancel_job(jid, now).map(|()| Json::Null),
+        Request::StopJobEarly { jid, now } => {
+            client.stop_job_early(jid, now).map(|()| Json::Null)
+        }
         Request::FinishJob { jid, score, ok, now } => {
             client.finish_job(jid, score, ok, now).map(|()| Json::Null)
         }
@@ -596,6 +608,14 @@ impl RemoteStoreClient {
         Ok(v.get("alive").and_then(Json::as_bool).unwrap_or(false))
     }
 
+    /// Stream one `intermediate: <step> <score>` report from the leased
+    /// attempt. `true` = the trial scheduler issued a stop verdict (or
+    /// the lease is dead): kill the job instead of completing it.
+    pub fn report(&self, lease: i64, step: i64, score: f64) -> Result<bool> {
+        let v = self.request(Request::Report { lease, step, score })?;
+        Ok(v.get("stop").and_then(Json::as_bool).unwrap_or(false))
+    }
+
     /// Report a leased attempt's outcome. `false` = the lease had
     /// already expired and the result was discarded.
     pub fn complete(
@@ -671,6 +691,10 @@ impl StoreApi for RemoteStoreClient {
 
     fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
         self.request_unit(Request::CancelJob { jid, now })
+    }
+
+    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
+        self.request_unit(Request::StopJobEarly { jid, now })
     }
 
     fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
@@ -1038,6 +1062,10 @@ mod tests {
             WorkerVerb::Heartbeat { lease } => {
                 Ok(Json::obj(vec![("alive", Json::Bool(lease == 5))]))
             }
+            WorkerVerb::Report { lease, step, score } => {
+                assert_eq!((step, score), (3, 0.25));
+                Ok(Json::obj(vec![("stop", Json::Bool(lease != 5))]))
+            }
             WorkerVerb::Complete { lease, ok, score, .. } => {
                 assert!(ok);
                 assert_eq!(score, Some(0.5));
@@ -1051,7 +1079,54 @@ mod tests {
         assert_eq!((offer.lease, offer.job_id, offer.jid), (5, 2, 9));
         assert!(remote.heartbeat(5).unwrap());
         assert!(!remote.heartbeat(6).unwrap(), "stale lease reports dead");
+        assert!(!remote.report(5, 3, 0.25).unwrap(), "live lease keeps running");
+        assert!(remote.report(6, 3, 0.25).unwrap(), "dead lease tells the worker to stop");
         assert!(remote.complete(5, true, Some(0.5), None, 1.5).unwrap());
+        drop((remote, service, client));
+        handle.shutdown().unwrap();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_frames_get_one_clean_error_never_a_wedged_handler() {
+        let dir = temp_dir("aup-svc-mal").unwrap();
+        let (handle, client, service, sock) = spawn_served(&dir);
+        // invalid JSON in a well-formed frame: one error reply per
+        // request, and the SAME connection keeps answering
+        {
+            let mut s = UnixStream::connect(&sock).unwrap();
+            proto::write_frame(&mut s, "{not json").unwrap();
+            let reply = proto::read_frame(&mut s).unwrap().expect("an error reply");
+            assert!(proto::parse_reply(&Json::parse(&reply).unwrap()).is_err());
+            proto::write_frame(&mut s, r#"{"cmd":"no_such_cmd"}"#).unwrap();
+            let reply = proto::read_frame(&mut s).unwrap().expect("an error reply");
+            let err = proto::parse_reply(&Json::parse(&reply).unwrap()).unwrap_err();
+            assert!(err.to_string().contains("no_such_cmd"), "{err}");
+            proto::write_frame(&mut s, r#"{"cmd":"ping"}"#).unwrap();
+            let reply = proto::read_frame(&mut s).unwrap().expect("a pong");
+            let v = proto::parse_reply(&Json::parse(&reply).unwrap()).unwrap();
+            assert_eq!(v.as_str(), Some("pong"), "connection survived the garbage");
+        }
+        // an oversized length prefix: the handler closes the connection
+        // (no reply, no panic) and the service keeps accepting
+        {
+            let mut s = UnixStream::connect(&sock).unwrap();
+            s.write_all(&u32::MAX.to_be_bytes()).unwrap();
+            s.flush().unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            assert!(buf.is_empty(), "garbage prefix gets a close, not a reply");
+        }
+        // a torn frame (length promises more bytes than ever arrive)
+        {
+            let mut s = UnixStream::connect(&sock).unwrap();
+            s.write_all(&8u32.to_be_bytes()).unwrap();
+            s.write_all(b"abc").unwrap();
+            s.flush().unwrap();
+        }
+        // the service is still healthy for the next client
+        let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
+        remote.ping().unwrap();
         drop((remote, service, client));
         handle.shutdown().unwrap();
         std::fs::remove_dir_all(dir).unwrap();

@@ -46,8 +46,14 @@ pub struct ExperimentStatus {
     pub finished: usize,
     pub failed: usize,
     pub cancelled: usize,
+    /// jobs the trial scheduler killed mid-attempt (STOPPED_EARLY) —
+    /// distinct from cancelled so early stopping stays visible
+    pub stopped: usize,
     /// retry attempts recorded in the `job_event` journal (BACKOFF rows)
     pub retries: usize,
+    /// estimated compute seconds early stopping saved (mean finished
+    /// attempt cost × stopped attempts − what they actually burned)
+    pub saved_secs: f64,
     pub best_score: Option<f64>,
     pub best_jid: Option<i64>,
 }
@@ -124,7 +130,9 @@ fn assemble(
         finished: a.finished,
         failed: a.failed,
         cancelled: a.cancelled,
+        stopped: a.stopped,
         retries: a.retries,
+        saved_secs: a.saved_secs(),
         best_score: exp.best_score.or(best.map(|(s, _)| s)),
         best_jid: best.map(|(_, j)| j),
     }
@@ -181,10 +189,10 @@ pub fn experiment_statuses_scan(store: &Store) -> Result<Vec<ExperimentStatus>> 
         let c = EventCols::resolve(t.schema())?;
         for row in t.rows() {
             let Some(eid) = row.values[c.eid].as_i64() else { continue };
-            per_exp
-                .entry(eid)
-                .or_default()
-                .add_event(row.values[c.state].as_str());
+            per_exp.entry(eid).or_default().add_event(
+                row.values[c.state].as_str(),
+                c.busy.and_then(|i| schema::opt_f64(&row.values[i])),
+            );
         }
     }
     let empty = ExperimentAggregate::default();
@@ -289,13 +297,13 @@ fn fmt_score(s: Option<f64>) -> String {
 pub fn render_status(statuses: &[ExperimentStatus]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>7} {:>14} {:<8}\n",
-        "eid", "user", "proposer", "jobs", "pend", "run", "done", "fail", "canc", "retries",
-        "best", "state"
+        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>8} {:>14} {:<8}\n",
+        "eid", "user", "proposer", "jobs", "pend", "run", "done", "fail", "canc", "stop",
+        "retries", "saved_s", "best", "state"
     ));
     for s in statuses {
         out.push_str(&format!(
-            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>7} {:>14} {:<8}\n",
+            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>8.1} {:>14} {:<8}\n",
             s.eid,
             truncate(&s.user, 10),
             truncate(&s.proposer, 10),
@@ -305,7 +313,9 @@ pub fn render_status(statuses: &[ExperimentStatus]) -> String {
             s.finished,
             s.failed,
             s.cancelled,
+            s.stopped,
             s.retries,
+            s.saved_secs,
             fmt_score(s.best_score),
             if s.done() { "done" } else { "running" },
         ));
@@ -499,6 +509,34 @@ mod tests {
         assert_eq!(fast[1].rid, 1);
         assert!((fast[1].busy_secs - 4.0).abs() < 1e-9);
         assert_eq!(fast[1].saturation(), 0.0, "single report: empty window");
+    }
+
+    #[test]
+    fn stopped_early_surfaces_in_status_with_saved_compute() {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        let uid = schema::add_user(&mut s, "alice").unwrap();
+        let e =
+            schema::start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0).unwrap();
+        // one finished job calibrates the mean attempt cost (10s busy)...
+        schema::start_job_queued(&mut s, 0, e, "{}", 0.0).unwrap();
+        schema::finish_job(&mut s, 0, Some(0.5), true, 10.0).unwrap();
+        schema::log_job_event(&mut s, 0, e, 1, "DONE", 10.0, "score 0.5", 0, 10.0).unwrap();
+        // ...and the trial scheduler stopped one after only 2s
+        schema::start_job_queued(&mut s, 1, e, "{}", 0.0).unwrap();
+        schema::stop_job_early(&mut s, 1, 2.0).unwrap();
+        schema::log_job_event(&mut s, 1, e, 1, "STOPPED_EARLY", 2.0, "median-stop", 0, 2.0)
+            .unwrap();
+        let fast = experiment_statuses(&s).unwrap();
+        let slow = experiment_statuses_scan(&s).unwrap();
+        assert_eq!(fast, slow, "materialized stopped/saved diverged from the scan");
+        let st = &fast[0];
+        assert_eq!((st.finished, st.stopped, st.cancelled), (1, 1, 0));
+        assert!((st.saved_secs - 8.0).abs() < 1e-9, "10s mean - 2s burned: {}", st.saved_secs);
+        assert_eq!(st.best_jid, Some(0), "stopped job never competes for best");
+        let txt = render_status(&fast);
+        assert!(txt.contains("stop"), "{txt}");
+        assert!(txt.contains("8.0"), "{txt}");
     }
 
     #[test]

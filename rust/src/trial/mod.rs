@@ -1,0 +1,483 @@
+//! Trial schedulers: early-stopping policies driven by *intermediate*
+//! metric reports (Tune, Liaw et al. 2018 — the insight reproduced here
+//! is that the trial scheduler is a separate axis from the search
+//! algorithm: any proposer composes with any stopping rule).
+//!
+//! Running jobs emit `intermediate: <step> <score>` lines; the
+//! scheduler feeds every report to the configured [`TrialScheduler`]
+//! and kills the attempt on a [`Verdict::Stop`] — a terminal state
+//! (`STOPPED_EARLY`) distinct from cancellation, so aggregates can
+//! report compute saved.
+//!
+//! Scores handed to a trial scheduler are **normalized so higher is
+//! better** (the job scheduler signs them per submission); every
+//! implementation here assumes that.
+//!
+//! Both built-in policies make their per-report decision in O(log n)
+//! via [`QuantileSet`] (a two-heap running order statistic), so the
+//! report-ingest path stays flat in lifetime trial count — gated by
+//! `benches/sched_throughput.rs` (`trial_flat_ratio`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap, HashMap};
+
+/// (submission id, job id) — trials are grouped per submission, so
+/// curves from different experiments (different objectives!) are never
+/// compared against each other.
+pub type TrialKey = (u64, u64);
+
+/// The decision a trial scheduler returns for one intermediate report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Let the trial keep running.
+    Continue,
+    /// Kill the trial now; the string is the human-readable reason that
+    /// lands in the `STOPPED_EARLY` transition detail.
+    Stop(String),
+}
+
+/// An early-stopping policy fed from the scheduler poll loop.
+///
+/// Implementations must be cheap per call: `on_report` sits on the
+/// report-ingest hot path and is benchmarked to stay flat in lifetime
+/// trial count.
+pub trait TrialScheduler: Send {
+    /// A running trial reported `(step, score)`. Score is normalized so
+    /// higher is better.
+    fn on_report(&mut self, key: TrialKey, step: i64, score: f64) -> Verdict;
+
+    /// The trial finished normally (reached its own end). Its curve
+    /// becomes reference data for future decisions.
+    fn on_done(&mut self, key: TrialKey);
+
+    /// The trial left the system without finishing (stopped early,
+    /// failed, cancelled): drop any live state, do NOT fold its curve
+    /// into the reference set.
+    fn on_discard(&mut self, key: TrialKey);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Construct a named policy with its defaults — the `--trial-scheduler`
+/// CLI flag resolves through this.
+pub fn by_name(name: &str) -> Option<Box<dyn TrialScheduler>> {
+    match name {
+        "median" => Some(Box::new(MedianStopping::default())),
+        "asha" => Some(Box::new(AsyncAsha::default())),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// running order statistic
+
+/// f64 with a total order (NaN sorts, never panics).
+#[derive(Clone, Copy, PartialEq)]
+struct F(f64);
+impl Eq for F {}
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Two-heap running top-`1/eta` tracker: `top` is a min-heap holding
+/// the best `ceil(n / eta)` scores seen, `rest` a max-heap with the
+/// remainder. Insert and threshold are O(log n); the threshold is the
+/// smallest score still inside the top segment (for `eta == 2` that is
+/// the upper median).
+pub struct QuantileSet {
+    eta: usize,
+    top: BinaryHeap<Reverse<F>>,
+    rest: BinaryHeap<F>,
+}
+
+impl QuantileSet {
+    pub fn new(eta: usize) -> QuantileSet {
+        QuantileSet {
+            eta: eta.max(2),
+            top: BinaryHeap::new(),
+            rest: BinaryHeap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.top.len() + self.rest.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn insert(&mut self, s: f64) {
+        match self.top.peek() {
+            Some(&Reverse(t)) if s < t.0 => self.rest.push(F(s)),
+            _ => self.top.push(Reverse(F(s))),
+        }
+        let want = {
+            let n = self.len();
+            ((n + self.eta - 1) / self.eta).max(1)
+        };
+        while self.top.len() > want {
+            if let Some(Reverse(v)) = self.top.pop() {
+                self.rest.push(v);
+            }
+        }
+        while self.top.len() < want {
+            match self.rest.pop() {
+                Some(v) => self.top.push(Reverse(v)),
+                None => break,
+            }
+        }
+    }
+
+    /// Smallest score still inside the top `1/eta` segment.
+    pub fn threshold(&self) -> Option<f64> {
+        self.top.peek().map(|&Reverse(t)| t.0)
+    }
+
+    /// Would `s` sit inside the top segment? (Ties survive.)
+    pub fn in_top(&self, s: f64) -> bool {
+        self.threshold().map_or(true, |t| s >= t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// median stopping
+
+/// Median-stopping rule: kill a trial whose best-so-far at step `s`
+/// trails the running median of *completed* trials' best-so-far at the
+/// same step (falling back to the nearest earlier recorded step).
+///
+/// Conservative by construction: nothing is stopped before
+/// `grace_steps` or until `min_completed` trials of the same submission
+/// have finished, and the eventual best trial — which by definition is
+/// never below the median of its peers on non-crossing curves — is
+/// never killed, so early stopping trades compute only.
+pub struct MedianStopping {
+    grace_steps: i64,
+    min_completed: usize,
+    /// live curve per trial: (step, best-so-far)
+    curves: HashMap<TrialKey, Vec<(i64, f64)>>,
+    /// completed-trial count per submission
+    completed: HashMap<u64, usize>,
+    /// running median of completed best-so-far, per (submission, step)
+    medians: BTreeMap<(u64, i64), QuantileSet>,
+}
+
+impl MedianStopping {
+    pub fn new(grace_steps: i64, min_completed: usize) -> MedianStopping {
+        MedianStopping {
+            grace_steps,
+            min_completed: min_completed.max(1),
+            curves: HashMap::new(),
+            completed: HashMap::new(),
+            medians: BTreeMap::new(),
+        }
+    }
+}
+
+impl Default for MedianStopping {
+    fn default() -> Self {
+        MedianStopping::new(1, 1)
+    }
+}
+
+impl TrialScheduler for MedianStopping {
+    fn on_report(&mut self, key: TrialKey, step: i64, score: f64) -> Verdict {
+        let curve = self.curves.entry(key).or_default();
+        let best = match curve.last() {
+            Some(&(_, b)) if b >= score => b,
+            _ => score,
+        };
+        curve.push((step, best));
+        if step < self.grace_steps {
+            return Verdict::Continue;
+        }
+        if self.completed.get(&key.0).copied().unwrap_or(0) < self.min_completed {
+            return Verdict::Continue;
+        }
+        // nearest recorded step <= this one, within the submission
+        let q = self
+            .medians
+            .range((key.0, i64::MIN)..=(key.0, step))
+            .next_back()
+            .map(|(_, q)| q);
+        if let Some(q) = q {
+            if let Some(median) = q.threshold() {
+                if best < median {
+                    return Verdict::Stop(format!(
+                        "median-stop at step {step}: best-so-far {best} trails median {median} \
+                         of {n} completed trial(s)",
+                        n = self.completed.get(&key.0).copied().unwrap_or(0)
+                    ));
+                }
+            }
+        }
+        Verdict::Continue
+    }
+
+    fn on_done(&mut self, key: TrialKey) {
+        if let Some(curve) = self.curves.remove(&key) {
+            for (step, best) in curve {
+                self.medians
+                    .entry((key.0, step))
+                    .or_insert_with(|| QuantileSet::new(2))
+                    .insert(best);
+            }
+        }
+        *self.completed.entry(key.0).or_insert(0) += 1;
+    }
+
+    fn on_discard(&mut self, key: TrialKey) {
+        self.curves.remove(&key);
+    }
+
+    fn name(&self) -> &'static str {
+        "median"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// asynchronous successive halving (ASHA)
+
+/// Async ASHA (Li et al. 2018), stopping flavor: rung `k` sits at step
+/// `r0 * eta^k`. The moment a trial reports past its next rung
+/// boundary, its best-so-far is recorded at that rung and the trial is
+/// promoted iff it ranks in the top `1/eta` of everything recorded
+/// there so far — otherwise it is stopped. No synchronous rung drain:
+/// each decision uses whatever has been observed, so a straggler never
+/// blocks a promotion (this supersedes the synchronous-rung
+/// approximation inside `proposer/hyperband.rs`).
+pub struct AsyncAsha {
+    eta: usize,
+    r0: i64,
+    max_rungs: u32,
+    /// recorded best-so-far per (submission, rung)
+    rungs: HashMap<(u64, u32), QuantileSet>,
+    /// next rung each live trial has to clear
+    next_rung: HashMap<TrialKey, u32>,
+    /// best-so-far per live trial
+    best: HashMap<TrialKey, f64>,
+}
+
+impl AsyncAsha {
+    pub fn new(eta: usize, r0: i64) -> AsyncAsha {
+        AsyncAsha {
+            eta: eta.max(2),
+            r0: r0.max(1),
+            max_rungs: 62,
+            rungs: HashMap::new(),
+            next_rung: HashMap::new(),
+            best: HashMap::new(),
+        }
+    }
+
+    fn boundary(&self, rung: u32) -> i64 {
+        let factor = (self.eta as i64).saturating_pow(rung);
+        self.r0.saturating_mul(factor)
+    }
+}
+
+impl Default for AsyncAsha {
+    fn default() -> Self {
+        AsyncAsha::new(3, 1)
+    }
+}
+
+impl TrialScheduler for AsyncAsha {
+    fn on_report(&mut self, key: TrialKey, step: i64, score: f64) -> Verdict {
+        let best = self.best.entry(key).or_insert(f64::NEG_INFINITY);
+        if score > *best {
+            *best = score;
+        }
+        let best = *best;
+        let rung = self.next_rung.entry(key).or_insert(0);
+        while *rung <= self.max_rungs {
+            let at = self.boundary(*rung);
+            if step < at {
+                break;
+            }
+            let q = self
+                .rungs
+                .entry((key.0, *rung))
+                .or_insert_with(|| QuantileSet::new(self.eta));
+            q.insert(best);
+            if q.in_top(best) {
+                *rung += 1; // promoted — maybe straight through several rungs
+            } else {
+                let rank_of = q.len();
+                return Verdict::Stop(format!(
+                    "asha: best-so-far {best} outside top-1/{eta} of {rank_of} score(s) \
+                     at rung {r} (step {at})",
+                    eta = self.eta,
+                    r = *rung
+                ));
+            }
+        }
+        Verdict::Continue
+    }
+
+    fn on_done(&mut self, key: TrialKey) {
+        self.next_rung.remove(&key);
+        self.best.remove(&key);
+    }
+
+    fn on_discard(&mut self, key: TrialKey) {
+        self.next_rung.remove(&key);
+        self.best.remove(&key);
+    }
+
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_set_tracks_the_median() {
+        let mut q = QuantileSet::new(2);
+        assert!(q.in_top(0.0), "empty set stops nothing");
+        for s in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            q.insert(s);
+        }
+        // top ceil(5/2)=3 of {1..5} -> {3,4,5}: upper median is 3
+        assert_eq!(q.threshold(), Some(3.0));
+        assert!(q.in_top(3.0), "ties survive");
+        assert!(!q.in_top(2.9));
+        q.insert(10.0);
+        // n=6, top ceil(6/2)=3 -> {4,5,10}
+        assert_eq!(q.threshold(), Some(4.0));
+    }
+
+    #[test]
+    fn quantile_set_top_third() {
+        let mut q = QuantileSet::new(3);
+        for s in 1..=9 {
+            q.insert(s as f64);
+        }
+        // top ceil(9/3)=3 -> {7,8,9}
+        assert_eq!(q.threshold(), Some(7.0));
+        assert!(q.in_top(7.0) && !q.in_top(6.0));
+    }
+
+    #[test]
+    fn median_needs_completed_trials_before_stopping() {
+        let mut m = MedianStopping::new(1, 1);
+        let k = (0u64, 1u64);
+        assert_eq!(m.on_report(k, 5, -100.0), Verdict::Continue);
+        m.on_discard(k);
+    }
+
+    #[test]
+    fn median_stops_a_trailing_trial_and_keeps_the_leader() {
+        let mut m = MedianStopping::new(1, 1);
+        // two completed trials with curves reaching 0.5 and 0.7 at step 3
+        for (jid, top) in [(1u64, 0.5), (2, 0.7)] {
+            for step in 1..=3 {
+                assert_eq!(
+                    m.on_report((0, jid), step, top * step as f64 / 3.0),
+                    Verdict::Continue
+                );
+            }
+            m.on_done((0, jid));
+        }
+        // a leader at step 3 (above the median) survives
+        assert_eq!(m.on_report((0, 3), 3, 0.9), Verdict::Continue);
+        // a trailer at step 3 dies
+        match m.on_report((0, 4), 3, 0.1) {
+            Verdict::Stop(why) => assert!(why.contains("median-stop"), "{why}"),
+            v => panic!("expected stop, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn median_uses_nearest_earlier_step() {
+        let mut m = MedianStopping::new(1, 1);
+        m.on_report((0, 1), 2, 0.8);
+        m.on_done((0, 1));
+        // reference only has step 2; a report at step 5 still compares
+        match m.on_report((0, 2), 5, 0.1) {
+            Verdict::Stop(_) => {}
+            v => panic!("expected stop, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn median_isolates_submissions() {
+        let mut m = MedianStopping::new(1, 1);
+        m.on_report((0, 1), 1, 100.0);
+        m.on_done((0, 1));
+        // submission 7 has no completed trials: nothing to compare against
+        assert_eq!(m.on_report((7, 1), 1, -100.0), Verdict::Continue);
+    }
+
+    #[test]
+    fn median_respects_grace_steps() {
+        let mut m = MedianStopping::new(5, 1);
+        m.on_report((0, 1), 6, 1.0);
+        m.on_done((0, 1));
+        assert_eq!(m.on_report((0, 2), 4, -1.0), Verdict::Continue);
+    }
+
+    #[test]
+    fn asha_first_trial_at_a_rung_is_promoted() {
+        let mut a = AsyncAsha::new(3, 1);
+        assert_eq!(a.on_report((0, 1), 1, 0.5), Verdict::Continue);
+        // promoted through rung 0; next boundary is step 3
+        assert_eq!(a.next_rung[&(0, 1)], 1);
+    }
+
+    #[test]
+    fn asha_stops_the_bottom_of_a_rung() {
+        let mut a = AsyncAsha::new(2, 1);
+        // rung 0 at step 1: scores 0.9, 0.8 recorded (both promoted as
+        // they arrive — async decisions use what has been seen)
+        assert_eq!(a.on_report((0, 1), 1, 0.9), Verdict::Continue);
+        assert_eq!(a.on_report((0, 2), 1, 0.8), Verdict::Continue);
+        // third trial with a clearly-losing score: outside top 1/2
+        match a.on_report((0, 3), 1, 0.1) {
+            Verdict::Stop(why) => assert!(why.contains("asha"), "{why}"),
+            v => panic!("expected stop, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn asha_promotes_through_multiple_rungs_in_one_report() {
+        let mut a = AsyncAsha::new(2, 1);
+        // a single report at step 8 clears rungs at 1, 2, 4 and 8
+        assert_eq!(a.on_report((0, 1), 8, 1.0), Verdict::Continue);
+        assert_eq!(a.next_rung[&(0, 1)], 4);
+    }
+
+    #[test]
+    fn asha_best_trial_never_stopped() {
+        let mut a = AsyncAsha::new(2, 1);
+        // 10 trials report monotone non-crossing curves at steps 1..=8;
+        // trial 9 (score 0.9+step) is always ranked first
+        for step in 1..=8i64 {
+            for jid in 0..10u64 {
+                let s = jid as f64 / 10.0 + step as f64;
+                let v = a.on_report((0, jid), step, s);
+                if jid == 9 {
+                    assert_eq!(v, Verdict::Continue, "best trial stopped at step {step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_policies() {
+        assert_eq!(by_name("median").unwrap().name(), "median");
+        assert_eq!(by_name("asha").unwrap().name(), "asha");
+        assert!(by_name("nope").is_none());
+    }
+}

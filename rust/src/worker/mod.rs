@@ -34,7 +34,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::resource::executor::executor_from_script;
-use crate::resource::job::JobEnv;
+use crate::resource::job::{JobEnv, ReportSink};
 use crate::search::BasicConfig;
 use crate::store::proto::LeaseOffer;
 use crate::store::service::{RemoteStoreClient, DEFAULT_CONNECT_TIMEOUT, SOCKET_FILE};
@@ -78,6 +78,9 @@ pub struct WorkerReport {
     pub failed: usize,
     /// leases lost mid-run (expired under us or refused at Complete)
     pub expired: usize,
+    /// attempts killed mid-run by the serving side's trial scheduler
+    /// (the `stop=true` reply to a streamed report)
+    pub stopped: usize,
 }
 
 /// Connect the worker's control socket. `target` is either a db
@@ -103,7 +106,7 @@ pub fn run_worker(remote: &RemoteStoreClient, opts: &WorkerOptions) -> Result<Wo
     let start = Instant::now();
     let mut report = WorkerReport::default();
     loop {
-        if opts.max_jobs.is_some_and(|n| report.executed + report.expired >= n) {
+        if opts.max_jobs.is_some_and(|n| report.executed + report.expired + report.stopped >= n) {
             break;
         }
         match remote.lease(&opts.name) {
@@ -144,18 +147,53 @@ fn run_one(
         // the attempt's failure, don't kill the worker
         Err(e) => Err(e.to_string()),
         Ok(executor) => {
-            let env = JobEnv::default();
+            // intermediate reports and the final outcome share one
+            // channel, so the wait loop wakes the moment the job
+            // streams a metric and the stop verdict comes back fast
+            enum Ev {
+                Report(i64, f64),
+                Done(std::result::Result<f64, String>),
+            }
+            let (tx, rx) = mpsc::channel();
+            let rtx = tx.clone();
+            let mut env = JobEnv::default();
+            env.report = Some(ReportSink::new(move |step, score| {
+                let _ = rtx.send(Ev::Report(step, score));
+            }));
             let cancel = env.cancel.clone();
             let cfg = config.clone();
-            let (tx, rx) = mpsc::channel();
             let thread = std::thread::spawn(move || {
-                let _ = tx.send(executor.execute(&cfg, &env));
+                let _ = tx.send(Ev::Done(executor.execute(&cfg, &env).map_err(|e| e.to_string())));
             });
             let hb_every = Duration::from_secs_f64((offer.lease_timeout / 3.0).clamp(0.05, 5.0));
             let mut lost = false;
+            let mut stopped = false;
             let outcome: std::result::Result<f64, String> = loop {
                 match rx.recv_timeout(hb_every) {
-                    Ok(res) => break res.map_err(|e| e.to_string()),
+                    Ok(Ev::Done(res)) => break res,
+                    Ok(Ev::Report(step, score)) => {
+                        // forward the curve point; the serving side also
+                        // treats it as a heartbeat, so chatty jobs can't
+                        // starve their own lease
+                        match remote.report(offer.lease, step, score) {
+                            Ok(false) => {}
+                            Ok(true) => {
+                                // trial scheduler's verdict (or a dead
+                                // lease): kill the local attempt now
+                                stopped = true;
+                                cancel.kill();
+                                break Err("stopped early by the trial scheduler".to_string());
+                            }
+                            Err(e) => {
+                                cancel.kill();
+                                let _ = thread.join();
+                                return Err(AupError::Job(format!(
+                                    "control socket lost mid-job (job {}): {e}",
+                                    offer.job_id
+                                )));
+                            }
+                        }
+                    }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         break Err("executor thread vanished".to_string());
                     }
@@ -196,6 +234,14 @@ fn run_one(
             if lost {
                 report.expired += 1;
                 journal(remote, offer, worker_start, "W_END", "lease expired under the worker");
+                return Ok(());
+            }
+            if stopped {
+                // the serving side already completed the job as
+                // STOPPED_EARLY and dropped the lease — a Complete here
+                // would be refused, so skip it
+                report.stopped += 1;
+                journal(remote, offer, worker_start, "W_END", "stopped early by the trial scheduler");
                 return Ok(());
             }
             outcome

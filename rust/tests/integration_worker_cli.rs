@@ -279,6 +279,96 @@ fn a_sigkilled_worker_is_reaped_by_lease_expiry_and_the_job_reruns() {
 }
 
 #[test]
+fn a_worker_reported_curve_gets_its_job_stopped_mid_attempt() {
+    let dir = temp_dir("aup-worker-earlystop").unwrap();
+    // one worker runs the jobs serially. The first execution (no marker
+    // yet) is the GOOD trial: two low intermediates, then a result —
+    // its curve becomes the median reference. Every later execution is
+    // the BAD trial: one hopeless intermediate, then a 600s park. The
+    // test can only finish if the serving side's median stopper answers
+    // that report with stop=true and the worker kills the attempt.
+    let marker = dir.join("good_trial_ran");
+    let script = write_script(
+        &dir,
+        "curve.sh",
+        &format!(
+            "#!/bin/sh\nif [ -e {m} ]; then\n\
+             echo \"intermediate: 1 9.0\"\nsleep 600\necho \"result: 9.0\"\n\
+             else\ntouch {m}\n\
+             echo \"intermediate: 1 0.5\"\necho \"intermediate: 2 0.4\"\necho \"result: 0.3\"\nfi\n",
+            m = marker.display()
+        ),
+    );
+    let exp = write_remote_exp(&dir, "exp.json", &script, 2);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    let mut batch = spawn_aup(&[
+        "batch",
+        exp.to_str().unwrap(),
+        "--pool",
+        "1",
+        "--db",
+        db_s,
+        "--serve",
+        "--lease-timeout",
+        "10",
+        "--trial-scheduler",
+        "median",
+    ]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+
+    let mut worker = spawn_aup(&["worker", db_s, "--name", "curvy", "--poll-ms", "25"]);
+
+    // the batch drains — the bad job CANNOT finish on its own inside
+    // this window, so success means the mid-attempt stop landed
+    let status = wait_exit(&mut batch, Duration::from_secs(120), "serving batch");
+    let out = batch.wait_with_output().unwrap();
+    assert!(status.success(), "batch failed: {}", String::from_utf8_lossy(&out.stderr));
+
+    let status = wait_exit(&mut worker, Duration::from_secs(30), "worker");
+    let out = worker.wait_with_output().unwrap();
+    let worker_stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(status.success(), "worker failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        worker_stdout.contains("1 job(s) executed, 0 failed, 0 lease(s) lost, 1 stopped early"),
+        "worker report: {worker_stdout}"
+    );
+
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert_eq!(jobs.len(), 2);
+    let finished: Vec<_> =
+        jobs.iter().filter(|j| j.status == schema::JobStatus::Finished).collect();
+    let stopped: Vec<_> =
+        jobs.iter().filter(|j| j.status == schema::JobStatus::StoppedEarly).collect();
+    assert_eq!(finished.len(), 1, "{jobs:?}");
+    assert_eq!(stopped.len(), 1, "{jobs:?}");
+    assert_eq!(finished[0].score, Some(0.3));
+    assert_eq!(stopped[0].score, None, "an early stop records no score");
+
+    let evs = read_events(&db);
+    // the streamed curve is in the journal, the terminal row names the
+    // verdict, and the worker's own W_END tells the same story
+    assert!(
+        evs.iter().any(|e| e.state == "INTERMEDIATE" && e.detail.contains("step 1")),
+        "no INTERMEDIATE events journaled: {evs:?}"
+    );
+    assert!(
+        evs.iter().any(|e| e.state == "STOPPED_EARLY" && e.detail.contains("median")),
+        "no STOPPED_EARLY terminal with the verdict: {evs:?}"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| e.state == "W_END" && e.detail.contains("stopped early")),
+        "worker never journaled the stop: {evs:?}"
+    );
+    // no CANCELLED rows: STOPPED_EARLY is its own terminal state
+    assert!(evs.iter().all(|e| e.state != "CANCELLED"), "{evs:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
 fn status_against_a_wedged_server_falls_back_to_the_directory() {
     let dir = temp_dir("aup-wedged-server").unwrap();
     let db = dir.join("db");

@@ -35,6 +35,12 @@ dispatched on its keys:
     per-operation cost must stay flat too. Required in fresh reports;
     trajectory points committed before the worker path existed simply
     lack the key and compare as informative-only;
+  - `trial_flat_ratio` <= 3: the early-stopping path (report ingest +
+    trial-scheduler verdict + stop) must stay flat per report as the
+    lifetime trial count grows — the QuantileSet order statistic is
+    O(log n), so growth means completed-curve state leaked into the
+    per-report hot path. Required in fresh reports; older trajectory
+    points may lack the key;
   - like the query report, the trajectory is printed, not gated.
 
 A missing baseline (first run ever, or a fresh fork) passes: the commit
@@ -141,11 +147,15 @@ def gate_sched(fresh, baseline) -> int:
     lease = fresh.get("lease_flat_ratio")
     if lease is not None:
         print(f"  lease_flat_ratio: {float(lease):.2f} (ceiling 3, flat-in-lifetime-jobs)")
+    trial = fresh.get("trial_flat_ratio")
+    if trial is not None:
+        print(f"  trial_flat_ratio: {float(trial):.2f} (ceiling 3, flat-in-lifetime-trials)")
     if baseline is not None:
         print(
             f"  trajectory (informative): speedup {baseline.get('sched_speedup')}x -> "
             f"{speedup:.1f}x, flat {baseline.get('poll_flat_ratio')} -> {flat:.2f}, "
-            f"lease flat {baseline.get('lease_flat_ratio')} -> {lease}"
+            f"lease flat {baseline.get('lease_flat_ratio')} -> {lease}, "
+            f"trial flat {baseline.get('trial_flat_ratio')} -> {trial}"
         )
     if speedup < 10.0:
         print(f"::error::scheduler speedup below the 10x floor: {speedup:.1f}x")
@@ -160,6 +170,13 @@ def gate_sched(fresh, baseline) -> int:
         rc = 1
     elif float(lease) > 3.0:
         print(f"::error::lease bookkeeping cost grew with lifetime jobs: {float(lease):.2f}x")
+        rc = 1
+    # same contract for the early-stopping path, shipped with ISSUE-7
+    if trial is None:
+        print("::error::sched report is missing trial_flat_ratio")
+        rc = 1
+    elif float(trial) > 3.0:
+        print(f"::error::early-stopping verdict cost grew with lifetime trials: {float(trial):.2f}x")
         rc = 1
     if rc == 0:
         print("ok: event-driven scheduler holds the 10x floor and stays flat per poll")
