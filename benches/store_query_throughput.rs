@@ -19,7 +19,7 @@
 
 use std::time::Instant;
 
-use auptimizer::store::{schema, status, ServerConfig, Store, StoreServer};
+use auptimizer::store::{schema, status, ServerConfig, Store, StoreApi, StoreServer};
 
 const N_EXPS: i64 = 8;
 

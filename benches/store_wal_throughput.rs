@@ -6,13 +6,20 @@
 //! running update, DONE event, finish update) — the store traffic of one
 //! scheduler-driven job lifecycle.
 //!
-//! Three measurements:
+//! Measurements:
 //! * `baseline`       — direct schema calls on a durable store;
 //! * `grouped`        — same commands through a manually-drained server,
 //!                      one drain per 64 commands (deterministic batch
 //!                      boundaries; this is the asserted ≥5x ratio);
 //! * `grouped_live`   — a spawned server thread with a flooding client
-//!                      (real deployment shape; informative).
+//!                      (real deployment shape; informative);
+//! * `sharded`        — the same live flood against `--shards S` for
+//!                      S ∈ {1, 4}: S shard actors each owning one WAL
+//!                      segment, S flooder threads each driving its own
+//!                      experiment (eids spread across shards), so WAL
+//!                      group commits batch on S cores. The reported
+//!                      `sharded_scaling` ratio (S=4 throughput over
+//!                      S=1) is gated in CI at ≥3x.
 //!
 //! Run: `cargo bench --bench store_wal_throughput [-- --smoke] [-- --out FILE]`
 //! Writes a JSON report (default results/BENCH_store.json) so CI can
@@ -21,7 +28,7 @@
 use std::time::Instant;
 
 use auptimizer::store::server::wal_workload::{self, MUTATIONS_PER_JOB};
-use auptimizer::store::{schema, ServerConfig, Store, StoreServer};
+use auptimizer::store::{schema, shard, ServerConfig, Store, StoreApi, StoreServer};
 use auptimizer::util::fsutil::temp_dir;
 
 struct Measurement {
@@ -58,7 +65,7 @@ fn main() {
         let start_stats = store.wal_stats().unwrap();
         let t0 = Instant::now();
         for jid in 0..n_jobs {
-            wal_workload::apply_direct(&mut store, jid).unwrap();
+            wal_workload::apply_direct(&mut store, jid, 0).unwrap();
         }
         let secs = t0.elapsed().as_secs_f64();
         let s = store.wal_stats().unwrap();
@@ -79,7 +86,7 @@ fn main() {
         let t0 = Instant::now();
         let mut sent: u64 = 0;
         for jid in 0..n_jobs {
-            wal_workload::send_via_client(&client, jid).unwrap();
+            wal_workload::send_via_client(&client, jid, 0).unwrap();
             sent += MUTATIONS_PER_JOB;
             if sent >= 64 {
                 server.drain_once(false).unwrap();
@@ -104,7 +111,7 @@ fn main() {
             StoreServer::spawn(Store::open(&dir).unwrap(), ServerConfig::default()).unwrap();
         let t0 = Instant::now();
         for jid in 0..n_jobs {
-            wal_workload::send_via_client(&client, jid).unwrap();
+            wal_workload::send_via_client(&client, jid, 0).unwrap();
         }
         drop(client);
         let store = handle.shutdown().unwrap();
@@ -115,6 +122,49 @@ fn main() {
         Measurement { appends: s.appends, records: s.records, secs }
     };
     std::fs::remove_dir_all(&dir).unwrap();
+
+    // -- sharded: S shard actors, S flooder threads, one WAL segment each ---
+    // Same total workload for every S (n_jobs jobs, one experiment per
+    // flooder so eids spread across shards via eid % S); the only moving
+    // part is how many cores group-commit in parallel.
+    let sharded_flood = |s: usize| -> Measurement {
+        let dir = temp_dir(&format!("aup-bench-wal-shard{s}")).unwrap();
+        let stores = shard::open_shards(&dir, s).unwrap();
+        let (handles, client) = StoreServer::spawn_sharded(
+            stores.into_iter().map(|st| (st, ServerConfig::default())).collect(),
+        )
+        .unwrap();
+        let per = n_jobs / s as i64;
+        let t0 = Instant::now();
+        let flooders: Vec<_> = (0..s)
+            .map(|_| {
+                let client = client.clone();
+                std::thread::spawn(move || {
+                    let eid = client.start_experiment("bench", "random", "{}", 0.0).unwrap();
+                    for _ in 0..per {
+                        let jid = client.alloc_jid();
+                        wal_workload::send_via_client(&client, jid, eid).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for f in flooders {
+            f.join().unwrap();
+        }
+        drop(client);
+        let (mut appends, mut records) = (0u64, 0u64);
+        for h in handles {
+            let st = h.shutdown().unwrap();
+            let ws = st.wal_stats().unwrap();
+            appends += ws.appends;
+            records += ws.records;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        std::fs::remove_dir_all(&dir).unwrap();
+        Measurement { appends, records, secs }
+    };
+    let shard1 = sharded_flood(1);
+    let shard4 = sharded_flood(4);
 
     let reduction = baseline.appends as f64 / grouped.appends.max(1) as f64;
     let report = |name: &str, m: &Measurement| {
@@ -130,7 +180,12 @@ fn main() {
     report("baseline", &baseline);
     report("grouped", &grouped);
     report("grouped_live", &live);
+    report("shards=1", &shard1);
+    report("shards=4", &shard4);
+    let thr = |m: &Measurement| transitions as f64 / m.secs.max(1e-9);
+    let sharded_scaling = thr(&shard4) / thr(&shard1).max(1e-9);
     println!("\nappend reduction (baseline / grouped): {reduction:.1}x");
+    println!("sharded scaling (4 shards vs 1): {sharded_scaling:.2}x");
 
     // sanity: both deterministic flavors journaled identical record counts
     assert_eq!(
@@ -151,12 +206,22 @@ fn main() {
         live_reduction >= 2.0,
         "spawned server stopped batching: live reduction {live_reduction:.1}x"
     );
+    // tripwire on the shard router: four independent WAL segments must buy
+    // real parallel throughput. Kept loose in-bench (machine load and core
+    // count vary); the trajectory gate in CI holds the ≥3x line.
+    assert!(
+        sharded_scaling >= 1.5,
+        "sharding stopped scaling: 4 shards gave only {sharded_scaling:.2}x over 1"
+    );
 
     let json = format!(
         "{{\n  \"n_jobs\": {n_jobs},\n  \"transitions\": {transitions},\n  \
          \"baseline\": {{\"appends\": {}, \"records\": {}, \"secs\": {:.6}, \"appends_per_1k_transitions\": {:.2}}},\n  \
          \"grouped\": {{\"appends\": {}, \"records\": {}, \"secs\": {:.6}, \"appends_per_1k_transitions\": {:.2}}},\n  \
          \"grouped_live\": {{\"appends\": {}, \"records\": {}, \"secs\": {:.6}, \"appends_per_1k_transitions\": {:.2}}},\n  \
+         \"sharded\": {{\n    \"shards1\": {{\"appends\": {}, \"records\": {}, \"secs\": {:.6}, \"transitions_per_sec\": {:.1}}},\n    \
+         \"shards4\": {{\"appends\": {}, \"records\": {}, \"secs\": {:.6}, \"transitions_per_sec\": {:.1}}}\n  }},\n  \
+         \"sharded_scaling\": {sharded_scaling:.2},\n  \
          \"append_reduction\": {reduction:.2}\n}}\n",
         baseline.appends,
         baseline.records,
@@ -170,6 +235,14 @@ fn main() {
         live.records,
         live.secs,
         live.per_1k_transitions(transitions),
+        shard1.appends,
+        shard1.records,
+        shard1.secs,
+        thr(&shard1),
+        shard4.appends,
+        shard4.records,
+        shard4.secs,
+        thr(&shard4),
     );
     if let Some(parent) = std::path::Path::new(&out_path).parent() {
         if !parent.as_os_str().is_empty() {

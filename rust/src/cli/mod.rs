@@ -29,8 +29,8 @@ use std::time::Duration;
 
 use crate::experiment::config::ExperimentConfig;
 use crate::experiment::{BatchSubmit, Experiment, ExperimentOptions, GatewayCall, WorkerGateway};
-use crate::store::service::{self, AttachFail, ServiceHooks, SubmitRequest, SOCKET_FILE};
-use crate::store::{RemoteStoreClient, Store, StoreApi, StoreService};
+use crate::store::service::{self, ServiceHooks, SubmitRequest, SOCKET_FILE};
+use crate::store::{shard, RemoteStoreClient, Store, StoreApi, StoreError, StoreService};
 use crate::worker::{self, WorkerOptions};
 use crate::util::error::{AupError, Result};
 use crate::util::ini::Ini;
@@ -96,12 +96,17 @@ USAGE:
     aup batch   EXP1.json EXP2.json [...] [--pool N] [--db DIR] [--user NAME]
                 [--retries N] [--timeout S] [--backoff S] [--verbose]
                 [--trial-scheduler median|asha]
-                [--serve] [--tcp HOST:PORT]
+                [--serve] [--tcp HOST:PORT] [--shards N]
                 run several experiments against ONE shared resource pool AND
                 one shared tracking store: with --db DIR every experiment's
                 rows land in the single store at DIR (served by the in-process
                 StoreServer; WAL writes are group-committed); per-experiment
                 'priority' keys order placement under contention.
+                --shards N partitions the store by experiment: N StoreServer
+                actors each own one WAL segment (DIR/shard-K/), so WAL
+                appends batch on N cores instead of one. N=1 (the default)
+                is byte-compatible with every pre-shard database; a sharded
+                directory remembers its N and refuses to be resharded.
                 --serve additionally publishes the live store at
                 DIR/store.sock (requires --db): 'aup status'/'aup top' from
                 other shells attach to the running server, and 'aup submit'
@@ -379,20 +384,42 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             .ok_or_else(|| AupError::Config("--pool must be a positive integer".into()))?,
         None => 4,
     };
-    // ONE store for the whole batch — the paper's single bookkeeping db
-    let store = match cli.flag("db") {
+    // ONE store deployment for the whole batch — the paper's single
+    // bookkeeping db, as 1 server (default) or N shard actors (--shards)
+    let shards_flag: Option<usize> = match cli.flag("shards") {
+        Some(v) => Some(v.parse().map_err(|_| {
+            AupError::Config("--shards must be a positive integer".into())
+        })?),
+        None => None,
+    };
+    let stores = match cli.flag("db") {
         Some(db) => {
-            let mut store = Store::open(Path::new(db))?;
-            let recovered = crate::store::schema::recover_incomplete(&mut store)?;
+            let dir = Path::new(db);
+            let n = shard::resolve_shards(dir, shards_flag)?;
+            let mut stores = shard::open_shards(dir, n)?;
+            // crash recovery, per segment: any job still RUNNING from a
+            // previous process is dead — mark it failed (§III-C)
+            let recovered = shard::recover_shards(&mut stores)?;
             if recovered > 0 {
                 eprintln!("recovered {recovered} interrupted job(s) from a previous run");
             }
-            store
+            stores
         }
-        None => Store::in_memory(),
+        None => {
+            let n = shards_flag.unwrap_or(1);
+            if n == 0 {
+                return Err(AupError::Config("--shards must be at least 1".into()));
+            }
+            (0..n).map(|_| Store::in_memory()).collect()
+        }
     };
-    let (server, client) =
-        crate::store::StoreServer::spawn(store, crate::store::ServerConfig::default())?;
+    let n_shards = stores.len();
+    let (handles, client) = crate::store::StoreServer::spawn_sharded(
+        stores
+            .into_iter()
+            .map(|s| (s, crate::store::ServerConfig::default()))
+            .collect(),
+    )?;
     let mut exps = Vec::new();
     let mut names = Vec::new();
     for path in &cli.positional {
@@ -410,10 +437,18 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
         exps.push(Experiment::new(cfg, options)?);
     }
     let pool = Box::new(crate::resource::local::CpuManager::new(pool_n));
-    println!(
-        "batch: {} experiment(s) over a shared {pool_n}-slot pool, one shared store",
-        exps.len()
-    );
+    if n_shards > 1 {
+        println!(
+            "batch: {} experiment(s) over a shared {pool_n}-slot pool, \
+             one shared store across {n_shards} shards",
+            exps.len()
+        );
+    } else {
+        println!(
+            "batch: {} experiment(s) over a shared {pool_n}-slot pool, one shared store",
+            exps.len()
+        );
+    }
     // --serve / --tcp: put the socket front-end in front of the live
     // StoreServer and open an experiment intake for `aup submit`
     let serve = cli.flag("serve").is_some();
@@ -512,9 +547,9 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             // a dead server is the likely cause; its latched error names
             // the root problem, so prefer it over "server gone"
             drop(client);
-            return Err(match server.shutdown() {
+            return Err(match shutdown_shards(handles) {
                 Err(store_err) => store_err,
-                Ok(_) => run_err,
+                Ok(()) => run_err,
             });
         }
     };
@@ -530,15 +565,30 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
             s.eid, s.n_jobs, s.n_failed, s.best_score, s.wall_time
         );
     }
-    // live status straight from the server before it shuts down
+    // live status straight from the server(s) before they shut down
     let statuses = client.status()?;
     print!("{}", crate::store::status::render_status(&statuses));
     drop(client);
-    server.shutdown()?;
+    shutdown_shards(handles)?;
     if let Some(db) = cli.flag("db") {
         println!("tracking store: {db} (inspect with 'aup status {db}')");
     }
     Ok(())
+}
+
+/// Join every shard actor; the FIRST latched error wins (it names the
+/// root cause — later shards usually just report "server gone").
+fn shutdown_shards(handles: Vec<crate::store::StoreServerHandle>) -> Result<()> {
+    let mut first_err = None;
+    for h in handles {
+        if let Err(e) = h.shutdown() {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// `aup worker`: the pull-based remote executor. Connects to a serving
@@ -636,9 +686,9 @@ fn attach_live(cli: &Cli, db: &str) -> Option<RemoteStoreClient> {
             eprintln!("(attached to live store service at {db}/{SOCKET_FILE})");
             Some(remote)
         }
-        Err(AttachFail::NoSocket) => None,
-        Err(AttachFail::Failed(why)) => {
-            eprintln!("(live attach failed: {why}; showing the directory snapshot)");
+        Err(StoreError::NoSocket) => None,
+        Err(e) => {
+            eprintln!("(live attach failed: {}; showing the directory snapshot)", e.message());
             None
         }
     }
@@ -666,6 +716,28 @@ fn open_existing_store(db: &str) -> Result<Store> {
     Err(last_err.unwrap())
 }
 
+/// Like [`open_existing_store`], but shard-aware: a directory written by
+/// `--shards N` opens as N read-only segment stores (status/top merge
+/// them); a pre-shard directory opens as one. Same retry contract.
+fn open_existing_shards(db: &str) -> Result<Vec<Store>> {
+    let path = Path::new(db);
+    if !path.is_dir() {
+        return Err(AupError::Config(format!("no store directory at '{db}'")));
+    }
+    let n = shard::detect_shards(path)?;
+    let mut last_err = None;
+    for attempt in 0..3 {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        match shard::open_shards_read_only(path, n) {
+            Ok(stores) => return Ok(stores),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap())
+}
+
 /// `aup status DIR`: per-experiment progress, retry counts and best
 /// scores — the paper's §III-C tracking story as a user-facing surface.
 /// Attaches to a live `aup batch --serve` server when one publishes
@@ -685,8 +757,12 @@ pub fn cmd_status(cli: &Cli) -> Result<()> {
             }
         }
     }
-    let mut store = open_existing_store(db)?;
-    let statuses = crate::store::status::experiment_statuses(&mut store)?;
+    let mut stores = open_existing_shards(db)?;
+    let parts = stores
+        .iter_mut()
+        .map(|store| crate::store::status::experiment_statuses(store))
+        .collect::<Result<Vec<_>>>()?;
+    let statuses = shard::merge_statuses(parts);
     print_statuses(&statuses);
     Ok(())
 }
@@ -722,10 +798,17 @@ pub fn cmd_top(cli: &Cli) -> Result<()> {
             }
         }
     }
-    let mut store = open_existing_store(db)?;
-    let running = crate::store::status::running_jobs(&mut store)?;
-    let events = crate::store::status::recent_events(&mut store, n_events)?;
-    let util = crate::store::status::resource_utilization(&store)?;
+    let mut stores = open_existing_shards(db)?;
+    let parts = stores
+        .iter_mut()
+        .map(|store| {
+            let running = crate::store::status::running_jobs(store)?;
+            let events = crate::store::status::recent_events(store, n_events)?;
+            let util = crate::store::status::resource_utilization(store)?;
+            Ok((running, events, util))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let (running, events, util) = shard::merge_top(parts, n_events);
     print!("{}", crate::store::status::render_top(&running, &events, &util));
     Ok(())
 }
@@ -785,10 +868,18 @@ pub fn cmd_viz(cli: &Cli) -> Result<()> {
     let db = cli
         .flag("db")
         .ok_or_else(|| AupError::Config("usage: aup viz --db DIR [--eid N]".into()))?;
-    let mut store = open_existing_store(db)?;
     let eid: i64 = cli.flag("eid").unwrap_or("0").parse().map_err(|_| {
         AupError::Config("--eid must be an integer".into())
     })?;
+    // experiments are shard-local, so a sharded directory serves an eid's
+    // history entirely from its owning segment (eid mod N)
+    let n = shard::detect_shards(Path::new(db))?;
+    let mut store = if n > 1 {
+        let owner = shard::shard_dir(Path::new(db), eid.rem_euclid(n as i64) as usize);
+        open_existing_store(&owner.display().to_string())?
+    } else {
+        open_existing_store(db)?
+    };
     let jobs = crate::store::schema::jobs_of(&mut store, eid)?;
     if jobs.is_empty() {
         println!("no jobs for experiment {eid}");
@@ -837,6 +928,13 @@ pub fn cmd_sql(cli: &Cli) -> Result<()> {
         return Err(AupError::Config(
             "aup sql is read-only: only SELECT is allowed (stores are written by runs)".into(),
         ));
+    }
+    let n = shard::detect_shards(Path::new(db))?;
+    if n > 1 {
+        return Err(AupError::Config(format!(
+            "'{db}' is a {n}-shard store; cross-shard SQL is not supported — query one \
+             segment directly (aup sql --db {db}/shard-K \"...\") or use aup status/top/viz"
+        )));
     }
     let mut store = open_existing_store(db)?;
     let result = store.execute(query)?;

@@ -21,7 +21,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 use crate::experiment::config::ExperimentConfig;
 use crate::search::BasicConfig;
 use crate::store::schema;
-use crate::store::{StoreApi, StoreClient};
+use crate::store::{JobEventRecord, StoreApi, StoreClient};
 use crate::util::error::Result;
 
 fn now() -> f64 {
@@ -78,7 +78,8 @@ impl<C: StoreApi> Tracker<C> {
     pub fn job_started(&mut self, job_id: u64, rid: i64, config: &BasicConfig) -> Result<()> {
         let jid = self.alloc_jid(job_id)?;
         self.client
-            .start_job_running(jid, self.eid, rid, &config.to_json_string(), now())
+            .start_job_running(jid, self.eid, rid, &config.to_json_string(), now())?;
+        Ok(())
     }
 
     /// Scheduler-era entry point: the job exists (and is tracked) from
@@ -86,12 +87,14 @@ impl<C: StoreApi> Tracker<C> {
     pub fn job_submitted(&mut self, job_id: u64, config: &BasicConfig) -> Result<()> {
         let jid = self.alloc_jid(job_id)?;
         self.client
-            .start_job_queued(jid, self.eid, &config.to_json_string(), now())
+            .start_job_queued(jid, self.eid, &config.to_json_string(), now())?;
+        Ok(())
     }
 
     /// The scheduler placed the job on resource `rid`.
     pub fn job_running(&mut self, job_id: u64, rid: i64) -> Result<()> {
-        self.client.set_job_running(self.jid_of(job_id), rid)
+        self.client.set_job_running(self.jid_of(job_id), rid)?;
+        Ok(())
     }
 
     /// Journal one scheduler transition into `job_event` (retry +
@@ -103,15 +106,13 @@ impl<C: StoreApi> Tracker<C> {
     /// along, feeding the store's per-resource busy-seconds aggregates.
     pub fn log_transition(&mut self, t: &crate::scheduler::Transition) -> Result<()> {
         self.client.log_job_event(
-            self.jid_of(t.job_id),
-            self.eid,
-            t.attempt as i64,
-            t.state.name(),
-            now(),
-            &format!("[t={:.3}] {}", t.at, t.detail),
-            t.rid.unwrap_or(-1),
-            t.busy,
-        )
+            JobEventRecord::new(self.jid_of(t.job_id), self.eid, t.state.name())
+                .attempt(t.attempt as i64)
+                .at(now())
+                .detail(&format!("[t={:.3}] {}", t.at, t.detail))
+                .resource(t.rid.unwrap_or(-1), t.busy),
+        )?;
+        Ok(())
     }
 
     /// Journal one live `intermediate: <step> <score>` report into the
@@ -120,44 +121,46 @@ impl<C: StoreApi> Tracker<C> {
     /// attempt-ending: no rid/busy stamp.
     pub fn log_report(&mut self, r: &crate::scheduler::MetricReport) -> Result<()> {
         self.client.log_job_event(
-            self.jid_of(r.job_id),
-            self.eid,
-            r.attempt as i64,
-            "INTERMEDIATE",
-            now(),
-            &format!("[t={:.3}] step {} score {}", r.at, r.step, r.score),
-            -1,
-            0.0,
-        )
+            JobEventRecord::new(self.jid_of(r.job_id), self.eid, "INTERMEDIATE")
+                .attempt(r.attempt as i64)
+                .at(now())
+                .detail(&format!("[t={:.3}] step {} score {}", r.at, r.step, r.score)),
+        )?;
+        Ok(())
     }
 
     pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
-        self.client.cancel_job(self.jid_of(job_id), now())
+        self.client.cancel_job(self.jid_of(job_id), now())?;
+        Ok(())
     }
 
     /// The trial scheduler killed the job mid-attempt (early stopping).
     /// Distinct from cancellation in `job.status`; records no score.
     pub fn job_stopped_early(&mut self, job_id: u64) -> Result<()> {
-        self.client.stop_job_early(self.jid_of(job_id), now())
+        self.client.stop_job_early(self.jid_of(job_id), now())?;
+        Ok(())
     }
 
     pub fn job_finished(&mut self, job_id: u64, score: Option<f64>) -> Result<()> {
         self.client
-            .finish_job(self.jid_of(job_id), score, score.is_some(), now())
+            .finish_job(self.jid_of(job_id), score, score.is_some(), now())?;
+        Ok(())
     }
 
     pub fn experiment_finished(&mut self, best: Option<f64>) -> Result<()> {
-        self.client.finish_experiment(self.eid, best, now())
+        self.client.finish_experiment(self.eid, best, now())?;
+        Ok(())
     }
 
     /// Forward a Dispatcher-clock heartbeat so the server's group-commit
     /// checkpoint timer advances (deterministically, in sim runs).
     pub fn tick(&self, scheduler_now: f64) -> Result<()> {
-        self.client.tick(scheduler_now)
+        self.client.tick(scheduler_now)?;
+        Ok(())
     }
 
     pub fn best_job(&mut self) -> Result<Option<schema::JobRow>> {
-        self.client.best_job(self.eid, self.maximize)
+        Ok(self.client.best_job(self.eid, self.maximize)?)
     }
 }
 

@@ -10,6 +10,14 @@
 //! ([`Store::open_read_only`]) gets the aggregates built exactly once,
 //! at open.
 //!
+//! Aggregates are keyed by experiment (plus per-resource busy totals),
+//! which is exactly the sharded store's partition axis: an experiment
+//! lives wholly on `shard_of(eid)`, so every aggregate here is
+//! naturally shard-local and the router's `Status`/`Top` fan-out can
+//! merge per-shard answers without double counting (resource totals,
+//! the one physical-and-shared axis, are summed per rid in
+//! [`shard::merge_top`](crate::store::shard::merge_top)).
+//!
 //! Tie semantics mirror the query layer's deterministic ORDER BY: the
 //! best job minimizes/maximizes `(score, jid)` lexicographically, which
 //! is what `best_job`'s `ORDER BY score [DESC]` (tie-broken by primary

@@ -1,50 +1,82 @@
-//! StoreClient — the cheap cloneable handle onto a [`StoreServer`].
+//! StoreClient — the cheap cloneable handle onto one or more
+//! [`StoreServer`] shards, plus the [`StoreApi`] trait every store
+//! transport implements.
 //!
 //! Trackers, the scheduler journal and the CLI hold one of these instead
 //! of `Arc<Mutex<Store>>`. Mutations are fire-and-forget sends into the
-//! server's mailbox (they are group-committed by the next drain);
-//! queries block on a per-request reply channel. Sends are ordered, so a
-//! query observes every mutation this client issued before it.
+//! owning shard's mailbox (they are group-committed by that shard's next
+//! drain); queries block on a per-request reply channel. Sends are
+//! ordered per shard, so a query observes every mutation this client
+//! issued before it for the same experiment.
 //!
 //! [`StoreServer`]: crate::store::server::StoreServer
 
-use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
-
+use crate::store::op::{JobEventRecord, OpReply, StoreOp, StoreResult};
 use crate::store::schema::{JobEventRow, JobRow};
 use crate::store::server::StoreCmd;
+use crate::store::shard::ShardedStoreClient;
 use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::QueryResult;
-use crate::util::error::{AupError, Result};
 
 /// The store-client call surface, independent of transport. Implemented
-/// by [`StoreClient`] (in-process mpsc mailbox) and by
+/// by [`StoreClient`] (in-process mpsc mailboxes, one per shard) and by
 /// [`RemoteStoreClient`] (length-prefixed frames over a Unix or TCP
 /// socket), so code that talks to a live store — `aup status`, `aup top`,
 /// dashboards — is written once against this trait and attaches through
 /// whichever transport reaches the server.
 ///
+/// The trait has exactly TWO required methods: [`StoreApi::op`] routes
+/// one [`StoreOp`] (the shared serializable vocabulary the mailbox and
+/// the wire both speak) and [`StoreApi::alloc_jids`] reserves id ranges.
+/// Every typed method below is a provided wrapper that builds the op and
+/// unwraps the reply shape — a transport cannot drift from the
+/// vocabulary because it never sees individual verbs.
+///
 /// Contract (both transports): mutations are fire-and-forget — they are
-/// durable once the server's next mailbox drain group-commits them;
-/// queries are synchronous and observe every mutation previously issued
-/// through the SAME handle.
+/// durable once the owning shard's next mailbox drain group-commits
+/// them; queries are synchronous and observe every mutation previously
+/// issued through the SAME handle for the same experiment. Errors are
+/// the typed [`StoreError`](crate::store::StoreError): `Gone` means the
+/// transport/actor is unusable, `Failed` means this one request was bad.
 ///
 /// [`RemoteStoreClient`]: crate::store::service::RemoteStoreClient
 pub trait StoreApi: Send {
+    /// Route one operation and wait for its typed reply (fire-and-forget
+    /// mutations return [`OpReply::Unit`] as soon as they are enqueued).
+    fn op(&self, op: StoreOp) -> StoreResult<OpReply>;
+
     /// Reserve `n` globally-unique store jids; returns the first of the
     /// contiguous range.
-    fn alloc_jids(&self, n: i64) -> Result<i64>;
+    fn alloc_jids(&self, n: i64) -> StoreResult<i64>;
+
+    /// Open an experiment (the serving side resolves-or-creates the user
+    /// row); returns the eid.
     fn start_experiment(
         &self,
         user: &str,
         proposer: &str,
         exp_config: &str,
         now: f64,
-    ) -> Result<i64>;
-    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()>;
-    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()>;
+    ) -> StoreResult<i64> {
+        self.op(StoreOp::StartExperiment {
+            eid: None,
+            user: user.to_string(),
+            proposer: proposer.to_string(),
+            exp_config: exp_config.to_string(),
+            now,
+        })?
+        .eid()
+    }
+
+    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::FinishExperiment { eid, best, now })?.unit()
+    }
+
+    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::StartJobQueued { jid, eid, config: config.to_string(), now })?.unit()
+    }
+
     fn start_job_running(
         &self,
         jid: i64,
@@ -52,324 +84,142 @@ pub trait StoreApi: Send {
         rid: i64,
         config: &str,
         now: f64,
-    ) -> Result<()>;
-    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()>;
-    fn cancel_job(&self, jid: i64, now: f64) -> Result<()>;
-    /// Trial scheduler killed the job mid-attempt (early stopping);
-    /// records no score, distinct from `cancel_job` in `job.status`.
-    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()>;
-    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()>;
-    /// Journal one scheduler transition; `rid`/`busy` report resource
-    /// occupancy of an attempt-ending transition (`-1, 0.0` otherwise).
-    #[allow(clippy::too_many_arguments)]
-    fn log_job_event(
-        &self,
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: &str,
-        time: f64,
-        detail: &str,
-        rid: i64,
-        busy: f64,
-    ) -> Result<()>;
-    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>>;
-    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>>;
-    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>>;
-    fn sql(&self, query: &str) -> Result<QueryResult>;
-    fn status(&self) -> Result<Vec<ExperimentStatus>>;
-    #[allow(clippy::type_complexity)]
-    fn top(&self, events: usize)
-        -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>;
-    fn wal_stats(&self) -> Result<Option<WalStats>>;
-    fn checkpoint(&self) -> Result<()>;
-    fn tick(&self, now: f64) -> Result<()>;
-}
-
-/// Handle onto a live store server. Clones share the mailbox and the
-/// global jid allocator.
-#[derive(Clone)]
-pub struct StoreClient {
-    pub(crate) tx: Sender<StoreCmd>,
-    /// next free `job.jid`, seeded from the store at server start;
-    /// allocation is a lock-free fetch-add so the submit hot path never
-    /// round-trips to the server
-    pub(crate) next_jid: Arc<AtomicI64>,
-}
-
-/// The transport-failure message shared by both client flavors: the
-/// service layer matches on it to tell "the StoreServer actor died"
-/// apart from ordinary per-request store errors.
-pub(crate) const SERVER_GONE: &str = "store server is gone (crashed or shut down)";
-
-fn gone() -> AupError {
-    AupError::Store(SERVER_GONE.into())
-}
-
-impl StoreClient {
-    /// Raw protocol send (tests drive manual servers with this).
-    pub fn send_cmd(&self, cmd: StoreCmd) -> Result<()> {
-        self.tx.send(cmd).map_err(|_| gone())
+    ) -> StoreResult<()> {
+        self.op(StoreOp::StartJobRunning { jid, eid, rid, config: config.to_string(), now })?
+            .unit()
     }
 
-    fn request<T>(&self, make: impl FnOnce(Sender<Result<T>>) -> StoreCmd) -> Result<T> {
-        let (tx, rx) = channel();
-        self.send_cmd(make(tx))?;
-        match rx.recv() {
-            Ok(res) => res,
-            Err(_) => Err(gone()),
-        }
+    fn set_job_running(&self, jid: i64, rid: i64) -> StoreResult<()> {
+        self.op(StoreOp::SetJobRunning { jid, rid })?.unit()
+    }
+
+    fn cancel_job(&self, jid: i64, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::CancelJob { jid, now })?.unit()
+    }
+
+    /// Trial scheduler killed the job mid-attempt (early stopping);
+    /// records no score, distinct from `cancel_job` in `job.status`.
+    fn stop_job_early(&self, jid: i64, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::StopJobEarly { jid, now })?.unit()
+    }
+
+    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::FinishJob { jid, score, ok, now })?.unit()
+    }
+
+    /// Journal one scheduler transition. Build the row with the
+    /// [`JobEventRecord`] builder; fields you leave defaulted stay
+    /// optional on the wire, so old peers keep parsing.
+    fn log_job_event(&self, record: JobEventRecord) -> StoreResult<()> {
+        self.op(StoreOp::LogJobEvent(record))?.unit()
+    }
+
+    fn best_job(&self, eid: i64, maximize: bool) -> StoreResult<Option<JobRow>> {
+        self.op(StoreOp::BestJob { eid, maximize })?.job()
+    }
+
+    fn jobs_of(&self, eid: i64) -> StoreResult<Vec<JobRow>> {
+        self.op(StoreOp::JobsOf { eid })?.jobs()
+    }
+
+    fn job_events_of(&self, eid: i64) -> StoreResult<Vec<JobEventRow>> {
+        self.op(StoreOp::JobEventsOf { eid })?.events()
+    }
+
+    /// Run a mini-SQL statement against the live store (single-shard
+    /// stores only).
+    fn sql(&self, query: &str) -> StoreResult<QueryResult> {
+        self.op(StoreOp::Sql { query: query.to_string() })?.query()
+    }
+
+    /// Live bookkeeping summary (what `aup status` shows); merged across
+    /// shards.
+    fn status(&self) -> StoreResult<Vec<ExperimentStatus>> {
+        self.op(StoreOp::Status)?.statuses()
+    }
+
+    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
+    /// and per-resource utilization; merged across shards.
+    #[allow(clippy::type_complexity)]
+    fn top(
+        &self,
+        events: usize,
+    ) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
+        self.op(StoreOp::Top { events })?.top()
+    }
+
+    /// WAL I/O counters, summed across shards (None when in-memory).
+    fn wal_stats(&self) -> StoreResult<Option<WalStats>> {
+        self.op(StoreOp::WalStats)?.wal()
+    }
+
+    /// Force a checkpoint on every shard and wait for all of them.
+    fn checkpoint(&self) -> StoreResult<()> {
+        self.op(StoreOp::Checkpoint)?.unit()
+    }
+
+    /// Clock heartbeat (Dispatcher-clock seconds), broadcast to every
+    /// shard. Drives interval checkpoints; cheap enough to call every
+    /// scheduler poll.
+    fn tick(&self, now: f64) -> StoreResult<()> {
+        self.op(StoreOp::Tick { now })?.unit()
+    }
+}
+
+/// Handle onto a live store deployment — one server or N shards behind
+/// the same face. Clones share the shard mailboxes and the global id
+/// allocators.
+#[derive(Clone)]
+pub struct StoreClient {
+    pub(crate) router: ShardedStoreClient,
+}
+
+/// The transport-failure message shared by both client flavors; carried
+/// inside [`StoreError::Gone`](crate::store::StoreError::Gone).
+pub(crate) const SERVER_GONE: &str = "store server is gone (crashed or shut down)";
+
+impl StoreClient {
+    /// Wrap a wired router (the `StoreServer::spawn*` constructors call
+    /// this).
+    pub fn from_router(router: ShardedStoreClient) -> StoreClient {
+        StoreClient { router }
+    }
+
+    /// The shard router itself (merge helpers, shard count).
+    pub fn router(&self) -> &ShardedStoreClient {
+        &self.router
+    }
+
+    /// How many shard actors this client spans.
+    pub fn shards(&self) -> usize {
+        self.router.shard_count()
+    }
+
+    /// Raw protocol send (tests drive manual servers with this).
+    pub fn send_cmd(&self, cmd: StoreCmd) -> StoreResult<()> {
+        self.router.send_cmd(cmd)
     }
 
     /// Allocate a globally-unique store jid (shared across every clone,
-    /// i.e. across all experiments on this server).
+    /// i.e. across all experiments on this deployment). Local and
+    /// infallible — a lock-free fetch-add, never a server round-trip.
     pub fn alloc_jid(&self) -> i64 {
-        self.next_jid.fetch_add(1, Ordering::SeqCst)
+        self.router.alloc_jid()
     }
 
     /// Reserve `n` jids at once (the store service allocates ranges on
     /// behalf of remote clients); returns the first of the range.
     pub fn alloc_jid_range(&self, n: i64) -> i64 {
-        self.next_jid.fetch_add(n.max(0), Ordering::SeqCst)
-    }
-
-    /// Open an experiment (the server resolves-or-creates the user row);
-    /// returns the eid.
-    pub fn start_experiment(
-        &self,
-        user: &str,
-        proposer: &str,
-        exp_config: &str,
-        now: f64,
-    ) -> Result<i64> {
-        self.request(|reply| StoreCmd::StartExperiment {
-            user: user.to_string(),
-            proposer: proposer.to_string(),
-            exp_config: exp_config.to_string(),
-            now,
-            reply,
-        })
-    }
-
-    pub fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::FinishExperiment { eid, best, now })
-    }
-
-    pub fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::StartJobQueued { jid, eid, config: config.to_string(), now })
-    }
-
-    pub fn start_job_running(
-        &self,
-        jid: i64,
-        eid: i64,
-        rid: i64,
-        config: &str,
-        now: f64,
-    ) -> Result<()> {
-        self.send_cmd(StoreCmd::StartJobRunning {
-            jid,
-            eid,
-            rid,
-            config: config.to_string(),
-            now,
-        })
-    }
-
-    pub fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
-        self.send_cmd(StoreCmd::SetJobRunning { jid, rid })
-    }
-
-    pub fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::CancelJob { jid, now })
-    }
-
-    pub fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::StopJobEarly { jid, now })
-    }
-
-    pub fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::FinishJob { jid, score, ok, now })
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn log_job_event(
-        &self,
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: &str,
-        time: f64,
-        detail: &str,
-        rid: i64,
-        busy: f64,
-    ) -> Result<()> {
-        self.send_cmd(StoreCmd::LogJobEvent {
-            jid,
-            eid,
-            attempt,
-            state: state.to_string(),
-            time,
-            detail: detail.to_string(),
-            rid,
-            busy,
-        })
-    }
-
-    pub fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
-        self.request(|reply| StoreCmd::BestJob { eid, maximize, reply })
-    }
-
-    pub fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
-        self.request(|reply| StoreCmd::JobsOf { eid, reply })
-    }
-
-    pub fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
-        self.request(|reply| StoreCmd::JobEventsOf { eid, reply })
-    }
-
-    /// Run a mini-SQL statement against the live store.
-    pub fn sql(&self, query: &str) -> Result<QueryResult> {
-        self.request(|reply| StoreCmd::Sql { query: query.to_string(), reply })
-    }
-
-    /// Live bookkeeping summary (what `aup status` shows).
-    pub fn status(&self) -> Result<Vec<ExperimentStatus>> {
-        self.request(|reply| StoreCmd::Status { reply })
-    }
-
-    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
-    /// and per-resource utilization.
-    #[allow(clippy::type_complexity)]
-    pub fn top(
-        &self,
-        events: usize,
-    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
-        self.request(|reply| StoreCmd::Top { events, reply })
-    }
-
-    /// WAL I/O counters of the server's store (None when in-memory).
-    pub fn wal_stats(&self) -> Result<Option<WalStats>> {
-        self.request(|reply| StoreCmd::WalStats { reply })
-    }
-
-    /// Force a checkpoint and wait for it.
-    pub fn checkpoint(&self) -> Result<()> {
-        self.request(|reply| StoreCmd::Checkpoint { reply })
-    }
-
-    /// Clock heartbeat (Dispatcher-clock seconds). Drives the server's
-    /// interval checkpoints; cheap enough to call every scheduler poll.
-    pub fn tick(&self, now: f64) -> Result<()> {
-        self.send_cmd(StoreCmd::Tick { now })
+        self.router.alloc_jid_range(n)
     }
 }
 
-/// The in-process transport: every trait method delegates to the
-/// inherent method of the same name (jid allocation is local and
-/// infallible — the atomic allocator never round-trips to the server).
 impl StoreApi for StoreClient {
-    fn alloc_jids(&self, n: i64) -> Result<i64> {
+    fn op(&self, op: StoreOp) -> StoreResult<OpReply> {
+        self.router.op(op)
+    }
+
+    fn alloc_jids(&self, n: i64) -> StoreResult<i64> {
         Ok(self.alloc_jid_range(n))
-    }
-
-    fn start_experiment(
-        &self,
-        user: &str,
-        proposer: &str,
-        exp_config: &str,
-        now: f64,
-    ) -> Result<i64> {
-        StoreClient::start_experiment(self, user, proposer, exp_config, now)
-    }
-
-    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
-        StoreClient::finish_experiment(self, eid, best, now)
-    }
-
-    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
-        StoreClient::start_job_queued(self, jid, eid, config, now)
-    }
-
-    fn start_job_running(
-        &self,
-        jid: i64,
-        eid: i64,
-        rid: i64,
-        config: &str,
-        now: f64,
-    ) -> Result<()> {
-        StoreClient::start_job_running(self, jid, eid, rid, config, now)
-    }
-
-    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
-        StoreClient::set_job_running(self, jid, rid)
-    }
-
-    fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
-        StoreClient::cancel_job(self, jid, now)
-    }
-
-    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
-        StoreClient::stop_job_early(self, jid, now)
-    }
-
-    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
-        StoreClient::finish_job(self, jid, score, ok, now)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn log_job_event(
-        &self,
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: &str,
-        time: f64,
-        detail: &str,
-        rid: i64,
-        busy: f64,
-    ) -> Result<()> {
-        StoreClient::log_job_event(self, jid, eid, attempt, state, time, detail, rid, busy)
-    }
-
-    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
-        StoreClient::best_job(self, eid, maximize)
-    }
-
-    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
-        StoreClient::jobs_of(self, eid)
-    }
-
-    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
-        StoreClient::job_events_of(self, eid)
-    }
-
-    fn sql(&self, query: &str) -> Result<QueryResult> {
-        StoreClient::sql(self, query)
-    }
-
-    fn status(&self) -> Result<Vec<ExperimentStatus>> {
-        StoreClient::status(self)
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn top(
-        &self,
-        events: usize,
-    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
-        StoreClient::top(self, events)
-    }
-
-    fn wal_stats(&self) -> Result<Option<WalStats>> {
-        StoreClient::wal_stats(self)
-    }
-
-    fn checkpoint(&self) -> Result<()> {
-        StoreClient::checkpoint(self)
-    }
-
-    fn tick(&self, now: f64) -> Result<()> {
-        StoreClient::tick(self, now)
     }
 }

@@ -22,6 +22,17 @@
 //! rows sort by `(order column, primary key)` and DESC reverses the
 //! whole order, so an index stream and a scan-sort of the same query
 //! are bit-identical (the property the planner relies on).
+//!
+//! Live access goes through actors: each [`StoreServer`] ([`server`])
+//! exclusively owns one `Store` + one WAL segment and group-commits its
+//! mailbox drains; [`StoreClient`] is the cheap cloneable handle in
+//! front of one server — or, with `--shards N`, in front of N of them
+//! behind the [`shard`] router (experiments partition by `eid % N`,
+//! cross-shard reads fan out and merge). The shared operation
+//! vocabulary ([`op`]) is ONE serializable enum used by the mailbox,
+//! the router, and the wire protocol ([`proto`] / [`service`]) alike,
+//! with typed [`StoreError`] results distinguishing "shard down"
+//! (`Gone`) from "bad request" (`Failed`).
 
 pub mod value;
 pub mod table;
@@ -29,7 +40,9 @@ pub mod sql;
 pub mod wal;
 pub(crate) mod agg;
 pub mod schema;
+pub mod op;
 pub mod server;
+pub mod shard;
 pub mod client;
 pub mod status;
 pub mod proto;
@@ -59,8 +72,10 @@ use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 
 pub use client::{StoreApi, StoreClient};
+pub use op::{JobEventRecord, OpReply, StoreError, StoreOp, StoreResult};
 pub use schema::{ExperimentRow, JobRow, JobStatus, ResourceRow, ResourceStatus};
 pub use server::{ServerConfig, StoreServer, StoreServerHandle};
+pub use shard::ShardedStoreClient;
 pub use service::{RemoteStoreClient, StoreService};
 pub use table::{Row, Table, TableSchema};
 pub use value::{ColType, Value};

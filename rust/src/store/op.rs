@@ -1,0 +1,762 @@
+//! The shared store-operation vocabulary: ONE serializable enum that is
+//! both the in-process mailbox payload ([`StoreCmd::Op`]) and the wire
+//! request body ([`proto::Request::Op`]).
+//!
+//! Before this module the store had a twin problem: every verb existed
+//! once as a `StoreCmd` variant (with mpsc reply channels) and once as a
+//! `proto::Request` variant (with hand-written JSON serde), and the two
+//! could drift silently. Now a verb is added HERE, exactly once:
+//!
+//! * [`StoreOp`] — the operation itself, plain data, serializable. The
+//!   server applies it, the router routes it, the wire carries it.
+//! * [`OpReply`] — the typed answer, one variant per reply shape.
+//! * [`JobEventRecord`] — the builder struct behind `log_job_event`
+//!   (the positional signature grew `rid`/`busy` in PR 5 and was headed
+//!   for more; optional fields now default instead of rippling through
+//!   every caller and the wire).
+//! * [`StoreError`] / [`StoreResult`] — the one typed error surface of
+//!   [`StoreApi`](crate::store::StoreApi). `NoSocket` vs `Gone` vs
+//!   `Failed` is load-bearing: `aup status` reports an offline
+//!   directory differently from a crashed server, and the shard router
+//!   distinguishes "shard down" from "bad request" when merging
+//!   fan-out results.
+//!
+//! Wire compatibility: the JSON tags are EXACTLY the pre-redesign ones
+//! (`"cmd": "start_job_queued"` etc.), optional fields keep their parse
+//! defaults (`rid` -1, `busy` 0.0, `eid` absent = server-assigned), so
+//! old peers interoperate in both directions.
+//!
+//! [`StoreCmd::Op`]: crate::store::server::StoreCmd::Op
+//! [`proto::Request::Op`]: crate::store::proto::Request::Op
+
+use crate::store::proto;
+use crate::store::schema::{JobEventRow, JobRow};
+use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::wal::WalStats;
+use crate::store::QueryResult;
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+// -- the unified error surface ----------------------------------------------
+
+/// Why a [`StoreApi`](crate::store::StoreApi) call failed. One typed
+/// enum instead of ad-hoc strings, keeping the three cases callers
+/// genuinely branch on distinct.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// No service socket exists — the normal offline case for
+    /// auto-attach (`aup status DIR` falls back to the directory
+    /// snapshot silently).
+    NoSocket,
+    /// The store actor / transport is gone: a crashed or shut-down
+    /// server, a dead socket, a desynced connection. Retrying the same
+    /// handle cannot succeed.
+    Gone(String),
+    /// The peer is alive but this request failed (bad eid, read-only
+    /// SQL violation, schema error, …). The handle stays usable.
+    Failed(String),
+}
+
+impl StoreError {
+    /// The human-readable message without the variant framing.
+    pub fn message(&self) -> &str {
+        match self {
+            StoreError::NoSocket => "no store service socket",
+            StoreError::Gone(m) | StoreError::Failed(m) => m,
+        }
+    }
+
+    /// True when the error means the peer itself is unusable (shard
+    /// down), as opposed to one bad request.
+    pub fn is_gone(&self) -> bool {
+        matches!(self, StoreError::NoSocket | StoreError::Gone(_))
+    }
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.message())
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<StoreError> for AupError {
+    fn from(e: StoreError) -> AupError {
+        AupError::Store(e.message().to_string())
+    }
+}
+
+impl From<AupError> for StoreError {
+    fn from(e: AupError) -> StoreError {
+        StoreError::Failed(e.to_string())
+    }
+}
+
+/// Result alias for the [`StoreApi`](crate::store::StoreApi) surface.
+pub type StoreResult<T> = std::result::Result<T, StoreError>;
+
+// -- the log_job_event record -----------------------------------------------
+
+/// One `job_event` journal row, as a builder: required identity up
+/// front, everything else defaulted the way the wire defaults it
+/// (`attempt` 0, `time` 0.0, empty `detail`, `rid` -1, `busy` 0.0).
+///
+/// ```
+/// # use auptimizer::store::JobEventRecord;
+/// let rec = JobEventRecord::new(7, 0, "RUNNING")
+///     .attempt(2)
+///     .at(1.5)
+///     .detail("attempt 2 on cpu:0")
+///     .resource(3, 0.0);
+/// # assert_eq!((rec.jid, rec.rid), (7, 3));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobEventRecord {
+    pub jid: i64,
+    pub eid: i64,
+    pub attempt: i64,
+    pub state: String,
+    pub time: f64,
+    pub detail: String,
+    /// resource occupied by an attempt-ending transition (-1 = none)
+    pub rid: i64,
+    /// seconds that resource was busy (0.0 unless attempt-ending)
+    pub busy: f64,
+}
+
+impl JobEventRecord {
+    pub fn new(jid: i64, eid: i64, state: impl Into<String>) -> JobEventRecord {
+        JobEventRecord {
+            jid,
+            eid,
+            attempt: 0,
+            state: state.into(),
+            time: 0.0,
+            detail: String::new(),
+            rid: -1,
+            busy: 0.0,
+        }
+    }
+
+    pub fn attempt(mut self, attempt: i64) -> JobEventRecord {
+        self.attempt = attempt;
+        self
+    }
+
+    pub fn at(mut self, time: f64) -> JobEventRecord {
+        self.time = time;
+        self
+    }
+
+    pub fn detail(mut self, detail: impl Into<String>) -> JobEventRecord {
+        self.detail = detail.into();
+        self
+    }
+
+    pub fn resource(mut self, rid: i64, busy: f64) -> JobEventRecord {
+        self.rid = rid;
+        self.busy = busy;
+        self
+    }
+}
+
+// -- the operation enum -----------------------------------------------------
+
+/// One store operation — mutation or query — independent of transport.
+/// Serde lives here and ONLY here; the mailbox wraps it in
+/// [`StoreCmd::Op`], the wire in [`proto::Request::Op`].
+///
+/// [`StoreCmd::Op`]: crate::store::server::StoreCmd::Op
+/// [`proto::Request::Op`]: crate::store::proto::Request::Op
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreOp {
+    /// Resolve-or-create the user row, open an experiment; replies the
+    /// eid. `eid: None` asks the serving side to assign one (the legacy
+    /// wire form); the shard router pre-assigns `Some(eid)` so the
+    /// operation can be routed before it executes.
+    StartExperiment {
+        eid: Option<i64>,
+        user: String,
+        proposer: String,
+        exp_config: String,
+        now: f64,
+    },
+    FinishExperiment { eid: i64, best: Option<f64>, now: f64 },
+    /// Insert a PENDING job row (scheduler queue entry).
+    StartJobQueued { jid: i64, eid: i64, config: String, now: f64 },
+    /// Insert a job row directly in RUNNING state (no queue phase).
+    StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
+    SetJobRunning { jid: i64, rid: i64 },
+    CancelJob { jid: i64, now: f64 },
+    /// Trial scheduler killed the job mid-attempt (early stopping).
+    /// Distinct from CancelJob so the aggregates can count saved compute.
+    StopJobEarly { jid: i64, now: f64 },
+    FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
+    /// One scheduler transition into the `job_event` journal.
+    LogJobEvent(JobEventRecord),
+    /// Clock heartbeat (Dispatcher-clock seconds); drives interval
+    /// checkpoints. Broadcast to every shard.
+    Tick { now: f64 },
+    /// Force a checkpoint now (broadcast; each shard flushes its own
+    /// open batch and WAL segment).
+    Checkpoint,
+    BestJob { eid: i64, maximize: bool },
+    JobsOf { eid: i64 },
+    JobEventsOf { eid: i64 },
+    /// Run a mini-SQL statement against the live store (single-shard
+    /// stores only — there is no cross-segment query planner).
+    Sql { query: String },
+    /// Per-experiment bookkeeping summary; fans out and merges across
+    /// shards.
+    Status,
+    /// `aup top` snapshot: RUNNING jobs, the last `events` transitions,
+    /// per-resource utilization; fans out and merges across shards.
+    Top { events: usize },
+    /// WAL I/O counters (summed across shards; None when in-memory).
+    WalStats,
+}
+
+impl StoreOp {
+    /// True for the fire-and-forget mailbox sends: durable at the next
+    /// group-commit drain, no reply channel. Everything else carries a
+    /// reply.
+    pub fn is_fire_and_forget(&self) -> bool {
+        matches!(
+            self,
+            StoreOp::FinishExperiment { .. }
+                | StoreOp::StartJobQueued { .. }
+                | StoreOp::StartJobRunning { .. }
+                | StoreOp::SetJobRunning { .. }
+                | StoreOp::CancelJob { .. }
+                | StoreOp::StopJobEarly { .. }
+                | StoreOp::FinishJob { .. }
+                | StoreOp::LogJobEvent(_)
+                | StoreOp::Tick { .. }
+        )
+    }
+
+    /// The wire tag (`"cmd"` value). One place, so the mailbox enum and
+    /// the wire can never drift.
+    pub fn cmd(&self) -> &'static str {
+        match self {
+            StoreOp::StartExperiment { .. } => "start_experiment",
+            StoreOp::FinishExperiment { .. } => "finish_experiment",
+            StoreOp::StartJobQueued { .. } => "start_job_queued",
+            StoreOp::StartJobRunning { .. } => "start_job_running",
+            StoreOp::SetJobRunning { .. } => "set_job_running",
+            StoreOp::CancelJob { .. } => "cancel_job",
+            StoreOp::StopJobEarly { .. } => "stop_job_early",
+            StoreOp::FinishJob { .. } => "finish_job",
+            StoreOp::LogJobEvent(_) => "log_job_event",
+            StoreOp::Tick { .. } => "tick",
+            StoreOp::Checkpoint => "checkpoint",
+            StoreOp::BestJob { .. } => "best_job",
+            StoreOp::JobsOf { .. } => "jobs_of",
+            StoreOp::JobEventsOf { .. } => "job_events_of",
+            StoreOp::Sql { .. } => "sql",
+            StoreOp::Status => "status",
+            StoreOp::Top { .. } => "top",
+            StoreOp::WalStats => "wal_stats",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cmd = ("cmd", Json::str(self.cmd()));
+        match self {
+            StoreOp::StartExperiment { eid, user, proposer, exp_config, now } => {
+                let mut fields = vec![
+                    cmd,
+                    ("user", Json::str(user.clone())),
+                    ("proposer", Json::str(proposer.clone())),
+                    ("exp_config", Json::str(exp_config.clone())),
+                    ("now", Json::num(*now)),
+                ];
+                // only the router's pre-assigned form carries an eid;
+                // the legacy wire form omits the field entirely
+                if let Some(eid) = eid {
+                    fields.push(("eid", Json::int(*eid)));
+                }
+                Json::obj(fields)
+            }
+            StoreOp::FinishExperiment { eid, best, now } => Json::obj(vec![
+                cmd,
+                ("eid", Json::int(*eid)),
+                ("best", best.map_or(Json::Null, Json::num)),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::StartJobQueued { jid, eid, config, now } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("eid", Json::int(*eid)),
+                ("config", Json::str(config.clone())),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::StartJobRunning { jid, eid, rid, config, now } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("eid", Json::int(*eid)),
+                ("rid", Json::int(*rid)),
+                ("config", Json::str(config.clone())),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::SetJobRunning { jid, rid } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("rid", Json::int(*rid)),
+            ]),
+            StoreOp::CancelJob { jid, now } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::StopJobEarly { jid, now } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::FinishJob { jid, score, ok, now } => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(*jid)),
+                ("score", score.map_or(Json::Null, Json::num)),
+                ("job_ok", Json::Bool(*ok)),
+                ("now", Json::num(*now)),
+            ]),
+            StoreOp::LogJobEvent(r) => Json::obj(vec![
+                cmd,
+                ("jid", Json::int(r.jid)),
+                ("eid", Json::int(r.eid)),
+                ("attempt", Json::int(r.attempt)),
+                ("state", Json::str(r.state.clone())),
+                ("time", Json::num(r.time)),
+                ("detail", Json::str(r.detail.clone())),
+                ("rid", Json::int(r.rid)),
+                ("busy", Json::num(r.busy)),
+            ]),
+            StoreOp::Tick { now } => Json::obj(vec![cmd, ("now", Json::num(*now))]),
+            StoreOp::Checkpoint => Json::obj(vec![cmd]),
+            StoreOp::BestJob { eid, maximize } => Json::obj(vec![
+                cmd,
+                ("eid", Json::int(*eid)),
+                ("maximize", Json::Bool(*maximize)),
+            ]),
+            StoreOp::JobsOf { eid } => Json::obj(vec![cmd, ("eid", Json::int(*eid))]),
+            StoreOp::JobEventsOf { eid } => Json::obj(vec![cmd, ("eid", Json::int(*eid))]),
+            StoreOp::Sql { query } => Json::obj(vec![cmd, ("query", Json::str(query.clone()))]),
+            StoreOp::Status => Json::obj(vec![cmd]),
+            StoreOp::Top { events } => {
+                Json::obj(vec![cmd, ("events", Json::int(*events as i64))])
+            }
+            StoreOp::WalStats => Json::obj(vec![cmd]),
+        }
+    }
+
+    /// Parse an operation from its wire object. Unknown `cmd` tags are
+    /// an error naming the tag (the service echoes it to the peer).
+    pub fn from_json(j: &Json) -> Result<StoreOp> {
+        let cmd = j
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AupError::Store("request missing 'cmd'".into()))?;
+        let str_field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let i64_field = |k: &str| -> Result<i64> {
+            j.get(k)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let f64_field = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| AupError::Store(format!("'{cmd}' request missing '{k}'")))
+        };
+        let opt_f64 = |k: &str| j.get(k).filter(|v| !v.is_null()).and_then(Json::as_f64);
+        Ok(match cmd {
+            "start_experiment" => StoreOp::StartExperiment {
+                // absent on the legacy wire: the serving side assigns
+                eid: j.get("eid").filter(|v| !v.is_null()).and_then(Json::as_i64),
+                user: str_field("user")?,
+                proposer: str_field("proposer")?,
+                exp_config: str_field("exp_config")?,
+                now: f64_field("now")?,
+            },
+            "finish_experiment" => StoreOp::FinishExperiment {
+                eid: i64_field("eid")?,
+                best: opt_f64("best"),
+                now: f64_field("now")?,
+            },
+            "start_job_queued" => StoreOp::StartJobQueued {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                config: str_field("config")?,
+                now: f64_field("now")?,
+            },
+            "start_job_running" => StoreOp::StartJobRunning {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                rid: i64_field("rid")?,
+                config: str_field("config")?,
+                now: f64_field("now")?,
+            },
+            "set_job_running" => StoreOp::SetJobRunning {
+                jid: i64_field("jid")?,
+                rid: i64_field("rid")?,
+            },
+            "cancel_job" => StoreOp::CancelJob { jid: i64_field("jid")?, now: f64_field("now")? },
+            "stop_job_early" => {
+                StoreOp::StopJobEarly { jid: i64_field("jid")?, now: f64_field("now")? }
+            }
+            "finish_job" => StoreOp::FinishJob {
+                jid: i64_field("jid")?,
+                score: opt_f64("score"),
+                ok: j.get("job_ok").and_then(Json::as_bool).unwrap_or(false),
+                now: f64_field("now")?,
+            },
+            "log_job_event" => StoreOp::LogJobEvent(JobEventRecord {
+                jid: i64_field("jid")?,
+                eid: i64_field("eid")?,
+                attempt: i64_field("attempt")?,
+                state: str_field("state")?,
+                time: f64_field("time")?,
+                detail: str_field("detail")?,
+                // optional: a peer from before the utilization columns
+                // simply reports no busy time
+                rid: j.get("rid").and_then(Json::as_i64).unwrap_or(-1),
+                busy: j.get("busy").and_then(Json::as_f64).unwrap_or(0.0),
+            }),
+            "tick" => StoreOp::Tick { now: f64_field("now")? },
+            "checkpoint" => StoreOp::Checkpoint,
+            "best_job" => StoreOp::BestJob {
+                eid: i64_field("eid")?,
+                maximize: j.get("maximize").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "jobs_of" => StoreOp::JobsOf { eid: i64_field("eid")? },
+            "job_events_of" => StoreOp::JobEventsOf { eid: i64_field("eid")? },
+            "sql" => StoreOp::Sql { query: str_field("query")? },
+            "status" => StoreOp::Status,
+            "top" => StoreOp::Top { events: i64_field("events")?.max(0) as usize },
+            "wal_stats" => StoreOp::WalStats,
+            other => return Err(AupError::Store(format!("unknown request cmd '{other}'"))),
+        })
+    }
+}
+
+// -- the typed reply --------------------------------------------------------
+
+/// The typed answer to one [`StoreOp`], one variant per reply shape.
+#[derive(Debug, PartialEq)]
+pub enum OpReply {
+    Unit,
+    Eid(i64),
+    Job(Option<JobRow>),
+    Jobs(Vec<JobRow>),
+    Events(Vec<JobEventRow>),
+    Query(QueryResult),
+    Statuses(Vec<ExperimentStatus>),
+    #[allow(clippy::type_complexity)]
+    Top {
+        running: Vec<RunningJob>,
+        events: Vec<JobEventRow>,
+        util: Vec<ResourceUtil>,
+    },
+    Wal(Option<WalStats>),
+}
+
+fn shape_err<T>(what: &str) -> StoreResult<T> {
+    Err(StoreError::Failed(format!("unexpected store reply shape (wanted {what})")))
+}
+
+impl OpReply {
+    pub fn unit(self) -> StoreResult<()> {
+        match self {
+            OpReply::Unit => Ok(()),
+            _ => shape_err("unit"),
+        }
+    }
+
+    pub fn eid(self) -> StoreResult<i64> {
+        match self {
+            OpReply::Eid(e) => Ok(e),
+            _ => shape_err("eid"),
+        }
+    }
+
+    pub fn job(self) -> StoreResult<Option<JobRow>> {
+        match self {
+            OpReply::Job(j) => Ok(j),
+            _ => shape_err("job"),
+        }
+    }
+
+    pub fn jobs(self) -> StoreResult<Vec<JobRow>> {
+        match self {
+            OpReply::Jobs(v) => Ok(v),
+            _ => shape_err("jobs"),
+        }
+    }
+
+    pub fn events(self) -> StoreResult<Vec<JobEventRow>> {
+        match self {
+            OpReply::Events(v) => Ok(v),
+            _ => shape_err("events"),
+        }
+    }
+
+    pub fn query(self) -> StoreResult<QueryResult> {
+        match self {
+            OpReply::Query(q) => Ok(q),
+            _ => shape_err("query result"),
+        }
+    }
+
+    pub fn statuses(self) -> StoreResult<Vec<ExperimentStatus>> {
+        match self {
+            OpReply::Statuses(v) => Ok(v),
+            _ => shape_err("statuses"),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn top(self) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
+        match self {
+            OpReply::Top { running, events, util } => Ok((running, events, util)),
+            _ => shape_err("top"),
+        }
+    }
+
+    pub fn wal(self) -> StoreResult<Option<WalStats>> {
+        match self {
+            OpReply::Wal(w) => Ok(w),
+            _ => shape_err("wal stats"),
+        }
+    }
+
+    /// Serialize as the legacy wire reply value for this shape (the
+    /// same JSON a pre-redesign server produced).
+    pub fn to_json(&self) -> Json {
+        match self {
+            OpReply::Unit => Json::Null,
+            OpReply::Eid(e) => Json::int(*e),
+            OpReply::Job(j) => j.as_ref().map_or(Json::Null, proto::job_row_to_json),
+            OpReply::Jobs(v) => Json::arr(v.iter().map(proto::job_row_to_json).collect()),
+            OpReply::Events(v) => {
+                Json::arr(v.iter().map(proto::job_event_to_json).collect())
+            }
+            OpReply::Query(q) => proto::query_result_to_json(q),
+            OpReply::Statuses(v) => {
+                Json::arr(v.iter().map(proto::status_to_json).collect())
+            }
+            OpReply::Top { running, events, util } => Json::obj(vec![
+                (
+                    "running",
+                    Json::arr(running.iter().map(proto::running_job_to_json).collect()),
+                ),
+                (
+                    "events",
+                    Json::arr(events.iter().map(proto::job_event_to_json).collect()),
+                ),
+                (
+                    "util",
+                    Json::arr(util.iter().map(proto::resource_util_to_json).collect()),
+                ),
+            ]),
+            OpReply::Wal(w) => proto::wal_stats_to_json(w),
+        }
+    }
+
+    /// Parse a wire reply value back into the typed reply; the shape to
+    /// expect is dictated by the operation that was sent.
+    pub fn from_json(op: &StoreOp, v: &Json) -> Result<OpReply> {
+        Ok(match op {
+            StoreOp::StartExperiment { .. } => OpReply::Eid(
+                v.as_i64()
+                    .ok_or_else(|| AupError::Store("start_experiment: non-integer reply".into()))?,
+            ),
+            StoreOp::BestJob { .. } => {
+                if v.is_null() {
+                    OpReply::Job(None)
+                } else {
+                    OpReply::Job(Some(proto::job_row_from_json(v)?))
+                }
+            }
+            StoreOp::JobsOf { .. } => OpReply::Jobs(
+                v.as_arr()
+                    .ok_or_else(|| AupError::Store("jobs_of: non-array reply".into()))?
+                    .iter()
+                    .map(proto::job_row_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            StoreOp::JobEventsOf { .. } => OpReply::Events(
+                v.as_arr()
+                    .ok_or_else(|| AupError::Store("job_events_of: non-array reply".into()))?
+                    .iter()
+                    .map(proto::job_event_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            StoreOp::Sql { .. } => OpReply::Query(proto::query_result_from_json(v)?),
+            StoreOp::Status => OpReply::Statuses(
+                v.as_arr()
+                    .ok_or_else(|| AupError::Store("status: non-array reply".into()))?
+                    .iter()
+                    .map(proto::status_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            StoreOp::Top { .. } => {
+                let running = v
+                    .get("running")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| AupError::Store("top: missing 'running'".into()))?
+                    .iter()
+                    .map(proto::running_job_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let events = v
+                    .get("events")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| AupError::Store("top: missing 'events'".into()))?
+                    .iter()
+                    .map(proto::job_event_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                // optional: an older serving side sends no utilization
+                let util = match v.get("util").and_then(Json::as_arr) {
+                    Some(arr) => arr
+                        .iter()
+                        .map(proto::resource_util_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    None => Vec::new(),
+                };
+                OpReply::Top { running, events, util }
+            }
+            StoreOp::WalStats => OpReply::Wal(proto::wal_stats_from_json(v)?),
+            // every mutation (and tick/checkpoint) answers null
+            _ => OpReply::Unit,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_ops() -> Vec<StoreOp> {
+        vec![
+            StoreOp::StartExperiment {
+                eid: None,
+                user: "bob".into(),
+                proposer: "tpe".into(),
+                exp_config: "{}".into(),
+                now: 1.5,
+            },
+            StoreOp::StartExperiment {
+                eid: Some(7),
+                user: "bob".into(),
+                proposer: "tpe".into(),
+                exp_config: "{}".into(),
+                now: 1.5,
+            },
+            StoreOp::FinishExperiment { eid: 2, best: Some(0.5), now: 9.0 },
+            StoreOp::FinishExperiment { eid: 2, best: None, now: 9.0 },
+            StoreOp::StartJobQueued { jid: 1, eid: 0, config: "{}".into(), now: 0.5 },
+            StoreOp::StartJobRunning { jid: 1, eid: 0, rid: 4, config: "{}".into(), now: 0.5 },
+            StoreOp::SetJobRunning { jid: 1, rid: 2 },
+            StoreOp::CancelJob { jid: 1, now: 3.0 },
+            StoreOp::StopJobEarly { jid: 1, now: 3.5 },
+            StoreOp::FinishJob { jid: 1, score: Some(0.25), ok: true, now: 4.0 },
+            StoreOp::FinishJob { jid: 1, score: None, ok: false, now: 4.0 },
+            StoreOp::LogJobEvent(
+                JobEventRecord::new(1, 0, "BACKOFF")
+                    .attempt(2)
+                    .at(2.5)
+                    .detail("attempt 2 failed: boom")
+                    .resource(3, 1.25),
+            ),
+            StoreOp::Tick { now: 60.0 },
+            StoreOp::Checkpoint,
+            StoreOp::BestJob { eid: 3, maximize: true },
+            StoreOp::JobsOf { eid: 0 },
+            StoreOp::JobEventsOf { eid: 1 },
+            StoreOp::Sql { query: "SELECT * FROM job".into() },
+            StoreOp::Status,
+            StoreOp::Top { events: 12 },
+            StoreOp::WalStats,
+        ]
+    }
+
+    #[test]
+    fn every_op_roundtrips_through_json() {
+        for op in all_ops() {
+            let j = op.to_json();
+            let back = StoreOp::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, op, "tag {}", op.cmd());
+        }
+    }
+
+    #[test]
+    fn legacy_start_experiment_without_eid_parses_as_server_assigned() {
+        // the pre-shard wire form has no eid field at all
+        let j = Json::parse(
+            r#"{"cmd":"start_experiment","user":"a","proposer":"random",
+                "exp_config":"{}","now":0.0}"#,
+        )
+        .unwrap();
+        match StoreOp::from_json(&j).unwrap() {
+            StoreOp::StartExperiment { eid: None, .. } => {}
+            other => panic!("expected server-assigned StartExperiment, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_log_job_event_defaults_rid_and_busy() {
+        let j = Json::parse(
+            r#"{"cmd":"log_job_event","jid":1,"eid":0,"attempt":1,
+                "state":"RUNNING","time":1.0,"detail":"x"}"#,
+        )
+        .unwrap();
+        match StoreOp::from_json(&j).unwrap() {
+            StoreOp::LogJobEvent(r) => assert_eq!((r.rid, r.busy), (-1, 0.0)),
+            other => panic!("expected LogJobEvent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn record_builder_defaults() {
+        let r = JobEventRecord::new(4, 2, "QUEUED");
+        assert_eq!(r.attempt, 0);
+        assert_eq!(r.time, 0.0);
+        assert_eq!(r.detail, "");
+        assert_eq!((r.rid, r.busy), (-1, 0.0));
+    }
+
+    #[test]
+    fn store_error_distinctions_survive_conversion() {
+        assert!(StoreError::NoSocket.is_gone());
+        assert!(StoreError::Gone("dead".into()).is_gone());
+        assert!(!StoreError::Failed("bad eid".into()).is_gone());
+        let aup: AupError = StoreError::Failed("bad eid".into()).into();
+        assert!(aup.to_string().contains("bad eid"));
+        let back: StoreError = aup.into();
+        assert!(matches!(back, StoreError::Failed(_)));
+    }
+
+    #[test]
+    fn fire_and_forget_partition_matches_reply_shapes() {
+        for op in all_ops() {
+            let needs_reply = matches!(
+                op,
+                StoreOp::StartExperiment { .. }
+                    | StoreOp::Checkpoint
+                    | StoreOp::BestJob { .. }
+                    | StoreOp::JobsOf { .. }
+                    | StoreOp::JobEventsOf { .. }
+                    | StoreOp::Sql { .. }
+                    | StoreOp::Status
+                    | StoreOp::Top { .. }
+                    | StoreOp::WalStats
+            );
+            assert_eq!(op.is_fire_and_forget(), !needs_reply, "tag {}", op.cmd());
+        }
+    }
+}

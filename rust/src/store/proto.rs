@@ -1,23 +1,22 @@
 //! Wire protocol for the cross-process store service.
 //!
-//! The in-process [`StoreCmd`] mailbox protocol cannot cross a process
-//! boundary (reply channels are mpsc `Sender`s), so `aup serve` speaks
-//! this serialized twin of it instead: every request is one JSON object
-//! tagged by `"cmd"`, every reply is `{"ok": true, "value": …}` or
-//! `{"ok": false, "error": "…"}`, and both directions are framed as a
-//! 4-byte big-endian length followed by that many bytes of UTF-8 JSON.
+//! Every request is one JSON object tagged by `"cmd"`, every reply is
+//! `{"ok": true, "value": …}` or `{"ok": false, "error": "…", "kind":
+//! "gone"|"failed"}`, and both directions are framed as a 4-byte
+//! big-endian length followed by that many bytes of UTF-8 JSON.
 //!
-//! The translation is intentionally one-to-one: a [`Request`] variant
-//! maps onto exactly one [`StoreCmd`] send (plus the few service-level
-//! verbs a remote process needs — jid allocation, experiment submission,
-//! a ping). That keeps the socket front-end a thin multiplexer: remote
-//! mutations enter the SAME server mailbox as in-process ones and are
-//! group-committed in the same WAL batches.
-//!
-//! [`StoreCmd`]: crate::store::server::StoreCmd
+//! Store operations are NOT redefined here: [`Request::Op`] carries the
+//! same [`StoreOp`] enum the in-process mailbox speaks (its serde lives
+//! in [`super::op`], in one place). This module only adds the
+//! service-level verbs that exist across a process boundary — a liveness
+//! ping, jid-range allocation, experiment submission, and the worker
+//! lease protocol. The socket front-end is a thin multiplexer: a remote
+//! op enters the owning shard's mailbox exactly like an in-process one
+//! and is group-committed in the same WAL batches.
 
 use std::io::{Read, Write};
 
+use crate::store::op::{StoreError, StoreOp, StoreResult};
 use crate::store::schema::{JobEventRow, JobRow, JobStatus};
 use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
@@ -69,23 +68,14 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<String>> {
         .map_err(|_| AupError::Store("frame payload is not UTF-8".into()))
 }
 
-/// One remote request — the serializable twin of [`StoreCmd`], plus the
-/// service-level verbs (`Ping`, `AllocJids`, `Submit`) that only make
-/// sense across a process boundary.
-///
-/// [`StoreCmd`]: crate::store::server::StoreCmd
+/// One remote request: a store operation (verbatim [`StoreOp`], shared
+/// with the mailbox — see [`super::op`]) or one of the service-level
+/// verbs that only make sense across a process boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Liveness handshake; also how `aup status` decides a socket file is
     /// live rather than stale.
     Ping,
-    Status,
-    Top { events: usize },
-    Sql { query: String },
-    BestJob { eid: i64, maximize: bool },
-    JobsOf { eid: i64 },
-    JobEventsOf { eid: i64 },
-    WalStats,
     /// Reserve `n` globally-unique store jids; replies the first of the
     /// contiguous range (allocation happens on the serving side's atomic
     /// allocator, so remote and local trackers never collide).
@@ -93,30 +83,6 @@ pub enum Request {
     /// Enqueue an experiment into the serving process's live batch run
     /// (`aup submit`). The config is the experiment.json object.
     Submit { config: Json, user: Option<String> },
-    StartExperiment { user: String, proposer: String, exp_config: String, now: f64 },
-    FinishExperiment { eid: i64, best: Option<f64>, now: f64 },
-    StartJobQueued { jid: i64, eid: i64, config: String, now: f64 },
-    StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
-    SetJobRunning { jid: i64, rid: i64 },
-    CancelJob { jid: i64, now: f64 },
-    /// The trial scheduler killed the job mid-attempt (early stopping).
-    /// Distinct from CancelJob so saved compute stays countable.
-    StopJobEarly { jid: i64, now: f64 },
-    FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
-    LogJobEvent {
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: String,
-        time: f64,
-        detail: String,
-        /// resource occupancy of an attempt-ending transition (`-1, 0.0`
-        /// otherwise); optional on the wire for older peers
-        rid: i64,
-        busy: f64,
-    },
-    Tick { now: f64 },
-    Checkpoint,
     /// Worker fleet: ask the serving batch for one runnable job. Replies
     /// a [`LeaseOffer`] object, or null when nothing is leasable right
     /// now (the worker backs off and re-polls).
@@ -142,35 +108,14 @@ pub enum Request {
         /// wall-clock seconds the attempt ran on the worker
         elapsed: f64,
     },
+    /// A store operation, exactly as the mailbox would carry it.
+    Op(StoreOp),
 }
 
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
             Request::Ping => Json::obj(vec![("cmd", Json::str("ping"))]),
-            Request::Status => Json::obj(vec![("cmd", Json::str("status"))]),
-            Request::Top { events } => Json::obj(vec![
-                ("cmd", Json::str("top")),
-                ("events", Json::int(*events as i64)),
-            ]),
-            Request::Sql { query } => Json::obj(vec![
-                ("cmd", Json::str("sql")),
-                ("query", Json::str(query.clone())),
-            ]),
-            Request::BestJob { eid, maximize } => Json::obj(vec![
-                ("cmd", Json::str("best_job")),
-                ("eid", Json::int(*eid)),
-                ("maximize", Json::Bool(*maximize)),
-            ]),
-            Request::JobsOf { eid } => Json::obj(vec![
-                ("cmd", Json::str("jobs_of")),
-                ("eid", Json::int(*eid)),
-            ]),
-            Request::JobEventsOf { eid } => Json::obj(vec![
-                ("cmd", Json::str("job_events_of")),
-                ("eid", Json::int(*eid)),
-            ]),
-            Request::WalStats => Json::obj(vec![("cmd", Json::str("wal_stats"))]),
             Request::AllocJids { n } => Json::obj(vec![
                 ("cmd", Json::str("alloc_jids")),
                 ("n", Json::int(*n)),
@@ -180,73 +125,6 @@ impl Request {
                 ("config", config.clone()),
                 ("user", user.clone().map_or(Json::Null, Json::str)),
             ]),
-            Request::StartExperiment { user, proposer, exp_config, now } => Json::obj(vec![
-                ("cmd", Json::str("start_experiment")),
-                ("user", Json::str(user.clone())),
-                ("proposer", Json::str(proposer.clone())),
-                ("exp_config", Json::str(exp_config.clone())),
-                ("now", Json::num(*now)),
-            ]),
-            Request::FinishExperiment { eid, best, now } => Json::obj(vec![
-                ("cmd", Json::str("finish_experiment")),
-                ("eid", Json::int(*eid)),
-                ("best", best.map_or(Json::Null, Json::num)),
-                ("now", Json::num(*now)),
-            ]),
-            Request::StartJobQueued { jid, eid, config, now } => Json::obj(vec![
-                ("cmd", Json::str("start_job_queued")),
-                ("jid", Json::int(*jid)),
-                ("eid", Json::int(*eid)),
-                ("config", Json::str(config.clone())),
-                ("now", Json::num(*now)),
-            ]),
-            Request::StartJobRunning { jid, eid, rid, config, now } => Json::obj(vec![
-                ("cmd", Json::str("start_job_running")),
-                ("jid", Json::int(*jid)),
-                ("eid", Json::int(*eid)),
-                ("rid", Json::int(*rid)),
-                ("config", Json::str(config.clone())),
-                ("now", Json::num(*now)),
-            ]),
-            Request::SetJobRunning { jid, rid } => Json::obj(vec![
-                ("cmd", Json::str("set_job_running")),
-                ("jid", Json::int(*jid)),
-                ("rid", Json::int(*rid)),
-            ]),
-            Request::CancelJob { jid, now } => Json::obj(vec![
-                ("cmd", Json::str("cancel_job")),
-                ("jid", Json::int(*jid)),
-                ("now", Json::num(*now)),
-            ]),
-            Request::StopJobEarly { jid, now } => Json::obj(vec![
-                ("cmd", Json::str("stop_job_early")),
-                ("jid", Json::int(*jid)),
-                ("now", Json::num(*now)),
-            ]),
-            Request::FinishJob { jid, score, ok, now } => Json::obj(vec![
-                ("cmd", Json::str("finish_job")),
-                ("jid", Json::int(*jid)),
-                ("score", score.map_or(Json::Null, Json::num)),
-                ("job_ok", Json::Bool(*ok)),
-                ("now", Json::num(*now)),
-            ]),
-            Request::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => {
-                Json::obj(vec![
-                    ("cmd", Json::str("log_job_event")),
-                    ("jid", Json::int(*jid)),
-                    ("eid", Json::int(*eid)),
-                    ("attempt", Json::int(*attempt)),
-                    ("state", Json::str(state.clone())),
-                    ("time", Json::num(*time)),
-                    ("detail", Json::str(detail.clone())),
-                    ("rid", Json::int(*rid)),
-                    ("busy", Json::num(*busy)),
-                ])
-            }
-            Request::Tick { now } => {
-                Json::obj(vec![("cmd", Json::str("tick")), ("now", Json::num(*now))])
-            }
-            Request::Checkpoint => Json::obj(vec![("cmd", Json::str("checkpoint"))]),
             Request::Lease { worker } => Json::obj(vec![
                 ("cmd", Json::str("lease")),
                 ("worker", Json::str(worker.clone())),
@@ -269,6 +147,9 @@ impl Request {
                 ("error", error.clone().map_or(Json::Null, Json::str)),
                 ("elapsed", Json::num(*elapsed)),
             ]),
+            // the shared vocabulary serializes itself — the wire tags are
+            // identical to the pre-redesign protocol
+            Request::Op(op) => op.to_json(),
         }
     }
 
@@ -296,16 +177,6 @@ impl Request {
         let opt_f64 = |k: &str| j.get(k).filter(|v| !v.is_null()).and_then(Json::as_f64);
         Ok(match cmd {
             "ping" => Request::Ping,
-            "status" => Request::Status,
-            "top" => Request::Top { events: i64_field("events")?.max(0) as usize },
-            "sql" => Request::Sql { query: str_field("query")? },
-            "best_job" => Request::BestJob {
-                eid: i64_field("eid")?,
-                maximize: j.get("maximize").and_then(Json::as_bool).unwrap_or(false),
-            },
-            "jobs_of" => Request::JobsOf { eid: i64_field("eid")? },
-            "job_events_of" => Request::JobEventsOf { eid: i64_field("eid")? },
-            "wal_stats" => Request::WalStats,
             "alloc_jids" => Request::AllocJids { n: i64_field("n")? },
             "submit" => Request::Submit {
                 config: j
@@ -314,58 +185,6 @@ impl Request {
                     .ok_or_else(|| AupError::Store("'submit' request missing 'config'".into()))?,
                 user: j.get("user").and_then(Json::as_str).map(str::to_string),
             },
-            "start_experiment" => Request::StartExperiment {
-                user: str_field("user")?,
-                proposer: str_field("proposer")?,
-                exp_config: str_field("exp_config")?,
-                now: f64_field("now")?,
-            },
-            "finish_experiment" => Request::FinishExperiment {
-                eid: i64_field("eid")?,
-                best: opt_f64("best"),
-                now: f64_field("now")?,
-            },
-            "start_job_queued" => Request::StartJobQueued {
-                jid: i64_field("jid")?,
-                eid: i64_field("eid")?,
-                config: str_field("config")?,
-                now: f64_field("now")?,
-            },
-            "start_job_running" => Request::StartJobRunning {
-                jid: i64_field("jid")?,
-                eid: i64_field("eid")?,
-                rid: i64_field("rid")?,
-                config: str_field("config")?,
-                now: f64_field("now")?,
-            },
-            "set_job_running" => Request::SetJobRunning {
-                jid: i64_field("jid")?,
-                rid: i64_field("rid")?,
-            },
-            "cancel_job" => Request::CancelJob { jid: i64_field("jid")?, now: f64_field("now")? },
-            "stop_job_early" => {
-                Request::StopJobEarly { jid: i64_field("jid")?, now: f64_field("now")? }
-            }
-            "finish_job" => Request::FinishJob {
-                jid: i64_field("jid")?,
-                score: opt_f64("score"),
-                ok: j.get("job_ok").and_then(Json::as_bool).unwrap_or(false),
-                now: f64_field("now")?,
-            },
-            "log_job_event" => Request::LogJobEvent {
-                jid: i64_field("jid")?,
-                eid: i64_field("eid")?,
-                attempt: i64_field("attempt")?,
-                state: str_field("state")?,
-                time: f64_field("time")?,
-                detail: str_field("detail")?,
-                // optional: a peer from before the utilization columns
-                // simply reports no busy time
-                rid: j.get("rid").and_then(Json::as_i64).unwrap_or(-1),
-                busy: j.get("busy").and_then(Json::as_f64).unwrap_or(0.0),
-            },
-            "tick" => Request::Tick { now: f64_field("now")? },
-            "checkpoint" => Request::Checkpoint,
             "lease" => Request::Lease { worker: str_field("worker")? },
             "heartbeat" => Request::Heartbeat { lease: i64_field("lease")? },
             "report" => Request::Report {
@@ -380,7 +199,9 @@ impl Request {
                 error: j.get("error").and_then(Json::as_str).map(str::to_string),
                 elapsed: f64_field("elapsed")?,
             },
-            other => return Err(AupError::Store(format!("unknown request cmd '{other}'"))),
+            // everything else is a store op; StoreOp::from_json reports
+            // an unknown tag by name
+            _ => Request::Op(StoreOp::from_json(j)?),
         })
     }
 }
@@ -390,22 +211,38 @@ pub fn reply_ok(value: Json) -> Json {
     Json::obj(vec![("ok", Json::Bool(true)), ("value", value)])
 }
 
-/// Build an error reply.
-pub fn reply_err(msg: &str) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+/// Build an error reply. The `kind` field carries the typed
+/// [`StoreError`] distinction across the wire: `"gone"` means the store
+/// actor/transport behind the service died (the peer should not retry
+/// on this connection), `"failed"` means this one request was bad.
+pub fn reply_err(err: &StoreError) -> Json {
+    let kind = if err.is_gone() { "gone" } else { "failed" };
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(err.message())),
+        ("kind", Json::str(kind)),
+    ])
 }
 
-/// Unwrap a reply into its value (or the peer's error).
-pub fn parse_reply(j: &Json) -> Result<Json> {
+/// Unwrap a reply into its value (or the peer's typed error). Replies
+/// from peers predating the `kind` field parse as [`StoreError::Failed`]
+/// — the conservative reading, since the connection demonstrably still
+/// answers.
+pub fn parse_reply(j: &Json) -> StoreResult<Json> {
     match j.get("ok").and_then(Json::as_bool) {
         Some(true) => Ok(j.get("value").cloned().unwrap_or(Json::Null)),
-        Some(false) => Err(AupError::Store(
-            j.get("error")
+        Some(false) => {
+            let msg = j
+                .get("error")
                 .and_then(Json::as_str)
                 .unwrap_or("store service error")
-                .to_string(),
-        )),
-        None => Err(AupError::Store("malformed reply (missing 'ok')".into())),
+                .to_string();
+            match j.get("kind").and_then(Json::as_str) {
+                Some("gone") => Err(StoreError::Gone(msg)),
+                _ => Err(StoreError::Failed(msg)),
+            }
+        }
+        None => Err(StoreError::Failed("malformed reply (missing 'ok')".into())),
     }
 }
 
@@ -777,48 +614,15 @@ mod tests {
 
     #[test]
     fn every_request_roundtrips() {
+        use crate::store::op::JobEventRecord;
         let all = vec![
             Request::Ping,
-            Request::Status,
-            Request::Top { events: 12 },
-            Request::Sql { query: "SELECT * FROM job".into() },
-            Request::BestJob { eid: 3, maximize: true },
-            Request::JobsOf { eid: 0 },
-            Request::JobEventsOf { eid: 1 },
-            Request::WalStats,
             Request::AllocJids { n: 8 },
             Request::Submit {
                 config: Json::obj(vec![("proposer", Json::str("random"))]),
                 user: Some("alice".into()),
             },
             Request::Submit { config: Json::Null, user: None },
-            Request::StartExperiment {
-                user: "bob".into(),
-                proposer: "tpe".into(),
-                exp_config: "{}".into(),
-                now: 1.5,
-            },
-            Request::FinishExperiment { eid: 2, best: Some(0.5), now: 9.0 },
-            Request::FinishExperiment { eid: 2, best: None, now: 9.0 },
-            Request::StartJobQueued { jid: 1, eid: 0, config: "{}".into(), now: 0.5 },
-            Request::StartJobRunning { jid: 1, eid: 0, rid: 4, config: "{}".into(), now: 0.5 },
-            Request::SetJobRunning { jid: 1, rid: 2 },
-            Request::CancelJob { jid: 1, now: 3.0 },
-            Request::StopJobEarly { jid: 1, now: 3.5 },
-            Request::FinishJob { jid: 1, score: Some(0.25), ok: true, now: 4.0 },
-            Request::FinishJob { jid: 1, score: None, ok: false, now: 4.0 },
-            Request::LogJobEvent {
-                jid: 1,
-                eid: 0,
-                attempt: 2,
-                state: "BACKOFF".into(),
-                time: 2.5,
-                detail: "attempt 2 failed: boom".into(),
-                rid: 3,
-                busy: 1.25,
-            },
-            Request::Tick { now: 60.0 },
-            Request::Checkpoint,
             Request::Lease { worker: "rig-7".into() },
             Request::Heartbeat { lease: 42 },
             Request::Report { lease: 42, step: 3, score: 0.875 },
@@ -836,6 +640,37 @@ mod tests {
                 error: Some("script exited with 2".into()),
                 elapsed: 0.25,
             },
+            // one of each store-op shape rides through Request verbatim;
+            // op.rs exhaustively round-trips the full vocabulary
+            Request::Op(StoreOp::Status),
+            Request::Op(StoreOp::Top { events: 12 }),
+            Request::Op(StoreOp::Sql { query: "SELECT * FROM job".into() }),
+            Request::Op(StoreOp::BestJob { eid: 3, maximize: true }),
+            Request::Op(StoreOp::StartExperiment {
+                eid: None,
+                user: "bob".into(),
+                proposer: "tpe".into(),
+                exp_config: "{}".into(),
+                now: 1.5,
+            }),
+            Request::Op(StoreOp::StartExperiment {
+                eid: Some(7),
+                user: "bob".into(),
+                proposer: "tpe".into(),
+                exp_config: "{}".into(),
+                now: 1.5,
+            }),
+            Request::Op(StoreOp::FinishJob { jid: 1, score: Some(0.25), ok: true, now: 4.0 }),
+            Request::Op(StoreOp::LogJobEvent(
+                JobEventRecord::new(1, 0, "BACKOFF")
+                    .attempt(2)
+                    .at(2.5)
+                    .detail("attempt 2 failed: boom")
+                    .resource(3, 1.25),
+            )),
+            Request::Op(StoreOp::Tick { now: 60.0 }),
+            Request::Op(StoreOp::Checkpoint),
+            Request::Op(StoreOp::WalStats),
         ];
         for req in all {
             let j = req.to_json();
@@ -848,8 +683,16 @@ mod tests {
     fn reply_roundtrip() {
         let ok = reply_ok(Json::int(7));
         assert_eq!(parse_reply(&ok).unwrap(), Json::int(7));
-        let err = reply_err("boom");
-        assert!(parse_reply(&err).unwrap_err().to_string().contains("boom"));
+        let err = reply_err(&StoreError::Failed("boom".into()));
+        match parse_reply(&err).unwrap_err() {
+            StoreError::Failed(msg) => assert!(msg.contains("boom")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        let gone = reply_err(&StoreError::Gone("server dead".into()));
+        assert!(matches!(parse_reply(&gone).unwrap_err(), StoreError::Gone(_)));
+        // a legacy reply without 'kind' parses as Failed (peer answered)
+        let legacy = Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str("old"))]);
+        assert!(matches!(parse_reply(&legacy).unwrap_err(), StoreError::Failed(_)));
         assert!(parse_reply(&Json::Null).is_err());
     }
 

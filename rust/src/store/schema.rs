@@ -197,6 +197,13 @@ pub fn next_job_id(store: &mut Store) -> Result<i64> {
     next_id(store, "job")
 }
 
+/// Next free primary key in the `experiment` table. The shard router
+/// seeds its global eid allocator from the max over all shards, so new
+/// experiments never collide with rows in any segment.
+pub fn next_experiment_id(store: &mut Store) -> Result<i64> {
+    next_id(store, "experiment")
+}
+
 /// Look up a user by name (the StoreServer reuses rows across
 /// experiments instead of registering duplicates). Typed scan — the
 /// user table stays tiny.
@@ -250,13 +257,28 @@ pub fn start_experiment(
     now: f64,
 ) -> Result<i64> {
     let eid = next_id(store, "experiment")?;
+    start_experiment_with_eid(store, eid, uid, proposer, exp_config_json, now)?;
+    Ok(eid)
+}
+
+/// Open an experiment under a caller-chosen eid (the shard router
+/// allocates eids globally — `eid % shards` IS the routing decision, so
+/// the id must be fixed before the insert reaches a shard).
+pub fn start_experiment_with_eid(
+    store: &mut Store,
+    eid: i64,
+    uid: i64,
+    proposer: &str,
+    exp_config_json: &str,
+    now: f64,
+) -> Result<()> {
     store.execute(&format!(
         "INSERT INTO experiment (eid, uid, proposer, exp_config, start_time) \
          VALUES ({eid}, {uid}, {}, {}, {now})",
         quote(proposer),
         quote(exp_config_json)
     ))?;
-    Ok(eid)
+    Ok(())
 }
 
 pub fn finish_experiment(store: &mut Store, eid: i64, best: Option<f64>, now: f64) -> Result<()> {

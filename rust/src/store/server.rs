@@ -1,112 +1,73 @@
-//! StoreServer — the actor that owns a [`Store`] and its WAL.
+//! StoreServer — the actor that owns ONE [`Store`] and its WAL segment.
 //!
 //! The paper's §III-C bookkeeping is ONE shared record of users,
 //! resources, experiments and jobs. Before this module, every concurrent
 //! experiment loop needed its own store because `Store` is single-writer
 //! and the WAL cannot take interleaved appends. Following the
 //! service-centralizes-trial-state design of Tune and CHOPT, the store
-//! now lives behind an actor:
+//! lives behind actors:
 //!
 //! * trackers, the scheduler journal and the CLI hold a cheap cloneable
 //!   [`super::StoreClient`] instead of `Arc<Mutex<Store>>`;
-//! * typed [`StoreCmd`]s flow over an mpsc mailbox; mutations are
-//!   fire-and-forget, queries carry a reply channel;
+//! * [`StoreCmd::Op`] wraps the shared [`StoreOp`] vocabulary (the same
+//!   enum the wire speaks — see [`super::op`]) and flows over an mpsc
+//!   mailbox; mutations are fire-and-forget (`reply: None`), queries
+//!   carry a reply channel;
 //! * the server drains its mailbox in batches and **group-commits**:
 //!   every mutation of one drain becomes a SINGLE WAL append instead of
 //!   one write per transition (the scale win — see
 //!   `benches/store_wal_throughput.rs`);
-//! * checkpoints are driven by [`StoreCmd::Tick`] messages stamped from
+//! * checkpoints are driven by [`StoreOp::Tick`] messages stamped from
 //!   the scheduler's `Dispatcher` clock, so group-commit and checkpoint
 //!   timing are deterministic under `SimDispatcher` — the server never
 //!   reads a wall clock;
 //! * the owned store maintains *materialized per-experiment aggregates*
 //!   (status counts, retries, best score/jid), updated as each mutation
-//!   is applied, so [`StoreCmd::Status`] / [`StoreCmd::Top`] answer in
-//!   O(experiments) with zero table scans — a live `aup top` costs the
-//!   same at 10^5 jobs as at 10^2 (`benches/store_query_throughput.rs`
-//!   measures it).
+//!   is applied, so [`StoreOp::Status`] / [`StoreOp::Top`] answer in
+//!   O(experiments) with zero table scans.
 //!
-//! Durability contract: a crash loses at most the open batch; a torn
-//! final append is dropped on replay and `recover_incomplete` sweeps the
-//! jobs whose terminal transition was lost.
+//! **Sharding** ([`StoreServer::spawn_sharded`]): N servers, each
+//! exclusively owning one store + one WAL segment, behind one
+//! [`ShardedStoreClient`] router that implements the same `StoreApi`.
+//! Experiments hash to shards by eid, so every per-experiment aggregate
+//! stays shard-local and the N mailbox drains group-commit to N WAL
+//! files in parallel. See [`super::shard`] for routing and layout.
+//!
+//! Durability contract: a crash loses at most the open batch *of that
+//! shard*; a torn final append is dropped on replay and
+//! `recover_incomplete` sweeps the jobs whose terminal transition was
+//! lost.
 
-use std::sync::atomic::AtomicI64;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::log_warn;
 use crate::store::client::StoreClient;
-use crate::store::schema::{self, JobEventRow, JobRow};
-use crate::store::status::{self, ExperimentStatus, ResourceUtil, RunningJob};
-use crate::store::wal::WalStats;
-use crate::store::{QueryResult, Store};
+use crate::store::op::{OpReply, StoreOp, StoreResult};
+use crate::store::schema;
+use crate::store::shard::ShardedStoreClient;
+use crate::store::status;
+use crate::store::Store;
 use crate::util::error::{AupError, Result};
 
-/// The mailbox protocol. Mutations are fire-and-forget (group-committed
-/// by the next drain); queries answer on their `reply` channel.
+/// The mailbox protocol: the shared [`StoreOp`] vocabulary plus a reply
+/// slot. `reply: None` is the fire-and-forget mutation path
+/// (group-committed by the next drain; a failure is latched and
+/// surfaced at shutdown). `reply: Some(tx)` answers with the typed
+/// [`OpReply`] — or a [`StoreError::Failed`] this request can branch on.
+///
+/// [`StoreError::Failed`]: crate::store::StoreError::Failed
 pub enum StoreCmd {
-    /// Resolve-or-create the user row, open an experiment; replies eid.
-    StartExperiment {
-        user: String,
-        proposer: String,
-        exp_config: String,
-        now: f64,
-        reply: Sender<Result<i64>>,
-    },
-    FinishExperiment { eid: i64, best: Option<f64>, now: f64 },
-    /// Insert a PENDING job row (scheduler queue entry).
-    StartJobQueued { jid: i64, eid: i64, config: String, now: f64 },
-    /// Insert a job row directly in RUNNING state (no queue phase).
-    StartJobRunning { jid: i64, eid: i64, rid: i64, config: String, now: f64 },
-    SetJobRunning { jid: i64, rid: i64 },
-    CancelJob { jid: i64, now: f64 },
-    /// Trial scheduler killed the job mid-attempt (early stopping).
-    /// Distinct from CancelJob so the aggregates can count saved compute.
-    StopJobEarly { jid: i64, now: f64 },
-    FinishJob { jid: i64, score: Option<f64>, ok: bool, now: f64 },
-    /// One scheduler transition into the `job_event` journal. `rid` /
-    /// `busy` report the resource occupancy of an attempt-ending
-    /// transition (`rid = -1, busy = 0.0` otherwise) — they feed the
-    /// per-resource utilization aggregates.
-    LogJobEvent {
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: String,
-        time: f64,
-        detail: String,
-        rid: i64,
-        busy: f64,
-    },
-    BestJob { eid: i64, maximize: bool, reply: Sender<Result<Option<JobRow>>> },
-    JobsOf { eid: i64, reply: Sender<Result<Vec<JobRow>>> },
-    JobEventsOf { eid: i64, reply: Sender<Result<Vec<JobEventRow>>> },
-    /// Run a mini-SQL statement against the live store.
-    Sql { query: String, reply: Sender<Result<QueryResult>> },
-    /// Live per-experiment bookkeeping summary (`aup status` / `aup
-    /// top`). Served from the store's materialized aggregates:
-    /// O(experiments), flat in job count.
-    Status { reply: Sender<Result<Vec<ExperimentStatus>>> },
-    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
-    /// and per-resource utilization (status-index probe + pk-tail stream
-    /// + O(resources) aggregate read — no scans).
-    Top {
-        events: usize,
-        #[allow(clippy::type_complexity)]
-        reply: Sender<Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>>,
-    },
-    /// WAL I/O counters of the owned store (None for in-memory stores).
-    /// Lets remote clients and tests observe group-commit batching live.
-    WalStats { reply: Sender<Result<Option<WalStats>>> },
-    /// Force a checkpoint now.
-    Checkpoint { reply: Sender<Result<()>> },
-    /// Clock heartbeat from the driving loop; `now` is Dispatcher-clock
-    /// seconds (virtual under SimDispatcher). Triggers interval
-    /// checkpoints.
-    Tick { now: f64 },
+    Op { op: StoreOp, reply: Option<Sender<StoreResult<OpReply>>> },
     /// Drain what is queued, final-checkpoint, stop.
     Shutdown,
+}
+
+impl StoreCmd {
+    /// Wrap an operation fire-and-forget.
+    pub fn post(op: StoreOp) -> StoreCmd {
+        StoreCmd::Op { op, reply: None }
+    }
 }
 
 /// Server knobs.
@@ -163,15 +124,27 @@ pub struct StoreServer {
 }
 
 impl StoreServer {
-    /// Wrap `store` in a server, returning it with a connected client.
-    /// The schema is initialized and the client's global jid allocator is
-    /// seeded from the `job` table, so several experiments can insert
-    /// into one store without key collisions.
-    pub fn new(mut store: Store, cfg: ServerConfig) -> Result<(StoreServer, StoreClient)> {
+    /// Wrap `store` in a server, returning it with a connected
+    /// single-shard client. The schema is initialized and the client's
+    /// global jid allocator is seeded from the `job` table, so several
+    /// experiments can insert into one store without key collisions.
+    pub fn new(store: Store, cfg: ServerConfig) -> Result<(StoreServer, StoreClient)> {
+        let (server, tx, next_jid, next_eid) = StoreServer::new_inner(store, cfg)?;
+        let client =
+            StoreClient::from_router(ShardedStoreClient::from_parts(vec![tx], next_jid, next_eid));
+        Ok((server, client))
+    }
+
+    /// Build one shard actor and report its allocator seeds; the caller
+    /// wires the senders into a router spanning all shards.
+    fn new_inner(
+        mut store: Store,
+        cfg: ServerConfig,
+    ) -> Result<(StoreServer, Sender<StoreCmd>, i64, i64)> {
         schema::init_schema(&mut store)?;
         let next_jid = schema::next_job_id(&mut store)?;
+        let next_eid = schema::next_experiment_id(&mut store)?;
         let (tx, rx) = channel();
-        let client = StoreClient { tx, next_jid: Arc::new(AtomicI64::new(next_jid)) };
         let server = StoreServer {
             store,
             rx,
@@ -180,19 +153,57 @@ impl StoreServer {
             stats: ServerStats::default(),
             poisoned: None,
         };
-        Ok((server, client))
+        Ok((server, tx, next_jid, next_eid))
     }
 
     /// Spawn the server on its own OS thread (production mode). The
     /// handle shuts it down gracefully on drop; keep it alive for the
     /// whole run.
     pub fn spawn(store: Store, cfg: ServerConfig) -> Result<(StoreServerHandle, StoreClient)> {
-        let (server, client) = StoreServer::new(store, cfg)?;
-        let tx = client.tx.clone();
+        let (server, tx, next_jid, next_eid) = StoreServer::new_inner(store, cfg)?;
+        let client = StoreClient::from_router(ShardedStoreClient::from_parts(
+            vec![tx.clone()],
+            next_jid,
+            next_eid,
+        ));
         let join = std::thread::Builder::new()
             .name("aup-store-server".into())
             .spawn(move || server.run())?;
         Ok((StoreServerHandle { tx: Some(tx), join: Some(join) }, client))
+    }
+
+    /// Spawn one server thread per store and return one router client
+    /// spanning them all. Shard K owns `stores[K]` exclusively;
+    /// experiments are routed by `eid % N`, so the allocator seeds are
+    /// the max over shards (globally-unique ids regardless of which
+    /// segment an old row lives in). Per-shard configs let crash tests
+    /// kill one shard while its siblings keep committing.
+    pub fn spawn_sharded(
+        stores: Vec<(Store, ServerConfig)>,
+    ) -> Result<(Vec<StoreServerHandle>, StoreClient)> {
+        if stores.is_empty() {
+            return Err(AupError::Store("spawn_sharded needs at least one store".into()));
+        }
+        let mut servers = Vec::with_capacity(stores.len());
+        let mut txs = Vec::with_capacity(stores.len());
+        let (mut next_jid, mut next_eid) = (0, 0);
+        for (store, cfg) in stores {
+            let (server, tx, jid, eid) = StoreServer::new_inner(store, cfg)?;
+            next_jid = next_jid.max(jid);
+            next_eid = next_eid.max(eid);
+            servers.push(server);
+            txs.push(tx);
+        }
+        let mut handles = Vec::with_capacity(servers.len());
+        for (k, server) in servers.into_iter().enumerate() {
+            let join = std::thread::Builder::new()
+                .name(format!("aup-store-shard-{k}"))
+                .spawn(move || server.run())?;
+            handles.push(StoreServerHandle { tx: Some(txs[k].clone()), join: Some(join) });
+        }
+        let client =
+            StoreClient::from_router(ShardedStoreClient::from_parts(txs, next_jid, next_eid));
+        Ok((handles, client))
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -242,10 +253,15 @@ impl StoreServer {
             self.stats.commands += 1;
             match cmd {
                 StoreCmd::Shutdown => stop = true,
-                StoreCmd::Tick { now } => {
+                // ticks fold to one checkpoint check per drain (max wins;
+                // the clock never goes backwards across a batch)
+                StoreCmd::Op { op: StoreOp::Tick { now }, reply } => {
                     tick = Some(tick.map_or(now, |t: f64| t.max(now)));
+                    if let Some(tx) = reply {
+                        let _ = tx.send(Ok(OpReply::Unit));
+                    }
                 }
-                other => self.handle(other),
+                StoreCmd::Op { op, reply } => self.handle(op, reply),
             }
         }
         self.stats.batches += 1;
@@ -283,97 +299,124 @@ impl StoreServer {
 
     // -- internals ---------------------------------------------------------
 
-    fn handle(&mut self, cmd: StoreCmd) {
-        match cmd {
-            StoreCmd::StartExperiment { user, proposer, exp_config, now, reply } => {
-                let res = self.start_experiment(&user, &proposer, &exp_config, now);
-                let _ = reply.send(res);
+    fn handle(&mut self, op: StoreOp, reply: Option<Sender<StoreResult<OpReply>>>) {
+        let res = self.apply_op(op);
+        match reply {
+            Some(tx) => {
+                let _ = tx.send(res);
             }
-            StoreCmd::FinishExperiment { eid, best, now } => {
-                self.mutate(|s| schema::finish_experiment(s, eid, best, now));
+            None => {
+                if let Err(e) = res {
+                    log_warn!("store::server", "mutation failed: {e}");
+                    if self.poisoned.is_none() {
+                        self.poisoned = Some(e.message().to_string());
+                    }
+                }
             }
-            StoreCmd::StartJobQueued { jid, eid, config, now } => {
-                self.mutate(|s| schema::start_job_queued(s, jid, eid, &config, now));
+        }
+    }
+
+    /// Apply ONE operation against the owned store. Shared by the drain
+    /// loop for both reply shapes; errors convert to
+    /// [`StoreError::Failed`] (the store itself is still alive).
+    fn apply_op(&mut self, op: StoreOp) -> StoreResult<OpReply> {
+        match op {
+            StoreOp::StartExperiment { eid, user, proposer, exp_config, now } => {
+                let uid = match schema::find_user(&mut self.store, &user)? {
+                    Some(uid) => uid,
+                    None => schema::add_user(&mut self.store, &user)?,
+                };
+                let eid = match eid {
+                    // the shard router pre-assigns eids so the operation
+                    // was routable; honor its choice
+                    Some(eid) => {
+                        schema::start_experiment_with_eid(
+                            &mut self.store,
+                            eid,
+                            uid,
+                            &proposer,
+                            &exp_config,
+                            now,
+                        )?;
+                        eid
+                    }
+                    None => {
+                        schema::start_experiment(&mut self.store, uid, &proposer, &exp_config, now)?
+                    }
+                };
+                Ok(OpReply::Eid(eid))
             }
-            StoreCmd::StartJobRunning { jid, eid, rid, config, now } => {
-                self.mutate(|s| schema::start_job(s, jid, eid, rid, &config, now));
+            StoreOp::FinishExperiment { eid, best, now } => {
+                schema::finish_experiment(&mut self.store, eid, best, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::SetJobRunning { jid, rid } => {
-                self.mutate(|s| schema::set_job_running(s, jid, rid));
+            StoreOp::StartJobQueued { jid, eid, config, now } => {
+                schema::start_job_queued(&mut self.store, jid, eid, &config, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::CancelJob { jid, now } => {
-                self.mutate(|s| schema::cancel_job(s, jid, now));
+            StoreOp::StartJobRunning { jid, eid, rid, config, now } => {
+                schema::start_job(&mut self.store, jid, eid, rid, &config, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::StopJobEarly { jid, now } => {
-                self.mutate(|s| schema::stop_job_early(s, jid, now));
+            StoreOp::SetJobRunning { jid, rid } => {
+                schema::set_job_running(&mut self.store, jid, rid)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::FinishJob { jid, score, ok, now } => {
-                self.mutate(|s| schema::finish_job(s, jid, score, ok, now));
+            StoreOp::CancelJob { jid, now } => {
+                schema::cancel_job(&mut self.store, jid, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => {
-                self.mutate(|s| {
-                    schema::log_job_event(s, jid, eid, attempt, &state, time, &detail, rid, busy)
-                        .map(|_| ())
-                });
+            StoreOp::StopJobEarly { jid, now } => {
+                schema::stop_job_early(&mut self.store, jid, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::BestJob { eid, maximize, reply } => {
-                let _ = reply.send(schema::best_job(&mut self.store, eid, maximize));
+            StoreOp::FinishJob { jid, score, ok, now } => {
+                schema::finish_job(&mut self.store, jid, score, ok, now)?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::JobsOf { eid, reply } => {
-                let _ = reply.send(schema::jobs_of(&mut self.store, eid));
+            StoreOp::LogJobEvent(r) => {
+                schema::log_job_event(
+                    &mut self.store,
+                    r.jid,
+                    r.eid,
+                    r.attempt,
+                    &r.state,
+                    r.time,
+                    &r.detail,
+                    r.rid,
+                    r.busy,
+                )?;
+                Ok(OpReply::Unit)
             }
-            StoreCmd::JobEventsOf { eid, reply } => {
-                let _ = reply.send(schema::job_events_of(&mut self.store, eid));
-            }
-            StoreCmd::Sql { query, reply } => {
-                let _ = reply.send(self.store.execute(&query));
-            }
-            StoreCmd::Status { reply } => {
-                let _ = reply.send(status::experiment_statuses(&mut self.store));
-            }
-            StoreCmd::Top { events, reply } => {
-                let res = status::running_jobs(&mut self.store).and_then(|running| {
-                    let events = status::recent_events(&mut self.store, events)?;
-                    let util = status::resource_utilization(&self.store)?;
-                    Ok((running, events, util))
-                });
-                let _ = reply.send(res);
-            }
-            StoreCmd::WalStats { reply } => {
-                let _ = reply.send(Ok(self.store.wal_stats()));
-            }
-            StoreCmd::Checkpoint { reply } => {
+            // normally folded by drain_once; a direct call is a no-op
+            // (the checkpoint check runs at batch end)
+            StoreOp::Tick { .. } => Ok(OpReply::Unit),
+            StoreOp::Checkpoint => {
                 let res = self.checkpoint_now();
                 // a checkpoint flushes the open batch; re-enter group-
                 // commit mode for the rest of this drain
                 self.store.begin_batch();
-                let _ = reply.send(res);
+                res?;
+                Ok(OpReply::Unit)
             }
-            // filtered out by drain_once
-            StoreCmd::Tick { .. } | StoreCmd::Shutdown => {}
-        }
-    }
-
-    fn start_experiment(
-        &mut self,
-        user: &str,
-        proposer: &str,
-        exp_config: &str,
-        now: f64,
-    ) -> Result<i64> {
-        let uid = match schema::find_user(&mut self.store, user)? {
-            Some(uid) => uid,
-            None => schema::add_user(&mut self.store, user)?,
-        };
-        schema::start_experiment(&mut self.store, uid, proposer, exp_config, now)
-    }
-
-    fn mutate(&mut self, f: impl FnOnce(&mut Store) -> Result<()>) {
-        if let Err(e) = f(&mut self.store) {
-            log_warn!("store::server", "mutation failed: {e}");
-            if self.poisoned.is_none() {
-                self.poisoned = Some(e.to_string());
+            StoreOp::BestJob { eid, maximize } => {
+                Ok(OpReply::Job(schema::best_job(&mut self.store, eid, maximize)?))
             }
+            StoreOp::JobsOf { eid } => Ok(OpReply::Jobs(schema::jobs_of(&mut self.store, eid)?)),
+            StoreOp::JobEventsOf { eid } => {
+                Ok(OpReply::Events(schema::job_events_of(&mut self.store, eid)?))
+            }
+            StoreOp::Sql { query } => Ok(OpReply::Query(self.store.execute(&query)?)),
+            StoreOp::Status => {
+                Ok(OpReply::Statuses(status::experiment_statuses(&mut self.store)?))
+            }
+            StoreOp::Top { events } => {
+                let running = status::running_jobs(&mut self.store)?;
+                let events = status::recent_events(&mut self.store, events)?;
+                let util = status::resource_utilization(&self.store)?;
+                Ok(OpReply::Top { running, events, util })
+            }
+            StoreOp::WalStats => Ok(OpReply::Wal(self.store.wal_stats())),
         }
     }
 
@@ -389,13 +432,13 @@ impl StoreServer {
             }
             Some(last) if now - last >= self.cfg.checkpoint_interval - 1e-9 => {
                 self.last_checkpoint = Some(now);
-                self.checkpoint_now()
+                self.checkpoint_now().map_err(AupError::from)
             }
             _ => Ok(()),
         }
     }
 
-    fn checkpoint_now(&mut self) -> Result<()> {
+    fn checkpoint_now(&mut self) -> StoreResult<()> {
         self.store.checkpoint()?;
         self.stats.checkpoints += 1;
         Ok(())
@@ -409,25 +452,36 @@ impl StoreServer {
 #[doc(hidden)]
 pub mod wal_workload {
     use super::*;
+    use crate::store::client::StoreApi;
+    use crate::store::op::JobEventRecord;
 
     pub const MUTATIONS_PER_JOB: u64 = 5;
 
     /// Baseline flavor: direct schema calls, one WAL append each.
-    pub fn apply_direct(store: &mut Store, jid: i64) -> Result<()> {
-        schema::start_job_queued(store, jid, 0, "{}", 0.0)?;
-        schema::log_job_event(store, jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)?;
+    pub fn apply_direct(store: &mut Store, jid: i64, eid: i64) -> Result<()> {
+        schema::start_job_queued(store, jid, eid, "{}", 0.0)?;
+        schema::log_job_event(store, jid, eid, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)?;
         schema::set_job_running(store, jid, 0)?;
-        schema::log_job_event(store, jid, 0, 1, "DONE", 2.0, "score 1", 0, 1.0)?;
+        schema::log_job_event(store, jid, eid, 1, "DONE", 2.0, "score 1", 0, 1.0)?;
         schema::finish_job(store, jid, Some(1.0), true, 2.0)
     }
 
     /// Group-commit flavor: the same five mutations as mailbox sends.
-    pub fn send_via_client(client: &StoreClient, jid: i64) -> Result<()> {
-        client.start_job_queued(jid, 0, "{}", 0.0)?;
-        client.log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)?;
+    pub fn send_via_client(client: &StoreClient, jid: i64, eid: i64) -> Result<()> {
+        client.start_job_queued(jid, eid, "{}", 0.0)?;
+        client.log_job_event(
+            JobEventRecord::new(jid, eid, "RUNNING").attempt(1).at(1.0).detail("attempt 1"),
+        )?;
         client.set_job_running(jid, 0)?;
-        client.log_job_event(jid, 0, 1, "DONE", 2.0, "score 1", 0, 1.0)?;
-        client.finish_job(jid, Some(1.0), true, 2.0)
+        client.log_job_event(
+            JobEventRecord::new(jid, eid, "DONE")
+                .attempt(1)
+                .at(2.0)
+                .detail("score 1")
+                .resource(0, 1.0),
+        )?;
+        client.finish_job(jid, Some(1.0), true, 2.0)?;
+        Ok(())
     }
 }
 
@@ -475,7 +529,8 @@ impl Drop for StoreServerHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::store::Value;
+    use crate::store::op::JobEventRecord;
+    use crate::store::{StoreApi, Value};
     use crate::util::fsutil::temp_dir;
 
     /// Manually-driven server: deterministic batch boundaries.
@@ -490,9 +545,7 @@ mod tests {
         let before = server.store_mut().wal_stats().unwrap();
         for jid in 0..20 {
             client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
-            client
-                .log_job_event(jid, 0, 0, "QUEUED", 0.0, "submitted", -1, 0.0)
-                .unwrap();
+            client.log_job_event(JobEventRecord::new(jid, 0, "QUEUED").detail("submitted")).unwrap();
         }
         assert_eq!(server.drain_once(false).unwrap(), Drain::Processed(40));
         let after = server.store_mut().wal_stats().unwrap();
@@ -508,22 +561,25 @@ mod tests {
         let (mut server, client) = manual(&dir, ServerConfig::default());
         let (tx, rx) = channel();
         client
-            .send_cmd(StoreCmd::StartExperiment {
-                user: "alice".into(),
-                proposer: "random".into(),
-                exp_config: "{}".into(),
-                now: 0.0,
-                reply: tx,
+            .send_cmd(StoreCmd::Op {
+                op: StoreOp::StartExperiment {
+                    eid: None,
+                    user: "alice".into(),
+                    proposer: "random".into(),
+                    exp_config: "{}".into(),
+                    now: 0.0,
+                },
+                reply: Some(tx),
             })
             .unwrap();
         client.start_job_queued(0, 0, "{}", 1.0).unwrap();
         let (qtx, qrx) = channel();
         client
-            .send_cmd(StoreCmd::JobsOf { eid: 0, reply: qtx })
+            .send_cmd(StoreCmd::Op { op: StoreOp::JobsOf { eid: 0 }, reply: Some(qtx) })
             .unwrap();
         server.drain_once(false).unwrap();
-        assert_eq!(rx.recv().unwrap().unwrap(), 0, "first eid");
-        let jobs = qrx.recv().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().eid().unwrap(), 0, "first eid");
+        let jobs = qrx.recv().unwrap().unwrap().jobs().unwrap();
         assert_eq!(jobs.len(), 1, "query in the same batch sees the insert");
         std::fs::remove_dir_all(dir).unwrap();
     }
@@ -593,10 +649,7 @@ mod tests {
     fn injected_crash_leaves_recoverable_store() {
         let dir = temp_dir("aup-srv-crash").unwrap();
         {
-            let cfg = ServerConfig {
-                crash_after_batches: Some(2),
-                ..ServerConfig::default()
-            };
+            let cfg = ServerConfig { crash_after_batches: Some(2), ..ServerConfig::default() };
             let (mut server, client) = manual(&dir, cfg);
             for jid in 0..4 {
                 client.start_job_queued(jid, 0, "{}", 0.0).unwrap();
@@ -605,7 +658,9 @@ mod tests {
             for jid in 0..4 {
                 client.set_job_running(jid, 0).unwrap();
                 client
-                    .log_job_event(jid, 0, 1, "RUNNING", 1.0, "attempt 1", -1, 0.0)
+                    .log_job_event(
+                        JobEventRecord::new(jid, 0, "RUNNING").attempt(1).at(1.0).detail("attempt 1"),
+                    )
                     .unwrap();
             }
             let err = server.drain_once(false).unwrap_err();

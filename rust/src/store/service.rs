@@ -42,12 +42,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::store::client::{StoreApi, StoreClient, SERVER_GONE};
+use crate::store::client::{StoreApi, StoreClient};
+use crate::store::op::{OpReply, StoreError, StoreOp, StoreResult};
 use crate::store::proto::{self, Request};
-use crate::store::schema::{JobEventRow, JobRow};
-use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
-use crate::store::wal::WalStats;
-use crate::store::QueryResult;
 use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 use crate::{log_debug, log_warn};
@@ -306,7 +303,7 @@ fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, hooks: ServiceHooks)
         let parsed = Json::parse(&payload).and_then(|j| Request::from_json(&j));
         let (reply, keep_alive) = match parsed {
             Ok(req) => handle_request(&client, &hooks, req),
-            Err(e) => (proto::reply_err(&e.to_string()), true),
+            Err(e) => (proto::reply_err(&StoreError::Failed(e.to_string())), true),
         };
         if proto::write_frame(&mut conn, &reply.to_string()).is_err() {
             return;
@@ -321,58 +318,20 @@ fn serve_conn(mut conn: Box<dyn Conn>, client: StoreClient, hooks: ServiceHooks)
 
 /// Translate one wire request into client calls. Returns the reply and
 /// whether the connection should stay open.
+///
+/// Store operations ([`Request::Op`]) all take the same path: route the
+/// op through the client (which shards it), serialize the typed reply.
+/// Service verbs (ping/submit/worker-fleet/alloc) are handled here.
 fn handle_request(
     client: &StoreClient,
     hooks: &ServiceHooks,
     req: Request,
 ) -> (Json, bool) {
-    let res: Result<Json> = match req {
+    let res: StoreResult<Json> = match req {
         Request::Ping => Ok(Json::str("pong")),
-        Request::Status => client.status().map(|v| {
-            Json::arr(v.iter().map(proto::status_to_json).collect())
-        }),
-        Request::Top { events } => client.top(events).map(|(running, events, util)| {
-            Json::obj(vec![
-                (
-                    "running",
-                    Json::arr(running.iter().map(proto::running_job_to_json).collect()),
-                ),
-                (
-                    "events",
-                    Json::arr(events.iter().map(proto::job_event_to_json).collect()),
-                ),
-                (
-                    "util",
-                    Json::arr(util.iter().map(proto::resource_util_to_json).collect()),
-                ),
-            ])
-        }),
-        Request::Sql { query } => {
-            // remote SQL is read-only: arbitrary mutations would bypass
-            // the typed protocol on a store a live run owns
-            match crate::store::sql::parse(&query) {
-                Ok(crate::store::sql::Stmt::Select { .. }) => {
-                    client.sql(&query).map(|r| proto::query_result_to_json(&r))
-                }
-                Ok(_) => Err(AupError::Store(
-                    "remote sql is read-only: only SELECT is allowed".into(),
-                )),
-                Err(e) => Err(e),
-            }
-        }
-        Request::BestJob { eid, maximize } => client
-            .best_job(eid, maximize)
-            .map(|o| o.map_or(Json::Null, |r| proto::job_row_to_json(&r))),
-        Request::JobsOf { eid } => client
-            .jobs_of(eid)
-            .map(|v| Json::arr(v.iter().map(proto::job_row_to_json).collect())),
-        Request::JobEventsOf { eid } => client
-            .job_events_of(eid)
-            .map(|v| Json::arr(v.iter().map(proto::job_event_to_json).collect())),
-        Request::WalStats => client.wal_stats().map(|s| proto::wal_stats_to_json(&s)),
         Request::AllocJids { n } => {
             if n <= 0 || n > MAX_JID_RANGE {
-                Err(AupError::Store(format!(
+                Err(StoreError::Failed(format!(
                     "alloc_jids: n must be in 1..={MAX_JID_RANGE}, got {n}"
                 )))
             } else {
@@ -380,19 +339,21 @@ fn handle_request(
             }
         }
         Request::Submit { config, user } => match &hooks.submit {
-            None => Err(AupError::Store(
+            None => Err(StoreError::Failed(
                 "this store service does not accept experiment submissions \
                  (the serving process is not running a batch intake)"
                     .into(),
             )),
-            Some(handler) => (handler.as_ref())(SubmitRequest { config, user }),
+            Some(handler) => {
+                (handler.as_ref())(SubmitRequest { config, user }).map_err(StoreError::from)
+            }
         },
         Request::Lease { .. }
         | Request::Heartbeat { .. }
         | Request::Report { .. }
         | Request::Complete { .. } => {
             match &hooks.worker {
-                None => Err(AupError::Store(
+                None => Err(StoreError::Failed(
                     "this store service has no worker gateway \
                      (the serving process is not running a live batch)"
                         .into(),
@@ -409,44 +370,35 @@ fn handle_request(
                         }
                         _ => unreachable!(),
                     };
-                    (handler.as_ref())(verb)
+                    (handler.as_ref())(verb).map_err(StoreError::from)
                 }
             }
         }
-        Request::StartExperiment { user, proposer, exp_config, now } => client
-            .start_experiment(&user, &proposer, &exp_config, now)
-            .map(Json::int),
-        Request::FinishExperiment { eid, best, now } => {
-            client.finish_experiment(eid, best, now).map(|()| Json::Null)
+        Request::Op(op) => {
+            // remote SQL is read-only: arbitrary mutations would bypass
+            // the typed protocol on a store a live run owns
+            let guarded = if let StoreOp::Sql { query } = &op {
+                match crate::store::sql::parse(query) {
+                    Ok(crate::store::sql::Stmt::Select { .. }) => Ok(()),
+                    Ok(_) => Err(StoreError::Failed(
+                        "remote sql is read-only: only SELECT is allowed".into(),
+                    )),
+                    Err(e) => Err(StoreError::from(e)),
+                }
+            } else {
+                Ok(())
+            };
+            guarded.and_then(|()| client.op(op).map(|r| r.to_json()))
         }
-        Request::StartJobQueued { jid, eid, config, now } => {
-            client.start_job_queued(jid, eid, &config, now).map(|()| Json::Null)
-        }
-        Request::StartJobRunning { jid, eid, rid, config, now } => client
-            .start_job_running(jid, eid, rid, &config, now)
-            .map(|()| Json::Null),
-        Request::SetJobRunning { jid, rid } => {
-            client.set_job_running(jid, rid).map(|()| Json::Null)
-        }
-        Request::CancelJob { jid, now } => client.cancel_job(jid, now).map(|()| Json::Null),
-        Request::StopJobEarly { jid, now } => {
-            client.stop_job_early(jid, now).map(|()| Json::Null)
-        }
-        Request::FinishJob { jid, score, ok, now } => {
-            client.finish_job(jid, score, ok, now).map(|()| Json::Null)
-        }
-        Request::LogJobEvent { jid, eid, attempt, state, time, detail, rid, busy } => client
-            .log_job_event(jid, eid, attempt, &state, time, &detail, rid, busy)
-            .map(|()| Json::Null),
-        Request::Tick { now } => client.tick(now).map(|()| Json::Null),
-        Request::Checkpoint => client.checkpoint().map(|()| Json::Null),
     };
     match res {
         Ok(v) => (proto::reply_ok(v), true),
         Err(e) => {
-            let msg = e.to_string();
-            let actor_gone = msg.contains(SERVER_GONE);
-            (proto::reply_err(&msg), !actor_gone)
+            // a Gone error means the actor behind this service died: close
+            // the connection after the reply so the peer sees one clean
+            // error/disconnect instead of retrying into a dead mailbox
+            let actor_gone = e.is_gone();
+            (proto::reply_err(&e), !actor_gone)
         }
     }
 }
@@ -470,8 +422,8 @@ pub struct RemoteStoreClient {
     poisoned: std::sync::atomic::AtomicBool,
 }
 
-fn disconnected(peer: &str) -> AupError {
-    AupError::Store(format!(
+fn disconnected(peer: &str) -> StoreError {
+    StoreError::Gone(format!(
         "store service at {peer} disconnected (live server gone?)"
     ))
 }
@@ -524,9 +476,10 @@ impl RemoteStoreClient {
 
     /// Bound the wait on one reply (protects `aup status` from a wedged
     /// serving process). `None` = wait forever.
-    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> StoreResult<()> {
         let conn = self.conn.lock().map_err(|_| disconnected(&self.peer))?;
-        conn.set_blocking_with_timeout(timeout)?;
+        conn.set_blocking_with_timeout(timeout)
+            .map_err(|e| StoreError::Failed(format!("cannot configure connection: {e}")))?;
         Ok(())
     }
 
@@ -549,9 +502,11 @@ impl RemoteStoreClient {
     }
 
     /// One framed request/reply round trip. Any transport failure
-    /// poisons the client (see the `poisoned` field): per-request store
-    /// errors reported by the peer do NOT — the stream is still in sync.
-    fn request(&self, req: Request) -> Result<Json> {
+    /// poisons the client (see the `poisoned` field) and yields
+    /// [`StoreError::Gone`]: per-request store errors reported by the
+    /// peer do NOT — the stream is still in sync, and they surface as
+    /// [`StoreError::Failed`].
+    fn request(&self, req: Request) -> StoreResult<Json> {
         use std::sync::atomic::Ordering;
         if self.poisoned.load(Ordering::SeqCst) {
             return Err(disconnected(&self.peer));
@@ -566,7 +521,7 @@ impl RemoteStoreClient {
         // in sync — the client stays usable, no poisoning
         let payload = req.to_json().to_string();
         if payload.len() > proto::MAX_FRAME {
-            return Err(AupError::Store(format!(
+            return Err(StoreError::Failed(format!(
                 "request of {} bytes exceeds the {}-byte frame cap; nothing was sent",
                 payload.len(),
                 proto::MAX_FRAME
@@ -582,10 +537,6 @@ impl RemoteStoreClient {
             Ok(None) => Err(poison()),
             Err(_) => Err(poison()),
         }
-    }
-
-    fn request_unit(&self, req: Request) -> Result<()> {
-        self.request(req).map(|_| ())
     }
 
     // -- worker-fleet verbs (`aup worker`) ----------------------------------
@@ -632,215 +583,43 @@ impl RemoteStoreClient {
 }
 
 impl StoreApi for RemoteStoreClient {
-    fn alloc_jids(&self, n: i64) -> Result<i64> {
+    /// Ship one [`StoreOp`] over the socket and decode its typed reply.
+    /// ONE method covers every store verb — the wire cannot drift from
+    /// the mailbox vocabulary because both serialize the same enum.
+    fn op(&self, op: StoreOp) -> StoreResult<OpReply> {
+        let v = self.request(Request::Op(op.clone()))?;
+        OpReply::from_json(&op, &v)
+            .map_err(|e| StoreError::Failed(format!("malformed {} reply: {e}", op.cmd())))
+    }
+
+    fn alloc_jids(&self, n: i64) -> StoreResult<i64> {
         self.request(Request::AllocJids { n })?
             .as_i64()
-            .ok_or_else(|| AupError::Store("alloc_jids: non-integer reply".into()))
+            .ok_or_else(|| StoreError::Failed("alloc_jids: non-integer reply".into()))
     }
-
-    fn start_experiment(
-        &self,
-        user: &str,
-        proposer: &str,
-        exp_config: &str,
-        now: f64,
-    ) -> Result<i64> {
-        self.request(Request::StartExperiment {
-            user: user.to_string(),
-            proposer: proposer.to_string(),
-            exp_config: exp_config.to_string(),
-            now,
-        })?
-        .as_i64()
-        .ok_or_else(|| AupError::Store("start_experiment: non-integer reply".into()))
-    }
-
-    fn finish_experiment(&self, eid: i64, best: Option<f64>, now: f64) -> Result<()> {
-        self.request_unit(Request::FinishExperiment { eid, best, now })
-    }
-
-    fn start_job_queued(&self, jid: i64, eid: i64, config: &str, now: f64) -> Result<()> {
-        self.request_unit(Request::StartJobQueued {
-            jid,
-            eid,
-            config: config.to_string(),
-            now,
-        })
-    }
-
-    fn start_job_running(
-        &self,
-        jid: i64,
-        eid: i64,
-        rid: i64,
-        config: &str,
-        now: f64,
-    ) -> Result<()> {
-        self.request_unit(Request::StartJobRunning {
-            jid,
-            eid,
-            rid,
-            config: config.to_string(),
-            now,
-        })
-    }
-
-    fn set_job_running(&self, jid: i64, rid: i64) -> Result<()> {
-        self.request_unit(Request::SetJobRunning { jid, rid })
-    }
-
-    fn cancel_job(&self, jid: i64, now: f64) -> Result<()> {
-        self.request_unit(Request::CancelJob { jid, now })
-    }
-
-    fn stop_job_early(&self, jid: i64, now: f64) -> Result<()> {
-        self.request_unit(Request::StopJobEarly { jid, now })
-    }
-
-    fn finish_job(&self, jid: i64, score: Option<f64>, ok: bool, now: f64) -> Result<()> {
-        self.request_unit(Request::FinishJob { jid, score, ok, now })
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn log_job_event(
-        &self,
-        jid: i64,
-        eid: i64,
-        attempt: i64,
-        state: &str,
-        time: f64,
-        detail: &str,
-        rid: i64,
-        busy: f64,
-    ) -> Result<()> {
-        self.request_unit(Request::LogJobEvent {
-            jid,
-            eid,
-            attempt,
-            state: state.to_string(),
-            time,
-            detail: detail.to_string(),
-            rid,
-            busy,
-        })
-    }
-
-    fn best_job(&self, eid: i64, maximize: bool) -> Result<Option<JobRow>> {
-        let v = self.request(Request::BestJob { eid, maximize })?;
-        if v.is_null() {
-            Ok(None)
-        } else {
-            proto::job_row_from_json(&v).map(Some)
-        }
-    }
-
-    fn jobs_of(&self, eid: i64) -> Result<Vec<JobRow>> {
-        self.request(Request::JobsOf { eid })?
-            .as_arr()
-            .ok_or_else(|| AupError::Store("jobs_of: non-array reply".into()))?
-            .iter()
-            .map(proto::job_row_from_json)
-            .collect()
-    }
-
-    fn job_events_of(&self, eid: i64) -> Result<Vec<JobEventRow>> {
-        self.request(Request::JobEventsOf { eid })?
-            .as_arr()
-            .ok_or_else(|| AupError::Store("job_events_of: non-array reply".into()))?
-            .iter()
-            .map(proto::job_event_from_json)
-            .collect()
-    }
-
-    fn sql(&self, query: &str) -> Result<QueryResult> {
-        let v = self.request(Request::Sql { query: query.to_string() })?;
-        proto::query_result_from_json(&v)
-    }
-
-    fn status(&self) -> Result<Vec<ExperimentStatus>> {
-        self.request(Request::Status)?
-            .as_arr()
-            .ok_or_else(|| AupError::Store("status: non-array reply".into()))?
-            .iter()
-            .map(proto::status_from_json)
-            .collect()
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn top(
-        &self,
-        events: usize,
-    ) -> Result<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
-        let v = self.request(Request::Top { events })?;
-        let running = v
-            .get("running")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| AupError::Store("top: missing 'running'".into()))?
-            .iter()
-            .map(proto::running_job_from_json)
-            .collect::<Result<Vec<_>>>()?;
-        let events = v
-            .get("events")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| AupError::Store("top: missing 'events'".into()))?
-            .iter()
-            .map(proto::job_event_from_json)
-            .collect::<Result<Vec<_>>>()?;
-        // optional: an older serving side sends no utilization
-        let util = match v.get("util").and_then(Json::as_arr) {
-            Some(arr) => arr
-                .iter()
-                .map(proto::resource_util_from_json)
-                .collect::<Result<Vec<_>>>()?,
-            None => Vec::new(),
-        };
-        Ok((running, events, util))
-    }
-
-    fn wal_stats(&self) -> Result<Option<WalStats>> {
-        let v = self.request(Request::WalStats)?;
-        proto::wal_stats_from_json(&v)
-    }
-
-    fn checkpoint(&self) -> Result<()> {
-        self.request_unit(Request::Checkpoint)
-    }
-
-    fn tick(&self, now: f64) -> Result<()> {
-        self.request_unit(Request::Tick { now })
-    }
-}
-
-/// Why a live auto-attach yielded no client (see [`try_connect_live`]).
-#[derive(Debug, Clone, PartialEq)]
-pub enum AttachFail {
-    /// No socket file in the directory — the normal offline case;
-    /// nothing to report.
-    NoSocket,
-    /// A socket file EXISTS but the attach failed: stale file from a
-    /// killed process, or a wedged server that accepts without
-    /// answering the ping within the deadline. Worth a stderr note so
-    /// users stop debugging phantom staleness in the directory snapshot.
-    Failed(String),
 }
 
 /// Auto-attach for `aup status DIR` / `aup top DIR`: `Ok(client)` when
 /// `DIR/store.sock` exists AND a live service answers a ping within
-/// `timeout`; otherwise the reason, so callers can explain the fallback
-/// to the directory snapshot.
+/// `timeout`; otherwise the typed reason ([`StoreError::NoSocket`] for
+/// the normal offline case — nothing to report — vs
+/// [`StoreError::Failed`] for a stale socket file or wedged server,
+/// worth a stderr note), so callers can explain the fallback to the
+/// directory snapshot.
 pub fn try_connect_live(
     db_dir: &Path,
     timeout: Duration,
-) -> std::result::Result<RemoteStoreClient, AttachFail> {
+) -> std::result::Result<RemoteStoreClient, StoreError> {
     let sock = db_dir.join(SOCKET_FILE);
     if !sock.exists() {
-        return Err(AttachFail::NoSocket);
+        return Err(StoreError::NoSocket);
     }
-    let fail = |e: AupError| AttachFail::Failed(e.to_string());
+    let fail = |e: AupError| StoreError::Failed(e.to_string());
     let client = RemoteStoreClient::connect_unix(&sock).map_err(fail)?;
-    client.set_timeout(Some(timeout)).map_err(fail)?;
+    let tfail = |e: StoreError| StoreError::Failed(e.message().to_string());
+    client.set_timeout(Some(timeout)).map_err(tfail)?;
     client.ping().map_err(|_| {
-        AttachFail::Failed(format!(
+        StoreError::Failed(format!(
             "socket {} did not answer a ping within {timeout:?} \
              (stale file or wedged server)",
             sock.display()
@@ -849,7 +628,7 @@ pub fn try_connect_live(
     // pings answered: give real queries a more generous bound
     client
         .set_timeout(Some(timeout.max(Duration::from_secs(10))))
-        .map_err(fail)?;
+        .map_err(tfail)?;
     Ok(client)
 }
 
@@ -1167,16 +946,16 @@ mod tests {
             "attach to a wedged server must respect the deadline"
         );
         match res {
-            Err(AttachFail::Failed(msg)) => {
+            Err(StoreError::Failed(msg)) => {
                 assert!(msg.contains("ping"), "{msg}")
             }
-            Err(other) => panic!("expected AttachFail::Failed, got {other:?}"),
+            Err(other) => panic!("expected StoreError::Failed, got {other:?}"),
             Ok(_) => panic!("a wedged server must not attach"),
         }
         // and no socket at all is the silent case
         let empty = temp_dir("aup-svc-wedge2").unwrap();
         match try_connect_live(&empty, Duration::from_millis(100)) {
-            Err(AttachFail::NoSocket) => {}
+            Err(StoreError::NoSocket) => {}
             Err(other) => panic!("expected NoSocket, got {other:?}"),
             Ok(_) => panic!("an empty dir must not attach"),
         }

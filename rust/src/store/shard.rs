@@ -1,0 +1,556 @@
+//! Shard routing: one [`ShardedStoreClient`] in front of N
+//! [`StoreServer`](crate::store::StoreServer) actors, each exclusively
+//! owning one [`Store`](crate::store::Store) + one WAL segment under
+//! `DIR/shard-K/`.
+//!
+//! Partitioning is by experiment: `shard_of(eid) = eid % N`. That makes
+//! routing free — jids are globally unique via the client-side atomic
+//! allocator, eids via the router's, and every per-experiment aggregate
+//! in `agg.rs` is already shard-local — while the N mailbox drains
+//! group-commit to N WAL files in parallel (the multi-core write path
+//! the bench's `sharded_scaling` metric measures).
+//!
+//! Routing rules, by operation:
+//!
+//! * eid-carrying ops go to `shard_of(eid)` directly;
+//! * `StartExperiment` without an eid gets one from the router's atomic
+//!   allocator FIRST, so the op is routable before it executes;
+//! * jid-only ops (`SetJobRunning`, `CancelJob`, …) use a route map the
+//!   router records at `StartJob*` time and drops at the terminal
+//!   transition — broadcasting them instead would be wrong, because a
+//!   shard that does not own the jid would latch a poisoned "no such
+//!   job" mutation error;
+//! * `Tick` broadcasts fire-and-forget, `Checkpoint` broadcasts and
+//!   joins every reply;
+//! * `Status` / `Top` / `WalStats` fan out and merge (the merge helpers
+//!   are `pub` so the CLI's offline snapshot path reuses them);
+//! * `Sql` stays single-shard only: there is no cross-segment query
+//!   planner, and pretending otherwise would silently return partial
+//!   rows.
+//!
+//! On-disk layout: `N == 1` uses `DIR` itself — byte-compatible with
+//! every pre-shard database. `N >= 2` writes a `shards.json` marker and
+//! puts segment K in `DIR/shard-K/`; reopening with a conflicting
+//! `--shards` value is an error rather than a silent resharding.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::store::client::SERVER_GONE;
+use crate::store::op::{OpReply, StoreError, StoreOp, StoreResult};
+use crate::store::schema::JobEventRow;
+use crate::store::server::StoreCmd;
+use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::wal::WalStats;
+use crate::store::{schema, Store};
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+/// The router: implements the same operation surface as a single
+/// server's client, over N shard mailboxes. Cheap to clone — all state
+/// is shared behind `Arc`s, exactly like the old single-mailbox client.
+#[derive(Clone)]
+pub struct ShardedStoreClient {
+    shards: Arc<Vec<Sender<StoreCmd>>>,
+    /// globally-unique job ids, allocated client-side (lock-free)
+    next_jid: Arc<AtomicI64>,
+    /// globally-unique experiment ids; the allocation IS the routing
+    /// decision (`eid % N`)
+    next_eid: Arc<AtomicI64>,
+    /// jid -> owning shard, recorded at `StartJob*`, dropped at the
+    /// terminal transition so the map tracks live jobs only
+    routes: Arc<Mutex<HashMap<i64, usize>>>,
+}
+
+impl ShardedStoreClient {
+    /// Wire a router over already-spawned shard mailboxes. The allocator
+    /// seeds must be maxima over ALL shards (ids are global).
+    pub fn from_parts(shards: Vec<Sender<StoreCmd>>, next_jid: i64, next_eid: i64) -> Self {
+        assert!(!shards.is_empty(), "router needs at least one shard");
+        ShardedStoreClient {
+            shards: Arc::new(shards),
+            next_jid: Arc::new(AtomicI64::new(next_jid)),
+            next_eid: Arc::new(AtomicI64::new(next_eid)),
+            routes: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, eid: i64) -> usize {
+        (eid.rem_euclid(self.shards.len() as i64)) as usize
+    }
+
+    /// Reserve one globally-unique jid.
+    pub fn alloc_jid(&self) -> i64 {
+        self.next_jid.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Reserve `n` consecutive jids, returning the first.
+    pub fn alloc_jid_range(&self, n: i64) -> i64 {
+        self.next_jid.fetch_add(n.max(0), Ordering::SeqCst)
+    }
+
+    fn gone() -> StoreError {
+        StoreError::Gone(SERVER_GONE.into())
+    }
+
+    /// Fire-and-forget send to one shard.
+    fn post(&self, shard: usize, op: StoreOp) -> StoreResult<()> {
+        self.shards[shard].send(StoreCmd::post(op)).map_err(|_| Self::gone())
+    }
+
+    /// Send to one shard and wait for the typed reply.
+    fn request(&self, shard: usize, op: StoreOp) -> StoreResult<OpReply> {
+        let (tx, rx) = channel();
+        self.shards[shard]
+            .send(StoreCmd::Op { op, reply: Some(tx) })
+            .map_err(|_| Self::gone())?;
+        rx.recv().map_err(|_| Self::gone())?
+    }
+
+    /// Raw mailbox access for manually-driven servers (tests). Targets
+    /// shard 0 — manual drives are single-shard by construction.
+    pub fn send_cmd(&self, cmd: StoreCmd) -> StoreResult<()> {
+        self.shards[0].send(cmd).map_err(|_| Self::gone())
+    }
+
+    /// Look up which shard owns `jid`. With one shard there is nothing
+    /// to route; with several, a jid we never saw started is a hard
+    /// error — guessing (or broadcasting) would poison innocent shards.
+    fn route_of(&self, jid: i64) -> StoreResult<usize> {
+        if self.shards.len() == 1 {
+            return Ok(0);
+        }
+        self.routes
+            .lock()
+            .unwrap()
+            .get(&jid)
+            .copied()
+            .ok_or_else(|| StoreError::Failed(format!("no shard route for jid {jid}")))
+    }
+
+    fn record_route(&self, jid: i64, shard: usize) {
+        if self.shards.len() > 1 {
+            self.routes.lock().unwrap().insert(jid, shard);
+        }
+    }
+
+    fn drop_route(&self, jid: i64) {
+        if self.shards.len() > 1 {
+            self.routes.lock().unwrap().remove(&jid);
+        }
+    }
+
+    /// Route ONE operation. This is the whole public surface the typed
+    /// `StoreApi` wrappers compile down to.
+    pub fn op(&self, op: StoreOp) -> StoreResult<OpReply> {
+        match op {
+            StoreOp::StartExperiment { eid, user, proposer, exp_config, now } => {
+                // allocate here so the op is routable; an eid the caller
+                // pre-chose (wire path) routes by its own value
+                let eid = eid.unwrap_or_else(|| self.next_eid.fetch_add(1, Ordering::SeqCst));
+                self.request(
+                    self.shard_of(eid),
+                    StoreOp::StartExperiment {
+                        eid: Some(eid),
+                        user,
+                        proposer,
+                        exp_config,
+                        now,
+                    },
+                )
+            }
+            StoreOp::FinishExperiment { eid, .. } => {
+                self.post(self.shard_of(eid), op)?;
+                Ok(OpReply::Unit)
+            }
+            StoreOp::StartJobQueued { jid, eid, .. } | StoreOp::StartJobRunning { jid, eid, .. } => {
+                let shard = self.shard_of(eid);
+                self.record_route(jid, shard);
+                self.post(shard, op)?;
+                Ok(OpReply::Unit)
+            }
+            StoreOp::SetJobRunning { jid, .. } => {
+                self.post(self.route_of(jid)?, op)?;
+                Ok(OpReply::Unit)
+            }
+            StoreOp::CancelJob { jid, .. }
+            | StoreOp::StopJobEarly { jid, .. }
+            | StoreOp::FinishJob { jid, .. } => {
+                let shard = self.route_of(jid)?;
+                self.post(shard, op)?;
+                // terminal transition: the job can only be re-routed by a
+                // fresh StartJob* (retries re-queue under the same eid)
+                self.drop_route(jid);
+                Ok(OpReply::Unit)
+            }
+            StoreOp::LogJobEvent(ref r) => {
+                let shard = self.shard_of(r.eid);
+                self.post(shard, op)?;
+                Ok(OpReply::Unit)
+            }
+            StoreOp::Tick { .. } => {
+                for shard in 0..self.shards.len() {
+                    self.post(shard, op.clone())?;
+                }
+                Ok(OpReply::Unit)
+            }
+            StoreOp::Checkpoint => {
+                // broadcast with replies: every segment is durable when
+                // this returns; first error wins
+                let mut rxs = Vec::with_capacity(self.shards.len());
+                for tx in self.shards.iter() {
+                    let (rtx, rrx) = channel();
+                    tx.send(StoreCmd::Op { op: StoreOp::Checkpoint, reply: Some(rtx) })
+                        .map_err(|_| Self::gone())?;
+                    rxs.push(rrx);
+                }
+                for rx in rxs {
+                    rx.recv().map_err(|_| Self::gone())??;
+                }
+                Ok(OpReply::Unit)
+            }
+            StoreOp::BestJob { eid, .. }
+            | StoreOp::JobsOf { eid }
+            | StoreOp::JobEventsOf { eid } => self.request(self.shard_of(eid), op),
+            StoreOp::Sql { .. } => {
+                if self.shards.len() == 1 {
+                    self.request(0, op)
+                } else {
+                    Err(StoreError::Failed(
+                        "sql queries are not supported on a sharded store \
+                         (no cross-segment planner); use status/top or a \
+                         single-shard database"
+                            .into(),
+                    ))
+                }
+            }
+            StoreOp::Status => {
+                let parts = self.fan_out(StoreOp::Status)?;
+                let mut statuses = Vec::new();
+                for part in parts {
+                    statuses.push(part.statuses()?);
+                }
+                Ok(OpReply::Statuses(merge_statuses(statuses)))
+            }
+            StoreOp::Top { events } => {
+                let parts = self.fan_out(StoreOp::Top { events })?;
+                let mut tops = Vec::new();
+                for part in parts {
+                    tops.push(part.top()?);
+                }
+                let (running, evs, util) = merge_top(tops, events);
+                Ok(OpReply::Top { running, events: evs, util })
+            }
+            StoreOp::WalStats => {
+                let parts = self.fan_out(StoreOp::WalStats)?;
+                let mut stats = Vec::new();
+                for part in parts {
+                    stats.push(part.wal()?);
+                }
+                Ok(OpReply::Wal(merge_wal(stats)))
+            }
+        }
+    }
+
+    /// Send `op` to every shard, then collect every reply. Sends all
+    /// requests before the first recv so the shards answer in parallel.
+    fn fan_out(&self, op: StoreOp) -> StoreResult<Vec<OpReply>> {
+        let mut rxs = Vec::with_capacity(self.shards.len());
+        for tx in self.shards.iter() {
+            let (rtx, rrx) = channel();
+            tx.send(StoreCmd::Op { op: op.clone(), reply: Some(rtx) })
+                .map_err(|_| Self::gone())?;
+            rxs.push(rrx);
+        }
+        let mut replies = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            replies.push(rx.recv().map_err(|_| Self::gone())??);
+        }
+        Ok(replies)
+    }
+}
+
+// -- cross-shard merges (shared with the CLI's offline snapshot path) -------
+
+/// Merge per-shard status lists. Experiments are disjoint across shards
+/// (each eid lives on exactly one), so this is a flatten + global eid
+/// sort — the same order a single-shard store reports.
+pub fn merge_statuses(parts: Vec<Vec<ExperimentStatus>>) -> Vec<ExperimentStatus> {
+    let mut all: Vec<ExperimentStatus> = parts.into_iter().flatten().collect();
+    all.sort_by_key(|s| s.eid);
+    all
+}
+
+/// Merge per-shard `top` snapshots: running jobs re-sorted the way
+/// `status::running_jobs` sorts them, the newest `events` transitions
+/// globally (each shard already sent its newest `events`, so the union
+/// contains the global tail), and per-resource utilization summed —
+/// resources are physical and shared, so each shard reports its own
+/// slice of the same rid.
+#[allow(clippy::type_complexity)]
+pub fn merge_top(
+    parts: Vec<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>,
+    events: usize,
+) -> (Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>) {
+    let mut running = Vec::new();
+    let mut evs = Vec::new();
+    let mut util_by_rid: HashMap<i64, ResourceUtil> = HashMap::new();
+    for (r, e, u) in parts {
+        running.extend(r);
+        evs.extend(e);
+        for part in u {
+            util_by_rid
+                .entry(part.rid)
+                .and_modify(|acc| {
+                    acc.busy_secs += part.busy_secs;
+                    acc.attempts += part.attempts;
+                    acc.first_time = acc.first_time.min(part.first_time);
+                    acc.last_time = acc.last_time.max(part.last_time);
+                })
+                .or_insert(part);
+        }
+    }
+    running.sort_by(|a, b| {
+        a.start_time.total_cmp(&b.start_time).then_with(|| a.jid.cmp(&b.jid))
+    });
+    // ascending by time like recent_events, keep only the global tail
+    evs.sort_by(|a, b| {
+        a.time.total_cmp(&b.time).then_with(|| (a.eid, a.jid, a.evid).cmp(&(b.eid, b.jid, b.evid)))
+    });
+    if evs.len() > events {
+        evs.drain(..evs.len() - events);
+    }
+    let mut util: Vec<ResourceUtil> = util_by_rid.into_values().collect();
+    util.sort_by_key(|u| u.rid);
+    (running, evs, util)
+}
+
+/// Sum per-shard WAL counters. `None` (in-memory store) only when every
+/// shard is memory-backed; a mixed deployment still reports the disk
+/// shards' I/O.
+pub fn merge_wal(parts: Vec<Option<WalStats>>) -> Option<WalStats> {
+    let mut acc: Option<WalStats> = None;
+    for part in parts.into_iter().flatten() {
+        let acc = acc.get_or_insert(WalStats::default());
+        acc.appends += part.appends;
+        acc.records += part.records;
+        acc.checkpoints += part.checkpoints;
+    }
+    acc
+}
+
+// -- on-disk layout ---------------------------------------------------------
+
+/// Marker file naming the shard count of a sharded database directory.
+pub const SHARD_MARKER: &str = "shards.json";
+
+/// Segment directory of shard `k` under a sharded database dir.
+pub fn shard_dir(dir: &Path, k: usize) -> PathBuf {
+    dir.join(format!("shard-{k}"))
+}
+
+/// How many shards an existing database directory has (1 when no
+/// marker — every pre-shard database).
+pub fn detect_shards(dir: &Path) -> Result<usize> {
+    let marker = dir.join(SHARD_MARKER);
+    if !marker.exists() {
+        return Ok(1);
+    }
+    let text = std::fs::read_to_string(&marker)?;
+    let n = Json::parse(&text)?
+        .get("shards")
+        .and_then(Json::as_i64)
+        .filter(|n| *n >= 1)
+        .ok_or_else(|| {
+            AupError::Store(format!("malformed shard marker {}", marker.display()))
+        })?;
+    Ok(n as usize)
+}
+
+/// Resolve the effective shard count for opening `dir`: the marker (or
+/// single-shard layout) must agree with what `--shards` requested.
+/// `requested = None` means "whatever the directory already is".
+pub fn resolve_shards(dir: &Path, requested: Option<usize>) -> Result<usize> {
+    let existing = detect_shards(dir)?;
+    let has_single_shard_data =
+        dir.join("wal.jsonl").exists() || dir.join("snapshot.jsonl").exists();
+    match requested {
+        None => Ok(existing),
+        Some(n) if n == 0 => Err(AupError::Store("--shards must be at least 1".into())),
+        Some(n) if existing > 1 && n != existing => Err(AupError::Store(format!(
+            "database {} has {existing} shards; cannot reopen with --shards {n}",
+            dir.display()
+        ))),
+        Some(n) if n > 1 && has_single_shard_data => Err(AupError::Store(format!(
+            "database {} already holds a single-shard store; resharding in place \
+             is not supported (start a fresh directory for --shards {n})",
+            dir.display()
+        ))),
+        Some(n) => Ok(n),
+    }
+}
+
+/// Open (creating if absent) the `n` shard stores of `dir`. `n == 1`
+/// opens `dir` itself — byte-compatible with every pre-shard database.
+pub fn open_shards(dir: &Path, n: usize) -> Result<Vec<Store>> {
+    if n <= 1 {
+        return Ok(vec![Store::open(dir)?]);
+    }
+    std::fs::create_dir_all(dir)?;
+    let marker = dir.join(SHARD_MARKER);
+    if !marker.exists() {
+        std::fs::write(&marker, format!("{{\"shards\":{n}}}\n"))?;
+    }
+    (0..n).map(|k| Store::open(&shard_dir(dir, k))).collect()
+}
+
+/// Open every shard read-only (offline `aup status` / `aup top`).
+pub fn open_shards_read_only(dir: &Path, n: usize) -> Result<Vec<Store>> {
+    if n <= 1 {
+        return Ok(vec![Store::open_read_only(dir)?]);
+    }
+    (0..n).map(|k| Store::open_read_only(&shard_dir(dir, k))).collect()
+}
+
+/// Replay every segment independently and sweep jobs whose terminal
+/// transition was lost (the per-shard crash contract). Returns the
+/// total number of swept jobs.
+pub fn recover_shards(stores: &mut [Store]) -> Result<usize> {
+    let mut swept = 0;
+    for store in stores.iter_mut() {
+        schema::init_schema(store)?;
+        swept += schema::recover_incomplete(store)?;
+    }
+    Ok(swept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::server::{ServerConfig, StoreServer};
+    use crate::store::StoreApi;
+    use crate::util::fsutil::temp_dir;
+
+    #[test]
+    fn experiments_land_on_their_eid_shard_and_merge_back() {
+        let stores = vec![
+            (Store::in_memory(), ServerConfig::default()),
+            (Store::in_memory(), ServerConfig::default()),
+        ];
+        let (handles, client) = StoreServer::spawn_sharded(stores).unwrap();
+        // four experiments round-robin over two shards
+        for i in 0..4 {
+            let eid = client
+                .start_experiment(&format!("user-{i}"), "random", "{}", 0.0)
+                .unwrap();
+            assert_eq!(eid, i, "router allocates dense eids");
+            let jid = client.alloc_jid();
+            client.start_job_queued(jid, eid, "{}", 1.0).unwrap();
+            client.set_job_running(jid, 0).unwrap();
+            client.finish_job(jid, Some(i as f64), true, 2.0).unwrap();
+        }
+        let statuses = client.status().unwrap();
+        assert_eq!(statuses.len(), 4);
+        assert_eq!(statuses.iter().map(|s| s.eid).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(statuses.iter().all(|s| s.finished == 1));
+        // per-eid reads route to the owning shard
+        for eid in 0..4 {
+            let best = client.best_job(eid, true).unwrap().unwrap();
+            assert_eq!(best.score, Some(eid as f64));
+        }
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn sql_is_rejected_on_a_sharded_store() {
+        let stores = vec![
+            (Store::in_memory(), ServerConfig::default()),
+            (Store::in_memory(), ServerConfig::default()),
+        ];
+        let (handles, client) = StoreServer::spawn_sharded(stores).unwrap();
+        let err = client.sql("SELECT * FROM job").unwrap_err();
+        assert!(matches!(err, StoreError::Failed(_)), "{err}");
+        assert!(err.message().contains("sharded"), "{err}");
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_jid_routes_fail_instead_of_poisoning_shards() {
+        let stores = vec![
+            (Store::in_memory(), ServerConfig::default()),
+            (Store::in_memory(), ServerConfig::default()),
+        ];
+        let (handles, client) = StoreServer::spawn_sharded(stores).unwrap();
+        let err = client.cancel_job(999, 1.0).unwrap_err();
+        assert!(err.message().contains("no shard route"), "{err}");
+        // shards stay healthy: a clean shutdown reports no poison
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn layout_marker_roundtrip_and_reshard_refusal() {
+        let dir = temp_dir("aup-shard-layout").unwrap();
+        assert_eq!(detect_shards(&dir).unwrap(), 1, "no marker = single shard");
+        let stores = open_shards(&dir, 2).unwrap();
+        assert_eq!(stores.len(), 2);
+        drop(stores);
+        assert_eq!(detect_shards(&dir).unwrap(), 2);
+        assert_eq!(resolve_shards(&dir, None).unwrap(), 2);
+        assert_eq!(resolve_shards(&dir, Some(2)).unwrap(), 2);
+        let err = resolve_shards(&dir, Some(4)).unwrap_err();
+        assert!(err.to_string().contains("cannot reopen"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        // a pre-shard (single-store) directory refuses in-place resharding
+        let dir = temp_dir("aup-shard-legacy").unwrap();
+        let mut store = Store::open(&dir).unwrap();
+        schema::init_schema(&mut store).unwrap();
+        store.checkpoint().unwrap();
+        drop(store);
+        let err = resolve_shards(&dir, Some(2)).unwrap_err();
+        assert!(err.to_string().contains("resharding"), "{err}");
+        assert_eq!(resolve_shards(&dir, Some(1)).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wal_and_util_merges_sum_disjoint_parts() {
+        let a = WalStats { appends: 3, records: 10, checkpoints: 1 };
+        let b = WalStats { appends: 2, records: 5, checkpoints: 0 };
+        let merged = merge_wal(vec![Some(a), None, Some(b)]).unwrap();
+        assert_eq!((merged.appends, merged.records, merged.checkpoints), (5, 15, 1));
+        assert_eq!(merge_wal(vec![None, None]), None);
+
+        let u = |rid, busy, attempts, first, last| ResourceUtil {
+            rid,
+            busy_secs: busy,
+            attempts,
+            first_time: first,
+            last_time: last,
+        };
+        let (_, _, util) = merge_top(
+            vec![
+                (vec![], vec![], vec![u(0, 1.0, 1, 0.0, 2.0), u(1, 4.0, 2, 1.0, 3.0)]),
+                (vec![], vec![], vec![u(0, 2.0, 3, 1.0, 5.0)]),
+            ],
+            10,
+        );
+        assert_eq!(util.len(), 2);
+        assert_eq!((util[0].rid, util[0].busy_secs, util[0].attempts), (0, 3.0, 4));
+        assert_eq!((util[0].first_time, util[0].last_time), (0.0, 5.0));
+        assert_eq!((util[1].rid, util[1].busy_secs), (1, 4.0));
+    }
+}

@@ -38,7 +38,7 @@ use crate::resource::job::{JobEnv, ReportSink};
 use crate::search::BasicConfig;
 use crate::store::proto::LeaseOffer;
 use crate::store::service::{RemoteStoreClient, DEFAULT_CONNECT_TIMEOUT, SOCKET_FILE};
-use crate::store::StoreApi;
+use crate::store::{JobEventRecord, StoreApi};
 use crate::util::error::{AupError, Result};
 use crate::{log_info, log_warn};
 
@@ -288,9 +288,12 @@ fn journal(
     detail: &str,
 ) {
     let at = worker_start.elapsed().as_secs_f64();
-    if let Err(e) =
-        remote.log_job_event(offer.jid, offer.eid, offer.attempt as i64, state, at, detail, -1, 0.0)
-    {
+    if let Err(e) = remote.log_job_event(
+        JobEventRecord::new(offer.jid, offer.eid, state)
+            .attempt(offer.attempt as i64)
+            .at(at)
+            .detail(detail),
+    ) {
         log_warn!("worker", "could not journal {state} for job {}: {e}", offer.job_id);
     }
 }

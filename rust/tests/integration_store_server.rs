@@ -19,7 +19,8 @@ use auptimizer::prelude::*;
 use auptimizer::resource::executor::FnExecutor;
 use auptimizer::resource::local::CpuManager;
 use auptimizer::scheduler::{ChaosConfig, ChaosExecutor, SimExecutor};
-use auptimizer::store::schema;
+use auptimizer::store::server::StoreCmd;
+use auptimizer::store::{schema, JobEventRecord, StoreApi, StoreOp};
 use auptimizer::util::fsutil::temp_dir;
 
 fn sim_experiment(seed: u64, n_samples: usize, client: StoreClient) -> Experiment {
@@ -184,28 +185,34 @@ fn killed_server_mid_batch_recovers_consistently() {
         let (mut server, client) =
             StoreServer::new(Store::open(&dir).unwrap(), cfg).unwrap();
 
-        // batch 1: experiment + queue 4 jobs
+        // batch 1: experiment + queue 4 jobs (raw mailbox send so the
+        // server-side fallback eid allocation is what's exercised)
         let (tx, rx) = std::sync::mpsc::channel();
         client
-            .send_cmd(auptimizer::store::server::StoreCmd::StartExperiment {
-                user: "crash".into(),
-                proposer: "random".into(),
-                exp_config: "{}".into(),
-                now: 0.0,
-                reply: tx,
+            .send_cmd(StoreCmd::Op {
+                op: StoreOp::StartExperiment {
+                    eid: None,
+                    user: "crash".into(),
+                    proposer: "random".into(),
+                    exp_config: "{}".into(),
+                    now: 0.0,
+                },
+                reply: Some(tx),
             })
             .unwrap();
         for jid in 0..4 {
             client.start_job_queued(jid, 0, "{}", 1.0).unwrap();
         }
         server.drain_once(false).unwrap();
-        eid = rx.recv().unwrap().unwrap();
+        eid = rx.recv().unwrap().unwrap().eid().unwrap();
 
         // batch 2: jobs 0/1 run and finish
         for jid in 0..2 {
             client.set_job_running(jid, jid).unwrap();
             client
-                .log_job_event(jid, eid, 1, "RUNNING", 2.0, "attempt 1", -1, 0.0)
+                .log_job_event(
+                    JobEventRecord::new(jid, eid, "RUNNING").attempt(1).at(2.0).detail("attempt 1"),
+                )
                 .unwrap();
             client.finish_job(jid, Some(0.5 + jid as f64), true, 3.0).unwrap();
         }
@@ -215,7 +222,9 @@ fn killed_server_mid_batch_recovers_consistently() {
         for jid in 2..4 {
             client.set_job_running(jid, jid).unwrap();
             client
-                .log_job_event(jid, eid, 1, "RUNNING", 4.0, "attempt 1", -1, 0.0)
+                .log_job_event(
+                    JobEventRecord::new(jid, eid, "RUNNING").attempt(1).at(4.0).detail("attempt 1"),
+                )
                 .unwrap();
         }
         let err = server.drain_once(false).unwrap_err();
@@ -274,7 +283,7 @@ fn group_commit_collapses_appends_by_at_least_5x() {
         schema::init_schema(&mut store).unwrap();
         let start = store.wal_stats().unwrap();
         for jid in 0..n_jobs {
-            wal_workload::apply_direct(&mut store, jid).unwrap();
+            wal_workload::apply_direct(&mut store, jid, 0).unwrap();
         }
         let end = store.wal_stats().unwrap();
         end.appends - start.appends
@@ -289,7 +298,7 @@ fn group_commit_collapses_appends_by_at_least_5x() {
         let start = server.store_mut().wal_stats().unwrap();
         let mut sent = 0u64;
         for jid in 0..n_jobs {
-            wal_workload::send_via_client(&client, jid).unwrap();
+            wal_workload::send_via_client(&client, jid, 0).unwrap();
             sent += wal_workload::MUTATIONS_PER_JOB;
             if sent >= 64 {
                 server.drain_once(false).unwrap();

@@ -1,0 +1,354 @@
+//! Sharded-store equivalence: a `--shards N` deployment must be
+//! observationally identical to the single-actor store it replaces.
+//!
+//! The oracle is `spawn_sharded` with ONE store — exactly the pre-shard
+//! code path (the router with one shard skips the route map and every
+//! merge). A seeded chaos workload (mixed lifecycles, retries, early
+//! stops, leftover RUNNING jobs, interleaved across experiments) is
+//! replayed verbatim against N ∈ {2, 4} shards, and every read surface
+//! the CLI exposes — `status`, `best_job`, `jobs_of`, `top` — must
+//! answer the same thing. Determinism is by construction: ids come from
+//! the router's dense allocators, timestamps from one monotonic fake
+//! clock, and all decisions from one LCG, so both deployments see the
+//! identical op sequence.
+//!
+//! The second half checks the per-shard crash contract: killing one
+//! shard mid group commit loses at most THAT shard's open batch, leaves
+//! sibling shards fully live (the router answers per-eid reads and
+//! reports the dead shard as `Gone`, not `Failed`), and recovery replays
+//! each segment independently.
+
+use std::time::Duration;
+
+use auptimizer::store::schema::{JobRow, JobStatus};
+use auptimizer::store::status::{self, ExperimentStatus, RunningJob};
+use auptimizer::store::{
+    shard, JobEventRecord, ServerConfig, Store, StoreApi, StoreClient, StoreServer,
+};
+use auptimizer::util::fsutil::temp_dir;
+
+/// Deterministic splitmix-style generator — the workload must not depend
+/// on the `rand` crate or wall clocks.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+
+    fn score(&mut self) -> f64 {
+        (self.next() % 10_000) as f64 / 10_000.0
+    }
+}
+
+const N_EXPERIMENTS: usize = 6;
+const JOB_ROUNDS: usize = 8;
+
+/// Drive one deployment through the seeded workload. Experiments open
+/// round-robin (dense eids → consecutive experiments land on different
+/// shards) and every job decision comes from `rng`, so two deployments
+/// given the same seed execute byte-identical op streams.
+fn chaos_workload(client: &StoreClient, seed: u64) -> Vec<i64> {
+    let mut rng = Rng(seed);
+    let mut clock = 0.0_f64;
+    let mut tick = || {
+        clock += 0.125;
+        clock
+    };
+    let eids: Vec<i64> = (0..N_EXPERIMENTS)
+        .map(|i| {
+            client
+                .start_experiment(&format!("user-{}", i % 2), "random", "{}", tick())
+                .unwrap()
+        })
+        .collect();
+    for round in 0..JOB_ROUNDS {
+        for &eid in &eids {
+            let jid = client.alloc_jid();
+            let t_q = tick();
+            client
+                .start_job_queued(jid, eid, &format!("{{\"lr\":{}}}", rng.score()), t_q)
+                .unwrap();
+            client
+                .log_job_event(JobEventRecord::new(jid, eid, "QUEUED").attempt(1).at(tick()))
+                .unwrap();
+            let rid = rng.below(3) as i64;
+            client.set_job_running(jid, rid).unwrap();
+            client
+                .log_job_event(
+                    JobEventRecord::new(jid, eid, "RUNNING")
+                        .attempt(1)
+                        .at(tick())
+                        .detail("attempt 1"),
+                )
+                .unwrap();
+            if rng.below(4) == 0 {
+                // simulated retry: the journal records a BACKOFF row
+                // (feeds the per-experiment retry aggregate)
+                client
+                    .log_job_event(
+                        JobEventRecord::new(jid, eid, "BACKOFF")
+                            .attempt(2)
+                            .at(tick())
+                            .detail("transient failure")
+                            .resource(rid, 0.5),
+                    )
+                    .unwrap();
+            }
+            match rng.below(6) {
+                0 => client.cancel_job(jid, tick()).unwrap(),
+                1 => client.stop_job_early(jid, tick()).unwrap(),
+                2 => client.finish_job(jid, None, false, tick()).unwrap(),
+                // leave a few RUNNING on the last round so `top` has rows
+                3 if round + 1 == JOB_ROUNDS => {}
+                _ => {
+                    let (score, t) = (rng.score(), tick());
+                    client
+                        .log_job_event(
+                            JobEventRecord::new(jid, eid, "DONE")
+                                .attempt(1)
+                                .at(t)
+                                .detail(&format!("score {score}"))
+                                .resource(rid, t - t_q),
+                        )
+                        .unwrap();
+                    client.finish_job(jid, Some(score), true, t).unwrap();
+                }
+            }
+        }
+        client.tick(tick()).unwrap();
+    }
+    // deterministic tail, so the coverage assertions below hold for any
+    // seed: one in-flight job per experiment (top always has rows), one
+    // retried-then-stopped job and one finished job on eids[0]
+    for &eid in &eids {
+        let jid = client.alloc_jid();
+        client.start_job_running(jid, eid, 9, "{\"tail\":true}", tick()).unwrap();
+    }
+    let eid = eids[0];
+    let jid = client.alloc_jid();
+    client.start_job_queued(jid, eid, "{}", tick()).unwrap();
+    client.set_job_running(jid, 1).unwrap();
+    client
+        .log_job_event(
+            JobEventRecord::new(jid, eid, "BACKOFF")
+                .attempt(2)
+                .at(tick())
+                .detail("retry")
+                .resource(1, 0.25),
+        )
+        .unwrap();
+    client.stop_job_early(jid, tick()).unwrap();
+    let jid = client.alloc_jid();
+    client.start_job_queued(jid, eid, "{}", tick()).unwrap();
+    client.set_job_running(jid, 0).unwrap();
+    client.finish_job(jid, Some(2.0), true, tick()).unwrap();
+    eids
+}
+
+/// Everything `aup status` / `aup top` / the trackers can observe.
+#[derive(Debug, PartialEq)]
+struct Snapshot {
+    statuses: Vec<ExperimentStatus>,
+    best_max: Vec<Option<(i64, Option<u64>)>>,
+    best_min: Vec<Option<(i64, Option<u64>)>>,
+    jobs: Vec<Vec<JobRow>>,
+    running: Vec<RunningJob>,
+    /// journal rows minus `evid` — per-shard journals number their own
+    /// rows, so the id is the one field allowed to differ
+    events: Vec<(i64, i64, i64, String, u64, String, i64, u64)>,
+    util: Vec<(i64, u64, usize, u64, u64)>,
+}
+
+fn snapshot(client: &StoreClient, eids: &[i64]) -> Snapshot {
+    let best = |maximize: bool| {
+        eids.iter()
+            .map(|&eid| {
+                client
+                    .best_job(eid, maximize)
+                    .unwrap()
+                    .map(|j| (j.jid, j.score.map(f64::to_bits)))
+            })
+            .collect()
+    };
+    let (running, events, util) = client.top(10_000).unwrap();
+    Snapshot {
+        statuses: client.status().unwrap(),
+        best_max: best(true),
+        best_min: best(false),
+        jobs: eids.iter().map(|&eid| client.jobs_of(eid).unwrap()).collect(),
+        running,
+        events: events
+            .iter()
+            .map(|e| {
+                (
+                    e.eid,
+                    e.jid,
+                    e.attempt,
+                    e.state.clone(),
+                    e.time.to_bits(),
+                    e.detail.clone(),
+                    e.rid,
+                    e.busy.to_bits(),
+                )
+            })
+            .collect(),
+        util: util
+            .iter()
+            .map(|u| {
+                (
+                    u.rid,
+                    u.busy_secs.to_bits(),
+                    u.attempts,
+                    u.first_time.to_bits(),
+                    u.last_time.to_bits(),
+                )
+            })
+            .collect(),
+    }
+}
+
+fn run_deployment(n_shards: usize, seed: u64) -> Snapshot {
+    let stores = (0..n_shards).map(|_| (Store::in_memory(), ServerConfig::default())).collect();
+    let (handles, client) = StoreServer::spawn_sharded(stores).unwrap();
+    let eids = chaos_workload(&client, seed);
+    let snap = snapshot(&client, &eids);
+    drop(client);
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+    snap
+}
+
+#[test]
+fn sharded_store_is_observationally_equivalent_to_single_actor() {
+    let seed = 0x5eed_cafe;
+    let oracle = run_deployment(1, seed);
+    // the workload really exercised every read surface
+    assert_eq!(oracle.statuses.len(), N_EXPERIMENTS);
+    assert!(oracle.statuses.iter().any(|s| s.retries > 0), "no retries in workload");
+    assert!(oracle.statuses.iter().any(|s| s.stopped > 0), "no early stops in workload");
+    assert!(!oracle.running.is_empty(), "no leftover RUNNING jobs");
+    assert!(oracle.best_max.iter().any(Option::is_some), "no finished jobs");
+    for n in [2, 4] {
+        let sharded = run_deployment(n, seed);
+        assert_eq!(sharded, oracle, "divergence at {n} shards");
+    }
+}
+
+#[test]
+fn different_seeds_produce_different_workloads() {
+    // guards the test above against a degenerate RNG that would make the
+    // equivalence vacuous
+    assert_ne!(run_deployment(1, 1), run_deployment(1, 2));
+}
+
+#[test]
+fn killing_one_shard_mid_batch_loses_at_most_its_open_batch() {
+    let dir = temp_dir("aup-shard-crash").unwrap();
+    let n = 4;
+    let victim = 1_usize;
+    let stores = shard::open_shards(&dir, n).unwrap();
+    let cfgs = (0..n).map(|k| ServerConfig {
+        // batch 1 (the StartExperiment drain) commits; the victim dies
+        // mid-append while committing batch 2
+        crash_after_batches: if k == victim { Some(2) } else { None },
+        ..ServerConfig::default()
+    });
+    let (handles, client) =
+        StoreServer::spawn_sharded(stores.into_iter().zip(cfgs).collect()).unwrap();
+
+    // dense eids 0..4 → eid K lives on shard K
+    for i in 0..n as i64 {
+        let eid = client.start_experiment(&format!("u{i}"), "random", "{}", 0.0).unwrap();
+        assert_eq!(eid, i);
+    }
+    // let every shard finish (and durably commit) its first drain before
+    // feeding the victim its fatal batch
+    std::thread::sleep(Duration::from_millis(200));
+
+    // this mutation rides the victim's torn batch 2
+    let doomed = client.alloc_jid();
+    client.start_job_queued(doomed, victim as i64, "{\"lost\":true}", 1.0).unwrap();
+    let mut died = false;
+    for _ in 0..500 {
+        match client.jobs_of(victim as i64) {
+            Err(e) => {
+                assert!(e.is_gone(), "dead shard must read as Gone, got: {e}");
+                died = true;
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    assert!(died, "victim shard never crashed");
+
+    // sibling shards are untouched: full lifecycles and per-eid reads
+    // keep working after the victim is gone
+    for eid in [0_i64, 2, 3] {
+        let jid = client.alloc_jid();
+        client.start_job_queued(jid, eid, "{}", 2.0).unwrap();
+        client.set_job_running(jid, 0).unwrap();
+        client.finish_job(jid, Some(eid as f64), true, 3.0).unwrap();
+        let best = client.best_job(eid, true).unwrap().unwrap();
+        assert_eq!((best.jid, best.score), (jid, Some(eid as f64)));
+    }
+    // cross-shard fan-outs must report the outage as Gone (shard down)...
+    assert!(client.status().unwrap_err().is_gone());
+    // ...while a bad request keeps reading as Failed (router error, no
+    // shard involved)
+    let err = client.cancel_job(999_999, 4.0).unwrap_err();
+    assert!(!err.is_gone(), "unknown jid is a request error, not an outage: {err}");
+
+    drop(client);
+    for (k, h) in handles.into_iter().enumerate() {
+        let res = h.shutdown();
+        if k == victim {
+            assert!(res.is_err(), "victim shutdown must surface the injected crash");
+        } else {
+            res.unwrap();
+        }
+    }
+
+    // recovery replays each segment independently
+    let mut stores = shard::open_shards(&dir, n).unwrap();
+    let swept = shard::recover_shards(&mut stores).unwrap();
+    assert_eq!(swept, 0, "no interrupted jobs should survive the torn batch");
+    // victim: experiment row (batch 1) survived, the doomed job (open
+    // batch 2) is gone
+    let vs = status::experiment_statuses(&stores[victim]).unwrap();
+    assert_eq!(vs.len(), 1);
+    assert_eq!((vs[0].eid, vs[0].n_jobs), (victim as i64, 0));
+    // siblings: nothing lost
+    for k in [0_usize, 2, 3] {
+        let ss = status::experiment_statuses(&stores[k]).unwrap();
+        assert_eq!(ss.len(), 1);
+        assert_eq!((ss[0].eid, ss[0].finished), (k as i64, 1));
+    }
+
+    // the recovered segments serve a merged view again
+    let (handles, client) = StoreServer::spawn_sharded(
+        stores.into_iter().map(|s| (s, ServerConfig::default())).collect(),
+    )
+    .unwrap();
+    let statuses = client.status().unwrap();
+    assert_eq!(statuses.iter().map(|s| s.eid).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    // post-recovery writes land on the once-dead shard again
+    let jid = client.alloc_jid();
+    client.start_job_queued(jid, victim as i64, "{}", 5.0).unwrap();
+    client.set_job_running(jid, 1).unwrap();
+    client.finish_job(jid, Some(0.9), true, 6.0).unwrap();
+    let best = client.best_job(victim as i64, true).unwrap().unwrap();
+    assert_eq!(best.score, Some(0.9));
+    assert_eq!(best.status, JobStatus::Finished);
+    drop(client);
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -14,7 +14,12 @@ dispatched on its keys:
   - `grouped_live` is gated the same way now that the trajectory has
     history: live reduction = baseline appends / grouped_live appends,
     30% floor. Append COUNTS are deterministic for a fixed workload, so
-    these gates do not flap on runner noise.
+    these gates do not flap on runner noise;
+  - `sharded_scaling` >= 3x: append throughput with 4 shard actors over
+    1 (the ISSUE-8 acceptance bar — each shard owns its own WAL segment,
+    so group commits must batch on multiple cores). Required in fresh
+    reports; trajectory points committed before the shard router existed
+    simply lack the key and compare as informative-only.
 
 * query reports (benches/store_query_throughput.rs, `status_speedup`):
   - hard floors: `status_speedup` and `best_job_speedup` must stay
@@ -98,6 +103,25 @@ def gate_wal(fresh, baseline) -> int:
                 f"{f_live:.2f}x < {live_floor:.2f}x (baseline {b_live:.2f}x)"
             )
             rc = 1
+    # sharded_scaling: absolute floor, required in FRESH reports (the
+    # sharded bench mode and this gate ship together); only committed
+    # baselines may predate the shard router
+    scaling = fresh.get("sharded_scaling")
+    b_scaling = baseline.get("sharded_scaling")
+    if scaling is not None:
+        print(
+            f"sharded_scaling: fresh {float(scaling):.2f}x (floor 3x), "
+            f"baseline {b_scaling}"
+        )
+    if scaling is None:
+        print("::error::wal report is missing sharded_scaling")
+        rc = 1
+    elif float(scaling) < 3.0:
+        print(
+            f"::error::sharded append throughput below the 3x floor: "
+            f"{float(scaling):.2f}x at 4 shards vs 1"
+        )
+        rc = 1
     if rc == 0:
         print("ok: group-commit append reduction within 30% of the trajectory")
     return rc
