@@ -38,6 +38,13 @@
 //!   `n_jobs / 10`: the trial scheduler's two-heap order statistics
 //!   keep the verdict O(log n), so per-report cost must stay near-flat
 //!   in lifetime trial count.
+//! * `preempt_flat_ratio` — per-eviction cost of the priority-preemption
+//!   path (PR 9: bursts of high-priority arrivals evict running
+//!   low-priority work on a saturated pool; victims requeue at the
+//!   queue front with their retry budget intact) at `n_jobs` vs
+//!   `n_jobs / 10`: victim selection walks only the live slots and the
+//!   front-requeue rides the same ready-queue heap, so per-eviction
+//!   cost must stay flat in lifetime job count.
 
 use std::time::Instant;
 
@@ -252,6 +259,68 @@ fn run_trial_workload(n_jobs: u64) -> TrialStats {
     TrialStats { secs: t0.elapsed().as_secs_f64(), reports, stopped }
 }
 
+struct PreemptStats {
+    secs: f64,
+    /// PREEMPTED transitions observed (each one is a victim eviction +
+    /// lease/slot teardown + front-requeue)
+    preemptions: usize,
+}
+
+/// Drive `n_jobs` through the priority-preemption path (PR 9): a small
+/// pool saturated by long low-priority jobs, with bursts of short
+/// high-priority arrivals that each evict a running victim. Victims
+/// requeue at the queue front with their budget intact and are re-placed
+/// in the gaps between bursts, so every burst preempts again — the churn
+/// scales with the high-priority stream, while the 64 low-priority jobs
+/// only finish once the stream ends.
+fn run_preempt_workload(n_jobs: u64) -> PreemptStats {
+    const POOL: usize = 8;
+    const N_LO: u64 = 64;
+    let rm = Box::new(CpuManager::new(POOL));
+    let mut s = SimScheduler::new(rm, SimDispatcher::new());
+    let cfg = SchedulerConfig { max_retries: 0, retry_backoff: 0.5, job_timeout: None };
+    let lo = s.add_submission(0, cfg.clone());
+    let hi = s.add_submission(5, cfg);
+    s.dispatcher_mut()
+        .add_executor(lo, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 10.0))));
+    s.dispatcher_mut()
+        .add_executor(hi, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+    let n_hi = n_jobs.saturating_sub(N_LO);
+    let t0 = Instant::now();
+    for id in 0..N_LO {
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", id as f64);
+        s.submit(lo, c).expect("unique job ids");
+    }
+    let mut submitted_hi: u64 = 0;
+    let mut done: usize = 0;
+    let mut preemptions: usize = 0;
+    while done < n_jobs as usize {
+        // one pool-sized burst at a time: the previous burst must drain
+        // first, which is exactly the gap the evicted victims re-enter
+        if submitted_hi < n_hi && s.outstanding(hi) == 0 {
+            for _ in 0..(POOL as u64).min(n_hi - submitted_hi) {
+                let mut c = BasicConfig::new();
+                c.set_num("job_id", (N_LO + submitted_hi) as f64);
+                s.submit(hi, c).expect("unique job ids");
+                submitted_hi += 1;
+            }
+        }
+        for ev in s.poll(true).expect("preempt workload cannot stall") {
+            match ev {
+                SchedEvent::Done(_) => done += 1,
+                SchedEvent::Transition(t) => {
+                    if t.state == JobState::Preempted {
+                        preemptions += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(s.idle(), "preempt driver drained every job");
+    PreemptStats { secs: t0.elapsed().as_secs_f64(), preemptions }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -310,6 +379,15 @@ fn main() {
     let per_report_large = trial_large.secs / trial_large.reports.max(1) as f64;
     let trial_flat_ratio = per_report_large / per_report_small.max(1e-12);
 
+    // priority-preemption path (PR 9): per-eviction cost must stay flat
+    // in lifetime job count
+    let preempt_small = run_preempt_workload(n_jobs / 10);
+    let preempt_large = run_preempt_workload(n_jobs);
+    assert!(preempt_large.preemptions > 0, "preempt workload never evicted a victim");
+    let per_preempt_small = preempt_small.secs / preempt_small.preemptions.max(1) as f64;
+    let per_preempt_large = preempt_large.secs / preempt_large.preemptions.max(1) as f64;
+    let preempt_flat_ratio = per_preempt_large / per_preempt_small.max(1e-12);
+
     println!(
         "   drive {scan_jobs} jobs: scan {:>9.3}ms vs event {:>9.3}ms -> {sched_speedup:>7.1}x \
          (~{extrapolated:.0}x at {n_jobs})",
@@ -339,6 +417,15 @@ fn main() {
         n_jobs,
         trial_large.stopped
     );
+    println!(
+        "   per-eviction:     {:>9.3}us at {} jobs vs {:>9.3}us at {} -> ratio \
+         {preempt_flat_ratio:.2} ({} evictions)",
+        per_preempt_small * 1e6,
+        n_jobs / 10,
+        per_preempt_large * 1e6,
+        n_jobs,
+        preempt_large.preemptions
+    );
 
     // acceptance: >=10x over the scan baseline, flat per-poll cost
     assert!(
@@ -360,6 +447,10 @@ fn main() {
         trial_flat_ratio <= 3.0,
         "early-stopping verdict cost grew with lifetime trial count: {trial_flat_ratio:.2}x"
     );
+    assert!(
+        preempt_flat_ratio <= 3.0,
+        "preemption-churn cost grew with lifetime job count: {preempt_flat_ratio:.2}x"
+    );
 
     let json = format!(
         "{{\n  \"n_jobs\": {n_jobs},\n  \"scan_jobs\": {scan_jobs},\n  \
@@ -375,11 +466,16 @@ fn main() {
          \"per_report_small_secs\": {per_report_small:.12},\n  \
          \"per_report_large_secs\": {per_report_large:.12},\n  \
          \"trial_flat_ratio\": {trial_flat_ratio:.3},\n  \
+         \"per_preempt_small_secs\": {per_preempt_small:.12},\n  \
+         \"per_preempt_large_secs\": {per_preempt_large:.12},\n  \
+         \"preempt_flat_ratio\": {preempt_flat_ratio:.3},\n  \
+         \"preemptions\": {},\n  \
          \"trial_reports\": {},\n  \"trial_stopped\": {},\n  \
          \"lease_ops\": {},\n  \"polls\": {}\n}}\n",
         scan.secs,
         event_same.secs,
         large.secs,
+        preempt_large.preemptions,
         trial_large.reports,
         trial_large.stopped,
         lease_large.ops,

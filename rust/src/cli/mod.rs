@@ -116,12 +116,16 @@ USAGE:
                 'aup worker' processes (default 15s)
     aup worker  DB_DIR | --connect HOST:PORT [--name N] [--workdir DIR]
                 [--poll-ms MS] [--max-jobs N] [--deadline S]
+                [--max-reconnect-s S]
                 pull-based remote executor: lease queued jobs from a live
                 'aup batch --serve' (or --tcp) run, execute them locally
                 via the script protocol, report scores back over the wire.
                 Run one per host/shell; a killed worker is reaped by lease
                 expiry and its job retries elsewhere. --deadline bounds
-                every control-socket call (connect/read/write)
+                every control-socket call (connect/read/write). On a
+                dropped control socket the worker re-attaches with capped
+                exponential backoff for up to --max-reconnect-s seconds
+                (default 30; 0 = exit on the first transport error)
     aup submit  DB_DIR EXPERIMENT.json [--user NAME]
                 enqueue an experiment into a live 'aup batch --serve' run:
                 it joins the running pool and lands in the same shared store
@@ -598,7 +602,8 @@ fn shutdown_shards(handles: Vec<crate::store::StoreServerHandle>) -> Result<()> 
 /// on the serving side. See [`crate::worker`].
 pub fn cmd_worker(cli: &Cli) -> Result<()> {
     const USAGE: &str = "usage: aup worker DB_DIR | --connect HOST:PORT \
-                         [--name N] [--workdir DIR] [--poll-ms MS] [--max-jobs N] [--deadline S]";
+                         [--name N] [--workdir DIR] [--poll-ms MS] [--max-jobs N] [--deadline S] \
+                         [--max-reconnect-s S]";
     let target: String = match cli.flag("connect") {
         Some(t) => t.to_string(),
         None => cli
@@ -645,12 +650,24 @@ pub fn cmd_worker(cli: &Cli) -> Result<()> {
             .ok_or_else(|| AupError::Config("--deadline must be positive seconds".into()))?;
         opts.timeout = Duration::from_secs_f64(secs);
     }
+    if let Some(v) = cli.flag("max-reconnect-s") {
+        // 0 is meaningful here: disable re-attach, exit on the first
+        // transport error
+        let secs: f64 = v
+            .parse()
+            .ok()
+            .filter(|s: &f64| s.is_finite() && *s >= 0.0)
+            .ok_or_else(|| {
+                AupError::Config("--max-reconnect-s must be non-negative seconds".into())
+            })?;
+        opts.max_reconnect = Duration::from_secs_f64(secs);
+    }
     let remote = worker::connect_target(&target, opts.timeout)?;
     println!("worker '{}' connected to {target}; leasing jobs", opts.name);
-    let report = worker::run_worker(&remote, &opts)?;
+    let report = worker::run_worker(remote, &target, &opts)?;
     println!(
-        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost, {} stopped early",
-        opts.name, report.executed, report.failed, report.expired, report.stopped
+        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost, {} stopped early, {} reconnect(s)",
+        opts.name, report.executed, report.failed, report.expired, report.stopped, report.reconnects
     );
     Ok(())
 }
@@ -789,8 +806,11 @@ pub fn cmd_top(cli: &Cli) -> Result<()> {
     };
     if let Some(remote) = attach_live(cli, db) {
         match remote.top(n_events) {
-            Ok((running, events, util)) => {
-                print!("{}", crate::store::status::render_top(&running, &events, &util));
+            Ok((running, events, util, caps)) => {
+                print!(
+                    "{}",
+                    crate::store::status::render_top(&running, &events, &util, &caps)
+                );
                 return Ok(());
             }
             Err(e) => {
@@ -805,11 +825,12 @@ pub fn cmd_top(cli: &Cli) -> Result<()> {
             let running = crate::store::status::running_jobs(store)?;
             let events = crate::store::status::recent_events(store, n_events)?;
             let util = crate::store::status::resource_utilization(store)?;
-            Ok((running, events, util))
+            let caps = crate::store::status::fleet_capacity(store)?;
+            Ok((running, events, util, caps))
         })
         .collect::<Result<Vec<_>>>()?;
-    let (running, events, util) = shard::merge_top(parts, n_events);
-    print!("{}", crate::store::status::render_top(&running, &events, &util));
+    let (running, events, util, caps) = shard::merge_top(parts, n_events);
+    print!("{}", crate::store::status::render_top(&running, &events, &util, &caps));
     Ok(())
 }
 

@@ -39,6 +39,13 @@ use crate::util::error::{AupError, Result};
 use crate::util::json::Json;
 use crate::{log_debug, log_info, log_warn};
 
+/// Sane bounds for submission `priority` (config key or CLI override):
+/// wide enough for any real tiering scheme, narrow enough that a typo'd
+/// `priority: 99999999999` is caught at parse time instead of silently
+/// preempting every other experiment in the batch.
+pub const MIN_PRIORITY: i64 = -1000;
+pub const MAX_PRIORITY: i64 = 1000;
+
 /// Knobs not present in experiment.json (they belong to the environment,
 /// i.e. the paper's env.ini / `aup setup` side).
 pub struct ExperimentOptions {
@@ -158,12 +165,19 @@ impl Experiment {
         let sched_cfg = options
             .scheduler
             .unwrap_or_else(|| SchedulerConfig::from_json(&cfg.raw));
-        let priority = options.priority.unwrap_or_else(|| {
-            cfg.raw
-                .get("priority")
-                .and_then(Json::as_i64)
-                .unwrap_or(0) as i32
-        });
+        let priority_raw = match options.priority {
+            Some(p) => p as i64,
+            None => cfg.raw.get("priority").and_then(Json::as_i64).unwrap_or(0),
+        };
+        // reject nonsense priorities at parse time: an i32::MAX priority
+        // would starve (and now preempt) everything else forever, and an
+        // out-of-range i64 from the config would silently truncate
+        if !(MIN_PRIORITY..=MAX_PRIORITY).contains(&priority_raw) {
+            return Err(AupError::Config(format!(
+                "priority {priority_raw} out of range (expected {MIN_PRIORITY}..={MAX_PRIORITY})"
+            )));
+        }
+        let priority = priority_raw as i32;
         let trial = options.trial_scheduler.or_else(|| {
             cfg.raw
                 .get("trial_scheduler")
@@ -430,6 +444,15 @@ fn drive<D: Dispatcher>(
                 exp.tracker.log_report(&r)?;
             }
         }
+        // capacity changes are fleet-scoped, not owned by any submission:
+        // journal them through the first experiment's tracker so they land
+        // exactly once in the shared store
+        let caps = sched.take_capacity_events();
+        if let Some((_, exp)) = runs.first_mut() {
+            for ev in &caps {
+                exp.tracker.log_capacity(ev)?;
+            }
+        }
         for ev in events {
             match ev {
                 SchedEvent::Transition(t) => {
@@ -666,6 +689,14 @@ fn journal_reports(
     for r in sched.take_reports() {
         if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == r.sub) {
             exp.tracker.log_report(&r)?;
+        }
+    }
+    // fleet-scoped capacity changes route to the first live experiment's
+    // tracker (exactly once into the shared store)
+    let caps = sched.take_capacity_events();
+    if let Some((_, exp)) = slots.first_mut() {
+        for ev in &caps {
+            exp.tracker.log_capacity(ev)?;
         }
     }
     Ok(())
@@ -1073,5 +1104,74 @@ mod tests {
         let curves = evs.iter().filter(|e| e.state == "INTERMEDIATE").count();
         assert!(curves >= 8, "expected streamed curve points, got {curves}");
         assert!(evs.iter().any(|e| e.state == "STOPPED_EARLY" && e.detail.contains("median")));
+    }
+
+    #[test]
+    fn elastic_capacity_dip_to_zero_recovers_the_same_best_score() {
+        use crate::scheduler::{FnSimExecutor, SimOutcome};
+        use crate::store::schema;
+
+        // same experiment twice: a fixed 3-slot fleet vs a fleet whose
+        // `capacity_trace` drops to zero mid-run and later recovers. The
+        // random proposer is non-adaptive, scores depend only on the
+        // sampled point, and preemption keeps retry budgets intact — so
+        // the shrinking fleet must end with the SAME best score, only
+        // later on the virtual clock.
+        let mk_sim = || -> Box<dyn SimExecutor> {
+            Box::new(FnSimExecutor::new(|c, _| {
+                SimOutcome::ok(crate::workload::rosenbrock(c), 25.0)
+            }))
+        };
+
+        let run = |trace: &str| {
+            let (handle, client) =
+                StoreServer::spawn(Store::in_memory(), ServerConfig::default()).unwrap();
+            let mut opts = ExperimentOptions::default();
+            opts.store_client = Some(client);
+            let exp = Experiment::new(rosen_cfg("random", 12, 3), opts).unwrap();
+            let eid = exp.eid();
+            let spec = crate::resource::ResourceSpec::from_json(
+                &Json::parse(&format!(
+                    r#"{{"resource": "cpu", "n_resource": 3, "capacity_trace": {trace}}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+            let pool = spec.build().unwrap();
+            let s = run_batch_sim(vec![exp], pool, vec![mk_sim()]).unwrap().pop().unwrap();
+            (s, handle.shutdown().unwrap(), eid)
+        };
+
+        let (fixed, _, _) = run("[]");
+        let (elastic, store, eid) =
+            run(r#"[{"t": 40, "n": 0}, {"t": 120, "n": 3}]"#);
+
+        assert_eq!(fixed.n_jobs, 12);
+        assert_eq!(elastic.n_jobs, 12);
+        assert_eq!(elastic.n_failed, 0, "preemption must not consume retry budget");
+        assert_eq!(elastic.best_score, fixed.best_score);
+        // fixed fleet: 4 waves of 3 x 25s = 100 virtual seconds; the
+        // elastic run stalls through the dip until capacity returns
+        assert!(fixed.wall_time <= 100.0 + 1e-9);
+        assert!(
+            elastic.wall_time >= 120.0,
+            "elastic run must wait out the zero-capacity window, took {}",
+            elastic.wall_time
+        );
+
+        // every job still reached exactly one terminal state in the store
+        let jobs = schema::jobs_of(&store, eid).unwrap();
+        assert_eq!(jobs.len(), 12);
+        assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished));
+        // the wave in flight at t=40 was evicted, and both trace steps
+        // were journaled as fleet-scoped CAPACITY rows
+        let evs = schema::job_events_of(&store, eid).unwrap();
+        let preempted = evs.iter().filter(|e| e.state == "PREEMPTED").count();
+        assert_eq!(preempted, 3, "the 3 running jobs are evicted at t=40");
+        let caps: Vec<_> = evs.iter().filter(|e| e.state == "CAPACITY").collect();
+        assert_eq!(caps.len(), 2);
+        assert!(caps.iter().all(|e| e.jid == -1 && e.detail.contains("kind=cpu")));
+        assert!(caps[0].detail.contains("capacity=0"));
+        assert!(caps[1].detail.contains("capacity=3"));
     }
 }

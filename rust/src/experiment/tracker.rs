@@ -129,6 +129,21 @@ impl<C: StoreApi> Tracker<C> {
         Ok(())
     }
 
+    /// Journal one elastic-capacity change as a fleet-scoped `CAPACITY`
+    /// row. `jid = -1`: the event belongs to the pool, not to any job —
+    /// and the default `rid = -1` keeps it out of the per-resource
+    /// utilization aggregates. `aup status` / `aup top` parse the detail
+    /// back out for the per-kind current-vs-scheduled capacity column.
+    pub fn log_capacity(&mut self, ev: &crate::resource::CapacityEvent) -> Result<()> {
+        self.client.log_job_event(
+            JobEventRecord::new(-1, self.eid, "CAPACITY").at(now()).detail(&format!(
+                "[t={:.3}] kind={} capacity={} in_use={}",
+                ev.at, ev.kind, ev.capacity, ev.in_use
+            )),
+        )?;
+        Ok(())
+    }
+
     pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
         self.client.cancel_job(self.jid_of(job_id), now())?;
         Ok(())

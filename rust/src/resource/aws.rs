@@ -20,6 +20,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::resource::elastic::{CapacitySchedule, ElasticManager};
 use crate::resource::{ResourceHandle, ResourceManager};
 use crate::scheduler::{
     FnSimExecutor, SchedEvent, SchedulerConfig, SimDispatcher, SimOutcome, SimScheduler,
@@ -236,6 +237,93 @@ pub fn simulate_experiment(
     }
 }
 
+/// [`simulate_experiment`] on a SHRINKING fleet: the same simulated EC2
+/// pool wrapped in an [`ElasticManager`] whose per-kind capacity
+/// follows `schedule` on the virtual clock — the CHOPT-style diurnal /
+/// spot-revocation scenario. Capacity dropping below in-use preempts
+/// the newest holders (equal priority here), who requeue with their
+/// budget intact and re-run when the fleet regrows; only the successful
+/// attempt counts toward `total_job_time`, so a dip-and-recover trace
+/// finishes LATER than a fixed fleet but never does different work.
+///
+/// The drive loop keys on outstanding jobs rather than "no events this
+/// poll": a fully revoked fleet produces empty polls while everyone
+/// waits for the schedule to regrow, which is progress, not completion.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_elastic_experiment(
+    configs: &[BasicConfig],
+    duration: &dyn Fn(&BasicConfig) -> f64,
+    n_parallel: usize,
+    spawn_latency: f64,
+    perf_jitter: f64,
+    seed: u64,
+    overhead_per_dispatch: f64,
+    schedule: CapacitySchedule,
+) -> SimReport {
+    assert!(n_parallel > 0 && !configs.is_empty());
+    let fleet = ElasticManager::new(
+        Box::new(AwsManager::for_sim(n_parallel, spawn_latency, perf_jitter, seed)),
+        schedule,
+    );
+    let mut sched = SimScheduler::new(Box::new(fleet), SimDispatcher::new());
+    let sub = sched.add_submission(0, SchedulerConfig::default());
+
+    let mut jobs: Vec<BasicConfig> = Vec::with_capacity(configs.len());
+    let mut durs: BTreeMap<u64, f64> = BTreeMap::new();
+    for (i, c) in configs.iter().enumerate() {
+        let d = duration(c);
+        let mut c = c.clone();
+        c.set_num("job_id", i as f64);
+        durs.insert(i as u64, d);
+        jobs.push(c);
+    }
+    sched.dispatcher_mut().add_executor(
+        sub,
+        Box::new(FnSimExecutor::new(move |c: &BasicConfig, env| {
+            let d = c.job_id().and_then(|id| durs.get(&id).copied()).unwrap_or(0.0);
+            let perf = if env.perf_factor > 0.0 { env.perf_factor } else { 1.0 };
+            SimOutcome::ok(0.0, d + overhead_per_dispatch / perf)
+        })),
+    );
+    for c in jobs {
+        sched.submit(sub, c).expect("index job ids are unique");
+    }
+
+    let n_jobs = configs.len();
+    let mut total_job_time = 0.0;
+    let mut stalls = 0usize;
+    while sched.outstanding(sub) > 0 {
+        let before = sched.now();
+        let events = sched.poll(true).expect("sim scheduler cannot stall");
+        // no events AND no clock progress twice in a row means the
+        // schedule drained the fleet for good with work still queued —
+        // a trace authoring error, not a scheduler state
+        if events.is_empty() && sched.now() <= before {
+            stalls += 1;
+            assert!(
+                stalls < 2,
+                "elastic sim stalled at t={}: capacity never recovers but {} job(s) remain",
+                sched.now(),
+                sched.outstanding(sub)
+            );
+        } else {
+            stalls = 0;
+        }
+        for ev in events {
+            if let SchedEvent::Done(done) = ev {
+                total_job_time += done.elapsed;
+            }
+        }
+    }
+    SimReport {
+        n_parallel,
+        n_jobs,
+        experiment_time: sched.now(),
+        total_job_time,
+        overhead_time: overhead_per_dispatch * n_jobs as f64,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +456,85 @@ mod tests {
         assert_eq!(m.free_count_kind("cpu"), 0);
         assert!(m.get_available_kind("cpu").is_none());
         assert!(m.get_available_kind("aws").is_some());
+    }
+
+    #[test]
+    fn elastic_sim_with_uncapping_schedule_matches_the_fixed_fleet() {
+        // a schedule that never bites (capacity >= pool throughout) must
+        // reproduce the fixed-fleet run bit for bit
+        let configs = uniform_configs(32);
+        let fixed = simulate_experiment(&configs, &|_| 200.0, 4, 10.0, 0.2, 11, 0.01);
+        let sched = CapacitySchedule::from_steps(vec![crate::resource::elastic::CapacityStep {
+            at: 50.0,
+            kind: "aws".into(),
+            capacity: 64,
+        }]);
+        let elastic =
+            simulate_elastic_experiment(&configs, &|_| 200.0, 4, 10.0, 0.2, 11, 0.01, sched);
+        assert_eq!(fixed, elastic);
+    }
+
+    #[test]
+    fn elastic_dip_to_zero_recovers_with_the_same_work_done() {
+        // the fleet drops to ZERO mid-run and regrows: every job still
+        // finishes, the successful attempts do the same total work as
+        // the fixed fleet, and the makespan can only grow
+        let step = |at: f64, capacity: usize| crate::resource::elastic::CapacityStep {
+            at,
+            kind: "aws".into(),
+            capacity,
+        };
+        let configs = uniform_configs(24);
+        let fixed = simulate_experiment(&configs, &|_| 100.0, 4, 0.0, 0.0, 3, 0.0);
+        let elastic = simulate_elastic_experiment(
+            &configs,
+            &|_| 100.0,
+            4,
+            0.0,
+            0.0,
+            3,
+            0.0,
+            CapacitySchedule::from_steps(vec![step(150.0, 0), step(400.0, 4)]),
+        );
+        assert_eq!(elastic.n_jobs, fixed.n_jobs);
+        assert!(
+            (elastic.total_job_time - fixed.total_job_time).abs() < 1e-9,
+            "revocation changed the work done: {} vs {}",
+            elastic.total_job_time,
+            fixed.total_job_time
+        );
+        assert!(
+            elastic.experiment_time >= fixed.experiment_time,
+            "a shrunken fleet cannot finish sooner: {} < {}",
+            elastic.experiment_time,
+            fixed.experiment_time
+        );
+        // the dip held 250 virtual seconds; the makespan shows it
+        assert!(elastic.experiment_time > 400.0, "{}", elastic.experiment_time);
+    }
+
+    #[test]
+    fn elastic_diurnal_replay_is_deterministic() {
+        let configs = uniform_configs(48);
+        let run = || {
+            simulate_elastic_experiment(
+                &configs,
+                &|_| 120.0,
+                8,
+                5.0,
+                0.15,
+                21,
+                0.01,
+                CapacitySchedule::diurnal("aws", 8, 2, 500.0, 6),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "a diurnal trace must replay identically");
+        // night shifts (2 of 8 slots) must cost wall-clock vs the flat fleet
+        let flat = simulate_experiment(&configs, &|_| 120.0, 8, 5.0, 0.15, 21, 0.01);
+        assert!(a.experiment_time > flat.experiment_time, "{} vs {}", a.experiment_time, flat.experiment_time);
+        assert_eq!(a.n_jobs, flat.n_jobs);
     }
 
     #[test]

@@ -1,0 +1,493 @@
+//! Elastic capacity — a [`ResourceManager`] wrapper whose per-kind
+//! capacity follows a schedule or recorded trace (CHOPT-style).
+//!
+//! Real fleets shrink and grow under the scheduler: spot instances get
+//! revoked, shared clusters follow diurnal schedules, owners reclaim
+//! their GPUs. A fixed pool turns a revoked node into a hang that burns
+//! the retry budget; [`ElasticManager`] instead makes capacity a
+//! time-varying quantity driven by the Dispatcher clock:
+//!
+//! * the scheduler feeds the clock through
+//!   [`ResourceManager::advance_clock`] at the top of every poll, which
+//!   applies every schedule step that has come due;
+//! * grants above the scheduled cap are refused, so a shrunken kind
+//!   stops placing new jobs immediately;
+//! * when capacity drops BELOW what is already in use,
+//!   [`ResourceManager::overcommit`] reports the excess and the
+//!   scheduler preempts the lowest-priority running holders until the
+//!   pool fits (their retry budget stays intact — see
+//!   `Scheduler::preempt`);
+//! * every applied step is recorded as a [`CapacityEvent`], drained by
+//!   the experiment layer and journaled so `aup top` shows per-kind
+//!   current-vs-scheduled capacity.
+//!
+//! Schedules come from the `capacity_trace` experiment key (see
+//! [`parse_trace`]), from [`CapacitySchedule::diurnal`] (the Fig-3
+//! shared-cluster day/night scenario), or from
+//! [`CapacitySchedule::revocations`] (seeded random revoke/restore
+//! events for chaos tests).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::error::{AupError, Result};
+use crate::util::json::Json;
+
+use super::{CapacityEvent, ResourceHandle, ResourceManager};
+
+const EPS: f64 = 1e-9;
+
+/// One schedule step: at clock time `at`, kind `kind` is scheduled to
+/// `capacity` slots (which may exceed the underlying pool — the
+/// effective capacity is always `min(scheduled, physical)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityStep {
+    pub at: f64,
+    pub kind: String,
+    pub capacity: usize,
+}
+
+/// A time-sorted list of [`CapacityStep`]s.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CapacitySchedule {
+    steps: Vec<CapacityStep>,
+}
+
+impl CapacitySchedule {
+    /// Sort the steps by time (stable, so same-instant steps apply in
+    /// the order given — the trace author's last word wins per kind).
+    pub fn from_steps(mut steps: Vec<CapacityStep>) -> CapacitySchedule {
+        steps.sort_by(|a, b| a.at.total_cmp(&b.at));
+        CapacitySchedule { steps }
+    }
+
+    /// A diurnal cluster: `kind` runs at `peak` slots, drops to
+    /// `trough` halfway through each `period`, and recovers at the next
+    /// period boundary, for `cycles` day/night cycles.
+    pub fn diurnal(
+        kind: &str,
+        peak: usize,
+        trough: usize,
+        period: f64,
+        cycles: usize,
+    ) -> CapacitySchedule {
+        let mut steps = Vec::with_capacity(cycles * 2);
+        for c in 0..cycles {
+            let day = c as f64 * period;
+            steps.push(CapacityStep { at: day + period * 0.5, kind: kind.into(), capacity: trough });
+            steps.push(CapacityStep { at: day + period, kind: kind.into(), capacity: peak });
+        }
+        CapacitySchedule::from_steps(steps)
+    }
+
+    /// Seeded random revocation events for chaos tests: `n_events`
+    /// revoke-then-restore pairs over `horizon` seconds, each dropping
+    /// `kind` from `base` to a random lower capacity (possibly zero) and
+    /// restoring `base` a random while later. Deterministic in `seed`.
+    pub fn revocations(
+        kind: &str,
+        base: usize,
+        horizon: f64,
+        n_events: usize,
+        seed: u64,
+    ) -> CapacitySchedule {
+        let mut state = seed;
+        let mut rng = move || -> u64 {
+            // splitmix64 — the same generator family the chaos executor
+            // uses, so one seed reproduces a whole scenario
+            state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let mut steps = Vec::with_capacity(n_events * 2);
+        for _ in 0..n_events {
+            let at = (rng() % 10_000) as f64 / 10_000.0 * horizon;
+            let drop_to = (rng() as usize) % base.max(1);
+            let hold = ((rng() % 10_000) as f64 / 10_000.0) * (horizon * 0.2) + EPS;
+            steps.push(CapacityStep { at, kind: kind.into(), capacity: drop_to });
+            steps.push(CapacityStep { at: at + hold, kind: kind.into(), capacity: base });
+        }
+        CapacitySchedule::from_steps(steps)
+    }
+
+    pub fn steps(&self) -> &[CapacityStep] {
+        &self.steps
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Parse the `capacity_trace` experiment key: an array of
+/// `{"t": seconds, "kind": "gpu", "n": slots}` objects. `kind` defaults
+/// to `default_kind` (the spec's own kind), `t` must be finite and
+/// non-negative, `n` non-negative.
+pub fn parse_trace(arr: &[Json], default_kind: &str) -> Result<Vec<CapacityStep>> {
+    let mut steps = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let at = e
+            .get("t")
+            .and_then(Json::as_f64)
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .ok_or_else(|| {
+                AupError::Config(format!(
+                    "capacity_trace[{i}]: 't' must be finite non-negative seconds"
+                ))
+            })?;
+        let capacity = e
+            .get("n")
+            .and_then(Json::as_i64)
+            .filter(|n| *n >= 0)
+            .ok_or_else(|| {
+                AupError::Config(format!("capacity_trace[{i}]: 'n' must be a non-negative slot count"))
+            })? as usize;
+        let kind = e
+            .get("kind")
+            .and_then(Json::as_str)
+            .unwrap_or(default_kind)
+            .to_string();
+        if kind.is_empty() {
+            return Err(AupError::Config(format!(
+                "capacity_trace[{i}]: 'kind' must not be empty"
+            )));
+        }
+        steps.push(CapacityStep { at, kind, capacity });
+    }
+    Ok(steps)
+}
+
+/// The elastic wrapper. Kinds never named by the schedule stay uncapped
+/// (they behave exactly like the wrapped pool); a named kind's
+/// effective capacity is `min(scheduled, physical)` at all times.
+pub struct ElasticManager {
+    inner: Box<dyn ResourceManager>,
+    steps: Vec<CapacityStep>,
+    /// first unapplied step (steps are time-sorted)
+    next_step: usize,
+    /// current scheduled cap per kind (absent = uncapped)
+    caps: BTreeMap<String, usize>,
+    /// rids granted and not yet released, per kind — the in-use count
+    /// `overcommit` compares against the schedule
+    in_use: BTreeMap<String, BTreeSet<i64>>,
+    /// applied steps not yet drained
+    events: Vec<CapacityEvent>,
+}
+
+impl ElasticManager {
+    pub fn new(inner: Box<dyn ResourceManager>, schedule: CapacitySchedule) -> ElasticManager {
+        ElasticManager {
+            inner,
+            steps: schedule.steps,
+            next_step: 0,
+            caps: BTreeMap::new(),
+            in_use: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Slots of `kind` granted and not yet released.
+    pub fn used(&self, kind: &str) -> usize {
+        self.in_use.get(kind).map_or(0, BTreeSet::len)
+    }
+
+    /// The current scheduled cap for `kind`, if the schedule has set one.
+    pub fn scheduled_cap(&self, kind: &str) -> Option<usize> {
+        self.caps.get(kind).copied()
+    }
+
+    /// Grants of `kind` still allowed right now (uncapped = unlimited).
+    fn headroom(&self, kind: &str) -> usize {
+        match self.caps.get(kind) {
+            None => usize::MAX,
+            Some(c) => c.saturating_sub(self.used(kind)),
+        }
+    }
+
+    fn grant(&mut self, h: ResourceHandle) -> ResourceHandle {
+        let kind = self.inner.kind_of_rid(h.rid).unwrap_or("").to_string();
+        self.in_use.entry(kind).or_default().insert(h.rid);
+        h
+    }
+}
+
+impl ResourceManager for ElasticManager {
+    fn get_available(&mut self) -> Option<ResourceHandle> {
+        // the inner pool picks slots in its own order; slots of capped
+        // kinds are borrowed, set aside and returned — at most one pass
+        // over the physical pool, no allocation in the common case
+        let mut rejected: Vec<ResourceHandle> = Vec::new();
+        let mut granted = None;
+        while let Some(h) = self.inner.get_available() {
+            let kind = self.inner.kind_of_rid(h.rid).unwrap_or("");
+            if self.headroom(kind) > 0 {
+                granted = Some(h);
+                break;
+            }
+            rejected.push(h);
+        }
+        for h in rejected {
+            self.inner.release(&h);
+        }
+        granted.map(|h| self.grant(h))
+    }
+
+    fn get_available_kind(&mut self, kind: &str) -> Option<ResourceHandle> {
+        if self.headroom(kind) == 0 {
+            return None;
+        }
+        let h = self.inner.get_available_kind(kind)?;
+        Some(self.grant(h))
+    }
+
+    fn release(&mut self, handle: &ResourceHandle) {
+        if let Some(kind) = self.inner.kind_of_rid(handle.rid) {
+            if let Some(set) = self.in_use.get_mut(kind) {
+                set.remove(&handle.rid);
+            }
+        }
+        self.inner.release(handle);
+    }
+
+    fn capacity(&self) -> usize {
+        let mut total = self.inner.capacity();
+        for (kind, cap) in &self.caps {
+            let physical = self.inner.capacity_kind(kind);
+            total -= physical.saturating_sub(physical.min(*cap));
+        }
+        total
+    }
+
+    fn capacity_kind(&self, kind: &str) -> usize {
+        let physical = self.inner.capacity_kind(kind);
+        match self.caps.get(kind) {
+            Some(c) => physical.min(*c),
+            None => physical,
+        }
+    }
+
+    fn free_count(&self) -> usize {
+        // inner free minus the freedom the caps currently deny
+        let mut total = self.inner.free_count();
+        for kind in self.caps.keys() {
+            let inner_free = self.inner.free_count_kind(kind);
+            total -= inner_free.saturating_sub(inner_free.min(self.headroom(kind)));
+        }
+        total
+    }
+
+    fn free_count_kind(&self, kind: &str) -> usize {
+        self.inner.free_count_kind(kind).min(self.headroom(kind))
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+
+    fn kind_of_rid(&self, rid: i64) -> Option<&'static str> {
+        self.inner.kind_of_rid(rid)
+    }
+
+    fn advance_clock(&mut self, now: f64) {
+        while let Some(step) = self.steps.get(self.next_step) {
+            if step.at > now + EPS {
+                break;
+            }
+            self.caps.insert(step.kind.clone(), step.capacity);
+            self.events.push(CapacityEvent {
+                kind: step.kind.clone(),
+                capacity: step.capacity,
+                in_use: self.used(&step.kind),
+                at: step.at,
+            });
+            self.next_step += 1;
+        }
+        self.inner.advance_clock(now);
+    }
+
+    fn overcommit(&self) -> Vec<(String, usize)> {
+        self.caps
+            .iter()
+            .filter_map(|(kind, cap)| {
+                let used = self.used(kind);
+                (used > *cap).then(|| (kind.clone(), used - *cap))
+            })
+            .collect()
+    }
+
+    fn take_capacity_events(&mut self) -> Vec<CapacityEvent> {
+        let mut evs = std::mem::take(&mut self.events);
+        evs.extend(self.inner.take_capacity_events());
+        evs
+    }
+
+    fn next_capacity_change(&self) -> Option<f64> {
+        let own = self.steps.get(self.next_step).map(|s| s.at);
+        match (own, self.inner.next_capacity_change()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::local::CpuManager;
+    use crate::resource::{gpu::GpuManager, CompositeManager};
+
+    fn elastic_cpu(n: usize, steps: Vec<CapacityStep>) -> ElasticManager {
+        ElasticManager::new(
+            Box::new(CpuManager::new(n)),
+            CapacitySchedule::from_steps(steps),
+        )
+    }
+
+    #[test]
+    fn caps_apply_on_the_clock_and_refuse_grants() {
+        let mut m = elastic_cpu(
+            4,
+            vec![CapacityStep { at: 10.0, kind: "cpu".into(), capacity: 1 }],
+        );
+        assert_eq!(m.capacity(), 4);
+        assert_eq!(m.free_count(), 4);
+        assert_eq!(m.next_capacity_change(), Some(10.0));
+        let a = m.get_available().unwrap();
+        m.advance_clock(10.0);
+        assert_eq!(m.next_capacity_change(), None);
+        assert_eq!(m.capacity(), 1);
+        assert_eq!(m.capacity_kind("cpu"), 1);
+        // one slot scheduled, one in use: nothing more may be granted
+        assert_eq!(m.free_count(), 0);
+        assert_eq!(m.free_count_kind("cpu"), 0);
+        assert!(m.get_available().is_none());
+        assert!(m.get_available_kind("cpu").is_none());
+        assert!(m.overcommit().is_empty(), "1 in use fits the cap of 1");
+        m.release(&a);
+        let evs = m.take_capacity_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, "cpu");
+        assert_eq!(evs[0].capacity, 1);
+        assert_eq!(evs[0].in_use, 1);
+        assert!(m.take_capacity_events().is_empty(), "drained");
+    }
+
+    #[test]
+    fn overcommit_reports_the_excess_until_released() {
+        let mut m = elastic_cpu(
+            3,
+            vec![CapacityStep { at: 5.0, kind: "cpu".into(), capacity: 1 }],
+        );
+        let a = m.get_available().unwrap();
+        let b = m.get_available().unwrap();
+        let c = m.get_available().unwrap();
+        m.advance_clock(5.0);
+        assert_eq!(m.overcommit(), vec![("cpu".to_string(), 2)]);
+        m.release(&a);
+        assert_eq!(m.overcommit(), vec![("cpu".to_string(), 1)]);
+        m.release(&b);
+        assert!(m.overcommit().is_empty());
+        m.release(&c);
+        assert_eq!(m.used("cpu"), 0);
+        // back under cap: exactly one grant allowed again
+        assert!(m.get_available().is_some());
+        assert!(m.get_available().is_none());
+    }
+
+    #[test]
+    fn capacity_recovers_when_the_schedule_grows_back() {
+        let mut m = elastic_cpu(
+            2,
+            vec![
+                CapacityStep { at: 1.0, kind: "cpu".into(), capacity: 0 },
+                CapacityStep { at: 2.0, kind: "cpu".into(), capacity: 8 },
+            ],
+        );
+        m.advance_clock(1.0);
+        assert_eq!(m.capacity(), 0);
+        assert!(m.get_available().is_none());
+        assert_eq!(m.next_capacity_change(), Some(2.0));
+        m.advance_clock(2.0);
+        // scheduled 8 > physical 2: effective capacity is the pool
+        assert_eq!(m.capacity(), 2);
+        assert_eq!(m.free_count(), 2);
+        assert!(m.get_available().is_some());
+        assert_eq!(m.take_capacity_events().len(), 2);
+    }
+
+    #[test]
+    fn composite_kinds_are_capped_independently() {
+        let inner = CompositeManager::new(vec![
+            Box::new(CpuManager::new(2)),
+            Box::new(GpuManager::new(vec![0, 1])),
+        ]);
+        let mut m = ElasticManager::new(
+            Box::new(inner),
+            CapacitySchedule::from_steps(vec![CapacityStep {
+                at: 0.0,
+                kind: "gpu".into(),
+                capacity: 0,
+            }]),
+        );
+        m.advance_clock(0.0);
+        assert_eq!(m.free_count_kind("gpu"), 0);
+        assert_eq!(m.free_count_kind("cpu"), 2);
+        assert_eq!(m.free_count(), 2, "gpu slots are schedulable to no one");
+        assert!(m.get_available_kind("gpu").is_none());
+        // any-kind grants skip the drained gpu sub-pool
+        let a = m.get_available().unwrap();
+        let b = m.get_available().unwrap();
+        assert_eq!(m.kind_of_rid(a.rid), Some("cpu"));
+        assert_eq!(m.kind_of_rid(b.rid), Some("cpu"));
+        assert!(m.get_available().is_none());
+        m.release(&a);
+        m.release(&b);
+        assert_eq!(m.free_count(), 2);
+    }
+
+    #[test]
+    fn diurnal_schedule_alternates() {
+        let s = CapacitySchedule::diurnal("cpu", 4, 1, 100.0, 2);
+        let caps: Vec<(f64, usize)> = s.steps().iter().map(|x| (x.at, x.capacity)).collect();
+        assert_eq!(caps, vec![(50.0, 1), (100.0, 4), (150.0, 1), (200.0, 4)]);
+    }
+
+    #[test]
+    fn revocations_are_seed_deterministic_and_bounded() {
+        let a = CapacitySchedule::revocations("cpu", 4, 1000.0, 8, 42);
+        let b = CapacitySchedule::revocations("cpu", 4, 1000.0, 8, 42);
+        let c = CapacitySchedule::revocations("cpu", 4, 1000.0, 8, 43);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, c, "different seed, different schedule");
+        assert_eq!(a.steps().len(), 16);
+        for s in a.steps() {
+            assert!(s.at >= 0.0 && s.at.is_finite());
+            assert!(s.capacity <= 4);
+        }
+        // time-sorted
+        for w in a.steps().windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn parse_trace_validates() {
+        let arr = Json::parse(r#"[{"t": 0, "n": 2}, {"t": 3.5, "kind": "gpu", "n": 0}]"#).unwrap();
+        let steps = parse_trace(arr.as_arr().unwrap(), "cpu").unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].kind, "cpu");
+        assert_eq!(steps[1].kind, "gpu");
+        assert_eq!(steps[1].capacity, 0);
+        for bad in [
+            r#"[{"n": 2}]"#,
+            r#"[{"t": -1, "n": 2}]"#,
+            r#"[{"t": 1}]"#,
+            r#"[{"t": 1, "n": -3}]"#,
+            r#"[{"t": 1, "kind": "", "n": 1}]"#,
+        ] {
+            let arr = Json::parse(bad).unwrap();
+            assert!(parse_trace(arr.as_arr().unwrap(), "cpu").is_err(), "{bad}");
+        }
+    }
+}

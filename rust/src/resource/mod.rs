@@ -19,6 +19,7 @@ pub mod local;
 pub mod gpu;
 pub mod node;
 pub mod aws;
+pub mod elastic;
 pub mod job;
 pub mod executor;
 
@@ -44,12 +45,33 @@ pub struct ResourceHandle {
     pub spawn_delay: f64,
 }
 
+/// One applied capacity-schedule step, drained by the scheduler /
+/// experiment layer and journaled as a `CAPACITY` job-event row
+/// (jid = -1, rid = -1) so `aup top` can show current-vs-scheduled
+/// capacity per kind without touching the wire protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityEvent {
+    pub kind: String,
+    /// scheduled capacity after this step applied
+    pub capacity: usize,
+    /// slots of this kind in use at the moment the step applied
+    pub in_use: usize,
+    /// schedule time the step applied (dispatcher clock seconds)
+    pub at: f64,
+}
+
 /// The paper's RM interface, extended with per-kind lookups so the
 /// scheduler's sharded ready queues can match a kind-pinned job against
 /// exactly the resources that can serve it. Single-kind managers
 /// (CPU/GPU/node/AWS) get the per-kind flavors for free from the default
 /// implementations; [`CompositeManager`] overrides them to route into
 /// the matching sub-pool.
+///
+/// The elastic-capacity surface ([`elastic::ElasticManager`]) also
+/// lives here as default methods, all no-ops for fixed pools: a clock
+/// feed (`advance_clock`), the overcommit report the scheduler preempts
+/// against, the drained capacity events, and rid→kind attribution so
+/// preemption can pick victims holding slots of a revoked kind.
 pub trait ResourceManager: Send {
     /// `get_available()`: take a free resource, or None if all busy.
     fn get_available(&mut self) -> Option<ResourceHandle>;
@@ -83,6 +105,45 @@ pub trait ResourceManager: Send {
         } else {
             0
         }
+    }
+
+    /// Total resources of one specific kind (free + busy).
+    fn capacity_kind(&self, kind: &str) -> usize {
+        if kind == self.kind() {
+            self.capacity()
+        } else {
+            0
+        }
+    }
+
+    /// Which kind does a granted rid belong to? Single-kind managers
+    /// have only one answer; [`CompositeManager`] routes by rid stride.
+    /// `None` for a rid this manager never issued.
+    fn kind_of_rid(&self, _rid: i64) -> Option<&'static str> {
+        Some(self.kind())
+    }
+
+    /// Observe the scheduler's clock. Elastic pools apply every
+    /// schedule step due at or before `now`; fixed pools ignore it.
+    fn advance_clock(&mut self, _now: f64) {}
+
+    /// Kinds with more slots in use than currently scheduled, as
+    /// `(kind, excess)` — the scheduler preempts `excess` victims of
+    /// each. Always empty for fixed pools.
+    fn overcommit(&self) -> Vec<(String, usize)> {
+        Vec::new()
+    }
+
+    /// Drain the capacity steps applied since the last call.
+    fn take_capacity_events(&mut self) -> Vec<CapacityEvent> {
+        Vec::new()
+    }
+
+    /// Clock time of the next unapplied schedule step, so the scheduler
+    /// can wake for capacity changes like any other timer. `None` for
+    /// fixed pools and exhausted schedules.
+    fn next_capacity_change(&self) -> Option<f64> {
+        None
     }
 }
 
@@ -164,6 +225,41 @@ impl ResourceManager for CompositeManager {
         self.pools.iter().map(|p| p.free_count_kind(kind)).sum()
     }
 
+    fn capacity_kind(&self, kind: &str) -> usize {
+        self.pools.iter().map(|p| p.capacity_kind(kind)).sum()
+    }
+
+    fn kind_of_rid(&self, rid: i64) -> Option<&'static str> {
+        let idx = (rid / COMPOSITE_RID_STRIDE) as usize;
+        self.pools
+            .get(idx)
+            .and_then(|p| p.kind_of_rid(rid % COMPOSITE_RID_STRIDE))
+    }
+
+    // forward the elastic surface so an elastic SUB-pool inside a
+    // composite still works (the usual layering is the other way
+    // around: ElasticManager wrapping the whole composite)
+    fn advance_clock(&mut self, now: f64) {
+        for p in &mut self.pools {
+            p.advance_clock(now);
+        }
+    }
+
+    fn overcommit(&self) -> Vec<(String, usize)> {
+        self.pools.iter().flat_map(|p| p.overcommit()).collect()
+    }
+
+    fn take_capacity_events(&mut self) -> Vec<CapacityEvent> {
+        self.pools.iter_mut().flat_map(|p| p.take_capacity_events()).collect()
+    }
+
+    fn next_capacity_change(&self) -> Option<f64> {
+        self.pools
+            .iter()
+            .filter_map(|p| p.next_capacity_change())
+            .min_by(f64::total_cmp)
+    }
+
     fn kind(&self) -> &'static str {
         "mixed"
     }
@@ -185,6 +281,11 @@ pub struct ResourceSpec {
     /// `resource: "mixed"`: the sub-pool specs (one per kind), parsed
     /// from the `pools` array
     pub pools: Vec<ResourceSpec>,
+    /// elastic capacity: schedule steps parsed from the
+    /// `capacity_trace` array (`[{"t": 3600, "kind": "gpu", "n": 2},
+    /// ...]`; `kind` defaults to the spec's kind). Non-empty wraps the
+    /// built manager in an [`elastic::ElasticManager`]
+    pub capacity_trace: Vec<elastic::CapacityStep>,
 }
 
 impl Default for ResourceSpec {
@@ -198,6 +299,7 @@ impl Default for ResourceSpec {
             perf_jitter: 0.1,
             seed: 0,
             pools: vec![],
+            capacity_trace: vec![],
         }
     }
 }
@@ -248,11 +350,25 @@ impl ResourceSpec {
                 .map(ResourceSpec::from_json)
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(trace) = j.get("capacity_trace").and_then(Json::as_arr) {
+            spec.capacity_trace = elastic::parse_trace(trace, &spec.kind)?;
+        }
         Ok(spec)
     }
 
-    /// Build the manager for this spec.
+    /// Build the manager for this spec. A non-empty `capacity_trace`
+    /// wraps the result in an [`elastic::ElasticManager`], so the pool's
+    /// per-kind capacity follows the trace on the scheduler's clock.
     pub fn build(&self) -> Result<Box<dyn ResourceManager>> {
+        let inner = self.build_fixed()?;
+        if self.capacity_trace.is_empty() {
+            return Ok(inner);
+        }
+        let schedule = elastic::CapacitySchedule::from_steps(self.capacity_trace.clone());
+        Ok(Box::new(elastic::ElasticManager::new(inner, schedule)))
+    }
+
+    fn build_fixed(&self) -> Result<Box<dyn ResourceManager>> {
         match self.kind.as_str() {
             "cpu" => Ok(Box::new(local::CpuManager::new(self.n))),
             "gpu" => {

@@ -48,13 +48,23 @@
 //!              ┌────────────(retry due)───────────┐
 //!              v                                  │
 //! submit -> QUEUED -(resource free)-> RUNNING -> BACKOFF   (attempt failed,
-//!              │                        │ │ │               retries left)
-//!              │                        │ │ └-> FAILED     (retries exhausted)
-//!              │                        │ └---> DONE       (finite score)
-//!              │                        └-> STOPPED_EARLY  (trial-scheduler
-//!              │                                            stop verdict)
+//!              ^                      │ │ │ │               retries left)
+//!              │                      │ │ │ └-> FAILED     (retries exhausted)
+//!              │                      │ │ └---> DONE       (finite score)
+//!              │                      │ └-> STOPPED_EARLY  (trial-scheduler
+//!              │                      │                     stop verdict)
+//!              └─────(PREEMPTED)──────┘
 //!              └---------(cancel, any non-terminal state)-> CANCELLED
 //! ```
+//!
+//! PREEMPTED is *not* terminal: the fleet shrank (elastic capacity
+//! revoked the slot) or a higher-priority job claimed it, so the victim
+//! goes back to the FRONT of its ready shard with its attempt/retry
+//! budget intact — the job did nothing wrong. Capacity becomes
+//! time-varying through [`crate::resource::elastic::ElasticManager`];
+//! every `poll` iteration first advances the pool on the dispatcher
+//! clock ([`Scheduler::sync_capacity`]) and evicts the lowest-priority
+//! running jobs when the schedule shrank below what is in use.
 
 pub mod chaos;
 pub mod dispatch;
@@ -63,7 +73,7 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::resource::job::JobEnv;
-use crate::resource::{ResourceHandle, ResourceManager};
+use crate::resource::{CapacityEvent, ResourceHandle, ResourceManager};
 use crate::search::BasicConfig;
 use crate::trial::{TrialScheduler, Verdict};
 use crate::util::error::{AupError, Result};
@@ -145,6 +155,11 @@ pub enum JobState {
     /// Cancelled this is a *policy* decision, counted separately so the
     /// saved compute is visible in `aup status`
     StoppedEarly,
+    /// evicted mid-attempt because its slot was claimed by a
+    /// higher-priority job or revoked by a shrinking capacity schedule.
+    /// NOT terminal — the job is requeued at the front of its shard
+    /// immediately, with its retry budget untouched
+    Preempted,
 }
 
 impl JobState {
@@ -164,6 +179,7 @@ impl JobState {
             JobState::Failed => "FAILED",
             JobState::Cancelled => "CANCELLED",
             JobState::StoppedEarly => "STOPPED_EARLY",
+            JobState::Preempted => "PREEMPTED",
         }
     }
 }
@@ -466,7 +482,13 @@ pub struct Scheduler<D: Dispatcher> {
     /// slot until their thread finishes
     zombies: BTreeMap<AttemptId, ResourceHandle>,
     next_attempt: AttemptId,
+    /// ascending seq for normal (re)queues; starts at the midpoint of
+    /// the u64 space so `next_front` can count DOWN from just below it —
+    /// preempted jobs get front seqs that sort before every normal entry
+    /// of the same priority
     next_seq: u64,
+    /// descending seq for front-of-shard requeues (preemption victims)
+    next_front: u64,
     next_sub: SubId,
     /// non-terminal job count
     active: usize,
@@ -504,7 +526,8 @@ impl<D: Dispatcher> Scheduler<D> {
             lease_timeout: DEFAULT_LEASE_TIMEOUT,
             zombies: BTreeMap::new(),
             next_attempt: 0,
-            next_seq: 0,
+            next_seq: 1 << 63,
+            next_front: (1 << 63) - 1,
             next_sub: 0,
             active: 0,
             completed: Vec::new(),
@@ -580,6 +603,14 @@ impl<D: Dispatcher> Scheduler<D> {
 
     pub fn pool_free(&self) -> usize {
         self.rm.free_count()
+    }
+
+    /// Drain the capacity-schedule steps the pool applied since the last
+    /// call (always empty for fixed pools). The experiment layer
+    /// journals them as `CAPACITY` job events, which is how `aup top`
+    /// learns per-kind current-vs-scheduled capacity.
+    pub fn take_capacity_events(&mut self) -> Vec<CapacityEvent> {
+        self.rm.take_capacity_events()
     }
 
     /// Compact summaries of every job that reached a terminal state (in
@@ -841,6 +872,73 @@ impl<D: Dispatcher> Scheduler<D> {
         true
     }
 
+    /// Evict a RUNNING job so its slot can be reassigned (priority
+    /// preemption) or retired (elastic capacity revocation). Mirrors
+    /// [`Scheduler::cancel`]'s running arm — the local attempt is
+    /// aborted and its slot released (or parked as a zombie until the
+    /// thread dies); a leased attempt's lease is REVOKED, so the
+    /// worker's next heartbeat answers false and a late `Complete` is
+    /// refused — the over-the-wire eviction path. Unlike cancel /
+    /// stop_early the job does NOT turn terminal: it re-enters the
+    /// FRONT of its ready shard, and the evicted attempt is rolled back
+    /// so the retry budget stays intact (same contract as lease expiry —
+    /// the job did nothing wrong, the fleet changed under it). Returns
+    /// false unless the job is currently Running.
+    pub fn preempt(&mut self, sub: SubId, job_id: u64, why: &str) -> bool {
+        let key = (sub, job_id);
+        match self.jobs.get(&key) {
+            Some(j) if j.state == JobState::Running => {}
+            _ => return false,
+        }
+        let now = self.dispatcher.now();
+        let (attempt_id, handle, had_deadline, ran, attempt_no) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            let had_deadline = j.deadline.take().is_some();
+            let ran = (now - j.started_at).max(0.0);
+            let attempt_no = j.attempts;
+            // roll the attempt back: a preempted job keeps its retry
+            // budget, and like a cancel its elapsed stays uncharged —
+            // the occupied seconds still reach utilization accounting
+            // through the transition's (rid, busy) stamp below
+            j.attempts = j.attempts.saturating_sub(1);
+            (j.attempt_id.take(), j.handle.take(), had_deadline, ran, attempt_no)
+        };
+        if had_deadline {
+            self.deadlines.note_dead();
+        }
+        let mut ended: Option<(i64, f64)> = None;
+        if let Some(a) = attempt_id {
+            if self.leases.remove(&a).is_some() {
+                // leased to a remote worker: no local thread or slot —
+                // dropping the lease is the whole eviction
+            } else {
+                self.attempts.remove(&a);
+                let reaped = self.dispatcher.abort(a);
+                if let Some(h) = handle {
+                    ended = Some((h.rid, ran));
+                    if reaped {
+                        self.rm.release(&h);
+                    } else {
+                        // the thread still runs user code on that slot;
+                        // reclaim it when the late completion arrives
+                        self.zombies.insert(a, h);
+                    }
+                }
+            }
+        }
+        self.push_transition(
+            key,
+            JobState::Preempted,
+            attempt_no,
+            now,
+            ended.map(|(rid, _)| rid),
+            ended.map_or(0.0, |(_, busy)| busy),
+            why.to_string(),
+        );
+        self.requeue_front(key, now);
+        true
+    }
+
     /// A remote worker streamed one intermediate report for a leased
     /// attempt. Returns `Some(stop)` for a live lease (`stop == true`
     /// means the job was just stopped early and the worker must kill
@@ -1071,6 +1169,10 @@ impl<D: Dispatcher> Scheduler<D> {
     pub fn poll(&mut self, block: bool) -> Result<Vec<SchedEvent>> {
         loop {
             let now = self.dispatcher.now();
+            // elastic pools first: apply due capacity steps and evict
+            // whatever no longer fits, so this iteration's fill_slots
+            // sees the true fleet
+            self.sync_capacity(now);
             self.promote_backoffs(now);
             // expire due deadlines eagerly: a non-blocking poll (the
             // `--serve` loop) otherwise NEVER reaches the expiry in the
@@ -1172,6 +1274,117 @@ impl<D: Dispatcher> Scheduler<D> {
         );
     }
 
+    /// Put a preempted job back at the FRONT of its ready shard: seqs
+    /// from the descending counter sort before every normally-queued
+    /// entry of the same priority, so the victim resumes as soon as its
+    /// kind has capacity again. Multiple victims resume LIFO (the most
+    /// recently evicted first) — intentional: its state is the warmest.
+    fn requeue_front(&mut self, key: (SubId, u64), now: f64) {
+        let seq = self.next_front;
+        self.next_front -= 1;
+        let (priority, attempts, kind) = {
+            let j = self.jobs.get_mut(&key).unwrap();
+            j.state = JobState::Queued;
+            j.seq = seq;
+            (j.priority, j.attempts, j.kind.clone())
+        };
+        self.shards
+            .entry(kind)
+            .or_default()
+            .push_live(PendingEntry { priority, seq, key });
+        self.push_transition(
+            key,
+            JobState::Queued,
+            attempts,
+            now,
+            None,
+            0.0,
+            "requeued at queue front after preemption (budget intact)".to_string(),
+        );
+    }
+
+    /// Advance the pool on the dispatcher clock (an elastic schedule
+    /// applies its due steps here), then enforce a shrunken schedule:
+    /// for each kind with more slots in use than scheduled, preempt the
+    /// lowest-priority running local holders until the pool fits again.
+    /// Zombie slots (killed attempts still draining their thread) count
+    /// against the excess — they release on their own, so evicting live
+    /// victims in their stead would over-shrink the fleet.
+    fn sync_capacity(&mut self, now: f64) {
+        self.rm.advance_clock(now);
+        for (kind, excess) in self.rm.overcommit() {
+            let mut need = excess.saturating_sub(self.zombie_count(&kind));
+            while need > 0 {
+                let Some((sub, job_id)) = self.pick_victim(&kind, i32::MAX) else { break };
+                if !self.preempt(sub, job_id, &format!("capacity of kind '{kind}' revoked")) {
+                    break;
+                }
+                need -= 1;
+            }
+        }
+    }
+
+    /// Does `rid` belong to `kind`? ("" matches any kind.)
+    fn rid_is_kind(&self, rid: i64, kind: &str) -> bool {
+        kind.is_empty() || self.rm.kind_of_rid(rid).is_some_and(|k| k == kind)
+    }
+
+    /// Zombie slots of one kind still draining their killed thread.
+    fn zombie_count(&self, kind: &str) -> usize {
+        self.zombies.values().filter(|h| self.rid_is_kind(h.rid, kind)).count()
+    }
+
+    /// Lowest-priority RUNNING job holding a LOCAL slot of `kind`
+    /// ("" = any) with priority strictly below `below`; ties go to the
+    /// youngest attempt (largest attempt id) so the longest-running
+    /// candidate keeps its progress. Leased jobs are never picked here:
+    /// they hold no local slot, so evicting them frees nothing — over-
+    /// the-wire eviction happens through [`Scheduler::preempt`] on a
+    /// leased job directly, or through lease expiry when the worker is
+    /// simply gone. Cost is O(running attempts), bounded by pool size.
+    fn pick_victim(&self, kind: &str, below: i32) -> Option<(SubId, u64)> {
+        let mut best: Option<(i32, AttemptId, (SubId, u64))> = None;
+        for (&a, &key) in &self.attempts {
+            let Some(j) = self.jobs.get(&key) else { continue };
+            if j.state != JobState::Running || j.priority >= below {
+                continue;
+            }
+            let Some(h) = j.handle.as_ref() else { continue };
+            if !self.rid_is_kind(h.rid, kind) {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bp, ba, _)) => j.priority < *bp || (j.priority == *bp && a > *ba),
+            };
+            if better {
+                best = Some((j.priority, a, key));
+            }
+        }
+        best.map(|(_, _, key)| key)
+    }
+
+    /// Priority preemption: a queued head at `priority` is blocked on
+    /// `kind` with zero free slots. Evict the strictly-lower-priority
+    /// running local holder of that kind (lowest priority first) —
+    /// unless a zombie slot of the kind is already draining: its release
+    /// is on the way, so killing another victim would cascade. One
+    /// victim per call; the caller's next pass places the head once the
+    /// slot actually frees.
+    fn preempt_for(&mut self, kind: &str, priority: i32) -> bool {
+        if self.zombie_count(kind) > 0 {
+            return false;
+        }
+        match self.pick_victim(kind, priority) {
+            Some((sub, job_id)) => self.preempt(
+                sub,
+                job_id,
+                &format!("preempted by a higher-priority job (priority {priority})"),
+            ),
+            None => false,
+        }
+    }
+
     /// Move due Backoff jobs back into the pending queue. Event path:
     /// pop only due entries off the backoff heap — O(due · log live).
     /// Scan path: the old full scan of every job.
@@ -1218,8 +1431,11 @@ impl<D: Dispatcher> Scheduler<D> {
     fn fill_slots(&mut self) {
         loop {
             // prune stale heads, then pick the best-placed live head
-            // among shards whose kind has capacity right now
+            // among shards whose kind has capacity right now; heads
+            // blocked on a full kind are remembered as preemption
+            // candidates
             let mut best: Option<(String, i32, u64)> = None;
+            let mut blocked: Option<(String, i32, u64)> = None;
             for (kind, q) in self.shards.iter_mut() {
                 let head = loop {
                     match q.heap.peek() {
@@ -1243,18 +1459,28 @@ impl<D: Dispatcher> Scheduler<D> {
                 } else {
                     self.rm.free_count_kind(kind) > 0
                 };
-                if !free {
-                    continue;
-                }
-                let better = match &best {
+                let slot = if free { &mut best } else { &mut blocked };
+                let better = match slot {
                     None => true,
                     Some((_, bp, bs)) => priority > *bp || (priority == *bp && seq < *bs),
                 };
                 if better {
-                    best = Some((kind.clone(), priority, seq));
+                    *slot = Some((kind.clone(), priority, seq));
                 }
             }
-            let Some((kind, _, _)) = best else { return };
+            let Some((kind, _, _)) = best else {
+                // nothing placeable on free capacity. If the best
+                // blocked head out-prioritizes a running job on its
+                // kind, evict that victim and go around again — the
+                // freed slot (sim: immediately; thread: once the killed
+                // attempt drains) places the head
+                if let Some((kind, priority, _)) = blocked {
+                    if self.preempt_for(&kind, priority) {
+                        continue;
+                    }
+                }
+                return;
+            };
             let handle = if kind.is_empty() {
                 self.rm.get_available()
             } else {
@@ -1573,10 +1799,14 @@ impl<D: Dispatcher> Scheduler<D> {
     }
 
     /// Earliest time something scheduled happens: a running attempt's
-    /// deadline or a backoff becoming due. Event path: O(1) off the two
-    /// heap tops (stale tops popped lazily); scan path: full scan.
+    /// deadline, a backoff becoming due, or the pool's next capacity
+    /// step (an elastic schedule growing back IS a wakeup — jobs queued
+    /// on a drained kind would otherwise sleep past the recovery).
+    /// Event path: O(1) off the two heap tops (stale tops popped
+    /// lazily); scan path: full scan.
     fn next_wakeup(&mut self) -> Option<f64> {
-        match self.path {
+        let cap = self.rm.next_capacity_change();
+        let timer = match self.path {
             PollPath::Scan => {
                 let mut t: Option<f64> = None;
                 for j in self.jobs.values() {
@@ -1626,6 +1856,10 @@ impl<D: Dispatcher> Scheduler<D> {
                     (None, None) => None,
                 }
             }
+        };
+        match (timer, cap) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
         }
     }
 }
@@ -2617,6 +2851,424 @@ mod tests {
                 busy < oracle_busy - 1e-9,
                 "{policy}: busy {busy} must be strictly below the oracle's {oracle_busy}"
             );
+        }
+    }
+
+    // -- priority preemption + elastic capacity --------------------------
+
+    use crate::resource::elastic::{CapacitySchedule, CapacityStep, ElasticManager};
+
+    fn elastic_cpus(n: usize, steps: Vec<CapacityStep>) -> Box<ElasticManager> {
+        Box::new(ElasticManager::new(
+            Box::new(CpuManager::new(n)),
+            CapacitySchedule::from_steps(steps),
+        ))
+    }
+
+    /// Drain an elastic scheduler to idle: unlike [`drain`], an empty
+    /// poll is NOT completion — it may just be a capacity step that
+    /// placed nothing — so key on `idle()` and treat "no events, no
+    /// clock progress" as the stall it would be.
+    fn drain_elastic(s: &mut SimScheduler) -> Vec<Completion> {
+        let mut done = Vec::new();
+        let mut stalls = 0;
+        while !s.idle() {
+            let before = s.now();
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() && s.now() <= before {
+                stalls += 1;
+                assert!(stalls < 3, "elastic drain stalled at t={}", s.now());
+            } else {
+                stalls = 0;
+            }
+            for ev in evs {
+                if let SchedEvent::Done(c) = ev {
+                    done.push(c);
+                }
+            }
+        }
+        done
+    }
+
+    #[test]
+    fn high_priority_head_preempts_the_running_victim() {
+        // one slot; a low-priority 100s job is running when a priority-5
+        // job arrives: the victim is evicted mid-attempt, the new job
+        // runs at once, and the victim resumes FROM THE QUEUE FRONT with
+        // max_retries = 0 — reaching Done proves eviction burned none of
+        // its budget
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let lo = s.add_submission(0, cfg_with(0, 1.0, None));
+        let hi = s.add_submission(5, cfg_with(0, 1.0, None));
+        s.dispatcher_mut()
+            .add_executor(lo, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 100.0))));
+        s.dispatcher_mut()
+            .add_executor(hi, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(2.0, 10.0))));
+        s.submit(lo, job(0)).unwrap();
+        let _ = s.poll(false).unwrap(); // lo/0 is Running
+        assert_eq!(s.pool_free(), 0);
+        s.submit(hi, job(0)).unwrap();
+        let mut transitions = Vec::new();
+        let mut done = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                match ev {
+                    SchedEvent::Transition(t) => transitions.push(t),
+                    SchedEvent::Done(c) => done.push(c),
+                }
+            }
+        }
+        // exactly one eviction, journaled as PREEMPTED (not CANCELLED),
+        // stamped with the slot and the seconds the doomed attempt burnt
+        let pre: Vec<_> =
+            transitions.iter().filter(|t| t.state == JobState::Preempted).collect();
+        assert_eq!(pre.len(), 1, "{transitions:?}");
+        assert_eq!((pre[0].sub, pre[0].job_id), (lo, 0));
+        assert_eq!(pre[0].state.name(), "PREEMPTED");
+        assert_eq!(pre[0].rid, Some(0));
+        assert!((pre[0].busy - 0.0).abs() < 1e-9, "evicted at t=0: {}", pre[0].busy);
+        assert!(pre[0].detail.contains("priority 5"), "{}", pre[0].detail);
+        assert!(transitions
+            .iter()
+            .any(|t| t.state == JobState::Queued && t.detail.contains("queue front")));
+        // exactly one terminal state per job, budget intact on the victim
+        assert_eq!(done.len(), 2);
+        let hi_done = done.iter().find(|c| c.sub == hi).unwrap();
+        let lo_done = done.iter().find(|c| c.sub == lo).unwrap();
+        assert_eq!(hi_done.state, JobState::Done);
+        assert_eq!(lo_done.state, JobState::Done);
+        assert_eq!(lo_done.attempts, 1, "preemption must not burn the retry budget");
+        // hi ran 0..10, the victim re-ran 10..110
+        assert!((s.now() - 110.0).abs() < 1e-9, "t = {}", s.now());
+        assert_eq!(s.pool_free(), 1, "no slot leaked through the eviction");
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn equal_priority_waits_instead_of_preempting() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let a = s.add_submission(3, SchedulerConfig::default());
+        let b = s.add_submission(3, SchedulerConfig::default());
+        for sub in [a, b] {
+            s.dispatcher_mut()
+                .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 10.0))));
+        }
+        s.submit(a, job(0)).unwrap();
+        let _ = s.poll(false).unwrap();
+        s.submit(b, job(0)).unwrap();
+        let mut preempted = 0;
+        let mut done = Vec::new();
+        loop {
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() {
+                break;
+            }
+            for ev in evs {
+                match ev {
+                    SchedEvent::Transition(t) if t.state == JobState::Preempted => {
+                        preempted += 1
+                    }
+                    SchedEvent::Done(c) => done.push(c),
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(preempted, 0, "preemption requires STRICTLY higher priority");
+        assert_eq!(done.len(), 2);
+        assert_eq!((done[0].sub, done[1].sub), (a, b), "FIFO held");
+    }
+
+    #[test]
+    fn preempting_a_leased_victim_revokes_the_lease() {
+        // the over-the-wire eviction path: the victim holds no local
+        // slot, so revoking the lease IS the preemption — the worker's
+        // next heartbeat fails and its late Complete is refused
+        let (mut s, sub) = remote_only(1, cfg_with(0, 1.0, None));
+        let lj = s.lease_next("rig-a").unwrap();
+        assert!(s.preempt(sub, lj.job_id, "spot instance reclaimed"));
+        assert_eq!(s.lease_count(), 0, "eviction revoked the lease");
+        assert!(!s.heartbeat_lease(lj.lease));
+        assert!(!s.complete_lease(lj.lease, Ok(9.9), 1.0), "late result refused");
+        // the job is back at the queue front with budget intact: a
+        // second worker picks it up as attempt 1 and finishes it
+        let lj2 = s.lease_next("rig-b").expect("requeued after preemption");
+        assert_eq!(lj2.job_id, lj.job_id);
+        assert_eq!(lj2.attempt, 1, "budget intact");
+        assert!(s.complete_lease(lj2.lease, Ok(0.5), 1.0));
+        let evs = s.poll(false).unwrap();
+        assert!(evs.iter().any(|e| matches!(
+            e,
+            SchedEvent::Done(c) if c.state == JobState::Done && c.attempts == 1
+        )));
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn preempt_is_running_only() {
+        let mut s = SimScheduler::new(Box::new(CpuManager::new(1)), SimDispatcher::new());
+        let sub = s.add_submission(0, SchedulerConfig::default());
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(0.0, 1.0))));
+        s.submit(sub, job(0)).unwrap();
+        assert!(!s.preempt(sub, 0, "still queued"), "queued jobs cannot be preempted");
+        assert!(!s.preempt(sub, 7, "unknown"), "unknown job");
+        let done = drain(&mut s);
+        assert_eq!(done[0].state, JobState::Done);
+        assert!(!s.preempt(sub, 0, "already terminal"));
+    }
+
+    #[test]
+    fn capacity_revocation_preempts_down_and_recovers() {
+        // 2 slots, 4 jobs of 10s; at t=5 the schedule revokes the whole
+        // kind, at t=20 it restores it. The two running jobs are evicted
+        // (budget intact), everyone re-runs after the regrowth
+        let rm = elastic_cpus(
+            2,
+            vec![
+                CapacityStep { at: 5.0, kind: "cpu".into(), capacity: 0 },
+                CapacityStep { at: 20.0, kind: "cpu".into(), capacity: 2 },
+            ],
+        );
+        let mut s = SimScheduler::new(rm, SimDispatcher::new());
+        let sub = s.add_submission(0, cfg_with(0, 1.0, None));
+        s.dispatcher_mut()
+            .add_executor(sub, Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))));
+        for id in 0..4 {
+            s.submit(sub, job(id)).unwrap();
+        }
+        let done = drain_elastic(&mut s);
+        assert_eq!(done.len(), 4, "every job reaches exactly one terminal state");
+        assert!(done.iter().all(|c| c.state == JobState::Done));
+        assert!(done.iter().all(|c| c.attempts == 1), "revocation burnt no budget");
+        // 4 jobs restart at t=20 on 2 slots: two waves, makespan 40
+        assert!((s.now() - 40.0).abs() < 1e-9, "t = {}", s.now());
+        assert_eq!(s.pool_free(), 2, "no slot leaked through the revocation");
+        // the capacity steps surfaced for the journal
+        let evs = s.take_capacity_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!((evs[0].capacity, evs[0].in_use), (0, 2), "revoked under 2 running");
+        assert_eq!(evs[1].capacity, 2);
+        assert!(s.take_capacity_events().is_empty(), "drained");
+    }
+
+    #[test]
+    fn partial_revocation_evicts_the_lowest_priority_first() {
+        // 3 slots: priorities 0, 1, 2 running; capacity drops to 1 —
+        // the two LOWEST priorities are evicted, the priority-2 job
+        // keeps its slot and finishes first
+        let rm = elastic_cpus(
+            3,
+            vec![CapacityStep { at: 1.0, kind: "cpu".into(), capacity: 1 }],
+        );
+        let mut s = SimScheduler::new(rm, SimDispatcher::new());
+        let subs: Vec<SubId> = (0..3)
+            .map(|p| {
+                let sub = s.add_submission(p, cfg_with(0, 1.0, None));
+                s.dispatcher_mut().add_executor(
+                    sub,
+                    Box::new(FnSimExecutor::new(|_, _| SimOutcome::ok(1.0, 10.0))),
+                );
+                sub
+            })
+            .collect();
+        for &sub in &subs {
+            s.submit(sub, job(0)).unwrap();
+        }
+        let _ = s.poll(false).unwrap();
+        assert_eq!(s.pool_free(), 0, "all three running");
+        let mut preempted = Vec::new();
+        let mut done = Vec::new();
+        let mut stalls = 0;
+        while !s.idle() {
+            let before = s.now();
+            let evs = s.poll(true).unwrap();
+            if evs.is_empty() && s.now() <= before {
+                stalls += 1;
+                assert!(stalls < 3, "stalled at t={}", s.now());
+            } else {
+                stalls = 0;
+            }
+            for ev in evs {
+                match ev {
+                    SchedEvent::Transition(t) if t.state == JobState::Preempted => {
+                        preempted.push(t.sub)
+                    }
+                    SchedEvent::Done(c) => done.push(c),
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(preempted, vec![subs[0], subs[1]], "lowest priority evicted first");
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[0].sub, subs[2], "the surviving high-priority job finishes first");
+        assert!(done.iter().all(|c| c.state == JobState::Done && c.attempts == 1));
+        // survivor 0..10; victims re-run serially on the one slot
+        assert!((s.now() - 30.0).abs() < 1e-9, "t = {}", s.now());
+    }
+
+    #[test]
+    fn scan_and_event_paths_agree_under_capacity_churn() {
+        // the oracle property extended to the new machinery: capacity
+        // churn + mixed priorities + flaky attempts must produce
+        // bit-identical transition streams on both poll paths. The
+        // steps are explicit (not seeded) so the trace provably
+        // preempts: at t=3 two 5s jobs are mid-attempt when the kind
+        // shrinks to 1
+        let run = |scan: bool| {
+            let rm = elastic_cpus(
+                2,
+                vec![
+                    CapacityStep { at: 3.0, kind: "cpu".into(), capacity: 1 },
+                    CapacityStep { at: 7.0, kind: "cpu".into(), capacity: 0 },
+                    CapacityStep { at: 12.0, kind: "cpu".into(), capacity: 2 },
+                    CapacityStep { at: 25.0, kind: "cpu".into(), capacity: 1 },
+                    CapacityStep { at: 30.0, kind: "cpu".into(), capacity: 2 },
+                ],
+            );
+            let mut s = if scan {
+                SimScheduler::scan_baseline(rm, SimDispatcher::new())
+            } else {
+                SimScheduler::new(rm, SimDispatcher::new())
+            };
+            let lo = s.add_submission(0, cfg_with(1, 0.5, None));
+            let hi = s.add_submission(4, cfg_with(1, 0.5, None));
+            for sub in [lo, hi] {
+                s.dispatcher_mut().add_executor(
+                    sub,
+                    Box::new(FnSimExecutor::new(|c, _| {
+                        let id = c.job_id().unwrap();
+                        if id % 4 == 3 {
+                            SimOutcome::fail("boom", 2.0)
+                        } else {
+                            SimOutcome::ok(id as f64, 5.0)
+                        }
+                    })),
+                );
+            }
+            for id in 0..8 {
+                s.submit(lo, job(id)).unwrap();
+            }
+            for id in 0..4 {
+                s.submit(hi, job(id)).unwrap();
+            }
+            let mut trace = Vec::new();
+            let mut stalls = 0;
+            while !s.idle() {
+                let before = s.now();
+                let evs = s.poll(true).unwrap();
+                if evs.is_empty() && s.now() <= before {
+                    stalls += 1;
+                    assert!(stalls < 3, "stalled at t={}", s.now());
+                } else {
+                    stalls = 0;
+                }
+                for ev in evs {
+                    if let SchedEvent::Transition(t) = ev {
+                        trace.push((
+                            t.sub,
+                            t.job_id,
+                            t.state.name(),
+                            t.attempt,
+                            t.at.to_bits(),
+                            t.rid,
+                            t.busy.to_bits(),
+                        ));
+                    }
+                }
+            }
+            (trace, s.now(), s.completed_log().len())
+        };
+        let event = run(false);
+        assert!(
+            event.0.iter().any(|t| t.2 == "PREEMPTED"),
+            "the seeded trace must actually preempt something"
+        );
+        assert_eq!(event, run(true));
+    }
+
+    #[test]
+    fn capacity_churn_chaos_exactly_one_terminal_state_and_zero_leaks() {
+        // the robustness tentpole's property test: seeded capacity
+        // revocations × flaky attempts × early stopping, all at once.
+        // Invariants: every job reaches EXACTLY one terminal state, the
+        // retry budget is only burnt by real failures (never by
+        // preemption), and the pool comes back whole.
+        for seed in [1u64, 42, 0xDEAD] {
+            let rm = elastic_cpus(
+                3,
+                CapacitySchedule::revocations("cpu", 3, 300.0, 6, seed).steps().to_vec(),
+            );
+            let mut s = SimScheduler::new(rm, SimDispatcher::new());
+            let sub = s.add_submission(0, cfg_with(2, 0.5, None));
+            s.set_trial_scheduler(crate::trial::by_name("median").unwrap());
+            s.set_trial_maximize(sub, true);
+            s.dispatcher_mut().add_executor(
+                sub,
+                Box::new(FnSimExecutor::new(move |c, _| {
+                    let id = c.job_id().unwrap();
+                    if id % 5 == 4 {
+                        return SimOutcome::fail("flaky", 3.0);
+                    }
+                    let top = 1.0 / (id + 1) as f64;
+                    SimOutcome::ok(top, 8.0)
+                        .with_curve(vec![(2.0, 1, top * 0.5), (6.0, 2, top)])
+                })),
+            );
+            let n_jobs = 20u64;
+            for id in 0..n_jobs {
+                s.submit(sub, job(id)).unwrap();
+            }
+            let mut terminal: BTreeMap<u64, JobState> = BTreeMap::new();
+            let mut stalls = 0;
+            let mut guard = 0;
+            while !s.idle() {
+                guard += 1;
+                assert!(guard < 100_000, "seed {seed}: churn run did not drain");
+                let before = s.now();
+                let evs = s.poll(true).unwrap();
+                if evs.is_empty() && s.now() <= before {
+                    stalls += 1;
+                    assert!(stalls < 3, "seed {seed}: stalled at t={}", s.now());
+                } else {
+                    stalls = 0;
+                }
+                for ev in evs {
+                    if let SchedEvent::Done(c) = ev {
+                        let prev = terminal.insert(c.job_id, c.state);
+                        assert!(
+                            prev.is_none(),
+                            "seed {seed}: job {} terminal twice",
+                            c.job_id
+                        );
+                        assert!(
+                            c.attempts <= 3,
+                            "seed {seed}: job {} burnt {} attempts on a budget of 3",
+                            c.job_id,
+                            c.attempts
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                terminal.len() as u64,
+                n_jobs,
+                "seed {seed}: every job terminal exactly once"
+            );
+            assert_eq!(s.completed_log().len() as u64, n_jobs);
+            assert!(s.jobs.is_empty(), "seed {seed}: terminal jobs evicted from the hot map");
+            // ride the clock past the whole schedule (drops can land
+            // after the run drains), then the restored pool must be
+            // whole — no slot leaked to a preempted, stopped or failed
+            // attempt
+            let clock = s.dispatcher_mut().clock().clone();
+            clock.advance_to(1_000.0);
+            let _ = s.poll(false).unwrap();
+            assert_eq!(s.pool_free(), 3, "seed {seed}: pool leak");
+            assert_eq!(s.lease_count(), 0);
         }
     }
 }

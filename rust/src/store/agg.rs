@@ -53,6 +53,11 @@ pub struct ExperimentAggregate {
     pub stopped: usize,
     /// BACKOFF rows of this eid in `job_event`
     pub retries: usize,
+    /// PREEMPTED rows of this eid in `job_event` — attempts evicted for
+    /// a higher-priority job or a capacity revocation (the job itself
+    /// went back to the queue, budget intact, so this is event-counted,
+    /// not a job status)
+    pub preempted: usize,
     /// busy seconds / count of DONE attempt-ending journal rows — the
     /// calibration for the compute-saved estimate
     pub finished_busy: f64,
@@ -110,6 +115,9 @@ impl ExperimentAggregate {
         if state == Some("BACKOFF") {
             self.retries += 1;
         }
+        if state == Some("PREEMPTED") {
+            self.preempted += 1;
+        }
         let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
         match (state, busy) {
             (Some("DONE"), Some(b)) => {
@@ -129,6 +137,9 @@ impl ExperimentAggregate {
     fn retire_event(&mut self, state: Option<&str>, busy: Option<f64>) {
         if state == Some("BACKOFF") {
             self.retries = self.retries.saturating_sub(1);
+        }
+        if state == Some("PREEMPTED") {
+            self.preempted = self.preempted.saturating_sub(1);
         }
         let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
         match (state, busy) {
@@ -245,9 +256,67 @@ pub(crate) fn absorb_util(
     u.last_time = u.last_time.max(t);
 }
 
+/// Last-seen elastic capacity of one resource kind, parsed from the
+/// fleet-scoped `CAPACITY` journal rows (`jid`/`rid` = -1) the batch
+/// loop writes whenever an [`ElasticManager`] applies a schedule step.
+/// The `aup top` fleet table renders current in-use against the
+/// scheduled cap.
+///
+/// [`ElasticManager`]: crate::resource::elastic::ElasticManager
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindCapacity {
+    pub kind: String,
+    /// effective scheduled capacity after the step
+    pub capacity: usize,
+    /// slots in use at that instant (> capacity means the scheduler is
+    /// preempting down to fit)
+    pub in_use: usize,
+    /// journal `time` of the event — last-writer-wins when shards merge
+    pub time: f64,
+}
+
+/// Parse one CAPACITY row's detail
+/// (`"[t=1.500] kind=cpu capacity=2 in_use=4"`) back into a
+/// [`KindCapacity`]. Shared by the incremental path and the one-pass
+/// scan fallback so both read the same rows the same way.
+pub(crate) fn parse_capacity_detail(detail: &str, time: f64) -> Option<KindCapacity> {
+    let mut kind = None;
+    let mut capacity = None;
+    let mut in_use = None;
+    for tok in detail.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("kind=") {
+            kind = Some(v.to_string());
+        } else if let Some(v) = tok.strip_prefix("capacity=") {
+            capacity = v.parse::<usize>().ok();
+        } else if let Some(v) = tok.strip_prefix("in_use=") {
+            in_use = v.parse::<usize>().ok();
+        }
+    }
+    Some(KindCapacity { kind: kind?, capacity: capacity?, in_use: in_use?, time })
+}
+
+/// Absorb one CAPACITY journal row into the per-kind map: later journal
+/// times win, so replay/scan order does not matter.
+pub(crate) fn absorb_capacity(
+    map: &mut BTreeMap<String, KindCapacity>,
+    detail: Option<&str>,
+    time: Option<f64>,
+) {
+    let Some(cap) = detail.and_then(|d| parse_capacity_detail(d, time.unwrap_or(0.0))) else {
+        return;
+    };
+    match map.get(&cap.kind) {
+        Some(old) if old.time > cap.time => {}
+        _ => {
+            map.insert(cap.kind.clone(), cap);
+        }
+    }
+}
+
 /// Column slots of a tracked `job_event` table. `rid`/`busy`/`time` are
 /// optional — a journal from before the utilization columns simply
-/// contributes no busy time.
+/// contributes no busy time; `detail` likewise only feeds the CAPACITY
+/// rows.
 #[derive(Debug, Clone, Copy)]
 struct EventCols {
     eid: usize,
@@ -255,6 +324,7 @@ struct EventCols {
     rid: Option<usize>,
     busy: Option<usize>,
     time: Option<usize>,
+    detail: Option<usize>,
 }
 
 /// Pre-mutation snapshot of the aggregate-relevant fields of one row,
@@ -278,6 +348,10 @@ pub(crate) struct Aggregates {
     disabled: bool,
     per_exp: BTreeMap<i64, ExperimentAggregate>,
     per_rid: BTreeMap<i64, ResourceUtil>,
+    /// last-seen per-kind elastic capacity (CAPACITY journal rows);
+    /// informational and last-writer-wins, so manual journal edits are
+    /// not unwound
+    fleet_caps: BTreeMap<String, KindCapacity>,
 }
 
 impl Aggregates {
@@ -294,6 +368,12 @@ impl Aggregates {
     /// Per-resource busy-time totals, in rid order.
     pub fn utilization(&self) -> Vec<ResourceUtil> {
         self.per_rid.values().cloned().collect()
+    }
+
+    /// Last-seen per-kind elastic capacity, in kind order. Empty unless
+    /// the batch ran on an [`ElasticManager`](crate::resource::elastic::ElasticManager).
+    pub fn fleet_capacity(&self) -> Vec<KindCapacity> {
+        self.fleet_caps.values().cloned().collect()
     }
 
     /// A table was created: resolve tracked-column slots by name.
@@ -321,6 +401,7 @@ impl Aggregates {
                         rid: s.col_index("rid"),
                         busy: s.col_index("busy"),
                         time: s.col_index("time"),
+                        detail: s.col_index("detail"),
                     });
                 }
                 _ => self.disabled = true,
@@ -378,6 +459,13 @@ impl Aggregates {
                 named.get("busy").and_then(opt_f64),
                 named.get("time").and_then(opt_f64),
             );
+            if named.get("state").and_then(Value::as_str) == Some("CAPACITY") {
+                absorb_capacity(
+                    &mut self.fleet_caps,
+                    named.get("detail").and_then(Value::as_str),
+                    named.get("time").and_then(opt_f64),
+                );
+            }
             let Some(eid) = named.get("eid").and_then(Value::as_i64) else { return };
             self.per_exp.entry(eid).or_default().add_event(
                 named.get("state").and_then(Value::as_str),
@@ -438,6 +526,13 @@ impl Aggregates {
                             c.busy.and_then(|i| opt_f64(&row.values[i])),
                             c.time.and_then(|i| opt_f64(&row.values[i])),
                         );
+                        if row.values[c.state].as_str() == Some("CAPACITY") {
+                            absorb_capacity(
+                                &mut self.fleet_caps,
+                                c.detail.and_then(|i| row.values[i].as_str()),
+                                c.time.and_then(|i| opt_f64(&row.values[i])),
+                            );
+                        }
                     }
                 }
             }

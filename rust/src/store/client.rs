@@ -15,7 +15,7 @@ use crate::store::op::{JobEventRecord, OpReply, StoreOp, StoreResult};
 use crate::store::schema::{JobEventRow, JobRow};
 use crate::store::server::StoreCmd;
 use crate::store::shard::ShardedStoreClient;
-use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::status::{ExperimentStatus, KindCapacity, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::QueryResult;
 
@@ -138,13 +138,15 @@ pub trait StoreApi: Send {
         self.op(StoreOp::Status)?.statuses()
     }
 
-    /// Live `aup top` view: RUNNING jobs, the last `events` transitions
-    /// and per-resource utilization; merged across shards.
+    /// Live `aup top` view: RUNNING jobs, the last `events` transitions,
+    /// per-resource utilization and per-kind scheduled capacity; merged
+    /// across shards.
     #[allow(clippy::type_complexity)]
     fn top(
         &self,
         events: usize,
-    ) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
+    ) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>, Vec<KindCapacity>)>
+    {
         self.op(StoreOp::Top { events })?.top()
     }
 

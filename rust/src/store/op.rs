@@ -31,7 +31,7 @@
 
 use crate::store::proto;
 use crate::store::schema::{JobEventRow, JobRow};
-use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::status::{ExperimentStatus, KindCapacity, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::QueryResult;
 use crate::util::error::{AupError, Result};
@@ -462,6 +462,7 @@ pub enum OpReply {
         running: Vec<RunningJob>,
         events: Vec<JobEventRow>,
         util: Vec<ResourceUtil>,
+        caps: Vec<KindCapacity>,
     },
     Wal(Option<WalStats>),
 }
@@ -521,9 +522,12 @@ impl OpReply {
     }
 
     #[allow(clippy::type_complexity)]
-    pub fn top(self) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)> {
+    pub fn top(
+        self,
+    ) -> StoreResult<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>, Vec<KindCapacity>)>
+    {
         match self {
-            OpReply::Top { running, events, util } => Ok((running, events, util)),
+            OpReply::Top { running, events, util, caps } => Ok((running, events, util, caps)),
             _ => shape_err("top"),
         }
     }
@@ -550,7 +554,7 @@ impl OpReply {
             OpReply::Statuses(v) => {
                 Json::arr(v.iter().map(proto::status_to_json).collect())
             }
-            OpReply::Top { running, events, util } => Json::obj(vec![
+            OpReply::Top { running, events, util, caps } => Json::obj(vec![
                 (
                     "running",
                     Json::arr(running.iter().map(proto::running_job_to_json).collect()),
@@ -562,6 +566,10 @@ impl OpReply {
                 (
                     "util",
                     Json::arr(util.iter().map(proto::resource_util_to_json).collect()),
+                ),
+                (
+                    "caps",
+                    Json::arr(caps.iter().map(proto::kind_capacity_to_json).collect()),
                 ),
             ]),
             OpReply::Wal(w) => proto::wal_stats_to_json(w),
@@ -628,7 +636,15 @@ impl OpReply {
                         .collect::<Result<Vec<_>>>()?,
                     None => Vec::new(),
                 };
-                OpReply::Top { running, events, util }
+                // optional: pre-elastic peers send no capacity markers
+                let caps = match v.get("caps").and_then(Json::as_arr) {
+                    Some(arr) => arr
+                        .iter()
+                        .map(proto::kind_capacity_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    None => Vec::new(),
+                };
+                OpReply::Top { running, events, util, caps }
             }
             StoreOp::WalStats => OpReply::Wal(proto::wal_stats_from_json(v)?),
             // every mutation (and tick/checkpoint) answers null

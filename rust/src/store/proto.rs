@@ -18,7 +18,7 @@ use std::io::{Read, Write};
 
 use crate::store::op::{StoreError, StoreOp, StoreResult};
 use crate::store::schema::{JobEventRow, JobRow, JobStatus};
-use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::status::{ExperimentStatus, KindCapacity, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::{QueryResult, Value};
 use crate::util::error::{AupError, Result};
@@ -408,6 +408,24 @@ pub fn resource_util_from_json(j: &Json) -> Result<ResourceUtil> {
     })
 }
 
+pub fn kind_capacity_to_json(c: &KindCapacity) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(c.kind.clone())),
+        ("capacity", Json::int(c.capacity as i64)),
+        ("in_use", Json::int(c.in_use as i64)),
+        ("time", Json::num(c.time)),
+    ])
+}
+
+pub fn kind_capacity_from_json(j: &Json) -> Result<KindCapacity> {
+    Ok(KindCapacity {
+        kind: req_str(j, "kind", "kind capacity")?,
+        capacity: req_i64(j, "capacity", "kind capacity")?.max(0) as usize,
+        in_use: req_i64(j, "in_use", "kind capacity")?.max(0) as usize,
+        time: req_f64(j, "time", "kind capacity")?,
+    })
+}
+
 pub fn running_job_to_json(r: &RunningJob) -> Json {
     Json::obj(vec![
         ("jid", Json::int(r.jid)),
@@ -444,6 +462,7 @@ pub fn status_to_json(s: &ExperimentStatus) -> Json {
         ("cancelled", Json::int(s.cancelled as i64)),
         ("stopped", Json::int(s.stopped as i64)),
         ("retries", Json::int(s.retries as i64)),
+        ("preempted", Json::int(s.preempted as i64)),
         ("saved_secs", Json::num(s.saved_secs)),
         ("best_score", opt_num(s.best_score)),
         ("best_jid", s.best_jid.map_or(Json::Null, Json::int)),
@@ -469,6 +488,8 @@ pub fn status_from_json(j: &Json) -> Result<ExperimentStatus> {
         // reports nothing stopped and nothing saved
         stopped: j.get("stopped").and_then(Json::as_i64).unwrap_or(0).max(0) as usize,
         retries: count("retries")?,
+        // optional on the wire: a peer from before preemption reports none
+        preempted: j.get("preempted").and_then(Json::as_i64).unwrap_or(0).max(0) as usize,
         saved_secs: j.get("saved_secs").and_then(Json::as_f64).unwrap_or(0.0),
         best_score: get_opt_f64(j, "best_score"),
         best_jid: get_opt_i64(j, "best_jid"),
@@ -754,19 +775,24 @@ mod tests {
             cancelled: 0,
             stopped: 2,
             retries: 2,
+            preempted: 3,
             saved_secs: 12.5,
             best_score: Some(0.125),
             best_jid: Some(2),
         };
         assert_eq!(status_from_json(&status_to_json(&st)).unwrap(), st);
-        // a status from before early stopping parses with zero defaults
+        let cap = KindCapacity { kind: "gpu".into(), capacity: 4, in_use: 6, time: 8.25 };
+        assert_eq!(kind_capacity_from_json(&kind_capacity_to_json(&cap)).unwrap(), cap);
+        // a status from before early stopping / preemption parses with
+        // zero defaults
         let mut legacy_st = status_to_json(&st);
         if let Json::Obj(fields) = &mut legacy_st {
             fields.remove("stopped");
             fields.remove("saved_secs");
+            fields.remove("preempted");
         }
         let parsed = status_from_json(&legacy_st).unwrap();
-        assert_eq!((parsed.stopped, parsed.saved_secs), (0, 0.0));
+        assert_eq!((parsed.stopped, parsed.saved_secs, parsed.preempted), (0, 0.0, 0));
         let ws = Some(WalStats { appends: 3, records: 40, checkpoints: 1 });
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&ws)).unwrap(), ws);
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&None)).unwrap(), None);

@@ -414,7 +414,8 @@ impl StoreServer {
                 let running = status::running_jobs(&mut self.store)?;
                 let events = status::recent_events(&mut self.store, events)?;
                 let util = status::resource_utilization(&self.store)?;
-                Ok(OpReply::Top { running, events, util })
+                let caps = status::fleet_capacity(&self.store)?;
+                Ok(OpReply::Top { running, events, util, caps })
             }
             StoreOp::WalStats => Ok(OpReply::Wal(self.store.wal_stats())),
         }

@@ -43,7 +43,7 @@ use crate::store::client::SERVER_GONE;
 use crate::store::op::{OpReply, StoreError, StoreOp, StoreResult};
 use crate::store::schema::JobEventRow;
 use crate::store::server::StoreCmd;
-use crate::store::status::{ExperimentStatus, ResourceUtil, RunningJob};
+use crate::store::status::{ExperimentStatus, KindCapacity, ResourceUtil, RunningJob};
 use crate::store::wal::WalStats;
 use crate::store::{schema, Store};
 use crate::util::error::{AupError, Result};
@@ -245,8 +245,8 @@ impl ShardedStoreClient {
                 for part in parts {
                     tops.push(part.top()?);
                 }
-                let (running, evs, util) = merge_top(tops, events);
-                Ok(OpReply::Top { running, events: evs, util })
+                let (running, evs, util, caps) = merge_top(tops, events);
+                Ok(OpReply::Top { running, events: evs, util, caps })
             }
             StoreOp::WalStats => {
                 let parts = self.fan_out(StoreOp::WalStats)?;
@@ -293,16 +293,18 @@ pub fn merge_statuses(parts: Vec<Vec<ExperimentStatus>>) -> Vec<ExperimentStatus
 /// globally (each shard already sent its newest `events`, so the union
 /// contains the global tail), and per-resource utilization summed —
 /// resources are physical and shared, so each shard reports its own
-/// slice of the same rid.
+/// slice of the same rid. Capacity markers describe the one shared
+/// fleet, so across shards the freshest marker per kind wins.
 #[allow(clippy::type_complexity)]
 pub fn merge_top(
-    parts: Vec<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>)>,
+    parts: Vec<(Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>, Vec<KindCapacity>)>,
     events: usize,
-) -> (Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>) {
+) -> (Vec<RunningJob>, Vec<JobEventRow>, Vec<ResourceUtil>, Vec<KindCapacity>) {
     let mut running = Vec::new();
     let mut evs = Vec::new();
     let mut util_by_rid: HashMap<i64, ResourceUtil> = HashMap::new();
-    for (r, e, u) in parts {
+    let mut caps_by_kind: HashMap<String, KindCapacity> = HashMap::new();
+    for (r, e, u, c) in parts {
         running.extend(r);
         evs.extend(e);
         for part in u {
@@ -315,6 +317,14 @@ pub fn merge_top(
                     acc.last_time = acc.last_time.max(part.last_time);
                 })
                 .or_insert(part);
+        }
+        for part in c {
+            match caps_by_kind.get(&part.kind) {
+                Some(old) if old.time > part.time => {}
+                _ => {
+                    caps_by_kind.insert(part.kind.clone(), part);
+                }
+            }
         }
     }
     running.sort_by(|a, b| {
@@ -329,7 +339,9 @@ pub fn merge_top(
     }
     let mut util: Vec<ResourceUtil> = util_by_rid.into_values().collect();
     util.sort_by_key(|u| u.rid);
-    (running, evs, util)
+    let mut caps: Vec<KindCapacity> = caps_by_kind.into_values().collect();
+    caps.sort_by(|a, b| a.kind.cmp(&b.kind));
+    (running, evs, util, caps)
 }
 
 /// Sum per-shard WAL counters. `None` (in-memory store) only when every
@@ -541,10 +553,21 @@ mod tests {
             first_time: first,
             last_time: last,
         };
-        let (_, _, util) = merge_top(
+        let cap = |kind: &str, capacity, in_use, time| KindCapacity {
+            kind: kind.to_string(),
+            capacity,
+            in_use,
+            time,
+        };
+        let (_, _, util, caps) = merge_top(
             vec![
-                (vec![], vec![], vec![u(0, 1.0, 1, 0.0, 2.0), u(1, 4.0, 2, 1.0, 3.0)]),
-                (vec![], vec![], vec![u(0, 2.0, 3, 1.0, 5.0)]),
+                (
+                    vec![],
+                    vec![],
+                    vec![u(0, 1.0, 1, 0.0, 2.0), u(1, 4.0, 2, 1.0, 3.0)],
+                    vec![cap("cpu", 4, 2, 1.0), cap("gpu", 2, 2, 3.0)],
+                ),
+                (vec![], vec![], vec![u(0, 2.0, 3, 1.0, 5.0)], vec![cap("cpu", 1, 3, 6.0)]),
             ],
             10,
         );
@@ -552,5 +575,10 @@ mod tests {
         assert_eq!((util[0].rid, util[0].busy_secs, util[0].attempts), (0, 3.0, 4));
         assert_eq!((util[0].first_time, util[0].last_time), (0.0, 5.0));
         assert_eq!((util[1].rid, util[1].busy_secs), (1, 4.0));
+        // capacity: freshest marker per kind wins (fleet is shared, not
+        // summed across shards)
+        assert_eq!(caps.len(), 2);
+        assert_eq!((caps[0].kind.as_str(), caps[0].capacity, caps[0].in_use), ("cpu", 1, 3));
+        assert_eq!((caps[1].kind.as_str(), caps[1].capacity), ("gpu", 2));
     }
 }

@@ -23,8 +23,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::store::agg::{absorb_util, ExperimentAggregate};
-pub use crate::store::agg::ResourceUtil;
+use crate::store::agg::{absorb_capacity, absorb_util, ExperimentAggregate};
+pub use crate::store::agg::{KindCapacity, ResourceUtil};
 use crate::store::schema::{self, EventCols, ExperimentRow, JobCols, JobEventRow};
 use crate::store::{Store, Value};
 use crate::util::error::Result;
@@ -51,6 +51,10 @@ pub struct ExperimentStatus {
     pub stopped: usize,
     /// retry attempts recorded in the `job_event` journal (BACKOFF rows)
     pub retries: usize,
+    /// attempts the scheduler evicted for a higher-priority job or a
+    /// capacity revocation (PREEMPTED rows) — these requeue with their
+    /// retry budget intact, so they are churn, not failures
+    pub preempted: usize,
     /// estimated compute seconds early stopping saved (mean finished
     /// attempt cost × stopped attempts − what they actually burned)
     pub saved_secs: f64,
@@ -132,6 +136,7 @@ fn assemble(
         cancelled: a.cancelled,
         stopped: a.stopped,
         retries: a.retries,
+        preempted: a.preempted,
         saved_secs: a.saved_secs(),
         best_score: exp.best_score.or(best.map(|(s, _)| s)),
         best_jid: best.map(|(_, j)| j),
@@ -272,6 +277,44 @@ pub fn resource_utilization_scan(store: &Store) -> Result<Vec<ResourceUtil>> {
     Ok(per_rid.into_values().collect())
 }
 
+/// Latest scheduled capacity per resource kind (the elastic-fleet view
+/// for `aup top`), in kind order. Reads the store's materialized
+/// capacity aggregates — O(kinds); falls back to one pass over
+/// `job_event` when aggregate tracking is unavailable.
+pub fn fleet_capacity(store: &Store) -> Result<Vec<KindCapacity>> {
+    if !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    if let Some(aggs) = store.aggregates() {
+        return Ok(aggs.fleet_capacity());
+    }
+    fleet_capacity_scan(store)
+}
+
+/// The scan flavor of [`fleet_capacity`]: ONE pass over `job_event`,
+/// keeping the latest CAPACITY marker per kind through the same
+/// `absorb_capacity` the incremental path uses — it doubles as the
+/// oracle the tests compare the materialized path against.
+pub fn fleet_capacity_scan(store: &Store) -> Result<Vec<KindCapacity>> {
+    if !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    let t = store.table("job_event")?;
+    let c = EventCols::resolve(t.schema())?;
+    let mut per_kind: BTreeMap<String, KindCapacity> = BTreeMap::new();
+    for row in t.rows() {
+        if row.values[c.state].as_str() != Some("CAPACITY") {
+            continue;
+        }
+        absorb_capacity(
+            &mut per_kind,
+            row.values[c.detail].as_str(),
+            schema::opt_f64(&row.values[c.time]),
+        );
+    }
+    Ok(per_kind.into_values().collect())
+}
+
 /// The most recent `limit` scheduler transitions, oldest of them first
 /// — streamed off the tail of the pk map (evid order), no scan, no
 /// sort.
@@ -297,13 +340,13 @@ fn fmt_score(s: Option<f64>) -> String {
 pub fn render_status(statuses: &[ExperimentStatus]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>8} {:>14} {:<8}\n",
+        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>8} {:>14} {:<8}\n",
         "eid", "user", "proposer", "jobs", "pend", "run", "done", "fail", "canc", "stop",
-        "retries", "saved_s", "best", "state"
+        "retries", "preempt", "saved_s", "best", "state"
     ));
     for s in statuses {
         out.push_str(&format!(
-            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>8.1} {:>14} {:<8}\n",
+            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>8.1} {:>14} {:<8}\n",
             s.eid,
             truncate(&s.user, 10),
             truncate(&s.proposer, 10),
@@ -315,6 +358,7 @@ pub fn render_status(statuses: &[ExperimentStatus]) -> String {
             s.cancelled,
             s.stopped,
             s.retries,
+            s.preempted,
             s.saved_secs,
             fmt_score(s.best_score),
             if s.done() { "done" } else { "running" },
@@ -323,12 +367,14 @@ pub fn render_status(statuses: &[ExperimentStatus]) -> String {
     out
 }
 
-/// Render the `aup top` view: running jobs, per-resource utilization
+/// Render the `aup top` view: running jobs, per-kind scheduled capacity
+/// (current vs scheduled, for elastic fleets), per-resource utilization
 /// (the fleet-saturation column) and recent transitions.
 pub fn render_top(
     running: &[RunningJob],
     events: &[JobEventRow],
     util: &[ResourceUtil],
+    caps: &[KindCapacity],
 ) -> String {
     let mut out = String::new();
     out.push_str(&format!("{} running job(s)\n", running.len()));
@@ -345,6 +391,23 @@ pub fn render_top(
                 j.rid,
                 j.start_time,
                 truncate(&j.config, 48)
+            ));
+        }
+    }
+    if !caps.is_empty() {
+        out.push_str(&format!("\ncapacity ({} kind(s)):\n", caps.len()));
+        out.push_str(&format!(
+            "{:>8} {:>9} {:>6} {:>10}\n",
+            "kind", "scheduled", "in_use", "as_of"
+        ));
+        for c in caps {
+            out.push_str(&format!(
+                "{:>8} {:>9} {:>6} {:>10.3}{}\n",
+                truncate(&c.kind, 8),
+                c.capacity,
+                c.in_use,
+                c.time,
+                if c.in_use > c.capacity { "  (preempting down)" } else { "" }
             ));
         }
     }
@@ -480,10 +543,64 @@ mod tests {
             &running_jobs(&mut s).unwrap(),
             &recent_events(&mut s, 5).unwrap(),
             &resource_utilization(&s).unwrap(),
+            &fleet_capacity(&s).unwrap(),
         );
         assert!(top.contains("1 running job(s)"), "{top}");
         assert!(top.contains("BACKOFF"), "{top}");
         assert!(top.contains("fleet:"), "{top}");
+    }
+
+    #[test]
+    fn preempted_surfaces_in_status_with_budget_intact() {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        let uid = schema::add_user(&mut s, "alice").unwrap();
+        let e =
+            schema::start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0).unwrap();
+        // job 0 gets evicted once (PREEMPTED, not a retry), then wins
+        schema::start_job_queued(&mut s, 0, e, "{}", 0.0).unwrap();
+        schema::log_job_event(&mut s, 0, e, 1, "PREEMPTED", 1.0, "evicted for p=9", 0, 0.0)
+            .unwrap();
+        schema::finish_job(&mut s, 0, Some(0.5), true, 4.0).unwrap();
+        schema::log_job_event(&mut s, 0, e, 1, "DONE", 4.0, "score 0.5", 0, 3.0).unwrap();
+        let fast = experiment_statuses(&s).unwrap();
+        let slow = experiment_statuses_scan(&s).unwrap();
+        assert_eq!(fast, slow, "materialized preempted diverged from the scan");
+        let st = &fast[0];
+        assert_eq!((st.finished, st.preempted), (1, 1));
+        assert_eq!(st.retries, 0, "preemption must not burn the retry budget");
+        assert_eq!(st.cancelled, 0, "PREEMPTED is not CANCELLED");
+        let txt = render_status(&fast);
+        assert!(txt.contains("preempt"), "{txt}");
+    }
+
+    #[test]
+    fn fleet_capacity_keeps_the_latest_marker_per_kind() {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        // capacity markers are fleet-scoped: jid/rid = -1; later journal
+        // times win regardless of insertion order
+        schema::log_job_event(
+            &mut s, -1, 0, 0, "CAPACITY", 5.0, "[t=5.000] kind=cpu capacity=1 in_use=3", -1, 0.0,
+        )
+        .unwrap();
+        schema::log_job_event(
+            &mut s, -1, 0, 0, "CAPACITY", 2.0, "[t=2.000] kind=cpu capacity=4 in_use=2", -1, 0.0,
+        )
+        .unwrap();
+        schema::log_job_event(
+            &mut s, -1, 0, 0, "CAPACITY", 3.0, "[t=3.000] kind=gpu capacity=2 in_use=2", -1, 0.0,
+        )
+        .unwrap();
+        let fast = fleet_capacity(&s).unwrap();
+        let slow = fleet_capacity_scan(&s).unwrap();
+        assert_eq!(fast, slow, "materialized capacity diverged from the scan");
+        assert_eq!(fast.len(), 2);
+        assert_eq!((fast[0].kind.as_str(), fast[0].capacity, fast[0].in_use), ("cpu", 1, 3));
+        assert_eq!((fast[1].kind.as_str(), fast[1].capacity), ("gpu", 2));
+        let top = render_top(&[], &[], &[], &fast);
+        assert!(top.contains("capacity (2 kind(s))"), "{top}");
+        assert!(top.contains("preempting down"), "{top}");
     }
 
     #[test]

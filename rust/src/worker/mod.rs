@@ -22,8 +22,13 @@
 //! A worker that dies mid-job needs no cleanup protocol: its heartbeats
 //! stop, the lease deadline fires on the serving side, and the attempt
 //! re-enters backoff with its retry budget intact. Conversely, when the
-//! serving batch exits, the worker's next control-socket call fails and
-//! the loop ends — `aup worker` is safe to leave running in a shell.
+//! control socket drops, the worker does NOT die with it: it abandons
+//! the in-flight attempt (lease expiry re-queues it server-side, budget
+//! intact) and re-attaches with capped exponential backoff, so a
+//! restarted `aup batch --serve` picks its fleet back up. Only after
+//! `max_reconnect` of failed attempts does the worker conclude the
+//! serving batch is gone for good and exit — `aup worker` is safe to
+//! leave running in a shell.
 //!
 //! Progress is journaled through the same wire connection as free-text
 //! `job_event` rows (`W_START` / `W_END`), so `aup top` in a third shell
@@ -55,6 +60,10 @@ pub struct WorkerOptions {
     pub max_jobs: Option<usize>,
     /// connect/read/write deadline on the control socket
     pub timeout: Duration,
+    /// total window for re-attaching after the control socket drops
+    /// (`--max-reconnect-s`); zero = exit on the first transport error
+    /// (the pre-elastic behavior)
+    pub max_reconnect: Duration,
 }
 
 impl Default for WorkerOptions {
@@ -65,6 +74,7 @@ impl Default for WorkerOptions {
             poll: Duration::from_millis(200),
             max_jobs: None,
             timeout: DEFAULT_CONNECT_TIMEOUT,
+            max_reconnect: Duration::from_secs(30),
         }
     }
 }
@@ -81,6 +91,8 @@ pub struct WorkerReport {
     /// attempts killed mid-run by the serving side's trial scheduler
     /// (the `stop=true` reply to a streamed report)
     pub stopped: usize,
+    /// successful re-attaches after the control socket dropped
+    pub reconnects: usize,
 }
 
 /// Connect the worker's control socket. `target` is either a db
@@ -99,39 +111,134 @@ pub fn connect_target(target: &str, timeout: Duration) -> Result<RemoteStoreClie
     Ok(remote)
 }
 
-/// The worker loop: lease → execute → complete until the serving batch
-/// goes away (any control-socket failure ends the loop) or `max_jobs`
-/// is reached.
-pub fn run_worker(remote: &RemoteStoreClient, opts: &WorkerOptions) -> Result<WorkerReport> {
+/// How one connection's pull loop ended.
+enum ConnEnd {
+    /// `max_jobs` reached — the worker is done
+    Finished,
+    /// the control socket dropped (description) — candidate for re-attach
+    Lost(String),
+}
+
+/// How one leased attempt ended, from the transport's point of view.
+enum Pull {
+    /// outcome delivered (or cleanly abandoned to lease expiry / early
+    /// stop) over a live socket
+    Ran,
+    /// the control socket died mid-attempt; the attempt was abandoned —
+    /// lease expiry re-queues it on the serving side, budget intact
+    Lost(String),
+}
+
+/// The worker loop: lease → execute → complete until `max_jobs` is
+/// reached or the serving batch goes away for good. A transport error
+/// does not end the worker — it re-attaches to `target` with capped
+/// exponential backoff (one stderr line per attempt) and only gives up
+/// after `opts.max_reconnect` of continuous failure, so a restarted
+/// `aup batch --serve` picks its fleet back up.
+pub fn run_worker(
+    remote: RemoteStoreClient,
+    target: &str,
+    opts: &WorkerOptions,
+) -> Result<WorkerReport> {
     let start = Instant::now();
     let mut report = WorkerReport::default();
+    let mut remote = remote;
     loop {
-        if opts.max_jobs.is_some_and(|n| report.executed + report.expired + report.stopped >= n) {
-            break;
-        }
-        match remote.lease(&opts.name) {
-            Ok(Some(offer)) => run_one(remote, opts, &offer, start, &mut report)?,
-            Ok(None) => std::thread::sleep(opts.poll),
-            Err(e) => {
-                // the batch drained and shut its service down — normal end
-                log_info!("worker", "serving batch gone ({e}); exiting");
-                break;
-            }
+        match serve_connection(&remote, opts, start, &mut report)? {
+            ConnEnd::Finished => break,
+            ConnEnd::Lost(why) => match reattach(target, opts, &why) {
+                Some(r) => {
+                    report.reconnects += 1;
+                    remote = r;
+                }
+                None => {
+                    // the batch drained and shut its service down (or
+                    // stayed gone past the window) — normal end
+                    log_info!("worker", "serving batch gone ({why}); exiting");
+                    break;
+                }
+            },
         }
     }
     Ok(report)
 }
 
+/// Pull jobs over ONE live connection until it drops or the worker is
+/// done.
+fn serve_connection(
+    remote: &RemoteStoreClient,
+    opts: &WorkerOptions,
+    start: Instant,
+    report: &mut WorkerReport,
+) -> Result<ConnEnd> {
+    loop {
+        if opts.max_jobs.is_some_and(|n| report.executed + report.expired + report.stopped >= n) {
+            return Ok(ConnEnd::Finished);
+        }
+        match remote.lease(&opts.name) {
+            Ok(Some(offer)) => match run_one(remote, opts, &offer, start, report)? {
+                Pull::Ran => {}
+                Pull::Lost(why) => return Ok(ConnEnd::Lost(why)),
+            },
+            Ok(None) => std::thread::sleep(opts.poll),
+            Err(e) => return Ok(ConnEnd::Lost(e.to_string())),
+        }
+    }
+}
+
+/// Capped-exponential-backoff reconnect: returns a fresh pinged client,
+/// or `None` once `opts.max_reconnect` has elapsed without success
+/// (zero disables reconnecting entirely). Exactly one stderr line per
+/// attempt, so an operator tailing the worker sees the retry cadence.
+fn reattach(target: &str, opts: &WorkerOptions, why: &str) -> Option<RemoteStoreClient> {
+    if opts.max_reconnect.is_zero() {
+        return None;
+    }
+    let deadline = Instant::now() + opts.max_reconnect;
+    let mut delay = opts.poll.max(Duration::from_millis(100));
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        match connect_target(target, opts.timeout) {
+            Ok(remote) => {
+                eprintln!(
+                    "aup worker: control socket lost ({why}); reconnected to {target} on attempt {attempt}"
+                );
+                return Some(remote);
+            }
+            Err(e) => {
+                eprintln!(
+                    "aup worker: control socket lost ({why}); reconnect attempt {attempt} to {target} failed: {e}"
+                );
+            }
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            eprintln!(
+                "aup worker: giving up on {target} after {:.0}s of reconnect attempts",
+                opts.max_reconnect.as_secs_f64()
+            );
+            return None;
+        }
+        std::thread::sleep(delay.min(remaining));
+        delay = (delay * 2).min(Duration::from_secs(5));
+    }
+}
+
 /// Execute one leased job: run the script on an executor thread,
 /// heartbeat every third of the lease window, enforce the per-attempt
-/// timeout worker-side, then report through Complete.
+/// timeout worker-side, then report through Complete. A transport error
+/// anywhere in the middle abandons the attempt as [`Pull::Lost`] (lease
+/// expiry re-queues it server-side); `Err` is reserved for genuinely
+/// fatal problems like a malformed offer, where retrying would just
+/// burn leases.
 fn run_one(
     remote: &RemoteStoreClient,
     opts: &WorkerOptions,
     offer: &LeaseOffer,
     worker_start: Instant,
     report: &mut WorkerReport,
-) -> Result<()> {
+) -> Result<Pull> {
     let config = BasicConfig::from_json_str(&offer.config)
         .map_err(|e| AupError::Job(format!("lease {} carried a bad config: {e}", offer.lease)))?;
     journal(
@@ -187,7 +294,8 @@ fn run_one(
                             Err(e) => {
                                 cancel.kill();
                                 let _ = thread.join();
-                                return Err(AupError::Job(format!(
+                                report.expired += 1;
+                                return Ok(Pull::Lost(format!(
                                     "control socket lost mid-job (job {}): {e}",
                                     offer.job_id
                                 )));
@@ -221,7 +329,8 @@ fn run_one(
                             Err(e) => {
                                 cancel.kill();
                                 let _ = thread.join();
-                                return Err(AupError::Job(format!(
+                                report.expired += 1;
+                                return Ok(Pull::Lost(format!(
                                     "control socket lost mid-job (job {}): {e}",
                                     offer.job_id
                                 )));
@@ -234,7 +343,7 @@ fn run_one(
             if lost {
                 report.expired += 1;
                 journal(remote, offer, worker_start, "W_END", "lease expired under the worker");
-                return Ok(());
+                return Ok(Pull::Ran);
             }
             if stopped {
                 // the serving side already completed the job as
@@ -242,7 +351,7 @@ fn run_one(
                 // would be refused, so skip it
                 report.stopped += 1;
                 journal(remote, offer, worker_start, "W_END", "stopped early by the trial scheduler");
-                return Ok(());
+                return Ok(Pull::Ran);
             }
             outcome
         }
@@ -257,7 +366,19 @@ fn run_one(
         Err(e) => format!("failed on worker '{}': {e}", opts.name),
     };
     journal(remote, offer, worker_start, "W_END", &detail);
-    let accepted = remote.complete(offer.lease, ok, score, error, elapsed)?;
+    let accepted = match remote.complete(offer.lease, ok, score, error, elapsed) {
+        Ok(a) => a,
+        Err(e) => {
+            // socket died between execute and Complete: the result is
+            // lost, but lease expiry re-queues the job with its budget
+            // intact — same contract as dying mid-heartbeat
+            report.expired += 1;
+            return Ok(Pull::Lost(format!(
+                "control socket lost at completion (job {}): {e}",
+                offer.job_id
+            )));
+        }
+    };
     if accepted {
         report.executed += 1;
         if !ok {
@@ -272,7 +393,7 @@ fn run_one(
             offer.job_id
         );
     }
-    Ok(())
+    Ok(Pull::Ran)
 }
 
 /// Best-effort free-text journal entry on the job's event stream. The
@@ -308,6 +429,26 @@ mod tests {
         assert!(o.name.starts_with("worker-"));
         assert!(o.max_jobs.is_none());
         assert!(o.poll >= Duration::from_millis(1));
+        assert!(o.max_reconnect > Duration::ZERO, "reconnects on by default");
+    }
+
+    #[test]
+    fn reattach_disabled_exits_immediately() {
+        let mut o = WorkerOptions::default();
+        o.max_reconnect = Duration::ZERO;
+        assert!(reattach("/nonexistent/db-dir/socket", &o, "test").is_none());
+    }
+
+    #[test]
+    fn reattach_gives_up_after_the_window() {
+        let mut o = WorkerOptions::default();
+        o.max_reconnect = Duration::from_millis(40);
+        o.poll = Duration::from_millis(5);
+        o.timeout = Duration::from_millis(50);
+        let t0 = Instant::now();
+        assert!(reattach("/nonexistent/db-dir/socket", &o, "test").is_none());
+        // at least one backoff sleep happened before giving up
+        assert!(t0.elapsed() >= Duration::from_millis(40));
     }
 
     #[test]

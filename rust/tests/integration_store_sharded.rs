@@ -176,7 +176,7 @@ fn snapshot(client: &StoreClient, eids: &[i64]) -> Snapshot {
             })
             .collect()
     };
-    let (running, events, util) = client.top(10_000).unwrap();
+    let (running, events, util, _caps) = client.top(10_000).unwrap();
     Snapshot {
         statuses: client.status().unwrap(),
         best_max: best(true),

@@ -46,6 +46,12 @@ dispatched on its keys:
     O(log n), so growth means completed-curve state leaked into the
     per-report hot path. Required in fresh reports; older trajectory
     points may lack the key;
+  - `preempt_flat_ratio` <= 3: the priority-preemption path (victim
+    selection + eviction + front-requeue under capacity churn) must
+    stay flat per eviction as the lifetime job count grows — victim
+    search walks only the live slots, so growth means terminal jobs
+    leaked into it. Required in fresh reports; trajectory points
+    committed before the preemption path existed may lack the key;
   - like the query report, the trajectory is printed, not gated.
 
 A missing baseline (first run ever, or a fresh fork) passes: the commit
@@ -174,12 +180,16 @@ def gate_sched(fresh, baseline) -> int:
     trial = fresh.get("trial_flat_ratio")
     if trial is not None:
         print(f"  trial_flat_ratio: {float(trial):.2f} (ceiling 3, flat-in-lifetime-trials)")
+    preempt = fresh.get("preempt_flat_ratio")
+    if preempt is not None:
+        print(f"  preempt_flat_ratio: {float(preempt):.2f} (ceiling 3, flat-in-lifetime-jobs)")
     if baseline is not None:
         print(
             f"  trajectory (informative): speedup {baseline.get('sched_speedup')}x -> "
             f"{speedup:.1f}x, flat {baseline.get('poll_flat_ratio')} -> {flat:.2f}, "
             f"lease flat {baseline.get('lease_flat_ratio')} -> {lease}, "
-            f"trial flat {baseline.get('trial_flat_ratio')} -> {trial}"
+            f"trial flat {baseline.get('trial_flat_ratio')} -> {trial}, "
+            f"preempt flat {baseline.get('preempt_flat_ratio')} -> {preempt}"
         )
     if speedup < 10.0:
         print(f"::error::scheduler speedup below the 10x floor: {speedup:.1f}x")
@@ -201,6 +211,13 @@ def gate_sched(fresh, baseline) -> int:
         rc = 1
     elif float(trial) > 3.0:
         print(f"::error::early-stopping verdict cost grew with lifetime trials: {float(trial):.2f}x")
+        rc = 1
+    # and for the priority-preemption path, shipped with ISSUE-9
+    if preempt is None:
+        print("::error::sched report is missing preempt_flat_ratio")
+        rc = 1
+    elif float(preempt) > 3.0:
+        print(f"::error::preemption-churn cost grew with lifetime jobs: {float(preempt):.2f}x")
         rc = 1
     if rc == 0:
         print("ok: event-driven scheduler holds the 10x floor and stays flat per poll")
