@@ -319,6 +319,7 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
         let ini = Ini::parse(&crate::util::fsutil::read_to_string(Path::new(env_path))?)?;
         if let Some(db) = ini.get("Auptimizer", "TRACKING_DB") {
             let mut store = Store::open(Path::new(db))?;
+            options.resume_seeds = crate::store::schema::recovered_checkpoints(&store)?;
             crate::store::schema::recover_incomplete(&mut store)?;
             options.store = Some(store);
         }
@@ -326,10 +327,20 @@ pub fn cmd_run(cli: &Cli) -> Result<()> {
     if let Some(db) = cli.flag("db") {
         let mut store = Store::open(Path::new(db))?;
         // crash recovery: any job still RUNNING from a previous process
-        // is dead — mark it failed so history stays truthful (§III-C)
+        // is dead — mark it failed so history stays truthful (§III-C).
+        // Its journaled checkpoint frontier survives as resume seeds:
+        // collect them BEFORE the sweep flips the stuck rows to FAILED
+        options.resume_seeds = crate::store::schema::recovered_checkpoints(&store)?;
         let recovered = crate::store::schema::recover_incomplete(&mut store)?;
         if recovered > 0 {
             eprintln!("recovered {recovered} interrupted job(s) from a previous run");
+        }
+        if !options.resume_seeds.is_empty() {
+            eprintln!(
+                "{} interrupted job(s) hold checkpoints; re-proposed jobs will \
+                 resume from their journaled token",
+                options.resume_seeds.len()
+            );
         }
         options.store = Some(store);
     }
@@ -396,16 +407,27 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
         })?),
         None => None,
     };
+    let mut resume_seeds = Vec::new();
     let stores = match cli.flag("db") {
         Some(db) => {
             let dir = Path::new(db);
             let n = shard::resolve_shards(dir, shards_flag)?;
             let mut stores = shard::open_shards(dir, n)?;
             // crash recovery, per segment: any job still RUNNING from a
-            // previous process is dead — mark it failed (§III-C)
+            // previous process is dead — mark it failed (§III-C). Their
+            // journaled checkpoint tokens are collected FIRST so the
+            // rebuilt experiments can resume the interrupted work
+            resume_seeds = shard::recovered_shard_checkpoints(&stores)?;
             let recovered = shard::recover_shards(&mut stores)?;
             if recovered > 0 {
                 eprintln!("recovered {recovered} interrupted job(s) from a previous run");
+            }
+            if !resume_seeds.is_empty() {
+                eprintln!(
+                    "{} interrupted job(s) hold checkpoints; re-proposed jobs will \
+                     resume from their journaled token",
+                    resume_seeds.len()
+                );
             }
             stores
         }
@@ -437,6 +459,9 @@ pub fn cmd_batch(cli: &Cli) -> Result<()> {
         }
         options.scheduler = sched_overrides(cli, &cfg)?;
         options.trial_scheduler = trial_flag(cli)?;
+        // every experiment sees the full seed list; each claims only the
+        // configs it actually re-proposes (byte-for-byte match)
+        options.resume_seeds = resume_seeds.clone();
         names.push(format!("{} ({})", path, cfg.proposer));
         exps.push(Experiment::new(cfg, options)?);
     }
@@ -663,11 +688,16 @@ pub fn cmd_worker(cli: &Cli) -> Result<()> {
         opts.max_reconnect = Duration::from_secs_f64(secs);
     }
     let remote = worker::connect_target(&target, opts.timeout)?;
+    // SIGTERM drains instead of killing: the in-flight lease is handed
+    // back via Abandon (budget + checkpoint token intact) and the
+    // worker exits without leasing again
+    worker::drain::install_sigterm_handler();
     println!("worker '{}' connected to {target}; leasing jobs", opts.name);
     let report = worker::run_worker(remote, &target, &opts)?;
     println!(
-        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost, {} stopped early, {} reconnect(s)",
-        opts.name, report.executed, report.failed, report.expired, report.stopped, report.reconnects
+        "worker '{}' done: {} job(s) executed, {} failed, {} lease(s) lost, {} stopped early, {} reconnect(s), {} drained",
+        opts.name, report.executed, report.failed, report.expired, report.stopped,
+        report.reconnects, report.drained
     );
     Ok(())
 }

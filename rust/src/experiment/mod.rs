@@ -74,6 +74,12 @@ pub struct ExperimentOptions {
     /// `--trial-scheduler`); `None` -> the config's `trial_scheduler`
     /// key, absent -> no early stopping
     pub trial_scheduler: Option<String>,
+    /// checkpoint tokens recovered from a crashed run's journal
+    /// ([`crate::store::schema::recovered_checkpoints`]): a re-proposed
+    /// job whose config matches a seed byte-for-byte is submitted with
+    /// [`Scheduler::seed_resume`], so its first attempt launches with
+    /// `AUP_RESUME_FROM` instead of redoing the interrupted work
+    pub resume_seeds: Vec<crate::store::schema::RecoveredCheckpoint>,
 }
 
 impl Default for ExperimentOptions {
@@ -87,6 +93,7 @@ impl Default for ExperimentOptions {
             scheduler: None,
             priority: None,
             trial_scheduler: None,
+            resume_seeds: Vec::new(),
         }
     }
 }
@@ -127,6 +134,9 @@ pub struct Experiment {
     priority: i32,
     /// validated early-stopping policy name (`trial::by_name` key)
     trial: Option<String>,
+    /// crash-recovered checkpoint tokens by job_id, claimed as each
+    /// matching job is re-proposed (see [`ExperimentOptions::resume_seeds`])
+    resume_seeds: std::collections::HashMap<u64, crate::store::schema::RecoveredCheckpoint>,
     // -- per-run state ----------------------------------------------------
     n_jobs: usize,
     n_failed: usize,
@@ -191,6 +201,21 @@ impl Experiment {
                 )));
             }
         }
+        // index recovered tokens by the job_id embedded in the stuck
+        // config: the deterministic proposer (same seed) re-proposes the
+        // same ids, and the byte-for-byte config check at submit time
+        // rejects a seed whose search space changed under it
+        let mut resume_seeds = std::collections::HashMap::new();
+        for seed in options.resume_seeds {
+            let job_id = Json::parse(&seed.config)
+                .ok()
+                .and_then(|j| j.get("job_id").and_then(Json::as_f64))
+                .filter(|v| *v >= 0.0)
+                .map(|v| v as u64);
+            if let Some(id) = job_id {
+                resume_seeds.insert(id, seed);
+            }
+        }
         Ok(Experiment {
             cfg,
             proposer,
@@ -201,6 +226,7 @@ impl Experiment {
             sched_cfg,
             priority,
             trial,
+            resume_seeds,
             n_jobs: 0,
             n_failed: 0,
             n_stopped: 0,
@@ -295,7 +321,25 @@ impl Experiment {
                     })?;
                     self.tracker.job_submitted(job_id, &config)?;
                     self.n_jobs += 1;
+                    let config_str = config.to_json_string();
                     sched.submit(sub, config)?;
+                    // crash recovery: a re-proposed job picks up the
+                    // token its interrupted predecessor journaled
+                    if let Some(seed) = self.resume_seeds.remove(&job_id) {
+                        if seed.config == config_str {
+                            sched.seed_resume(sub, job_id, &seed.token, seed.saved);
+                            log_info!(
+                                "experiment",
+                                "job {job_id} resumes from recovered checkpoint '{}'",
+                                seed.token
+                            );
+                        } else {
+                            log_warn!(
+                                "experiment",
+                                "job {job_id}: recovered checkpoint ignored (config changed)"
+                            );
+                        }
+                    }
                 }
                 ProposeResult::Wait | ProposeResult::Done => {
                     if sched.outstanding(sub) == 0 {
@@ -444,6 +488,16 @@ fn drive<D: Dispatcher>(
                 exp.tracker.log_report(&r)?;
             }
         }
+        for c in sched.take_checkpoints() {
+            if let Some((_, exp)) = runs.iter_mut().find(|(s, _)| *s == c.sub) {
+                exp.tracker.log_checkpoint(&c)?;
+            }
+        }
+        for r in sched.take_resumes() {
+            if let Some((_, exp)) = runs.iter_mut().find(|(s, _)| *s == r.sub) {
+                exp.tracker.log_resume(&r)?;
+            }
+        }
         // capacity changes are fleet-scoped, not owned by any submission:
         // journal them through the first experiment's tracker so they land
         // exactly once in the shared store
@@ -549,12 +603,27 @@ fn answer_worker(
                     script: exp.cfg.script.clone(),
                     job_timeout: lj.job_timeout,
                     lease_timeout: lj.lease_timeout,
+                    resume_from: lj.resume_from.clone(),
                 }))
             }
         },
-        WorkerVerb::Heartbeat { lease } => {
-            let alive = lease >= 0 && sched.heartbeat_lease(lease as u64);
+        WorkerVerb::Heartbeat { lease, checkpoint } => {
+            // a checkpoint-bearing heartbeat journals the token AND
+            // proves liveness in one round trip; either way `alive:
+            // false` tells the worker its lease was already re-queued
+            let alive = lease >= 0
+                && match checkpoint {
+                    Some(tok) => sched.checkpoint_lease(lease as u64, tok),
+                    None => sched.heartbeat_lease(lease as u64),
+                };
             Ok(Json::obj(vec![("alive", Json::Bool(alive))]))
+        }
+        WorkerVerb::Abandon { lease } => {
+            // a draining worker hands the lease back cleanly: requeue
+            // now (budget intact, checkpoint token kept) instead of
+            // waiting out the heartbeat window
+            let accepted = lease >= 0 && sched.abandon_lease(lease as u64);
+            Ok(Json::obj(vec![("accepted", Json::Bool(accepted))]))
         }
         WorkerVerb::Report { lease, step, score } => {
             // a dead/unknown lease answers stop=true: the attempt was
@@ -691,6 +760,18 @@ fn journal_reports(
             exp.tracker.log_report(&r)?;
         }
     }
+    // checkpoint tokens and resume launches journal next to the curves
+    // they belong to — recovery replays the latest CHECKPOINT per job
+    for c in sched.take_checkpoints() {
+        if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == c.sub) {
+            exp.tracker.log_checkpoint(&c)?;
+        }
+    }
+    for r in sched.take_resumes() {
+        if let Some((_, exp)) = slots.iter_mut().find(|(s, _)| *s == r.sub) {
+            exp.tracker.log_resume(&r)?;
+        }
+    }
     // fleet-scoped capacity changes route to the first live experiment's
     // tracker (exactly once into the shared store)
     let caps = sched.take_capacity_events();
@@ -814,6 +895,15 @@ mod tests {
     use crate::resource::executor::FnExecutor;
 
     fn rosen_cfg(proposer: &str, n_samples: usize, n_parallel: usize) -> ExperimentConfig {
+        rosen_cfg_seeded(proposer, n_samples, n_parallel, 3)
+    }
+
+    fn rosen_cfg_seeded(
+        proposer: &str,
+        n_samples: usize,
+        n_parallel: usize,
+        seed: u64,
+    ) -> ExperimentConfig {
         ExperimentConfig::from_json_str(&format!(
             r#"{{
                 "proposer": "{proposer}",
@@ -821,7 +911,7 @@ mod tests {
                 "n_samples": {n_samples},
                 "n_parallel": {n_parallel},
                 "target": "min",
-                "random_seed": 3,
+                "random_seed": {seed},
                 "n_iterations": 9,
                 "parameter_config": [
                     {{"name": "x", "type": "float", "range": [-5, 10]}},
@@ -1173,5 +1263,125 @@ mod tests {
         assert!(caps.iter().all(|e| e.jid == -1 && e.detail.contains("kind=cpu")));
         assert!(caps[0].detail.contains("capacity=0"));
         assert!(caps[1].detail.contains("capacity=3"));
+    }
+
+    #[test]
+    fn preempted_checkpointing_jobs_resume_without_redoing_steps() {
+        preempt_resume_invariants(3);
+    }
+
+    /// Nightly chaos sweep: the timing of the workload (5 steps x 5s,
+    /// capacity dip at t=40) is independent of the proposer seed, so
+    /// the resume invariants must hold for ANY seed — a failing seed
+    /// is a real scheduler bug, not flakiness. Ignored by default; the
+    /// nightly CI matrix runs it with `AUP_CHAOS_SEEDS=a,b,c`.
+    #[test]
+    #[ignore = "nightly chaos matrix: sweeps proposer seeds from AUP_CHAOS_SEEDS"]
+    fn nightly_chaos_matrix_preempt_resume_across_seeds() {
+        let seeds = std::env::var("AUP_CHAOS_SEEDS").unwrap_or_else(|_| "5,11,42".into());
+        for seed in seeds.split(',').filter_map(|t| t.trim().parse::<u64>().ok()) {
+            preempt_resume_invariants(seed);
+        }
+    }
+
+    fn preempt_resume_invariants(seed: u64) {
+        use crate::scheduler::{FnSimExecutor, SimOutcome};
+        use crate::store::{schema, status};
+
+        // a checkpointing workload: 5 steps of 5 virtual seconds each,
+        // a `checkpoint: step-N` token saved right after every step. A
+        // relaunch that sees AUP_RESUME_FROM=step-K executes ONLY steps
+        // K+1..=5 — so under preemption, journaled step counts tell us
+        // exactly how much work was redone.
+        let mk_sim = || -> Box<dyn SimExecutor> {
+            Box::new(FnSimExecutor::new(|c, env| {
+                let done = env
+                    .env
+                    .get("AUP_RESUME_FROM")
+                    .and_then(|t| t.strip_prefix("step-"))
+                    .and_then(|n| n.parse::<i64>().ok())
+                    .unwrap_or(0);
+                let steps: Vec<i64> = (done + 1..=5).collect();
+                let n = steps.len() as f64;
+                let score = crate::workload::rosenbrock(c);
+                SimOutcome::ok(score, 5.0 * n)
+                    .with_curve(
+                        steps
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &s)| ((i as f64 + 0.5) / n, s, score))
+                            .collect(),
+                    )
+                    .with_checkpoints(
+                        steps
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &s)| ((i as f64 + 0.6) / n, format!("step-{s}")))
+                            .collect(),
+                    )
+            }))
+        };
+
+        let run = |trace: &str| {
+            let (handle, client) =
+                StoreServer::spawn(Store::in_memory(), ServerConfig::default()).unwrap();
+            let mut opts = ExperimentOptions::default();
+            opts.store_client = Some(client);
+            let exp = Experiment::new(rosen_cfg_seeded("random", 12, 3, seed), opts).unwrap();
+            let eid = exp.eid();
+            let spec = crate::resource::ResourceSpec::from_json(
+                &Json::parse(&format!(
+                    r#"{{"resource": "cpu", "n_resource": 3, "capacity_trace": {trace}}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+            let pool = spec.build().unwrap();
+            let s = run_batch_sim(vec![exp], pool, vec![mk_sim()]).unwrap().pop().unwrap();
+            (s, handle.shutdown().unwrap(), eid)
+        };
+
+        // the dip at t=40 evicts the wave launched at t=25, 15s into its
+        // 25s run — after the step-3 checkpoint (t=38), before step 4
+        let (fixed, fixed_store, fixed_eid) = run("[]");
+        let (elastic, store, eid) = run(r#"[{"t": 40, "n": 0}, {"t": 120, "n": 3}]"#);
+
+        assert_eq!(elastic.n_failed, 0, "preemption must not consume retry budget");
+        assert_eq!(elastic.best_score, fixed.best_score, "same samples, same best");
+        let jobs = schema::jobs_of(&store, eid).unwrap();
+        assert_eq!(jobs.len(), 12);
+        assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished));
+
+        let evs = schema::job_events_of(&store, eid).unwrap();
+        assert_eq!(evs.iter().filter(|e| e.state == "PREEMPTED").count(), 3);
+        // the victims relaunch FROM the journaled token...
+        let resumed: Vec<_> = evs.iter().filter(|e| e.state == "RESUMED").collect();
+        assert_eq!(resumed.len(), 3, "each victim resumes exactly once");
+        assert!(resumed.iter().all(|e| e.detail.contains("token=step-3")), "{resumed:?}");
+        assert!(evs.iter().any(|e| e.state == "CHECKPOINT" && e.detail.contains("token=step-")));
+        // ...and redo ZERO pre-checkpoint steps: the preempted fleet
+        // journals exactly as many step reports as the fixed fleet
+        // (victims report 1..3 on attempt 1, then only 4..5 on attempt 2)
+        let fixed_evs = schema::job_events_of(&fixed_store, fixed_eid).unwrap();
+        let steps_of = |evs: &[schema::JobEventRow]| {
+            evs.iter().filter(|e| e.state == "INTERMEDIATE").count()
+        };
+        assert_eq!(steps_of(&fixed_evs), 12 * 5);
+        assert_eq!(
+            steps_of(&evs),
+            12 * 5,
+            "a resumed attempt must execute only steps after its checkpoint"
+        );
+
+        // the status surface counts the resumes and the recovered work:
+        // each victim had burned 15s that the token made recoverable
+        let sts = status::experiment_statuses(&store).unwrap();
+        let st = sts.iter().find(|s| s.eid == eid).unwrap();
+        assert_eq!((st.preempted, st.resumed), (3, 3));
+        assert!(
+            (st.saved_secs - 45.0).abs() < 1e-6,
+            "3 victims x 15s recovered, got {}",
+            st.saved_secs
+        );
     }
 }

@@ -144,6 +144,39 @@ impl<C: StoreApi> Tracker<C> {
         Ok(())
     }
 
+    /// Journal one observed checkpoint token as a `CHECKPOINT` row. The
+    /// token goes LAST in the detail (`token=…` up to end of line) so
+    /// recovery can parse it back out unambiguously even when the token
+    /// contains spaces; replaying the journal and keeping the latest row
+    /// per jid reconstructs each interrupted job's resume point.
+    pub fn log_checkpoint(&mut self, c: &crate::scheduler::CheckpointRecord) -> Result<()> {
+        self.client.log_job_event(
+            JobEventRecord::new(self.jid_of(c.job_id), self.eid, "CHECKPOINT")
+                .attempt(c.attempt as i64)
+                .at(now())
+                .detail(&format!("[t={:.3}] attempt {} token={}", c.at, c.attempt, c.token)),
+        )?;
+        Ok(())
+    }
+
+    /// Journal one resumed launch as a `RESUMED` row. The busy stamp
+    /// carries the saved-seconds estimate (evicted work the checkpoint
+    /// recovers); `rid = -1` keeps it out of per-resource utilization,
+    /// while the status aggregates fold it into `saved_s`.
+    pub fn log_resume(&mut self, r: &crate::scheduler::ResumeEvent) -> Result<()> {
+        self.client.log_job_event(
+            JobEventRecord::new(self.jid_of(r.job_id), self.eid, "RESUMED")
+                .attempt(r.attempt as i64)
+                .at(now())
+                .detail(&format!(
+                    "[t={:.3}] attempt {} saved {:.3}s, token={}",
+                    r.at, r.attempt, r.saved, r.token
+                ))
+                .resource(-1, r.saved),
+        )?;
+        Ok(())
+    }
+
     pub fn job_cancelled(&mut self, job_id: u64) -> Result<()> {
         self.client.cancel_job(self.jid_of(job_id), now())?;
         Ok(())

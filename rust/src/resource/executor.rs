@@ -128,11 +128,12 @@ pub fn parse_result(stdout: &str) -> Option<(f64, Option<String>)> {
         if line.is_empty() {
             continue;
         }
-        // intermediate-metric protocol lines are NEVER a final result —
-        // a trailing `intermediate: <step> <score>` must not shadow the
-        // real `result:`/bare-float report (they stream through
-        // parse_intermediate instead)
-        if line.starts_with("intermediate:") {
+        // intermediate-metric and checkpoint protocol lines are NEVER a
+        // final result — a trailing `intermediate: <step> <score>` or
+        // `checkpoint: PATH` must not shadow the real `result:`/bare-float
+        // report (they stream through parse_intermediate /
+        // parse_checkpoint instead)
+        if line.starts_with("intermediate:") || line.starts_with("checkpoint:") {
             continue;
         }
         if let Some(rest) = line.strip_prefix("result:") {
@@ -167,6 +168,20 @@ pub fn parse_intermediate(line: &str) -> Option<(i64, f64)> {
         return None;
     }
     Some((step, score))
+}
+
+/// Parse one `checkpoint: PATH` protocol line — the checkpoint token a
+/// running job streams after saving restorable state. The token is the
+/// whole trimmed remainder of the line (paths may contain spaces); an
+/// empty token is not a checkpoint. Only the LATEST token per attempt
+/// matters — a preempted/stopped trial resumes from the last one via
+/// `AUP_RESUME_FROM`.
+pub fn parse_checkpoint(line: &str) -> Option<String> {
+    let rest = line.trim().strip_prefix("checkpoint:")?.trim();
+    if rest.is_empty() {
+        return None;
+    }
+    Some(rest.to_string())
 }
 
 impl Executor for ScriptExecutor {
@@ -228,6 +243,10 @@ impl Executor for ScriptExecutor {
                 if let Some((step, score)) = parse_intermediate(&line) {
                     if let Some(sink) = &env.report {
                         sink.send(step, score);
+                    }
+                } else if let Some(token) = parse_checkpoint(&line) {
+                    if let Some(sink) = &env.checkpoint {
+                        sink.send(&token);
                     }
                 }
                 stdout.push_str(&line);
@@ -345,6 +364,34 @@ mod tests {
         assert_eq!(
             parse_result("result: 1\nintermediate: 5 0.9\n0.25"),
             Some((0.25, None))
+        );
+    }
+
+    #[test]
+    fn parse_checkpoint_forms() {
+        assert_eq!(parse_checkpoint("checkpoint: /tmp/ck.pt"), Some("/tmp/ck.pt".into()));
+        assert_eq!(parse_checkpoint("  checkpoint:   step-5  "), Some("step-5".into()));
+        // paths with spaces: the whole trimmed remainder is the token
+        assert_eq!(
+            parse_checkpoint("checkpoint: /tmp/my run/ck 3.pt"),
+            Some("/tmp/my run/ck 3.pt".into())
+        );
+        assert_eq!(parse_checkpoint("checkpoint:"), None);
+        assert_eq!(parse_checkpoint("checkpoint:    "), None);
+        assert_eq!(parse_checkpoint("result: 0.5"), None);
+        assert_eq!(parse_checkpoint("saving checkpoint: x"), None);
+    }
+
+    #[test]
+    fn parse_result_never_mistakes_checkpoint_lines() {
+        assert_eq!(
+            parse_result("result: 0.5\ncheckpoint: /tmp/ck.pt"),
+            Some((0.5, None))
+        );
+        assert_eq!(parse_result("checkpoint: 0.25"), None);
+        assert_eq!(
+            parse_result("checkpoint: a\nresult: 0.75\ncheckpoint: b"),
+            Some((0.75, None))
         );
     }
 
@@ -477,6 +524,38 @@ mod tests {
         }));
         assert_eq!(ex.execute(&c, &e).unwrap(), 0.75);
         assert_eq!(*got.lock().unwrap(), vec![(1, 0.25), (2, 0.5)]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn script_streams_checkpoint_tokens_and_sees_resume_env() {
+        use crate::resource::job::CheckpointSink;
+        use std::sync::{Arc, Mutex};
+        let dir = temp_dir("aup-exec-ckpt").unwrap();
+        // the script resumes from $AUP_RESUME_FROM (empty on a cold
+        // start), saves twice, and reports where it started from
+        let script = write_script(
+            &dir,
+            "ckpt.sh",
+            "#!/bin/sh\n\
+             echo \"resuming from ${AUP_RESUME_FROM:-scratch}\"\n\
+             echo \"checkpoint: ck-1\"\n\
+             echo \"intermediate: 1 0.5\"\n\
+             echo \"checkpoint: ck-2\"\n\
+             [ \"$AUP_RESUME_FROM\" = \"ck-0\" ] && echo \"result: 2\" || echo \"result: 1\"\n",
+        );
+        let ex = ScriptExecutor::new(&script, &dir);
+        let mut c = BasicConfig::new();
+        c.set_num("job_id", 0.0);
+        let mut e = env();
+        e.env.insert("AUP_RESUME_FROM".into(), "ck-0".into());
+        let got: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let got2 = got.clone();
+        e.checkpoint = Some(CheckpointSink::new(move |tok| {
+            got2.lock().unwrap().push(tok.to_string());
+        }));
+        assert_eq!(ex.execute(&c, &e).unwrap(), 2.0, "script saw AUP_RESUME_FROM");
+        assert_eq!(*got.lock().unwrap(), vec!["ck-1".to_string(), "ck-2".to_string()]);
         std::fs::remove_dir_all(dir).unwrap();
     }
 

@@ -105,6 +105,30 @@ impl std::fmt::Debug for ReportSink {
     }
 }
 
+/// Where a running attempt's `checkpoint: PATH` lines go. Same shape as
+/// [`ReportSink`], carrying the checkpoint token instead of a metric:
+/// dispatchers install one per attempt so the scheduler can journal the
+/// LATEST token and relaunch a preempted/stopped attempt with
+/// `AUP_RESUME_FROM=<token>`.
+#[derive(Clone)]
+pub struct CheckpointSink(Arc<dyn Fn(&str) + Send + Sync>);
+
+impl CheckpointSink {
+    pub fn new(f: impl Fn(&str) + Send + Sync + 'static) -> CheckpointSink {
+        CheckpointSink(Arc::new(f))
+    }
+
+    pub fn send(&self, token: &str) {
+        (self.0)(token)
+    }
+}
+
+impl std::fmt::Debug for CheckpointSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("CheckpointSink")
+    }
+}
+
 /// Environment a job runs with (resource env vars + perf factor and
 /// cold-start latency for simulated resources + the attempt's kill
 /// switch).
@@ -121,6 +145,9 @@ pub struct JobEnv {
     /// intermediate-metric channel: executors stream parsed
     /// `intermediate:` lines here (None = nobody is listening)
     pub report: Option<ReportSink>,
+    /// checkpoint-token channel: executors stream parsed `checkpoint:`
+    /// lines here (None = nobody is listening)
+    pub checkpoint: Option<CheckpointSink>,
 }
 
 impl JobEnv {
@@ -131,6 +158,7 @@ impl JobEnv {
             spawn_delay: h.spawn_delay,
             cancel: CancelToken::new(),
             report: None,
+            checkpoint: None,
         }
     }
 }

@@ -12,13 +12,12 @@
 //!   [`EventQueue`], so the whole retry/timeout/preemption state machine
 //!   advances on virtual time with zero sleeps and full determinism.
 
-use std::collections::{BTreeMap, BTreeSet};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::resource::executor::Executor;
-use crate::resource::job::{CancelToken, JobEnv, ReportSink};
+use crate::resource::job::{CancelToken, CheckpointSink, JobEnv, ReportSink};
 use crate::search::BasicConfig;
 use crate::util::sim::{Clock, EventQueue, SimClock, WallClock};
 
@@ -46,6 +45,11 @@ pub enum DispatchPoll {
     /// (`intermediate: <step> <score>` from the job's stdout, or a
     /// scheduled point of a [`SimOutcome`] curve).
     Report { attempt: AttemptId, step: i64, score: f64 },
+    /// A still-running attempt saved restorable state
+    /// (`checkpoint: PATH` from the job's stdout, or a scheduled point
+    /// of a [`SimOutcome`] checkpoint curve). Only the latest token per
+    /// job matters for resume.
+    Checkpoint { attempt: AttemptId, token: String },
     /// `wait_until` passed with no event — or, when waiting without a
     /// deadline, the dispatcher knows no event can ever arrive (sim mode
     /// with only hung attempts outstanding).
@@ -70,17 +74,112 @@ pub trait Dispatcher {
     /// can be reused immediately. `false` means it cannot be interrupted
     /// (thread mode) and will still deliver a completion later.
     fn abort(&mut self, attempt: AttemptId) -> bool;
+
+    /// How many intermediate reports this dispatcher has dropped because
+    /// a chatty job outran the bounded report buffer (see
+    /// [`ThreadDispatcher`]; 0 for dispatchers that never drop).
+    fn dropped_reports(&self) -> u64 {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Thread mode
 // ---------------------------------------------------------------------------
 
-/// What the per-attempt threads send back: a completion, or a streamed
-/// intermediate metric from a still-running attempt.
+/// What the per-attempt threads send back: a completion, a streamed
+/// intermediate metric, or a checkpoint token from a still-running
+/// attempt.
 enum ThreadEvent {
     Done(AttemptDone),
     Report { attempt: AttemptId, step: i64, score: f64 },
+    Checkpoint { attempt: AttemptId, token: String },
+}
+
+/// Most intermediate reports a [`ThreadDispatcher`] buffers between
+/// polls. A chatty script printing thousands of `intermediate:` lines
+/// per second used to grow an unbounded channel while the scheduler was
+/// busy elsewhere; past this cap the OLDEST buffered report is dropped
+/// (newest metrics carry the ranking information) and counted in
+/// `dropped_reports`. Completions and checkpoints are never dropped.
+pub const MAX_PENDING_REPORTS: usize = 1024;
+
+/// Bounded event mailbox between attempt threads and the scheduler's
+/// `wait()`. Drop-oldest on reports only; Done/Checkpoint events always
+/// land (losing a completion would wedge a job; losing the latest
+/// checkpoint token would silently lose resume work).
+struct EventBuffer {
+    state: Mutex<BufferState>,
+    cond: Condvar,
+    report_cap: usize,
+}
+
+struct BufferState {
+    queue: VecDeque<ThreadEvent>,
+    pending_reports: usize,
+    dropped_reports: u64,
+}
+
+impl EventBuffer {
+    fn new(report_cap: usize) -> EventBuffer {
+        EventBuffer {
+            state: Mutex::new(BufferState {
+                queue: VecDeque::new(),
+                pending_reports: 0,
+                dropped_reports: 0,
+            }),
+            cond: Condvar::new(),
+            report_cap: report_cap.max(1),
+        }
+    }
+
+    fn push(&self, ev: ThreadEvent) {
+        let mut s = self.state.lock().unwrap();
+        if matches!(ev, ThreadEvent::Report { .. }) {
+            if s.pending_reports >= self.report_cap {
+                // evict the oldest buffered report (front-most Report);
+                // Done/Checkpoint events in front of it are untouched
+                if let Some(pos) =
+                    s.queue.iter().position(|e| matches!(e, ThreadEvent::Report { .. }))
+                {
+                    s.queue.remove(pos);
+                    s.pending_reports -= 1;
+                    s.dropped_reports += 1;
+                }
+            }
+            s.pending_reports += 1;
+        }
+        s.queue.push_back(ev);
+        drop(s);
+        self.cond.notify_one();
+    }
+
+    /// Pop the next event, blocking until `deadline` (None = forever).
+    fn pop(&self, deadline: Option<Instant>) -> Option<ThreadEvent> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(ev) = s.queue.pop_front() {
+                if matches!(ev, ThreadEvent::Report { .. }) {
+                    s.pending_reports = s.pending_reports.saturating_sub(1);
+                }
+                return Some(ev);
+            }
+            match deadline {
+                None => s = self.cond.wait(s).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return None;
+                    }
+                    s = self.cond.wait_timeout(s, dl - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped_reports
+    }
 }
 
 /// Wall-clock dispatcher: one OS thread per in-flight attempt, exactly
@@ -88,8 +187,7 @@ enum ThreadEvent {
 pub struct ThreadDispatcher {
     clock: WallClock,
     executors: BTreeMap<SubId, Arc<dyn Executor>>,
-    tx: Sender<ThreadEvent>,
-    rx: Receiver<ThreadEvent>,
+    buf: Arc<EventBuffer>,
     /// per-attempt kill switches: abort() SIGKILLs the attempt's
     /// subprocess group so its (still undeliverable) completion arrives
     /// promptly instead of pinning the slot for the job's natural length
@@ -98,12 +196,16 @@ pub struct ThreadDispatcher {
 
 impl ThreadDispatcher {
     pub fn new() -> ThreadDispatcher {
-        let (tx, rx) = channel();
+        ThreadDispatcher::with_report_cap(MAX_PENDING_REPORTS)
+    }
+
+    /// Like [`ThreadDispatcher::new`] with a custom bound on buffered
+    /// intermediate reports (tests shrink it to exercise the drop path).
+    pub fn with_report_cap(cap: usize) -> ThreadDispatcher {
         ThreadDispatcher {
             clock: WallClock::new(),
             executors: BTreeMap::new(),
-            tx,
-            rx,
+            buf: Arc::new(EventBuffer::new(cap)),
             cancels: BTreeMap::new(),
         }
     }
@@ -131,7 +233,7 @@ impl Dispatcher for ThreadDispatcher {
             .get(&sub)
             .unwrap_or_else(|| panic!("no executor registered for submission {sub}"))
             .clone();
-        let tx = self.tx.clone();
+        let buf = self.buf.clone();
         let config = config.clone();
         let mut env = env.clone();
         // a fresh kill switch per attempt; abort() reaches the attempt's
@@ -139,17 +241,21 @@ impl Dispatcher for ThreadDispatcher {
         let token = CancelToken::new();
         env.cancel = token.clone();
         self.cancels.insert(attempt, token);
-        // intermediate lines stream straight into the event channel, so a
-        // blocked wait() wakes the moment a running job reports
-        let report_tx = self.tx.clone();
+        // intermediate lines stream straight into the (bounded) event
+        // buffer, so a blocked wait() wakes the moment a running job
+        // reports
+        let report_buf = self.buf.clone();
         env.report = Some(ReportSink::new(move |step, score| {
-            let _ = report_tx.send(ThreadEvent::Report { attempt, step, score });
+            report_buf.push(ThreadEvent::Report { attempt, step, score });
+        }));
+        let ckpt_buf = self.buf.clone();
+        env.checkpoint = Some(CheckpointSink::new(move |tok| {
+            ckpt_buf.push(ThreadEvent::Checkpoint { attempt, token: tok.to_string() });
         }));
         std::thread::spawn(move || {
             let start = std::time::Instant::now();
             let outcome = executor.execute(&config, &env).map_err(|e| e.to_string());
-            // receiver gone => scheduler dropped; nothing to do
-            let _ = tx.send(ThreadEvent::Done(AttemptDone {
+            buf.push(ThreadEvent::Done(AttemptDone {
                 attempt,
                 outcome,
                 elapsed: start.elapsed().as_secs_f64(),
@@ -158,24 +264,16 @@ impl Dispatcher for ThreadDispatcher {
     }
 
     fn wait(&mut self, wait_until: Option<f64>) -> DispatchPoll {
-        let got = match wait_until {
-            None => match self.rx.recv() {
-                Ok(ev) => ev,
-                Err(_) => return DispatchPoll::Idle,
-            },
-            Some(t) => {
-                // clamp: a non-finite or absurd deadline (job_timeout: inf
-                // in a config) must degrade to a long wait, not a
-                // Duration::from_secs_f64 panic
-                let secs = (t - self.clock.now()).max(0.0);
-                let secs = if secs.is_finite() { secs.min(86_400.0 * 365.0) } else { 86_400.0 * 365.0 };
-                match self.rx.recv_timeout(Duration::from_secs_f64(secs)) {
-                    Ok(ev) => ev,
-                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                        return DispatchPoll::Idle
-                    }
-                }
-            }
+        let deadline = wait_until.map(|t| {
+            // clamp: a non-finite or absurd deadline (job_timeout: inf
+            // in a config) must degrade to a long wait, not a
+            // Duration::from_secs_f64 panic
+            let secs = (t - self.clock.now()).max(0.0);
+            let secs = if secs.is_finite() { secs.min(86_400.0 * 365.0) } else { 86_400.0 * 365.0 };
+            Instant::now() + Duration::from_secs_f64(secs)
+        });
+        let Some(got) = self.buf.pop(deadline) else {
+            return DispatchPoll::Idle;
         };
         match got {
             ThreadEvent::Done(ev) => {
@@ -184,6 +282,9 @@ impl Dispatcher for ThreadDispatcher {
             }
             ThreadEvent::Report { attempt, step, score } => {
                 DispatchPoll::Report { attempt, step, score }
+            }
+            ThreadEvent::Checkpoint { attempt, token } => {
+                DispatchPoll::Checkpoint { attempt, token }
             }
         }
     }
@@ -199,6 +300,10 @@ impl Dispatcher for ThreadDispatcher {
             token.kill();
         }
         false
+    }
+
+    fn dropped_reports(&self) -> u64 {
+        self.buf.dropped()
     }
 }
 
@@ -218,25 +323,46 @@ pub struct SimOutcome {
     /// [`DispatchPoll::Report`] at `spawn + duration * perf * fraction`
     /// on the virtual clock (hangs emit none)
     pub curve: Vec<(f64, i64, f64)>,
+    /// checkpoint tokens the simulated job saves while it runs:
+    /// `(fraction-of-duration, token)` — each surfaces as a
+    /// [`DispatchPoll::Checkpoint`] at `spawn + duration * perf *
+    /// fraction` on the virtual clock (hangs emit none)
+    pub checkpoints: Vec<(f64, String)>,
 }
 
 impl SimOutcome {
     pub fn ok(score: f64, duration: f64) -> SimOutcome {
-        SimOutcome { result: Ok(score), duration, curve: Vec::new() }
+        SimOutcome { result: Ok(score), duration, curve: Vec::new(), checkpoints: Vec::new() }
     }
 
     pub fn fail(msg: impl Into<String>, duration: f64) -> SimOutcome {
-        SimOutcome { result: Err(msg.into()), duration, curve: Vec::new() }
+        SimOutcome {
+            result: Err(msg.into()),
+            duration,
+            curve: Vec::new(),
+            checkpoints: Vec::new(),
+        }
     }
 
     pub fn hang() -> SimOutcome {
-        SimOutcome { result: Err("hung".into()), duration: f64::INFINITY, curve: Vec::new() }
+        SimOutcome {
+            result: Err("hung".into()),
+            duration: f64::INFINITY,
+            curve: Vec::new(),
+            checkpoints: Vec::new(),
+        }
     }
 
     /// Attach an intermediate-report curve (fraction in `[0, 1)`, step,
     /// score).
     pub fn with_curve(mut self, curve: Vec<(f64, i64, f64)>) -> SimOutcome {
         self.curve = curve;
+        self
+    }
+
+    /// Attach a checkpoint curve (fraction in `[0, 1)`, token).
+    pub fn with_checkpoints(mut self, checkpoints: Vec<(f64, String)>) -> SimOutcome {
+        self.checkpoints = checkpoints;
         self
     }
 }
@@ -271,6 +397,7 @@ impl SimExecutor for FnSimExecutor {
 enum SimEvent {
     Done(AttemptDone),
     Report { attempt: AttemptId, step: i64, score: f64 },
+    Checkpoint { attempt: AttemptId, token: String },
 }
 
 /// Virtual-clock dispatcher: attempts are evaluated eagerly, completions
@@ -336,6 +463,11 @@ impl Dispatcher for SimDispatcher {
                 let at = spawn + duration * frac.clamp(0.0, 1.0);
                 self.queue.schedule_in(at, SimEvent::Report { attempt, step, score });
             }
+            for (frac, token) in &out.checkpoints {
+                let at = spawn + duration * frac.clamp(0.0, 1.0);
+                self.queue
+                    .schedule_in(at, SimEvent::Checkpoint { attempt, token: token.clone() });
+            }
             self.queue.schedule_in(
                 spawn + duration,
                 SimEvent::Done(AttemptDone { attempt, outcome: out.result, elapsed: duration }),
@@ -367,6 +499,12 @@ impl Dispatcher for SimDispatcher {
                         continue;
                     }
                     return DispatchPoll::Report { attempt, step, score };
+                }
+                SimEvent::Checkpoint { attempt, token } => {
+                    if self.cancelled.contains(&attempt) {
+                        continue;
+                    }
+                    return DispatchPoll::Checkpoint { attempt, token };
                 }
             }
         }
@@ -582,6 +720,125 @@ mod tests {
         match d.wait(None) {
             DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 9),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn thread_checkpoint_sink_wakes_wait() {
+        let mut d = ThreadDispatcher::new();
+        d.add_executor(
+            0,
+            Arc::new(FnExecutor::new("checkpointing", |_, env| {
+                if let Some(sink) = &env.checkpoint {
+                    sink.send("ck-a");
+                }
+                Ok(1.0)
+            })),
+        );
+        d.dispatch(4, 0, &BasicConfig::new(), &env());
+        match d.wait(None) {
+            DispatchPoll::Checkpoint { attempt: 4, token } => assert_eq!(token, "ck-a"),
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 4),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.dropped_reports(), 0);
+    }
+
+    #[test]
+    fn chatty_reports_drop_oldest_but_keep_done_and_checkpoints() {
+        // a job spams 10 reports against a cap of 3: the 7 oldest drop,
+        // the newest 3 survive in order, and the checkpoint + completion
+        // are untouched
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let pushed = Arc::new(AtomicBool::new(false));
+        let pushed2 = pushed.clone();
+        let mut d = ThreadDispatcher::with_report_cap(3);
+        d.add_executor(
+            0,
+            Arc::new(FnExecutor::new("chatty", move |_, env| {
+                for i in 0..10 {
+                    if let Some(sink) = &env.report {
+                        sink.send(i, i as f64 / 10.0);
+                    }
+                }
+                if let Some(sink) = &env.checkpoint {
+                    sink.send("ck-final");
+                }
+                pushed2.store(true, Ordering::SeqCst);
+                Ok(1.0)
+            })),
+        );
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        // don't consume until the job has pushed everything — otherwise
+        // draining races the spam and fewer than 7 reports overflow
+        while !pushed.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let mut reports = Vec::new();
+        let mut checkpoints = Vec::new();
+        loop {
+            match d.wait(None) {
+                DispatchPoll::Report { step, .. } => reports.push(step),
+                DispatchPoll::Checkpoint { token, .. } => checkpoints.push(token),
+                DispatchPoll::Event(ev) => {
+                    assert_eq!(ev.attempt, 1);
+                    break;
+                }
+                DispatchPoll::Idle => panic!("unexpected idle"),
+            }
+        }
+        assert_eq!(reports, vec![7, 8, 9], "newest 3 reports survive, in order");
+        assert_eq!(checkpoints, vec!["ck-final".to_string()]);
+        assert_eq!(d.dropped_reports(), 7);
+    }
+
+    #[test]
+    fn sim_checkpoints_surface_at_virtual_times_and_abort_swallows_them() {
+        let mut d = SimDispatcher::new();
+        d.add_executor(
+            0,
+            Box::new(FnSimExecutor::new(|_, _| {
+                SimOutcome::ok(1.0, 10.0)
+                    .with_checkpoints(vec![(0.3, "ck-1".into()), (0.9, "ck-2".into())])
+            })),
+        );
+        d.dispatch(1, 0, &BasicConfig::new(), &env());
+        match d.wait(None) {
+            DispatchPoll::Checkpoint { attempt: 1, token } => {
+                assert_eq!(token, "ck-1");
+                assert_eq!(d.now(), 3.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Checkpoint { token, .. } => {
+                assert_eq!(token, "ck-2");
+                assert_eq!(d.now(), 9.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match d.wait(None) {
+            DispatchPoll::Event(ev) => assert_eq!(ev.attempt, 1),
+            other => panic!("{other:?}"),
+        }
+        // aborted attempts' pending checkpoints are swallowed
+        d.dispatch(2, 0, &BasicConfig::new(), &env());
+        d.dispatch(3, 0, &BasicConfig::new(), &env());
+        assert!(d.abort(2));
+        loop {
+            match d.wait(None) {
+                DispatchPoll::Checkpoint { attempt, .. } | DispatchPoll::Report { attempt, .. } => {
+                    assert_eq!(attempt, 3)
+                }
+                DispatchPoll::Event(ev) => {
+                    assert_eq!(ev.attempt, 3);
+                    break;
+                }
+                DispatchPoll::Idle => panic!("unexpected idle"),
+            }
         }
     }
 

@@ -58,6 +58,15 @@ pub struct ExperimentAggregate {
     /// went back to the queue, budget intact, so this is event-counted,
     /// not a job status)
     pub preempted: usize,
+    /// RESUMED rows of this eid in `job_event` — attempts relaunched
+    /// with a checkpoint token (`AUP_RESUME_FROM`) instead of from
+    /// scratch
+    pub resumed: usize,
+    /// busy seconds of evicted work that resumed attempts recovered (the
+    /// busy stamp of RESUMED rows); folded into [`saved_secs`]
+    ///
+    /// [`saved_secs`]: ExperimentAggregate::saved_secs
+    pub resumed_saved: f64,
     /// busy seconds / count of DONE attempt-ending journal rows — the
     /// calibration for the compute-saved estimate
     pub finished_busy: f64,
@@ -118,6 +127,9 @@ impl ExperimentAggregate {
         if state == Some("PREEMPTED") {
             self.preempted += 1;
         }
+        if state == Some("RESUMED") {
+            self.resumed += 1;
+        }
         let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
         match (state, busy) {
             (Some("DONE"), Some(b)) => {
@@ -128,6 +140,7 @@ impl ExperimentAggregate {
                 self.stopped_busy += b;
                 self.stopped_n += 1;
             }
+            (Some("RESUMED"), Some(b)) => self.resumed_saved += b,
             _ => {}
         }
     }
@@ -141,6 +154,9 @@ impl ExperimentAggregate {
         if state == Some("PREEMPTED") {
             self.preempted = self.preempted.saturating_sub(1);
         }
+        if state == Some("RESUMED") {
+            self.resumed = self.resumed.saturating_sub(1);
+        }
         let busy = busy.filter(|b| b.is_finite() && *b > 0.0);
         match (state, busy) {
             (Some("DONE"), Some(b)) => {
@@ -151,20 +167,25 @@ impl ExperimentAggregate {
                 self.stopped_busy = (self.stopped_busy - b).max(0.0);
                 self.stopped_n = self.stopped_n.saturating_sub(1);
             }
+            (Some("RESUMED"), Some(b)) => self.resumed_saved = (self.resumed_saved - b).max(0.0),
             _ => {}
         }
     }
 
-    /// Estimated compute saved by early stopping: what the stopped
-    /// attempts would have burned had each run to the mean busy time of
-    /// a finished attempt, minus what they actually burned. 0 until a
-    /// finished attempt calibrates the mean (or nothing was stopped).
+    /// Estimated compute saved: the early-stopping component (what the
+    /// stopped attempts would have burned had each run to the mean busy
+    /// time of a finished attempt, minus what they actually burned — 0
+    /// until a finished attempt calibrates the mean) plus the
+    /// checkpoint-resume component (evicted busy seconds that resumed
+    /// attempts did NOT have to redo, the busy stamps of RESUMED rows).
     pub fn saved_secs(&self) -> f64 {
-        if self.finished_n == 0 || self.stopped_n == 0 {
-            return 0.0;
-        }
-        let mean = self.finished_busy / self.finished_n as f64;
-        (mean * self.stopped_n as f64 - self.stopped_busy).max(0.0)
+        let stopping = if self.finished_n == 0 || self.stopped_n == 0 {
+            0.0
+        } else {
+            let mean = self.finished_busy / self.finished_n as f64;
+            (mean * self.stopped_n as f64 - self.stopped_busy).max(0.0)
+        };
+        stopping + self.resumed_saved
     }
 }
 

@@ -89,8 +89,17 @@ pub enum Request {
     Lease { worker: String },
     /// Worker fleet: prove the leased attempt is still alive; extends
     /// the lease deadline. Replies `{"alive": bool}` — false means the
-    /// lease already expired and the worker must kill the job.
-    Heartbeat { lease: i64 },
+    /// lease already expired and the worker must kill the job. An
+    /// attached `checkpoint` token (the job's latest `checkpoint:` line)
+    /// is journaled server-side so a re-offer of this job resumes from
+    /// it — a checkpoint doubles as a heartbeat; peers predating the
+    /// field simply never attach one.
+    Heartbeat { lease: i64, checkpoint: Option<String> },
+    /// Worker fleet: a draining worker (SIGTERM) hands its live lease
+    /// back cleanly instead of dying silently — the job re-enters the
+    /// queue front immediately with budget and checkpoint token intact,
+    /// rather than waiting out lease expiry. Replies `{"accepted": bool}`.
+    Abandon { lease: i64 },
     /// Worker fleet: stream one `intermediate: <step> <score>` line from
     /// a leased attempt. Replies `{"stop": bool}` — true means the trial
     /// scheduler issued a stop verdict (or the lease is dead) and the
@@ -129,8 +138,13 @@ impl Request {
                 ("cmd", Json::str("lease")),
                 ("worker", Json::str(worker.clone())),
             ]),
-            Request::Heartbeat { lease } => Json::obj(vec![
+            Request::Heartbeat { lease, checkpoint } => Json::obj(vec![
                 ("cmd", Json::str("heartbeat")),
+                ("lease", Json::int(*lease)),
+                ("checkpoint", checkpoint.clone().map_or(Json::Null, Json::str)),
+            ]),
+            Request::Abandon { lease } => Json::obj(vec![
+                ("cmd", Json::str("abandon")),
                 ("lease", Json::int(*lease)),
             ]),
             Request::Report { lease, step, score } => Json::obj(vec![
@@ -186,7 +200,11 @@ impl Request {
                 user: j.get("user").and_then(Json::as_str).map(str::to_string),
             },
             "lease" => Request::Lease { worker: str_field("worker")? },
-            "heartbeat" => Request::Heartbeat { lease: i64_field("lease")? },
+            "heartbeat" => Request::Heartbeat {
+                lease: i64_field("lease")?,
+                checkpoint: j.get("checkpoint").and_then(Json::as_str).map(str::to_string),
+            },
+            "abandon" => Request::Abandon { lease: i64_field("lease")? },
             "report" => Request::Report {
                 lease: i64_field("lease")?,
                 step: i64_field("step")?,
@@ -358,6 +376,9 @@ pub struct LeaseOffer {
     pub job_timeout: Option<f64>,
     /// seconds of heartbeat silence after which the lease expires
     pub lease_timeout: f64,
+    /// checkpoint token to relaunch from: the worker exports
+    /// `AUP_RESUME_FROM=<token>` so the script skips completed steps
+    pub resume_from: Option<String>,
 }
 
 pub fn lease_offer_to_json(o: &LeaseOffer) -> Json {
@@ -371,6 +392,7 @@ pub fn lease_offer_to_json(o: &LeaseOffer) -> Json {
         ("script", Json::str(o.script.clone())),
         ("job_timeout", opt_num(o.job_timeout)),
         ("lease_timeout", Json::num(o.lease_timeout)),
+        ("resume_from", o.resume_from.clone().map_or(Json::Null, Json::str)),
     ])
 }
 
@@ -385,6 +407,9 @@ pub fn lease_offer_from_json(j: &Json) -> Result<LeaseOffer> {
         script: req_str(j, "script", "lease offer")?,
         job_timeout: get_opt_f64(j, "job_timeout"),
         lease_timeout: req_f64(j, "lease_timeout", "lease offer")?,
+        // optional on the wire: an offer from an older batch server
+        // never resumes
+        resume_from: j.get("resume_from").and_then(Json::as_str).map(str::to_string),
     })
 }
 
@@ -463,6 +488,7 @@ pub fn status_to_json(s: &ExperimentStatus) -> Json {
         ("stopped", Json::int(s.stopped as i64)),
         ("retries", Json::int(s.retries as i64)),
         ("preempted", Json::int(s.preempted as i64)),
+        ("resumed", Json::int(s.resumed as i64)),
         ("saved_secs", Json::num(s.saved_secs)),
         ("best_score", opt_num(s.best_score)),
         ("best_jid", s.best_jid.map_or(Json::Null, Json::int)),
@@ -490,6 +516,9 @@ pub fn status_from_json(j: &Json) -> Result<ExperimentStatus> {
         retries: count("retries")?,
         // optional on the wire: a peer from before preemption reports none
         preempted: j.get("preempted").and_then(Json::as_i64).unwrap_or(0).max(0) as usize,
+        // optional on the wire: a peer from before checkpoint/resume
+        // never resumed anything
+        resumed: j.get("resumed").and_then(Json::as_i64).unwrap_or(0).max(0) as usize,
         saved_secs: j.get("saved_secs").and_then(Json::as_f64).unwrap_or(0.0),
         best_score: get_opt_f64(j, "best_score"),
         best_jid: get_opt_i64(j, "best_jid"),
@@ -645,7 +674,9 @@ mod tests {
             },
             Request::Submit { config: Json::Null, user: None },
             Request::Lease { worker: "rig-7".into() },
-            Request::Heartbeat { lease: 42 },
+            Request::Heartbeat { lease: 42, checkpoint: None },
+            Request::Heartbeat { lease: 42, checkpoint: Some("/ckpt/epoch-3".into()) },
+            Request::Abandon { lease: 42 },
             Request::Report { lease: 42, step: 3, score: 0.875 },
             Request::Complete {
                 lease: 42,
@@ -776,6 +807,7 @@ mod tests {
             stopped: 2,
             retries: 2,
             preempted: 3,
+            resumed: 2,
             saved_secs: 12.5,
             best_score: Some(0.125),
             best_jid: Some(2),
@@ -790,9 +822,11 @@ mod tests {
             fields.remove("stopped");
             fields.remove("saved_secs");
             fields.remove("preempted");
+            fields.remove("resumed");
         }
         let parsed = status_from_json(&legacy_st).unwrap();
         assert_eq!((parsed.stopped, parsed.saved_secs, parsed.preempted), (0, 0.0, 0));
+        assert_eq!(parsed.resumed, 0);
         let ws = Some(WalStats { appends: 3, records: 40, checkpoints: 1 });
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&ws)).unwrap(), ws);
         assert_eq!(wal_stats_from_json(&wal_stats_to_json(&None)).unwrap(), None);
@@ -807,6 +841,7 @@ mod tests {
                 script: "/tmp/train.sh".into(),
                 job_timeout: Some(30.0),
                 lease_timeout: 10.0,
+                resume_from: Some("/ckpt/epoch-3".into()),
             },
             LeaseOffer {
                 lease: 8,
@@ -818,12 +853,30 @@ mod tests {
                 script: "builtin:sphere".into(),
                 job_timeout: None,
                 lease_timeout: 15.0,
+                resume_from: None,
             },
         ] {
             let j = lease_offer_to_json(&offer);
             let back = lease_offer_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
             assert_eq!(back, offer);
         }
+        // an offer from an older batch server (no resume_from) parses
+        let mut legacy_offer = lease_offer_to_json(&LeaseOffer {
+            lease: 9,
+            job_id: 1,
+            jid: 2,
+            eid: 0,
+            attempt: 1,
+            config: "{}".into(),
+            script: "builtin:sphere".into(),
+            job_timeout: None,
+            lease_timeout: 15.0,
+            resume_from: None,
+        });
+        if let Json::Obj(fields) = &mut legacy_offer {
+            fields.remove("resume_from");
+        }
+        assert_eq!(lease_offer_from_json(&legacy_offer).unwrap().resume_from, None);
     }
 
     #[test]

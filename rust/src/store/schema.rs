@@ -421,6 +421,94 @@ pub fn recover_incomplete(store: &mut Store) -> Result<usize> {
     Ok(recovered)
 }
 
+/// A checkpoint token recovered from the journal at reopen: an
+/// interrupted job's submitted config, the LATEST `CHECKPOINT` token it
+/// journaled before the process died, and the busy-seconds estimate
+/// that token makes recoverable. Collect BEFORE [`recover_incomplete`]
+/// marks the stuck rows FAILED; `aup run` / `aup batch` hand the list
+/// to the rebuilt experiments so a re-proposed job with the same config
+/// launches with `AUP_RESUME_FROM` instead of redoing finished steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredCheckpoint {
+    /// the stuck job's config JSON, verbatim as submitted (job_id
+    /// included) — the match key for re-proposed jobs
+    pub config: String,
+    /// latest journaled checkpoint token
+    pub token: String,
+    /// seconds between the attempt start and the token's journal stamp
+    pub saved: f64,
+}
+
+/// Scan the journal for the resume frontier of every stuck job. States
+/// the scanner does not recognize are skipped, never an error — an old
+/// binary must be able to open a newer store and still recover.
+pub fn recovered_checkpoints(store: &Store) -> Result<Vec<RecoveredCheckpoint>> {
+    if !store.has_table("job") || !store.has_table("job_event") {
+        return Ok(Vec::new());
+    }
+    // the stuck set: RUNNING (owner died mid-attempt) or PENDING (died
+    // between attempts — e.g. preempted with a token, never relaunched)
+    let mut stuck: Vec<(i64, String, f64)> = Vec::new();
+    {
+        let t = store.table("job")?;
+        let c = JobCols::resolve(t.schema())?;
+        for status in ["RUNNING", "PENDING"] {
+            let key = Value::Text(status.to_string());
+            let rows = match t.lookup_eq("status", &key) {
+                Some(rows) => rows,
+                None => t.rows().filter(|r| r.values[c.status].sql_eq(&key)).collect(),
+            };
+            for r in rows {
+                stuck.push((
+                    r.values[c.jid].as_i64().unwrap_or(-1),
+                    r.values[c.config].as_str().unwrap_or("").to_string(),
+                    r.values[c.start_time].as_f64().unwrap_or(0.0),
+                ));
+            }
+        }
+    }
+    if stuck.is_empty() {
+        return Ok(Vec::new());
+    }
+    // latest CHECKPOINT per stuck jid. The token is everything after
+    // "token=" — it journals LAST in the detail precisely so paths with
+    // spaces survive this parse
+    let mut latest: std::collections::BTreeMap<i64, (f64, String)> =
+        std::collections::BTreeMap::new();
+    {
+        let t = store.table("job_event")?;
+        let c = EventCols::resolve(t.schema())?;
+        let key = Value::Text("CHECKPOINT".to_string());
+        let rows = match t.lookup_eq("state", &key) {
+            Some(rows) => rows,
+            None => t.rows().filter(|r| r.values[c.state].sql_eq(&key)).collect(),
+        };
+        for r in rows {
+            let ev = c.row(r);
+            let Some(tok) = ev.detail.split("token=").nth(1) else {
+                continue;
+            };
+            match latest.get(&ev.jid) {
+                Some((at, _)) if *at >= ev.time => {}
+                _ => {
+                    latest.insert(ev.jid, (ev.time, tok.to_string()));
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (jid, config, start) in stuck {
+        if let Some((at, token)) = latest.get(&jid) {
+            out.push(RecoveredCheckpoint {
+                config,
+                token: token.clone(),
+                saved: (at - start).max(0.0),
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Typed view of a `job_event` row (scheduler state transitions).
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobEventRow {
@@ -846,6 +934,75 @@ mod tests {
         let mut s = Store::in_memory();
         assert_eq!(recover_incomplete(&mut s).unwrap(), 0);
         assert!(s.has_table("job"));
+    }
+
+    #[test]
+    fn recovered_checkpoints_find_the_latest_token_per_stuck_job() {
+        let mut s = Store::in_memory();
+        init_schema(&mut s).unwrap();
+        // job 0: stuck RUNNING with two tokens — the later one wins
+        start_job(&mut s, 0, 0, 0, r#"{"job_id":0,"x":1}"#, 10.0).unwrap();
+        log_job_event(&mut s, 0, 0, 1, "CHECKPOINT", 12.0, "[t=12.000] attempt 1 token=/ck/a", 0, 0.0)
+            .unwrap();
+        log_job_event(&mut s, 0, 0, 1, "CHECKPOINT", 17.0, "[t=17.000] attempt 1 token=/ck/b b", 0, 0.0)
+            .unwrap();
+        // job 1: stuck PENDING (preempted holding a token, never relaunched)
+        start_job_queued(&mut s, 1, 0, r#"{"job_id":1,"x":2}"#, 10.0).unwrap();
+        log_job_event(&mut s, 1, 0, 1, "CHECKPOINT", 14.0, "[t=14.000] attempt 1 token=/ck/c", 0, 0.0)
+            .unwrap();
+        // job 2: stuck RUNNING but never checkpointed — nothing to resume
+        start_job(&mut s, 2, 0, 0, r#"{"job_id":2,"x":3}"#, 10.0).unwrap();
+        // job 3: finished — terminal rows are not a resume frontier
+        start_job(&mut s, 3, 0, 0, r#"{"job_id":3,"x":4}"#, 10.0).unwrap();
+        log_job_event(&mut s, 3, 0, 1, "CHECKPOINT", 11.0, "[t=11.000] attempt 1 token=/ck/d", 0, 0.0)
+            .unwrap();
+        finish_job(&mut s, 3, Some(0.5), true, 15.0).unwrap();
+
+        let mut seeds = recovered_checkpoints(&s).unwrap();
+        seeds.sort_by(|a, b| a.config.cmp(&b.config));
+        assert_eq!(seeds.len(), 2, "{seeds:?}");
+        assert_eq!(seeds[0].token, "/ck/b b", "latest token wins, spaces intact");
+        assert!((seeds[0].saved - 7.0).abs() < 1e-9, "17.0 - 10.0 start");
+        assert!(seeds[0].config.contains("\"job_id\":0"));
+        assert_eq!(seeds[1].token, "/ck/c");
+        // collection leaves the rows untouched; recovery still sweeps them
+        assert_eq!(recover_incomplete(&mut s).unwrap(), 3);
+        assert!(recovered_checkpoints(&s).unwrap().is_empty(), "nothing stuck after recovery");
+    }
+
+    #[test]
+    fn unknown_future_event_states_survive_reopen_and_recovery() {
+        // forward compatibility: an OLD binary opening a store written by
+        // a NEWER one finds journal states it has never heard of. Replay
+        // must keep them verbatim, and recovery/status/seeding must skip
+        // them rather than fail.
+        let dir = crate::util::fsutil::temp_dir("aup-future-events").unwrap();
+        {
+            let mut s = Store::open(&dir).unwrap();
+            init_schema(&mut s).unwrap();
+            let uid = add_user(&mut s, "a").unwrap();
+            let eid = start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0).unwrap();
+            start_job(&mut s, 0, eid, 0, r#"{"job_id":0}"#, 1.0).unwrap();
+            log_job_event(&mut s, 0, eid, 1, "QUANTUM_MERGE_V9", 2.0, "from the future", -1, 0.0)
+                .unwrap();
+            log_job_event(&mut s, 0, eid, 1, "CHECKPOINT", 3.0, "[t=3.000] attempt 1 token=/ck/s1", 0, 0.0)
+                .unwrap();
+        }
+        let mut s = Store::open(&dir).unwrap();
+        // WAL replay kept the unknown row byte-for-byte
+        let evs = job_events_of(&s, 0).unwrap();
+        assert!(evs.iter().any(|e| e.state == "QUANTUM_MERGE_V9"), "{evs:?}");
+        // the resume frontier is still readable around it...
+        let seeds = recovered_checkpoints(&s).unwrap();
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].token, "/ck/s1");
+        // ...recovery sweeps the stuck job without choking...
+        assert_eq!(recover_incomplete(&mut s).unwrap(), 1);
+        // ...and the status surface counts what it knows, skips the rest
+        let sts = crate::store::status::experiment_statuses(&s).unwrap();
+        assert_eq!(sts.len(), 1);
+        assert_eq!(sts[0].failed, 1);
+        std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]

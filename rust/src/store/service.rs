@@ -81,8 +81,11 @@ pub enum WorkerVerb {
     /// `aup worker` asks for one runnable job; the reply value is a
     /// lease-offer object or null.
     Lease { worker: String },
-    /// extend a live lease; reply `{"alive": bool}`
-    Heartbeat { lease: i64 },
+    /// extend a live lease; reply `{"alive": bool}`. A checkpoint token
+    /// piggybacks here when the leased attempt emitted a `checkpoint:`
+    /// line — the serving batch journals it and stashes it for resume,
+    /// and the token doubles as proof of life (no separate beat needed).
+    Heartbeat { lease: i64, checkpoint: Option<String> },
     /// stream one intermediate metric from a leased attempt; reply
     /// `{"stop": bool}` — true tells the worker to kill the job
     Report { lease: i64, step: i64, score: f64 },
@@ -94,6 +97,10 @@ pub enum WorkerVerb {
         error: Option<String>,
         elapsed: f64,
     },
+    /// a draining worker (SIGTERM) hands its live lease back cleanly so
+    /// the job requeues at once — budget intact, checkpoint token kept —
+    /// instead of waiting out lease expiry; reply `{"accepted": bool}`
+    Abandon { lease: i64 },
 }
 
 /// Installed by a serving batch to answer worker-fleet verbs
@@ -351,7 +358,8 @@ fn handle_request(
         Request::Lease { .. }
         | Request::Heartbeat { .. }
         | Request::Report { .. }
-        | Request::Complete { .. } => {
+        | Request::Complete { .. }
+        | Request::Abandon { .. } => {
             match &hooks.worker {
                 None => Err(StoreError::Failed(
                     "this store service has no worker gateway \
@@ -361,13 +369,16 @@ fn handle_request(
                 Some(handler) => {
                     let verb = match req {
                         Request::Lease { worker } => WorkerVerb::Lease { worker },
-                        Request::Heartbeat { lease } => WorkerVerb::Heartbeat { lease },
+                        Request::Heartbeat { lease, checkpoint } => {
+                            WorkerVerb::Heartbeat { lease, checkpoint }
+                        }
                         Request::Report { lease, step, score } => {
                             WorkerVerb::Report { lease, step, score }
                         }
                         Request::Complete { lease, ok, score, error, elapsed } => {
                             WorkerVerb::Complete { lease, ok, score, error, elapsed }
                         }
+                        Request::Abandon { lease } => WorkerVerb::Abandon { lease },
                         _ => unreachable!(),
                     };
                     (handler.as_ref())(verb).map_err(StoreError::from)
@@ -554,8 +565,14 @@ impl RemoteStoreClient {
 
     /// Prove the leased attempt is still alive. `false` = the lease
     /// already expired; the worker must kill the job and drop the result.
-    pub fn heartbeat(&self, lease: i64) -> Result<bool> {
-        let v = self.request(Request::Heartbeat { lease })?;
+    /// A `checkpoint` token (the attempt's latest `checkpoint:` line)
+    /// rides along so the serving batch journals it for resume; the
+    /// token itself counts as the heartbeat.
+    pub fn heartbeat(&self, lease: i64, checkpoint: Option<&str>) -> Result<bool> {
+        let v = self.request(Request::Heartbeat {
+            lease,
+            checkpoint: checkpoint.map(str::to_string),
+        })?;
         Ok(v.get("alive").and_then(Json::as_bool).unwrap_or(false))
     }
 
@@ -578,6 +595,14 @@ impl RemoteStoreClient {
         elapsed: f64,
     ) -> Result<bool> {
         let v = self.request(Request::Complete { lease, ok, score, error, elapsed })?;
+        Ok(v.get("accepted").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// Hand a live lease back cleanly (graceful SIGTERM drain): the job
+    /// requeues at the front with its retry budget and checkpoint token
+    /// intact. `false` = the lease had already expired server-side.
+    pub fn abandon(&self, lease: i64) -> Result<bool> {
+        let v = self.request(Request::Abandon { lease })?;
         Ok(v.get("accepted").and_then(Json::as_bool).unwrap_or(false))
     }
 }
@@ -808,7 +833,9 @@ mod tests {
         let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
         let err = remote.lease("rig-1").unwrap_err();
         assert!(err.to_string().contains("no worker gateway"), "{err}");
-        let err = remote.heartbeat(0).unwrap_err();
+        let err = remote.heartbeat(0, None).unwrap_err();
+        assert!(err.to_string().contains("no worker gateway"), "{err}");
+        let err = remote.abandon(0).unwrap_err();
         assert!(err.to_string().contains("no worker gateway"), "{err}");
         // the error is per-request, not transport: the client stays live
         remote.ping().unwrap();
@@ -836,9 +863,15 @@ mod tests {
                     script: "builtin:sphere".into(),
                     job_timeout: None,
                     lease_timeout: 12.0,
+                    resume_from: Some("/ckpt/epoch-7".into()),
                 }))
             }
-            WorkerVerb::Heartbeat { lease } => {
+            WorkerVerb::Heartbeat { lease, checkpoint } => {
+                // a plain beat carries no token; the checkpointing beat
+                // must deliver the exact token the worker parsed
+                if let Some(tok) = &checkpoint {
+                    assert_eq!(tok, "/ckpt/step-100");
+                }
                 Ok(Json::obj(vec![("alive", Json::Bool(lease == 5))]))
             }
             WorkerVerb::Report { lease, step, score } => {
@@ -850,16 +883,30 @@ mod tests {
                 assert_eq!(score, Some(0.5));
                 Ok(Json::obj(vec![("accepted", Json::Bool(lease == 5))]))
             }
+            WorkerVerb::Abandon { lease } => {
+                Ok(Json::obj(vec![("accepted", Json::Bool(lease == 5))]))
+            }
         });
         let hooks = ServiceHooks { submit: None, worker: Some(handler) };
         let service = StoreService::serve_unix(&sock, client.clone(), hooks).unwrap();
         let remote = RemoteStoreClient::connect_unix(&sock).unwrap();
         let offer = remote.lease("rig-1").unwrap().expect("an offer");
         assert_eq!((offer.lease, offer.job_id, offer.jid), (5, 2, 9));
-        assert!(remote.heartbeat(5).unwrap());
-        assert!(!remote.heartbeat(6).unwrap(), "stale lease reports dead");
+        assert_eq!(
+            offer.resume_from.as_deref(),
+            Some("/ckpt/epoch-7"),
+            "resume token survives the wire"
+        );
+        assert!(remote.heartbeat(5, None).unwrap());
+        assert!(!remote.heartbeat(6, None).unwrap(), "stale lease reports dead");
+        assert!(
+            remote.heartbeat(5, Some("/ckpt/step-100")).unwrap(),
+            "checkpoint token rides the heartbeat"
+        );
         assert!(!remote.report(5, 3, 0.25).unwrap(), "live lease keeps running");
         assert!(remote.report(6, 3, 0.25).unwrap(), "dead lease tells the worker to stop");
+        assert!(remote.abandon(5).unwrap(), "drain hands the lease back");
+        assert!(!remote.abandon(6).unwrap(), "dead lease cannot be abandoned");
         assert!(remote.complete(5, true, Some(0.5), None, 1.5).unwrap());
         drop((remote, service, client));
         handle.shutdown().unwrap();

@@ -443,6 +443,19 @@ pub fn recover_shards(stores: &mut [Store]) -> Result<usize> {
     Ok(swept)
 }
 
+/// Union of every shard's resume frontier (see
+/// [`schema::recovered_checkpoints`]) — collect BEFORE
+/// [`recover_shards`] marks the stuck rows FAILED.
+pub fn recovered_shard_checkpoints(
+    stores: &[Store],
+) -> Result<Vec<schema::RecoveredCheckpoint>> {
+    let mut out = Vec::new();
+    for store in stores {
+        out.extend(schema::recovered_checkpoints(store)?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -55,8 +55,13 @@ pub struct ExperimentStatus {
     /// capacity revocation (PREEMPTED rows) — these requeue with their
     /// retry budget intact, so they are churn, not failures
     pub preempted: usize,
-    /// estimated compute seconds early stopping saved (mean finished
+    /// attempts relaunched from a checkpoint token (RESUMED rows):
+    /// preemption victims, re-leased workers and crash-recovered jobs
+    /// that restarted with `AUP_RESUME_FROM` instead of from scratch
+    pub resumed: usize,
+    /// estimated compute seconds saved: early stopping (mean finished
     /// attempt cost × stopped attempts − what they actually burned)
+    /// plus evicted work that checkpoint resumes did not have to redo
     pub saved_secs: f64,
     pub best_score: Option<f64>,
     pub best_jid: Option<i64>,
@@ -137,6 +142,7 @@ fn assemble(
         stopped: a.stopped,
         retries: a.retries,
         preempted: a.preempted,
+        resumed: a.resumed,
         saved_secs: a.saved_secs(),
         best_score: exp.best_score.or(best.map(|(s, _)| s)),
         best_jid: best.map(|(_, j)| j),
@@ -340,13 +346,13 @@ fn fmt_score(s: Option<f64>) -> String {
 pub fn render_status(statuses: &[ExperimentStatus]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>8} {:>14} {:<8}\n",
+        "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>7} {:>8} {:>14} {:<8}\n",
         "eid", "user", "proposer", "jobs", "pend", "run", "done", "fail", "canc", "stop",
-        "retries", "preempt", "saved_s", "best", "state"
+        "retries", "preempt", "resumed", "saved_s", "best", "state"
     ));
     for s in statuses {
         out.push_str(&format!(
-            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>8.1} {:>14} {:<8}\n",
+            "{:>4} {:<10} {:<10} {:>5} {:>5} {:>4} {:>4} {:>4} {:>5} {:>4} {:>7} {:>7} {:>7} {:>8.1} {:>14} {:<8}\n",
             s.eid,
             truncate(&s.user, 10),
             truncate(&s.proposer, 10),
@@ -359,6 +365,7 @@ pub fn render_status(statuses: &[ExperimentStatus]) -> String {
             s.stopped,
             s.retries,
             s.preempted,
+            s.resumed,
             s.saved_secs,
             fmt_score(s.best_score),
             if s.done() { "done" } else { "running" },
@@ -654,6 +661,50 @@ mod tests {
         let txt = render_status(&fast);
         assert!(txt.contains("stop"), "{txt}");
         assert!(txt.contains("8.0"), "{txt}");
+    }
+
+    #[test]
+    fn resumed_surfaces_in_status_and_counts_saved_compute() {
+        let mut s = Store::in_memory();
+        schema::init_schema(&mut s).unwrap();
+        let uid = schema::add_user(&mut s, "alice").unwrap();
+        let e =
+            schema::start_experiment(&mut s, uid, "random", r#"{"target":"min"}"#, 0.0).unwrap();
+        // job 0 checkpoints, gets preempted, then relaunches from the
+        // token: the RESUMED row's busy stamp carries the seconds the
+        // checkpoint spared us from redoing (rid=-1 keeps it out of
+        // per-resource utilization)
+        schema::start_job_queued(&mut s, 0, e, "{}", 0.0).unwrap();
+        schema::log_job_event(
+            &mut s, 0, e, 1, "CHECKPOINT", 3.0, "[t=3.000] attempt 1 token=/ck/step-30", 0, 0.0,
+        )
+        .unwrap();
+        schema::log_job_event(&mut s, 0, e, 1, "PREEMPTED", 4.0, "evicted for p=9", 0, 0.0)
+            .unwrap();
+        schema::log_job_event(
+            &mut s,
+            0,
+            e,
+            2,
+            "RESUMED",
+            5.0,
+            "[t=5.000] attempt 2 saved 7.000s, token=/ck/step-30",
+            -1,
+            7.0,
+        )
+        .unwrap();
+        schema::finish_job(&mut s, 0, Some(0.5), true, 9.0).unwrap();
+        schema::log_job_event(&mut s, 0, e, 2, "DONE", 9.0, "score 0.5", 0, 3.0).unwrap();
+        let fast = experiment_statuses(&s).unwrap();
+        let slow = experiment_statuses_scan(&s).unwrap();
+        assert_eq!(fast, slow, "materialized resumed diverged from the scan");
+        let st = &fast[0];
+        assert_eq!((st.finished, st.preempted, st.resumed), (1, 1, 1));
+        assert!((st.saved_secs - 7.0).abs() < 1e-9, "resume savings: {}", st.saved_secs);
+        assert_eq!(st.retries, 0, "a resume is not a retry");
+        let txt = render_status(&fast);
+        assert!(txt.contains("resumed"), "{txt}");
+        assert!(txt.contains("7.0"), "{txt}");
     }
 
     #[test]

@@ -21,6 +21,8 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, BTreeMap, HashMap};
 
+use crate::search::BasicConfig;
+
 /// (submission id, job id) — trials are grouped per submission, so
 /// curves from different experiments (different objectives!) are never
 /// compared against each other.
@@ -34,6 +36,14 @@ pub enum Verdict {
     /// Kill the trial now; the string is the human-readable reason that
     /// lands in the `STOPPED_EARLY` transition detail.
     Stop(String),
+    /// Population-based-training exploit/explore hook: kill the running
+    /// attempt and resubmit the SAME job id with `mutated_config`
+    /// (job_id is preserved by the scheduler) — optionally warm-started
+    /// from another trial's checkpoint token via `resume_from`
+    /// (`AUP_RESUME_FROM`). Unlike preemption the spent attempt stays
+    /// charged: elapsed accrues and the attempt counter is not rolled
+    /// back, so the policy pays for what it explores.
+    Requeue { mutated_config: BasicConfig, resume_from: Option<String> },
 }
 
 /// An early-stopping policy fed from the scheduler poll loop.

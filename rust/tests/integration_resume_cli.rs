@@ -1,0 +1,398 @@
+//! TRUE cross-process crash drills for checkpoint-and-resume. Three
+//! stories, each impossible to pass without the resume path working
+//! end to end (the fresh-attempt branch of every script parks for
+//! 600s, far past the test deadline):
+//!
+//! 1. `aup batch --serve` is SIGKILLed mid-run after its jobs
+//!    journaled `CHECKPOINT` tokens; reopening the directory re-runs
+//!    the experiment and every interrupted job resumes from its
+//!    journaled token (`AUP_RESUME_FROM`) instead of attempt 1.
+//! 2. A SIGKILLed *worker*'s job is re-leased to a second worker and
+//!    resumes from the token that travelled the wire as a
+//!    checkpoint-bearing heartbeat before the murder.
+//! 3. A SIGTERMed worker drains: it abandons the lease cleanly (no
+//!    lease-expiry wait), and the re-leased attempt still resumes
+//!    from the banked token.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use auptimizer::store::schema::{self, JobEventRow};
+use auptimizer::store::service::SOCKET_FILE;
+use auptimizer::store::Store;
+use auptimizer::util::fsutil::temp_dir;
+
+const AUP: &str = env!("CARGO_BIN_EXE_aup");
+
+/// A local-pool experiment: jobs run inside the batch process itself,
+/// so SIGKILLing the batch is the crash under test.
+fn write_local_exp(dir: &Path, name: &str, script: &Path, n_samples: usize) -> PathBuf {
+    let path = dir.join(name);
+    let text = format!(
+        r#"{{
+            "proposer": "random",
+            "script": "{}",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 7,
+            "parameter_config": [{{"name": "x", "type": "float", "range": [0, 1]}}]
+        }}"#,
+        script.display()
+    );
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+/// An experiment pinned to the `remote` resource kind: only `aup
+/// worker` processes can run it.
+fn write_remote_exp(dir: &Path, name: &str, script: &Path, n_samples: usize) -> PathBuf {
+    let path = dir.join(name);
+    let text = format!(
+        r#"{{
+            "proposer": "random",
+            "script": "{}",
+            "n_samples": {n_samples},
+            "n_parallel": 2,
+            "target": "min",
+            "random_seed": 7,
+            "job_resource_kind": "remote",
+            "parameter_config": [{{"name": "x", "type": "float", "range": [0, 1]}}]
+        }}"#,
+        script.display()
+    );
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+fn write_script(dir: &Path, name: &str, body: &str) -> PathBuf {
+    use std::os::unix::fs::PermissionsExt;
+    let path = dir.join(name);
+    std::fs::write(&path, body).unwrap();
+    std::fs::set_permissions(&path, std::fs::Permissions::from_mode(0o755)).unwrap();
+    path
+}
+
+fn spawn_aup(args: &[&str]) -> Child {
+    Command::new(AUP)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap()
+}
+
+fn wait_exit(child: &mut Child, limit: Duration, who: &str) -> ExitStatus {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("{who} did not exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn wait_socket(child: &mut Child, sock: &Path) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !sock.exists() {
+        assert!(
+            child.try_wait().unwrap().is_none(),
+            "serving batch exited before publishing its socket"
+        );
+        assert!(Instant::now() < deadline, "socket never appeared");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Poll the durable store until at least `n` job events of experiment
+/// `eid` match `pred`. Reading the directory while the batch serves is
+/// the same concurrent-reader path `aup status --offline` uses — and
+/// once this returns, the matching rows are group-committed to disk,
+/// so they survive a SIGKILL of the writer.
+fn wait_for_events(db: &Path, eid: i64, n: usize, pred: impl Fn(&JobEventRow) -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(store) = Store::open_read_only(db) {
+            if let Ok(evs) = schema::job_events_of(&store, eid) {
+                if evs.iter().filter(|&e| pred(e)).count() >= n {
+                    return;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "never observed: {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn read_events(db: &Path, eid: i64) -> Vec<JobEventRow> {
+    let store = Store::open_read_only(db).unwrap();
+    schema::job_events_of(&store, eid).unwrap()
+}
+
+#[test]
+fn sigkilled_batch_reopens_and_resumes_every_job_from_its_journaled_token() {
+    let dir = temp_dir("aup-resume-crash").unwrap();
+    let resume_log = dir.join("resume.log");
+    // fresh attempt: emit a checkpoint token, then park far past the
+    // test deadline. Resumed attempt: record the token it was handed
+    // and finish instantly. The second run can therefore only drain
+    // within the deadline if BOTH re-proposed jobs launch resumed.
+    let script = write_script(
+        &dir,
+        "crash_job.sh",
+        &format!(
+            "#!/bin/sh\nif [ -n \"$AUP_RESUME_FROM\" ]; then\n\
+             echo \"resumed-from $AUP_RESUME_FROM\" >> {log}\n\
+             echo \"result: 0.4\"\nexit 0\nfi\n\
+             echo \"checkpoint: step-1\"\nsleep 600\n",
+            log = resume_log.display()
+        ),
+    );
+    let exp = write_local_exp(&dir, "exp.json", &script, 2);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    // run 1: both jobs start locally, journal their tokens, and park
+    let mut batch =
+        spawn_aup(&["batch", exp.to_str().unwrap(), "--pool", "2", "--db", db_s, "--serve"]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+    wait_for_events(
+        &db,
+        0,
+        2,
+        |e| e.state == "CHECKPOINT" && e.detail.contains("token=step-1"),
+        "both jobs journaling their checkpoint token",
+    );
+    // mid-run, no goodbye: the WAL's last words are the tokens
+    batch.kill().unwrap();
+    let _ = batch.wait();
+
+    // run 2: reopen the same directory. Recovery finds the stuck jobs'
+    // tokens, the deterministic proposer re-proposes the identical
+    // configs, and both jobs launch with AUP_RESUME_FROM set.
+    let mut batch2 = spawn_aup(&["batch", exp.to_str().unwrap(), "--pool", "2", "--db", db_s]);
+    let status = wait_exit(&mut batch2, Duration::from_secs(60), "reopened batch");
+    let out = batch2.wait_with_output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(status.success(), "reopened batch failed: {stderr}");
+    assert!(
+        stderr.contains("2 interrupted job(s) hold checkpoints"),
+        "recovery never announced the seeds: {stderr}"
+    );
+
+    // the scripts themselves saw the tokens...
+    let log = std::fs::read_to_string(&resume_log).unwrap();
+    let resumed: Vec<&str> = log.lines().collect();
+    assert_eq!(resumed, ["resumed-from step-1", "resumed-from step-1"], "{log}");
+
+    // ...and the journal of the SECOND experiment tells the same
+    // story: every job launched resumed, none from scratch, none failed
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 1).unwrap();
+    assert_eq!(jobs.len(), 2);
+    assert!(jobs.iter().all(|j| j.status == schema::JobStatus::Finished), "{jobs:?}");
+    let evs = read_events(&db, 1);
+    let resumed_rows = evs
+        .iter()
+        .filter(|e| e.state == "RESUMED" && e.detail.contains("token=step-1"))
+        .count();
+    assert_eq!(resumed_rows, 2, "every interrupted job resumes: {evs:?}");
+    // the crashed run's jobs were recovered to FAILED, not left RUNNING
+    let jobs0 = schema::jobs_of(&mut store, 0).unwrap();
+    assert!(jobs0.iter().all(|j| j.status == schema::JobStatus::Failed), "{jobs0:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn a_sigkilled_workers_job_is_re_leased_elsewhere_and_resumes_from_the_wire_token() {
+    let dir = temp_dir("aup-resume-release").unwrap();
+    let resumed_from = dir.join("resumed_from");
+    let script = write_script(
+        &dir,
+        "remote_ckpt.sh",
+        &format!(
+            "#!/bin/sh\nif [ -n \"$AUP_RESUME_FROM\" ]; then\n\
+             echo \"$AUP_RESUME_FROM\" > {rf}\n\
+             echo \"result: 0.5\"\nexit 0\nfi\n\
+             echo \"checkpoint: /ckpt/step-3\"\nsleep 600\n",
+            rf = resumed_from.display()
+        ),
+    );
+    let exp = write_remote_exp(&dir, "exp.json", &script, 1);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    let mut batch = spawn_aup(&[
+        "batch",
+        exp.to_str().unwrap(),
+        "--pool",
+        "1",
+        "--db",
+        db_s,
+        "--serve",
+        "--lease-timeout",
+        "1",
+    ]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+
+    // worker 1 leases the job; its checkpoint line crosses the wire as
+    // a checkpoint-bearing heartbeat and lands in the journal
+    let mut doomed = spawn_aup(&["worker", db_s, "--name", "doomed", "--poll-ms", "25"]);
+    wait_for_events(
+        &db,
+        0,
+        1,
+        |e| e.state == "CHECKPOINT" && e.detail.contains("token=/ckpt/step-3"),
+        "the wire-delivered token reaching the journal",
+    );
+    std::thread::sleep(Duration::from_millis(200));
+    doomed.kill().unwrap();
+    let _ = doomed.wait();
+
+    // lease expiry reaps the corpse; the savior inherits the token
+    wait_for_events(
+        &db,
+        0,
+        1,
+        |e| e.state == "BACKOFF" && e.detail.contains("lease expired"),
+        "lease expiry after the worker vanished",
+    );
+    let mut savior =
+        spawn_aup(&["worker", db_s, "--name", "savior", "--max-jobs", "1", "--poll-ms", "25"]);
+
+    let status = wait_exit(&mut batch, Duration::from_secs(60), "serving batch");
+    let out = batch.wait_with_output().unwrap();
+    assert!(status.success(), "batch failed: {}", String::from_utf8_lossy(&out.stderr));
+    let status = wait_exit(&mut savior, Duration::from_secs(30), "second worker");
+    assert!(status.success());
+
+    // the savior's attempt genuinely started from the checkpoint...
+    let token = std::fs::read_to_string(&resumed_from).unwrap();
+    assert_eq!(token.trim(), "/ckpt/step-3");
+
+    // ...with the budget intact (attempt 1 again) and the resume
+    // journaled against the re-lease, not invented locally
+    let evs = read_events(&db, 0);
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "RUNNING"
+                && e.detail.contains("attempt 1 leased to worker 'savior'")
+                && e.detail.contains("resume from '/ckpt/step-3'")
+        }),
+        "re-lease must carry the token: {evs:?}"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| e.state == "RESUMED" && e.detail.contains("token=/ckpt/step-3")),
+        "no RESUMED row: {evs:?}"
+    );
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].status, schema::JobStatus::Finished, "{jobs:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn a_sigtermed_worker_drains_cleanly_and_the_resume_skips_lease_expiry() {
+    let dir = temp_dir("aup-resume-drain").unwrap();
+    let resumed_from = dir.join("resumed_from");
+    let script = write_script(
+        &dir,
+        "drain_ckpt.sh",
+        &format!(
+            "#!/bin/sh\nif [ -n \"$AUP_RESUME_FROM\" ]; then\n\
+             echo \"$AUP_RESUME_FROM\" > {rf}\n\
+             echo \"result: 0.5\"\nexit 0\nfi\n\
+             echo \"checkpoint: drain-ck\"\nsleep 600\n",
+            rf = resumed_from.display()
+        ),
+    );
+    let exp = write_remote_exp(&dir, "exp.json", &script, 1);
+    let db = dir.join("db");
+    let db_s = db.to_str().unwrap();
+
+    // a LONG lease window: if the drain fell back to lease expiry the
+    // batch could not finish inside the deadline, so success proves
+    // the clean hand-back
+    let mut batch = spawn_aup(&[
+        "batch",
+        exp.to_str().unwrap(),
+        "--pool",
+        "1",
+        "--db",
+        db_s,
+        "--serve",
+        "--lease-timeout",
+        "120",
+    ]);
+    wait_socket(&mut batch, &db.join(SOCKET_FILE));
+
+    let mut draining = spawn_aup(&["worker", db_s, "--name", "draining", "--poll-ms", "25"]);
+    wait_for_events(
+        &db,
+        0,
+        1,
+        |e| e.state == "CHECKPOINT" && e.detail.contains("token=drain-ck"),
+        "the token reaching the journal before the drain",
+    );
+    // SIGTERM, not SIGKILL: the worker should kill its attempt, hand
+    // the lease back, report, and exit zero on its own
+    let pid = draining.id().to_string();
+    let ok = Command::new("sh").arg("-c").arg(format!("kill -TERM {pid}")).status().unwrap();
+    assert!(ok.success(), "could not deliver SIGTERM");
+    let status = wait_exit(&mut draining, Duration::from_secs(30), "draining worker");
+    let out = draining.wait_with_output().unwrap();
+    let drain_stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(status.success(), "drain must exit clean: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(drain_stdout.contains("1 drained"), "worker report: {drain_stdout}");
+
+    let mut savior =
+        spawn_aup(&["worker", db_s, "--name", "savior", "--max-jobs", "1", "--poll-ms", "25"]);
+    let status = wait_exit(&mut batch, Duration::from_secs(60), "serving batch");
+    let out = batch.wait_with_output().unwrap();
+    assert!(status.success(), "batch failed: {}", String::from_utf8_lossy(&out.stderr));
+    let status = wait_exit(&mut savior, Duration::from_secs(30), "second worker");
+    assert!(status.success());
+
+    let token = std::fs::read_to_string(&resumed_from).unwrap();
+    assert_eq!(token.trim(), "drain-ck");
+
+    let evs = read_events(&db, 0);
+    // requeued as a worker-initiated preemption, NOT by expiry
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "PREEMPTED"
+                && e.detail.contains("lease abandoned by draining worker 'draining'")
+        }),
+        "no clean abandon journaled: {evs:?}"
+    );
+    assert!(
+        !evs.iter().any(|e| e.detail.contains("lease expired")),
+        "drain must not wait out the lease: {evs:?}"
+    );
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "W_END" && e.detail.contains("abandoned cleanly by draining worker")
+        }),
+        "worker never journaled its own abandon: {evs:?}"
+    );
+    assert!(
+        evs.iter().any(|e| {
+            e.state == "RUNNING"
+                && e.detail.contains("attempt 1 leased to worker 'savior'")
+                && e.detail.contains("resume from 'drain-ck'")
+        }),
+        "budget and token must survive the drain: {evs:?}"
+    );
+    let mut store = Store::open(&db).unwrap();
+    let jobs = schema::jobs_of(&mut store, 0).unwrap();
+    assert_eq!(jobs[0].status, schema::JobStatus::Finished, "{jobs:?}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
